@@ -1,0 +1,59 @@
+//! Figures 13–17: per-channel optimal-range and error scatter analysis.
+//!
+//! Prints one row per (layer, output-channel) of regnet_tiny:
+//!   * mmse-optimal slice range normalized by whole-kernel naive max — the
+//!     Fig. 13 "very few slices call for unclipped representation" picture
+//!   * per-slice 4b error under layerwise / channelwise / CLE grids
+//!     (Figs. 14, 15, 16)
+//!
+//! ```text
+//! cargo run --release --example channel_analysis [arch]
+//! ```
+
+use anyhow::Result;
+use qft::coordinator::experiments;
+use qft::runtime::Runtime;
+
+fn main() -> Result<()> {
+    let arch = std::env::args().nth(1).unwrap_or_else(|| "regnet_tiny".into());
+    let rt = Runtime::load("artifacts")?;
+    let pts = experiments::channel_analysis(&rt, &arch)?;
+
+    println!("# Figs. 13-16 scatter data for {arch}");
+    println!(
+        "{:<10} {:>4} {:>14} {:>10} {:>10} {:>10}",
+        "layer", "ch", "opt_range/naive", "err_lw", "err_chw", "err_cle"
+    );
+    for p in &pts {
+        println!(
+            "{:<10} {:>4} {:>14.3} {:>10.4} {:>10.4} {:>10.4}",
+            p.layer, p.channel, p.norm_opt_range, p.err_layerwise, p.err_channelwise, p.err_cle
+        );
+    }
+
+    // Fig. 13 headline: how many slices want unclipped (>= naive) range?
+    let unclipped = pts.iter().filter(|p| p.norm_opt_range >= 0.99).count();
+    println!(
+        "\n[fig13] {}/{} slices mmse-optimal at unclipped range; median ratio {:.2}",
+        unclipped,
+        pts.len(),
+        median(pts.iter().map(|p| p.norm_opt_range))
+    );
+    // Figs. 14-16 headline: total error by scheme
+    let tot = |f: &dyn Fn(&experiments::ChannelPoint) -> f32| -> f32 {
+        pts.iter().map(|p| f(p) * f(p)).sum::<f32>().sqrt()
+    };
+    println!(
+        "[fig14-16] total slice error: layerwise {:.4} | CLE {:.4} | channelwise {:.4}",
+        tot(&|p| p.err_layerwise),
+        tot(&|p| p.err_cle),
+        tot(&|p| p.err_channelwise)
+    );
+    Ok(())
+}
+
+fn median(vals: impl Iterator<Item = f32>) -> f32 {
+    let mut v: Vec<f32> = vals.collect();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v[v.len() / 2]
+}

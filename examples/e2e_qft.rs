@@ -1,0 +1,95 @@
+//! End-to-end validation driver (EXPERIMENTS.md §E2E): the full system on a
+//! real small workload, proving all three layers compose.
+//!
+//! * L1 Pallas fake-quant/qmatmul kernels — inside every student step
+//! * L2 AOT JAX graphs — fp_train / fp_stats / qft_train / q_eval
+//! * L3 rust coordinator — data, calibration, heuristics, the QFT loop,
+//!   integer-deployment cross-check
+//!
+//! Workload: mobilenet_tiny (depthwise + relu6 — the paper's hard case) on
+//! the synthetic 10-class task.  Stages: pretrain teacher → calibrate →
+//! MMSE init → QFT (paper schedule: 12 epochs, cosine + /2 reloads) →
+//! evaluate + integer-simulation parity check.  Loss curve and timing are
+//! printed for the experiment log.
+
+use anyhow::Result;
+use qft::coordinator::{eval, metrics, pretrain, qft as qft_stage};
+use qft::quant::deploy::{self, Mode};
+use qft::runtime::Runtime;
+
+fn main() -> Result<()> {
+    let rt = Runtime::load("artifacts")?;
+    println!("platform: {}", rt.platform());
+    let arch_name = "mobilenet_tiny";
+    let arch = rt.manifest.arch(arch_name)?.clone();
+
+    // ---- stage 1: FP teacher -------------------------------------------
+    let span = metrics::Span::start(&rt, "stage1-pretrain");
+    let teacher = pretrain::teacher(&rt, arch_name, &pretrain::PretrainConfig::default())?;
+    let fp_acc = eval::eval_fp(&rt, arch_name, &teacher, 512, 0)?;
+    println!("{}", span.finish());
+    println!("[stage1] teacher fp top-1 = {:.2}%", fp_acc * 100.0);
+
+    // ---- stage 2+3: calibrate + init + QFT ------------------------------
+    let cfg = qft_stage::QftConfig::standard(Mode::Lw);
+    println!(
+        "[stage2] QFT config: {} epochs x {} images, batch {}, base lr {:.0e}, label-free KD",
+        cfg.epochs, cfg.images_per_epoch, arch.batch, cfg.base_lr
+    );
+    let span = metrics::Span::start(&rt, "stage3-qft");
+    let r = qft_stage::run_qft(&rt, arch_name, &teacher, &cfg)?;
+    let rep = span.finish();
+    println!("{rep}");
+    println!(
+        "[stage3] steps/s = {:.1}, mean step = {:.2} ms",
+        r.losses.len() as f64 / (rep.wall_ms / 1e3),
+        rep.wall_ms / r.losses.len() as f64
+    );
+    // loss curve (decimated)
+    print!("[stage3] kd-loss curve:");
+    for (i, l) in r.losses.iter().enumerate() {
+        if i % (r.losses.len() / 12).max(1) == 0 {
+            print!(" {l:.4}");
+        }
+    }
+    println!(" -> {:.4}", r.losses.last().unwrap());
+
+    // ---- stage 4: evaluation -------------------------------------------
+    let acc_init = eval::eval_q(&rt, arch_name, &r.init, Mode::Lw, 512, 0)?;
+    let acc_qft = eval::eval_q(&rt, arch_name, &r.trainables, Mode::Lw, 512, 0)?;
+    println!(
+        "[stage4] W4A8-lw: init degr {:+.2}%, QFT degr {:+.2}% (fp {:.2}%)",
+        (acc_init - fp_acc) * 100.0,
+        (acc_qft - fp_acc) * 100.0,
+        fp_acc * 100.0
+    );
+
+    // ---- stage 5: deployability cross-checks ----------------------------
+    // (a) AOT q_eval vs pure-rust fake-quant simulator
+    let acc_rust = eval::eval_q_rust(&arch, &r.trainables, Mode::Lw, 512, 0);
+    // (b) fully-integer online pipeline (quantized bias, integer relu,
+    //     multiplicative recode)
+    let ds = qft::data::Dataset::new(0);
+    let mut agree = 0usize;
+    let mut total = 0usize;
+    for i in 0..16 {
+        let (x, _, _) = ds.batch(qft::data::Split::Val, i * 8, 8);
+        let (lf, _) = deploy::forward_fakequant(&arch, &r.trainables, Mode::Lw, &x);
+        let (li, _) = deploy::forward_integer(&arch, &r.trainables, &x);
+        agree += lf
+            .argmax_lastdim()
+            .iter()
+            .zip(&li.argmax_lastdim())
+            .filter(|(a, b)| a == b)
+            .count();
+        total += 8;
+    }
+    println!(
+        "[stage5] parity: q_eval(HLO) {:.2}% vs rust-sim {:.2}%; integer-pipeline argmax agreement {:.1}%",
+        acc_qft * 100.0,
+        acc_rust * 100.0,
+        agree as f32 / total as f32 * 100.0
+    );
+    println!("e2e_qft: OK");
+    Ok(())
+}

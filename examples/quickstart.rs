@@ -1,0 +1,50 @@
+//! Quickstart: quantize one tiny net with QFT and report the degradation.
+//!
+//! ```text
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+//!
+//! Pipeline (all through AOT HLO executables — python never runs here):
+//!   1. load the PJRT runtime + manifest
+//!   2. pretrain (or load the cached) FP teacher
+//!   3. the sole pre-QFT step: naive-max activation calibration, PPQ-MMSE
+//!      weight ranges, rescale factors via inversion of Eq. 2
+//!   4. QFT: joint KD finetune of ALL DoF (weights, biases, activation
+//!      vector scales == the CLE DoF, rescale factors)
+//!   5. evaluate the 4b-weight deployment vs the FP baseline
+
+use anyhow::Result;
+use qft::coordinator::{eval, experiments, metrics, qft as qft_stage};
+use qft::quant::deploy::Mode;
+use qft::runtime::Runtime;
+
+fn main() -> Result<()> {
+    let rt = Runtime::load("artifacts")?;
+    println!("platform: {}", rt.platform());
+
+    let arch = "convnet_tiny";
+    let t = experiments::teacher_ctx(&rt, arch)?;
+    println!("teacher fp top-1: {:.1}%", t.fp_acc * 100.0);
+
+    let cfg = qft_stage::QftConfig::fast(Mode::Lw);
+    let span = metrics::Span::start(&rt, "qft");
+    let r = qft_stage::run_qft(&rt, arch, &t.params, &cfg)?;
+    println!("{}", span.finish());
+
+    let acc_init = eval::eval_q(&rt, arch, &r.init, Mode::Lw, 512, 0)?;
+    let acc_qft = eval::eval_q(&rt, arch, &r.trainables, Mode::Lw, 512, 0)?;
+    println!(
+        "W4A8 layerwise | mmse init: {:.1}% (degr {:+.2}) | after QFT: {:.1}% (degr {:+.2})",
+        acc_init * 100.0,
+        (acc_init - t.fp_acc) * 100.0,
+        acc_qft * 100.0,
+        (acc_qft - t.fp_acc) * 100.0,
+    );
+    println!(
+        "kd-loss {:.4} -> {:.4} over {} steps",
+        r.losses.first().unwrap(),
+        r.losses.last().unwrap(),
+        r.losses.len()
+    );
+    Ok(())
+}

@@ -1,0 +1,27 @@
+//! Table 1 driver: QFT vs heuristic PTQ baselines across the zoo (the
+//! fast profile; use `repro table1` without `--fast` for the full schedule).
+//!
+//! ```text
+//! cargo run --release --example table1_sota [arch1,arch2,...]
+//! ```
+
+use anyhow::Result;
+use qft::coordinator::experiments;
+use qft::runtime::Runtime;
+
+fn main() -> Result<()> {
+    let archs = std::env::args()
+        .nth(1)
+        .unwrap_or_else(|| "resnet_tiny,mobilenet_tiny,regnet_tiny".into());
+    let names: Vec<&str> = archs.split(',').collect();
+    let rt = Runtime::load("artifacts")?;
+    let rows = experiments::table1(&rt, &names, true)?;
+    experiments::print_rows("Table 1 (fast profile): QFT vs PTQ baselines", &rows);
+
+    // the paper's claim structure: QFT <= 1% degradation for most nets,
+    // CLE+QFT at least as good as QFT on the nets where CLE helps
+    let qft_rows: Vec<_> = rows.iter().filter(|r| r.config.starts_with("QFT 4/8")).collect();
+    let sub1 = qft_rows.iter().filter(|r| r.degradation() < 0.015).count();
+    println!("\nQFT 4/8 lw sub-1.5%-degradation: {}/{}", sub1, qft_rows.len());
+    Ok(())
+}

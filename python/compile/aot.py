@@ -1,0 +1,164 @@
+"""AOT pipeline: lower every (arch x entry-point) to HLO *text* + manifest.
+
+HLO text (NOT ``.serialize()``) is the interchange format: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids that the image's xla_extension
+0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly.  See /opt/xla-example/README.md.
+
+Python runs exactly once (`make artifacts`); the rust leader then drives
+everything through PJRT.  `manifest.json` is the contract: architecture IR,
+flat input/output orderings per artifact, and scalar conventions (all
+scalars are shape-(1,) f32 literals).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import archs, model, qft
+from .archs import BATCH, INPUT_CH, INPUT_HW, Arch
+
+F32 = jnp.float32
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _sds(shape):
+    return jax.ShapeDtypeStruct(tuple(shape), F32)
+
+
+def _spec_list(pairs):
+    return [{"name": n, "shape": list(s)} for n, s in pairs]
+
+
+def _images_spec():
+    return ("images", (BATCH, INPUT_HW, INPUT_HW, INPUT_CH))
+
+
+def build_entries(arch: Arch):
+    """Every exported entry point for one arch: name -> (fn, in_specs, out_specs)."""
+    p = arch.param_specs()
+    pm = [(f"m.{n}", s) for n, s in p]
+    pv = [(f"v.{n}", s) for n, s in p]
+    entries = {}
+
+    ins = p + pm + pv + [("t", (1,)), ("lr", (1,)), _images_spec(),
+                         ("labels", (BATCH,))]
+    outs = p + pm + pv + [("loss", ())]
+    entries["fp_train"] = (model.make_fp_train(arch), ins, outs)
+
+    ins = p + [_images_spec()]
+    outs = [("logits", (BATCH, archs.NUM_CLASSES)),
+            ("feat", (BATCH, arch.feat_channels()))]
+    entries["fp_eval"] = (model.make_fp_eval(arch), ins, outs)
+
+    ch = arch.value_channels()
+    outs = [(f"absmax:{v}", (ch[v],)) for v in arch.quantized_values()]
+    entries["fp_stats"] = (model.make_fp_stats(arch), ins, outs)
+
+    for mode in ("lw", "dch"):
+        tr = arch.trainable_specs(mode)
+        tm = [(f"m.{n}", s) for n, s in tr]
+        tv = [(f"v.{n}", s) for n, s in tr]
+        ins = (tr + tm + tv +
+               [("t", (1,)), ("lr", (1,)), ("ce_mix", (1,)),
+                ("train_scales", (1,))] +
+               [(f"teacher.{n}", s) for n, s in p] + [_images_spec()])
+        outs = tr + tm + tv + [("loss", ())]
+        entries[f"qft_train_{mode}"] = (qft.make_qft_train(arch, mode), ins, outs)
+
+        ins = tr + [_images_spec()]
+        outs = [("logits", (BATCH, archs.NUM_CLASSES)),
+                ("feat", (BATCH, arch.feat_channels()))]
+        entries[f"q_eval_{mode}"] = (qft.make_q_eval(arch, mode), ins, outs)
+
+    return entries
+
+
+def lower_arch(arch: Arch, outdir: str, manifest: dict, verbose: bool = True):
+    arts = {}
+    for ename, (fn, ins, outs) in build_entries(arch).items():
+        fname = f"{arch.name}_{ename}.hlo.txt"
+        path = os.path.join(outdir, fname)
+        lowered = jax.jit(fn, keep_unused=True).lower(*[_sds(s) for _, s in ins])
+        text = to_hlo_text(lowered)
+        with open(path, "w") as f:
+            f.write(text)
+        arts[ename] = {"file": fname, "inputs": _spec_list(ins),
+                       "outputs": _spec_list(outs)}
+        if verbose:
+            print(f"  {fname}: {len(ins)} in / {len(outs)} out, "
+                  f"{len(text) // 1024} KiB")
+    spec = arch.to_json()
+    spec["artifacts"] = arts
+    manifest["archs"][arch.name] = spec
+
+
+def lower_kernel_microbench(outdir: str, manifest: dict):
+    """Standalone L1 kernel artifacts for rust-side micro-benchmarks."""
+    from .kernels.fakequant import fakequant
+    from .kernels.qmatmul import qmatmul
+
+    m, k, n = 256, 128, 128
+    ins = [("x", (m, k)), ("w", (k, n)), ("s_l", (k,)), ("s_r", (n,))]
+
+    def kq(x, w, s_l, s_r):
+        return (qmatmul(x, w, s_l, s_r, -7.0, 7.0),)
+
+    lowered = jax.jit(kq, keep_unused=True).lower(*[_sds(s) for _, s in ins])
+    with open(os.path.join(outdir, "kernel_qmatmul.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(lowered))
+
+    def kf(x, s_r):
+        return (fakequant(x, s_r[None, :], -7.0, 7.0),)
+
+    lowered = jax.jit(kf, keep_unused=True).lower(_sds((m, k)), _sds((k,)))
+    with open(os.path.join(outdir, "kernel_fakequant.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(lowered))
+
+    manifest["kernels"] = {
+        "qmatmul": {"file": "kernel_qmatmul.hlo.txt", "inputs": _spec_list(ins),
+                    "outputs": [{"name": "y", "shape": [m, n]}]},
+        "fakequant": {"file": "kernel_fakequant.hlo.txt",
+                      "inputs": _spec_list([("x", (m, k)), ("s_r", (k,))]),
+                      "outputs": [{"name": "y", "shape": [m, k]}]},
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts",
+                    help="artifacts directory")
+    ap.add_argument("--archs", default="all",
+                    help="comma-separated arch names, or 'all'")
+    args = ap.parse_args()
+
+    outdir = os.path.dirname(args.out) if args.out.endswith(".hlo.txt") else args.out
+    os.makedirs(outdir, exist_ok=True)
+
+    names = list(archs.ZOO) if args.archs == "all" else args.archs.split(",")
+    manifest = {"batch": BATCH, "input_hw": INPUT_HW, "input_ch": INPUT_CH,
+                "num_classes": archs.NUM_CLASSES, "archs": {}}
+    for name in names:
+        print(f"lowering {name} ...")
+        lower_arch(archs.get_arch(name), outdir, manifest)
+    lower_kernel_microbench(outdir, manifest)
+
+    with open(os.path.join(outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {os.path.join(outdir, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

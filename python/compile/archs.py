@@ -1,0 +1,351 @@
+"""Tiny-CNN architecture zoo shared by the L2 model and the L3 coordinator.
+
+Each architecture is a flat op-list IR over *values* (tensor edges).  Value 0
+is the network input; every op produces a new value id.  This IR is the
+single source of truth: `aot.py` serializes it into `artifacts/manifest.json`
+and the rust coordinator rebuilds the same deployment graph from it.
+
+The zoo is the paper's ImageNet-model substitution (see DESIGN.md): six tiny
+nets from three families (plain/residual conv, depthwise+relu6 mobilenet-like,
+regnet-like widths), pretrained from scratch on a synthetic task by the rust
+leader via the AOT `fp_train` step.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any
+
+INPUT_HW = 16
+INPUT_CH = 3
+NUM_CLASSES = 10
+BATCH = 8
+
+# Quantization grids (paper: 4b symmetric weights, 8b activations).
+WEIGHT_QMAX = 7  # +/- (2^(4-1) - 1)
+ACT_UNSIGNED_QMAX = 255.0
+ACT_SIGNED_QMAX = 127.0
+
+
+@dataclass
+class Op:
+    op: str  # conv | add | gap | fc
+    name: str
+    out: int  # output value id
+    # conv fields
+    inp: int = -1
+    k: int = 0
+    stride: int = 1
+    cin: int = 0
+    cout: int = 0
+    groups: int = 1
+    act: str = "none"  # none | relu | relu6
+    # add fields
+    a: int = -1
+    b: int = -1
+
+    def to_json(self) -> dict[str, Any]:
+        d = {"op": self.op, "name": self.name, "out": self.out}
+        if self.op == "conv":
+            d.update(
+                inp=self.inp, k=self.k, stride=self.stride, cin=self.cin,
+                cout=self.cout, groups=self.groups, act=self.act,
+            )
+        elif self.op == "add":
+            d.update(a=self.a, b=self.b, act=self.act)
+        else:
+            d.update(inp=self.inp, cin=self.cin, cout=self.cout)
+        return d
+
+
+@dataclass
+class Arch:
+    name: str
+    ops: list[Op] = field(default_factory=list)
+    nvals: int = 1  # value 0 = input
+
+    # ------------------------------------------------------------------ build
+    def _new_val(self) -> int:
+        v = self.nvals
+        self.nvals += 1
+        return v
+
+    def conv(self, inp: int, cin: int, cout: int, k: int = 3, stride: int = 1,
+             groups: int = 1, act: str = "relu") -> int:
+        out = self._new_val()
+        self.ops.append(Op("conv", f"conv{len(self.ops)}", out, inp=inp, k=k,
+                           stride=stride, cin=cin, cout=cout, groups=groups,
+                           act=act))
+        return out
+
+    def add(self, a: int, b: int, act: str = "none") -> int:
+        out = self._new_val()
+        self.ops.append(Op("add", f"add{len(self.ops)}", out, a=a, b=b, act=act))
+        return out
+
+    def gap(self, inp: int) -> int:
+        out = self._new_val()
+        self.ops.append(Op("gap", f"gap{len(self.ops)}", out, inp=inp))
+        return out
+
+    def fc(self, inp: int, cin: int, cout: int) -> int:
+        out = self._new_val()
+        self.ops.append(Op("fc", f"fc{len(self.ops)}", out, inp=inp,
+                           cin=cin, cout=cout))
+        return out
+
+    # --------------------------------------------------------------- queries
+    def conv_ops(self) -> list[Op]:
+        return [o for o in self.ops if o.op == "conv"]
+
+    def value_channels(self) -> dict[int, int]:
+        ch = {0: INPUT_CH}
+        for o in self.ops:
+            if o.op == "conv":
+                ch[o.out] = o.cout
+            elif o.op == "add":
+                ch[o.out] = ch[o.a]
+            elif o.op == "gap":
+                ch[o.out] = ch[o.inp]
+            elif o.op == "fc":
+                ch[o.out] = o.cout
+        return ch
+
+    def value_signed(self) -> dict[int, bool]:
+        """Unsigned (post-relu / input image) vs signed 8b encoding per value."""
+        signed = {0: False}  # images in [0, 1]
+        for o in self.ops:
+            if o.op in ("conv", "add"):
+                signed[o.out] = o.act == "none"
+            elif o.op == "gap":
+                signed[o.out] = signed[o.inp]
+            elif o.op == "fc":
+                signed[o.out] = True
+        return signed
+
+    def quantized_values(self) -> list[int]:
+        """Values that carry an 8b encoding (trainable vector scale) in the
+        deployment-oriented (lw, W4A8) mode: the input plus every conv/add
+        output.  gap/fc stay full-precision (head excluded, see DESIGN.md)."""
+        vals = [0]
+        for o in self.ops:
+            if o.op in ("conv", "add"):
+                vals.append(o.out)
+        return vals
+
+    def backbone_value(self) -> int:
+        """KD tap: input to the global average pooling (spatially rich)."""
+        for o in self.ops:
+            if o.op == "gap":
+                return o.inp
+        raise ValueError("arch has no gap")
+
+    def feat_channels(self) -> int:
+        return self.value_channels()[self.backbone_value()]
+
+    # ------------------------------------------------------------ param spec
+    def param_specs(self) -> list[tuple[str, tuple[int, ...]]]:
+        """FP parameter list, in manifest order. Conv weights HWIO."""
+        specs: list[tuple[str, tuple[int, ...]]] = []
+        for o in self.ops:
+            if o.op == "conv":
+                specs.append((f"w:{o.name}", (o.k, o.k, o.cin // o.groups, o.cout)))
+                specs.append((f"b:{o.name}", (o.cout,)))
+            elif o.op == "fc":
+                specs.append((f"w:{o.name}", (o.cin, o.cout)))
+                specs.append((f"b:{o.name}", (o.cout,)))
+        return specs
+
+    def trainable_specs(self, mode: str) -> list[tuple[str, tuple[int, ...]]]:
+        """QFT trainables (Eq. 6 / Eqs. 3-4), in manifest order.
+
+        lw  (W4A8, scalar rescale):  weights, biases, per-value activation
+            vector scales S_a (the CLE DoF), per-conv scalar rescale F.
+        dch (W4A32, channelwise HW): weights, biases, per-conv left/right
+            kernel scale co-vectors S_wL (cin), S_wR (cout).
+        """
+        ch = self.value_channels()
+        specs: list[tuple[str, tuple[int, ...]]] = []
+        for o in self.ops:
+            if o.op == "conv":
+                specs.append((f"w:{o.name}", (o.k, o.k, o.cin // o.groups, o.cout)))
+                specs.append((f"b:{o.name}", (o.cout,)))
+            elif o.op == "fc":
+                # FP head rides along (gradient only flows when ce_mix > 0)
+                specs.append((f"w:{o.name}", (o.cin, o.cout)))
+                specs.append((f"b:{o.name}", (o.cout,)))
+        if mode == "lw":
+            for v in self.quantized_values():
+                specs.append((f"sv:{v}", (ch[v],)))
+            for o in self.conv_ops():
+                specs.append((f"f:{o.name}", (1,)))
+        elif mode == "dch":
+            for o in self.conv_ops():
+                if o.groups == 1:
+                    specs.append((f"swl:{o.name}", (o.cin,)))
+                specs.append((f"swr:{o.name}", (o.cout,)))
+        else:
+            raise ValueError(f"unknown mode {mode}")
+        return specs
+
+    def to_json(self) -> dict[str, Any]:
+        return {
+            "name": self.name,
+            "input_hw": INPUT_HW,
+            "input_ch": INPUT_CH,
+            "num_classes": NUM_CLASSES,
+            "batch": BATCH,
+            "nvals": self.nvals,
+            "backbone_value": self.backbone_value(),
+            "feat_channels": self.feat_channels(),
+            "ops": [o.to_json() for o in self.ops],
+            "params": [{"name": n, "shape": list(s)} for n, s in self.param_specs()],
+            "trainables": {
+                m: [{"name": n, "shape": list(s)}
+                    for n, s in self.trainable_specs(m)]
+                for m in ("lw", "dch")
+            },
+            "quantized_values": self.quantized_values(),
+            "value_channels": {str(k): v for k, v in self.value_channels().items()},
+            "value_signed": {str(k): v for k, v in self.value_signed().items()},
+        }
+
+
+# ---------------------------------------------------------------------------
+# Zoo builders
+# ---------------------------------------------------------------------------
+
+def _basic_block(a: Arch, v: int, cin: int, cout: int, stride: int) -> int:
+    """ResNet basic block: conv-relu, conv, (proj), add, relu."""
+    h = a.conv(v, cin, cout, 3, stride, act="relu")
+    h = a.conv(h, cout, cout, 3, 1, act="none")
+    skip = v
+    if stride != 1 or cin != cout:
+        skip = a.conv(v, cin, cout, 1, stride, act="none")
+    return a.add(h, skip, act="relu")
+
+
+def _inverted_residual(a: Arch, v: int, cin: int, cout: int, stride: int,
+                       expand: int, act: str = "relu6") -> int:
+    """MobileNetV2 block: pw expand (act), dw (act), pw project (linear), add."""
+    mid = cin * expand
+    h = a.conv(v, cin, mid, 1, 1, act=act)
+    h = a.conv(h, mid, mid, 3, stride, groups=mid, act=act)
+    h = a.conv(h, mid, cout, 1, 1, act="none")
+    if stride == 1 and cin == cout:
+        h = a.add(h, v, act="none")
+    return h
+
+
+def convnet_tiny() -> Arch:
+    a = Arch("convnet_tiny")
+    v = a.conv(0, 3, 16, 3, 1)
+    v = a.conv(v, 16, 16, 3, 2)
+    v = a.conv(v, 16, 32, 3, 1)
+    v = a.conv(v, 32, 32, 3, 2)
+    v = a.gap(v)
+    a.fc(v, 32, NUM_CLASSES)
+    return a
+
+
+def resnet_tiny() -> Arch:
+    a = Arch("resnet_tiny")
+    v = a.conv(0, 3, 16, 3, 1)
+    v = _basic_block(a, v, 16, 16, 1)
+    v = _basic_block(a, v, 16, 32, 2)
+    v = _basic_block(a, v, 32, 32, 1)
+    v = a.gap(v)
+    a.fc(v, 32, NUM_CLASSES)
+    return a
+
+
+def resnet_wide() -> Arch:
+    a = Arch("resnet_wide")
+    v = a.conv(0, 3, 24, 3, 1)
+    v = _basic_block(a, v, 24, 24, 1)
+    v = _basic_block(a, v, 24, 48, 2)
+    v = _basic_block(a, v, 48, 48, 1)
+    v = _basic_block(a, v, 48, 48, 1)
+    v = a.gap(v)
+    a.fc(v, 48, NUM_CLASSES)
+    return a
+
+
+def mobilenet_tiny() -> Arch:
+    a = Arch("mobilenet_tiny")
+    v = a.conv(0, 3, 16, 3, 1, act="relu6")
+    v = _inverted_residual(a, v, 16, 16, 1, 2)
+    v = _inverted_residual(a, v, 16, 24, 2, 2)
+    v = _inverted_residual(a, v, 24, 24, 1, 2)
+    v = a.gap(v)
+    a.fc(v, 24, NUM_CLASSES)
+    return a
+
+
+def mnasnet_tiny() -> Arch:
+    a = Arch("mnasnet_tiny")
+    v = a.conv(0, 3, 16, 3, 1, act="relu")
+    # mnasnet mixes dw blocks with plain relu + a 5x5-ish stage (3x3 here)
+    v = _inverted_residual(a, v, 16, 16, 1, 2, act="relu")
+    v = _inverted_residual(a, v, 16, 32, 2, 3, act="relu")
+    v = _inverted_residual(a, v, 32, 32, 1, 3, act="relu")
+    v = a.gap(v)
+    a.fc(v, 32, NUM_CLASSES)
+    return a
+
+
+def regnet_tiny() -> Arch:
+    a = Arch("regnet_tiny")
+    v = a.conv(0, 3, 8, 3, 1)
+    v = _basic_block(a, v, 8, 16, 1)
+    v = _basic_block(a, v, 16, 24, 2)
+    v = _basic_block(a, v, 24, 32, 2)
+    v = a.gap(v)
+    a.fc(v, 32, NUM_CLASSES)
+    return a
+
+
+def regnet_wide() -> Arch:
+    a = Arch("regnet_wide")
+    v = a.conv(0, 3, 16, 3, 1)
+    v = _basic_block(a, v, 16, 24, 1)
+    v = _basic_block(a, v, 24, 40, 2)
+    v = _basic_block(a, v, 40, 56, 2)
+    v = _basic_block(a, v, 56, 56, 1)
+    v = a.gap(v)
+    a.fc(v, 56, NUM_CLASSES)
+    return a
+
+
+ZOO = {
+    "convnet_tiny": convnet_tiny,
+    "resnet_tiny": resnet_tiny,
+    "resnet_wide": resnet_wide,
+    "mobilenet_tiny": mobilenet_tiny,
+    "mnasnet_tiny": mnasnet_tiny,
+    "regnet_tiny": regnet_tiny,
+    "regnet_wide": regnet_wide,
+}
+
+
+def get_arch(name: str) -> Arch:
+    return ZOO[name]()
+
+
+def init_params(arch: Arch, seed: int = 0):
+    """He-init FP params as a list of jnp arrays in param_specs order."""
+    import jax
+    import jax.numpy as jnp
+
+    key = jax.random.PRNGKey(seed)
+    out = []
+    for name, shape in arch.param_specs():
+        key, sub = jax.random.split(key)
+        if name.startswith("w:"):
+            fan_in = math.prod(shape[:-1]) if len(shape) > 2 else shape[0]
+            std = math.sqrt(2.0 / max(fan_in, 1))
+            out.append(jax.random.normal(sub, shape, jnp.float32) * std)
+        else:
+            out.append(jnp.zeros(shape, jnp.float32))
+    return out

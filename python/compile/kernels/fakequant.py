@@ -1,0 +1,79 @@
+"""L1 Pallas fake-quantization kernel with STE gradients.
+
+The lossy element of Fig. 4/11: ``s * clip(round(x/s), qmin, qmax)``.  The
+forward pass is a Pallas kernel (interpret=True in this image — real-TPU
+lowering emits a Mosaic custom-call the CPU PJRT plugin cannot execute); the
+backward pass is the analytic STE/LSQ cotangent, so gradients flow *natively*
+into whatever computes ``s`` — the offline subgraph (outer products of L/R
+co-vectors, Eq. 2) — with no per-parameter gradient definitions.
+
+TPU notes (DESIGN.md §Hardware-Adaptation): fake-quant is pure VPU work.  We
+block the tensor into VMEM-resident tiles; for the small shapes of this repo a
+single block suffices, for larger tensors a (256, 128) grid keeps the tile
+footprint at 128 KiB (3 buffers) with room for double-buffering in 16 MiB VMEM.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Tile shape for 2-D blocked dispatch (VPU lane-friendly multiple of (8,128)).
+_BLOCK = (256, 128)
+
+
+def _fq_kernel(x_ref, s_ref, o_ref, *, qmin, qmax):
+    x = x_ref[...]
+    s = s_ref[...]
+    q = x / s
+    o_ref[...] = jnp.clip(jnp.round(q), qmin, qmax) * s
+
+
+def _fq_pallas(x, sb, qmin, qmax):
+    """Forward Pallas dispatch: single block for small tensors, 2-D grid of
+    VMEM tiles for large 2-D tensors."""
+    kern = functools.partial(_fq_kernel, qmin=qmin, qmax=qmax)
+    if x.ndim == 2 and x.shape[0] % _BLOCK[0] == 0 and x.shape[1] % _BLOCK[1] == 0 \
+            and x.size > _BLOCK[0] * _BLOCK[1]:
+        grid = (x.shape[0] // _BLOCK[0], x.shape[1] // _BLOCK[1])
+        spec = pl.BlockSpec(_BLOCK, lambda i, j: (i, j))
+        return pl.pallas_call(
+            kern,
+            grid=grid,
+            in_specs=[spec, spec],
+            out_specs=spec,
+            out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+            interpret=True,
+        )(x, sb)
+    return pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=True,
+    )(x, sb)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def fakequant(x, s, qmin: float, qmax: float):
+    """Fake-quantize x on the grid s with saturation [qmin, qmax].
+
+    ``s`` may be any shape broadcastable to ``x.shape`` (scalar, per-channel
+    vector, or a full doubly-channelwise outer product).  Differentiable in
+    both x and s via STE.
+    """
+    sb = jnp.broadcast_to(s, x.shape).astype(x.dtype)
+    return _fq_pallas(x, sb, qmin, qmax)
+
+
+def _fq_fwd(x, s, qmin, qmax):
+    return fakequant(x, s, qmin, qmax), (x, s)
+
+
+def _fq_bwd(qmin, qmax, res, g):
+    x, s = res
+    return ref.fakequant_grads_ref(g, x, s, qmin, qmax)
+
+
+fakequant.defvjp(_fq_fwd, _fq_bwd)

@@ -1,0 +1,94 @@
+"""L1 fused quantized matmul: ``x @ fakequant(w, outer(s_l, s_r))``.
+
+This is the online-subgraph hot spot of the student network: pointwise (1x1)
+convolutions and im2col'd convs reduce to a matmul against a 4b fake-quantized
+weight matrix whose grid is the outer product of the left/right scale
+co-vectors (Eq. 2 / Eq. 10).
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the kernel tiles (M, K) x (K, N)
+into MXU-shaped VMEM blocks; the weight tile is fake-quantized *in VMEM* right
+before the dot, so the requantized kernel never round-trips to HBM — the
+Pallas analogue of fusing the quantize into the threadblock the paper's GPU
+stack relies on XLA for.  interpret=True in this image (CPU PJRT).
+
+Backward is delegated to jax.vjp over the jnp oracle composition, which routes
+STE cotangents into x, w, s_l, s_r natively.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# MXU-shaped tiles; K is kept whole per block (K <= a few hundred here).
+_BM = 128
+_BN = 128
+
+
+def _qmm_kernel(x_ref, w_ref, sl_ref, sr_ref, o_ref, *, qmin, qmax):
+    x = x_ref[...]
+    w = w_ref[...]
+    s = sl_ref[...][:, None] * sr_ref[...][None, :]
+    wq = jnp.clip(jnp.round(w / s), qmin, qmax) * s
+    o_ref[...] = jnp.dot(x, wq, preferred_element_type=jnp.float32)
+
+
+def _qmm_pallas(x, w, s_l, s_r, qmin, qmax):
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2 and s_l.shape == (k,) and s_r.shape == (n,)
+    kern = functools.partial(_qmm_kernel, qmin=qmin, qmax=qmax)
+    if m % _BM == 0 and n % _BN == 0 and (m > _BM or n > _BN):
+        grid = (m // _BM, n // _BN)
+        return pl.pallas_call(
+            kern,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((_BM, k), lambda i, j: (i, 0)),
+                pl.BlockSpec((k, _BN), lambda i, j: (0, j)),
+                pl.BlockSpec((k,), lambda i, j: (0,)),
+                pl.BlockSpec((_BN,), lambda i, j: (j,)),
+            ],
+            out_specs=pl.BlockSpec((_BM, _BN), lambda i, j: (i, j)),
+            out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+            interpret=True,
+        )(x, w, s_l, s_r)
+    return pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(x, w, s_l, s_r)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5))
+def qmatmul(x, w, s_l, s_r, qmin: float, qmax: float):
+    """x[m,k] @ fakequant(w[k,n], s_l[k] ⊗ s_r[n]) with STE gradients."""
+    return _qmm_pallas(x, w, s_l, s_r, qmin, qmax)
+
+
+def _qmm_fwd(x, w, s_l, s_r, qmin, qmax):
+    return qmatmul(x, w, s_l, s_r, qmin, qmax), (x, w, s_l, s_r)
+
+
+def _qmm_bwd(qmin, qmax, res, g):
+    x, w, s_l, s_r = res
+
+    def composed(x, w, s_l, s_r):
+        s = s_l[:, None] * s_r[None, :]
+        q = w / s
+        inside = ((q >= qmin) & (q <= qmax)).astype(w.dtype)
+        # Differentiable surrogate with exactly the STE cotangents:
+        # wq = s * (r + inside * (q - stop_grad(q))), r = stop_grad(clip round)
+        # value == fakequant_ref; d/dw == inside; d/ds == r - inside * q.
+        r = jax.lax.stop_gradient(jnp.clip(jnp.round(q), qmin, qmax))
+        wq = s * (r + inside * (q - jax.lax.stop_gradient(q)))
+        return x @ wq
+
+    _, vjp = jax.vjp(composed, x, w, s_l, s_r)
+    return vjp(g)
+
+
+qmatmul.defvjp(_qmm_fwd, _qmm_bwd)

@@ -1,0 +1,49 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every kernel in this package must agree with its oracle here to float32
+round-off; `python/tests/test_kernels.py` sweeps shapes/scales with
+hypothesis and asserts allclose.
+"""
+
+import jax.numpy as jnp
+
+
+def fakequant_ref(x, s, qmin: float, qmax: float):
+    """s * clip(round(x / s), qmin, qmax); s broadcastable to x.shape."""
+    q = x / s
+    return jnp.clip(jnp.round(q), qmin, qmax) * s
+
+
+def fakequant_grads_ref(g, x, s, qmin: float, qmax: float):
+    """Analytic STE/LSQ-style cotangents for fakequant.
+
+    Treating round() as identity in backward (STE), autodiff of
+    s * clip(round(x/s)) gives
+        dL/dx = g            inside the clip range, 0 outside
+        dL/ds = g * (r - q)  inside,  g * r  outside      (r = clipped round)
+    ds is reduced back to s's (broadcastable) shape.
+    """
+    sb = jnp.broadcast_to(s, x.shape)
+    q = x / sb
+    r = jnp.clip(jnp.round(q), qmin, qmax)
+    inside = ((q >= qmin) & (q <= qmax)).astype(x.dtype)
+    dx = g * inside
+    ds_full = g * (r - q * inside)
+    ds = _unbroadcast(ds_full, jnp.shape(s))
+    return dx, ds
+
+
+def _unbroadcast(t, shape):
+    """Sum-reduce t back to `shape` (inverse of broadcast_to)."""
+    extra = t.ndim - len(shape)
+    if extra > 0:
+        t = t.sum(axis=tuple(range(extra)))
+    axes = tuple(i for i, d in enumerate(shape) if d == 1 and t.shape[i] != 1)
+    if axes:
+        t = t.sum(axis=axes, keepdims=True)
+    return t.reshape(shape)
+
+
+def qmatmul_ref(x, w, s, qmin: float, qmax: float):
+    """x @ fakequant(w, s): the fused quantized-matmul oracle."""
+    return x @ fakequant_ref(w, s, qmin, qmax)

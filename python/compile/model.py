@@ -1,0 +1,154 @@
+"""L2 full-precision model: forward, CE pretrain step, calibration stats.
+
+The FP network plays two roles in QFT (paper §3.1): it is the *teacher* for
+knowledge distillation, and its pretrained weights are the student's init.
+Since this repo substitutes ImageNet-pretrained models with tiny nets trained
+in-repo (DESIGN.md), we also export an Adam cross-entropy `fp_train` step so
+the rust leader can pretrain the teacher through PJRT — python stays off the
+run path.
+
+All functions take/return *flat lists* of arrays in `arch.param_specs()`
+order; `aot.py` records that order in the manifest for the rust side.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import archs
+from .archs import Arch
+
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+
+
+def _act(x, kind: str):
+    if kind == "relu":
+        return jax.nn.relu(x)
+    if kind == "relu6":
+        return jnp.clip(x, 0.0, 6.0)
+    return x
+
+
+def _conv(x, w, b, stride: int, groups: int):
+    y = jax.lax.conv_general_dilated(
+        x, w,
+        window_strides=(stride, stride),
+        padding="SAME",
+        feature_group_count=groups,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return y + b
+
+
+def _param_map(arch: Arch, params):
+    return {name: p for (name, _), p in zip(arch.param_specs(), params)}
+
+
+def forward(arch: Arch, params, x, *, collect=False):
+    """FP forward. Returns (logits, feat, values) where feat is the backbone
+    output (KD tap, pre-gap) and values maps value-id -> tensor when
+    ``collect`` (used for calibration statistics)."""
+    pm = _param_map(arch, params)
+    vals = {0: x}
+    feat = None
+    logits = None
+    for o in arch.ops:
+        if o.op == "conv":
+            y = _conv(vals[o.inp], pm[f"w:{o.name}"], pm[f"b:{o.name}"],
+                      o.stride, o.groups)
+            vals[o.out] = _act(y, o.act)
+        elif o.op == "add":
+            vals[o.out] = _act(vals[o.a] + vals[o.b], o.act)
+        elif o.op == "gap":
+            feat = vals[o.inp]
+            vals[o.out] = jnp.mean(vals[o.inp], axis=(1, 2))
+        elif o.op == "fc":
+            logits = vals[o.inp] @ pm[f"w:{o.name}"] + pm[f"b:{o.name}"]
+            vals[o.out] = logits
+    return logits, feat, (vals if collect else None)
+
+
+def ce_loss(arch: Arch, params, images, labels):
+    logits, _, _ = forward(arch, params, images)
+    logp = jax.nn.log_softmax(logits)
+    onehot = jax.nn.one_hot(labels, archs.NUM_CLASSES, dtype=jnp.float32)
+    return -jnp.mean(jnp.sum(onehot * logp, axis=-1))
+
+
+def adam_update(params, grads, m, v, t, lr):
+    """One functional Adam step over flat lists; t is the 1-based step as f32."""
+    new_p, new_m, new_v = [], [], []
+    bc1 = 1.0 - ADAM_B1 ** t
+    bc2 = 1.0 - ADAM_B2 ** t
+    for p, g, mi, vi in zip(params, grads, m, v):
+        mi = ADAM_B1 * mi + (1.0 - ADAM_B1) * g
+        vi = ADAM_B2 * vi + (1.0 - ADAM_B2) * g * g
+        mhat = mi / bc1
+        vhat = vi / bc2
+        new_p.append(p - lr * mhat / (jnp.sqrt(vhat) + ADAM_EPS))
+        new_m.append(mi)
+        new_v.append(vi)
+    return new_p, new_m, new_v
+
+
+# --------------------------------------------------------------------------
+# Exported entry points (flat signatures for AOT)
+# --------------------------------------------------------------------------
+
+def make_fp_train(arch: Arch):
+    """(params.., m.., v.., t, lr, images, labels) ->
+       (params'.., m'.., v'.., loss)"""
+    n = len(arch.param_specs())
+
+    def step(*args):
+        params = list(args[:n])
+        m = list(args[n:2 * n])
+        v = list(args[2 * n:3 * n])
+        t, lr, images, labels = args[3 * n:]
+        t, lr = t[0], lr[0]  # scalars arrive as shape-(1,) f32 literals
+        labels = labels.astype(jnp.int32)
+        loss, grads = jax.value_and_grad(
+            lambda p: ce_loss(arch, p, images, labels))(params)
+        new_p, new_m, new_v = adam_update(params, grads, m, v, t, lr)
+        return tuple(new_p + new_m + new_v + [loss])
+
+    return step
+
+
+def make_fp_eval(arch: Arch):
+    """(params.., images) -> (logits, feat_gap)"""
+    n = len(arch.param_specs())
+
+    def run(*args):
+        params = list(args[:n])
+        images = args[n]
+        logits, feat, _ = forward(arch, params, images)
+        return (logits, jnp.mean(feat, axis=(1, 2)))
+
+    return run
+
+
+def make_fp_stats(arch: Arch):
+    """(params.., images) -> per-quantized-value, per-channel max|.| vectors.
+
+    The 'naive (max-min) range calibration' of §4: the rust coordinator
+    reduces these per-batch maxima over the calibration set to initialize the
+    activation scale DoF."""
+    n = len(arch.param_specs())
+    qvals = arch.quantized_values()
+
+    def run(*args):
+        params = list(args[:n])
+        images = args[n]
+        _, _, vals = forward(arch, params, images, collect=True)
+        outs = []
+        for vid in qvals:
+            t = vals[vid]
+            red = tuple(range(t.ndim - 1))
+            outs.append(jnp.max(jnp.abs(t), axis=red))
+        return tuple(outs)
+
+    return run

@@ -1,0 +1,207 @@
+"""L2 QFT twin-graph simulation (paper Fig. 4 / Fig. 11) and train step.
+
+The student is a *deployment-aware* graph in two parts:
+
+  offline subgraph — infers every deployment constant from the independent
+    DoF set (Eq. 2 and its inversion Eqs. 3-4).  In `lw` mode (W4A8,
+    layerwise/scalar HW rescale) the DoF are {W, b, S_a vectors, F scalars}
+    and the kernel grid is the outer product
+        S_w[m, n] = (1 / S_a^{l-1})_m * (S_a^l * F^l)_n ,
+    which *is* the trainable cross-layer-factorization (CLE) DoF.  In `dch`
+    mode (W4A32, channelwise rescale) the DoF are the explicit left/right
+    kernel scale co-vectors {S_wL, S_wR} of the doubly-channelwise scheme.
+
+  online subgraph — HW-runtime emulation: convs against the fake-quantized
+    kernel (fused Pallas `qmatmul` for pointwise convs), bias add, activation,
+    and 8b activation fake-quant (lw mode).  Elementwise-add and the gap/fc
+    head are taken full-precision per the paper (App. D item 1, §4).
+
+Everything is end-to-end differentiable through the STE decorating each
+clip(round(.)) (see kernels/), so weights, biases, activation scales and
+rescale factors train on the same footing — no per-parameter gradient rules.
+
+Training loss: knowledge distillation from the FP teacher — normalized L2 on
+the backbone output (pre-gap feature map), optionally mixed with CE on soft
+logits (Fig. 6 ablation).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import archs, model
+from .archs import ACT_SIGNED_QMAX, ACT_UNSIGNED_QMAX, WEIGHT_QMAX, Arch
+from .kernels.fakequant import fakequant
+from .kernels.qmatmul import qmatmul
+
+EPS = 1e-12
+WQ = float(WEIGHT_QMAX)
+
+
+def _tr_map(arch: Arch, mode: str, trainables):
+    return {name: t for (name, _), t in zip(arch.trainable_specs(mode), trainables)}
+
+
+def _pos(s):
+    """Scale DoF are unconstrained variables; the offline subgraph maps them
+    to strictly positive grids (|s| + eps) so training can move through 0."""
+    return jnp.abs(s) + EPS
+
+
+def _act_range(signed: bool):
+    return (-ACT_SIGNED_QMAX, ACT_SIGNED_QMAX) if signed else (0.0, ACT_UNSIGNED_QMAX)
+
+
+def kernel_scale_lw(tm, o, quant_in_vid):
+    """Offline subgraph, lw mode: Eq. 2 for one conv."""
+    su = _pos(tm[f"sv:{quant_in_vid}"])            # (cin,)  = S_a^{l-1}
+    sv = _pos(tm[f"sv:{o.out}"])                   # (cout,) = S_a^l
+    f = _pos(tm[f"f:{o.name}"])                    # (1,)    = F^l (scalar, lw)
+    if o.groups == 1:
+        s_l = 1.0 / su                             # left co-vector
+        s_r = sv * f                               # right co-vector
+        return s_l, s_r
+    # depthwise: single channel axis, in-channel m == out-channel m
+    return None, (sv * f) / su                     # (cout,)
+
+
+def kernel_scale_dch(tm, o):
+    """Offline subgraph, dch mode: explicit L/R co-vectors (Eqs. 3-4)."""
+    if o.groups == 1:
+        return _pos(tm[f"swl:{o.name}"]), _pos(tm[f"swr:{o.name}"])
+    return None, _pos(tm[f"swr:{o.name}"])
+
+
+def _qconv(x, w, b, o, s_l, s_r):
+    """Online conv against the fake-quantized kernel."""
+    if o.k == 1 and o.groups == 1 and o.stride == 1:
+        # pointwise conv == matmul: use the fused Pallas kernel
+        bsz, h, wd, cin = x.shape
+        y = qmatmul(x.reshape(-1, cin), w.reshape(cin, o.cout), s_l, s_r,
+                    -WQ, WQ)
+        y = y.reshape(bsz, h, wd, o.cout)
+    else:
+        if s_l is None:  # depthwise
+            s_w = s_r[None, None, None, :]
+        else:
+            s_w = s_l[None, None, :, None] * s_r[None, None, None, :]
+        wq = fakequant(w, s_w, -WQ, WQ)
+        y = jax.lax.conv_general_dilated(
+            x, wq, window_strides=(o.stride, o.stride), padding="SAME",
+            feature_group_count=o.groups,
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + b
+
+
+def student_forward(arch: Arch, mode: str, trainables, x):
+    """Quantized-student forward. Returns (logits, feat_map)."""
+    tm = _tr_map(arch, mode, trainables)
+    signed = arch.value_signed()
+    vals = {}
+    if mode == "lw":
+        qmin, qmax = _act_range(signed[0])
+        vals[0] = fakequant(x, _pos(tm["sv:0"])[None, None, None, :], qmin, qmax)
+    else:
+        vals[0] = x
+    feat = None
+    logits = None
+    for o in arch.ops:
+        if o.op == "conv":
+            w, b = tm[f"w:{o.name}"], tm[f"b:{o.name}"]
+            if mode == "lw":
+                s_l, s_r = kernel_scale_lw(tm, o, o.inp)
+            else:
+                s_l, s_r = kernel_scale_dch(tm, o)
+            a = model._act(_qconv(vals[o.inp], w, b, o, s_l, s_r), o.act)
+            if mode == "lw":
+                qmin, qmax = _act_range(signed[o.out])
+                sv = _pos(tm[f"sv:{o.out}"])
+                a = fakequant(a, sv[None, None, None, :], qmin, qmax)
+            vals[o.out] = a
+        elif o.op == "add":
+            a = model._act(vals[o.a] + vals[o.b], o.act)
+            if mode == "lw":
+                qmin, qmax = _act_range(signed[o.out])
+                sv = _pos(tm[f"sv:{o.out}"])
+                a = fakequant(a, sv[None, None, None, :], qmin, qmax)
+            vals[o.out] = a
+        elif o.op == "gap":
+            feat = vals[o.inp]
+            vals[o.out] = jnp.mean(vals[o.inp], axis=(1, 2))
+        elif o.op == "fc":
+            logits = vals[o.inp] @ tm[f"w:{o.name}"] + tm[f"b:{o.name}"]
+            vals[o.out] = logits
+    return logits, feat
+
+
+def kd_loss(arch: Arch, mode: str, trainables, teacher_params, images, ce_mix):
+    """(1-p) * normalized-L2(backbone feat) + p * CE(soft logits)."""
+    t_logits, t_feat, _ = model.forward(arch, teacher_params, images)
+    t_logits = jax.lax.stop_gradient(t_logits)
+    t_feat = jax.lax.stop_gradient(t_feat)
+    s_logits, s_feat = student_forward(arch, mode, trainables, images)
+
+    diff = (t_feat - s_feat).reshape(t_feat.shape[0], -1)
+    tf = t_feat.reshape(t_feat.shape[0], -1)
+    l2 = jnp.mean(jnp.sum(diff * diff, axis=-1) /
+                  (jnp.sum(tf * tf, axis=-1) + 1e-6))
+
+    p_t = jax.nn.softmax(t_logits)
+    ce = -jnp.mean(jnp.sum(p_t * jax.nn.log_softmax(s_logits), axis=-1))
+    return (1.0 - ce_mix) * l2 + ce_mix * ce
+
+
+def _scale_mask(arch: Arch, mode: str):
+    """1.0 for scale-type DoF (sv/f/swl/swr), 0.0 for weights/biases."""
+    return [1.0 if n.split(":")[0] in ("sv", "f", "swl", "swr") else 0.0
+            for n, _ in arch.trainable_specs(mode)]
+
+
+# --------------------------------------------------------------------------
+# Exported entry points
+# --------------------------------------------------------------------------
+
+def make_qft_train(arch: Arch, mode: str):
+    """(trainables.., m.., v.., t, lr, ce_mix, train_scales,
+        teacher_params.., images) -> (trainables'.., m'.., v'.., loss)
+
+    `train_scales` in {0,1} gates gradient flow into the scale DoF — the
+    frozen-scales arm of the Fig. 8 / Fig. 9 ablations — without needing a
+    separate compiled graph.  Scalars arrive as shape-(1,) f32 literals.
+    """
+    n = len(arch.trainable_specs(mode))
+    np_ = len(arch.param_specs())
+    mask = _scale_mask(arch, mode)
+
+    def step(*args):
+        tr = list(args[:n])
+        m = list(args[n:2 * n])
+        v = list(args[2 * n:3 * n])
+        t, lr, ce_mix, train_scales = args[3 * n:3 * n + 4]
+        teacher = list(args[3 * n + 4:3 * n + 4 + np_])
+        images = args[3 * n + 4 + np_]
+        t, lr = t[0], lr[0]
+        ce_mix, train_scales = ce_mix[0], train_scales[0]
+
+        loss, grads = jax.value_and_grad(
+            lambda tr_: kd_loss(arch, mode, tr_, teacher, images, ce_mix))(tr)
+        grads = [g * (1.0 - mk + mk * train_scales)
+                 for g, mk in zip(grads, mask)]
+        new_t, new_m, new_v = model.adam_update(tr, grads, m, v, t, lr)
+        return tuple(new_t + new_m + new_v + [loss])
+
+    return step
+
+
+def make_q_eval(arch: Arch, mode: str):
+    """(trainables.., images) -> (logits, feat_gap)"""
+    n = len(arch.trainable_specs(mode))
+
+    def run(*args):
+        tr = list(args[:n])
+        images = args[n]
+        logits, feat = student_forward(arch, mode, tr, images)
+        return (logits, jnp.mean(feat, axis=(1, 2)))
+
+    return run

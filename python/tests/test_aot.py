@@ -1,0 +1,68 @@
+"""AOT manifest/artifact consistency (runs against a built artifacts/ dir)."""
+
+import json
+import os
+
+import pytest
+
+from compile import archs
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+MANIFEST = os.path.join(ART, "manifest.json")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(MANIFEST), reason="artifacts not built (run make artifacts)")
+
+
+def _manifest():
+    with open(MANIFEST) as f:
+        return json.load(f)
+
+
+def test_manifest_covers_zoo():
+    m = _manifest()
+    for name in archs.ZOO:
+        assert name in m["archs"], name
+
+
+def test_artifact_files_exist():
+    m = _manifest()
+    for arch in m["archs"].values():
+        for art in arch["artifacts"].values():
+            path = os.path.join(ART, art["file"])
+            assert os.path.exists(path), path
+            with open(path) as f:
+                head = f.read(200)
+            assert "HloModule" in head, path
+
+
+def test_manifest_shapes_match_arch_specs():
+    m = _manifest()
+    for name in archs.ZOO:
+        a = archs.get_arch(name)
+        spec = m["archs"][name]
+        assert [tuple(p["shape"]) for p in spec["params"]] == \
+               [s for _, s in a.param_specs()]
+        for mode in ("lw", "dch"):
+            assert [tuple(p["shape"]) for p in spec["trainables"][mode]] == \
+                   [s for _, s in a.trainable_specs(mode)]
+
+
+def test_qft_train_io_arity():
+    """inputs = 3*T + 4 scalars + P teacher + images; outputs = 3*T + loss."""
+    m = _manifest()
+    for name in archs.ZOO:
+        a = archs.get_arch(name)
+        np_ = len(a.param_specs())
+        for mode in ("lw", "dch"):
+            nt = len(a.trainable_specs(mode))
+            art = m["archs"][name]["artifacts"][f"qft_train_{mode}"]
+            assert len(art["inputs"]) == 3 * nt + 4 + np_ + 1
+            assert len(art["outputs"]) == 3 * nt + 1
+
+
+def test_kernel_artifacts_present():
+    m = _manifest()
+    assert "qmatmul" in m["kernels"] and "fakequant" in m["kernels"]
+    for k in m["kernels"].values():
+        assert os.path.exists(os.path.join(ART, k["file"]))

@@ -1,0 +1,109 @@
+"""Architecture-IR invariants: the manifest contract both layers rely on."""
+
+import pytest
+
+from compile import archs
+
+
+@pytest.mark.parametrize("name", list(archs.ZOO))
+def test_conv_channel_chains_are_consistent(name):
+    a = archs.get_arch(name)
+    ch = a.value_channels()
+    for o in a.ops:
+        if o.op == "conv":
+            assert ch[o.inp] == o.cin, o.name
+            assert ch[o.out] == o.cout, o.name
+            if o.groups > 1:
+                assert o.groups == o.cin == o.cout, "only depthwise supported"
+        elif o.op == "add":
+            assert ch[o.a] == ch[o.b] == ch[o.out]
+
+
+@pytest.mark.parametrize("name", list(archs.ZOO))
+def test_values_produced_before_use(name):
+    a = archs.get_arch(name)
+    seen = {0}
+    for o in a.ops:
+        uses = {"conv": [o.inp], "add": [o.a, o.b], "gap": [o.inp], "fc": [o.inp]}[o.op]
+        for u in uses:
+            assert u in seen, f"{o.name} uses value {u} before production"
+        seen.add(o.out)
+
+
+@pytest.mark.parametrize("name", list(archs.ZOO))
+def test_value_ids_unique_and_dense(name):
+    a = archs.get_arch(name)
+    outs = [o.out for o in a.ops]
+    assert len(outs) == len(set(outs))
+    assert sorted([0] + outs) == list(range(a.nvals))
+
+
+@pytest.mark.parametrize("name", list(archs.ZOO))
+def test_signedness_rules(name):
+    a = archs.get_arch(name)
+    signed = a.value_signed()
+    assert signed[0] is False  # images in [0,1]
+    for o in a.ops:
+        if o.op in ("conv", "add"):
+            assert signed[o.out] == (o.act == "none"), o.name
+
+
+@pytest.mark.parametrize("name", list(archs.ZOO))
+def test_quantized_values_cover_all_conv_inputs(name):
+    """Every conv input must carry an encoding (the S_wL = 1/S_a link)."""
+    a = archs.get_arch(name)
+    qv = set(a.quantized_values())
+    for o in a.conv_ops():
+        assert o.inp in qv, f"{o.name} input value {o.inp} not quantized"
+
+
+@pytest.mark.parametrize("name", list(archs.ZOO))
+def test_manifest_json_is_self_consistent(name):
+    a = archs.get_arch(name)
+    j = a.to_json()
+    assert j["name"] == name
+    assert len(j["ops"]) == len(a.ops)
+    assert len(j["params"]) == len(a.param_specs())
+    for mode in ("lw", "dch"):
+        assert len(j["trainables"][mode]) == len(a.trainable_specs(mode))
+    assert j["backbone_value"] == a.backbone_value()
+    # every op's out is in value_channels
+    for o in j["ops"]:
+        assert str(o["out"]) in j["value_channels"]
+
+
+@pytest.mark.parametrize("name", list(archs.ZOO))
+def test_trainable_specs_lw_structure(name):
+    a = archs.get_arch(name)
+    ch = a.value_channels()
+    specs = dict(a.trainable_specs("lw"))
+    # one sv per quantized value with the right channel count
+    for v in a.quantized_values():
+        assert specs[f"sv:{v}"] == (ch[v],)
+    # one scalar F per conv
+    for o in a.conv_ops():
+        assert specs[f"f:{o.name}"] == (1,)
+
+
+@pytest.mark.parametrize("name", list(archs.ZOO))
+def test_trainable_specs_dch_structure(name):
+    a = archs.get_arch(name)
+    specs = dict(a.trainable_specs("dch"))
+    for o in a.conv_ops():
+        assert specs[f"swr:{o.name}"] == (o.cout,)
+        if o.groups == 1:
+            assert specs[f"swl:{o.name}"] == (o.cin,)
+        else:
+            assert f"swl:{o.name}" not in specs
+
+
+def test_zoo_has_six_table1_analogues_plus_quickstart():
+    assert len(archs.ZOO) == 7
+    assert "convnet_tiny" in archs.ZOO  # quickstart net
+
+
+def test_backbone_is_pre_gap_feature_map():
+    for name in archs.ZOO:
+        a = archs.get_arch(name)
+        gap = next(o for o in a.ops if o.op == "gap")
+        assert a.backbone_value() == gap.inp

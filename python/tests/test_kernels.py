@@ -1,0 +1,189 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracle (hypothesis sweeps)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import ref
+from compile.kernels.fakequant import fakequant
+from compile.kernels.qmatmul import qmatmul
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _rand(rng, shape, scale=1.0):
+    return jnp.asarray(rng.standard_normal(shape, dtype=np.float32) * scale)
+
+
+# ---------------------------------------------------------------- fakequant
+
+@settings(**SETTINGS)
+@given(
+    rows=st.integers(1, 48), cols=st.integers(1, 48),
+    seed=st.integers(0, 2**31 - 1),
+    qmax=st.sampled_from([1.0, 7.0, 127.0, 255.0]),
+    signed=st.booleans(),
+)
+def test_fakequant_matches_ref_2d(rows, cols, seed, qmax, signed):
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, (rows, cols))
+    s = jnp.asarray(rng.uniform(0.01, 0.5, (cols,)).astype(np.float32))
+    qmin = -qmax if signed else 0.0
+    got = fakequant(x, s[None, :], qmin, qmax)
+    want = ref.fakequant_ref(x, s[None, :], qmin, qmax)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6, atol=1e-6)
+
+
+@settings(**SETTINGS)
+@given(
+    shape=st.sampled_from([(3,), (4, 5), (2, 3, 4), (2, 3, 4, 5)]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fakequant_nd_scalar_scale(shape, seed):
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, shape)
+    s = jnp.asarray(np.float32(0.07))
+    got = fakequant(x, s, -7.0, 7.0)
+    want = ref.fakequant_ref(x, s, -7.0, 7.0)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6, atol=1e-6)
+
+
+def test_fakequant_outer_product_scale():
+    """Doubly-channelwise grid: s = s_l ⊗ s_r broadcast over a 4-D kernel."""
+    rng = np.random.default_rng(0)
+    w = _rand(rng, (3, 3, 8, 16), 0.2)
+    s_l = jnp.asarray(rng.uniform(0.5, 2.0, (8,)).astype(np.float32))
+    s_r = jnp.asarray(rng.uniform(0.01, 0.1, (16,)).astype(np.float32))
+    s = s_l[None, None, :, None] * s_r[None, None, None, :]
+    got = fakequant(w, s, -7.0, 7.0)
+    want = ref.fakequant_ref(w, s, -7.0, 7.0)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6, atol=1e-6)
+
+
+def test_fakequant_large_blocked_path():
+    """Exercise the tiled (grid > 1) Pallas dispatch."""
+    rng = np.random.default_rng(1)
+    x = _rand(rng, (512, 256))
+    s = jnp.full((512, 256), 0.05, jnp.float32)
+    got = fakequant(x, s, -127.0, 127.0)
+    want = ref.fakequant_ref(x, s, -127.0, 127.0)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6, atol=1e-6)
+
+
+def test_fakequant_idempotent():
+    """fq(fq(x)) == fq(x): quantized points are fixed points of the grid."""
+    rng = np.random.default_rng(2)
+    x = _rand(rng, (32, 32))
+    s = jnp.asarray(np.float32(0.1))
+    once = fakequant(x, s, -7.0, 7.0)
+    twice = fakequant(once, s, -7.0, 7.0)
+    assert_allclose(np.asarray(once), np.asarray(twice), rtol=0, atol=1e-7)
+
+
+def test_fakequant_values_on_grid():
+    rng = np.random.default_rng(3)
+    x = _rand(rng, (64,))
+    s = 0.13
+    y = np.asarray(fakequant(x, jnp.float32(s), -7.0, 7.0))
+    q = y / s
+    assert np.all(np.abs(q - np.round(q)) < 1e-4)
+    assert np.all(np.round(q) >= -7) and np.all(np.round(q) <= 7)
+
+
+# ----------------------------------------------------------- STE gradients
+
+def test_fakequant_grad_x_is_clip_mask():
+    rng = np.random.default_rng(4)
+    x = _rand(rng, (128,), 2.0)
+    s = jnp.float32(0.2)  # range ±1.4, plenty of clipping on N(0,4)
+    g = jax.grad(lambda x_: jnp.sum(fakequant(x_, s, -7.0, 7.0)))(x)
+    q = np.asarray(x) / 0.2
+    inside = (q >= -7) & (q <= 7)
+    assert_allclose(np.asarray(g), inside.astype(np.float32), atol=1e-6)
+
+
+def test_fakequant_grad_s_matches_lsq_formula():
+    rng = np.random.default_rng(5)
+    x = _rand(rng, (64, 8))
+    s = jnp.asarray(rng.uniform(0.05, 0.3, (8,)).astype(np.float32))
+    g = jax.grad(lambda s_: jnp.sum(fakequant(x, s_[None, :], -7.0, 7.0)))(s)
+    ones = jnp.ones_like(x)
+    _, want = ref.fakequant_grads_ref(ones, x, s[None, :], -7.0, 7.0)
+    assert_allclose(np.asarray(g), np.asarray(want).reshape(-1), rtol=1e-5,
+                    atol=1e-6)
+
+
+def test_fakequant_grad_s_sign():
+    """Scale gradient must push s up when everything clips (reduce clipping)."""
+    x = jnp.full((32,), 10.0, jnp.float32)
+    s = jnp.float32(0.1)  # max representable 0.7 << 10 -> heavy clipping
+    # d/ds of sum(fq) = sum(r) = 32*7 > 0: growing s grows the output toward x
+    g = jax.grad(lambda s_: jnp.sum(fakequant(x, s_, -7.0, 7.0)))(s)
+    assert float(g) > 0
+
+
+# ------------------------------------------------------------------ qmatmul
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 32), k=st.integers(1, 32), n=st.integers(1, 32),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_qmatmul_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, (m, k))
+    w = _rand(rng, (k, n), 0.3)
+    s_l = jnp.asarray(rng.uniform(0.5, 2.0, (k,)).astype(np.float32))
+    s_r = jnp.asarray(rng.uniform(0.01, 0.1, (n,)).astype(np.float32))
+    got = qmatmul(x, w, s_l, s_r, -7.0, 7.0)
+    s = s_l[:, None] * s_r[None, :]
+    want = ref.qmatmul_ref(x, w, s, -7.0, 7.0)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_qmatmul_blocked_path():
+    rng = np.random.default_rng(7)
+    x = _rand(rng, (256, 64))
+    w = _rand(rng, (64, 256), 0.3)
+    s_l = jnp.ones((64,), jnp.float32)
+    s_r = jnp.full((256,), 0.05, jnp.float32)
+    got = qmatmul(x, w, s_l, s_r, -7.0, 7.0)
+    want = ref.qmatmul_ref(x, w, s_l[:, None] * s_r[None, :], -7.0, 7.0)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_qmatmul_grads_match_composed():
+    """qmatmul's custom backward == autodiff of x @ fakequant(w, s_l⊗s_r)."""
+    rng = np.random.default_rng(8)
+    x = _rand(rng, (16, 8))
+    w = _rand(rng, (8, 12), 0.3)
+    s_l = jnp.asarray(rng.uniform(0.5, 2.0, (8,)).astype(np.float32))
+    s_r = jnp.asarray(rng.uniform(0.02, 0.1, (12,)).astype(np.float32))
+
+    def fused(x, w, s_l, s_r):
+        return jnp.sum(qmatmul(x, w, s_l, s_r, -7.0, 7.0) ** 2)
+
+    def composed(x, w, s_l, s_r):
+        s = s_l[None, :, None] * s_r[None, None, :]
+        wq = fakequant(w[None], s, -7.0, 7.0)[0]
+        return jnp.sum((x @ wq) ** 2)
+
+    g1 = jax.grad(fused, argnums=(0, 1, 2, 3))(x, w, s_l, s_r)
+    g2 = jax.grad(composed, argnums=(0, 1, 2, 3))(x, w, s_l, s_r)
+    for a, b in zip(g1, g2):
+        assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-4)
+
+
+def test_qmatmul_grad_nonzero_all_inputs():
+    rng = np.random.default_rng(9)
+    x = _rand(rng, (8, 8))
+    w = _rand(rng, (8, 8), 0.3)
+    s_l = jnp.ones((8,), jnp.float32)
+    s_r = jnp.full((8,), 0.05, jnp.float32)
+    g = jax.grad(lambda *a: jnp.sum(qmatmul(*a, -7.0, 7.0) ** 2),
+                 argnums=(0, 1, 2, 3))(x, w, s_l, s_r)
+    for gi in g:
+        assert float(jnp.abs(gi).max()) > 0

@@ -1,0 +1,99 @@
+"""L2 FP model: shapes, training signal, calibration stats."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import archs, model
+
+
+def _data(seed=0, batch=archs.BATCH):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.random((batch, archs.INPUT_HW, archs.INPUT_HW,
+                                archs.INPUT_CH), dtype=np.float32))
+    y = jnp.asarray(rng.integers(0, archs.NUM_CLASSES, (batch,)).astype(np.float32))
+    return x, y
+
+
+@pytest.mark.parametrize("name", list(archs.ZOO))
+def test_forward_shapes(name):
+    a = archs.get_arch(name)
+    p = archs.init_params(a)
+    x, _ = _data()
+    logits, feat, _ = model.forward(a, p, x)
+    assert logits.shape == (archs.BATCH, archs.NUM_CLASSES)
+    assert feat.shape[0] == archs.BATCH
+    assert feat.shape[-1] == a.feat_channels()
+
+
+@pytest.mark.parametrize("name", list(archs.ZOO))
+def test_param_specs_match_init(name):
+    a = archs.get_arch(name)
+    p = archs.init_params(a)
+    specs = a.param_specs()
+    assert len(p) == len(specs)
+    for (n, s), t in zip(specs, p):
+        assert tuple(t.shape) == s, n
+
+
+def test_fp_train_step_reduces_loss():
+    a = archs.get_arch("convnet_tiny")
+    p = archs.init_params(a)
+    step = jax.jit(model.make_fp_train(a))
+    n = len(p)
+    m = [jnp.zeros_like(t) for t in p]
+    v = [jnp.zeros_like(t) for t in p]
+    x, y = _data()
+    lr = jnp.array([3e-3], jnp.float32)
+    losses = []
+    for i in range(30):
+        t = jnp.array([i + 1.0], jnp.float32)
+        out = step(*p, *m, *v, t, lr, x, y)
+        p, m, v = list(out[:n]), list(out[n:2 * n]), list(out[2 * n:3 * n])
+        losses.append(float(out[-1]))
+    assert losses[-1] < losses[0] * 0.5, losses
+
+
+def test_fp_stats_shapes_and_positivity():
+    a = archs.get_arch("resnet_tiny")
+    p = archs.init_params(a)
+    x, _ = _data()
+    stats = model.make_fp_stats(a)(*p, x)
+    ch = a.value_channels()
+    qv = a.quantized_values()
+    assert len(stats) == len(qv)
+    for vid, s in zip(qv, stats):
+        assert s.shape == (ch[vid],)
+        assert bool(jnp.all(s >= 0))
+
+
+def test_fp_stats_input_stat_is_image_max():
+    a = archs.get_arch("convnet_tiny")
+    p = archs.init_params(a)
+    x, _ = _data()
+    stats = model.make_fp_stats(a)(*p, x)
+    want = jnp.max(jnp.abs(x), axis=(0, 1, 2))
+    np.testing.assert_allclose(np.asarray(stats[0]), np.asarray(want), rtol=1e-6)
+
+
+def test_relu6_present_in_mobilenet():
+    a = archs.get_arch("mobilenet_tiny")
+    assert any(o.act == "relu6" for o in a.conv_ops())
+    assert any(o.groups > 1 for o in a.conv_ops())  # depthwise
+
+
+def test_residual_archs_have_adds():
+    for name in ("resnet_tiny", "resnet_wide", "mobilenet_tiny",
+                 "mnasnet_tiny", "regnet_tiny", "regnet_wide"):
+        a = archs.get_arch(name)
+        assert any(o.op == "add" for o in a.ops), name
+
+
+def test_adam_update_moves_toward_gradient():
+    p = [jnp.ones((4,), jnp.float32)]
+    g = [jnp.ones((4,), jnp.float32)]
+    m = [jnp.zeros((4,), jnp.float32)]
+    v = [jnp.zeros((4,), jnp.float32)]
+    new_p, _, _ = model.adam_update(p, g, m, v, jnp.float32(1.0), jnp.float32(0.1))
+    assert bool(jnp.all(new_p[0] < p[0]))

@@ -1,0 +1,37 @@
+//! Bench F12 — regenerates Fig. 12 (per-layer kernel error under layerwise /
+//! CLE / QFT / channelwise scale optimization).
+
+#[path = "util/mod.rs"]
+mod util;
+
+use qft::coordinator::experiments;
+use qft::runtime::Runtime;
+
+fn main() {
+    util::section("Fig. 12: kernel error by scale-optimization procedure");
+    let rt = Runtime::load("artifacts").expect("run `make artifacts` first");
+    let rows = util::timed("fig12(regnet_tiny)", || {
+        experiments::fig12(&rt, "regnet_tiny", true).unwrap()
+    });
+    println!(
+        "{:<10} {:>10} {:>8} {:>8} {:>12}",
+        "layer", "layerwise", "CLE", "QFT", "channelwise"
+    );
+    for r in &rows {
+        println!(
+            "{:<10} {:>10.4} {:>8.4} {:>8.4} {:>12.4}",
+            r.layer, r.e_layerwise, r.e_cle, r.e_qft, r.e_channelwise
+        );
+    }
+    // paper shape: CLE and QFT partially close the lw->chw gap
+    let sum = |f: &dyn Fn(&experiments::KernelErrorRow) -> f32| {
+        rows.iter().map(|r| f(r) * f(r)).sum::<f32>().sqrt()
+    };
+    println!(
+        "total: lw {:.4} | CLE {:.4} | QFT {:.4} | chw {:.4}",
+        sum(&|r| r.e_layerwise),
+        sum(&|r| r.e_cle),
+        sum(&|r| r.e_qft),
+        sum(&|r| r.e_channelwise)
+    );
+}

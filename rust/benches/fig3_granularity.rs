@@ -1,0 +1,51 @@
+//! Bench F3 — regenerates Fig. 3 (kernel MMSE error across scale-tensor
+//! granularity) and micro-benchmarks the three MMSE solvers.
+
+#[path = "util/mod.rs"]
+mod util;
+
+use qft::coordinator::experiments;
+use qft::data::Rng;
+use qft::quant::mmse;
+use qft::runtime::Runtime;
+use qft::tensor::Tensor;
+
+fn main() {
+    util::section("Fig. 3: kernel quantization error vs granularity");
+    let rt = Runtime::load("artifacts").expect("run `make artifacts` first");
+    let rows = util::timed("fig3(mobilenet_tiny)", || {
+        experiments::fig3(&rt, "mobilenet_tiny").unwrap()
+    });
+    println!("{:<10} {:>10} {:>12} {:>10}", "layer", "layerwise", "channelwise", "dCh");
+    let (mut lw, mut ch, mut dch) = (0.0f32, 0.0f32, 0.0f32);
+    for r in &rows {
+        println!(
+            "{:<10} {:>10.4} {:>12.4} {:>10.4}",
+            r.layer, r.e_layerwise, r.e_channelwise, r.e_dch
+        );
+        lw += r.e_layerwise * r.e_layerwise;
+        ch += r.e_channelwise * r.e_channelwise;
+        dch += r.e_dch * r.e_dch;
+    }
+    println!(
+        "total: layerwise {:.4} >= channelwise {:.4} >= dCh {:.4}",
+        lw.sqrt(),
+        ch.sqrt(),
+        dch.sqrt()
+    );
+
+    // solver micro-benchmarks on a 3x3x32x64 kernel (paper: "around a second
+    // for matrices sized 1M" for 10 APQ iters — ours is ~18k elements)
+    let mut rng = Rng::new(0);
+    let w = Tensor::new(
+        vec![3, 3, 32, 64],
+        (0..3 * 3 * 32 * 64).map(|_| rng.normal() * 0.1).collect(),
+    );
+    util::micro("PPQ layerwise mmse (3x3x32x64)", 20, || {
+        mmse::mmse_layerwise(&w, 7.0)
+    });
+    util::micro("PPQ channelwise mmse", 5, || mmse::mmse_channelwise(&w, 7.0));
+    util::micro("APQ doubly-channelwise (10 iters)", 5, || {
+        mmse::mmse_dch(&w, 7.0, 10)
+    });
+}

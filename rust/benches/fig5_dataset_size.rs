@@ -1,0 +1,21 @@
+//! Bench F5 — regenerates Fig. 5 (dataset-size ablation; total images fed
+//! held constant, like the paper).
+
+#[path = "util/mod.rs"]
+mod util;
+
+use qft::coordinator::experiments;
+use qft::runtime::Runtime;
+
+fn main() {
+    util::section("Fig. 5: effect of calibration-set size on QFT");
+    let rt = Runtime::load("artifacts").expect("run `make artifacts` first");
+    let sizes = [64u64, 128, 256, 512];
+    let rows = util::timed("fig5(regnet_tiny)", || {
+        experiments::fig5(&rt, "regnet_tiny", &sizes, true).unwrap()
+    });
+    experiments::print_rows("Fig. 5", &rows);
+    // paper shape: graceful decay toward small sets, diminishing returns
+    let degr: Vec<f32> = rows.iter().map(|r| r.degradation()).collect();
+    println!("degradation by size {sizes:?}: {degr:?}");
+}

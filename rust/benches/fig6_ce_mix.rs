@@ -1,0 +1,21 @@
+//! Bench F6 — regenerates Fig. 6 (mixing CE-on-logits into the KD loss).
+
+#[path = "util/mod.rs"]
+mod util;
+
+use qft::coordinator::experiments;
+use qft::runtime::Runtime;
+
+fn main() {
+    util::section("Fig. 6: complex KD loss — CE-logits mixing proportion");
+    let rt = Runtime::load("artifacts").expect("run `make artifacts` first");
+    let mixes = [0.0f32, 0.1, 0.5, 1.0];
+    let rows = util::timed("fig6(mobilenet_tiny)", || {
+        experiments::fig6(&rt, "mobilenet_tiny", &mixes, true).unwrap()
+    });
+    experiments::print_rows("Fig. 6", &rows);
+    // paper shape: CE-alone (p=1.0) is clearly worse than backbone-L2 (p=0)
+    let d0 = rows.first().unwrap().degradation();
+    let d1 = rows.last().unwrap().degradation();
+    println!("degradation p=0: {:+.2}% vs p=1: {:+.2}%", -d0 * 100.0, -d1 * 100.0);
+}

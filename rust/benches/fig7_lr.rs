@@ -1,0 +1,22 @@
+//! Bench F7 — regenerates Fig. 7 (base learning-rate sweep).
+
+#[path = "util/mod.rs"]
+mod util;
+
+use qft::coordinator::experiments;
+use qft::runtime::Runtime;
+
+fn main() {
+    util::section("Fig. 7: effect of base LR");
+    let rt = Runtime::load("artifacts").expect("run `make artifacts` first");
+    let lrs = [1e-4f32, 3e-4, 1e-3, 3e-3, 1e-2];
+    let rows = util::timed("fig7(regnet_tiny)", || {
+        experiments::fig7(&rt, "regnet_tiny", &lrs, true).unwrap()
+    });
+    experiments::print_rows("Fig. 7", &rows);
+    let best = rows
+        .iter()
+        .min_by(|a, b| a.degradation().partial_cmp(&b.degradation()).unwrap())
+        .unwrap();
+    println!("robust region around {}", best.config);
+}

@@ -1,0 +1,34 @@
+//! Bench F8 — regenerates Fig. 8 (layerwise 2x2: {CLE init?} x {train the
+//! activation vector scale?}).
+
+#[path = "util/mod.rs"]
+mod util;
+
+use qft::coordinator::experiments;
+use qft::runtime::Runtime;
+
+fn main() {
+    util::section("Fig. 8: trained vector activation scale vs CLE (lw, W4A8)");
+    let rt = Runtime::load("artifacts").expect("run `make artifacts` first");
+    let names = ["resnet_tiny", "mobilenet_tiny"];
+    let rows = util::timed("fig8(2 archs x 4 configs)", || {
+        experiments::fig8(&rt, &names, true).unwrap()
+    });
+    experiments::print_rows("Fig. 8", &rows);
+    // paper shape: trained sv <= CLE-init-frozen <= base, synergy possible
+    for arch in names {
+        let d = |cfg: &str| {
+            rows.iter()
+                .find(|r| r.arch == arch && r.config.starts_with(cfg))
+                .map(|r| r.degradation())
+                .unwrap_or(f32::NAN)
+        };
+        println!(
+            "{arch}: base {:+.2} | CLE {:+.2} | trained {:+.2} | CLE+trained {:+.2}",
+            -d("base") * 100.0,
+            -d("CLE init") * 100.0,
+            -d("trained") * 100.0,
+            -d("CLE + trained") * 100.0
+        );
+    }
+}

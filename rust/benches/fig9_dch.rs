@@ -1,0 +1,27 @@
+//! Bench F9 — regenerates Fig. 9 (doubly-channelwise 4bW: frozen vs trained
+//! L/R kernel scale co-vectors).
+
+#[path = "util/mod.rs"]
+mod util;
+
+use qft::coordinator::experiments;
+use qft::runtime::Runtime;
+
+fn main() {
+    util::section("Fig. 9: dch — effect of training S_wL, S_wR jointly");
+    let rt = Runtime::load("artifacts").expect("run `make artifacts` first");
+    let names = ["resnet_tiny", "mobilenet_tiny"];
+    let rows = util::timed("fig9(2 archs x 2 configs)", || {
+        experiments::fig9(&rt, &names, true).unwrap()
+    });
+    experiments::print_rows("Fig. 9", &rows);
+    for arch in names {
+        let frozen = rows.iter().find(|r| r.arch == arch && r.config.starts_with("frozen")).unwrap();
+        let trained = rows.iter().find(|r| r.arch == arch && r.config.starts_with("trained")).unwrap();
+        println!(
+            "{arch}: frozen {:+.2}% -> trained {:+.2}%",
+            -frozen.degradation() * 100.0,
+            -trained.degradation() * 100.0
+        );
+    }
+}

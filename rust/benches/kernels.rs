@@ -1,0 +1,63 @@
+//! Bench K — L1/L3 micro-benchmarks: the AOT Pallas kernels through PJRT,
+//! and the rust substrate hot functions (conv2d, matmul, PPQ, APQ, fq).
+
+#[path = "util/mod.rs"]
+mod util;
+
+use qft::data::Rng;
+use qft::quant::{mmse, ppq};
+use qft::runtime::Runtime;
+use qft::tensor::{conv::conv2d, Tensor};
+
+fn main() {
+    util::section("Kernel micro-benchmarks");
+    let rt = Runtime::load("artifacts").expect("run `make artifacts` first");
+    let mut rng = Rng::new(0);
+
+    // --- L1 kernels through PJRT (256x128 / 128x128, MXU-shaped tiles) ---
+    let x = Tensor::new(vec![256, 128], (0..256 * 128).map(|_| rng.normal()).collect());
+    let s = Tensor::full(&[128], 0.05);
+    util::micro("HLO fakequant 256x128", 50, || {
+        rt.run("kernel", "fakequant", &[x.clone(), s.clone()]).unwrap()
+    });
+    let w = Tensor::new(vec![128, 128], (0..128 * 128).map(|_| rng.normal() * 0.2).collect());
+    let sl = Tensor::full(&[128], 1.0);
+    let sr = Tensor::full(&[128], 0.05);
+    util::micro("HLO qmatmul 256x128x128 (fused fq+dot)", 50, || {
+        rt.run("kernel", "qmatmul", &[x.clone(), w.clone(), sl.clone(), sr.clone()])
+            .unwrap()
+    });
+    // throughput estimate for the fused kernel
+    {
+        let t0 = std::time::Instant::now();
+        let iters = 200;
+        for _ in 0..iters {
+            std::hint::black_box(
+                rt.run("kernel", "qmatmul", &[x.clone(), w.clone(), sl.clone(), sr.clone()])
+                    .unwrap(),
+            );
+        }
+        let s_per = t0.elapsed().as_secs_f64() / iters as f64;
+        let flops = 2.0 * 256.0 * 128.0 * 128.0;
+        println!("[micro] qmatmul effective: {:.2} GFLOP/s (incl. PJRT marshal)", flops / s_per / 1e9);
+    }
+
+    // --- L3 substrate ---------------------------------------------------
+    let img = Tensor::new(vec![8, 16, 16, 16], (0..8 * 16 * 16 * 16).map(|_| rng.normal()).collect());
+    let k = Tensor::new(vec![3, 3, 16, 16], (0..3 * 3 * 16 * 16).map(|_| rng.normal() * 0.1).collect());
+    let bias = vec![0.0f32; 16];
+    util::micro("rust conv2d 8x16x16x16 * 3x3x16x16", 20, || {
+        conv2d(&img, &k, &bias, 1, 1)
+    });
+    let a = Tensor::new(vec![256, 256], (0..256 * 256).map(|_| rng.normal()).collect());
+    let b = Tensor::new(vec![256, 256], (0..256 * 256).map(|_| rng.normal()).collect());
+    util::micro("rust matmul 256^3", 20, || a.matmul(&b));
+
+    let wv: Vec<f32> = (0..4096).map(|_| rng.normal()).collect();
+    util::micro("PPQ mmse_scale 4096", 100, || ppq::mmse_scale(&wv, 7.0));
+    let kern = Tensor::new(vec![3, 3, 32, 64], (0..3 * 3 * 32 * 64).map(|_| rng.normal() * 0.1).collect());
+    util::micro("APQ dch 3x3x32x64 (10 iters)", 5, || mmse::mmse_dch(&kern, 7.0, 10));
+    util::micro("fq_outer 3x3x32x64", 50, || {
+        mmse::fq_outer(&kern, &vec![1.0; 32], &vec![0.05; 64], 7.0)
+    });
+}

@@ -1,0 +1,51 @@
+//! Bench P — the §4.2 runtime claim: QFT is fast and the coordinator is not
+//! the bottleneck (paper: 10-50 min on one GPU with high utilization; here:
+//! seconds on CPU-PJRT with the duty cycle as the utilization analogue).
+
+#[path = "util/mod.rs"]
+mod util;
+
+use qft::coordinator::{eval, experiments, metrics, qft as qft_stage};
+use qft::quant::deploy::Mode;
+use qft::runtime::Runtime;
+
+fn main() {
+    util::section("Pipeline performance (the paper's speed claim)");
+    let rt = Runtime::load("artifacts").expect("run `make artifacts` first");
+
+    for arch in ["convnet_tiny", "resnet_tiny", "mobilenet_tiny", "resnet_wide"] {
+        let t = experiments::teacher_ctx(&rt, arch).unwrap();
+        let cfg = qft_stage::QftConfig::fast(Mode::Lw);
+        // warm the executable cache so the span measures the steady-state
+        // loop, not one-time XLA compiles
+        for entry in ["fp_stats", "qft_train_lw", "q_eval_lw"] {
+            rt.executable(arch, entry).unwrap();
+        }
+        rt.reset_stats();
+        let span = metrics::Span::start(&rt, arch);
+        let r = qft_stage::run_qft(&rt, arch, &t.params, &cfg).unwrap();
+        let rep = span.finish();
+        let steps = r.losses.len();
+        println!(
+            "{arch:<16} {} steps | {:6.2} s wall | {:5.2} ms/step | duty {:3.0}% | residual compile {:4.0} ms",
+            steps,
+            rep.wall_ms / 1e3,
+            rep.wall_ms / steps as f64,
+            rep.duty_cycle * 100.0,
+            rt.stats().compile_ns as f64 / 1e6,
+        );
+    }
+
+    // eval throughput (images/s through the AOT q_eval path)
+    let arch = "resnet_tiny";
+    let t = experiments::teacher_ctx(&rt, arch).unwrap();
+    let cfg = qft_stage::QftConfig::fast(Mode::Lw);
+    let init = qft_stage::initialize(&rt, arch, &t.params, &cfg).unwrap();
+    let t0 = std::time::Instant::now();
+    let n = 512;
+    let _ = eval::eval_q(&rt, arch, &init, Mode::Lw, n, 0).unwrap();
+    println!(
+        "q_eval throughput: {:.0} images/s",
+        n as f64 / t0.elapsed().as_secs_f64()
+    );
+}

@@ -1,0 +1,25 @@
+//! Bench T1 — regenerates Table 1 (QFT vs PTQ baselines) in the fast
+//! profile and times the end-to-end pipeline per network.
+
+#[path = "util/mod.rs"]
+mod util;
+
+use qft::coordinator::experiments;
+use qft::runtime::Runtime;
+
+fn main() {
+    util::section("Table 1: QFT vs SoTA-baseline PTQ (fast profile)");
+    let rt = Runtime::load("artifacts").expect("run `make artifacts` first");
+    let names = ["resnet_tiny", "mobilenet_tiny", "regnet_tiny"];
+    let rows = util::timed("table1(3 archs x 4 configs)", || {
+        experiments::table1(&rt, &names, true).unwrap()
+    });
+    experiments::print_rows("Table 1", &rows);
+    let s = rt.stats();
+    println!(
+        "[bench] pjrt: {} execs, {:.2} s exec, {:.2} s compile",
+        s.executions,
+        s.exec_ns as f64 / 1e9,
+        s.compile_ns as f64 / 1e9
+    );
+}

@@ -1,0 +1,31 @@
+//! Bench T2 — regenerates Table 2 (heuristics-only ablation: accuracy
+//! without QFT) and times each heuristic stage.
+
+#[path = "util/mod.rs"]
+mod util;
+
+use qft::coordinator::experiments;
+use qft::runtime::Runtime;
+
+fn main() {
+    util::section("Table 2: accuracy without QFT (heuristics only)");
+    let rt = Runtime::load("artifacts").expect("run `make artifacts` first");
+    let names = ["convnet_tiny", "resnet_tiny", "mobilenet_tiny", "regnet_tiny"];
+    let rows = util::timed("table2(4 archs x 5 configs)", || {
+        experiments::table2(&rt, &names).unwrap()
+    });
+    experiments::print_rows("Table 2", &rows);
+
+    // paper shape check: the x10-30 gap closed by weight training is visible
+    // as large degradations here vs sub-1% after QFT (bench table1)
+    let worst = rows
+        .iter()
+        .max_by(|a, b| a.degradation().partial_cmp(&b.degradation()).unwrap())
+        .unwrap();
+    println!(
+        "\nworst heuristics-only degradation: {} / {} at {:+.2}%",
+        worst.arch,
+        worst.config,
+        -worst.degradation() * 100.0
+    );
+}

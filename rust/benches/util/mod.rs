@@ -1,0 +1,35 @@
+//! Shared bench harness (the image's cargo cache has no criterion; these are
+//! plain `harness = false` mains with wall-clock timing and paper-shaped
+//! row output, so `cargo bench` regenerates every table/figure).
+
+use std::time::Instant;
+
+pub fn section(title: &str) {
+    println!("\n================ {title} ================");
+}
+
+/// Run and report wall time.
+pub fn timed<R>(label: &str, f: impl FnOnce() -> R) -> R {
+    let t0 = Instant::now();
+    let r = f();
+    println!("[bench] {label}: {:.2} s", t0.elapsed().as_secs_f64());
+    r
+}
+
+/// Micro-benchmark: warm up, then `iters` timed iterations; prints ns/op.
+#[allow(dead_code)]
+pub fn micro<R>(label: &str, iters: usize, mut f: impl FnMut() -> R) {
+    for _ in 0..3 {
+        std::hint::black_box(f());
+    }
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        std::hint::black_box(f());
+    }
+    let per = t0.elapsed().as_nanos() as f64 / iters as f64;
+    if per > 1e6 {
+        println!("[micro] {label}: {:.3} ms/op ({iters} iters)", per / 1e6);
+    } else {
+        println!("[micro] {label}: {:.1} ns/op ({iters} iters)", per);
+    }
+}

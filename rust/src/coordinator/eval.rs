@@ -1,0 +1,117 @@
+//! Accuracy evaluation via the AOT `fp_eval` / `q_eval_{mode}` executables
+//! (plus pure-rust cross-check paths used by tests and analyses).
+
+use anyhow::Result;
+
+use crate::data::{Dataset, Split};
+use crate::nn::ParamMap;
+use crate::quant::deploy::Mode;
+use crate::runtime::Runtime;
+use crate::tensor::Tensor;
+
+/// Top-1 accuracy of the FP teacher on the held-out val split.
+pub fn eval_fp(
+    rt: &Runtime,
+    arch_name: &str,
+    params: &ParamMap,
+    n_images: usize,
+    seed: u64,
+) -> Result<f32> {
+    let arch = rt.manifest.arch(arch_name)?.clone();
+    let ordered = params.to_ordered(&arch.params);
+    let ds = Dataset::new(seed);
+    let b = arch.batch;
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    for i in 0..n_images / b {
+        let (x, _, labels) = ds.batch(Split::Val, (i * b) as u64, b);
+        let mut inputs = ordered.clone();
+        inputs.push(x);
+        let out = rt.run(arch_name, "fp_eval", &inputs)?;
+        let preds = out[0].argmax_lastdim();
+        correct += preds.iter().zip(&labels).filter(|(p, l)| p == l).count();
+        total += b;
+    }
+    Ok(correct as f32 / total.max(1) as f32)
+}
+
+/// Top-1 accuracy of a quantized student (trainable set `tm`).
+pub fn eval_q(
+    rt: &Runtime,
+    arch_name: &str,
+    tm: &ParamMap,
+    mode: Mode,
+    n_images: usize,
+    seed: u64,
+) -> Result<f32> {
+    let arch = rt.manifest.arch(arch_name)?.clone();
+    let ordered = tm.to_ordered(arch.trainable_specs(mode.key()));
+    let ds = Dataset::new(seed);
+    let b = arch.batch;
+    let entry = format!("q_eval_{}", mode.key());
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    for i in 0..n_images / b {
+        let (x, _, labels) = ds.batch(Split::Val, (i * b) as u64, b);
+        let mut inputs = ordered.clone();
+        inputs.push(x);
+        let out = rt.run(arch_name, &entry, &inputs)?;
+        let preds = out[0].argmax_lastdim();
+        correct += preds.iter().zip(&labels).filter(|(p, l)| p == l).count();
+        total += b;
+    }
+    Ok(correct as f32 / total.max(1) as f32)
+}
+
+/// Pure-rust quantized eval (fake-quant simulator) — parity cross-check.
+pub fn eval_q_rust(
+    arch: &crate::nn::ArchSpec,
+    tm: &ParamMap,
+    mode: Mode,
+    n_images: usize,
+    seed: u64,
+) -> f32 {
+    let ds = Dataset::new(seed);
+    let b = arch.batch;
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    for i in 0..n_images / b {
+        let (x, _, labels) = ds.batch(Split::Val, (i * b) as u64, b);
+        let (logits, _) = crate::quant::deploy::forward_fakequant(arch, tm, mode, &x);
+        let preds = logits.argmax_lastdim();
+        correct += preds.iter().zip(&labels).filter(|(p, l)| p == l).count();
+        total += b;
+    }
+    correct as f32 / total.max(1) as f32
+}
+
+/// Collect calibration activation statistics through the AOT `fp_stats`.
+pub fn calib_stats(
+    rt: &Runtime,
+    arch_name: &str,
+    params: &ParamMap,
+    calib_images: u64,
+    seed: u64,
+) -> Result<std::collections::HashMap<usize, Vec<f32>>> {
+    let arch = rt.manifest.arch(arch_name)?.clone();
+    let ordered = params.to_ordered(&arch.params);
+    let ds = Dataset::new(seed);
+    let b = arch.batch;
+    let nb = (calib_images as usize).div_ceil(b).max(1);
+    let mut per_batch = Vec::with_capacity(nb);
+    for i in 0..nb {
+        let (x, _, _) = ds.batch(Split::Calib, (i * b) as u64, b);
+        let mut inputs = ordered.clone();
+        inputs.push(x);
+        per_batch.push(rt.run(arch_name, "fp_stats", &inputs)?);
+    }
+    Ok(crate::coordinator::state::absmax_from_stats(&arch, &per_batch))
+}
+
+/// Batch of calibration image tensors (for the rust-side heuristics).
+pub fn calib_batches(arch_batch: usize, n: usize, seed: u64) -> Vec<Tensor> {
+    let ds = Dataset::new(seed);
+    (0..n)
+        .map(|i| ds.batch(Split::Calib, (i * arch_batch) as u64, arch_batch).0)
+        .collect()
+}

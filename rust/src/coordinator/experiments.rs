@@ -1,0 +1,415 @@
+//! Experiment runners (one per paper table/figure — DESIGN.md §3).
+//!
+//! Each runner returns structured rows and prints the paper-shaped output;
+//! `rust/benches/*` and the `repro` CLI are thin wrappers over these.
+
+use anyhow::Result;
+
+use crate::coordinator::{eval, pretrain, qft};
+use crate::nn::ParamMap;
+use crate::quant::baselines::{self, Baseline};
+use crate::quant::deploy::Mode;
+use crate::quant::{cle, mmse};
+use crate::runtime::Runtime;
+
+pub const EVAL_IMAGES: usize = 512;
+
+/// A (network × configuration) accuracy result.
+#[derive(Clone, Debug)]
+pub struct Row {
+    pub arch: String,
+    pub config: String,
+    pub fp_acc: f32,
+    pub acc: f32,
+}
+
+impl Row {
+    pub fn degradation(&self) -> f32 {
+        self.fp_acc - self.acc
+    }
+}
+
+pub fn print_rows(title: &str, rows: &[Row]) {
+    println!("\n=== {title} ===");
+    println!("{:<16} {:<28} {:>7} {:>7} {:>8}", "arch", "config", "fp", "acc", "degr");
+    for r in rows {
+        println!(
+            "{:<16} {:<28} {:>6.1}% {:>6.1}% {:>+7.2}%",
+            r.arch,
+            r.config,
+            r.fp_acc * 100.0,
+            r.acc * 100.0,
+            -r.degradation() * 100.0
+        );
+    }
+}
+
+/// Shared fixture: cached teacher + FP accuracy.
+pub struct TeacherCtx {
+    pub params: ParamMap,
+    pub fp_acc: f32,
+}
+
+pub fn teacher_ctx(rt: &Runtime, arch: &str) -> Result<TeacherCtx> {
+    let params = pretrain::teacher(rt, arch, &pretrain::PretrainConfig::default())?;
+    let fp_acc = eval::eval_fp(rt, arch, &params, EVAL_IMAGES, 0)?;
+    Ok(TeacherCtx { params, fp_acc })
+}
+
+fn eval_tm(rt: &Runtime, arch: &str, tm: &ParamMap, mode: Mode) -> Result<f32> {
+    eval::eval_q(rt, arch, tm, mode, EVAL_IMAGES, 0)
+}
+
+fn baseline_tm(
+    rt: &Runtime,
+    arch_name: &str,
+    t: &TeacherCtx,
+    mode: Mode,
+    b: Baseline,
+) -> Result<ParamMap> {
+    let arch = rt.manifest.arch(arch_name)?.clone();
+    let absmax = eval::calib_stats(rt, arch_name, &t.params, 128, 0)?;
+    let calib = eval::calib_batches(arch.batch, 4, 0);
+    Ok(baselines::build(&arch, &t.params, &absmax, mode, b, &calib))
+}
+
+// ---------------------------------------------------------------- Table 1
+
+/// Table 1: QFT vs the heuristic baselines, 4/8 lw and 4/32 dch regimes.
+pub fn table1(rt: &Runtime, archs: &[&str], fast: bool) -> Result<Vec<Row>> {
+    let mut rows = Vec::new();
+    for &a in archs {
+        let t = teacher_ctx(rt, a)?;
+        let mk = |mode| if fast { qft::QftConfig::fast(mode) } else { qft::QftConfig::standard(mode) };
+
+        // 4/8 lw: QFT and CLE+QFT
+        for (label, cle_init) in [("QFT 4/8 lw", false), ("CLE+QFT 4/8 lw", true)] {
+            let mut cfg = mk(Mode::Lw);
+            cfg.cle_init = cle_init;
+            let r = qft::run_qft(rt, a, &t.params, &cfg)?;
+            rows.push(Row {
+                arch: a.into(),
+                config: label.into(),
+                fp_acc: t.fp_acc,
+                acc: eval_tm(rt, a, &r.trainables, Mode::Lw)?,
+            });
+        }
+        // 4/32 dch: QFT
+        let cfg = mk(Mode::Dch);
+        let r = qft::run_qft(rt, a, &t.params, &cfg)?;
+        rows.push(Row {
+            arch: a.into(),
+            config: "QFT 4/32 dch".into(),
+            fp_acc: t.fp_acc,
+            acc: eval_tm(rt, a, &r.trainables, Mode::Dch)?,
+        });
+        // reference comparator (Adaround/BRECQ stand-in): strongest
+        // heuristics-only pipeline on the same substrate
+        let tm = baseline_tm(rt, a, &t, Mode::Lw, Baseline::MmseCleBc)?;
+        rows.push(Row {
+            arch: a.into(),
+            config: "mmse+CLE+bc 4/8 lw (ref)".into(),
+            fp_acc: t.fp_acc,
+            acc: eval_tm(rt, a, &tm, Mode::Lw)?,
+        });
+    }
+    Ok(rows)
+}
+
+// ---------------------------------------------------------------- Table 2
+
+/// Table 2: heuristic-only ablation (weights never trained).
+pub fn table2(rt: &Runtime, archs: &[&str]) -> Result<Vec<Row>> {
+    let mut rows = Vec::new();
+    for &a in archs {
+        let t = teacher_ctx(rt, a)?;
+        for (mode, blist) in [
+            (Mode::Lw, vec![Baseline::Mmse, Baseline::MmseBc, Baseline::MmseCleBc]),
+            (Mode::Dch, vec![Baseline::Mmse, Baseline::MmseBc]),
+        ] {
+            for b in blist {
+                let tm = baseline_tm(rt, a, &t, mode, b)?;
+                rows.push(Row {
+                    arch: a.into(),
+                    config: format!("{} {}", b.label(), mode.key()),
+                    fp_acc: t.fp_acc,
+                    acc: eval_tm(rt, a, &tm, mode)?,
+                });
+            }
+        }
+    }
+    Ok(rows)
+}
+
+// ----------------------------------------------------------------- Fig. 3
+
+#[derive(Clone, Debug)]
+pub struct GranularityRow {
+    pub layer: String,
+    pub e_layerwise: f32,
+    pub e_channelwise: f32,
+    pub e_dch: f32,
+}
+
+/// Fig. 3: kernel quantization error norm across scale-tensor granularity.
+pub fn fig3(rt: &Runtime, arch_name: &str) -> Result<Vec<GranularityRow>> {
+    let arch = rt.manifest.arch(arch_name)?.clone();
+    let t = teacher_ctx(rt, arch_name)?;
+    let mut rows = Vec::new();
+    for op in arch.conv_ops() {
+        let w = t.params.get(&format!("w:{}", op.name));
+        let (_, e_lw) = mmse::mmse_layerwise(w, crate::WEIGHT_QMAX);
+        let (_, e_ch) = mmse::mmse_channelwise(w, crate::WEIGHT_QMAX);
+        let e_dch = if op.groups == 1 {
+            mmse::mmse_dch(w, crate::WEIGHT_QMAX, 10).2
+        } else {
+            e_ch // depthwise: single channel axis, dCh degenerates to ch
+        };
+        rows.push(GranularityRow {
+            layer: op.name.clone(),
+            e_layerwise: e_lw,
+            e_channelwise: e_ch,
+            e_dch,
+        });
+    }
+    Ok(rows)
+}
+
+// ----------------------------------------------------------------- Fig. 5
+
+/// Fig. 5: dataset-size ablation, total fed images held constant.
+pub fn fig5(rt: &Runtime, arch: &str, sizes: &[u64], fast: bool) -> Result<Vec<Row>> {
+    let t = teacher_ctx(rt, arch)?;
+    let total: u64 = if fast { 1536 } else { 6144 };
+    let mut rows = Vec::new();
+    for &sz in sizes {
+        let mut cfg = qft::QftConfig::standard(Mode::Lw);
+        cfg.calib_images = sz;
+        cfg.images_per_epoch = sz;
+        cfg.epochs = (total / sz).max(1) as usize;
+        let r = qft::run_qft(rt, arch, &t.params, &cfg)?;
+        rows.push(Row {
+            arch: arch.into(),
+            config: format!("{sz} images"),
+            fp_acc: t.fp_acc,
+            acc: eval_tm(rt, arch, &r.trainables, Mode::Lw)?,
+        });
+    }
+    Ok(rows)
+}
+
+// ----------------------------------------------------------------- Fig. 6
+
+/// Fig. 6: CE-on-logits mixing proportion ablation.
+pub fn fig6(rt: &Runtime, arch: &str, mixes: &[f32], fast: bool) -> Result<Vec<Row>> {
+    let t = teacher_ctx(rt, arch)?;
+    let mut rows = Vec::new();
+    for &p in mixes {
+        let mut cfg = if fast { qft::QftConfig::fast(Mode::Lw) } else { qft::QftConfig::standard(Mode::Lw) };
+        cfg.ce_mix = p;
+        let r = qft::run_qft(rt, arch, &t.params, &cfg)?;
+        rows.push(Row {
+            arch: arch.into(),
+            config: format!("ce_mix={p:.2}"),
+            fp_acc: t.fp_acc,
+            acc: eval_tm(rt, arch, &r.trainables, Mode::Lw)?,
+        });
+    }
+    Ok(rows)
+}
+
+// ----------------------------------------------------------------- Fig. 7
+
+/// Fig. 7: base learning-rate sweep.
+pub fn fig7(rt: &Runtime, arch: &str, lrs: &[f32], fast: bool) -> Result<Vec<Row>> {
+    let t = teacher_ctx(rt, arch)?;
+    let mut rows = Vec::new();
+    for &lr in lrs {
+        let mut cfg = if fast { qft::QftConfig::fast(Mode::Lw) } else { qft::QftConfig::standard(Mode::Lw) };
+        cfg.base_lr = lr;
+        let r = qft::run_qft(rt, arch, &t.params, &cfg)?;
+        rows.push(Row {
+            arch: arch.into(),
+            config: format!("lr={lr:.0e}"),
+            fp_acc: t.fp_acc,
+            acc: eval_tm(rt, arch, &r.trainables, Mode::Lw)?,
+        });
+    }
+    Ok(rows)
+}
+
+// ----------------------------------------------------------------- Fig. 8
+
+/// Fig. 8: 2×2 {CLE init?} × {train vector scales?} in the lw regime.
+pub fn fig8(rt: &Runtime, archs: &[&str], fast: bool) -> Result<Vec<Row>> {
+    let mut rows = Vec::new();
+    for &a in archs {
+        let t = teacher_ctx(rt, a)?;
+        for (label, cle_init, train_scales) in [
+            ("base (no CLE, frozen sv)", false, false),
+            ("CLE init, frozen sv", true, false),
+            ("trained sv", false, true),
+            ("CLE + trained sv", true, true),
+        ] {
+            let mut cfg = if fast { qft::QftConfig::fast(Mode::Lw) } else { qft::QftConfig::standard(Mode::Lw) };
+            cfg.cle_init = cle_init;
+            cfg.train_scales = train_scales;
+            let r = qft::run_qft(rt, a, &t.params, &cfg)?;
+            rows.push(Row {
+                arch: a.into(),
+                config: label.into(),
+                fp_acc: t.fp_acc,
+                acc: eval_tm(rt, a, &r.trainables, Mode::Lw)?,
+            });
+        }
+    }
+    Ok(rows)
+}
+
+// ----------------------------------------------------------------- Fig. 9
+
+/// Fig. 9: dch regime, frozen vs trained L/R kernel scale co-vectors.
+pub fn fig9(rt: &Runtime, archs: &[&str], fast: bool) -> Result<Vec<Row>> {
+    let mut rows = Vec::new();
+    for &a in archs {
+        let t = teacher_ctx(rt, a)?;
+        for (label, train_scales) in [("frozen L/R scales", false), ("trained L/R scales", true)] {
+            let mut cfg = if fast { qft::QftConfig::fast(Mode::Dch) } else { qft::QftConfig::standard(Mode::Dch) };
+            cfg.train_scales = train_scales;
+            let r = qft::run_qft(rt, a, &t.params, &cfg)?;
+            rows.push(Row {
+                arch: a.into(),
+                config: label.into(),
+                fp_acc: t.fp_acc,
+                acc: eval_tm(rt, a, &r.trainables, Mode::Dch)?,
+            });
+        }
+    }
+    Ok(rows)
+}
+
+// ---------------------------------------------------------------- Fig. 12
+
+#[derive(Clone, Debug)]
+pub struct KernelErrorRow {
+    pub layer: String,
+    pub e_layerwise: f32,
+    pub e_cle: f32,
+    pub e_qft: f32,
+    pub e_channelwise: f32,
+}
+
+/// Fig. 12: per-layer kernel error under lw / CLE / QFT / channelwise scale
+/// optimization (QFT column uses the actually-finetuned trainables).
+pub fn fig12(rt: &Runtime, arch_name: &str, fast: bool) -> Result<Vec<KernelErrorRow>> {
+    let arch = rt.manifest.arch(arch_name)?.clone();
+    let t = teacher_ctx(rt, arch_name)?;
+    let mut cfg = if fast { qft::QftConfig::fast(Mode::Lw) } else { qft::QftConfig::standard(Mode::Lw) };
+    cfg.cle_init = false;
+    let r = qft::run_qft(rt, arch_name, &t.params, &cfg)?;
+
+    let cle_f = cle::cle_factors(&arch, &t.params, &cle::BitConfig::default());
+    let mut rows = Vec::new();
+    for op in arch.conv_ops() {
+        if op.groups != 1 {
+            continue;
+        }
+        let w = t.params.get(&format!("w:{}", op.name));
+        let (s_lw, e_lw) = mmse::mmse_layerwise(w, crate::WEIGHT_QMAX);
+        let (_, e_ch) = mmse::mmse_channelwise(w, crate::WEIGHT_QMAX);
+        // CLE column: outer grid with factors folded in (Eq. 18)
+        let ones = vec![1.0f32; op.cin];
+        let c_in = cle_f.get(&op.inp).unwrap_or(&ones);
+        let s_l: Vec<f32> = c_in.iter().map(|&c| 1.0 / c).collect();
+        let s_r = vec![s_lw; op.cout];
+        let wq = mmse::fq_outer(w, &s_l, &s_r, crate::WEIGHT_QMAX);
+        let e_cle = w.sub(&wq).norm();
+        // QFT column: the trained DoF's grid applied to the trained weights
+        let (ql, qr) = crate::quant::deploy::kernel_covectors(&arch, &r.trainables, Mode::Lw, op);
+        let w_t = r.trainables.get(&format!("w:{}", op.name));
+        let wq_t = match &ql {
+            Some(l) => mmse::fq_outer(w_t, l, &qr, crate::WEIGHT_QMAX),
+            None => mmse::fq_per_out_channel(w_t, &qr, crate::WEIGHT_QMAX),
+        };
+        let e_qft = w_t.sub(&wq_t).norm();
+        rows.push(KernelErrorRow {
+            layer: op.name.clone(),
+            e_layerwise: e_lw,
+            e_cle,
+            e_qft,
+            e_channelwise: e_ch,
+        });
+    }
+    Ok(rows)
+}
+
+// ------------------------------------------------------- channel analysis
+
+#[derive(Clone, Debug)]
+pub struct ChannelPoint {
+    pub layer: String,
+    pub channel: usize,
+    /// mmse-optimal slice range normalized by whole-kernel naive max (Fig.13)
+    pub norm_opt_range: f32,
+    /// per-slice error under layerwise scale (Fig. 14)
+    pub err_layerwise: f32,
+    /// per-slice error under channelwise scale (Fig. 15)
+    pub err_channelwise: f32,
+    /// per-slice error after CLE (Fig. 16)
+    pub err_cle: f32,
+}
+
+/// Figs. 13–16 scatter data: per-channel optimal ranges and errors.
+pub fn channel_analysis(rt: &Runtime, arch_name: &str) -> Result<Vec<ChannelPoint>> {
+    let arch = rt.manifest.arch(arch_name)?.clone();
+    let t = teacher_ctx(rt, arch_name)?;
+    let cle_f = cle::cle_factors(&arch, &t.params, &cle::BitConfig::default());
+    let qmax = crate::WEIGHT_QMAX;
+    let mut pts = Vec::new();
+    for op in arch.conv_ops() {
+        if op.groups != 1 {
+            continue;
+        }
+        let w = t.params.get(&format!("w:{}", op.name));
+        let naive_full = w.abs_max();
+        let (s_full, _) = mmse::mmse_layerwise(w, qmax);
+        let ones = vec![1.0f32; op.cin];
+        let c_in = cle_f.get(&op.inp).unwrap_or(&ones);
+        // The CLE'd kernel (Eq. 16: rows scaled by 1/C) gets its own
+        // layerwise-mmse grid; per-slice errors are mapped back to the
+        // original weight domain (multiply each scaled-row error by C_i).
+        let mut w_cle = w.clone();
+        for (idx, v) in w_cle.data.iter_mut().enumerate() {
+            let i = (idx / op.cout) % op.cin;
+            *v /= c_in[i];
+        }
+        let (s_full_cle, _) = mmse::mmse_layerwise(&w_cle, qmax);
+        for m in 0..op.cout {
+            let slice = mmse::out_channel_slice(w, m);
+            let s_opt = crate::quant::ppq::mmse_scale(&slice, qmax);
+            let err_lw = crate::quant::ppq::quant_error(&slice, s_full, qmax);
+            let err_ch = crate::quant::ppq::quant_error(&slice, s_opt, qmax);
+            // CLE slice error in the original domain: quantize the scaled
+            // rows on the CLE'd layerwise grid, unscale per row
+            // (out_channel_slice layout is e-major: idx % cin == row i)
+            let slice_cle = mmse::out_channel_slice(&w_cle, m);
+            let mut e2 = 0.0f32;
+            for (idx, &v) in slice_cle.iter().enumerate() {
+                let i = idx % op.cin;
+                let dq = (v / s_full_cle).round().clamp(-qmax, qmax) * s_full_cle;
+                let e = (v - dq) * c_in[i];
+                e2 += e * e;
+            }
+            let err_cle = e2.sqrt();
+            pts.push(ChannelPoint {
+                layer: op.name.clone(),
+                channel: m,
+                norm_opt_range: s_opt * qmax / naive_full,
+                err_layerwise: err_lw,
+                err_channelwise: err_ch,
+                err_cle,
+            });
+        }
+    }
+    Ok(pts)
+}

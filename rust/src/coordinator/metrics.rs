@@ -1,0 +1,64 @@
+//! Wall-clock + PJRT duty-cycle metrics for the §Perf pass.
+
+use std::time::Instant;
+
+use crate::runtime::Runtime;
+
+pub struct Span<'a> {
+    rt: &'a Runtime,
+    start: Instant,
+    start_exec_ns: u64,
+    start_execs: u64,
+    pub label: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct SpanReport {
+    pub label: String,
+    pub wall_ms: f64,
+    pub exec_ms: f64,
+    pub executions: u64,
+    /// fraction of wall time spent inside PJRT execution — the coordinator
+    /// is "not the bottleneck" when this is high.
+    pub duty_cycle: f64,
+}
+
+impl<'a> Span<'a> {
+    pub fn start(rt: &'a Runtime, label: impl Into<String>) -> Self {
+        let s = rt.stats();
+        Span {
+            rt,
+            start: Instant::now(),
+            start_exec_ns: s.exec_ns,
+            start_execs: s.executions,
+            label: label.into(),
+        }
+    }
+
+    pub fn finish(self) -> SpanReport {
+        let wall = self.start.elapsed().as_secs_f64() * 1e3;
+        let s = self.rt.stats();
+        let exec_ms = (s.exec_ns - self.start_exec_ns) as f64 / 1e6;
+        SpanReport {
+            label: self.label,
+            wall_ms: wall,
+            exec_ms,
+            executions: s.executions - self.start_execs,
+            duty_cycle: if wall > 0.0 { exec_ms / wall } else { 0.0 },
+        }
+    }
+}
+
+impl std::fmt::Display for SpanReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{}: wall {:.1} ms, pjrt {:.1} ms over {} execs (duty {:.0}%)",
+            self.label,
+            self.wall_ms,
+            self.exec_ms,
+            self.executions,
+            self.duty_cycle * 100.0
+        )
+    }
+}

@@ -1,0 +1,19 @@
+//! L3 coordinator (S14): the deployment-compiler pipeline around the AOT
+//! executables — the industrial "HW-vendor quantization tool" setting the
+//! paper targets (§1).
+//!
+//! Stages: [`pretrain`] (teacher) → [`eval::calib_stats`] (calibration) →
+//! [`state::init_trainables`] / [`crate::quant::baselines`] (the sole
+//! pre-QFT step: naive-max activation ranges, MMSE weight ranges, F via
+//! Eq. 2 inversion, optional CLE) → [`qft::run_qft`] (the paper's single
+//! joint finetune of all DoF) → [`eval`] (degradation) — with
+//! [`experiments`] packaging every paper table/figure and [`metrics`]
+//! tracking the PJRT duty cycle.
+
+pub mod eval;
+pub mod experiments;
+pub mod metrics;
+pub mod pretrain;
+pub mod qft;
+pub mod state;
+pub mod weights_io;

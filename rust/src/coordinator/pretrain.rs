@@ -1,0 +1,114 @@
+//! FP teacher pretraining driver: the rust leader feeds synthetic batches to
+//! the AOT `fp_train` Adam step (the in-repo substitute for torchvision
+//! pretrained models — see DESIGN.md §Substitutions).
+//!
+//! Data batches are prefetched on a worker thread while PJRT executes the
+//! current step, so the coordinator never starves the executor.
+
+use std::sync::mpsc;
+
+use anyhow::Result;
+
+use crate::coordinator::state;
+use crate::data::{Dataset, Split};
+use crate::nn::ParamMap;
+use crate::runtime::Runtime;
+use crate::tensor::Tensor;
+
+#[derive(Clone, Debug)]
+pub struct PretrainConfig {
+    pub steps: usize,
+    pub base_lr: f32,
+    pub batch: usize,
+    /// number of distinct training images (cycled).
+    pub train_images: u64,
+    pub seed: u64,
+}
+
+impl Default for PretrainConfig {
+    fn default() -> Self {
+        PretrainConfig { steps: 6000, base_lr: 1.5e-3, batch: 8, train_images: 4096, seed: 0 }
+    }
+}
+
+/// Cosine LR with a small floor.
+pub fn cosine_lr(base: f32, t: usize, total: usize) -> f32 {
+    let frac = t as f32 / total.max(1) as f32;
+    base * (0.5 * (1.0 + (std::f32::consts::PI * frac).cos())).max(0.02)
+}
+
+/// Spawn a prefetch thread producing (images, labels_f32) batches.
+pub fn batch_stream(
+    ds: Dataset,
+    split: Split,
+    n_images: u64,
+    batch: usize,
+    steps: usize,
+) -> mpsc::Receiver<(Tensor, Tensor)> {
+    let (tx, rx) = mpsc::sync_channel(4);
+    std::thread::spawn(move || {
+        let mut cursor = 0u64;
+        for _ in 0..steps {
+            let start = cursor % n_images.max(batch as u64);
+            let (x, yf, _) = ds.batch(split, start, batch);
+            cursor += batch as u64;
+            if tx.send((x, yf)).is_err() {
+                return;
+            }
+        }
+    });
+    rx
+}
+
+pub struct PretrainResult {
+    pub params: ParamMap,
+    pub losses: Vec<f32>,
+}
+
+pub fn pretrain(rt: &Runtime, arch_name: &str, cfg: &PretrainConfig) -> Result<PretrainResult> {
+    let arch = rt.manifest.arch(arch_name)?.clone();
+    let n = arch.params.len();
+    let params0 = state::he_init_params(&arch, cfg.seed);
+    let mut params = params0.to_ordered(&arch.params);
+    let mut m = state::zeros_like_specs(&arch.params);
+    let mut v = state::zeros_like_specs(&arch.params);
+
+    let ds = Dataset::new(cfg.seed);
+    let rx = batch_stream(ds, Split::Train, cfg.train_images, cfg.batch, cfg.steps);
+
+    let mut losses = Vec::with_capacity(cfg.steps);
+    for step in 0..cfg.steps {
+        let (x, yf) = rx.recv().expect("batch stream ended early");
+        let lr = cosine_lr(cfg.base_lr, step, cfg.steps);
+        let mut inputs = Vec::with_capacity(3 * n + 4);
+        inputs.extend(params.iter().cloned());
+        inputs.extend(m.iter().cloned());
+        inputs.extend(v.iter().cloned());
+        inputs.push(Tensor::scalar(step as f32 + 1.0));
+        inputs.push(Tensor::scalar(lr));
+        inputs.push(x);
+        inputs.push(yf);
+        let mut out = rt.run(arch_name, "fp_train", &inputs)?;
+        let loss = out.pop().expect("loss").data[0];
+        losses.push(loss);
+        v = out.split_off(2 * n);
+        m = out.split_off(n);
+        params = out;
+    }
+    Ok(PretrainResult { params: ParamMap::from_ordered(&arch.params, params), losses })
+}
+
+/// Load a cached teacher or pretrain + cache one.
+pub fn teacher(rt: &Runtime, arch_name: &str, cfg: &PretrainConfig) -> Result<ParamMap> {
+    let path = rt
+        .dir()
+        .join("weights")
+        .join(format!("{arch_name}.qftw"));
+    if let Ok(p) = super::weights_io::load(&path) {
+        return Ok(p);
+    }
+    let result = pretrain(rt, arch_name, cfg)?;
+    let arch = rt.manifest.arch(arch_name)?;
+    super::weights_io::save(&path, &arch.params, &result.params)?;
+    Ok(result.params)
+}

@@ -1,0 +1,266 @@
+//! Parameter/trainable state management: He init, calibration statistics,
+//! and the paper's pre-QFT initialization (§4: naive max-min calibration for
+//! activation scales, MMSE for weights, then F via inversion of Eq. 2 — "a
+//! sole pre-QFT step").
+
+use std::collections::HashMap;
+
+use crate::data::Rng;
+use crate::nn::{fp_forward, ArchSpec, OpKind, ParamMap, ParamSpec};
+use crate::quant::deploy::Mode;
+use crate::quant::{mmse, ppq};
+use crate::tensor::Tensor;
+use crate::WEIGHT_QMAX;
+
+/// He-normal init of the FP parameter set (the rust side owns the teacher's
+/// initial weights; pretraining itself runs through the AOT `fp_train`).
+pub fn he_init_params(arch: &ArchSpec, seed: u64) -> ParamMap {
+    let mut rng = Rng::new(seed ^ 0xBEEF);
+    let tensors = arch
+        .params
+        .iter()
+        .map(|spec| {
+            if spec.name.starts_with("w:") {
+                let fan_in: usize = if spec.shape.len() > 2 {
+                    spec.shape[..3].iter().product()
+                } else {
+                    spec.shape[0]
+                };
+                let std = (2.0 / fan_in.max(1) as f32).sqrt();
+                Tensor::new(
+                    spec.shape.clone(),
+                    (0..spec.numel()).map(|_| rng.normal() * std).collect(),
+                )
+            } else {
+                Tensor::zeros(&spec.shape)
+            }
+        })
+        .collect();
+    ParamMap::from_ordered(&arch.params, tensors)
+}
+
+pub fn zeros_like_specs(specs: &[ParamSpec]) -> Vec<Tensor> {
+    specs.iter().map(|s| Tensor::zeros(&s.shape)).collect()
+}
+
+/// Calibration statistics via the pure-rust forward (used by tests and the
+/// heuristics; the pipeline normally uses the AOT `fp_stats` executable).
+pub fn absmax_from_rust_forward(
+    arch: &ArchSpec,
+    params: &ParamMap,
+    batches: &[Tensor],
+) -> HashMap<usize, Vec<f32>> {
+    let mut out: HashMap<usize, Vec<f32>> = HashMap::new();
+    for x in batches {
+        let fwd = fp_forward(arch, params, x);
+        for &v in &arch.quantized_values {
+            let m = fwd.values[&v].abs_max_per_channel();
+            let e = out.entry(v).or_insert_with(|| vec![0.0; m.len()]);
+            for (a, b) in e.iter_mut().zip(m) {
+                *a = a.max(b);
+            }
+        }
+    }
+    out
+}
+
+/// Reduce a sequence of `fp_stats` outputs (one Vec<Tensor> per batch) into
+/// the per-value max statistics.
+pub fn absmax_from_stats(
+    arch: &ArchSpec,
+    per_batch: &[Vec<Tensor>],
+) -> HashMap<usize, Vec<f32>> {
+    let mut out: HashMap<usize, Vec<f32>> = HashMap::new();
+    for outputs in per_batch {
+        for (&v, t) in arch.quantized_values.iter().zip(outputs) {
+            let e = out.entry(v).or_insert_with(|| vec![0.0; t.len()]);
+            for (a, &b) in e.iter_mut().zip(&t.data) {
+                *a = a.max(b);
+            }
+        }
+    }
+    out
+}
+
+/// Weight-scale initialization granularity for the pre-QFT step.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WeightScaleInit {
+    /// naive max(|.|)/qmax — no clipping (Table 2 "naive" comparator).
+    NaiveMax,
+    /// scalar (per-tensor) PPQ MMSE — the paper's §4 default init.
+    Uniform,
+    /// per-output-channel PPQ (standard channelwise).
+    PerChannel,
+    /// APQ doubly-channelwise co-vectors (Table 2 dch MMSE rows).
+    DoublyChannelwise,
+}
+
+/// Build the full trainable set for `mode` (manifest order available via
+/// `arch.trainable_specs`).  `cle` optionally carries per-value CLE factors
+/// C_m (Eq. 18): S_a^{l-1}_m = C_m · s_a.
+pub fn init_trainables(
+    arch: &ArchSpec,
+    params: &ParamMap,
+    absmax: &HashMap<usize, Vec<f32>>,
+    mode: Mode,
+    winit: WeightScaleInit,
+    cle: Option<&HashMap<usize, Vec<f32>>>,
+) -> ParamMap {
+    // base (scalar) activation scales from naive max calibration
+    let mut sv_base: HashMap<usize, f32> = HashMap::new();
+    for &v in &arch.quantized_values {
+        let mx = absmax
+            .get(&v)
+            .map(|m| m.iter().fold(0.0f32, |a, &b| a.max(b)))
+            .unwrap_or(1.0);
+        sv_base.insert(v, (mx / arch.act_qmax(v)).max(1e-6));
+    }
+
+    let conv_by_name: HashMap<&str, &crate::nn::OpSpec> = arch
+        .ops
+        .iter()
+        .filter(|o| o.kind() == OpKind::Conv)
+        .map(|o| (o.name.as_str(), o))
+        .collect();
+
+    let scalar_wscale = |w: &Tensor| -> f32 {
+        match winit {
+            WeightScaleInit::NaiveMax => (w.abs_max() / WEIGHT_QMAX).max(1e-8),
+            _ => ppq::mmse_scale(&w.data, WEIGHT_QMAX),
+        }
+    };
+
+    let mut tensors = Vec::with_capacity(arch.trainable_specs(mode.key()).len());
+    for spec in arch.trainable_specs(mode.key()) {
+        let (kind, id) = spec.name.split_once(':').expect("name kind:id");
+        let t = match kind {
+            "w" | "b" => params.get(&spec.name).clone(),
+            "sv" => {
+                let v: usize = id.parse().unwrap();
+                let s0 = sv_base[&v];
+                let mut data = vec![s0; spec.shape[0]];
+                if let Some(factors) = cle.and_then(|c| c.get(&v)) {
+                    for (d, &c) in data.iter_mut().zip(factors) {
+                        *d *= c;
+                    }
+                }
+                Tensor::new(spec.shape.clone(), data)
+            }
+            "f" => {
+                let op = conv_by_name[id];
+                let w = params.get(&format!("w:{id}"));
+                let s_w = scalar_wscale(w);
+                // inversion of Eq. 2 with uniform scales:
+                // s_w = sv·f/su  =>  f = s_w·su/sv
+                let su = sv_base[&op.inp];
+                let sv = sv_base[&op.out];
+                Tensor::new(spec.shape.clone(), vec![s_w * su / sv])
+            }
+            "swl" => {
+                let w = params.get(&format!("w:{id}"));
+                match winit {
+                    WeightScaleInit::DoublyChannelwise => {
+                        let (s_l, _, _) = mmse::mmse_dch(w, WEIGHT_QMAX, 10);
+                        Tensor::new(spec.shape.clone(), s_l)
+                    }
+                    _ => Tensor::full(&spec.shape, 1.0),
+                }
+            }
+            "swr" => {
+                let w = params.get(&format!("w:{id}"));
+                let data = match winit {
+                    WeightScaleInit::NaiveMax => {
+                        vec![(w.abs_max() / WEIGHT_QMAX).max(1e-8); spec.shape[0]]
+                    }
+                    WeightScaleInit::Uniform => {
+                        vec![ppq::mmse_scale(&w.data, WEIGHT_QMAX); spec.shape[0]]
+                    }
+                    WeightScaleInit::PerChannel => mmse::mmse_channelwise(w, WEIGHT_QMAX).0,
+                    WeightScaleInit::DoublyChannelwise => {
+                        let op = conv_by_name[id];
+                        if op.groups == 1 {
+                            mmse::mmse_dch(w, WEIGHT_QMAX, 10).1
+                        } else {
+                            // depthwise: single channel axis, per-channel PPQ
+                            mmse::mmse_channelwise(w, WEIGHT_QMAX).0
+                        }
+                    }
+                };
+                Tensor::new(spec.shape.clone(), data)
+            }
+            other => panic!("unknown trainable kind {other}"),
+        };
+        tensors.push(t);
+    }
+    ParamMap::from_ordered(arch.trainable_specs(mode.key()), tensors)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::Manifest;
+
+    #[test]
+    fn init_trainables_all_modes_all_archs() {
+        let Ok(m) = Manifest::load("artifacts/manifest.json") else { return };
+        let ds = crate::data::Dataset::new(0);
+        for arch in m.archs.values() {
+            let params = he_init_params(arch, 7);
+            let batches = vec![ds.batch(crate::data::Split::Calib, 0, 4).0];
+            let absmax = absmax_from_rust_forward(arch, &params, &batches);
+            for mode in [Mode::Lw, Mode::Dch] {
+                for winit in [
+                    WeightScaleInit::NaiveMax,
+                    WeightScaleInit::Uniform,
+                    WeightScaleInit::PerChannel,
+                    WeightScaleInit::DoublyChannelwise,
+                ] {
+                    let tm = init_trainables(arch, &params, &absmax, mode, winit, None);
+                    for spec in arch.trainable_specs(mode.key()) {
+                        let t = tm.get(&spec.name);
+                        assert_eq!(t.shape, spec.shape);
+                        if !spec.name.starts_with("w:") && !spec.name.starts_with("b:") {
+                            assert!(t.data.iter().all(|&v| v > 0.0 && v.is_finite()),
+                                    "{} {:?} {:?}", arch.name, winit, spec.name);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn f_inversion_reconstructs_weight_scale() {
+        // with uniform scales: sv*f/su == s_w exactly
+        let Ok(m) = Manifest::load("artifacts/manifest.json") else { return };
+        let arch = &m.archs["convnet_tiny"];
+        let params = he_init_params(arch, 1);
+        let ds = crate::data::Dataset::new(0);
+        let batches = vec![ds.batch(crate::data::Split::Calib, 0, 4).0];
+        let absmax = absmax_from_rust_forward(arch, &params, &batches);
+        let tm = init_trainables(arch, &params, &absmax, Mode::Lw,
+                                 WeightScaleInit::Uniform, None);
+        for op in arch.conv_ops() {
+            let w = params.get(&format!("w:{}", op.name));
+            let s_w = ppq::mmse_scale(&w.data, WEIGHT_QMAX);
+            let su = tm.get(&format!("sv:{}", op.inp)).data[0];
+            let sv = tm.get(&format!("sv:{}", op.out)).data[0];
+            let f = tm.get(&format!("f:{}", op.name)).data[0];
+            let rec = sv * f / su;
+            assert!((rec - s_w).abs() < 1e-4 * s_w, "{}", op.name);
+        }
+    }
+
+    #[test]
+    fn he_init_is_deterministic() {
+        let Ok(m) = Manifest::load("artifacts/manifest.json") else { return };
+        let arch = &m.archs["convnet_tiny"];
+        let a = he_init_params(arch, 5);
+        let b = he_init_params(arch, 5);
+        for spec in &arch.params {
+            assert_eq!(a.get(&spec.name).data, b.get(&spec.name).data);
+        }
+        let c = he_init_params(arch, 6);
+        assert_ne!(a.get("w:conv0").data, c.get("w:conv0").data);
+    }
+}

@@ -1,0 +1,105 @@
+//! Tiny on-disk tensor-bundle format for cached teacher weights.
+//!
+//! Layout: `QFTW` magic, u32 header length, JSON header
+//! `[{"name":..,"shape":[..]}, ..]`, then raw little-endian f32 payloads in
+//! header order.  Keeps pretraining a one-time cost across benches/examples.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::nn::{ParamMap, ParamSpec};
+use crate::tensor::Tensor;
+
+const MAGIC: &[u8; 4] = b"QFTW";
+
+pub fn save(path: impl AsRef<Path>, specs: &[ParamSpec], params: &ParamMap) -> Result<()> {
+    let path = path.as_ref();
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let header = crate::util::json::Value::Arr(
+        specs
+            .iter()
+            .map(|s| {
+                let mut m = std::collections::HashMap::new();
+                m.insert("name".to_string(), crate::util::json::Value::Str(s.name.clone()));
+                m.insert(
+                    "shape".to_string(),
+                    crate::util::json::Value::Arr(
+                        s.shape.iter().map(|&d| crate::util::json::Value::Num(d as f64)).collect(),
+                    ),
+                );
+                crate::util::json::Value::Obj(m)
+            })
+            .collect(),
+    )
+    .to_string_compact()
+    .into_bytes();
+    let mut f = std::fs::File::create(path).with_context(|| format!("create {path:?}"))?;
+    f.write_all(MAGIC)?;
+    f.write_all(&(header.len() as u32).to_le_bytes())?;
+    f.write_all(&header)?;
+    for s in specs {
+        let t = params.get(&s.name);
+        let bytes: Vec<u8> = t.data.iter().flat_map(|v| v.to_le_bytes()).collect();
+        f.write_all(&bytes)?;
+    }
+    Ok(())
+}
+
+pub fn load(path: impl AsRef<Path>) -> Result<ParamMap> {
+    let path = path.as_ref();
+    let mut f = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
+    let mut magic = [0u8; 4];
+    f.read_exact(&mut magic)?;
+    anyhow::ensure!(&magic == MAGIC, "bad magic in {path:?}");
+    let mut len = [0u8; 4];
+    f.read_exact(&mut len)?;
+    let mut header = vec![0u8; u32::from_le_bytes(len) as usize];
+    f.read_exact(&mut header)?;
+    let header_v = crate::util::json::Value::parse(std::str::from_utf8(&header)?)?;
+    let specs: Vec<ParamSpec> = ParamSpec::list_from_json(&header_v)?;
+    let mut map = std::collections::HashMap::new();
+    for s in &specs {
+        let n = s.numel();
+        let mut buf = vec![0u8; n * 4];
+        f.read_exact(&mut buf)?;
+        let data: Vec<f32> = buf
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        map.insert(s.name.clone(), Tensor::new(s.shape.clone(), data));
+    }
+    Ok(ParamMap(map))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let specs = vec![
+            ParamSpec { name: "w:a".into(), shape: vec![2, 3] },
+            ParamSpec { name: "b:a".into(), shape: vec![3] },
+        ];
+        let mut map = std::collections::HashMap::new();
+        map.insert("w:a".to_string(), Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]));
+        map.insert("b:a".to_string(), Tensor::new(vec![3], vec![-1., 0., 1.]));
+        let pm = ParamMap(map);
+        let dir = std::env::temp_dir().join("qft_weights_io_test");
+        let path = dir.join("t.qftw");
+        save(&path, &specs, &pm).unwrap();
+        let loaded = load(&path).unwrap();
+        assert_eq!(loaded.get("w:a"), pm.get("w:a"));
+        assert_eq!(loaded.get("b:a"), pm.get("b:a"));
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn missing_file_errors() {
+        assert!(load("/nonexistent/qft.bin").is_err());
+    }
+}

@@ -1,0 +1,41 @@
+//! # QFT — post-training quantization via fast joint finetuning of all DoF
+//!
+//! Rust + JAX + Pallas reproduction of *"QFT: Post-training quantization via
+//! fast joint finetuning of all degrees of freedom"* (Finkelstein et al.,
+//! Hailo, 2022).
+//!
+//! Three-layer architecture (see `DESIGN.md`):
+//!
+//! * **L1** — Pallas fake-quant / fused quantized-matmul kernels
+//!   (`python/compile/kernels/`, AOT-lowered, never run from python at
+//!   runtime).
+//! * **L2** — the twin-graph QFT simulation (offline subgraph inferring all
+//!   deployment constants from the DoF set, online HW-emulating subgraph)
+//!   exported per-(arch × mode) as HLO text (`python/compile/`).
+//! * **L3** — this crate: the deployment-compiler coordinator.  It owns the
+//!   PJRT runtime ([`runtime`]), the synthetic workload ([`data`]), a pure
+//!   rust quantization substrate implementing every heuristic the paper uses
+//!   or compares against ([`quant`]): PPQ, APQ, MMSE at all granularities,
+//!   4b-adapted CLE, bias correction, integer-deployment simulation — and the
+//!   end-to-end pipeline ([`coordinator`]): pretrain → calibrate → MMSE init
+//!   → (CLE) → QFT finetune → export → eval.
+//!
+//! The public API is consumed by the `repro` CLI, `examples/` and
+//! `rust/benches/` (one bench per paper table/figure).
+
+pub mod coordinator;
+pub mod data;
+pub mod nn;
+pub mod quant;
+pub mod runtime;
+pub mod tensor;
+pub mod util;
+
+pub use tensor::Tensor;
+
+/// 4-bit symmetric weight grid: clip(round(w/s)) in [-7, 7].
+pub const WEIGHT_QMAX: f32 = 7.0;
+/// Unsigned 8-bit activation grid.
+pub const ACT_UNSIGNED_QMAX: f32 = 255.0;
+/// Signed 8-bit activation grid.
+pub const ACT_SIGNED_QMAX: f32 = 127.0;

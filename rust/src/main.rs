@@ -1,0 +1,257 @@
+//! `repro` — the QFT leader CLI (hand-rolled arg parsing; the image's cargo
+//! cache has no clap/tokio — see Cargo.toml).
+//!
+//! All compute flows through AOT-compiled HLO artifacts (run `make
+//! artifacts` once); this binary owns process lifecycle, the pipeline, and
+//! metrics.  Examples:
+//!
+//! ```text
+//! repro pretrain --arch resnet_tiny
+//! repro qft --arch mobilenet_tiny --mode lw --cle
+//! repro table1 --archs resnet_tiny,mobilenet_tiny --fast
+//! repro fig5 --arch regnet_tiny
+//! ```
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+use qft::coordinator::{eval, experiments, metrics, pretrain, qft as qft_stage};
+use qft::quant::deploy::Mode;
+use qft::runtime::Runtime;
+
+const USAGE: &str = "\
+repro — QFT post-training quantization pipeline
+
+USAGE: repro [--artifacts DIR] <command> [options]
+
+COMMANDS:
+  pretrain  --arch A [--steps N]          pretrain + cache the FP teacher
+  eval-fp   --arch A                      evaluate the cached FP teacher
+  qft       --arch A [--mode lw|dch] [--cle] [--frozen-scales]
+            [--lr F] [--ce-mix F] [--fast]   run the full QFT pipeline
+  table1    [--archs A,B,..] [--fast]     Table 1: QFT vs PTQ baselines
+  table2    [--archs A,B,..]              Table 2: accuracy without QFT
+  fig3      [--arch A]                    kernel error vs granularity
+  fig5      [--arch A] [--fast]           dataset-size ablation
+  fig6      [--arch A] [--fast]           CE-mixing ablation
+  fig7      [--arch A] [--fast]           base-LR sweep
+  fig8      [--archs A,B] [--fast]        CLE-init x trained-scales 2x2
+  fig9      [--archs A,B] [--fast]        dch frozen vs trained L/R scales
+  fig12     [--arch A] [--fast]           per-layer kernel error lw/CLE/QFT/chw
+";
+
+/// flags: `--key value` pairs plus boolean `--flag`s.
+struct Args {
+    kv: HashMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    fn parse(argv: &[String], bool_flags: &[&str]) -> Result<Args> {
+        let mut kv = HashMap::new();
+        let mut flags = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            let Some(name) = a.strip_prefix("--") else {
+                bail!("unexpected argument {a:?}\n{USAGE}");
+            };
+            if bool_flags.contains(&name) {
+                flags.push(name.to_string());
+                i += 1;
+            } else {
+                let Some(v) = argv.get(i + 1) else {
+                    bail!("--{name} requires a value");
+                };
+                kv.insert(name.to_string(), v.clone());
+                i += 2;
+            }
+        }
+        Ok(Args { kv, flags })
+    }
+
+    fn get(&self, key: &str, default: &str) -> String {
+        self.kv.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    fn req(&self, key: &str) -> Result<String> {
+        self.kv
+            .get(key)
+            .cloned()
+            .ok_or_else(|| anyhow::anyhow!("missing required --{key}"))
+    }
+
+    fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+
+    fn f32(&self, key: &str, default: f32) -> Result<f32> {
+        match self.kv.get(key) {
+            Some(v) => Ok(v.parse()?),
+            None => Ok(default),
+        }
+    }
+}
+
+fn parse_mode(s: &str) -> Result<Mode> {
+    match s {
+        "lw" => Ok(Mode::Lw),
+        "dch" => Ok(Mode::Dch),
+        other => bail!("unknown mode {other} (use lw|dch)"),
+    }
+}
+
+fn main() -> Result<()> {
+    let mut argv: Vec<String> = std::env::args().skip(1).collect();
+    let mut artifacts = "artifacts".to_string();
+    if argv.first().map(|a| a == "--artifacts").unwrap_or(false) {
+        artifacts = argv.get(1).cloned().unwrap_or_default();
+        argv.drain(0..2);
+    }
+    let Some(cmd) = argv.first().cloned() else {
+        print!("{USAGE}");
+        return Ok(());
+    };
+    let rest = &argv[1..];
+    let args = Args::parse(rest, &["cle", "frozen-scales", "fast"])?;
+    let fast = args.flag("fast");
+
+    let rt = Runtime::load(&artifacts)?;
+    eprintln!("platform: {}", rt.platform());
+
+    match cmd.as_str() {
+        "pretrain" => {
+            let arch = args.req("arch")?;
+            let steps: usize = args.get("steps", "6000").parse()?;
+            let base_lr = args.f32("lr", 1.5e-3)?;
+            let cfg = pretrain::PretrainConfig { steps, base_lr, ..Default::default() };
+            let span = metrics::Span::start(&rt, "pretrain");
+            let r = pretrain::pretrain(&rt, &arch, &cfg)?;
+            let arch_spec = rt.manifest.arch(&arch)?;
+            qft::coordinator::weights_io::save(
+                rt.dir().join("weights").join(format!("{arch}.qftw")),
+                &arch_spec.params,
+                &r.params,
+            )?;
+            let acc = eval::eval_fp(&rt, &arch, &r.params, experiments::EVAL_IMAGES, 0)?;
+            println!("{}", span.finish());
+            println!(
+                "{arch}: loss {:.3} -> {:.3}, fp top-1 {:.1}%",
+                r.losses.first().unwrap_or(&f32::NAN),
+                r.losses.last().unwrap_or(&f32::NAN),
+                acc * 100.0
+            );
+        }
+        "eval-fp" => {
+            let arch = args.req("arch")?;
+            let t = experiments::teacher_ctx(&rt, &arch)?;
+            println!("{arch}: fp top-1 {:.1}%", t.fp_acc * 100.0);
+        }
+        "qft" => {
+            let arch = args.req("arch")?;
+            let mode = parse_mode(&args.get("mode", "lw"))?;
+            let t = experiments::teacher_ctx(&rt, &arch)?;
+            let mut cfg = if fast {
+                qft_stage::QftConfig::fast(mode)
+            } else {
+                qft_stage::QftConfig::standard(mode)
+            };
+            cfg.cle_init = args.flag("cle");
+            cfg.train_scales = !args.flag("frozen-scales");
+            cfg.base_lr = args.f32("lr", cfg.base_lr)?;
+            cfg.ce_mix = args.f32("ce-mix", 0.0)?;
+            let span = metrics::Span::start(&rt, "qft");
+            let r = qft_stage::run_qft(&rt, &arch, &t.params, &cfg)?;
+            let report = span.finish();
+            let acc_init = eval::eval_q(&rt, &arch, &r.init, mode, experiments::EVAL_IMAGES, 0)?;
+            let acc = eval::eval_q(&rt, &arch, &r.trainables, mode, experiments::EVAL_IMAGES, 0)?;
+            println!("{report}");
+            println!(
+                "{arch} [{}]: fp {:.1}% | init {:.1}% (degr {:.1}) | QFT {:.1}% (degr {:.1}) | kd-loss {:.4} -> {:.4}",
+                cfg.mode.key(),
+                t.fp_acc * 100.0,
+                acc_init * 100.0,
+                (t.fp_acc - acc_init) * 100.0,
+                acc * 100.0,
+                (t.fp_acc - acc) * 100.0,
+                r.losses.first().unwrap_or(&f32::NAN),
+                r.losses.last().unwrap_or(&f32::NAN),
+            );
+        }
+        "table1" => {
+            let archs = args.get(
+                "archs",
+                "resnet_tiny,mobilenet_tiny,regnet_tiny,mnasnet_tiny,resnet_wide,regnet_wide",
+            );
+            let names: Vec<&str> = archs.split(',').collect();
+            let rows = experiments::table1(&rt, &names, fast)?;
+            experiments::print_rows("Table 1: QFT vs PTQ baselines", &rows);
+        }
+        "table2" => {
+            let archs = args.get("archs", "resnet_tiny,mobilenet_tiny,regnet_tiny");
+            let names: Vec<&str> = archs.split(',').collect();
+            let rows = experiments::table2(&rt, &names)?;
+            experiments::print_rows("Table 2: accuracy without QFT", &rows);
+        }
+        "fig3" => {
+            let arch = args.get("arch", "mobilenet_tiny");
+            let rows = experiments::fig3(&rt, &arch)?;
+            println!("\n=== Fig. 3: kernel MMSE error vs granularity ({arch}) ===");
+            println!("{:<10} {:>10} {:>12} {:>10}", "layer", "layerwise", "channelwise", "dCh");
+            for r in rows {
+                println!(
+                    "{:<10} {:>10.4} {:>12.4} {:>10.4}",
+                    r.layer, r.e_layerwise, r.e_channelwise, r.e_dch
+                );
+            }
+        }
+        "fig5" => {
+            let arch = args.get("arch", "regnet_tiny");
+            let sizes = [64u64, 128, 256, 512, 1024];
+            let rows = experiments::fig5(&rt, &arch, &sizes, fast)?;
+            experiments::print_rows("Fig. 5: dataset size ablation", &rows);
+        }
+        "fig6" => {
+            let arch = args.get("arch", "mobilenet_tiny");
+            let mixes = [0.0, 0.1, 0.3, 0.5, 1.0];
+            let rows = experiments::fig6(&rt, &arch, &mixes, fast)?;
+            experiments::print_rows("Fig. 6: CE mixing ablation", &rows);
+        }
+        "fig7" => {
+            let arch = args.get("arch", "regnet_tiny");
+            let lrs = [1e-5, 3e-5, 1e-4, 3e-4, 1e-3, 3e-3, 1e-2];
+            let rows = experiments::fig7(&rt, &arch, &lrs, fast)?;
+            experiments::print_rows("Fig. 7: base LR sweep", &rows);
+        }
+        "fig8" => {
+            let archs = args.get("archs", "resnet_tiny,mobilenet_tiny");
+            let names: Vec<&str> = archs.split(',').collect();
+            let rows = experiments::fig8(&rt, &names, fast)?;
+            experiments::print_rows("Fig. 8: CLE init x trained scales (lw)", &rows);
+        }
+        "fig9" => {
+            let archs = args.get("archs", "resnet_tiny,mobilenet_tiny");
+            let names: Vec<&str> = archs.split(',').collect();
+            let rows = experiments::fig9(&rt, &names, fast)?;
+            experiments::print_rows("Fig. 9: dch frozen vs trained L/R scales", &rows);
+        }
+        "fig12" => {
+            let arch = args.get("arch", "regnet_tiny");
+            let rows = experiments::fig12(&rt, &arch, fast)?;
+            println!("\n=== Fig. 12: kernel error by scale optimization ({arch}) ===");
+            println!(
+                "{:<10} {:>10} {:>8} {:>8} {:>12}",
+                "layer", "layerwise", "CLE", "QFT", "channelwise"
+            );
+            for r in rows {
+                println!(
+                    "{:<10} {:>10.4} {:>8.4} {:>8.4} {:>12.4}",
+                    r.layer, r.e_layerwise, r.e_cle, r.e_qft, r.e_channelwise
+                );
+            }
+        }
+        other => bail!("unknown command {other:?}\n{USAGE}"),
+    }
+    Ok(())
+}

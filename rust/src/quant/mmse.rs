@@ -1,0 +1,181 @@
+//! MMSE at all scale-tensor granularities (Eq. 5) + fake-quant helpers.
+//!
+//! `MMSE(W)` (layerwise, scalar scale), `MMSE_Ch(W)` (per-output-channel
+//! right co-vector), `MMSE_dCh(W)` (left ⊗ right, via APQ) — the Fig. 3
+//! hierarchy.  HWIO kernel layout throughout.
+
+use crate::quant::apq::{apq, KernelView};
+use crate::quant::ppq;
+use crate::tensor::Tensor;
+
+/// Layerwise scalar-MMSE scale + error for a kernel.
+pub fn mmse_layerwise(w: &Tensor, qmax: f32) -> (f32, f32) {
+    let s = ppq::mmse_scale(&w.data, qmax);
+    (s, ppq::quant_error(&w.data, s, qmax))
+}
+
+/// Slice of an HWIO kernel along the *output* channel j (the standard
+/// per-channel quantization axis, "right" co-vector).
+pub fn out_channel_slice(w: &Tensor, j: usize) -> Vec<f32> {
+    let cout = w.shape[3];
+    w.data.iter().skip(j).step_by(cout).copied().collect()
+}
+
+/// Slice along the *input* channel i ("left" co-vector axis).
+pub fn in_channel_slice(w: &Tensor, i: usize) -> Vec<f32> {
+    let (cin, cout) = (w.shape[2], w.shape[3]);
+    let k2 = w.shape[0] * w.shape[1];
+    let mut out = Vec::with_capacity(k2 * cout);
+    for e in 0..k2 {
+        let base = (e * cin + i) * cout;
+        out.extend_from_slice(&w.data[base..base + cout]);
+    }
+    out
+}
+
+/// Channelwise MMSE: per-output-channel PPQ. Returns (scales[cout], error).
+pub fn mmse_channelwise(w: &Tensor, qmax: f32) -> (Vec<f32>, f32) {
+    let cout = w.shape[3];
+    let mut scales = Vec::with_capacity(cout);
+    let mut e2 = 0.0f32;
+    for j in 0..cout {
+        let slice = out_channel_slice(w, j);
+        let s = ppq::mmse_scale(&slice, qmax);
+        let e = ppq::quant_error(&slice, s, qmax);
+        e2 += e * e;
+        scales.push(s);
+    }
+    (scales, e2.sqrt())
+}
+
+/// Doubly-channelwise MMSE via APQ. Returns (s_left[cin], s_right[cout], err).
+pub fn mmse_dch(w: &Tensor, qmax: f32, iters: usize) -> (Vec<f32>, Vec<f32>, f32) {
+    let view = KernelView::from_hwio(&w.data, w.shape[0], w.shape[2], w.shape[3]);
+    let r = apq(&view, qmax, iters);
+    (r.s, r.t, r.error)
+}
+
+/// Fake-quantize a tensor with a scalar scale.
+pub fn fq_scalar(w: &Tensor, s: f32, qmax: f32) -> Tensor {
+    w.map(|x| (x / s).round().clamp(-qmax, qmax) * s)
+}
+
+/// Fake-quantize an HWIO kernel with per-output-channel scales.
+pub fn fq_per_out_channel(w: &Tensor, scales: &[f32], qmax: f32) -> Tensor {
+    let cout = w.shape[3];
+    assert_eq!(scales.len(), cout);
+    let data = w
+        .data
+        .iter()
+        .enumerate()
+        .map(|(idx, &x)| {
+            let s = scales[idx % cout];
+            (x / s).round().clamp(-qmax, qmax) * s
+        })
+        .collect();
+    Tensor::new(w.shape.clone(), data)
+}
+
+/// Fake-quantize an HWIO kernel with an outer-product (s_l ⊗ s_r) grid.
+pub fn fq_outer(w: &Tensor, s_l: &[f32], s_r: &[f32], qmax: f32) -> Tensor {
+    let (cin, cout) = (w.shape[2], w.shape[3]);
+    assert_eq!(s_l.len(), cin);
+    assert_eq!(s_r.len(), cout);
+    let data = w
+        .data
+        .iter()
+        .enumerate()
+        .map(|(idx, &x)| {
+            let j = idx % cout;
+            let i = (idx / cout) % cin;
+            let s = s_l[i] * s_r[j];
+            (x / s).round().clamp(-qmax, qmax) * s
+        })
+        .collect();
+    Tensor::new(w.shape.clone(), data)
+}
+
+/// Fake-quantize NHWC activations with a per-channel vector scale.
+pub fn fq_act(x: &Tensor, scales: &[f32], qmin: f32, qmax: f32) -> Tensor {
+    let c = *x.shape.last().unwrap();
+    assert_eq!(scales.len(), c);
+    let data = x
+        .data
+        .iter()
+        .enumerate()
+        .map(|(idx, &v)| {
+            let s = scales[idx % c];
+            (v / s).round().clamp(qmin, qmax) * s
+        })
+        .collect();
+    Tensor::new(x.shape.clone(), data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Rng;
+
+    fn rand_kernel(k: usize, cin: usize, cout: usize, seed: u64) -> Tensor {
+        let mut r = Rng::new(seed);
+        let gains: Vec<f32> = (0..cout).map(|_| 2f32.powf(r.range(-2.0, 2.0))).collect();
+        let data = (0..k * k * cin * cout)
+            .map(|idx| r.normal() * 0.1 * gains[idx % cout])
+            .collect();
+        Tensor::new(vec![k, k, cin, cout], data)
+    }
+
+    #[test]
+    fn granularity_hierarchy() {
+        // Fig. 3: every extra vector DoF reduces local error
+        let w = rand_kernel(3, 8, 16, 1);
+        let (_, e_lw) = mmse_layerwise(&w, 7.0);
+        let (_, e_ch) = mmse_channelwise(&w, 7.0);
+        let (_, _, e_dch) = mmse_dch(&w, 7.0, 10);
+        assert!(e_ch <= e_lw);
+        assert!(e_dch <= e_ch * 1.05);
+    }
+
+    #[test]
+    fn slices_partition_kernel() {
+        let w = rand_kernel(3, 4, 6, 2);
+        let total: usize = (0..6).map(|j| out_channel_slice(&w, j).len()).sum();
+        assert_eq!(total, w.len());
+        let total_in: usize = (0..4).map(|i| in_channel_slice(&w, i).len()).sum();
+        assert_eq!(total_in, w.len());
+        // energy is preserved by slicing
+        let e_out: f32 = (0..6)
+            .map(|j| out_channel_slice(&w, j).iter().map(|v| v * v).sum::<f32>())
+            .sum();
+        assert!((e_out - w.sq_norm()).abs() < 1e-3);
+    }
+
+    #[test]
+    fn fq_outer_matches_manual() {
+        let w = Tensor::new(vec![1, 1, 2, 2], vec![0.5, -0.3, 0.2, 0.8]);
+        let s_l = [1.0, 2.0];
+        let s_r = [0.1, 0.05];
+        let q = fq_outer(&w, &s_l, &s_r, 7.0);
+        // element (i=0,j=0): s=0.1 -> round(5)=5 -> 0.5
+        assert!((q.data[0] - 0.5).abs() < 1e-6);
+        // element (i=1,j=1): s=0.1 -> round(8) clip 7 -> 0.7
+        assert!((q.data[3] - 0.7).abs() < 1e-6);
+    }
+
+    #[test]
+    fn fq_per_out_channel_matches_slice_ppq() {
+        let w = rand_kernel(3, 4, 4, 3);
+        let (scales, err) = mmse_channelwise(&w, 7.0);
+        let q = fq_per_out_channel(&w, &scales, 7.0);
+        let direct = w.sub(&q).norm();
+        assert!((direct - err).abs() < 1e-3, "{direct} vs {err}");
+    }
+
+    #[test]
+    fn fq_act_unsigned_clips_negatives() {
+        let x = Tensor::new(vec![1, 1, 1, 2], vec![-1.0, 0.5]);
+        let q = fq_act(&x, &[0.01, 0.01], 0.0, 255.0);
+        assert_eq!(q.data[0], 0.0);
+        assert!((q.data[1] - 0.5).abs() < 0.01);
+    }
+}

@@ -1,0 +1,40 @@
+//! The paper's quantization mathematics, natively in rust (S4–S9).
+//!
+//! * [`ppq`] — Progressive Projection Quantization (Alg. 1, adopted from
+//!   [14]): scalar-scale MMSE by orthogonality-principle iteration.
+//! * [`apq`] — Alternating Projection Quantization (Alg. 2, the paper's
+//!   novel extension): doubly-channelwise (left ⊗ right co-vector) MMSE.
+//! * [`mmse`] — MMSE at all granularities (Eq. 5): layerwise, channelwise,
+//!   doubly-channelwise, plus fake-quant utilities.
+//! * [`dof`] — the scale-tensor DoF algebra: Eq. 2 and its inversion
+//!   (Eqs. 3–4), outer-product grids.
+//! * [`cle`] — 4b-adapted cross-layer equalization (App. D, Eqs. 19/21):
+//!   MMSE-ratio geometric mean, β-weighted heterogeneous pairs, fan-out.
+//! * [`bias`] — empirical bias correction [29] and quantized-bias residue
+//!   absorption (Eq. 7 / App. A).
+//! * [`deploy`] — the integer deployment simulator: fully-integer online
+//!   graph cross-checked against the fake-quant simulation (deployability
+//!   rigor per App. A).
+//! * [`baselines`] — trainable-set builders for every Table-1/2 comparator:
+//!   naive-max, MMSE round-to-nearest, +CLE, +bias-correction.
+
+pub mod apq;
+pub mod baselines;
+pub mod bias;
+pub mod cle;
+pub mod deploy;
+pub mod dof;
+pub mod mmse;
+pub mod ppq;
+
+/// clip(round(x/s)) — the integer code.
+#[inline]
+pub fn qcode(x: f32, s: f32, qmin: f32, qmax: f32) -> f32 {
+    (x / s).round().clamp(qmin, qmax)
+}
+
+/// s * clip(round(x/s)) — fake-quantization of one element.
+#[inline]
+pub fn fq(x: f32, s: f32, qmin: f32, qmax: f32) -> f32 {
+    qcode(x, s, qmin, qmax) * s
+}

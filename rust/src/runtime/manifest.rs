@@ -1,0 +1,81 @@
+//! The AOT contract: model of `artifacts/manifest.json`.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::nn::arch::{ArchSpec, ArtifactSpec};
+use crate::util::json::Value;
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub batch: usize,
+    pub input_hw: usize,
+    pub input_ch: usize,
+    pub num_classes: usize,
+    pub archs: HashMap<String, ArchSpec>,
+    pub kernels: HashMap<String, ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading manifest {path:?} (run `make artifacts`)"))?;
+        let v = Value::parse(&text).context("parsing manifest JSON")?;
+        let mut archs = HashMap::new();
+        for (name, spec) in v.get("archs")?.obj()? {
+            archs.insert(
+                name.clone(),
+                ArchSpec::from_json(spec).with_context(|| format!("arch {name}"))?,
+            );
+        }
+        let mut kernels = HashMap::new();
+        if let Some(ks) = v.opt("kernels") {
+            for (name, spec) in ks.obj()? {
+                kernels.insert(name.clone(), ArtifactSpec::from_json(spec)?);
+            }
+        }
+        Ok(Manifest {
+            batch: v.get("batch")?.usize()?,
+            input_hw: v.get("input_hw")?.usize()?,
+            input_ch: v.get("input_ch")?.usize()?,
+            num_classes: v.get("num_classes")?.usize()?,
+            archs,
+            kernels,
+        })
+    }
+
+    pub fn arch(&self, name: &str) -> Result<&ArchSpec> {
+        self.archs
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown arch {name}; have {:?}", self.archs.keys()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_loads_and_is_consistent() {
+        let Ok(m) = Manifest::load("artifacts/manifest.json") else { return };
+        assert!(m.batch > 0);
+        for (name, arch) in &m.archs {
+            assert_eq!(&arch.name, name);
+            for art in arch.artifacts.values() {
+                for p in art.inputs.iter().chain(&art.outputs) {
+                    assert!(p.shape.iter().all(|&d| d > 0) || p.shape.is_empty());
+                }
+            }
+            assert!(arch.trainables.contains_key("lw"));
+            assert!(arch.trainables.contains_key("dch"));
+            // value maps cover every op output
+            for op in &arch.ops {
+                assert!(arch.value_channels.contains_key(&op.out.to_string()), "{name}");
+            }
+        }
+        assert!(m.kernels.contains_key("qmatmul"));
+    }
+}

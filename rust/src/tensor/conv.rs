@@ -1,0 +1,168 @@
+//! NHWC 2-D convolution via im2col (SAME padding), with grouped / depthwise
+//! support — mirrors `jax.lax.conv_general_dilated(NHWC, HWIO)` as used by L2
+//! so the rust deployment simulator reproduces the AOT graphs bit-for-shape.
+
+use super::Tensor;
+
+/// SAME-padding output size for stride s.
+fn out_dim(i: usize, s: usize) -> usize {
+    i.div_ceil(s)
+}
+
+/// im2col patch matrix: x[b,h,w,cin] -> [b*oh*ow, k*k*cin_group] for one group
+/// slice along the channel axis. `c0..c0+cg` selects the group's channels.
+fn im2col(
+    x: &Tensor,
+    k: usize,
+    stride: usize,
+    c0: usize,
+    cg: usize,
+) -> (Tensor, usize, usize) {
+    let (b, h, w, cin) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let (oh, ow) = (out_dim(h, stride), out_dim(w, stride));
+    // SAME padding offsets (matches XLA for odd k)
+    let pad_top = ((oh - 1) * stride + k).saturating_sub(h) / 2;
+    let pad_left = ((ow - 1) * stride + k).saturating_sub(w) / 2;
+    let mut cols = vec![0.0f32; b * oh * ow * k * k * cg];
+    let mut idx = 0;
+    for bi in 0..b {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                for ky in 0..k {
+                    let iy = (oy * stride + ky) as isize - pad_top as isize;
+                    for kx in 0..k {
+                        let ix = (ox * stride + kx) as isize - pad_left as isize;
+                        if iy >= 0 && (iy as usize) < h && ix >= 0 && (ix as usize) < w {
+                            let base =
+                                ((bi * h + iy as usize) * w + ix as usize) * cin + c0;
+                            cols[idx..idx + cg].copy_from_slice(&x.data[base..base + cg]);
+                        }
+                        idx += cg;
+                    }
+                }
+            }
+        }
+    }
+    (Tensor::new(vec![b * oh * ow, k * k * cg], cols), oh, ow)
+}
+
+/// NHWC conv, SAME padding.  `w` is HWIO `[k,k,cin/groups,cout]`, `bias` is
+/// `[cout]`.  `groups == cin == cout` gives a depthwise conv.
+pub fn conv2d(x: &Tensor, w: &Tensor, bias: &[f32], stride: usize, groups: usize) -> Tensor {
+    assert_eq!(x.rank(), 4);
+    assert_eq!(w.rank(), 4);
+    let (b, cin) = (x.shape[0], x.shape[3]);
+    let k = w.shape[0];
+    let (wcin, cout) = (w.shape[2], w.shape[3]);
+    assert_eq!(wcin, cin / groups, "HWIO in-channels vs groups");
+    assert_eq!(cout % groups, 0);
+    assert_eq!(bias.len(), cout);
+    let cg_in = cin / groups;
+    let cg_out = cout / groups;
+
+    let (oh, ow);
+    let mut out;
+    if groups == 1 {
+        let (cols, oh_, ow_) = im2col(x, k, stride, 0, cin);
+        oh = oh_;
+        ow = ow_;
+        // weight [k,k,cin,cout] is already [k*k*cin, cout] row-major
+        let wmat = Tensor::new(vec![k * k * cin, cout], w.data.clone());
+        out = cols.matmul(&wmat).data;
+    } else {
+        oh = out_dim(x.shape[1], stride);
+        ow = out_dim(x.shape[2], stride);
+        out = vec![0.0f32; b * oh * ow * cout];
+        for g in 0..groups {
+            let (cols, _, _) = im2col(x, k, stride, g * cg_in, cg_in);
+            // group weight slice: [k,k,cg_in,cout] -> columns [g*cg_out..]
+            let mut wg = vec![0.0f32; k * k * cg_in * cg_out];
+            for r in 0..k * k * cg_in {
+                let src = r * cout + g * cg_out;
+                wg[r * cg_out..(r + 1) * cg_out]
+                    .copy_from_slice(&w.data[src..src + cg_out]);
+            }
+            let wmat = Tensor::new(vec![k * k * cg_in, cg_out], wg);
+            let og = cols.matmul(&wmat);
+            for (row, chunk) in og.data.chunks(cg_out).enumerate() {
+                let dst = row * cout + g * cg_out;
+                out[dst..dst + cg_out].copy_from_slice(chunk);
+            }
+        }
+    }
+    for chunk in out.chunks_mut(cout) {
+        for (o, &bv) in chunk.iter_mut().zip(bias) {
+            *o += bv;
+        }
+    }
+    Tensor::new(vec![b, oh, ow, cout], out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_1x1_conv() {
+        let x = Tensor::new(vec![1, 2, 2, 2], (0..8).map(|i| i as f32).collect());
+        // 1x1 identity kernel [1,1,2,2]
+        let w = Tensor::new(vec![1, 1, 2, 2], vec![1.0, 0.0, 0.0, 1.0]);
+        let y = conv2d(&x, &w, &[0.0, 0.0], 1, 1);
+        assert_eq!(y.data, x.data);
+    }
+
+    #[test]
+    fn bias_is_added() {
+        let x = Tensor::zeros(&[1, 2, 2, 1]);
+        let w = Tensor::new(vec![1, 1, 1, 2], vec![1.0, 1.0]);
+        let y = conv2d(&x, &w, &[1.5, -2.0], 1, 1);
+        assert_eq!(y.shape, vec![1, 2, 2, 2]);
+        assert_eq!(&y.data[0..2], &[1.5, -2.0]);
+    }
+
+    #[test]
+    fn stride2_same_padding_shape() {
+        let x = Tensor::zeros(&[2, 5, 5, 3]);
+        let w = Tensor::zeros(&[3, 3, 3, 4]);
+        let y = conv2d(&x, &w, &[0.0; 4], 2, 1);
+        assert_eq!(y.shape, vec![2, 3, 3, 4]);
+    }
+
+    #[test]
+    fn sum_kernel_3x3_interior() {
+        // all-ones 3x3 kernel on all-ones input: interior pixels see 9
+        let x = Tensor::full(&[1, 4, 4, 1], 1.0);
+        let w = Tensor::full(&[3, 3, 1, 1], 1.0);
+        let y = conv2d(&x, &w, &[0.0], 1, 1);
+        assert_eq!(y.shape, vec![1, 4, 4, 1]);
+        // interior (1,1): full 3x3 window
+        assert_eq!(y.data[(1 * 4 + 1) as usize], 9.0);
+        // corner (0,0): 2x2 window under SAME padding
+        assert_eq!(y.data[0], 4.0);
+    }
+
+    #[test]
+    fn depthwise_independent_channels() {
+        // 2-channel depthwise 1x1: channel i scaled by (i+1)
+        let x = Tensor::new(vec![1, 1, 1, 2], vec![3.0, 5.0]);
+        let w = Tensor::new(vec![1, 1, 1, 2], vec![1.0, 2.0]);
+        let y = conv2d(&x, &w, &[0.0, 0.0], 1, 2);
+        assert_eq!(y.data, vec![3.0, 10.0]);
+    }
+
+    #[test]
+    fn grouped_conv_matches_blockdiag() {
+        // groups=2 over 4 channels == block-diagonal full conv
+        let x = Tensor::new(vec![1, 1, 1, 4], vec![1.0, 2.0, 3.0, 4.0]);
+        // grouped weight [1,1,2,4]: group0 maps ch0..2 -> out0..2, group1 -> out2..4
+        let wg = Tensor::new(
+            vec![1, 1, 2, 4],
+            vec![
+                1.0, 0.0, 5.0, 0.0, // in0: out0 += 1*in0 (g0), out2 += 5*in2 (g1)
+                0.0, 1.0, 0.0, 5.0,
+            ],
+        );
+        let y = conv2d(&x, &wg, &[0.0; 4], 1, 2);
+        assert_eq!(y.data, vec![1.0, 2.0, 15.0, 20.0]);
+    }
+}

@@ -1,0 +1,255 @@
+//! Minimal dense f32 tensor substrate (S1 in DESIGN.md).
+//!
+//! Row-major `Vec<f32>` + shape; exactly the operations the coordinator and
+//! the pure-rust deployment simulator need: elementwise ops, NHWC conv via
+//! im2col ([`conv`]), matmul, reductions.  Small on purpose — the heavy math
+//! runs in AOT-compiled XLA; this substrate exists for heuristics (PPQ, APQ,
+//! CLE, bias correction), analysis figures, and the integer cross-check.
+
+pub mod conv;
+
+use std::fmt;
+
+#[derive(Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor{:?}", self.shape)?;
+        if self.data.len() <= 8 {
+            write!(f, "{:?}", self.data)?;
+        }
+        Ok(())
+    }
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {shape:?} vs data len {}",
+            data.len()
+        );
+        Self { shape, data }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        Self { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    pub fn full(shape: &[usize], v: f32) -> Self {
+        Self { shape: shape.to_vec(), data: vec![v; shape.iter().product()] }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Self { shape: vec![1], data: vec![v] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    pub fn reshape(mut self, shape: &[usize]) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len());
+        self.shape = shape.to_vec();
+        self
+    }
+
+    /// Elementwise map into a new tensor.
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Self {
+        Self { shape: self.shape.clone(), data: self.data.iter().map(|&x| f(x)).collect() }
+    }
+
+    pub fn map_inplace(&mut self, f: impl Fn(f32) -> f32) {
+        for x in &mut self.data {
+            *x = f(*x);
+        }
+    }
+
+    /// Elementwise binary op; shapes must match exactly.
+    pub fn zip(&self, other: &Self, f: impl Fn(f32, f32) -> f32) -> Self {
+        assert_eq!(self.shape, other.shape);
+        Self {
+            shape: self.shape.clone(),
+            data: self.data.iter().zip(&other.data).map(|(&a, &b)| f(a, b)).collect(),
+        }
+    }
+
+    pub fn add(&self, other: &Self) -> Self {
+        self.zip(other, |a, b| a + b)
+    }
+
+    pub fn sub(&self, other: &Self) -> Self {
+        self.zip(other, |a, b| a - b)
+    }
+
+    pub fn relu(&self) -> Self {
+        self.map(|x| x.max(0.0))
+    }
+
+    pub fn relu6(&self) -> Self {
+        self.map(|x| x.clamp(0.0, 6.0))
+    }
+
+    pub fn abs_max(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+
+    pub fn sq_norm(&self) -> f32 {
+        self.data.iter().map(|&x| x * x).sum()
+    }
+
+    pub fn norm(&self) -> f32 {
+        self.sq_norm().sqrt()
+    }
+
+    /// argmax over the last axis, one result per leading-row.
+    pub fn argmax_lastdim(&self) -> Vec<usize> {
+        let n = *self.shape.last().expect("rank >= 1");
+        self.data
+            .chunks(n)
+            .map(|row| {
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i)
+                    .unwrap()
+            })
+            .collect()
+    }
+
+    /// x[m,k] @ w[k,n] -> [m,n]
+    pub fn matmul(&self, w: &Tensor) -> Tensor {
+        assert_eq!(self.rank(), 2);
+        assert_eq!(w.rank(), 2);
+        let (m, k) = (self.shape[0], self.shape[1]);
+        let (k2, n) = (w.shape[0], w.shape[1]);
+        assert_eq!(k, k2);
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            let xrow = &self.data[i * k..(i + 1) * k];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (kk, &xv) in xrow.iter().enumerate() {
+                if xv == 0.0 {
+                    continue;
+                }
+                let wrow = &w.data[kk * n..(kk + 1) * n];
+                for (o, &wv) in orow.iter_mut().zip(wrow) {
+                    *o += xv * wv;
+                }
+            }
+        }
+        Tensor::new(vec![m, n], out)
+    }
+
+    /// NHWC global average pool: [b,h,w,c] -> [b,c]
+    pub fn global_avg_pool(&self) -> Tensor {
+        assert_eq!(self.rank(), 4);
+        let (b, h, w, c) = (self.shape[0], self.shape[1], self.shape[2], self.shape[3]);
+        let inv = 1.0 / (h * w) as f32;
+        let mut out = vec![0.0f32; b * c];
+        for bi in 0..b {
+            for p in 0..h * w {
+                let base = (bi * h * w + p) * c;
+                for ci in 0..c {
+                    out[bi * c + ci] += self.data[base + ci];
+                }
+            }
+        }
+        for v in &mut out {
+            *v *= inv;
+        }
+        Tensor::new(vec![b, c], out)
+    }
+
+    /// Per-last-axis-channel max(|.|): [.., c] -> [c]
+    pub fn abs_max_per_channel(&self) -> Vec<f32> {
+        let c = *self.shape.last().unwrap();
+        let mut out = vec![0.0f32; c];
+        for chunk in self.data.chunks(c) {
+            for (o, &x) in out.iter_mut().zip(chunk) {
+                *o = o.max(x.abs());
+            }
+        }
+        out
+    }
+}
+
+/// Numerically stable softmax over the last axis.
+pub fn softmax_lastdim(t: &Tensor) -> Tensor {
+    let n = *t.shape.last().unwrap();
+    let mut out = t.data.clone();
+    for row in out.chunks_mut(n) {
+        let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut z = 0.0;
+        for v in row.iter_mut() {
+            *v = (*v - mx).exp();
+            z += *v;
+        }
+        for v in row.iter_mut() {
+            *v /= z;
+        }
+    }
+    Tensor::new(t.shape.clone(), out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_small() {
+        let x = Tensor::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let w = Tensor::new(vec![2, 2], vec![1.0, 0.0, 0.0, 1.0]);
+        assert_eq!(x.matmul(&w).data, vec![1.0, 2.0, 3.0, 4.0]);
+        let w2 = Tensor::new(vec![2, 3], vec![1.0, 1.0, 1.0, 1.0, 1.0, 1.0]);
+        assert_eq!(x.matmul(&w2).data, vec![3.0, 3.0, 3.0, 7.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn gap_matches_mean() {
+        let t = Tensor::new(vec![1, 2, 2, 2], vec![1., 2., 3., 4., 5., 6., 7., 8.]);
+        let g = t.global_avg_pool();
+        assert_eq!(g.shape, vec![1, 2]);
+        assert_eq!(g.data, vec![4.0, 5.0]);
+    }
+
+    #[test]
+    fn abs_max_per_channel_works() {
+        let t = Tensor::new(vec![2, 2], vec![1.0, -5.0, -3.0, 2.0]);
+        assert_eq!(t.abs_max_per_channel(), vec![3.0, 5.0]);
+    }
+
+    #[test]
+    fn argmax_rows() {
+        let t = Tensor::new(vec![2, 3], vec![0.1, 0.9, 0.2, 0.7, 0.1, 0.3]);
+        assert_eq!(t.argmax_lastdim(), vec![1, 0]);
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let t = Tensor::new(vec![2, 3], vec![1.0, 2.0, 3.0, -1.0, 0.0, 1.0]);
+        let s = softmax_lastdim(&t);
+        for row in s.data.chunks(3) {
+            assert!((row.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_shape_panics() {
+        Tensor::new(vec![2, 2], vec![1.0]);
+    }
+}

@@ -1,0 +1,3 @@
+//! Small self-contained utilities (the image is offline — see Cargo.toml).
+
+pub mod json;

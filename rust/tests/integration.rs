@@ -1,0 +1,166 @@
+//! Integration tests across the three layers: AOT artifacts executed through
+//! PJRT, cross-checked against the pure-rust substrate.
+//!
+//! These require `make artifacts` to have run; they panic loudly (rather
+//! than silently skipping) if artifacts are missing, because the integration
+//! path IS the product.
+
+use qft::coordinator::{eval, experiments, pretrain, qft as qft_stage, state};
+use qft::data::{Dataset, Split};
+use qft::nn::{fp_forward, ParamMap};
+use qft::quant::deploy::{forward_fakequant, Mode};
+use qft::runtime::Runtime;
+
+fn runtime() -> Runtime {
+    Runtime::load("artifacts").expect("artifacts missing — run `make artifacts`")
+}
+
+fn small_teacher(rt: &Runtime, arch: &str) -> ParamMap {
+    // short pretrain (not the cached full teacher) to keep tests fast
+    let cfg = pretrain::PretrainConfig { steps: 200, ..Default::default() };
+    pretrain::pretrain(rt, arch, &cfg).unwrap().params
+}
+
+#[test]
+fn fp_eval_hlo_matches_rust_forward() {
+    let rt = runtime();
+    let arch = rt.manifest.arch("resnet_tiny").unwrap().clone();
+    let params = state::he_init_params(&arch, 3);
+    let ds = Dataset::new(0);
+    let (x, _, _) = ds.batch(Split::Val, 0, arch.batch);
+
+    let mut inputs = params.to_ordered(&arch.params);
+    inputs.push(x.clone());
+    let out = rt.run("resnet_tiny", "fp_eval", &inputs).unwrap();
+
+    let rust = fp_forward(&arch, &params, &x);
+    let rel = out[0].sub(&rust.logits).norm() / rust.logits.norm().max(1e-6);
+    assert!(rel < 1e-3, "HLO vs rust logits rel err {rel}");
+}
+
+#[test]
+fn fp_stats_hlo_matches_rust_absmax() {
+    let rt = runtime();
+    let arch = rt.manifest.arch("convnet_tiny").unwrap().clone();
+    let params = state::he_init_params(&arch, 4);
+    let ds = Dataset::new(1);
+    let (x, _, _) = ds.batch(Split::Calib, 0, arch.batch);
+
+    let mut inputs = params.to_ordered(&arch.params);
+    inputs.push(x.clone());
+    let out = rt.run("convnet_tiny", "fp_stats", &inputs).unwrap();
+    let rust = state::absmax_from_rust_forward(&arch, &params, &[x]);
+    for (vid, t) in arch.quantized_values.iter().zip(&out) {
+        let want = &rust[vid];
+        for (a, b) in t.data.iter().zip(want) {
+            assert!((a - b).abs() < 1e-3 * b.max(1e-3), "value {vid}: {a} vs {b}");
+        }
+    }
+}
+
+#[test]
+fn q_eval_hlo_matches_rust_fakequant_sim() {
+    let rt = runtime();
+    for mode in [Mode::Lw, Mode::Dch] {
+        let arch = rt.manifest.arch("convnet_tiny").unwrap().clone();
+        let params = small_teacher(&rt, "convnet_tiny");
+        let ds = Dataset::new(2);
+        let batches = vec![ds.batch(Split::Calib, 0, arch.batch).0];
+        let absmax = state::absmax_from_rust_forward(&arch, &params, &batches);
+        let tm = state::init_trainables(
+            &arch,
+            &params,
+            &absmax,
+            mode,
+            state::WeightScaleInit::Uniform,
+            None,
+        );
+        let (x, _, _) = ds.batch(Split::Val, 0, arch.batch);
+        let mut inputs = tm.to_ordered(arch.trainable_specs(mode.key()));
+        inputs.push(x.clone());
+        let out = rt
+            .run("convnet_tiny", &format!("q_eval_{}", mode.key()), &inputs)
+            .unwrap();
+        let (logits, _) = forward_fakequant(&arch, &tm, mode, &x);
+        let rel = out[0].sub(&logits).norm() / logits.norm().max(1e-6);
+        assert!(rel < 5e-3, "{mode:?}: q_eval HLO vs rust sim rel err {rel}");
+    }
+}
+
+#[test]
+fn qft_fast_reduces_loss_and_beats_init() {
+    let rt = runtime();
+    let arch = "convnet_tiny";
+    let teacher = small_teacher(&rt, arch);
+    let mut cfg = qft_stage::QftConfig::fast(Mode::Lw);
+    cfg.epochs = 3;
+    cfg.calib_images = 128;
+    cfg.images_per_epoch = 128;
+    let r = qft_stage::run_qft(&rt, arch, &teacher, &cfg).unwrap();
+    // compare window means: per-step KD loss is batch-noisy
+    let k = 8.min(r.losses.len() / 2);
+    let first: f32 = r.losses[..k].iter().sum::<f32>() / k as f32;
+    let last: f32 = r.losses[r.losses.len() - k..].iter().sum::<f32>() / k as f32;
+    assert!(last < first, "kd loss did not decrease: {first} -> {last}");
+
+    // QFT accuracy >= init accuracy - small tolerance (it should recover)
+    let acc_init = eval::eval_q(&rt, arch, &r.init, Mode::Lw, 256, 0).unwrap();
+    let acc_qft = eval::eval_q(&rt, arch, &r.trainables, Mode::Lw, 256, 0).unwrap();
+    assert!(
+        acc_qft >= acc_init - 0.02,
+        "QFT hurt accuracy: {acc_init} -> {acc_qft}"
+    );
+}
+
+#[test]
+fn frozen_scales_leave_scale_dof_untouched() {
+    let rt = runtime();
+    let arch_name = "convnet_tiny";
+    let arch = rt.manifest.arch(arch_name).unwrap().clone();
+    let teacher = small_teacher(&rt, arch_name);
+    let mut cfg = qft_stage::QftConfig::fast(Mode::Lw);
+    cfg.epochs = 1;
+    cfg.calib_images = 64;
+    cfg.images_per_epoch = 64;
+    cfg.train_scales = false;
+    let r = qft_stage::run_qft(&rt, arch_name, &teacher, &cfg).unwrap();
+    for spec in arch.trainable_specs("lw") {
+        let kind = spec.name.split(':').next().unwrap();
+        if kind == "sv" || kind == "f" {
+            assert_eq!(
+                r.init.get(&spec.name).data,
+                r.trainables.get(&spec.name).data,
+                "{} moved despite frozen scales",
+                spec.name
+            );
+        }
+    }
+    // weights DID move
+    let w0 = &arch.trainable_specs("lw")[0].name;
+    assert_ne!(r.init.get(w0).data, r.trainables.get(w0).data);
+}
+
+#[test]
+fn teacher_cache_roundtrip() {
+    let rt = runtime();
+    let arch = rt.manifest.arch("regnet_tiny").unwrap().clone();
+    let params = state::he_init_params(&arch, 9);
+    let path = rt.dir().join("weights").join("__test_cache.qftw");
+    qft::coordinator::weights_io::save(&path, &arch.params, &params).unwrap();
+    let loaded = qft::coordinator::weights_io::load(&path).unwrap();
+    for spec in &arch.params {
+        assert_eq!(params.get(&spec.name), loaded.get(&spec.name));
+    }
+    std::fs::remove_file(path).ok();
+}
+
+#[test]
+fn experiments_fig3_hierarchy_holds_on_trained_teacher() {
+    let rt = runtime();
+    let rows = experiments::fig3(&rt, "mobilenet_tiny").unwrap();
+    assert!(!rows.is_empty());
+    for r in &rows {
+        assert!(r.e_channelwise <= r.e_layerwise * 1.001, "{}", r.layer);
+        assert!(r.e_dch <= r.e_channelwise * 1.05, "{}", r.layer);
+    }
+}
