@@ -1,0 +1,28 @@
+# QFT reproduction — build / verify entry points.
+
+.PHONY: check build test fmt artifacts bench-serve
+
+# Tier-1 verification: release build, full test suite, formatting.
+check:
+	cargo build --release
+	cargo test -q
+	cargo fmt --check
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+fmt:
+	cargo fmt
+
+# Export the AOT HLO artifacts + manifest (one-time; needs the image's
+# JAX/XLA python environment).
+artifacts:
+	cd python/compile && python3 aot.py --out ../../artifacts
+
+# Serving throughput bench (works with or without artifacts; emits
+# BENCH_serve.json).
+bench-serve:
+	cargo bench --bench serve_throughput

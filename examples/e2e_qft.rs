@@ -72,10 +72,11 @@ fn main() -> Result<()> {
     let ds = qft::data::Dataset::new(0);
     let mut agree = 0usize;
     let mut total = 0usize;
+    let mut scratch = deploy::DeployScratch::new();
     for i in 0..16 {
         let (x, _, _) = ds.batch(qft::data::Split::Val, i * 8, 8);
         let (lf, _) = deploy::forward_fakequant(&arch, &r.trainables, Mode::Lw, &x);
-        let (li, _) = deploy::forward_integer(&arch, &r.trainables, &x);
+        let (li, _) = deploy::forward_integer(&arch, &r.trainables, Mode::Lw, &x, Some(&mut scratch));
         agree += lf
             .argmax_lastdim()
             .iter()

@@ -1,0 +1,77 @@
+//! Bench S — serving throughput over the integer deployment path:
+//! images/sec and p99 latency at 1/2/4 workers, closed-loop load.
+//! Emits `BENCH_serve.json` for trend tracking.
+
+#[path = "util/mod.rs"]
+mod util;
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::Duration;
+
+use qft::quant::deploy::Mode;
+use qft::serve::{run_closed_loop, Registry, ServeConfig};
+use qft::util::json::Value;
+
+fn main() {
+    util::section("qft::serve throughput (integer deployment path)");
+    // prefer a manifest arch when artifacts exist; otherwise the built-in
+    // synthetic arch keeps the bench runnable in any checkout
+    let arch = if Path::new("artifacts/manifest.json").is_file() {
+        "resnet_tiny"
+    } else {
+        "synthetic"
+    };
+    let registry = Registry::load(Path::new("artifacts"), &[(arch.to_string(), Mode::Lw)])
+        .expect("load registry");
+
+    let clients = 16;
+    let per_client = 128;
+    let mut rows = Vec::new();
+    for &workers in &[1usize, 2, 4] {
+        let cfg = ServeConfig {
+            workers,
+            max_batch: 8,
+            max_wait: Duration::from_micros(200),
+            queue_cap: 512,
+        };
+        // warm-up so buffer growth / first-touch doesn't skew the timing
+        let _ = run_closed_loop(&registry, &cfg, clients, 8, 0);
+        let report = util::timed(&format!("{arch}/lw workers={workers}"), || {
+            run_closed_loop(&registry, &cfg, clients, per_client, 0)
+        });
+        println!("  workers={workers}: {report}");
+        rows.push((workers, report));
+    }
+
+    if rows.len() >= 2 {
+        let first = rows.first().unwrap().1.throughput_ips;
+        let last = rows.last().unwrap().1.throughput_ips;
+        println!(
+            "scaling {}x from {} -> {} workers",
+            if first > 0.0 { last / first } else { 0.0 },
+            rows.first().unwrap().0,
+            rows.last().unwrap().0
+        );
+    }
+
+    let json = Value::Arr(
+        rows.iter()
+            .map(|(workers, r)| {
+                let mut m = HashMap::new();
+                m.insert("arch".to_string(), Value::Str(format!("{arch}/lw")));
+                m.insert("workers".to_string(), Value::Num(*workers as f64));
+                m.insert("clients".to_string(), Value::Num(clients as f64));
+                m.insert("requests".to_string(), Value::Num(r.requests as f64));
+                m.insert("images_per_sec".to_string(), Value::Num(r.throughput_ips));
+                m.insert("p50_us".to_string(), Value::Num(r.p50_us as f64));
+                m.insert("p95_us".to_string(), Value::Num(r.p95_us as f64));
+                m.insert("p99_us".to_string(), Value::Num(r.p99_us as f64));
+                m.insert("mean_batch".to_string(), Value::Num(r.mean_batch));
+                Value::Obj(m)
+            })
+            .collect(),
+    );
+    std::fs::write("BENCH_serve.json", json.to_string_compact()).expect("write BENCH_serve.json");
+    println!("wrote BENCH_serve.json");
+}

@@ -85,6 +85,33 @@ pub fn eval_q_rust(
     correct as f32 / total.max(1) as f32
 }
 
+/// Pure-rust *integer-deployment* eval: prepares the frozen constants once
+/// and drives the same batched `forward_integer` path (with reused scratch
+/// buffers) that the serving workers run — so offline accuracy numbers and
+/// the online server execute literally the same code.
+pub fn eval_integer_rust(
+    arch: &crate::nn::ArchSpec,
+    tm: &ParamMap,
+    mode: Mode,
+    n_images: usize,
+    seed: u64,
+) -> f32 {
+    let model = crate::quant::deploy::DeployedModel::prepare(arch, tm, mode);
+    let mut scratch = crate::quant::deploy::DeployScratch::new();
+    let ds = Dataset::new(seed);
+    let b = arch.batch;
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    for i in 0..n_images / b {
+        let (x, _, labels) = ds.batch(Split::Val, (i * b) as u64, b);
+        let logits = model.forward_batch(&x, &mut scratch);
+        let preds = logits.argmax_lastdim();
+        correct += preds.iter().zip(&labels).filter(|(p, l)| p == l).count();
+        total += b;
+    }
+    correct as f32 / total.max(1) as f32
+}
+
 /// Collect calibration activation statistics through the AOT `fp_stats`.
 pub fn calib_stats(
     rt: &Runtime,

@@ -20,6 +20,30 @@
 //!   end-to-end pipeline ([`coordinator`]): pretrain → calibrate → MMSE init
 //!   → (CLE) → QFT finetune → export → eval.
 //!
+//! ## Serving
+//!
+//! The paper freezes all deployment constants offline precisely so the
+//! online integer path is cheap; [`serve`] turns that online path into an
+//! inference server.  [`quant::deploy::DeployedModel::prepare`] runs the
+//! offline subgraph once per (arch × mode); [`serve::Registry`] holds the
+//! frozen models; [`serve::Engine`] runs a std-thread worker pool over a
+//! bounded dynamic micro-batching queue ([`serve::Batcher`], max-batch /
+//! max-wait-µs policy with blocking backpressure), each worker reusing one
+//! [`quant::deploy::DeployScratch`] so steady-state execution does not
+//! allocate.  [`serve::ServeStats`] tracks p50/p95/p99 latency, throughput,
+//! and batch/queue-depth histograms.
+//!
+//! ```text
+//! repro qft --arch resnet_tiny --mode lw        # exports weights/resnet_tiny.lw.qftw
+//! repro serve --arch resnet_tiny --mode lw --workers 4 --max-batch 8
+//! repro bench-serve --workers 4 --concurrency 16 --requests 2048
+//! ```
+//!
+//! Without AOT artifacts both commands fall back to a built-in
+//! [`serve::synthetic_arch`], so the serving stack is exercisable in any
+//! checkout (`cargo bench --bench serve_throughput` emits
+//! `BENCH_serve.json`).
+//!
 //! The public API is consumed by the `repro` CLI, `examples/` and
 //! `rust/benches/` (one bench per paper table/figure).
 
@@ -28,6 +52,7 @@ pub mod data;
 pub mod nn;
 pub mod quant;
 pub mod runtime;
+pub mod serve;
 pub mod tensor;
 pub mod util;
 

@@ -3,22 +3,27 @@
 //!
 //! All compute flows through AOT-compiled HLO artifacts (run `make
 //! artifacts` once); this binary owns process lifecycle, the pipeline, and
-//! metrics.  Examples:
+//! metrics.  The serving commands (`serve`, `bench-serve`) run the pure-rust
+//! integer deployment path and need no PJRT runtime at all.  Examples:
 //!
 //! ```text
 //! repro pretrain --arch resnet_tiny
 //! repro qft --arch mobilenet_tiny --mode lw --cle
 //! repro table1 --archs resnet_tiny,mobilenet_tiny --fast
-//! repro fig5 --arch regnet_tiny
+//! repro serve --arch resnet_tiny --mode lw --workers 4
+//! repro bench-serve --workers 4 --concurrency 16
 //! ```
 
 use std::collections::HashMap;
+use std::path::Path;
+use std::time::Duration;
 
 use anyhow::{bail, Result};
 
 use qft::coordinator::{eval, experiments, metrics, pretrain, qft as qft_stage};
 use qft::quant::deploy::Mode;
 use qft::runtime::Runtime;
+use qft::serve::{run_closed_loop, Engine, Registry, ServeConfig};
 
 const USAGE: &str = "\
 repro — QFT post-training quantization pipeline
@@ -29,7 +34,8 @@ COMMANDS:
   pretrain  --arch A [--steps N]          pretrain + cache the FP teacher
   eval-fp   --arch A                      evaluate the cached FP teacher
   qft       --arch A [--mode lw|dch] [--cle] [--frozen-scales]
-            [--lr F] [--ce-mix F] [--fast]   run the full QFT pipeline
+            [--lr F] [--ce-mix F] [--fast]   run the full QFT pipeline and
+                                          export weights/A.MODE.qftw for serving
   table1    [--archs A,B,..] [--fast]     Table 1: QFT vs PTQ baselines
   table2    [--archs A,B,..]              Table 2: accuracy without QFT
   fig3      [--arch A]                    kernel error vs granularity
@@ -39,18 +45,47 @@ COMMANDS:
   fig8      [--archs A,B] [--fast]        CLE-init x trained-scales 2x2
   fig9      [--archs A,B] [--fast]        dch frozen vs trained L/R scales
   fig12     [--arch A] [--fast]           per-layer kernel error lw/CLE/QFT/chw
+
+SERVING (pure-rust integer deployment path; no PJRT needed):
+  serve     [--arch A] [--mode lw|dch] [--workers N] [--max-batch B]
+            [--max-wait-us U] [--queue-cap Q] [--requests R]
+                                          load A/MODE into the registry, run a
+                                          closed-loop smoke client over R val
+                                          images, report accuracy + latency
+  bench-serve [--arch A] [--mode lw|dch] [--workers N] [--max-batch B]
+            [--max-wait-us U] [--queue-cap Q] [--concurrency C]
+            [--requests R]                C closed-loop clients x R requests
+                                          each; reports images/sec + p50/95/99
+
+Weights for serving resolve from weights/A.MODE.qftw (qft export), else
+weights/A.qftw (FP teacher + offline PTQ init), else he-init smoke weights.
+Without artifacts/manifest.json a built-in `synthetic` arch is served.
 ";
 
-/// flags: `--key value` pairs plus boolean `--flag`s.
+/// Every `--key value` option any command accepts (unknown keys are errors).
+const KV_KEYS: &[&str] = &[
+    "arch", "archs", "steps", "lr", "mode", "ce-mix", "workers", "max-batch",
+    "max-wait-us", "queue-cap", "requests", "concurrency",
+];
+/// Every boolean `--flag`.
+const BOOL_FLAGS: &[&str] = &["cle", "frozen-scales", "fast"];
+/// Every command (validated before any runtime/artifact work happens).
+const COMMANDS: &[&str] = &[
+    "pretrain", "eval-fp", "qft", "table1", "table2", "fig3", "fig5", "fig6",
+    "fig7", "fig8", "fig9", "fig12", "serve", "bench-serve",
+];
+
+/// flags: `--key value` pairs plus boolean `--flag`s.  Duplicates and
+/// unknown options are hard errors (no silent last-wins).
 struct Args {
     kv: HashMap<String, String>,
     flags: Vec<String>,
 }
 
 impl Args {
-    fn parse(argv: &[String], bool_flags: &[&str]) -> Result<Args> {
+    fn parse(argv: &[String], bool_flags: &[&str], kv_keys: &[&str]) -> Result<Args> {
         let mut kv = HashMap::new();
-        let mut flags = Vec::new();
+        let mut flags: Vec<String> = Vec::new();
         let mut i = 0;
         while i < argv.len() {
             let a = &argv[i];
@@ -58,14 +93,21 @@ impl Args {
                 bail!("unexpected argument {a:?}\n{USAGE}");
             };
             if bool_flags.contains(&name) {
+                if flags.iter().any(|f| f == name) {
+                    bail!("duplicate flag --{name}");
+                }
                 flags.push(name.to_string());
                 i += 1;
-            } else {
+            } else if kv_keys.contains(&name) {
                 let Some(v) = argv.get(i + 1) else {
                     bail!("--{name} requires a value");
                 };
-                kv.insert(name.to_string(), v.clone());
+                if kv.insert(name.to_string(), v.clone()).is_some() {
+                    bail!("duplicate option --{name} (each option may be given once)");
+                }
                 i += 2;
+            } else {
+                bail!("unknown option --{name}\n{USAGE}");
             }
         }
         Ok(Args { kv, flags })
@@ -92,6 +134,13 @@ impl Args {
             None => Ok(default),
         }
     }
+
+    fn usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.kv.get(key) {
+            Some(v) => Ok(v.parse()?),
+            None => Ok(default),
+        }
+    }
 }
 
 fn parse_mode(s: &str) -> Result<Mode> {
@@ -113,28 +162,108 @@ fn main() -> Result<()> {
         print!("{USAGE}");
         return Ok(());
     };
+    if !COMMANDS.contains(&cmd.as_str()) {
+        bail!("unknown command {cmd:?}\n{USAGE}");
+    }
     let rest = &argv[1..];
-    let args = Args::parse(rest, &["cle", "frozen-scales", "fast"])?;
-    let fast = args.flag("fast");
-
-    let rt = Runtime::load(&artifacts)?;
-    eprintln!("platform: {}", rt.platform());
+    let args = Args::parse(rest, BOOL_FLAGS, KV_KEYS)?;
 
     match cmd.as_str() {
+        // the serving commands run the pure-rust deployment path and must
+        // work without PJRT/artifacts
+        "serve" => cmd_serve(&artifacts, &args),
+        "bench-serve" => cmd_bench_serve(&artifacts, &args),
+        _ => {
+            let rt = Runtime::load(&artifacts)?;
+            eprintln!("platform: {}", rt.platform());
+            run_pipeline_cmd(&rt, &cmd, &args)
+        }
+    }
+}
+
+fn serve_cfg(args: &Args) -> Result<ServeConfig> {
+    Ok(ServeConfig {
+        workers: args.usize("workers", 2)?,
+        max_batch: args.usize("max-batch", 8)?,
+        max_wait: Duration::from_micros(args.usize("max-wait-us", 200)? as u64),
+        queue_cap: args.usize("queue-cap", 256)?,
+    })
+}
+
+fn cmd_serve(artifacts: &str, args: &Args) -> Result<()> {
+    let arch = args.get("arch", "synthetic");
+    let mode = parse_mode(&args.get("mode", "lw"))?;
+    let requests = args.usize("requests", 512)?;
+    let cfg = serve_cfg(args)?;
+
+    let registry = Registry::load(Path::new(artifacts), &[(arch.clone(), mode)])?;
+    let slot = 0;
+    let engine = Engine::start(registry.clone(), &cfg);
+    let client = engine.client();
+    let ds = qft::data::Dataset::new(0);
+    let mut correct = 0usize;
+    for i in 0..requests {
+        let (img, label) = ds.sample(qft::data::Split::Val, i as u64);
+        let rep = client.infer(slot, img)?;
+        if rep.top1 == label {
+            correct += 1;
+        }
+    }
+    let report = engine.shutdown();
+    println!("serve {arch}/{}: {report}", mode.key());
+    println!(
+        "top-1 over {requests} served requests: {:.1}%",
+        correct as f32 / requests.max(1) as f32 * 100.0
+    );
+    Ok(())
+}
+
+fn cmd_bench_serve(artifacts: &str, args: &Args) -> Result<()> {
+    let arch = args.get("arch", "synthetic");
+    let mode = parse_mode(&args.get("mode", "lw"))?;
+    let concurrency = args.usize("concurrency", 16)?;
+    let requests = args.usize("requests", 2048)?;
+    let cfg = serve_cfg(args)?;
+    let per_client = requests.div_ceil(concurrency.max(1));
+
+    let registry = Registry::load(Path::new(artifacts), &[(arch.clone(), mode)])?;
+    // warm-up pass so first-touch buffer growth doesn't skew the measurement
+    let _ = run_closed_loop(&registry, &cfg, concurrency.max(1), 4, 0);
+    let report = run_closed_loop(&registry, &cfg, concurrency.max(1), per_client, 0);
+    println!(
+        "bench-serve {arch}/{} workers={} max-batch={} concurrency={}:",
+        mode.key(),
+        cfg.workers,
+        cfg.max_batch,
+        concurrency
+    );
+    println!("  {report}");
+    for (lo, hi, n) in report.batch_hist.rows() {
+        println!("  batch size {lo:>4}..{hi:<4} x{n}");
+    }
+    for (lo, hi, n) in report.depth_hist.rows() {
+        println!("  queue depth {lo:>4}..{hi:<4} x{n}");
+    }
+    Ok(())
+}
+
+fn run_pipeline_cmd(rt: &Runtime, cmd: &str, args: &Args) -> Result<()> {
+    let fast = args.flag("fast");
+    match cmd {
         "pretrain" => {
             let arch = args.req("arch")?;
             let steps: usize = args.get("steps", "6000").parse()?;
             let base_lr = args.f32("lr", 1.5e-3)?;
             let cfg = pretrain::PretrainConfig { steps, base_lr, ..Default::default() };
-            let span = metrics::Span::start(&rt, "pretrain");
-            let r = pretrain::pretrain(&rt, &arch, &cfg)?;
+            let span = metrics::Span::start(rt, "pretrain");
+            let r = pretrain::pretrain(rt, &arch, &cfg)?;
             let arch_spec = rt.manifest.arch(&arch)?;
             qft::coordinator::weights_io::save(
                 rt.dir().join("weights").join(format!("{arch}.qftw")),
                 &arch_spec.params,
                 &r.params,
             )?;
-            let acc = eval::eval_fp(&rt, &arch, &r.params, experiments::EVAL_IMAGES, 0)?;
+            let acc = eval::eval_fp(rt, &arch, &r.params, experiments::EVAL_IMAGES, 0)?;
             println!("{}", span.finish());
             println!(
                 "{arch}: loss {:.3} -> {:.3}, fp top-1 {:.1}%",
@@ -145,13 +274,13 @@ fn main() -> Result<()> {
         }
         "eval-fp" => {
             let arch = args.req("arch")?;
-            let t = experiments::teacher_ctx(&rt, &arch)?;
+            let t = experiments::teacher_ctx(rt, &arch)?;
             println!("{arch}: fp top-1 {:.1}%", t.fp_acc * 100.0);
         }
         "qft" => {
             let arch = args.req("arch")?;
             let mode = parse_mode(&args.get("mode", "lw"))?;
-            let t = experiments::teacher_ctx(&rt, &arch)?;
+            let t = experiments::teacher_ctx(rt, &arch)?;
             let mut cfg = if fast {
                 qft_stage::QftConfig::fast(mode)
             } else {
@@ -161,11 +290,23 @@ fn main() -> Result<()> {
             cfg.train_scales = !args.flag("frozen-scales");
             cfg.base_lr = args.f32("lr", cfg.base_lr)?;
             cfg.ce_mix = args.f32("ce-mix", 0.0)?;
-            let span = metrics::Span::start(&rt, "qft");
-            let r = qft_stage::run_qft(&rt, &arch, &t.params, &cfg)?;
+            let span = metrics::Span::start(rt, "qft");
+            let r = qft_stage::run_qft(rt, &arch, &t.params, &cfg)?;
             let report = span.finish();
-            let acc_init = eval::eval_q(&rt, &arch, &r.init, mode, experiments::EVAL_IMAGES, 0)?;
-            let acc = eval::eval_q(&rt, &arch, &r.trainables, mode, experiments::EVAL_IMAGES, 0)?;
+            let acc_init = eval::eval_q(rt, &arch, &r.init, mode, experiments::EVAL_IMAGES, 0)?;
+            let acc = eval::eval_q(rt, &arch, &r.trainables, mode, experiments::EVAL_IMAGES, 0)?;
+            // export the deployment trainable set for `repro serve`
+            let arch_spec = rt.manifest.arch(&arch)?;
+            let export = rt
+                .dir()
+                .join("weights")
+                .join(format!("{arch}.{}.qftw", cfg.mode.key()));
+            qft::coordinator::weights_io::save(
+                &export,
+                arch_spec.trainable_specs(cfg.mode.key()),
+                &r.trainables,
+            )?;
+            eprintln!("exported deployment trainables -> {export:?}");
             println!("{report}");
             println!(
                 "{arch} [{}]: fp {:.1}% | init {:.1}% (degr {:.1}) | QFT {:.1}% (degr {:.1}) | kd-loss {:.4} -> {:.4}",
@@ -185,18 +326,18 @@ fn main() -> Result<()> {
                 "resnet_tiny,mobilenet_tiny,regnet_tiny,mnasnet_tiny,resnet_wide,regnet_wide",
             );
             let names: Vec<&str> = archs.split(',').collect();
-            let rows = experiments::table1(&rt, &names, fast)?;
+            let rows = experiments::table1(rt, &names, fast)?;
             experiments::print_rows("Table 1: QFT vs PTQ baselines", &rows);
         }
         "table2" => {
             let archs = args.get("archs", "resnet_tiny,mobilenet_tiny,regnet_tiny");
             let names: Vec<&str> = archs.split(',').collect();
-            let rows = experiments::table2(&rt, &names)?;
+            let rows = experiments::table2(rt, &names)?;
             experiments::print_rows("Table 2: accuracy without QFT", &rows);
         }
         "fig3" => {
             let arch = args.get("arch", "mobilenet_tiny");
-            let rows = experiments::fig3(&rt, &arch)?;
+            let rows = experiments::fig3(rt, &arch)?;
             println!("\n=== Fig. 3: kernel MMSE error vs granularity ({arch}) ===");
             println!("{:<10} {:>10} {:>12} {:>10}", "layer", "layerwise", "channelwise", "dCh");
             for r in rows {
@@ -209,36 +350,36 @@ fn main() -> Result<()> {
         "fig5" => {
             let arch = args.get("arch", "regnet_tiny");
             let sizes = [64u64, 128, 256, 512, 1024];
-            let rows = experiments::fig5(&rt, &arch, &sizes, fast)?;
+            let rows = experiments::fig5(rt, &arch, &sizes, fast)?;
             experiments::print_rows("Fig. 5: dataset size ablation", &rows);
         }
         "fig6" => {
             let arch = args.get("arch", "mobilenet_tiny");
             let mixes = [0.0, 0.1, 0.3, 0.5, 1.0];
-            let rows = experiments::fig6(&rt, &arch, &mixes, fast)?;
+            let rows = experiments::fig6(rt, &arch, &mixes, fast)?;
             experiments::print_rows("Fig. 6: CE mixing ablation", &rows);
         }
         "fig7" => {
             let arch = args.get("arch", "regnet_tiny");
             let lrs = [1e-5, 3e-5, 1e-4, 3e-4, 1e-3, 3e-3, 1e-2];
-            let rows = experiments::fig7(&rt, &arch, &lrs, fast)?;
+            let rows = experiments::fig7(rt, &arch, &lrs, fast)?;
             experiments::print_rows("Fig. 7: base LR sweep", &rows);
         }
         "fig8" => {
             let archs = args.get("archs", "resnet_tiny,mobilenet_tiny");
             let names: Vec<&str> = archs.split(',').collect();
-            let rows = experiments::fig8(&rt, &names, fast)?;
+            let rows = experiments::fig8(rt, &names, fast)?;
             experiments::print_rows("Fig. 8: CLE init x trained scales (lw)", &rows);
         }
         "fig9" => {
             let archs = args.get("archs", "resnet_tiny,mobilenet_tiny");
             let names: Vec<&str> = archs.split(',').collect();
-            let rows = experiments::fig9(&rt, &names, fast)?;
+            let rows = experiments::fig9(rt, &names, fast)?;
             experiments::print_rows("Fig. 9: dch frozen vs trained L/R scales", &rows);
         }
         "fig12" => {
             let arch = args.get("arch", "regnet_tiny");
-            let rows = experiments::fig12(&rt, &arch, fast)?;
+            let rows = experiments::fig12(rt, &arch, fast)?;
             println!("\n=== Fig. 12: kernel error by scale optimization ({arch}) ===");
             println!(
                 "{:<10} {:>10} {:>8} {:>8} {:>12}",

@@ -5,15 +5,31 @@
 //! * [`forward_fakequant`] — the FP32-represented simulation, a rust mirror
 //!   of the L2 `qft.student_forward` graph (used for parity tests against
 //!   the AOT `q_eval` executable and for the analysis figures).
-//! * [`forward_integer`] — the fully-integer online pipeline: u8/i8 codes,
-//!   integer accumulation, quantized bias at accumulator scale (Eq. 8),
-//!   multiplicative recode by F̂ (Eq. 11), integer activation.  This is what
-//!   actually ships on the accelerator; the gap between the two paths is the
+//! * [`forward_integer`] / [`forward_integer_batch`] — the deployed online
+//!   pipeline.  In `lw` mode it is fully integer: u8/i8 codes, integer
+//!   accumulation, quantized bias at accumulator scale (Eq. 8),
+//!   multiplicative recode by F̂ (Eq. 11), integer activation.  In `dch`
+//!   mode (W4A32) weights ship as 4b codes on the doubly-channelwise grid
+//!   and accumulation stays FP32, so the path is bit-identical to the
+//!   fake-quant twin.  The gap between lw-integer and fake-quant is the
 //!   bias/threshold rounding the paper folds under "additional lossy
 //!   elements".
+//!
+//! The deployment split mirrors the paper's offline/online subgraphs:
+//! [`DeployedModel::prepare`] runs the *offline* subgraph once (kernel
+//! co-vectors via Eqs. 2-4, integer weight/bias codes, recode factors,
+//! integer relu6 thresholds) and freezes everything; the *online*
+//! [`DeployedModel::forward_batch`] then never touches [`kernel_covectors`]
+//! or the trainable map, and borrows every intermediate buffer from a
+//! caller-owned [`DeployScratch`] so steady-state serving allocates nothing
+//! on the hot path.  Batched and single-image execution share one
+//! implementation and are bit-exactly equal per image.
+
+use std::collections::HashMap;
 
 use crate::nn::{apply_act, ArchSpec, OpKind, ParamMap};
-use crate::tensor::{conv::conv2d, Tensor};
+use crate::tensor::conv::{conv2d, conv2d_into, ConvScratch};
+use crate::tensor::Tensor;
 use crate::WEIGHT_QMAX;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -165,149 +181,430 @@ pub fn forward_fakequant(
     (logits.unwrap(), feat.unwrap())
 }
 
-/// Fully-integer forward (lw mode): codes are f32-held integers (exact up to
-/// 2^24, far above the worst-case accumulator here).
-pub fn forward_integer(arch: &ArchSpec, tm: &ParamMap, x: &Tensor) -> (Tensor, Tensor) {
-    // per-value integer codes
-    let mut codes: std::collections::HashMap<usize, Tensor> = Default::default();
-    let enc = |v: usize| -> Vec<f32> { sv_of(tm, v) };
+// ------------------------------------------------------------------ deployed
 
-    {
-        let sv = enc(0);
-        let (qmin, qmax) = act_range(arch, 0);
-        let c = *x.shape.last().unwrap();
-        let data = x
-            .data
-            .iter()
-            .enumerate()
-            .map(|(i, &val)| (val / sv[i % c]).round().clamp(qmin, qmax))
-            .collect();
-        codes.insert(0, Tensor::new(x.shape.clone(), data));
-    }
-
-    let mut logits = None;
-    let mut feat = None;
-    for op in &arch.ops {
-        match op.kind() {
-            OpKind::Conv => {
-                let w = tm.get(&format!("w:{}", op.name));
-                let b = tm.get(&format!("b:{}", op.name));
-                let f = pos(tm.get(&format!("f:{}", op.name)).data[0]);
-                let sv = enc(op.out);
-                let (s_l, s_r) = kernel_covectors(arch, tm, Mode::Lw, op);
-                // integer weight codes on the Eq. 2 grid
-                let wcode = match &s_l {
-                    Some(l) => {
-                        let (cin, cout) = (w.shape[2], w.shape[3]);
-                        let data = w
-                            .data
-                            .iter()
-                            .enumerate()
-                            .map(|(idx, &x)| {
-                                let j = idx % cout;
-                                let i = (idx / cout) % cin;
-                                (x / (l[i] * s_r[j])).round().clamp(-WEIGHT_QMAX, WEIGHT_QMAX)
-                            })
-                            .collect();
-                        Tensor::new(w.shape.clone(), data)
-                    }
-                    None => {
-                        let cout = w.shape[3];
-                        let data = w
-                            .data
-                            .iter()
-                            .enumerate()
-                            .map(|(idx, &x)| {
-                                (x / s_r[idx % cout]).round().clamp(-WEIGHT_QMAX, WEIGHT_QMAX)
-                            })
-                            .collect();
-                        Tensor::new(w.shape.clone(), data)
-                    }
-                };
-                // accumulator scale per n: S_acc = S_v * F (Eq. 11)
-                let s_acc: Vec<f32> = sv.iter().map(|&s| s * f).collect();
-                // quantized bias at accumulator scale (Eq. 7, zero-points = 0
-                // in our symmetric-activation-code formulation)
-                let bcode: Vec<f32> = b
-                    .data
-                    .iter()
-                    .zip(&s_acc)
-                    .map(|(&bv, &s)| (bv / s).round())
-                    .collect();
-                let mut acc = conv2d(&codes[&op.inp], &wcode, &bcode, op.stride, op.groups);
-                // integer activation
-                match op.act.as_str() {
-                    "relu" => acc.map_inplace(|v| v.max(0.0)),
-                    "relu6" => {
-                        let cout = op.cout;
-                        let thr: Vec<f32> =
-                            s_acc.iter().map(|&s| (6.0 / s).round()).collect();
-                        for (i, v) in acc.data.iter_mut().enumerate() {
-                            *v = v.clamp(0.0, thr[i % cout]);
-                        }
-                    }
-                    _ => {}
-                }
-                // recode: out_code = clip(round(acc * F̂)), F̂ = S_acc/S_v = F
-                let (qmin, qmax) = act_range(arch, op.out);
-                acc.map_inplace(|v| (v * f).round().clamp(qmin, qmax));
-                codes.insert(op.out, acc);
-            }
-            OpKind::Add => {
-                // lossless FP ew-add (paper App. D item 1): decode, add,
-                // re-encode with the output's own scale
-                let dec = |vid: usize| -> Tensor {
-                    let sv = enc(vid);
-                    let c = *codes[&vid].shape.last().unwrap();
-                    let data = codes[&vid]
-                        .data
-                        .iter()
-                        .enumerate()
-                        .map(|(i, &q)| q * sv[i % c])
-                        .collect();
-                    Tensor::new(codes[&vid].shape.clone(), data)
-                };
-                let a = apply_act(&dec(op.a).add(&dec(op.b)), &op.act);
-                let sv = enc(op.out);
-                let (qmin, qmax) = act_range(arch, op.out);
-                let c = *a.shape.last().unwrap();
-                let data = a
-                    .data
-                    .iter()
-                    .enumerate()
-                    .map(|(i, &v)| (v / sv[i % c]).round().clamp(qmin, qmax))
-                    .collect();
-                codes.insert(op.out, Tensor::new(a.shape.clone(), data));
-            }
-            OpKind::Gap => {
-                // decode to FP for the head
-                let sv = enc(op.inp);
-                let c = *codes[&op.inp].shape.last().unwrap();
-                let data = codes[&op.inp]
-                    .data
-                    .iter()
-                    .enumerate()
-                    .map(|(i, &q)| q * sv[i % c])
-                    .collect();
-                let fp = Tensor::new(codes[&op.inp].shape.clone(), data);
-                feat = Some(fp.clone());
-                codes.insert(op.out, fp.global_avg_pool());
-            }
-            OpKind::Fc => {
-                let w = tm.get(&format!("w:{}", op.name));
-                let b = tm.get(&format!("b:{}", op.name));
-                let mut y = codes[&op.inp].matmul(w);
-                for row in y.data.chunks_mut(b.data.len()) {
-                    for (v, &bv) in row.iter_mut().zip(&b.data) {
-                        *v += bv;
-                    }
-                }
-                logits = Some(y.clone());
-                codes.insert(op.out, y);
-            }
+/// Integer weight codes on the Eq. 2 grid (outer-product or per-out-channel).
+fn kernel_codes(w: &Tensor, s_l: &Option<Vec<f32>>, s_r: &[f32]) -> Tensor {
+    match s_l {
+        Some(l) => {
+            let (cin, cout) = (w.shape[2], w.shape[3]);
+            let data = w
+                .data
+                .iter()
+                .enumerate()
+                .map(|(idx, &x)| {
+                    let j = idx % cout;
+                    let i = (idx / cout) % cin;
+                    (x / (l[i] * s_r[j])).round().clamp(-WEIGHT_QMAX, WEIGHT_QMAX)
+                })
+                .collect();
+            Tensor::new(w.shape.clone(), data)
+        }
+        None => {
+            let cout = w.shape[3];
+            let data = w
+                .data
+                .iter()
+                .enumerate()
+                .map(|(idx, &x)| (x / s_r[idx % cout]).round().clamp(-WEIGHT_QMAX, WEIGHT_QMAX))
+                .collect();
+            Tensor::new(w.shape.clone(), data)
         }
     }
-    (logits.unwrap(), feat.unwrap())
+}
+
+fn act_scalar(act: &str, v: f32) -> f32 {
+    match act {
+        "relu" => v.max(0.0),
+        "relu6" => v.clamp(0.0, 6.0),
+        _ => v,
+    }
+}
+
+/// One conv lowered to frozen deployment constants.  `lw`: `kernel` holds
+/// integer codes, `bias` the integer bias at accumulator scale, plus the
+/// recode factor and integer relu6 thresholds.  `dch`: `kernel` holds the
+/// dequantized 4b weights and everything runs at FP32 accumulator precision.
+struct PreparedConv {
+    inp: usize,
+    out: usize,
+    stride: usize,
+    groups: usize,
+    cout: usize,
+    act: String,
+    kernel: Tensor,
+    bias: Vec<f32>,
+    /// lw only: per-channel integer clip(6/S_acc) thresholds for relu6.
+    relu6_thr: Option<Vec<f32>>,
+    /// lw only: (F̂, qmin, qmax) for the multiplicative recode (Eq. 11).
+    recode: Option<(f32, f32, f32)>,
+}
+
+/// lw decode/re-encode scales around a residual add (App. D item 1).
+struct AddScales {
+    sa: Vec<f32>,
+    sb: Vec<f32>,
+    sout: Vec<f32>,
+    qmin: f32,
+    qmax: f32,
+}
+
+enum PreparedOp {
+    Conv(PreparedConv),
+    Add { a: usize, b: usize, out: usize, act: String, dec: Option<AddScales> },
+    Gap { inp: usize, out: usize, dec: Option<Vec<f32>> },
+    Fc { inp: usize, w: Tensor, bias: Vec<f32> },
+}
+
+/// Reusable buffers for the integer forward: one activation tensor per graph
+/// value plus the conv im2col scratch and the gap decode buffer.  After the
+/// first call at a given batch size the online path allocates nothing.
+pub struct DeployScratch {
+    vals: HashMap<usize, Tensor>,
+    conv: ConvScratch,
+    dec: Tensor,
+}
+
+impl Default for DeployScratch {
+    fn default() -> Self {
+        DeployScratch {
+            vals: HashMap::new(),
+            conv: ConvScratch::new(),
+            dec: Tensor { shape: vec![0], data: Vec::new() },
+        }
+    }
+}
+
+impl DeployScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+fn take_val(vals: &mut HashMap<usize, Tensor>, id: usize) -> Tensor {
+    vals.remove(&id).unwrap_or(Tensor { shape: vec![0], data: Vec::new() })
+}
+
+/// A network lowered for deployment: every constant the online subgraph needs
+/// (weight/bias codes, recode factors, activation grids), frozen offline so
+/// serving workers never re-derive anything per request.
+pub struct DeployedModel {
+    pub arch_name: String,
+    pub mode: Mode,
+    pub input_hw: usize,
+    pub input_ch: usize,
+    pub num_classes: usize,
+    /// lw input encode: per-channel scales + activation grid.
+    enc0: Option<(Vec<f32>, f32, f32)>,
+    ops: Vec<PreparedOp>,
+}
+
+impl DeployedModel {
+    /// Run the offline subgraph (Eqs. 2-4, 7, 11) once and freeze the result.
+    pub fn prepare(arch: &ArchSpec, tm: &ParamMap, mode: Mode) -> Self {
+        let enc0 = match mode {
+            Mode::Lw => {
+                let (qmin, qmax) = act_range(arch, 0);
+                Some((sv_of(tm, 0), qmin, qmax))
+            }
+            Mode::Dch => None,
+        };
+        let mut ops = Vec::with_capacity(arch.ops.len());
+        for op in &arch.ops {
+            match op.kind() {
+                OpKind::Conv => {
+                    let w = tm.get(&format!("w:{}", op.name));
+                    let b = tm.get(&format!("b:{}", op.name));
+                    let (s_l, s_r) = kernel_covectors(arch, tm, mode, op);
+                    let pc = match mode {
+                        Mode::Lw => {
+                            let f = pos(tm.get(&format!("f:{}", op.name)).data[0]);
+                            let sv = sv_of(tm, op.out);
+                            // accumulator scale per n: S_acc = S_v * F (Eq. 11)
+                            let s_acc: Vec<f32> = sv.iter().map(|&s| s * f).collect();
+                            // quantized bias at accumulator scale (Eq. 7,
+                            // zero-points = 0 in our symmetric-code form)
+                            let bias = b
+                                .data
+                                .iter()
+                                .zip(&s_acc)
+                                .map(|(&bv, &s)| (bv / s).round())
+                                .collect();
+                            let relu6_thr = (op.act == "relu6")
+                                .then(|| s_acc.iter().map(|&s| (6.0 / s).round()).collect());
+                            let (qmin, qmax) = act_range(arch, op.out);
+                            PreparedConv {
+                                inp: op.inp,
+                                out: op.out,
+                                stride: op.stride,
+                                groups: op.groups,
+                                cout: op.cout,
+                                act: op.act.clone(),
+                                kernel: kernel_codes(w, &s_l, &s_r),
+                                bias,
+                                relu6_thr,
+                                recode: Some((f, qmin, qmax)),
+                            }
+                        }
+                        Mode::Dch => PreparedConv {
+                            inp: op.inp,
+                            out: op.out,
+                            stride: op.stride,
+                            groups: op.groups,
+                            cout: op.cout,
+                            act: op.act.clone(),
+                            // W4A32: ship 4b codes, accumulate FP32 over the
+                            // dequantized kernel (== the fake-quant twin)
+                            kernel: fq_kernel(w, &s_l, &s_r),
+                            bias: b.data.clone(),
+                            relu6_thr: None,
+                            recode: None,
+                        },
+                    };
+                    ops.push(PreparedOp::Conv(pc));
+                }
+                OpKind::Add => {
+                    let dec = match mode {
+                        Mode::Lw => {
+                            let (qmin, qmax) = act_range(arch, op.out);
+                            Some(AddScales {
+                                sa: sv_of(tm, op.a),
+                                sb: sv_of(tm, op.b),
+                                sout: sv_of(tm, op.out),
+                                qmin,
+                                qmax,
+                            })
+                        }
+                        Mode::Dch => None,
+                    };
+                    ops.push(PreparedOp::Add {
+                        a: op.a,
+                        b: op.b,
+                        out: op.out,
+                        act: op.act.clone(),
+                        dec,
+                    });
+                }
+                OpKind::Gap => {
+                    let dec = match mode {
+                        Mode::Lw => Some(sv_of(tm, op.inp)),
+                        Mode::Dch => None,
+                    };
+                    ops.push(PreparedOp::Gap { inp: op.inp, out: op.out, dec });
+                }
+                OpKind::Fc => {
+                    ops.push(PreparedOp::Fc {
+                        inp: op.inp,
+                        w: tm.get(&format!("w:{}", op.name)).clone(),
+                        bias: tm.get(&format!("b:{}", op.name)).data.clone(),
+                    });
+                }
+            }
+        }
+        DeployedModel {
+            arch_name: arch.name.clone(),
+            mode,
+            input_hw: arch.input_hw,
+            input_ch: arch.input_ch,
+            num_classes: arch.num_classes,
+            enc0,
+            ops,
+        }
+    }
+
+    /// Pixels per image (`hw*hw*ch`), the request payload contract.
+    pub fn image_len(&self) -> usize {
+        self.input_hw * self.input_hw * self.input_ch
+    }
+
+    /// Batched online forward: logits `[batch, classes]`.  Results are
+    /// bit-exactly independent of how images are grouped into batches.
+    pub fn forward_batch(&self, x: &Tensor, scratch: &mut DeployScratch) -> Tensor {
+        self.exec(x, scratch, false).0
+    }
+
+    /// As [`Self::forward_batch`] but also returns the decoded backbone
+    /// feature map (the KD target tensor).
+    pub fn forward_batch_feat(
+        &self,
+        x: &Tensor,
+        scratch: &mut DeployScratch,
+    ) -> (Tensor, Tensor) {
+        let (logits, feat) = self.exec(x, scratch, true);
+        (logits, feat.expect("arch has gap"))
+    }
+
+    fn exec(
+        &self,
+        x: &Tensor,
+        scratch: &mut DeployScratch,
+        want_feat: bool,
+    ) -> (Tensor, Option<Tensor>) {
+        assert_eq!(x.rank(), 4, "input must be [b,h,w,c]");
+        // input: encode to codes (lw) or pass through (dch)
+        {
+            let mut v0 = take_val(&mut scratch.vals, 0);
+            v0.data.clear();
+            match &self.enc0 {
+                Some((sv, qmin, qmax)) => {
+                    let c = *x.shape.last().unwrap();
+                    v0.data.extend(
+                        x.data
+                            .iter()
+                            .enumerate()
+                            .map(|(i, &val)| (val / sv[i % c]).round().clamp(*qmin, *qmax)),
+                    );
+                }
+                None => v0.data.extend_from_slice(&x.data),
+            }
+            v0.shape = x.shape.clone();
+            scratch.vals.insert(0, v0);
+        }
+
+        let mut logits = None;
+        let mut feat = None;
+        for pop in &self.ops {
+            match pop {
+                PreparedOp::Conv(pc) => {
+                    let mut acc = take_val(&mut scratch.vals, pc.out);
+                    conv2d_into(
+                        &scratch.vals[&pc.inp],
+                        &pc.kernel,
+                        &pc.bias,
+                        pc.stride,
+                        pc.groups,
+                        &mut scratch.conv,
+                        &mut acc,
+                    );
+                    match pc.recode {
+                        Some((f, qmin, qmax)) => {
+                            // integer activation on accumulator codes
+                            match pc.act.as_str() {
+                                "relu" => acc.map_inplace(|v| v.max(0.0)),
+                                "relu6" => {
+                                    let thr = pc.relu6_thr.as_ref().unwrap();
+                                    let c = pc.cout;
+                                    for (i, v) in acc.data.iter_mut().enumerate() {
+                                        *v = v.clamp(0.0, thr[i % c]);
+                                    }
+                                }
+                                _ => {}
+                            }
+                            // recode: out_code = clip(round(acc * F̂))
+                            acc.map_inplace(|v| (v * f).round().clamp(qmin, qmax));
+                        }
+                        None => match pc.act.as_str() {
+                            "relu" => acc.map_inplace(|v| v.max(0.0)),
+                            "relu6" => acc.map_inplace(|v| v.clamp(0.0, 6.0)),
+                            _ => {}
+                        },
+                    }
+                    scratch.vals.insert(pc.out, acc);
+                }
+                PreparedOp::Add { a, b, out, act, dec } => {
+                    // lossless FP ew-add (App. D item 1): decode, add,
+                    // re-encode with the output's own scale (lw); plain FP
+                    // add in dch
+                    let mut o = take_val(&mut scratch.vals, *out);
+                    let ta = &scratch.vals[a];
+                    let tb = &scratch.vals[b];
+                    assert_eq!(ta.shape, tb.shape);
+                    o.data.clear();
+                    match dec {
+                        Some(s) => {
+                            let c = *ta.shape.last().unwrap();
+                            o.data.extend(ta.data.iter().zip(&tb.data).enumerate().map(
+                                |(i, (&qa, &qb))| {
+                                    let v = qa * s.sa[i % c] + qb * s.sb[i % c];
+                                    (act_scalar(act, v) / s.sout[i % c])
+                                        .round()
+                                        .clamp(s.qmin, s.qmax)
+                                },
+                            ));
+                        }
+                        None => {
+                            o.data.extend(
+                                ta.data
+                                    .iter()
+                                    .zip(&tb.data)
+                                    .map(|(&va, &vb)| act_scalar(act, va + vb)),
+                            );
+                        }
+                    }
+                    o.shape = ta.shape.clone();
+                    scratch.vals.insert(*out, o);
+                }
+                PreparedOp::Gap { inp, out, dec } => {
+                    // decode to FP for the head
+                    let src = &scratch.vals[inp];
+                    let fp = &mut scratch.dec;
+                    fp.data.clear();
+                    match dec {
+                        Some(sv) => {
+                            let c = *src.shape.last().unwrap();
+                            fp.data.extend(
+                                src.data.iter().enumerate().map(|(i, &q)| q * sv[i % c]),
+                            );
+                        }
+                        None => fp.data.extend_from_slice(&src.data),
+                    }
+                    fp.shape = src.shape.clone();
+                    if want_feat {
+                        feat = Some(fp.clone());
+                    }
+                    let pooled = fp.global_avg_pool();
+                    scratch.vals.insert(*out, pooled);
+                }
+                PreparedOp::Fc { inp, w, bias } => {
+                    let mut y = scratch.vals[inp].matmul(w);
+                    for row in y.data.chunks_mut(bias.len()) {
+                        for (v, &bv) in row.iter_mut().zip(bias) {
+                            *v += bv;
+                        }
+                    }
+                    logits = Some(y);
+                }
+            }
+        }
+        (logits.expect("arch has fc"), feat)
+    }
+}
+
+/// Deployed forward for a single image or small batch, preparing constants on
+/// the fly.  Pass `Some(scratch)` to reuse buffers across calls (the offline
+/// eval loops do); `None` allocates a throwaway scratch.  Delegates to the
+/// batched path, so results are bit-identical to [`forward_integer_batch`].
+pub fn forward_integer(
+    arch: &ArchSpec,
+    tm: &ParamMap,
+    mode: Mode,
+    x: &Tensor,
+    scratch: Option<&mut DeployScratch>,
+) -> (Tensor, Tensor) {
+    let model = DeployedModel::prepare(arch, tm, mode);
+    match scratch {
+        Some(s) => model.forward_batch_feat(x, s),
+        None => model.forward_batch_feat(x, &mut DeployScratch::new()),
+    }
+}
+
+/// Batched deployed forward (logits only): prepares the frozen constants,
+/// then runs the whole batch through the shared online path.  Long-lived
+/// callers (the serving engine, eval loops) should instead hold a
+/// [`DeployedModel`] and call [`DeployedModel::forward_batch`] directly so
+/// preparation cost is paid once.
+pub fn forward_integer_batch(
+    arch: &ArchSpec,
+    tm: &ParamMap,
+    mode: Mode,
+    x: &Tensor,
+    scratch: Option<&mut DeployScratch>,
+) -> Tensor {
+    let model = DeployedModel::prepare(arch, tm, mode);
+    match scratch {
+        Some(s) => model.forward_batch(x, s),
+        None => model.forward_batch(x, &mut DeployScratch::new()),
+    }
 }
 
 #[cfg(test)]
@@ -392,12 +689,48 @@ mod tests {
             None,
         );
         let (lf, _) = forward_fakequant(arch, &tm, Mode::Lw, &x);
-        let (li, _) = forward_integer(arch, &tm, &x);
+        let (li, _) = forward_integer(arch, &tm, Mode::Lw, &x, None);
         // identical argmax on most rows; bias quantization is the only gap
         let af = lf.argmax_lastdim();
         let ai = li.argmax_lastdim();
         // integer logits are in *code* space for fc input; compare argmax only
         let agree = af.iter().zip(&ai).filter(|(a, b)| a == b).count();
         assert!(agree >= af.len() - 1, "agree {agree}/{}", af.len());
+    }
+
+    #[test]
+    fn integer_dch_is_bit_exact_with_fakequant() {
+        // dch deployment (4b codes + FP32 accumulate) IS the fake-quant graph
+        let Ok(m) = Manifest::load("artifacts/manifest.json") else { return };
+        let arch = &m.archs["mobilenet_tiny"];
+        let params = state::he_init_params(arch, 6);
+        let ds = crate::data::Dataset::new(5);
+        let (x, _, _) = ds.batch(crate::data::Split::Val, 0, 4);
+        let absmax = state::absmax_from_rust_forward(arch, &params, &[x.clone()]);
+        let tm = state::init_trainables(arch, &params, &absmax, Mode::Dch,
+                                        state::WeightScaleInit::DoublyChannelwise, None);
+        let (lf, ff) = forward_fakequant(arch, &tm, Mode::Dch, &x);
+        let (li, fi) = forward_integer(arch, &tm, Mode::Dch, &x, None);
+        assert_eq!(lf.data, li.data);
+        assert_eq!(ff.data, fi.data);
+    }
+
+    #[test]
+    fn scratch_reuse_keeps_integer_forward_deterministic() {
+        let Ok(m) = Manifest::load("artifacts/manifest.json") else { return };
+        let arch = &m.archs["convnet_tiny"];
+        let params = state::he_init_params(arch, 2);
+        let ds = crate::data::Dataset::new(1);
+        let (x, _, _) = ds.batch(crate::data::Split::Calib, 0, 4);
+        let absmax = state::absmax_from_rust_forward(arch, &params, &[x.clone()]);
+        let tm = state::init_trainables(arch, &params, &absmax, Mode::Lw,
+                                        state::WeightScaleInit::Uniform, None);
+        let model = DeployedModel::prepare(arch, &tm, Mode::Lw);
+        let mut scratch = DeployScratch::new();
+        let a = model.forward_batch(&x, &mut scratch);
+        let b = model.forward_batch(&x, &mut scratch);
+        let fresh = model.forward_batch(&x, &mut DeployScratch::new());
+        assert_eq!(a.data, b.data);
+        assert_eq!(a.data, fresh.data);
     }
 }

@@ -1,0 +1,262 @@
+//! Bounded request queue + dynamic micro-batch assembly.
+//!
+//! Policy: a worker blocks until at least one request is queued, then keeps
+//! the batch open for up to `max_wait` for it to fill to `max_batch`.
+//! Admission is bounded by `queue_cap`: submitters block (backpressure)
+//! until a slot frees, so a burst can never grow the queue without bound.
+//! Pure std — one `Mutex<VecDeque>` and two `Condvar`s; no work-stealing,
+//! no lock-free cleverness, because batch assembly is O(µs) next to a
+//! forward pass.
+//!
+//! Invariant the tests lean on: every submitted request is handed to exactly
+//! one worker batch (pop happens under the same lock as push), so requests
+//! are never dropped or duplicated, and FIFO order is preserved.
+
+use std::collections::VecDeque;
+use std::sync::mpsc::Sender;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// One classification request: an image for a registry slot, plus the reply
+/// channel.  `enqueued` anchors the end-to-end latency measurement.
+pub struct InferRequest {
+    pub id: u64,
+    /// Registry slot of the (arch × mode) deployment to run.
+    pub model: usize,
+    /// Flat NHWC image, `hw*hw*ch` of the target model.
+    pub image: Vec<f32>,
+    pub enqueued: Instant,
+    pub resp: Sender<InferReply>,
+}
+
+/// Reply to one [`InferRequest`].
+#[derive(Clone, Debug)]
+pub struct InferReply {
+    pub id: u64,
+    /// argmax class.
+    pub top1: usize,
+    /// Raw logits row.
+    pub logits: Vec<f32>,
+    /// Queue + batching + execution time.
+    pub latency: Duration,
+    /// Size of the micro-batch this request rode in.
+    pub batch_size: usize,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    /// Largest micro-batch a worker will assemble.
+    pub max_batch: usize,
+    /// How long a worker holds a non-full batch open for stragglers.
+    pub max_wait: Duration,
+    /// Bounded-queue capacity (backpressure threshold).
+    pub queue_cap: usize,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_micros(200),
+            queue_cap: 256,
+        }
+    }
+}
+
+struct State {
+    q: VecDeque<InferRequest>,
+    closed: bool,
+}
+
+/// The shared request queue between clients and the worker pool.
+pub struct Batcher {
+    state: Mutex<State>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    pub policy: BatchPolicy,
+}
+
+impl Batcher {
+    pub fn new(policy: BatchPolicy) -> Self {
+        assert!(policy.max_batch >= 1);
+        assert!(policy.queue_cap >= 1);
+        Batcher {
+            state: Mutex::new(State { q: VecDeque::new(), closed: false }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            policy,
+        }
+    }
+
+    /// Current queue depth (diagnostic; racy by nature).
+    pub fn depth(&self) -> usize {
+        self.state.lock().unwrap().q.len()
+    }
+
+    /// Blocking submit with backpressure.  Returns the post-enqueue queue
+    /// depth, or the request back if the batcher is closed.
+    pub fn submit(&self, req: InferRequest) -> Result<usize, InferRequest> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if st.closed {
+                return Err(req);
+            }
+            if st.q.len() < self.policy.queue_cap {
+                break;
+            }
+            st = self.not_full.wait(st).unwrap();
+        }
+        st.q.push_back(req);
+        let depth = st.q.len();
+        drop(st);
+        self.not_empty.notify_one();
+        Ok(depth)
+    }
+
+    /// Next micro-batch for a worker.  Blocks for work; once a head request
+    /// exists, drains same-model requests up to `max_batch`, holding the
+    /// batch open up to `max_wait` if the queue runs dry first.  Requests
+    /// for a *different* model than the batch head are left queued (FIFO
+    /// across models is preserved — the next worker picks them up).
+    /// Returns `None` once closed and fully drained.
+    pub fn next_batch(&self) -> Option<Vec<InferRequest>> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if !st.q.is_empty() {
+                break;
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.not_empty.wait(st).unwrap();
+        }
+        let head_model = st.q.front().unwrap().model;
+        let mut batch = Vec::with_capacity(self.policy.max_batch);
+        let deadline = Instant::now() + self.policy.max_wait;
+        loop {
+            while batch.len() < self.policy.max_batch
+                && st.q.front().map(|r| r.model == head_model).unwrap_or(false)
+            {
+                batch.push(st.q.pop_front().unwrap());
+            }
+            if batch.len() >= self.policy.max_batch {
+                break;
+            }
+            // head-of-queue is another model: dispatch what we have
+            if !st.q.is_empty() {
+                break;
+            }
+            if st.closed {
+                break;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let (guard, timeout) = self.not_empty.wait_timeout(st, deadline - now).unwrap();
+            st = guard;
+            if timeout.timed_out() {
+                // grab anything that raced in, then dispatch
+                while batch.len() < self.policy.max_batch
+                    && st.q.front().map(|r| r.model == head_model).unwrap_or(false)
+                {
+                    batch.push(st.q.pop_front().unwrap());
+                }
+                break;
+            }
+        }
+        // if we left requests queued (another model's, or beyond max_batch),
+        // make sure an idle worker hears about them even though this thread
+        // may have consumed the submitter's notification
+        let leftovers = !st.q.is_empty();
+        drop(st);
+        self.not_full.notify_all();
+        if leftovers {
+            self.not_empty.notify_one();
+        }
+        Some(batch)
+    }
+
+    /// Stop admitting requests and wake everyone; workers drain what's
+    /// queued, then their `next_batch` returns `None`.
+    pub fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.state.lock().unwrap().closed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+
+    fn req(id: u64, model: usize) -> (InferRequest, mpsc::Receiver<InferReply>) {
+        let (tx, rx) = mpsc::channel();
+        (
+            InferRequest {
+                id,
+                model,
+                image: vec![0.0; 4],
+                enqueued: Instant::now(),
+                resp: tx,
+            },
+            rx,
+        )
+    }
+
+    #[test]
+    fn batches_cap_at_max_batch() {
+        let b = Batcher::new(BatchPolicy {
+            max_batch: 3,
+            max_wait: Duration::from_micros(1),
+            queue_cap: 16,
+        });
+        let mut rxs = Vec::new();
+        for i in 0..7 {
+            let (r, rx) = req(i, 0);
+            b.submit(r).map_err(|_| ()).unwrap();
+            rxs.push(rx);
+        }
+        let sizes: Vec<usize> = (0..3).map(|_| b.next_batch().unwrap().len()).collect();
+        assert_eq!(sizes, vec![3, 3, 1]);
+        assert_eq!(b.depth(), 0);
+    }
+
+    #[test]
+    fn fifo_order_and_model_affinity() {
+        let b = Batcher::new(BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_micros(1),
+            queue_cap: 16,
+        });
+        let mut rxs = Vec::new();
+        for (i, m) in [(0u64, 0usize), (1, 0), (2, 1), (3, 1), (4, 0)] {
+            let (r, rx) = req(i, m);
+            b.submit(r).map_err(|_| ()).unwrap();
+            rxs.push(rx);
+        }
+        let b1 = b.next_batch().unwrap();
+        assert_eq!(b1.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1]);
+        let b2 = b.next_batch().unwrap();
+        assert_eq!(b2.iter().map(|r| r.id).collect::<Vec<_>>(), vec![2, 3]);
+        let b3 = b.next_batch().unwrap();
+        assert_eq!(b3.iter().map(|r| r.id).collect::<Vec<_>>(), vec![4]);
+    }
+
+    #[test]
+    fn close_rejects_new_and_drains_old() {
+        let b = Batcher::new(BatchPolicy::default());
+        let (r, _rx) = req(0, 0);
+        b.submit(r).map_err(|_| ()).unwrap();
+        b.close();
+        let (r2, _rx2) = req(1, 0);
+        assert!(b.submit(r2).is_err());
+        assert_eq!(b.next_batch().unwrap().len(), 1);
+        assert!(b.next_batch().is_none());
+    }
+}

@@ -1,0 +1,245 @@
+//! The serving engine: a std-thread worker pool executing dynamic
+//! micro-batches through the frozen integer deployment path.
+//!
+//! Each worker owns one [`DeployScratch`] plus an input staging buffer for
+//! its whole lifetime, so a warm worker executes
+//! [`DeployedModel::forward_batch`] with zero hot-path allocation beyond
+//! the per-reply logits rows.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::quant::deploy::DeployScratch;
+use crate::serve::batcher::{BatchPolicy, Batcher, InferReply, InferRequest};
+use crate::serve::registry::Registry;
+use crate::serve::stats::{ServeReport, ServeStats};
+use crate::tensor::Tensor;
+
+#[derive(Clone, Copy, Debug)]
+pub struct ServeConfig {
+    pub workers: usize,
+    pub max_batch: usize,
+    pub max_wait: Duration,
+    pub queue_cap: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            workers: 2,
+            max_batch: 8,
+            max_wait: Duration::from_micros(200),
+            queue_cap: 256,
+        }
+    }
+}
+
+/// Running worker pool over a shared [`Registry`].
+pub struct Engine {
+    registry: Arc<Registry>,
+    batcher: Arc<Batcher>,
+    stats: Arc<ServeStats>,
+    next_id: Arc<AtomicU64>,
+    workers: Vec<JoinHandle<u64>>,
+}
+
+impl Engine {
+    /// Spawn the worker pool (at least one worker).
+    pub fn start(registry: Arc<Registry>, cfg: &ServeConfig) -> Engine {
+        assert!(!registry.is_empty(), "engine started with an empty registry");
+        let batcher = Arc::new(Batcher::new(BatchPolicy {
+            max_batch: cfg.max_batch.max(1),
+            max_wait: cfg.max_wait,
+            queue_cap: cfg.queue_cap.max(1),
+        }));
+        let stats = Arc::new(ServeStats::new());
+        let workers = (0..cfg.workers.max(1))
+            .map(|_| {
+                let reg = registry.clone();
+                let bat = batcher.clone();
+                let st = stats.clone();
+                std::thread::spawn(move || worker_loop(&reg, &bat, &st))
+            })
+            .collect();
+        Engine {
+            registry,
+            batcher,
+            stats,
+            next_id: Arc::new(AtomicU64::new(0)),
+            workers,
+        }
+    }
+
+    /// A cheap, cloneable submission handle (one per client thread).
+    pub fn client(&self) -> Client {
+        Client {
+            registry: self.registry.clone(),
+            batcher: self.batcher.clone(),
+            stats: self.stats.clone(),
+            next_id: self.next_id.clone(),
+        }
+    }
+
+    pub fn registry(&self) -> &Registry {
+        &self.registry
+    }
+
+    /// Live stats snapshot.
+    pub fn stats(&self) -> ServeReport {
+        self.stats.report()
+    }
+
+    /// Close the queue, drain, join all workers, and return the final report.
+    pub fn shutdown(self) -> ServeReport {
+        self.batcher.close();
+        for h in self.workers {
+            let _ = h.join();
+        }
+        self.stats.report()
+    }
+}
+
+/// Submission handle: closed-loop `infer` plus the raw async pieces.
+#[derive(Clone)]
+pub struct Client {
+    registry: Arc<Registry>,
+    batcher: Arc<Batcher>,
+    stats: Arc<ServeStats>,
+    next_id: Arc<AtomicU64>,
+}
+
+impl Client {
+    /// Submit one image and block for its reply (30 s default deadline).
+    pub fn infer(&self, model: usize, image: Vec<f32>) -> Result<InferReply> {
+        self.infer_timeout(model, image, Duration::from_secs(30))
+    }
+
+    /// Submit one image; error if the engine is shut down or the reply does
+    /// not arrive within `timeout`.  Slot and payload size are validated
+    /// here, at admission — a malformed request must never reach a worker.
+    pub fn infer_timeout(
+        &self,
+        model: usize,
+        image: Vec<f32>,
+        timeout: Duration,
+    ) -> Result<InferReply> {
+        if model >= self.registry.len() {
+            return Err(anyhow!(
+                "unknown model slot {model} (registry has {})",
+                self.registry.len()
+            ));
+        }
+        let want = self.registry.get(model).model.image_len();
+        if image.len() != want {
+            return Err(anyhow!(
+                "payload is {} floats, model {} expects {want}",
+                image.len(),
+                self.registry.get(model).key
+            ));
+        }
+        let (tx, rx) = mpsc::channel();
+        let req = InferRequest {
+            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            model,
+            image,
+            enqueued: Instant::now(),
+            resp: tx,
+        };
+        let depth = self
+            .batcher
+            .submit(req)
+            .map_err(|_| anyhow!("serve engine is shut down"))?;
+        self.stats.record_enqueue(depth);
+        rx.recv_timeout(timeout)
+            .map_err(|e| anyhow!("no reply within {timeout:?}: {e}"))
+    }
+}
+
+/// Worker body: assemble → stack → batched integer forward → reply.
+/// Returns the number of batches it executed (join-side diagnostic).
+fn worker_loop(reg: &Registry, batcher: &Batcher, stats: &ServeStats) -> u64 {
+    let mut scratch = DeployScratch::new();
+    let mut staging: Vec<f32> = Vec::new();
+    let mut latencies: Vec<Duration> = Vec::new();
+    let mut executed = 0u64;
+    while let Some(mut batch) = batcher.next_batch() {
+        // invalid slot (possible only via a raw Batcher submit): drop the
+        // batch — the closed senders surface as client-side errors
+        let Some(model) = batch.first().and_then(|r| reg.try_get(r.model)).map(|e| &e.model)
+        else {
+            continue;
+        };
+        let px = model.image_len();
+        // Client::infer validates payloads at admission; anything that
+        // reached us through a raw Batcher submit gets dropped (its sender
+        // drops, the client sees an error) instead of poisoning the batch.
+        batch.retain(|r| r.image.len() == px);
+        if batch.is_empty() {
+            continue;
+        }
+        let n = batch.len();
+        staging.clear();
+        for r in &batch {
+            staging.extend_from_slice(&r.image);
+        }
+        let x = Tensor::new(
+            vec![n, model.input_hw, model.input_hw, model.input_ch],
+            std::mem::take(&mut staging),
+        );
+        let logits = model.forward_batch(&x, &mut scratch);
+        staging = x.data; // reclaim the staging buffer
+        let done = Instant::now();
+        let nc = model.num_classes;
+        let top1s = logits.argmax_lastdim();
+        latencies.clear();
+        for (i, req) in batch.into_iter().enumerate() {
+            let row = logits.data[i * nc..(i + 1) * nc].to_vec();
+            let latency = done.saturating_duration_since(req.enqueued);
+            latencies.push(latency);
+            // a disappeared client (dropped receiver) is not a worker error
+            let _ = req.resp.send(InferReply {
+                id: req.id,
+                top1: top1s[i],
+                logits: row,
+                latency,
+                batch_size: n,
+            });
+        }
+        stats.record_batch(n, &latencies);
+        executed += 1;
+    }
+    executed
+}
+
+/// Closed-loop load generator: `clients` threads each push
+/// `requests_per_client` back-to-back requests at registry slot `slot`,
+/// then the engine is drained and its report returned.  This is the
+/// `repro bench-serve` / `cargo bench serve_throughput` core.
+pub fn run_closed_loop(
+    registry: &Arc<Registry>,
+    cfg: &ServeConfig,
+    clients: usize,
+    requests_per_client: usize,
+    slot: usize,
+) -> ServeReport {
+    let engine = Engine::start(registry.clone(), cfg);
+    std::thread::scope(|s| {
+        for c in 0..clients {
+            let client = engine.client();
+            s.spawn(move || {
+                let ds = crate::data::Dataset::new(c as u64 + 1);
+                for i in 0..requests_per_client {
+                    let (img, _) = ds.sample(crate::data::Split::Val, i as u64);
+                    if client.infer(slot, img).is_err() {
+                        break;
+                    }
+                }
+            });
+        }
+    });
+    engine.shutdown()
+}

@@ -1,0 +1,224 @@
+//! `qft::serve` — multi-threaded dynamic-batching inference serving over the
+//! integer deployment path (S15).
+//!
+//! The paper's HW-aware split is: *offline*, derive every deployment
+//! constant from the trained DoF set; *online*, run the cheap frozen integer
+//! graph.  This module is the online half grown into a serving engine:
+//!
+//! * [`registry`] — [`Registry`]: `(arch × mode)` → [`DeployedModel`]
+//!   with all constants frozen at load time (weights resolved from
+//!   `repro qft` exports, the cached FP teacher, or he-init smoke weights).
+//! * [`batcher`] — [`Batcher`]: bounded request queue with dynamic
+//!   micro-batch assembly under a max-batch / max-wait policy and
+//!   blocking backpressure.
+//! * [`engine`] — [`Engine`]: std-thread worker pool; each worker owns a
+//!   [`crate::quant::deploy::DeployScratch`] so steady-state execution
+//!   does not allocate; [`run_closed_loop`] is the load-generator used by
+//!   `repro bench-serve` and the `serve_throughput` bench.
+//! * [`stats`] — [`ServeStats`]/[`ServeReport`]: p50/p95/p99 latency,
+//!   throughput, batch-size and queue-depth histograms.
+//!
+//! Everything is std-only (threads + channels + condvars): the image's
+//! cargo cache has no async runtime, and a forward pass is milliseconds —
+//! thread-per-worker with a locked queue is the right tool.
+
+pub mod batcher;
+pub mod engine;
+pub mod registry;
+pub mod stats;
+
+pub use batcher::{BatchPolicy, Batcher, InferReply, InferRequest};
+pub use engine::{run_closed_loop, Client, Engine, ServeConfig};
+pub use registry::{load_model, ModelEntry, Registry};
+pub use stats::{Pow2Histogram, ServeReport, ServeStats};
+
+use crate::nn::arch::{ArchSpec, OpSpec, ParamSpec};
+use crate::quant::deploy::DeployedModel;
+
+/// A small self-contained conv / residual / depthwise arch over the same IR
+/// as the manifest archs.  It lets the whole serving stack (and its tests
+/// and benches) run without AOT artifacts: `Registry` falls back to it when
+/// no manifest is present, and tests build trainables for it with the
+/// regular [`crate::coordinator::state`] machinery.
+pub fn synthetic_arch() -> ArchSpec {
+    use std::collections::HashMap;
+
+    let conv = |name: &str, inp: usize, out: usize, stride: usize, cin: usize, cout: usize,
+                groups: usize, act: &str| OpSpec {
+        op: "conv".to_string(),
+        name: name.to_string(),
+        out,
+        inp,
+        k: 3,
+        stride,
+        cin,
+        cout,
+        groups,
+        act: act.to_string(),
+        a: 0,
+        b: 0,
+    };
+    let ops = vec![
+        conv("conv0", 0, 1, 1, 3, 8, 1, "relu"),
+        conv("conv1", 1, 2, 2, 8, 8, 1, "relu6"),
+        conv("dw", 2, 3, 1, 8, 8, 8, "relu"),
+        OpSpec {
+            op: "add".to_string(),
+            name: "add0".to_string(),
+            out: 4,
+            inp: 0,
+            k: 0,
+            stride: 1,
+            cin: 0,
+            cout: 0,
+            groups: 1,
+            act: "relu".to_string(),
+            a: 2,
+            b: 3,
+        },
+        OpSpec {
+            op: "gap".to_string(),
+            name: "gap".to_string(),
+            out: 5,
+            inp: 4,
+            k: 0,
+            stride: 1,
+            cin: 0,
+            cout: 0,
+            groups: 1,
+            act: "none".to_string(),
+            a: 0,
+            b: 0,
+        },
+        OpSpec {
+            op: "fc".to_string(),
+            name: "fc".to_string(),
+            out: 6,
+            inp: 5,
+            k: 0,
+            stride: 1,
+            cin: 8,
+            cout: crate::data::NUM_CLASSES,
+            groups: 1,
+            act: "none".to_string(),
+            a: 0,
+            b: 0,
+        },
+    ];
+
+    let spec = |name: &str, shape: &[usize]| ParamSpec {
+        name: name.to_string(),
+        shape: shape.to_vec(),
+    };
+    let nc = crate::data::NUM_CLASSES;
+    let params = vec![
+        spec("w:conv0", &[3, 3, 3, 8]),
+        spec("b:conv0", &[8]),
+        spec("w:conv1", &[3, 3, 8, 8]),
+        spec("b:conv1", &[8]),
+        spec("w:dw", &[3, 3, 1, 8]),
+        spec("b:dw", &[8]),
+        spec("w:fc", &[8, nc]),
+        spec("b:fc", &[nc]),
+    ];
+
+    let mut lw = params.clone();
+    for (v, c) in [(0usize, 3usize), (1, 8), (2, 8), (3, 8), (4, 8)] {
+        lw.push(spec(&format!("sv:{v}"), &[c]));
+    }
+    for op in ["conv0", "conv1", "dw"] {
+        lw.push(spec(&format!("f:{op}"), &[1]));
+    }
+    let mut dch = params.clone();
+    dch.push(spec("swl:conv0", &[3]));
+    dch.push(spec("swr:conv0", &[8]));
+    dch.push(spec("swl:conv1", &[8]));
+    dch.push(spec("swr:conv1", &[8]));
+    dch.push(spec("swr:dw", &[8]));
+
+    let mut trainables = HashMap::new();
+    trainables.insert("lw".to_string(), lw);
+    trainables.insert("dch".to_string(), dch);
+
+    let mut value_channels = HashMap::new();
+    let mut value_signed = HashMap::new();
+    for (v, c) in [(0usize, 3usize), (1, 8), (2, 8), (3, 8), (4, 8), (5, 8), (6, nc)] {
+        value_channels.insert(v.to_string(), c);
+        value_signed.insert(v.to_string(), false);
+    }
+
+    ArchSpec {
+        name: "synthetic".to_string(),
+        input_hw: crate::data::HW,
+        input_ch: crate::data::CH,
+        num_classes: nc,
+        batch: 8,
+        nvals: 7,
+        backbone_value: 4,
+        feat_channels: 8,
+        ops,
+        params,
+        trainables,
+        quantized_values: vec![0, 1, 2, 3, 4],
+        value_channels,
+        value_signed,
+        artifacts: HashMap::new(),
+    }
+}
+
+/// Seeded he-init weights for [`synthetic_arch`] pushed through the standard
+/// offline PTQ init — the shared fixture behind [`synthetic_model`] and the
+/// hermetic serving/parity tests.
+pub fn synthetic_trainables(
+    mode: crate::quant::deploy::Mode,
+    seed: u64,
+) -> (ArchSpec, crate::nn::ParamMap) {
+    use crate::coordinator::state;
+    let arch = synthetic_arch();
+    let params = state::he_init_params(&arch, seed);
+    let ds = crate::data::Dataset::new(seed);
+    let batches: Vec<_> = (0..2)
+        .map(|i| ds.batch(crate::data::Split::Calib, i * arch.batch as u64, arch.batch).0)
+        .collect();
+    let absmax = state::absmax_from_rust_forward(&arch, &params, &batches);
+    let winit = match mode {
+        crate::quant::deploy::Mode::Lw => state::WeightScaleInit::Uniform,
+        crate::quant::deploy::Mode::Dch => state::WeightScaleInit::DoublyChannelwise,
+    };
+    let tm = state::init_trainables(&arch, &params, &absmax, mode, winit, None);
+    (arch, tm)
+}
+
+/// Build the synthetic arch's [`DeployedModel`] directly from seeded he-init
+/// weights — the one-call fixture used by tests and examples.
+pub fn synthetic_model(mode: crate::quant::deploy::Mode, seed: u64) -> DeployedModel {
+    let (arch, tm) = synthetic_trainables(mode, seed);
+    DeployedModel::prepare(&arch, &tm, mode)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_arch_fp_forward_runs() {
+        let arch = synthetic_arch();
+        let params = crate::coordinator::state::he_init_params(&arch, 0);
+        let x = crate::tensor::Tensor::full(&[2, arch.input_hw, arch.input_hw, arch.input_ch], 0.5);
+        let f = crate::nn::fp_forward(&arch, &params, &x);
+        assert_eq!(f.logits.shape, vec![2, arch.num_classes]);
+        assert_eq!(f.feat.shape, vec![2, 8, 8, 8]);
+    }
+
+    #[test]
+    fn synthetic_model_prepares_both_modes() {
+        for mode in [crate::quant::deploy::Mode::Lw, crate::quant::deploy::Mode::Dch] {
+            let m = synthetic_model(mode, 3);
+            let x = crate::tensor::Tensor::full(&[1, 16, 16, 3], 0.3);
+            let logits =
+                m.forward_batch(&x, &mut crate::quant::deploy::DeployScratch::new());
+            assert_eq!(logits.shape, vec![1, crate::data::NUM_CLASSES]);
+            assert!(logits.data.iter().all(|v| v.is_finite()));
+        }
+    }
+}

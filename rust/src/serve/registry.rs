@@ -1,0 +1,176 @@
+//! Model registry: `(arch × mode)` → frozen deployment constants.
+//!
+//! All offline-subgraph work (kernel co-vectors, integer weight/bias codes,
+//! recode factors) happens here at load time via
+//! [`DeployedModel::prepare`]; serving workers only ever touch the frozen
+//! [`DeployedModel`]s through immutable references, so the hot path is
+//! lock-free and never re-derives a constant.
+//!
+//! Weight resolution per model, in order:
+//! 1. `{artifacts}/weights/{arch}.{mode}.qftw` — the trainable set exported
+//!    by `repro qft` (the real deployment artifact);
+//! 2. `{artifacts}/weights/{arch}.qftw` — the cached FP teacher, pushed
+//!    through the offline PTQ init (naive-max calibration on the synthetic
+//!    calib split + MMSE weight scales);
+//! 3. He-init weights through the same PTQ init — accuracy is meaningless
+//!    but every serving code path still runs (smoke/bench mode).
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::{state, weights_io};
+use crate::data::{Dataset, Split};
+use crate::nn::ArchSpec;
+use crate::quant::deploy::{DeployedModel, Mode};
+use crate::runtime::manifest::Manifest;
+
+/// One loaded deployment plus its provenance.
+pub struct ModelEntry {
+    /// `"arch/mode"`, the wire name clients resolve.
+    pub key: String,
+    pub model: DeployedModel,
+    /// Where the weights came from (export / teacher / he-init).
+    pub source: String,
+}
+
+/// Immutable collection of deployed models, shared by all workers.
+#[derive(Default)]
+pub struct Registry {
+    entries: Vec<ModelEntry>,
+    by_key: HashMap<String, usize>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register an entry; returns its slot id (what requests carry).
+    pub fn insert(&mut self, entry: ModelEntry) -> usize {
+        let slot = self.entries.len();
+        self.by_key.insert(entry.key.clone(), slot);
+        self.entries.push(entry);
+        slot
+    }
+
+    pub fn get(&self, slot: usize) -> &ModelEntry {
+        &self.entries[slot]
+    }
+
+    /// Non-panicking [`Self::get`] (worker-side defense for raw submits).
+    pub fn try_get(&self, slot: usize) -> Option<&ModelEntry> {
+        self.entries.get(slot)
+    }
+
+    /// Slot for a `"arch/mode"` key.
+    pub fn resolve(&self, key: &str) -> Option<usize> {
+        self.by_key.get(key).copied()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.entries.iter().map(|e| e.key.as_str())
+    }
+
+    /// Load `(arch name, mode)` pairs from an artifacts dir into a shareable
+    /// registry.  Arch specs come from the AOT manifest when present; the
+    /// name `"synthetic"` (or any name when no manifest exists) falls back
+    /// to [`crate::serve::synthetic_arch`] so serving runs artifact-free.
+    pub fn load(dir: &Path, specs: &[(String, Mode)]) -> Result<Arc<Registry>> {
+        anyhow::ensure!(!specs.is_empty(), "registry: no models requested");
+        let manifest = Manifest::load(dir.join("manifest.json")).ok();
+        let mut reg = Registry::new();
+        for (name, mode) in specs {
+            let arch: ArchSpec = match &manifest {
+                Some(m) => match m.archs.get(name) {
+                    Some(a) => a.clone(),
+                    None if name == "synthetic" => crate::serve::synthetic_arch(),
+                    None => bail!(
+                        "unknown arch {name}; manifest has {:?} (plus the built-in \"synthetic\")",
+                        m.archs.keys().collect::<Vec<_>>()
+                    ),
+                },
+                None => {
+                    eprintln!(
+                        "registry: no manifest under {dir:?}; using the built-in \
+                         synthetic arch for {name:?}"
+                    );
+                    // keep the wire key the caller asked for, even though the
+                    // graph underneath is the synthetic one
+                    let mut a = crate::serve::synthetic_arch();
+                    a.name = name.clone();
+                    a
+                }
+            };
+            let entry = load_model(dir, &arch, *mode)?;
+            if reg.resolve(&entry.key).is_some() {
+                bail!("model {} requested twice", entry.key);
+            }
+            eprintln!("registry: {} <- {}", entry.key, entry.source);
+            reg.insert(entry);
+        }
+        Ok(Arc::new(reg))
+    }
+}
+
+/// Resolve weights for one arch × mode and lower them to a [`DeployedModel`].
+pub fn load_model(dir: &Path, arch: &ArchSpec, mode: Mode) -> Result<ModelEntry> {
+    let key = format!("{}/{}", arch.name, mode.key());
+    let export = dir.join("weights").join(format!("{}.{}.qftw", arch.name, mode.key()));
+    let (tm, source) = if export.is_file() {
+        (weights_io::load(&export)?, format!("qft export {export:?}"))
+    } else {
+        let teacher = dir.join("weights").join(format!("{}.qftw", arch.name));
+        let (params, source) = if teacher.is_file() {
+            (
+                weights_io::load(&teacher)?,
+                format!("fp teacher {teacher:?} + offline PTQ init"),
+            )
+        } else {
+            (
+                state::he_init_params(arch, 0),
+                "he-init + offline PTQ init (untrained: smoke/bench only)".to_string(),
+            )
+        };
+        let ds = Dataset::new(0);
+        let batches: Vec<_> = (0..4)
+            .map(|i| ds.batch(Split::Calib, (i * arch.batch) as u64, arch.batch).0)
+            .collect();
+        let absmax = state::absmax_from_rust_forward(arch, &params, &batches);
+        let winit = match mode {
+            Mode::Lw => state::WeightScaleInit::Uniform,
+            Mode::Dch => state::WeightScaleInit::DoublyChannelwise,
+        };
+        (state::init_trainables(arch, &params, &absmax, mode, winit, None), source)
+    };
+    Ok(ModelEntry { key, model: DeployedModel::prepare(arch, &tm, mode), source })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_fallback_loads_both_modes() {
+        let dir = std::env::temp_dir().join("qft_registry_test_nonexistent");
+        let reg = Registry::load(
+            &dir,
+            &[("synthetic".to_string(), Mode::Lw), ("synthetic".to_string(), Mode::Dch)],
+        )
+        .unwrap();
+        assert_eq!(reg.len(), 2);
+        assert_eq!(reg.resolve("synthetic/lw"), Some(0));
+        assert_eq!(reg.resolve("synthetic/dch"), Some(1));
+        assert_eq!(reg.get(0).model.image_len(), 16 * 16 * 3);
+    }
+}

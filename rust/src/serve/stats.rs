@@ -1,0 +1,227 @@
+//! Serving metrics: end-to-end latency percentiles, throughput, batch-size
+//! and queue-depth histograms — the [`crate::runtime::ExecStats`] idiom
+//! (cheap counters sampled on the hot path, reported at the end) made
+//! thread-safe for the worker pool.
+
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Power-of-two bucketed histogram over small positive integers (queue
+/// depths, batch sizes).  Bucket `i` covers `[2^(i-1), 2^i)`, bucket 0 is
+/// exactly 0.
+#[derive(Clone, Debug, Default)]
+pub struct Pow2Histogram {
+    counts: Vec<u64>,
+}
+
+impl Pow2Histogram {
+    fn record(&mut self, v: usize) {
+        let b = (usize::BITS - v.leading_zeros()) as usize;
+        if self.counts.len() <= b {
+            self.counts.resize(b + 1, 0);
+        }
+        self.counts[b] += 1;
+    }
+
+    /// `(lo..=hi, count)` rows for non-empty buckets.
+    pub fn rows(&self) -> Vec<(usize, usize, u64)> {
+        self.counts
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(b, &c)| {
+                let (lo, hi) = if b == 0 { (0, 0) } else { (1 << (b - 1), (1 << b) - 1) };
+                (lo, hi, c)
+            })
+            .collect()
+    }
+}
+
+/// Latency sample cap: bounds a long-lived engine's memory (reservoir
+/// sampling keeps the percentile estimate unbiased past the cap).
+const LAT_RESERVOIR: usize = 1 << 16;
+
+struct Inner {
+    lat_us: Vec<u64>,
+    /// total latencies observed (>= lat_us.len() once the reservoir is full)
+    lat_seen: u64,
+    rng: crate::data::Rng,
+    requests: u64,
+    batches: u64,
+    batch_hist: Pow2Histogram,
+    depth_hist: Pow2Histogram,
+    first_enqueue: Option<Instant>,
+    last_done: Option<Instant>,
+}
+
+impl Default for Inner {
+    fn default() -> Self {
+        Inner {
+            lat_us: Vec::new(),
+            lat_seen: 0,
+            rng: crate::data::Rng::new(0x5E4E),
+            requests: 0,
+            batches: 0,
+            batch_hist: Pow2Histogram::default(),
+            depth_hist: Pow2Histogram::default(),
+            first_enqueue: None,
+            last_done: None,
+        }
+    }
+}
+
+impl Inner {
+    /// Algorithm-R reservoir insert.
+    fn record_latency(&mut self, us: u64) {
+        self.lat_seen += 1;
+        if self.lat_us.len() < LAT_RESERVOIR {
+            self.lat_us.push(us);
+        } else {
+            let j = self.rng.below(self.lat_seen as usize);
+            if j < LAT_RESERVOIR {
+                self.lat_us[j] = us;
+            }
+        }
+    }
+}
+
+/// Shared serving counters; one per [`crate::serve::Engine`].
+#[derive(Default)]
+pub struct ServeStats {
+    inner: Mutex<Inner>,
+}
+
+impl ServeStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Called by clients on submit with the post-enqueue queue depth.
+    pub fn record_enqueue(&self, depth: usize) {
+        let mut st = self.inner.lock().unwrap();
+        st.first_enqueue.get_or_insert_with(Instant::now);
+        st.depth_hist.record(depth);
+    }
+
+    /// Called by workers once per executed micro-batch.
+    pub fn record_batch(&self, batch: usize, latencies: &[Duration]) {
+        let mut st = self.inner.lock().unwrap();
+        st.batches += 1;
+        st.requests += latencies.len() as u64;
+        st.batch_hist.record(batch);
+        for l in latencies {
+            st.record_latency(l.as_micros() as u64);
+        }
+        st.last_done = Some(Instant::now());
+    }
+
+    /// Snapshot of everything recorded so far.
+    pub fn report(&self) -> ServeReport {
+        let st = self.inner.lock().unwrap();
+        let mut sorted = st.lat_us.clone();
+        sorted.sort_unstable();
+        let pct = |p: f64| -> u64 {
+            if sorted.is_empty() {
+                return 0;
+            }
+            // nearest-rank: smallest value with at least p% of samples <= it
+            let rank = (p / 100.0 * sorted.len() as f64).ceil() as usize;
+            sorted[rank.clamp(1, sorted.len()) - 1]
+        };
+        let wall = match (st.first_enqueue, st.last_done) {
+            (Some(a), Some(b)) => b.saturating_duration_since(a),
+            _ => Duration::ZERO,
+        };
+        let secs = wall.as_secs_f64();
+        ServeReport {
+            requests: st.requests,
+            batches: st.batches,
+            wall,
+            throughput_ips: if secs > 0.0 { st.requests as f64 / secs } else { 0.0 },
+            p50_us: pct(50.0),
+            p95_us: pct(95.0),
+            p99_us: pct(99.0),
+            max_us: sorted.last().copied().unwrap_or(0),
+            mean_batch: if st.batches > 0 {
+                st.requests as f64 / st.batches as f64
+            } else {
+                0.0
+            },
+            batch_hist: st.batch_hist.clone(),
+            depth_hist: st.depth_hist.clone(),
+        }
+    }
+}
+
+/// Point-in-time serving report (also the `BENCH_serve.json` row shape).
+#[derive(Clone, Debug)]
+pub struct ServeReport {
+    pub requests: u64,
+    pub batches: u64,
+    pub wall: Duration,
+    pub throughput_ips: f64,
+    pub p50_us: u64,
+    pub p95_us: u64,
+    pub p99_us: u64,
+    pub max_us: u64,
+    pub mean_batch: f64,
+    pub batch_hist: Pow2Histogram,
+    pub depth_hist: Pow2Histogram,
+}
+
+impl std::fmt::Display for ServeReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} reqs in {} batches over {:.2} s | {:.0} images/s | \
+             latency µs p50 {} p95 {} p99 {} max {} | mean batch {:.2}",
+            self.requests,
+            self.batches,
+            self.wall.as_secs_f64(),
+            self.throughput_ips,
+            self.p50_us,
+            self.p95_us,
+            self.p99_us,
+            self.max_us,
+            self.mean_batch,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_over_known_distribution() {
+        let s = ServeStats::new();
+        s.record_enqueue(1);
+        let lats: Vec<Duration> = (1..=100).map(Duration::from_micros).collect();
+        s.record_batch(4, &lats);
+        let r = s.report();
+        assert_eq!(r.requests, 100);
+        assert_eq!(r.batches, 1);
+        assert_eq!(r.p50_us, 50);
+        assert_eq!(r.p99_us, 99);
+        assert_eq!(r.max_us, 100);
+        assert!((r.mean_batch - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pow2_histogram_buckets() {
+        let mut h = Pow2Histogram::default();
+        for v in [0, 1, 2, 3, 4, 7, 8] {
+            h.record(v);
+        }
+        let rows = h.rows();
+        assert_eq!(rows, vec![(0, 0, 1), (1, 1, 1), (2, 3, 2), (4, 7, 2), (8, 15, 1)]);
+    }
+
+    #[test]
+    fn empty_report_is_sane() {
+        let r = ServeStats::new().report();
+        assert_eq!(r.requests, 0);
+        assert_eq!(r.p99_us, 0);
+        assert_eq!(r.throughput_ips, 0.0);
+    }
+}

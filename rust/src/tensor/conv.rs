@@ -1,29 +1,54 @@
 //! NHWC 2-D convolution via im2col (SAME padding), with grouped / depthwise
 //! support — mirrors `jax.lax.conv_general_dilated(NHWC, HWIO)` as used by L2
 //! so the rust deployment simulator reproduces the AOT graphs bit-for-shape.
+//!
+//! Two entry points over one implementation: [`conv2d`] (allocating, for
+//! one-off heuristics) and [`conv2d_into`] (writes into caller-owned buffers
+//! via [`ConvScratch`], for the serving / batched-eval hot path).  Both run
+//! the same loops in the same order, so results are bit-identical.
 
-use super::Tensor;
+use super::{matmul_slices, Tensor};
 
 /// SAME-padding output size for stride s.
 fn out_dim(i: usize, s: usize) -> usize {
     i.div_ceil(s)
 }
 
-/// im2col patch matrix: x[b,h,w,cin] -> [b*oh*ow, k*k*cin_group] for one group
-/// slice along the channel axis. `c0..c0+cg` selects the group's channels.
-fn im2col(
+/// Reusable im2col / grouped-conv buffers.  After the first call at a given
+/// geometry every buffer is right-sized and later calls allocate nothing.
+#[derive(Default)]
+pub struct ConvScratch {
+    /// im2col patch matrix.
+    cols: Vec<f32>,
+    /// per-group weight slice (grouped convs only).
+    wg: Vec<f32>,
+    /// per-group output block (grouped convs only).
+    gout: Vec<f32>,
+}
+
+impl ConvScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+/// im2col patch matrix: x[b,h,w,cin] -> [b*oh*ow, k*k*cg] for one group
+/// slice along the channel axis (`c0..c0+cg`), written into `cols`.
+fn im2col_into(
     x: &Tensor,
     k: usize,
     stride: usize,
     c0: usize,
     cg: usize,
-) -> (Tensor, usize, usize) {
+    cols: &mut Vec<f32>,
+) -> (usize, usize) {
     let (b, h, w, cin) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
     let (oh, ow) = (out_dim(h, stride), out_dim(w, stride));
     // SAME padding offsets (matches XLA for odd k)
     let pad_top = ((oh - 1) * stride + k).saturating_sub(h) / 2;
     let pad_left = ((ow - 1) * stride + k).saturating_sub(w) / 2;
-    let mut cols = vec![0.0f32; b * oh * ow * k * k * cg];
+    cols.clear();
+    cols.resize(b * oh * ow * k * k * cg, 0.0);
     let mut idx = 0;
     for bi in 0..b {
         for oy in 0..oh {
@@ -43,12 +68,29 @@ fn im2col(
             }
         }
     }
-    (Tensor::new(vec![b * oh * ow, k * k * cg], cols), oh, ow)
+    (oh, ow)
 }
 
 /// NHWC conv, SAME padding.  `w` is HWIO `[k,k,cin/groups,cout]`, `bias` is
 /// `[cout]`.  `groups == cin == cout` gives a depthwise conv.
 pub fn conv2d(x: &Tensor, w: &Tensor, bias: &[f32], stride: usize, groups: usize) -> Tensor {
+    let mut scratch = ConvScratch::new();
+    let mut out = Tensor { shape: vec![0], data: Vec::new() };
+    conv2d_into(x, w, bias, stride, groups, &mut scratch, &mut out);
+    out
+}
+
+/// [`conv2d`] writing into `out` and borrowing all intermediate buffers from
+/// `scratch` — zero allocation on the hot path once buffers are warm.
+pub fn conv2d_into(
+    x: &Tensor,
+    w: &Tensor,
+    bias: &[f32],
+    stride: usize,
+    groups: usize,
+    scratch: &mut ConvScratch,
+    out: &mut Tensor,
+) {
     assert_eq!(x.rank(), 4);
     assert_eq!(w.rank(), 4);
     let (b, cin) = (x.shape[0], x.shape[3]);
@@ -59,43 +101,45 @@ pub fn conv2d(x: &Tensor, w: &Tensor, bias: &[f32], stride: usize, groups: usize
     assert_eq!(bias.len(), cout);
     let cg_in = cin / groups;
     let cg_out = cout / groups;
+    let (oh, ow) = (out_dim(x.shape[1], stride), out_dim(x.shape[2], stride));
 
-    let (oh, ow);
-    let mut out;
     if groups == 1 {
-        let (cols, oh_, ow_) = im2col(x, k, stride, 0, cin);
-        oh = oh_;
-        ow = ow_;
+        im2col_into(x, k, stride, 0, cin, &mut scratch.cols);
         // weight [k,k,cin,cout] is already [k*k*cin, cout] row-major
-        let wmat = Tensor::new(vec![k * k * cin, cout], w.data.clone());
-        out = cols.matmul(&wmat).data;
+        matmul_slices(&scratch.cols, b * oh * ow, k * k * cin, &w.data, cout, &mut out.data);
     } else {
-        oh = out_dim(x.shape[1], stride);
-        ow = out_dim(x.shape[2], stride);
-        out = vec![0.0f32; b * oh * ow * cout];
+        out.data.clear();
+        out.data.resize(b * oh * ow * cout, 0.0);
         for g in 0..groups {
-            let (cols, _, _) = im2col(x, k, stride, g * cg_in, cg_in);
+            im2col_into(x, k, stride, g * cg_in, cg_in, &mut scratch.cols);
             // group weight slice: [k,k,cg_in,cout] -> columns [g*cg_out..]
-            let mut wg = vec![0.0f32; k * k * cg_in * cg_out];
+            scratch.wg.clear();
+            scratch.wg.resize(k * k * cg_in * cg_out, 0.0);
             for r in 0..k * k * cg_in {
                 let src = r * cout + g * cg_out;
-                wg[r * cg_out..(r + 1) * cg_out]
+                scratch.wg[r * cg_out..(r + 1) * cg_out]
                     .copy_from_slice(&w.data[src..src + cg_out]);
             }
-            let wmat = Tensor::new(vec![k * k * cg_in, cg_out], wg);
-            let og = cols.matmul(&wmat);
-            for (row, chunk) in og.data.chunks(cg_out).enumerate() {
+            matmul_slices(
+                &scratch.cols,
+                b * oh * ow,
+                k * k * cg_in,
+                &scratch.wg,
+                cg_out,
+                &mut scratch.gout,
+            );
+            for (row, chunk) in scratch.gout.chunks(cg_out).enumerate() {
                 let dst = row * cout + g * cg_out;
-                out[dst..dst + cg_out].copy_from_slice(chunk);
+                out.data[dst..dst + cg_out].copy_from_slice(chunk);
             }
         }
     }
-    for chunk in out.chunks_mut(cout) {
+    for chunk in out.data.chunks_mut(cout) {
         for (o, &bv) in chunk.iter_mut().zip(bias) {
             *o += bv;
         }
     }
-    Tensor::new(vec![b, oh, ow, cout], out)
+    out.shape = vec![b, oh, ow, cout];
 }
 
 #[cfg(test)]
@@ -164,5 +208,33 @@ mod tests {
         );
         let y = conv2d(&x, &wg, &[0.0; 4], 1, 2);
         assert_eq!(y.data, vec![1.0, 2.0, 15.0, 20.0]);
+    }
+
+    #[test]
+    fn scratch_reuse_is_bit_identical_across_geometries() {
+        // one ConvScratch driven through different shapes must keep matching
+        // the allocating path exactly (stale-buffer regression guard)
+        let mk = |shape: &[usize], seed: u64| {
+            let mut rng = crate::data::Rng::new(seed);
+            let n = shape.iter().product::<usize>();
+            Tensor::new(shape.to_vec(), (0..n).map(|_| rng.normal()).collect())
+        };
+        let mut scratch = ConvScratch::new();
+        let mut out = Tensor { shape: vec![0], data: Vec::new() };
+        let cases: &[(&[usize], &[usize], usize, usize)] = &[
+            (&[2, 6, 6, 4], &[3, 3, 4, 8], 1, 1),
+            (&[1, 5, 5, 4], &[3, 3, 4, 8], 2, 1),
+            (&[2, 4, 4, 4], &[3, 3, 1, 4], 1, 4),
+            (&[2, 6, 6, 4], &[3, 3, 4, 8], 1, 1), // revisit first geometry
+        ];
+        for (i, (xs, ws, stride, groups)) in cases.iter().enumerate() {
+            let x = mk(xs, 10 + i as u64);
+            let w = mk(ws, 20 + i as u64);
+            let bias: Vec<f32> = (0..ws[3]).map(|j| j as f32 * 0.1).collect();
+            conv2d_into(&x, &w, &bias, *stride, *groups, &mut scratch, &mut out);
+            let want = conv2d(&x, &w, &bias, *stride, *groups);
+            assert_eq!(out.shape, want.shape, "case {i}");
+            assert_eq!(out.data, want.data, "case {i}");
+        }
     }
 }

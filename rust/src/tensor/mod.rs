@@ -137,20 +137,8 @@ impl Tensor {
         let (m, k) = (self.shape[0], self.shape[1]);
         let (k2, n) = (w.shape[0], w.shape[1]);
         assert_eq!(k, k2);
-        let mut out = vec![0.0f32; m * n];
-        for i in 0..m {
-            let xrow = &self.data[i * k..(i + 1) * k];
-            let orow = &mut out[i * n..(i + 1) * n];
-            for (kk, &xv) in xrow.iter().enumerate() {
-                if xv == 0.0 {
-                    continue;
-                }
-                let wrow = &w.data[kk * n..(kk + 1) * n];
-                for (o, &wv) in orow.iter_mut().zip(wrow) {
-                    *o += xv * wv;
-                }
-            }
-        }
+        let mut out = Vec::new();
+        matmul_slices(&self.data, m, k, &w.data, n, &mut out);
         Tensor::new(vec![m, n], out)
     }
 
@@ -184,6 +172,31 @@ impl Tensor {
             }
         }
         out
+    }
+}
+
+/// x[m,k] @ w[k,n] written into `out` (cleared and resized first, so a
+/// right-sized buffer is reused without reallocation).  This is THE matmul
+/// inner loop — [`Tensor::matmul`] and the scratch-based conv path both call
+/// it, which is what makes the buffer-reusing deployment forward bit-exactly
+/// equal to the allocating one.
+pub fn matmul_slices(x: &[f32], m: usize, k: usize, w: &[f32], n: usize, out: &mut Vec<f32>) {
+    debug_assert_eq!(x.len(), m * k);
+    debug_assert_eq!(w.len(), k * n);
+    out.clear();
+    out.resize(m * n, 0.0);
+    for i in 0..m {
+        let xrow = &x[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (kk, &xv) in xrow.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let wrow = &w[kk * n..(kk + 1) * n];
+            for (o, &wv) in orow.iter_mut().zip(wrow) {
+                *o += xv * wv;
+            }
+        }
     }
 }
 

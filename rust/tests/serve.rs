@@ -1,0 +1,170 @@
+//! Serving-path integration tests: batched-vs-single integer-forward parity
+//! and batcher/engine correctness under contention.
+//!
+//! Everything here is hermetic — the built-in synthetic arch goes through
+//! the same IR, trainable-init and deployment machinery as the manifest
+//! archs, so no AOT artifacts are required.
+
+use std::path::Path;
+use std::sync::Mutex;
+use std::time::Duration;
+
+use qft::data::{Dataset, Split};
+use qft::nn::{ArchSpec, ParamMap};
+use qft::quant::deploy::{
+    forward_integer, forward_integer_batch, DeployScratch, DeployedModel, Mode,
+};
+use qft::serve::{synthetic_trainables, Engine, Registry, ServeConfig};
+use qft::Tensor;
+
+fn trainables(mode: Mode, seed: u64) -> (ArchSpec, ParamMap) {
+    synthetic_trainables(mode, seed)
+}
+
+#[test]
+fn batched_integer_forward_matches_singles_bit_exactly() {
+    for mode in [Mode::Lw, Mode::Dch] {
+        let (arch, tm) = trainables(mode, 42);
+        let ds = Dataset::new(1);
+        let n = 6;
+        let (xb, _, _) = ds.batch(Split::Val, 0, n);
+        let px = arch.input_hw * arch.input_hw * arch.input_ch;
+        let nc = arch.num_classes;
+
+        let mut scratch = DeployScratch::new();
+        let lb = forward_integer_batch(&arch, &tm, mode, &xb, Some(&mut scratch));
+        assert_eq!(lb.shape, vec![n, nc]);
+
+        for i in 0..n {
+            let xi = Tensor::new(
+                vec![1, arch.input_hw, arch.input_hw, arch.input_ch],
+                xb.data[i * px..(i + 1) * px].to_vec(),
+            );
+            let (li, _) = forward_integer(&arch, &tm, mode, &xi, None);
+            assert_eq!(
+                &lb.data[i * nc..(i + 1) * nc],
+                &li.data[..],
+                "{mode:?} image {i}: batched row != single-image logits"
+            );
+        }
+    }
+}
+
+#[test]
+fn batch_split_points_do_not_change_results() {
+    // [6] vs [4]+[2] through the SAME scratch: grouping must not matter
+    let (arch, tm) = trainables(Mode::Lw, 9);
+    let model = DeployedModel::prepare(&arch, &tm, Mode::Lw);
+    let ds = Dataset::new(2);
+    let (xb, _, _) = ds.batch(Split::Val, 0, 6);
+    let px = arch.input_hw * arch.input_hw * arch.input_ch;
+
+    let mut scratch = DeployScratch::new();
+    let all = model.forward_batch(&xb, &mut scratch);
+    let first = Tensor::new(vec![4, 16, 16, 3], xb.data[..4 * px].to_vec());
+    let second = Tensor::new(vec![2, 16, 16, 3], xb.data[4 * px..].to_vec());
+    let l1 = model.forward_batch(&first, &mut scratch);
+    let l2 = model.forward_batch(&second, &mut scratch);
+    let mut joined = l1.data.clone();
+    joined.extend_from_slice(&l2.data);
+    assert_eq!(all.data, joined);
+}
+
+#[test]
+fn dch_integer_deployment_is_bit_exact_with_fakequant_twin() {
+    let (arch, tm) = trainables(Mode::Dch, 5);
+    let ds = Dataset::new(3);
+    let (x, _, _) = ds.batch(Split::Val, 0, 4);
+    let (lf, ff) = qft::quant::deploy::forward_fakequant(&arch, &tm, Mode::Dch, &x);
+    let (li, fi) = forward_integer(&arch, &tm, Mode::Dch, &x, None);
+    assert_eq!(lf.data, li.data);
+    assert_eq!(ff.data, fi.data);
+}
+
+#[test]
+fn engine_neither_drops_nor_duplicates_under_contention() {
+    // tiny queue + many clients: backpressure, batching and reply routing
+    // all under stress; every request must get exactly one reply
+    let registry = Registry::load(
+        Path::new("artifacts_nonexistent_for_test"),
+        &[("synthetic".to_string(), Mode::Lw)],
+    )
+    .unwrap();
+    let cfg = ServeConfig {
+        workers: 4,
+        max_batch: 4,
+        max_wait: Duration::from_micros(100),
+        queue_cap: 8,
+    };
+    let engine = Engine::start(registry, &cfg);
+    let clients = 8u64;
+    let per_client = 40u64;
+    let seen: Mutex<Vec<u64>> = Mutex::new(Vec::new());
+
+    std::thread::scope(|s| {
+        for c in 0..clients {
+            let client = engine.client();
+            let seen = &seen;
+            s.spawn(move || {
+                let ds = Dataset::new(c);
+                for i in 0..per_client {
+                    let (img, _) = ds.sample(Split::Val, i);
+                    let rep = client
+                        .infer_timeout(0, img, Duration::from_secs(60))
+                        .expect("request dropped");
+                    assert!(rep.batch_size >= 1 && rep.batch_size <= 4);
+                    assert!(rep.top1 < qft::data::NUM_CLASSES);
+                    seen.lock().unwrap().push(rep.id);
+                }
+            });
+        }
+    });
+
+    let report = engine.shutdown();
+    let want = (clients * per_client) as usize;
+    let mut ids = seen.into_inner().unwrap();
+    assert_eq!(ids.len(), want, "missing replies");
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), want, "duplicated replies");
+    assert_eq!(report.requests as usize, want);
+    assert!(report.batches as usize <= want);
+    assert!(report.p50_us <= report.p99_us);
+}
+
+#[test]
+fn serving_replies_match_offline_batched_forward() {
+    // the engine must return exactly what the offline deployment path returns
+    let registry = Registry::load(
+        Path::new("artifacts_nonexistent_for_test"),
+        &[("synthetic".to_string(), Mode::Lw)],
+    )
+    .unwrap();
+    let model_logits = {
+        let ds = Dataset::new(0);
+        let (x, _, _) = ds.batch(Split::Val, 0, 8);
+        let mut scratch = DeployScratch::new();
+        registry.get(0).model.forward_batch(&x, &mut scratch)
+    };
+    let engine = Engine::start(registry, &ServeConfig::default());
+    let client = engine.client();
+    let ds = Dataset::new(0);
+    for i in 0..8usize {
+        let (img, _) = ds.sample(Split::Val, i as u64);
+        let rep = client.infer(0, img).unwrap();
+        let nc = rep.logits.len();
+        assert_eq!(
+            rep.logits,
+            model_logits.data[i * nc..(i + 1) * nc].to_vec(),
+            "request {i}"
+        );
+    }
+    engine.shutdown();
+}
+
+#[test]
+fn eval_integer_rust_runs_on_synthetic_arch() {
+    let (arch, tm) = trainables(Mode::Lw, 0);
+    let acc = qft::coordinator::eval::eval_integer_rust(&arch, &tm, Mode::Lw, 64, 0);
+    assert!((0.0..=1.0).contains(&acc));
+}
