@@ -1,6 +1,6 @@
 # QFT reproduction — build / verify entry points.
 
-.PHONY: check build test fmt artifacts bench-serve
+.PHONY: check build test fmt artifacts bench-serve par-bench
 
 # Tier-1 verification: release build, full test suite, formatting.
 check:
@@ -26,3 +26,8 @@ artifacts:
 # BENCH_serve.json).
 bench-serve:
 	cargo bench --bench serve_throughput
+
+# Parallel kernel engine bench: serial vs pooled single-request conv/GEMM
+# at 1/2/4 threads (emits BENCH_par.json).
+par-bench:
+	cargo bench --bench par_kernels

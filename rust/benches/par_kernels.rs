@@ -1,0 +1,135 @@
+//! Bench P — the `qft::par` kernel engine: single-request conv and GEMM
+//! throughput at pool widths 1/2/4 against the serial baseline, plus a
+//! whole-network single-image forward.  Emits `BENCH_par.json`.
+//!
+//! Everything here is single-request parallelism — one conv / one GEMM /
+//! one image split across the pool — the exact case PR 1's worker-level
+//! scaling could not touch.
+
+#[path = "util/mod.rs"]
+mod util;
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use qft::par::Pool;
+use qft::quant::deploy::{DeployScratch, Mode};
+use qft::serve::synthetic_model;
+use qft::tensor::conv::{conv2d_into, conv2d_into_par, ConvScratch};
+use qft::tensor::{matmul_slices, matmul_slices_par};
+use qft::util::json::Value;
+use qft::Tensor;
+
+fn rand_tensor(shape: &[usize], seed: u64) -> Tensor {
+    let mut rng = qft::data::Rng::new(seed);
+    let n: usize = shape.iter().product();
+    Tensor::new(shape.to_vec(), (0..n).map(|_| rng.normal()).collect())
+}
+
+/// Wall-time per op over `iters` timed iterations (2 warm-up passes).
+fn time_per_op(iters: usize, mut f: impl FnMut()) -> f64 {
+    for _ in 0..2 {
+        f();
+    }
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    t0.elapsed().as_secs_f64() / iters as f64
+}
+
+fn row(kernel: &str, threads: usize, s_per_op: f64, serial_s: f64) -> Value {
+    let mut m = HashMap::new();
+    m.insert("kernel".to_string(), Value::Str(kernel.to_string()));
+    m.insert("threads".to_string(), Value::Num(threads as f64));
+    m.insert("ms_per_op".to_string(), Value::Num(s_per_op * 1e3));
+    m.insert(
+        "speedup_vs_serial".to_string(),
+        Value::Num(if s_per_op > 0.0 { serial_s / s_per_op } else { 0.0 }),
+    );
+    Value::Obj(m)
+}
+
+fn main() {
+    util::section("qft::par kernel engine (single-request conv/GEMM)");
+    println!(
+        "host parallelism: {}",
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    );
+    let widths = [1usize, 2, 4];
+    let iters = 8;
+    let mut rows = Vec::new();
+
+    // GEMM: one m x k @ k x n matmul, rows split across the pool
+    let (m, k, n) = (1024usize, 256, 256);
+    let x = rand_tensor(&[m, k], 1);
+    let w = rand_tensor(&[k, n], 2);
+    let mut out = Vec::new();
+    let gemm_serial =
+        time_per_op(iters, || matmul_slices(&x.data, m, k, &w.data, n, &mut out));
+    println!("[gemm {m}x{k}x{n}] serial: {:.2} ms/op", gemm_serial * 1e3);
+    rows.push(row("gemm", 0, gemm_serial, gemm_serial));
+    for &t in &widths {
+        let pool = Pool::new(t);
+        let s = time_per_op(iters, || {
+            matmul_slices_par(&x.data, m, k, &w.data, n, &mut out, &pool)
+        });
+        println!(
+            "[gemm {m}x{k}x{n}] pool {t}: {:.2} ms/op ({:.2}x)",
+            s * 1e3,
+            gemm_serial / s
+        );
+        rows.push(row("gemm", t, s, gemm_serial));
+    }
+
+    // conv: one NHWC conv, output rows split across the pool
+    let cx = rand_tensor(&[1, 32, 32, 32], 3);
+    let cw = rand_tensor(&[3, 3, 32, 64], 4);
+    let bias = vec![0.1f32; 64];
+    let mut scratch = ConvScratch::new();
+    let mut cout = Tensor::default();
+    let conv_serial =
+        time_per_op(iters, || conv2d_into(&cx, &cw, &bias, 1, 1, &mut scratch, &mut cout));
+    println!("[conv 32x32x32->64] serial: {:.2} ms/op", conv_serial * 1e3);
+    rows.push(row("conv", 0, conv_serial, conv_serial));
+    for &t in &widths {
+        let pool = Pool::new(t);
+        let s = time_per_op(iters, || {
+            conv2d_into_par(&cx, &cw, &bias, 1, 1, &mut scratch, &mut cout, &pool)
+        });
+        println!(
+            "[conv 32x32x32->64] pool {t}: {:.2} ms/op ({:.2}x)",
+            s * 1e3,
+            conv_serial / s
+        );
+        rows.push(row("conv", t, s, conv_serial));
+    }
+
+    // whole network, one image: intra-op parallelism through every conv
+    let model = synthetic_model(Mode::Lw, 0);
+    let ds = qft::data::Dataset::new(0);
+    let (img, _) = ds.sample(qft::data::Split::Val, 0);
+    let xi = Tensor::new(vec![1, model.input_hw, model.input_hw, model.input_ch], img);
+    let mut dscratch = DeployScratch::new();
+    let fwd_serial = time_per_op(iters, || {
+        std::hint::black_box(model.forward_batch(&xi, &mut dscratch));
+    });
+    println!("[forward 1 image] serial: {:.3} ms/op", fwd_serial * 1e3);
+    rows.push(row("forward1", 0, fwd_serial, fwd_serial));
+    for &t in &widths {
+        let pool = Pool::new(t);
+        let s = time_per_op(iters, || {
+            std::hint::black_box(model.forward_batch_pooled(&xi, &mut dscratch, &pool));
+        });
+        println!(
+            "[forward 1 image] pool {t}: {:.3} ms/op ({:.2}x)",
+            s * 1e3,
+            fwd_serial / s
+        );
+        rows.push(row("forward1", t, s, fwd_serial));
+    }
+
+    std::fs::write("BENCH_par.json", Value::Arr(rows).to_string_compact())
+        .expect("write BENCH_par.json");
+    println!("wrote BENCH_par.json");
+}

@@ -88,7 +88,10 @@ pub fn eval_q_rust(
 /// Pure-rust *integer-deployment* eval: prepares the frozen constants once
 /// and drives the same batched `forward_integer` path (with reused scratch
 /// buffers) that the serving workers run — so offline accuracy numbers and
-/// the online server execute literally the same code.
+/// the online server execute literally the same code.  Batches go through
+/// the process-wide [`crate::par::global`] pool (the same one the serve
+/// engine submits to), and the parallel path is bit-identical to the serial
+/// one, so accuracies are independent of `--threads`.
 pub fn eval_integer_rust(
     arch: &crate::nn::ArchSpec,
     tm: &ParamMap,
@@ -98,13 +101,14 @@ pub fn eval_integer_rust(
 ) -> f32 {
     let model = crate::quant::deploy::DeployedModel::prepare(arch, tm, mode);
     let mut scratch = crate::quant::deploy::DeployScratch::new();
+    let pool = crate::par::global();
     let ds = Dataset::new(seed);
     let b = arch.batch;
     let mut correct = 0usize;
     let mut total = 0usize;
     for i in 0..n_images / b {
         let (x, _, labels) = ds.batch(Split::Val, (i * b) as u64, b);
-        let logits = model.forward_batch(&x, &mut scratch);
+        let logits = model.forward_batch_pooled(&x, &mut scratch, pool);
         let preds = logits.argmax_lastdim();
         correct += preds.iter().zip(&labels).filter(|(p, l)| p == l).count();
         total += b;

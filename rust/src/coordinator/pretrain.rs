@@ -37,7 +37,11 @@ pub fn cosine_lr(base: f32, t: usize, total: usize) -> f32 {
     base * (0.5 * (1.0 + (std::f32::consts::PI * frac).cos())).max(0.02)
 }
 
-/// Spawn a prefetch thread producing (images, labels_f32) batches.
+/// Spawn a prefetch thread producing (images, labels_f32) batches: a cyclic
+/// walk over a fixed pool of `n_images`.  Every index wraps modulo the pool
+/// (not just the batch start), so when `batch` does not divide `n_images`
+/// the trailing partial batch re-reads the pool head instead of sampling
+/// images beyond the pool budget.
 pub fn batch_stream(
     ds: Dataset,
     split: Split,
@@ -47,10 +51,10 @@ pub fn batch_stream(
 ) -> mpsc::Receiver<(Tensor, Tensor)> {
     let (tx, rx) = mpsc::sync_channel(4);
     std::thread::spawn(move || {
+        let pool = n_images.max(1);
         let mut cursor = 0u64;
         for _ in 0..steps {
-            let start = cursor % n_images.max(batch as u64);
-            let (x, yf, _) = ds.batch(split, start, batch);
+            let (x, yf, _) = ds.batch_wrapped(split, cursor % pool, batch, pool);
             cursor += batch as u64;
             if tx.send((x, yf)).is_err() {
                 return;

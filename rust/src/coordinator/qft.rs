@@ -71,19 +71,34 @@ impl QftConfig {
         c
     }
 
+    /// Steps per epoch at batch size `batch`, rounded UP: when `batch` does
+    /// not divide `images_per_epoch` the trailing partial batch still runs
+    /// (the calibration pool is cyclic, so that batch wraps to the head of
+    /// the pool instead of silently dropping the tail images).  The §4 LR
+    /// reload windows are exact multiples of this, so epoch boundaries and
+    /// schedule boundaries always coincide.
+    pub fn steps_per_epoch(&self, batch: usize) -> usize {
+        (self.images_per_epoch as usize).div_ceil(batch.max(1)).max(1)
+    }
+
+    /// Exact total step count: `epochs * steps_per_epoch(batch)`.  Never
+    /// truncates, so the last epoch is as long as every other and the
+    /// cosine windows in [`qft_lr`] never drift from the data epochs.
     pub fn total_steps(&self, batch: usize) -> usize {
-        (self.epochs as u64 * self.images_per_epoch) as usize / batch
+        self.epochs * self.steps_per_epoch(batch)
     }
 }
 
 /// §4 LR schedule: cosine decaying across 4 epochs, reloading at half the
 /// base every 4 epochs (1e-4 → 5e-5 @4 → 2.5e-5 @8 in the paper).
+/// `steps_per_epoch == 0` is clamped to 1 everywhere (including the cosine
+/// denominator) so the schedule degrades to a finite value, never NaN.
 pub fn qft_lr(base: f32, step: usize, steps_per_epoch: usize) -> f32 {
-    let epoch = step / steps_per_epoch.max(1);
+    let spe = steps_per_epoch.max(1);
+    let epoch = step / spe;
     let window = epoch / 4;
     let base_w = base / 2f32.powi(window as i32);
-    let frac_in_window = (step as f32 - (window * 4 * steps_per_epoch) as f32)
-        / (4 * steps_per_epoch) as f32;
+    let frac_in_window = (step as f32 - (window * 4 * spe) as f32) / (4 * spe) as f32;
     base_w * 0.5 * (1.0 + (std::f32::consts::PI * frac_in_window.clamp(0.0, 1.0)).cos())
 }
 
@@ -132,7 +147,7 @@ pub fn run_qft(
 
     let batch = arch.batch;
     let steps = cfg.total_steps(batch);
-    let steps_per_epoch = ((cfg.images_per_epoch as usize) / batch).max(1);
+    let steps_per_epoch = cfg.steps_per_epoch(batch);
     let ds = Dataset::new(cfg.seed);
     let rx = batch_stream(ds, Split::Calib, cfg.calib_images, batch, steps);
 
@@ -142,7 +157,14 @@ pub fn run_qft(
 
     let mut losses = Vec::with_capacity(steps);
     for step in 0..steps {
-        let (x, _) = rx.recv().expect("batch stream ended early");
+        // a dead prefetch thread must surface as a coordinator error, not
+        // abort the process mid-finetune
+        let (x, _) = rx.recv().map_err(|_| {
+            anyhow::anyhow!(
+                "calibration batch stream ended early at step {step}/{steps} \
+                 (prefetch thread died)"
+            )
+        })?;
         let lr = qft_lr(cfg.base_lr, step, steps_per_epoch);
         let mut inputs = Vec::with_capacity(3 * n + 4 + teacher_ordered.len() + 1);
         inputs.extend(tr.iter().cloned());
@@ -194,5 +216,39 @@ mod tests {
     fn config_step_accounting() {
         let cfg = QftConfig::standard(Mode::Lw);
         assert_eq!(cfg.total_steps(8), 12 * 512 / 8);
+    }
+
+    #[test]
+    fn step_accounting_is_exact_at_non_dividing_batch() {
+        // standard: 12 epochs x 512 images
+        let cfg = QftConfig::standard(Mode::Lw);
+        // dividing batch: unchanged behaviour
+        assert_eq!(cfg.steps_per_epoch(8), 64);
+        assert_eq!(cfg.total_steps(8), 12 * 64);
+        // non-dividing batch: rounds UP (truncation used to drop the 2
+        // trailing images every epoch and shrink the schedule by 8 steps)
+        assert_eq!(cfg.steps_per_epoch(5), 103); // ceil(512/5)
+        assert_eq!(cfg.total_steps(5), 12 * 103);
+        for b in [1usize, 3, 5, 7, 8, 100, 511, 512, 1000] {
+            // LR windows are whole multiples of the epoch length...
+            assert_eq!(cfg.total_steps(b), cfg.epochs * cfg.steps_per_epoch(b));
+            // ...and no calibration image is ever dropped
+            assert!(cfg.steps_per_epoch(b) * b >= cfg.images_per_epoch as usize, "batch {b}");
+        }
+        // degenerate batch stays sane instead of dividing by zero
+        assert_eq!(cfg.steps_per_epoch(0), 512);
+    }
+
+    #[test]
+    fn lr_is_finite_at_zero_steps_per_epoch() {
+        // steps_per_epoch == 0 used to NaN the cosine fraction denominator
+        let base = 1e-4f32;
+        let lr0 = qft_lr(base, 0, 0);
+        assert!(lr0.is_finite());
+        assert!((lr0 - base).abs() < 1e-9, "{lr0}");
+        for step in [1usize, 3, 4, 17] {
+            let lr = qft_lr(base, step, 0);
+            assert!(lr.is_finite() && lr >= 0.0 && lr <= base, "step {step}: {lr}");
+        }
     }
 }

@@ -167,11 +167,30 @@ impl Dataset {
 
     /// A batch as NHWC tensor + labels-as-f32 (the AOT contract).
     pub fn batch(&self, split: Split, start: u64, bsz: usize) -> (Tensor, Tensor, Vec<usize>) {
+        // a u64::MAX pool makes the modulo the identity for every
+        // reachable index — one batch-assembly loop for both entry points
+        self.batch_wrapped(split, start, bsz, u64::MAX)
+    }
+
+    /// As [`Self::batch`] but split-local indices wrap modulo a pool of
+    /// `pool_images`: sample `i` is `(start + i) % pool_images`.  This is
+    /// what keeps a fixed train/calibration pool truly fixed when the batch
+    /// size does not divide it — the trailing partial batch re-reads the
+    /// pool head instead of minting fresh images beyond the pool budget.
+    /// Identical to [`Self::batch`] whenever `start + bsz <= pool_images`.
+    pub fn batch_wrapped(
+        &self,
+        split: Split,
+        start: u64,
+        bsz: usize,
+        pool_images: u64,
+    ) -> (Tensor, Tensor, Vec<usize>) {
+        let pool = pool_images.max(1);
         let mut imgs = Vec::with_capacity(bsz * HW * HW * CH);
         let mut labels_f = Vec::with_capacity(bsz);
         let mut labels = Vec::with_capacity(bsz);
         for i in 0..bsz {
-            let (img, lab) = self.sample(split, start + i as u64);
+            let (img, lab) = self.sample(split, (start + i as u64) % pool);
             imgs.extend_from_slice(&img);
             labels_f.push(lab as f32);
             labels.push(lab);
@@ -196,6 +215,23 @@ mod tests {
         let (b, lb) = d2.sample(Split::Train, 42);
         assert_eq!(a, b);
         assert_eq!(la, lb);
+    }
+
+    #[test]
+    fn wrapped_batch_reuses_pool_head_instead_of_minting_images() {
+        let ds = Dataset::new(3);
+        let pool = 512u64;
+        // trailing partial batch: starts 2 before the pool end, wraps
+        let (wx, _, wl) = ds.batch_wrapped(Split::Calib, pool - 2, 5, pool);
+        let (head, _, hl) = ds.batch(Split::Calib, 0, 3);
+        let px = HW * HW * CH;
+        // rows 2..5 must be pool images 0..3, NOT images 512..515
+        assert_eq!(&wx.data[2 * px..], &head.data[..]);
+        assert_eq!(&wl[2..], &hl[..]);
+        // inside the pool it is plain `batch`
+        let (a, _, _) = ds.batch_wrapped(Split::Calib, 17, 8, pool);
+        let (b, _, _) = ds.batch(Split::Calib, 17, 8);
+        assert_eq!(a.data, b.data);
     }
 
     #[test]

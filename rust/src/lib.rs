@@ -44,12 +44,37 @@
 //! checkout (`cargo bench --bench serve_throughput` emits
 //! `BENCH_serve.json`).
 //!
+//! ## Parallelism — `qft::par`
+//!
+//! [`par`] is a std-only (threads + channels) chunk-based scoped thread
+//! pool behind every intra-op parallel kernel: the GEMM
+//! [`tensor::matmul_slices_par`], the conv
+//! [`tensor::conv::conv2d_into_par`], and the batch-level
+//! [`quant::deploy::DeployedModel::forward_batch_pooled`].
+//!
+//! *Pool sharing model*: there is ONE process-wide pool ([`par::global`]),
+//! sized by the `--threads` CLI flag on `serve` / `bench-serve` / the eval
+//! commands (else `available_parallelism`).  The [`serve::Engine`] workers
+//! and [`coordinator::eval::eval_integer_rust`] all submit scopes to it,
+//! so concurrent callers cooperate on one worker set instead of
+//! oversubscribing the machine; [`serve::ServeStats`] reports the pool
+//! width alongside latency.  Tests and benches build private
+//! [`par::Pool`]s at explicit widths.
+//!
+//! *Bit-exactness contract*: every parallel kernel pre-partitions work into
+//! disjoint output-row chunks and runs the identical serial inner loop
+//! (the crate-private `tensor::matmul_rows`) over each, so per-element f32
+//! accumulation order is unchanged and results are bit-identical to the
+//! serial path at any thread count (enforced by `rust/tests/par.rs` at
+//! 1/2/8 threads in both `lw` and `dch` modes).
+//!
 //! The public API is consumed by the `repro` CLI, `examples/` and
 //! `rust/benches/` (one bench per paper table/figure).
 
 pub mod coordinator;
 pub mod data;
 pub mod nn;
+pub mod par;
 pub mod quant;
 pub mod runtime;
 pub mod serve;

@@ -48,14 +48,19 @@ COMMANDS:
 
 SERVING (pure-rust integer deployment path; no PJRT needed):
   serve     [--arch A] [--mode lw|dch] [--workers N] [--max-batch B]
-            [--max-wait-us U] [--queue-cap Q] [--requests R]
+            [--max-wait-us U] [--queue-cap Q] [--requests R] [--threads T]
                                           load A/MODE into the registry, run a
                                           closed-loop smoke client over R val
                                           images, report accuracy + latency
   bench-serve [--arch A] [--mode lw|dch] [--workers N] [--max-batch B]
             [--max-wait-us U] [--queue-cap Q] [--concurrency C]
-            [--requests R]                C closed-loop clients x R requests
+            [--requests R] [--threads T]  C closed-loop clients x R requests
                                           each; reports images/sec + p50/95/99
+
+Every command accepts --threads T: the width of the ONE process-wide
+qft::par kernel pool that serve workers and the integer eval share
+(default: available parallelism).  Results never depend on T — the
+parallel kernels are bit-identical to their serial twins.
 
 Weights for serving resolve from weights/A.MODE.qftw (qft export), else
 weights/A.qftw (FP teacher + offline PTQ init), else he-init smoke weights.
@@ -65,7 +70,7 @@ Without artifacts/manifest.json a built-in `synthetic` arch is served.
 /// Every `--key value` option any command accepts (unknown keys are errors).
 const KV_KEYS: &[&str] = &[
     "arch", "archs", "steps", "lr", "mode", "ce-mix", "workers", "max-batch",
-    "max-wait-us", "queue-cap", "requests", "concurrency",
+    "max-wait-us", "queue-cap", "requests", "concurrency", "threads",
 ];
 /// Every boolean `--flag`.
 const BOOL_FLAGS: &[&str] = &["cle", "frozen-scales", "fast"];
@@ -167,6 +172,15 @@ fn main() -> Result<()> {
     }
     let rest = &argv[1..];
     let args = Args::parse(rest, BOOL_FLAGS, KV_KEYS)?;
+
+    // size the process-wide kernel pool before anything touches it (the
+    // pool is built lazily on first use and its width is then fixed)
+    if let Some(t) = args.kv.get("threads") {
+        let t: usize = t.parse()?;
+        if !qft::par::configure_global(t) {
+            bail!("--threads {t}: the kernel pool already runs at a different width");
+        }
+    }
 
     match cmd.as_str() {
         // the serving commands run the pure-rust deployment path and must

@@ -1,0 +1,329 @@
+//! `qft::par` — a shared, chunk-based thread pool for the integer kernel
+//! path (S16).
+//!
+//! Design constraints (see `DESIGN.md` and the serving docs in [`crate`]):
+//!
+//! * **std only** — threads + channels + condvars; the image's cargo cache
+//!   has no rayon/crossbeam, and the workloads are coarse, regular chunks,
+//!   so work stealing buys nothing: every primitive here pre-partitions
+//!   work into contiguous chunks and hands one chunk to one task.
+//! * **one process-wide pool** — the serve [`crate::serve::Engine`] workers
+//!   and [`crate::coordinator::eval::eval_integer_rust`] all submit scopes
+//!   to the same [`global`] pool, so concurrent callers cooperate (their
+//!   tasks interleave on the same worker set) instead of oversubscribing
+//!   the machine with per-caller pools.
+//! * **bit-exactness contract** — parallel callers split work so that each
+//!   task owns a *disjoint output row range* and runs the *identical serial
+//!   inner loop* over it.  Per-element f32 accumulation order is therefore
+//!   unchanged, and every parallel kernel is bit-identical to its serial
+//!   twin at any thread count (enforced by `rust/tests/par.rs`).
+//!
+//! The submitting thread always participates: [`Pool::scope`] drains the
+//! scope's own task queue before blocking on completion, so a pool of width
+//! `t` runs `t-1` background workers, width 1 means fully serial, and a
+//! nested scope opened from inside a pool task cannot deadlock (its opener
+//! executes the nested tasks itself if every worker is busy).
+
+use std::ops::Range;
+use std::sync::{mpsc, Arc, Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
+
+/// A borrowed unit of work: runs once, on the submitting thread or a pool
+/// worker, strictly before the owning [`Pool::scope`] call returns.
+pub type ScopedTask<'a> = Box<dyn FnOnce() + Send + 'a>;
+
+/// One `scope()` call in flight: its pending tasks plus a completion latch.
+struct Scope {
+    queue: Mutex<Vec<Box<dyn FnOnce() + Send + 'static>>>,
+    remaining: Mutex<usize>,
+    done: Condvar,
+    /// First panic payload from any task, re-raised by the scope owner so
+    /// a parallel-only failure keeps its original diagnostic message.
+    panic: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+}
+
+impl Scope {
+    /// Pop-and-run until this scope's queue is empty.  Each finished task
+    /// decrements the latch; the last one wakes the scope owner.
+    fn run_pending(&self) {
+        loop {
+            let task = self.queue.lock().unwrap().pop();
+            let Some(task) = task else { return };
+            if let Err(payload) = std::panic::catch_unwind(std::panic::AssertUnwindSafe(task)) {
+                self.panic.lock().unwrap().get_or_insert(payload);
+            }
+            let mut rem = self.remaining.lock().unwrap();
+            *rem -= 1;
+            if *rem == 0 {
+                self.done.notify_all();
+            }
+        }
+    }
+
+    fn wait(&self) {
+        let mut rem = self.remaining.lock().unwrap();
+        while *rem > 0 {
+            rem = self.done.wait(rem).unwrap();
+        }
+    }
+}
+
+/// Chunk-based scoped thread pool (see module docs for the sharing and
+/// bit-exactness contracts).
+pub struct Pool {
+    threads: usize,
+    /// Scope hand-off to workers; `None` only during drop.
+    tx: Mutex<Option<mpsc::Sender<Arc<Scope>>>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl Pool {
+    /// Pool of total width `threads` (the submitting thread counts as one,
+    /// so this spawns `threads - 1` background workers; width <= 1 is a
+    /// fully serial pool with no threads at all).
+    pub fn new(threads: usize) -> Pool {
+        let threads = threads.max(1);
+        let (tx, rx) = mpsc::channel::<Arc<Scope>>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (1..threads)
+            .map(|i| {
+                let rx = rx.clone();
+                std::thread::Builder::new()
+                    .name(format!("qft-par-{i}"))
+                    .spawn(move || loop {
+                        // hold the receiver lock only for the recv itself
+                        let scope = match rx.lock().unwrap().recv() {
+                            Ok(s) => s,
+                            Err(_) => return,
+                        };
+                        scope.run_pending();
+                    })
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        Pool { threads, tx: Mutex::new(Some(tx)), workers }
+    }
+
+    /// Total parallel width (background workers + the submitting thread).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run every task to completion before returning, using the calling
+    /// thread plus up to `tasks.len() - 1` pool workers.  Tasks may borrow
+    /// from the caller's stack (that is the point); the first panicking
+    /// task's payload is re-raised here once all tasks have finished.
+    pub fn scope<'a>(&self, tasks: Vec<ScopedTask<'a>>) {
+        let n = tasks.len();
+        if n == 0 {
+            return;
+        }
+        if self.workers.is_empty() || n == 1 {
+            for t in tasks {
+                t();
+            }
+            return;
+        }
+        let mut queue: Vec<Box<dyn FnOnce() + Send + 'static>> = Vec::with_capacity(n);
+        for t in tasks {
+            // SAFETY: `scope` blocks on the latch below until every task has
+            // run (and been dropped), so borrows captured with lifetime 'a
+            // strictly outlive all uses; the 'static erasure never escapes.
+            queue.push(unsafe {
+                std::mem::transmute::<ScopedTask<'a>, Box<dyn FnOnce() + Send + 'static>>(t)
+            });
+        }
+        let scope = Arc::new(Scope {
+            queue: Mutex::new(queue),
+            remaining: Mutex::new(n),
+            done: Condvar::new(),
+            panic: Mutex::new(None),
+        });
+        // wake just enough workers; the caller takes a share itself
+        let helpers = self.workers.len().min(n - 1);
+        {
+            let tx = self.tx.lock().unwrap();
+            if let Some(tx) = tx.as_ref() {
+                for _ in 0..helpers {
+                    let _ = tx.send(scope.clone());
+                }
+            }
+        }
+        scope.run_pending();
+        scope.wait();
+        if let Some(payload) = scope.panic.lock().unwrap().take() {
+            std::panic::resume_unwind(payload);
+        }
+    }
+
+    /// Scoped parallel-for over chunk indices `0..chunks`: `f(i)` runs once
+    /// per index, distributed across the pool, returning when all are done.
+    pub fn par_for<F: Fn(usize) + Sync>(&self, chunks: usize, f: F) {
+        let f = &f;
+        let tasks: Vec<ScopedTask<'_>> = (0..chunks)
+            .map(|i| Box::new(move || f(i)) as ScopedTask<'_>)
+            .collect();
+        self.scope(tasks);
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        // closing the channel ends every worker's recv loop
+        self.tx.lock().unwrap().take();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Split `0..n` into at most `width` contiguous near-equal ranges of at
+/// least `min_per_chunk` items each.  Deterministic in its inputs only —
+/// chunk boundaries never depend on runtime state, and because parallel
+/// kernels give each range a disjoint output block run by the serial inner
+/// loop, the boundaries cannot affect results either.
+pub fn chunk_ranges(n: usize, width: usize, min_per_chunk: usize) -> Vec<Range<usize>> {
+    if n == 0 {
+        return Vec::new();
+    }
+    let chunks = width.max(1).min(n.div_ceil(min_per_chunk.max(1))).max(1);
+    let per = n.div_ceil(chunks);
+    (0..n).step_by(per).map(|s| s..(s + per).min(n)).collect()
+}
+
+static GLOBAL: OnceLock<Pool> = OnceLock::new();
+
+/// Build the process-wide pool at width `threads` (the `--threads` CLI
+/// flag).  The build happens inside the same `get_or_init` that [`global`]
+/// uses, so there is no configure-then-build window: whoever initializes
+/// first wins atomically.  Returns `true` iff the pool now runs at the
+/// requested width (i.e. this call built it, or an earlier one built it at
+/// the same width).
+pub fn configure_global(threads: usize) -> bool {
+    let want = threads.max(1);
+    GLOBAL.get_or_init(|| Pool::new(want)).threads() == want
+}
+
+/// The process-wide shared pool.  Built on first use at the
+/// [`configure_global`]-requested width, else at `available_parallelism`.
+pub fn global() -> &'static Pool {
+    GLOBAL.get_or_init(|| {
+        Pool::new(std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1))
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn par_for_runs_every_index_once() {
+        let pool = Pool::new(4);
+        let hits: Vec<AtomicUsize> = (0..37).map(|_| AtomicUsize::new(0)).collect();
+        pool.par_for(hits.len(), |i| {
+            hits[i].fetch_add(1, Ordering::SeqCst);
+        });
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::SeqCst), 1, "index {i}");
+        }
+    }
+
+    #[test]
+    fn scope_tasks_mutate_disjoint_slices() {
+        let pool = Pool::new(3);
+        let mut data = vec![0u64; 90];
+        {
+            let mut tasks: Vec<ScopedTask<'_>> = Vec::new();
+            for (ci, chunk) in data.chunks_mut(30).enumerate() {
+                tasks.push(Box::new(move || {
+                    for (j, v) in chunk.iter_mut().enumerate() {
+                        *v = (ci * 100 + j) as u64;
+                    }
+                }));
+            }
+            pool.scope(tasks);
+        }
+        for ci in 0..3 {
+            for j in 0..30 {
+                assert_eq!(data[ci * 30 + j], (ci * 100 + j) as u64);
+            }
+        }
+    }
+
+    #[test]
+    fn serial_pool_still_runs_everything() {
+        let pool = Pool::new(1);
+        assert_eq!(pool.threads(), 1);
+        let sum = AtomicUsize::new(0);
+        pool.par_for(10, |i| {
+            sum.fetch_add(i, Ordering::SeqCst);
+        });
+        assert_eq!(sum.load(Ordering::SeqCst), 45);
+    }
+
+    #[test]
+    fn nested_scopes_complete() {
+        // a task that opens its own scope must not deadlock the pool
+        let pool = Pool::new(2);
+        let total = AtomicUsize::new(0);
+        pool.par_for(4, |_| {
+            pool.par_for(4, |j| {
+                total.fetch_add(j + 1, Ordering::SeqCst);
+            });
+        });
+        assert_eq!(total.load(Ordering::SeqCst), 4 * 10);
+    }
+
+    #[test]
+    fn pool_survives_a_panicking_task() {
+        let pool = Pool::new(2);
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.par_for(3, |i| {
+                if i == 1 {
+                    panic!("boom");
+                }
+            });
+        }));
+        // the ORIGINAL payload must reach the scope owner, not a generic one
+        let payload = caught.expect_err("panic must propagate to the scope owner");
+        assert_eq!(payload.downcast_ref::<&str>(), Some(&"boom"));
+        // the pool is still usable afterwards
+        let sum = AtomicUsize::new(0);
+        pool.par_for(8, |i| {
+            sum.fetch_add(i, Ordering::SeqCst);
+        });
+        assert_eq!(sum.load(Ordering::SeqCst), 28);
+    }
+
+    #[test]
+    fn global_configure_is_atomic_first_wins() {
+        // NOTE: the only unit test allowed to touch GLOBAL — nothing else
+        // in the lib test binary calls global()/configure_global, so the
+        // first configure here deterministically builds the pool.
+        assert!(configure_global(3), "first configure must build the pool");
+        assert_eq!(global().threads(), 3);
+        // same-width reconfigure reports success, different width refuses
+        assert!(configure_global(3));
+        assert!(!configure_global(5));
+        assert_eq!(global().threads(), 3);
+    }
+
+    #[test]
+    fn chunk_ranges_cover_exactly() {
+        for (n, width, min) in
+            [(10, 4, 1), (10, 4, 8), (1, 8, 1), (100, 3, 7), (64, 64, 1), (5, 2, 100)]
+        {
+            let ranges = chunk_ranges(n, width, min);
+            assert!(ranges.len() <= width.max(1));
+            let mut next = 0;
+            for r in &ranges {
+                assert_eq!(r.start, next, "ranges must be contiguous");
+                assert!(r.end > r.start);
+                next = r.end;
+            }
+            assert_eq!(next, n, "ranges must cover 0..{n}");
+        }
+        assert!(chunk_ranges(0, 4, 1).is_empty());
+    }
+}

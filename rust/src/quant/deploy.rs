@@ -28,7 +28,8 @@
 use std::collections::HashMap;
 
 use crate::nn::{apply_act, ArchSpec, OpKind, ParamMap};
-use crate::tensor::conv::{conv2d, conv2d_into, ConvScratch};
+use crate::par::Pool;
+use crate::tensor::conv::{conv2d, conv2d_into, conv2d_into_par, ConvScratch};
 use crate::tensor::Tensor;
 use crate::WEIGHT_QMAX;
 
@@ -259,10 +260,19 @@ enum PreparedOp {
 /// Reusable buffers for the integer forward: one activation tensor per graph
 /// value plus the conv im2col scratch and the gap decode buffer.  After the
 /// first call at a given batch size the online path allocates nothing.
+///
+/// The batch-parallel path ([`DeployedModel::forward_batch_pooled`]) splits
+/// a batch into per-chunk sub-batches; each chunk owns one child scratch
+/// from `par` (plus its `input` staging tensor), so chunks never share a
+/// buffer and the same warm-buffer guarantee holds per chunk.
 pub struct DeployScratch {
     vals: HashMap<usize, Tensor>,
     conv: ConvScratch,
     dec: Tensor,
+    /// sub-batch input staging for the batch-parallel path.
+    input: Tensor,
+    /// per-chunk child scratches for the batch-parallel path.
+    par: Vec<DeployScratch>,
 }
 
 impl Default for DeployScratch {
@@ -271,6 +281,8 @@ impl Default for DeployScratch {
             vals: HashMap::new(),
             conv: ConvScratch::new(),
             dec: Tensor { shape: vec![0], data: Vec::new() },
+            input: Tensor::default(),
+            par: Vec::new(),
         }
     }
 }
@@ -420,7 +432,7 @@ impl DeployedModel {
     /// Batched online forward: logits `[batch, classes]`.  Results are
     /// bit-exactly independent of how images are grouped into batches.
     pub fn forward_batch(&self, x: &Tensor, scratch: &mut DeployScratch) -> Tensor {
-        self.exec(x, scratch, false).0
+        self.exec(x, scratch, false, None).0
     }
 
     /// As [`Self::forward_batch`] but also returns the decoded backbone
@@ -430,8 +442,114 @@ impl DeployedModel {
         x: &Tensor,
         scratch: &mut DeployScratch,
     ) -> (Tensor, Tensor) {
-        let (logits, feat) = self.exec(x, scratch, true);
+        let (logits, feat) = self.exec(x, scratch, true, None);
         (logits, feat.expect("arch has gap"))
+    }
+
+    /// [`Self::forward_batch`] accelerated by a shared [`Pool`], bit-identical
+    /// to the serial path at any thread count: a multi-image batch is split
+    /// into per-chunk sub-batches (each with its own child [`DeployScratch`]),
+    /// a single image gets intra-op output-row parallelism inside each conv.
+    pub fn forward_batch_pooled(
+        &self,
+        x: &Tensor,
+        scratch: &mut DeployScratch,
+        pool: &Pool,
+    ) -> Tensor {
+        self.exec_pooled(x, scratch, false, pool).0
+    }
+
+    /// As [`Self::forward_batch_pooled`] but also returning the decoded
+    /// backbone feature map.
+    pub fn forward_batch_feat_pooled(
+        &self,
+        x: &Tensor,
+        scratch: &mut DeployScratch,
+        pool: &Pool,
+    ) -> (Tensor, Tensor) {
+        let (logits, feat) = self.exec_pooled(x, scratch, true, pool);
+        (logits, feat.expect("arch has gap"))
+    }
+
+    /// Dispatch between batch-level and intra-op parallelism (see
+    /// [`Self::forward_batch_pooled`]).
+    fn exec_pooled(
+        &self,
+        x: &Tensor,
+        scratch: &mut DeployScratch,
+        want_feat: bool,
+        pool: &Pool,
+    ) -> (Tensor, Option<Tensor>) {
+        assert_eq!(x.rank(), 4, "input must be [b,h,w,c]");
+        if pool.threads() <= 1 {
+            return self.exec(x, scratch, want_feat, None);
+        }
+        if x.shape[0] > 1 {
+            return self.exec_batch_par(x, scratch, want_feat, pool);
+        }
+        self.exec(x, scratch, want_feat, Some(pool))
+    }
+
+    /// Batch-level parallel exec: contiguous image chunks run the serial
+    /// per-image pipeline concurrently, each on its own child scratch, and
+    /// the per-chunk outputs are concatenated in order.  Because batched
+    /// and single-image execution are bit-exactly equal per image (the PR 1
+    /// invariant, kept under test), the concatenation equals the serial
+    /// full-batch result bit for bit.
+    fn exec_batch_par(
+        &self,
+        x: &Tensor,
+        scratch: &mut DeployScratch,
+        want_feat: bool,
+        pool: &Pool,
+    ) -> (Tensor, Option<Tensor>) {
+        let b = x.shape[0];
+        let px = x.data.len() / b;
+        let ranges = crate::par::chunk_ranges(b, pool.threads(), 1);
+        let nch = ranges.len();
+        if scratch.par.len() < nch {
+            scratch.par.resize_with(nch, DeployScratch::new);
+        }
+        let mut parts: Vec<Option<(Tensor, Option<Tensor>)>> = Vec::with_capacity(nch);
+        parts.resize_with(nch, || None);
+        {
+            let children = &mut scratch.par[..nch];
+            let mut tasks: Vec<crate::par::ScopedTask<'_>> = Vec::with_capacity(nch);
+            for ((child, slot), r) in children.iter_mut().zip(parts.iter_mut()).zip(ranges) {
+                let xdata = &x.data[r.start * px..r.end * px];
+                let (bh, bw, bc) = (x.shape[1], x.shape[2], x.shape[3]);
+                let bn = r.end - r.start;
+                tasks.push(Box::new(move || {
+                    // stage the sub-batch in the child's own input buffer
+                    // (allocation-free once warm), then run the serial path
+                    let mut xin = std::mem::take(&mut child.input);
+                    xin.shape.clear();
+                    xin.shape.extend_from_slice(&[bn, bh, bw, bc]);
+                    xin.data.clear();
+                    xin.data.extend_from_slice(xdata);
+                    *slot = Some(self.exec(&xin, child, want_feat, None));
+                    child.input = xin;
+                }));
+            }
+            pool.scope(tasks);
+        }
+        let mut logits_data = Vec::with_capacity(b * self.num_classes);
+        let mut feat_data = Vec::new();
+        let mut feat_dims = [0usize; 3];
+        for part in parts {
+            let (l, f) = part.expect("parallel batch chunk produced no result");
+            logits_data.extend_from_slice(&l.data);
+            if want_feat {
+                let f = f.expect("arch has gap");
+                feat_dims = [f.shape[1], f.shape[2], f.shape[3]];
+                feat_data.extend_from_slice(&f.data);
+            }
+        }
+        let logits = Tensor::new(vec![b, self.num_classes], logits_data);
+        let feat = want_feat.then(|| {
+            Tensor::new(vec![b, feat_dims[0], feat_dims[1], feat_dims[2]], feat_data)
+        });
+        (logits, feat)
     }
 
     fn exec(
@@ -439,6 +557,7 @@ impl DeployedModel {
         x: &Tensor,
         scratch: &mut DeployScratch,
         want_feat: bool,
+        pool: Option<&Pool>,
     ) -> (Tensor, Option<Tensor>) {
         assert_eq!(x.rank(), 4, "input must be [b,h,w,c]");
         // input: encode to codes (lw) or pass through (dch)
@@ -467,15 +586,29 @@ impl DeployedModel {
             match pop {
                 PreparedOp::Conv(pc) => {
                     let mut acc = take_val(&mut scratch.vals, pc.out);
-                    conv2d_into(
-                        &scratch.vals[&pc.inp],
-                        &pc.kernel,
-                        &pc.bias,
-                        pc.stride,
-                        pc.groups,
-                        &mut scratch.conv,
-                        &mut acc,
-                    );
+                    // intra-op (output-row) parallelism when a pool was
+                    // handed down; identical results either way
+                    match pool {
+                        Some(p) => conv2d_into_par(
+                            &scratch.vals[&pc.inp],
+                            &pc.kernel,
+                            &pc.bias,
+                            pc.stride,
+                            pc.groups,
+                            &mut scratch.conv,
+                            &mut acc,
+                            p,
+                        ),
+                        None => conv2d_into(
+                            &scratch.vals[&pc.inp],
+                            &pc.kernel,
+                            &pc.bias,
+                            pc.stride,
+                            pc.groups,
+                            &mut scratch.conv,
+                            &mut acc,
+                        ),
+                    }
                     match pc.recode {
                         Some((f, qmin, qmax)) => {
                             // integer activation on accumulator codes

@@ -3,8 +3,14 @@
 //!
 //! Each worker owns one [`DeployScratch`] plus an input staging buffer for
 //! its whole lifetime, so a warm worker executes
-//! [`DeployedModel::forward_batch`] with zero hot-path allocation beyond
-//! the per-reply logits rows.
+//! [`crate::quant::deploy::DeployedModel::forward_batch_pooled`] with zero
+//! hot-path allocation beyond the per-reply logits rows.  All workers
+//! submit their parallel conv/GEMM scopes to the ONE process-wide
+//! [`crate::par::global`] pool (sized by `--threads`), so a large
+//! micro-batch fans out across the machine while concurrent workers
+//! cooperate on the same worker set instead of oversubscribing it — and
+//! because the parallel kernels are bit-identical to their serial twins,
+//! replies do not depend on the pool width.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
@@ -56,7 +62,7 @@ impl Engine {
             max_wait: cfg.max_wait,
             queue_cap: cfg.queue_cap.max(1),
         }));
-        let stats = Arc::new(ServeStats::new());
+        let stats = Arc::new(ServeStats::with_pool(crate::par::global().threads()));
         let workers = (0..cfg.workers.max(1))
             .map(|_| {
                 let reg = registry.clone();
@@ -162,6 +168,7 @@ impl Client {
 /// Worker body: assemble → stack → batched integer forward → reply.
 /// Returns the number of batches it executed (join-side diagnostic).
 fn worker_loop(reg: &Registry, batcher: &Batcher, stats: &ServeStats) -> u64 {
+    let pool = crate::par::global();
     let mut scratch = DeployScratch::new();
     let mut staging: Vec<f32> = Vec::new();
     let mut latencies: Vec<Duration> = Vec::new();
@@ -190,7 +197,7 @@ fn worker_loop(reg: &Registry, batcher: &Batcher, stats: &ServeStats) -> u64 {
             vec![n, model.input_hw, model.input_hw, model.input_ch],
             std::mem::take(&mut staging),
         );
-        let logits = model.forward_batch(&x, &mut scratch);
+        let logits = model.forward_batch_pooled(&x, &mut scratch, pool);
         staging = x.data; // reclaim the staging buffer
         let done = Instant::now();
         let nc = model.num_classes;

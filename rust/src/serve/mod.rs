@@ -13,10 +13,13 @@
 //!   blocking backpressure.
 //! * [`engine`] — [`Engine`]: std-thread worker pool; each worker owns a
 //!   [`crate::quant::deploy::DeployScratch`] so steady-state execution
-//!   does not allocate; [`run_closed_loop`] is the load-generator used by
-//!   `repro bench-serve` and the `serve_throughput` bench.
+//!   does not allocate, and submits its conv/GEMM work to the process-wide
+//!   [`crate::par`] pool (shared with the integer eval path, so callers
+//!   cooperate instead of oversubscribing); [`run_closed_loop`] is the
+//!   load-generator used by `repro bench-serve` and the `serve_throughput`
+//!   bench.
 //! * [`stats`] — [`ServeStats`]/[`ServeReport`]: p50/p95/p99 latency,
-//!   throughput, batch-size and queue-depth histograms.
+//!   throughput, batch-size and queue-depth histograms, kernel-pool width.
 //!
 //! Everything is std-only (threads + channels + condvars): the image's
 //! cargo cache has no async runtime, and a forward pass is milliseconds —

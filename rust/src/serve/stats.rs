@@ -86,14 +86,28 @@ impl Inner {
 }
 
 /// Shared serving counters; one per [`crate::serve::Engine`].
-#[derive(Default)]
 pub struct ServeStats {
     inner: Mutex<Inner>,
+    /// Width of the shared kernel pool ([`crate::par`]) the engine's
+    /// workers submit parallel conv/GEMM scopes to.  Fixed at engine start;
+    /// surfaced in every [`ServeReport`] so `--threads` is observable.
+    pool_threads: usize,
+}
+
+impl Default for ServeStats {
+    fn default() -> Self {
+        Self::with_pool(1)
+    }
 }
 
 impl ServeStats {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Stats tagged with the kernel-pool width the owning engine uses.
+    pub fn with_pool(pool_threads: usize) -> Self {
+        ServeStats { inner: Mutex::new(Inner::default()), pool_threads: pool_threads.max(1) }
     }
 
     /// Called by clients on submit with the post-enqueue queue depth.
@@ -134,6 +148,7 @@ impl ServeStats {
         };
         let secs = wall.as_secs_f64();
         ServeReport {
+            pool_threads: self.pool_threads,
             requests: st.requests,
             batches: st.batches,
             wall,
@@ -156,6 +171,8 @@ impl ServeStats {
 /// Point-in-time serving report (also the `BENCH_serve.json` row shape).
 #[derive(Clone, Debug)]
 pub struct ServeReport {
+    /// Shared kernel-pool width the engine's workers cooperate on.
+    pub pool_threads: usize,
     pub requests: u64,
     pub batches: u64,
     pub wall: Duration,
@@ -174,7 +191,7 @@ impl std::fmt::Display for ServeReport {
         write!(
             f,
             "{} reqs in {} batches over {:.2} s | {:.0} images/s | \
-             latency µs p50 {} p95 {} p99 {} max {} | mean batch {:.2}",
+             latency µs p50 {} p95 {} p99 {} max {} | mean batch {:.2} | pool {}",
             self.requests,
             self.batches,
             self.wall.as_secs_f64(),
@@ -184,6 +201,7 @@ impl std::fmt::Display for ServeReport {
             self.p99_us,
             self.max_us,
             self.mean_batch,
+            self.pool_threads,
         )
     }
 }
@@ -223,5 +241,15 @@ mod tests {
         assert_eq!(r.requests, 0);
         assert_eq!(r.p99_us, 0);
         assert_eq!(r.throughput_ips, 0.0);
+    }
+
+    #[test]
+    fn pool_size_is_reported() {
+        assert_eq!(ServeStats::with_pool(4).report().pool_threads, 4);
+        // a pool is never narrower than the submitting thread itself
+        assert_eq!(ServeStats::new().report().pool_threads, 1);
+        assert_eq!(ServeStats::with_pool(0).report().pool_threads, 1);
+        let txt = ServeStats::with_pool(4).report().to_string();
+        assert!(txt.contains("pool 4"), "{txt}");
     }
 }

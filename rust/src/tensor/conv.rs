@@ -2,12 +2,15 @@
 //! support — mirrors `jax.lax.conv_general_dilated(NHWC, HWIO)` as used by L2
 //! so the rust deployment simulator reproduces the AOT graphs bit-for-shape.
 //!
-//! Two entry points over one implementation: [`conv2d`] (allocating, for
-//! one-off heuristics) and [`conv2d_into`] (writes into caller-owned buffers
-//! via [`ConvScratch`], for the serving / batched-eval hot path).  Both run
-//! the same loops in the same order, so results are bit-identical.
+//! Three entry points over one implementation: [`conv2d`] (allocating, for
+//! one-off heuristics), [`conv2d_into`] (writes into caller-owned buffers
+//! via [`ConvScratch`], for the serving / batched-eval hot path), and
+//! [`conv2d_into_par`] (splits the output-row dimension across a
+//! [`crate::par::Pool`]; im2col and the per-group GEMMs run per disjoint
+//! row block).  All run the same inner loops in the same per-element order,
+//! so results are bit-identical.
 
-use super::{matmul_slices, Tensor};
+use super::{matmul_rows, matmul_slices, Tensor};
 
 /// SAME-padding output size for stride s.
 fn out_dim(i: usize, s: usize) -> usize {
@@ -20,10 +23,13 @@ fn out_dim(i: usize, s: usize) -> usize {
 pub struct ConvScratch {
     /// im2col patch matrix.
     cols: Vec<f32>,
-    /// per-group weight slice (grouped convs only).
+    /// per-group weight slice(s): one slice (serial path) or all groups
+    /// packed back-to-back (parallel path, read-only across chunks).
     wg: Vec<f32>,
     /// per-group output block (grouped convs only).
     gout: Vec<f32>,
+    /// per-chunk child scratches for [`conv2d_into_par`].
+    par: Vec<ConvScratch>,
 }
 
 impl ConvScratch {
@@ -32,43 +38,74 @@ impl ConvScratch {
     }
 }
 
-/// im2col patch matrix: x[b,h,w,cin] -> [b*oh*ow, k*k*cg] for one group
-/// slice along the channel axis (`c0..c0+cg`), written into `cols`.
-fn im2col_into(
+/// im2col patch matrix for a contiguous block of output rows: x[b,h,w,cin]
+/// -> [rows.len(), k*k*cg] for one group slice along the channel axis
+/// (`c0..c0+cg`), written into `cols`.  `rows` indexes the flattened
+/// `(bi, oy, ox)` output-position space, so disjoint row ranges touch
+/// disjoint patch rows — the parallel conv path hands each pool chunk its
+/// own range and its own `cols` buffer.
+///
+/// SAME padding follows the XLA/TF rule for every kernel size:
+/// `total = (o-1)*stride + k - i`, `pad_before = total / 2` rounded DOWN,
+/// so for even `k` (odd total) the extra pad row/column lands on the
+/// bottom/right (verified against hand-computed references in the even-k
+/// tests below).
+fn im2col_rows_into(
     x: &Tensor,
     k: usize,
     stride: usize,
     c0: usize,
     cg: usize,
+    rows: std::ops::Range<usize>,
     cols: &mut Vec<f32>,
-) -> (usize, usize) {
-    let (b, h, w, cin) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+) {
+    let (h, w, cin) = (x.shape[1], x.shape[2], x.shape[3]);
     let (oh, ow) = (out_dim(h, stride), out_dim(w, stride));
-    // SAME padding offsets (matches XLA for odd k)
     let pad_top = ((oh - 1) * stride + k).saturating_sub(h) / 2;
     let pad_left = ((ow - 1) * stride + k).saturating_sub(w) / 2;
     cols.clear();
-    cols.resize(b * oh * ow * k * k * cg, 0.0);
+    cols.resize((rows.end - rows.start) * k * k * cg, 0.0);
     let mut idx = 0;
-    for bi in 0..b {
-        for oy in 0..oh {
-            for ox in 0..ow {
-                for ky in 0..k {
-                    let iy = (oy * stride + ky) as isize - pad_top as isize;
-                    for kx in 0..k {
-                        let ix = (ox * stride + kx) as isize - pad_left as isize;
-                        if iy >= 0 && (iy as usize) < h && ix >= 0 && (ix as usize) < w {
-                            let base =
-                                ((bi * h + iy as usize) * w + ix as usize) * cin + c0;
-                            cols[idx..idx + cg].copy_from_slice(&x.data[base..base + cg]);
-                        }
-                        idx += cg;
-                    }
+    for row in rows {
+        let bi = row / (oh * ow);
+        let oy = (row / ow) % oh;
+        let ox = row % ow;
+        for ky in 0..k {
+            let iy = (oy * stride + ky) as isize - pad_top as isize;
+            for kx in 0..k {
+                let ix = (ox * stride + kx) as isize - pad_left as isize;
+                if iy >= 0 && (iy as usize) < h && ix >= 0 && (ix as usize) < w {
+                    let base = ((bi * h + iy as usize) * w + ix as usize) * cin + c0;
+                    cols[idx..idx + cg].copy_from_slice(&x.data[base..base + cg]);
                 }
+                idx += cg;
             }
         }
     }
-    (oh, ow)
+}
+
+/// Whole-tensor im2col: every output row of every image in one call.
+fn im2col_into(x: &Tensor, k: usize, stride: usize, c0: usize, cg: usize, cols: &mut Vec<f32>) {
+    let (oh, ow) = (out_dim(x.shape[1], stride), out_dim(x.shape[2], stride));
+    im2col_rows_into(x, k, stride, c0, cg, 0..x.shape[0] * oh * ow, cols);
+}
+
+/// Copy group `g`'s weight slice (columns `g*cg_out..(g+1)*cg_out` of the
+/// row-major `[kk_cg_in, cout]` HWIO matrix) into `dst` as a dense
+/// `[kk_cg_in, cg_out]` block.  The serial and parallel grouped paths both
+/// call this, so the slicing can never diverge between them.
+fn pack_group_weights(
+    w: &Tensor,
+    g: usize,
+    kk_cg_in: usize,
+    cg_out: usize,
+    cout: usize,
+    dst: &mut [f32],
+) {
+    for r in 0..kk_cg_in {
+        let src = r * cout + g * cg_out;
+        dst[r * cg_out..(r + 1) * cg_out].copy_from_slice(&w.data[src..src + cg_out]);
+    }
 }
 
 /// NHWC conv, SAME padding.  `w` is HWIO `[k,k,cin/groups,cout]`, `bias` is
@@ -112,14 +149,9 @@ pub fn conv2d_into(
         out.data.resize(b * oh * ow * cout, 0.0);
         for g in 0..groups {
             im2col_into(x, k, stride, g * cg_in, cg_in, &mut scratch.cols);
-            // group weight slice: [k,k,cg_in,cout] -> columns [g*cg_out..]
             scratch.wg.clear();
             scratch.wg.resize(k * k * cg_in * cg_out, 0.0);
-            for r in 0..k * k * cg_in {
-                let src = r * cout + g * cg_out;
-                scratch.wg[r * cg_out..(r + 1) * cg_out]
-                    .copy_from_slice(&w.data[src..src + cg_out]);
-            }
+            pack_group_weights(w, g, k * k * cg_in, cg_out, cout, &mut scratch.wg);
             matmul_slices(
                 &scratch.cols,
                 b * oh * ow,
@@ -140,6 +172,115 @@ pub fn conv2d_into(
         }
     }
     out.shape = vec![b, oh, ow, cout];
+}
+
+/// Minimum output rows per parallel conv chunk (`b*oh*ow` granularity).
+const MIN_PAR_CONV_ROWS: usize = 64;
+
+/// [`conv2d_into`] with the `b*oh*ow` output-row dimension split across
+/// `pool`: each chunk runs im2col and the (per-group) GEMMs for its own
+/// disjoint row block into its own child [`ConvScratch`], writing a
+/// disjoint slice of `out`.  Per-element accumulation order is identical to
+/// the serial path, so results are bit-identical at any thread count.
+/// Falls back to [`conv2d_into`] when the pool is serial or the output is
+/// too small to split.
+pub fn conv2d_into_par(
+    x: &Tensor,
+    w: &Tensor,
+    bias: &[f32],
+    stride: usize,
+    groups: usize,
+    scratch: &mut ConvScratch,
+    out: &mut Tensor,
+    pool: &crate::par::Pool,
+) {
+    assert_eq!(x.rank(), 4);
+    assert_eq!(w.rank(), 4);
+    let (b, cin) = (x.shape[0], x.shape[3]);
+    let k = w.shape[0];
+    let (wcin, cout) = (w.shape[2], w.shape[3]);
+    assert_eq!(wcin, cin / groups, "HWIO in-channels vs groups");
+    assert_eq!(cout % groups, 0);
+    assert_eq!(bias.len(), cout);
+    let cg_in = cin / groups;
+    let cg_out = cout / groups;
+    let (oh, ow) = (out_dim(x.shape[1], stride), out_dim(x.shape[2], stride));
+    let rows = b * oh * ow;
+    let ranges = crate::par::chunk_ranges(rows, pool.threads(), MIN_PAR_CONV_ROWS);
+    if pool.threads() <= 1 || ranges.len() <= 1 {
+        conv2d_into(x, w, bias, stride, groups, scratch, out);
+        return;
+    }
+    out.data.clear();
+    out.data.resize(rows * cout, 0.0);
+    let nch = ranges.len();
+    let ConvScratch { wg, par, .. } = scratch;
+    if par.len() < nch {
+        par.resize_with(nch, ConvScratch::default);
+    }
+    // grouped path: pack every group's weight slice once up front; chunks
+    // only ever read it
+    let wg_len = k * k * cg_in * cg_out;
+    if groups > 1 {
+        wg.clear();
+        wg.resize(groups * wg_len, 0.0);
+        for g in 0..groups {
+            let dst = &mut wg[g * wg_len..(g + 1) * wg_len];
+            pack_group_weights(w, g, k * k * cg_in, cg_out, cout, dst);
+        }
+    }
+    let wg_all: &[f32] = wg;
+    let mut tasks: Vec<crate::par::ScopedTask<'_>> = Vec::with_capacity(nch);
+    let mut rest: &mut [f32] = &mut out.data;
+    for (child, r) in par.iter_mut().take(nch).zip(ranges) {
+        let nrows = r.end - r.start;
+        let (head, tail) = std::mem::take(&mut rest).split_at_mut(nrows * cout);
+        rest = tail;
+        tasks.push(Box::new(move || {
+            if groups == 1 {
+                im2col_rows_into(x, k, stride, 0, cin, r.clone(), &mut child.cols);
+                matmul_rows(&child.cols, k * k * cin, &w.data, cout, head);
+            } else {
+                for g in 0..groups {
+                    im2col_rows_into(x, k, stride, g * cg_in, cg_in, r.clone(), &mut child.cols);
+                    matmul_slices(
+                        &child.cols,
+                        nrows,
+                        k * k * cg_in,
+                        &wg_all[g * wg_len..(g + 1) * wg_len],
+                        cg_out,
+                        &mut child.gout,
+                    );
+                    for (row, chunk) in child.gout.chunks(cg_out).enumerate() {
+                        let dst = row * cout + g * cg_out;
+                        head[dst..dst + cg_out].copy_from_slice(chunk);
+                    }
+                }
+            }
+            for chunk in head.chunks_mut(cout) {
+                for (o, &bv) in chunk.iter_mut().zip(bias) {
+                    *o += bv;
+                }
+            }
+        }));
+    }
+    pool.scope(tasks);
+    out.shape = vec![b, oh, ow, cout];
+}
+
+/// Allocating convenience wrapper over [`conv2d_into_par`].
+pub fn conv2d_par(
+    x: &Tensor,
+    w: &Tensor,
+    bias: &[f32],
+    stride: usize,
+    groups: usize,
+    pool: &crate::par::Pool,
+) -> Tensor {
+    let mut scratch = ConvScratch::new();
+    let mut out = Tensor { shape: vec![0], data: Vec::new() };
+    conv2d_into_par(x, w, bias, stride, groups, &mut scratch, &mut out, pool);
+    out
 }
 
 #[cfg(test)]
@@ -183,6 +324,35 @@ mod tests {
         assert_eq!(y.data[(1 * 4 + 1) as usize], 9.0);
         // corner (0,0): 2x2 window under SAME padding
         assert_eq!(y.data[0], 4.0);
+    }
+
+    #[test]
+    fn even_kernel_same_padding_lands_bottom_right() {
+        // 2x2 sum kernel on a 2x2 input, SAME: total pad is 1 per axis and
+        // the XLA/TF rule puts it entirely on the bottom/right
+        // (pad_before = floor(total/2) = 0).  Hand-computed reference:
+        //   out(0,0) = 1+2+3+4      (full window)
+        //   out(0,1) = 2+4          (right column padded)
+        //   out(1,0) = 3+4          (bottom row padded)
+        //   out(1,1) = 4
+        // A top/left mis-pad would give out(0,0) = 1 instead of 10.
+        let x = Tensor::new(vec![1, 2, 2, 1], vec![1.0, 2.0, 3.0, 4.0]);
+        let w = Tensor::full(&[2, 2, 1, 1], 1.0);
+        let y = conv2d(&x, &w, &[0.0], 1, 1);
+        assert_eq!(y.shape, vec![1, 2, 2, 1]);
+        assert_eq!(y.data, vec![10.0, 6.0, 7.0, 4.0]);
+    }
+
+    #[test]
+    fn even_kernel_stride2_same_padding_reference() {
+        // 5x1 column through a 2x2 sum kernel at stride 2: o = ceil(5/2) = 3,
+        // total pad = (3-1)*2 + 2 - 5 = 1, all bottom.  Windows over rows:
+        // {0,1}, {2,3}, {4,pad} -> sums 3, 7, 5.
+        let x = Tensor::new(vec![1, 5, 1, 1], vec![1.0, 2.0, 3.0, 4.0, 5.0]);
+        let w = Tensor::full(&[2, 2, 1, 1], 1.0);
+        let y = conv2d(&x, &w, &[0.0], 2, 1);
+        assert_eq!(y.shape, vec![1, 3, 1, 1]);
+        assert_eq!(y.data, vec![3.0, 7.0, 5.0]);
     }
 
     #[test]

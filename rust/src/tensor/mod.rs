@@ -16,6 +16,13 @@ pub struct Tensor {
     pub data: Vec<f32>,
 }
 
+impl Default for Tensor {
+    /// The empty-buffer idiom used by scratch holders: shape `[0]`, no data.
+    fn default() -> Self {
+        Tensor { shape: vec![0], data: Vec::new() }
+    }
+}
+
 impl fmt::Debug for Tensor {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         write!(f, "Tensor{:?}", self.shape)?;
@@ -175,19 +182,18 @@ impl Tensor {
     }
 }
 
-/// x[m,k] @ w[k,n] written into `out` (cleared and resized first, so a
-/// right-sized buffer is reused without reallocation).  This is THE matmul
-/// inner loop — [`Tensor::matmul`] and the scratch-based conv path both call
-/// it, which is what makes the buffer-reusing deployment forward bit-exactly
-/// equal to the allocating one.
-pub fn matmul_slices(x: &[f32], m: usize, k: usize, w: &[f32], n: usize, out: &mut Vec<f32>) {
-    debug_assert_eq!(x.len(), m * k);
-    debug_assert_eq!(w.len(), k * n);
-    out.clear();
-    out.resize(m * n, 0.0);
-    for i in 0..m {
-        let xrow = &x[i * k..(i + 1) * k];
-        let orow = &mut out[i * n..(i + 1) * n];
+/// The GEMM row kernel: `x` rows (each of length `k`) against `w[k,n]`,
+/// accumulated into the zeroed `out` (one row of `n` per x row).  This is
+/// THE inner loop — the serial [`matmul_slices`], the parallel
+/// [`matmul_slices_par`] chunks, and the conv paths all run exactly this
+/// function over their (disjoint) row blocks, which is what makes every
+/// variant bit-exactly equal: per output element the accumulation order is
+/// always `kk = 0..k` ascending, regardless of how rows are grouped.
+pub(crate) fn matmul_rows(x: &[f32], k: usize, w: &[f32], n: usize, out: &mut [f32]) {
+    if k == 0 || n == 0 {
+        return;
+    }
+    for (xrow, orow) in x.chunks_exact(k).zip(out.chunks_exact_mut(n)) {
         for (kk, &xv) in xrow.iter().enumerate() {
             if xv == 0.0 {
                 continue;
@@ -198,6 +204,57 @@ pub fn matmul_slices(x: &[f32], m: usize, k: usize, w: &[f32], n: usize, out: &m
             }
         }
     }
+}
+
+/// x[m,k] @ w[k,n] written into `out` (cleared and resized first, so a
+/// right-sized buffer is reused without reallocation).  [`Tensor::matmul`]
+/// and the scratch-based conv path both call it, which is what makes the
+/// buffer-reusing deployment forward bit-exactly equal to the allocating
+/// one.
+pub fn matmul_slices(x: &[f32], m: usize, k: usize, w: &[f32], n: usize, out: &mut Vec<f32>) {
+    debug_assert_eq!(x.len(), m * k);
+    debug_assert_eq!(w.len(), k * n);
+    out.clear();
+    out.resize(m * n, 0.0);
+    matmul_rows(x, k, w, n, out);
+}
+
+/// Minimum output rows per parallel GEMM chunk: below this the scope
+/// submit/latch overhead outweighs the row work, so the call stays serial.
+const MIN_PAR_ROWS: usize = 32;
+
+/// [`matmul_slices`] with the `m` (output-row) dimension split into
+/// contiguous cache-sized blocks across `pool`.  Each chunk owns a disjoint
+/// slice of `out` and runs the identical [`matmul_rows`] inner loop, so the
+/// result is bit-identical to the serial call at any thread count.
+pub fn matmul_slices_par(
+    x: &[f32],
+    m: usize,
+    k: usize,
+    w: &[f32],
+    n: usize,
+    out: &mut Vec<f32>,
+    pool: &crate::par::Pool,
+) {
+    debug_assert_eq!(x.len(), m * k);
+    debug_assert_eq!(w.len(), k * n);
+    out.clear();
+    out.resize(m * n, 0.0);
+    let ranges = crate::par::chunk_ranges(m, pool.threads(), MIN_PAR_ROWS);
+    if pool.threads() <= 1 || ranges.len() <= 1 {
+        matmul_rows(x, k, w, n, out);
+        return;
+    }
+    let mut tasks: Vec<crate::par::ScopedTask<'_>> = Vec::with_capacity(ranges.len());
+    let mut rest: &mut [f32] = out;
+    for r in ranges {
+        let rows = r.end - r.start;
+        let (head, tail) = std::mem::take(&mut rest).split_at_mut(rows * n);
+        rest = tail;
+        let xr = &x[r.start * k..r.end * k];
+        tasks.push(Box::new(move || matmul_rows(xr, k, w, n, head)));
+    }
+    pool.scope(tasks);
 }
 
 /// Numerically stable softmax over the last axis.

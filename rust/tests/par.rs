@@ -1,0 +1,144 @@
+//! `qft::par` parity tests: every parallel kernel must be bit-identical to
+//! its serial twin at any thread count, in both deployment modes.
+//!
+//! This extends PR 1's batch-vs-single parity guarantee to parallelism:
+//! parallel chunks own disjoint output row ranges and run the identical
+//! serial inner loop, so per-element f32 accumulation order — and therefore
+//! every bit of the result — is unchanged.  Hermetic: the built-in
+//! synthetic arch needs no AOT artifacts.
+
+use qft::par::{chunk_ranges, Pool};
+use qft::quant::deploy::{DeployScratch, DeployedModel, Mode};
+use qft::serve::synthetic_trainables;
+use qft::tensor::conv::{conv2d, conv2d_par};
+use qft::tensor::{matmul_slices, matmul_slices_par};
+use qft::Tensor;
+
+fn rand_tensor(shape: &[usize], seed: u64) -> Tensor {
+    let mut rng = qft::data::Rng::new(seed);
+    let n: usize = shape.iter().product();
+    Tensor::new(shape.to_vec(), (0..n).map(|_| rng.normal()).collect())
+}
+
+#[test]
+fn parallel_matmul_is_bit_identical() {
+    // odd sizes so chunk boundaries never line up with anything
+    let (m, k, n) = (150usize, 33, 17);
+    let x = rand_tensor(&[m, k], 1);
+    let w = rand_tensor(&[k, n], 2);
+    let mut serial = Vec::new();
+    matmul_slices(&x.data, m, k, &w.data, n, &mut serial);
+    for threads in [1usize, 2, 3, 8] {
+        let pool = Pool::new(threads);
+        let mut par = Vec::new();
+        matmul_slices_par(&x.data, m, k, &w.data, n, &mut par, &pool);
+        assert_eq!(serial, par, "{threads} threads");
+    }
+}
+
+#[test]
+fn parallel_conv_is_bit_identical() {
+    // plain / strided / depthwise / grouped / even-kernel geometries
+    let cases: &[(&[usize], &[usize], usize, usize)] = &[
+        (&[2, 12, 12, 4], &[3, 3, 4, 8], 1, 1),
+        (&[1, 16, 16, 3], &[3, 3, 3, 8], 2, 1),
+        (&[2, 12, 12, 8], &[3, 3, 1, 8], 1, 8),
+        (&[2, 12, 12, 8], &[3, 3, 4, 8], 1, 2),
+        (&[1, 9, 9, 2], &[2, 2, 2, 4], 1, 1),
+    ];
+    for (i, (xs, ws, stride, groups)) in cases.iter().enumerate() {
+        let x = rand_tensor(xs, 10 + i as u64);
+        let w = rand_tensor(ws, 20 + i as u64);
+        let bias: Vec<f32> = (0..ws[3]).map(|j| j as f32 * 0.1 - 0.2).collect();
+        let want = conv2d(&x, &w, &bias, *stride, *groups);
+        for threads in [1usize, 2, 8] {
+            let pool = Pool::new(threads);
+            let got = conv2d_par(&x, &w, &bias, *stride, *groups, &pool);
+            assert_eq!(want.shape, got.shape, "case {i}, {threads} threads");
+            assert_eq!(want.data, got.data, "case {i}, {threads} threads");
+        }
+    }
+}
+
+#[test]
+fn pooled_forward_batch_is_bit_identical_both_modes() {
+    for mode in [Mode::Lw, Mode::Dch] {
+        let (arch, tm) = synthetic_trainables(mode, 7);
+        let model = DeployedModel::prepare(&arch, &tm, mode);
+        let ds = qft::data::Dataset::new(1);
+        let (xb, _, _) = ds.batch(qft::data::Split::Val, 0, 6);
+        let px = arch.input_hw * arch.input_hw * arch.input_ch;
+        let single = Tensor::new(
+            vec![1, arch.input_hw, arch.input_hw, arch.input_ch],
+            xb.data[..px].to_vec(),
+        );
+
+        let mut serial_scratch = DeployScratch::new();
+        let want = model.forward_batch(&xb, &mut serial_scratch);
+        let want_single = model.forward_batch(&single, &mut serial_scratch);
+
+        for threads in [1usize, 2, 8] {
+            let pool = Pool::new(threads);
+            let mut scratch = DeployScratch::new();
+            // multi-image batch: batch-level parallelism
+            let got = model.forward_batch_pooled(&xb, &mut scratch, &pool);
+            assert_eq!(want.data, got.data, "{mode:?}, {threads} threads, cold");
+            // warm scratch (reused child scratches) must stay identical
+            let again = model.forward_batch_pooled(&xb, &mut scratch, &pool);
+            assert_eq!(want.data, again.data, "{mode:?}, {threads} threads, warm");
+            // single image: intra-op (output-row) conv parallelism
+            let got1 = model.forward_batch_pooled(&single, &mut scratch, &pool);
+            assert_eq!(want_single.data, got1.data, "{mode:?}, {threads} threads, single");
+        }
+    }
+}
+
+#[test]
+fn pooled_forward_feat_is_bit_identical() {
+    let (arch, tm) = synthetic_trainables(Mode::Lw, 3);
+    let model = DeployedModel::prepare(&arch, &tm, Mode::Lw);
+    let ds = qft::data::Dataset::new(4);
+    let (xb, _, _) = ds.batch(qft::data::Split::Val, 0, 5);
+    let (lw, fw) = model.forward_batch_feat(&xb, &mut DeployScratch::new());
+    let pool = Pool::new(4);
+    let (lp, fp) = model.forward_batch_feat_pooled(&xb, &mut DeployScratch::new(), &pool);
+    assert_eq!(lw.data, lp.data);
+    assert_eq!(fw.shape, fp.shape);
+    assert_eq!(fw.data, fp.data);
+}
+
+#[test]
+fn eval_integer_rust_is_thread_count_independent() {
+    // the pooled eval path (process-wide pool, whatever width this machine
+    // gives it) must agree with a hand-rolled serial accuracy loop
+    let (arch, tm) = synthetic_trainables(Mode::Lw, 0);
+    let model = DeployedModel::prepare(&arch, &tm, Mode::Lw);
+    let ds = qft::data::Dataset::new(0);
+    let n_images = 32;
+    let b = arch.batch;
+    let mut correct = 0usize;
+    let mut scratch = DeployScratch::new();
+    for i in 0..n_images / b {
+        let (x, _, labels) = ds.batch(qft::data::Split::Val, (i * b) as u64, b);
+        let preds = model.forward_batch(&x, &mut scratch).argmax_lastdim();
+        correct += preds.iter().zip(&labels).filter(|(p, l)| p == l).count();
+    }
+    let want = correct as f32 / n_images as f32;
+    let got = qft::coordinator::eval::eval_integer_rust(&arch, &tm, Mode::Lw, n_images, 0);
+    assert_eq!(want, got);
+}
+
+#[test]
+fn chunk_ranges_are_deterministic_and_disjoint() {
+    for (n, width) in [(256usize, 8usize), (1000, 3), (7, 16)] {
+        let a = chunk_ranges(n, width, 1);
+        let b = chunk_ranges(n, width, 1);
+        assert_eq!(a, b, "chunking must depend on inputs only");
+        let mut covered = 0;
+        for r in &a {
+            assert_eq!(r.start, covered);
+            covered = r.end;
+        }
+        assert_eq!(covered, n);
+    }
+}
