@@ -1,6 +1,6 @@
 # QFT reproduction — build / verify entry points.
 
-.PHONY: check build test fmt artifacts bench-serve par-bench
+.PHONY: check build test fmt artifacts bench bench-serve par-bench bench-gemm bench-smoke
 
 # Tier-1 verification: release build, full test suite, formatting.
 check:
@@ -22,6 +22,10 @@ fmt:
 artifacts:
 	cd python/compile && python3 aot.py --out ../../artifacts
 
+# Aggregate perf trajectory: every perf bench, landing BENCH_gemm.json,
+# BENCH_par.json and BENCH_serve.json at the repo root.
+bench: bench-gemm par-bench bench-serve
+
 # Serving throughput bench (works with or without artifacts; emits
 # BENCH_serve.json).
 bench-serve:
@@ -31,3 +35,15 @@ bench-serve:
 # at 1/2/4 threads (emits BENCH_par.json).
 par-bench:
 	cargo bench --bench par_kernels
+
+# GEMM micro-kernel bench: scalar reference vs panel-packed register-blocked
+# kernel, GFLOP/s over ResNet- and edge-shaped GEMMs (emits BENCH_gemm.json).
+bench-gemm:
+	cargo bench --bench gemm_kernels
+
+# CI harness smoke: every perf bench at a tiny iteration count, so the
+# bench binaries cannot rot without breaking the build.
+bench-smoke:
+	QFT_BENCH_SMOKE=1 cargo bench --bench gemm_kernels
+	QFT_BENCH_SMOKE=1 cargo bench --bench par_kernels
+	QFT_BENCH_SMOKE=1 cargo bench --bench serve_throughput

@@ -1,0 +1,156 @@
+//! Bench G — the `qft::kernel` GEMM micro-kernel: scalar reference loop
+//! (`gemm_ref`, the historical `matmul_rows` plus its zero-fill pass) vs
+//! the panel-packed register-blocked write-mode kernel (`gemm`), GFLOP/s
+//! over ResNet-shaped im2col GEMMs and ragged edge shapes.  Emits
+//! `BENCH_gemm.json` at the repo root.
+//!
+//! Every shape is parity-checked bit-for-bit before timing, so this bench
+//! doubles as a coarse guard against kernel rot.  `QFT_BENCH_SMOKE=1`
+//! drops to a single iteration (CI harness smoke; numbers meaningless).
+
+#[path = "util/mod.rs"]
+mod util;
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use qft::kernel::{gemm, gemm_ref, PackedW};
+use qft::util::json::Value;
+
+struct Shape {
+    set: &'static str,
+    name: &'static str,
+    m: usize,
+    k: usize,
+    n: usize,
+}
+
+const SHAPES: &[Shape] = &[
+    // ResNet-shaped: im2col GEMMs of 3x3 / 1x1 stages plus the fc head
+    Shape { set: "resnet", name: "rn_stage1_3x3", m: 1024, k: 576, n: 64 },
+    Shape { set: "resnet", name: "rn_stage2_3x3", m: 256, k: 1152, n: 128 },
+    Shape { set: "resnet", name: "rn_stage3_3x3", m: 64, k: 2304, n: 256 },
+    Shape { set: "resnet", name: "rn_proj_1x1", m: 1024, k: 64, n: 128 },
+    Shape { set: "resnet", name: "rn_fc_head", m: 32, k: 512, n: 1000 },
+    // edge-shaped: ragged lanes / tiles, single rows, skinny reductions,
+    // and the depthwise-conv per-group GEMM (one output column)
+    Shape { set: "edge", name: "edge_ragged", m: 33, k: 129, n: 17 },
+    Shape { set: "edge", name: "edge_single_row", m: 1, k: 2048, n: 75 },
+    Shape { set: "edge", name: "edge_thin_k", m: 512, k: 9, n: 40 },
+    Shape { set: "edge", name: "edge_tiny", m: 7, k: 27, n: 5 },
+    Shape { set: "edge", name: "edge_depthwise_g", m: 1024, k: 9, n: 1 },
+];
+
+fn rand_vec(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = qft::data::Rng::new(seed);
+    (0..n).map(|_| rng.normal()).collect()
+}
+
+/// Wall time per op over `iters` timed iterations (after 2 warm-up passes).
+fn time_per_op(iters: usize, mut f: impl FnMut()) -> f64 {
+    for _ in 0..2 {
+        f();
+    }
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    t0.elapsed().as_secs_f64() / iters as f64
+}
+
+fn main() {
+    util::section("qft::kernel GEMM micro-kernel (scalar vs panel-packed)");
+    let smoke = util::smoke();
+    let mut rows = Vec::new();
+    let mut rn_speedups: Vec<f64> = Vec::new();
+
+    for (si, s) in SHAPES.iter().enumerate() {
+        let flops = 2.0 * (s.m * s.k * s.n) as f64;
+        let iters = if smoke {
+            1
+        } else {
+            // ~0.2 s of work per measurement, at least 4 iterations
+            ((2e8 / flops.max(1.0)) as usize).clamp(4, 4000)
+        };
+        let x = rand_vec(s.m * s.k, 100 + si as u64);
+        let w = rand_vec(s.k * s.n, 200 + si as u64);
+        let pw = PackedW::pack(&w, s.k, s.n);
+
+        // parity first: the packed kernel must be bit-identical to the
+        // scalar reference on every shape it is about to be timed on
+        let mut want = vec![0.0f32; s.m * s.n];
+        gemm_ref(&x, s.k, &w, s.n, &mut want);
+        let mut got = vec![f32::NAN; s.m * s.n];
+        gemm(&x, s.m, &pw, &mut got);
+        assert!(
+            want.iter().zip(&got).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "{}: packed kernel diverged from scalar reference",
+            s.name
+        );
+
+        let mut out = vec![0.0f32; s.m * s.n];
+        // scalar baseline pays the historical zero-fill + accumulate
+        let scalar = time_per_op(iters, || {
+            out.fill(0.0);
+            gemm_ref(&x, s.k, &w, s.n, &mut out);
+        });
+        // hot path: weights prepacked at DeployedModel::prepare time
+        let packed = time_per_op(iters, || {
+            gemm(&x, s.m, &pw, &mut out);
+        });
+        // cold path: per-call repack (training forwards) included
+        let mut pw_cold = PackedW::default();
+        let packed_cold = time_per_op(iters, || {
+            pw_cold.pack_cols(&w, s.k, s.n, 0, s.n);
+            gemm(&x, s.m, &pw_cold, &mut out);
+        });
+
+        let speedup = if packed > 0.0 { scalar / packed } else { 0.0 };
+        if s.set == "resnet" {
+            rn_speedups.push(speedup.max(1e-12));
+        }
+        println!(
+            "[{:<16}] {:>5}x{:<5}x{:<5} scalar {:>8.3} ms ({:>6.2} GF/s) | packed {:>8.3} ms \
+             ({:>6.2} GF/s) | +pack {:>8.3} ms | speedup {:.2}x",
+            s.name,
+            s.m,
+            s.k,
+            s.n,
+            scalar * 1e3,
+            flops / scalar / 1e9,
+            packed * 1e3,
+            flops / packed / 1e9,
+            packed_cold * 1e3,
+            speedup
+        );
+
+        let mut row = HashMap::new();
+        row.insert("set".to_string(), Value::Str(s.set.to_string()));
+        row.insert("shape".to_string(), Value::Str(s.name.to_string()));
+        row.insert("m".to_string(), Value::Num(s.m as f64));
+        row.insert("k".to_string(), Value::Num(s.k as f64));
+        row.insert("n".to_string(), Value::Num(s.n as f64));
+        row.insert("scalar_ms".to_string(), Value::Num(scalar * 1e3));
+        row.insert("packed_ms".to_string(), Value::Num(packed * 1e3));
+        row.insert("packed_cold_ms".to_string(), Value::Num(packed_cold * 1e3));
+        row.insert("gflops_scalar".to_string(), Value::Num(flops / scalar / 1e9));
+        row.insert("gflops_packed".to_string(), Value::Num(flops / packed / 1e9));
+        row.insert("speedup_vs_scalar".to_string(), Value::Num(speedup));
+        rows.push(Value::Obj(row));
+    }
+
+    let geomean = (rn_speedups.iter().map(|v| v.ln()).sum::<f64>()
+        / rn_speedups.len().max(1) as f64)
+        .exp();
+    println!("resnet-set geomean speedup: {geomean:.2}x (target >= 3x single-thread)");
+    let mut summary = HashMap::new();
+    summary.insert("set".to_string(), Value::Str("summary".to_string()));
+    summary.insert("resnet_geomean_speedup".to_string(), Value::Num(geomean));
+    summary.insert("smoke".to_string(), Value::Num(if smoke { 1.0 } else { 0.0 }));
+    rows.push(Value::Obj(summary));
+
+    let out_path = util::repo_root_path("BENCH_gemm.json");
+    std::fs::write(&out_path, Value::Arr(rows).to_string_compact())
+        .expect("write BENCH_gemm.json");
+    println!("wrote {}", out_path.display());
+}

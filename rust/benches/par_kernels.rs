@@ -57,7 +57,7 @@ fn main() {
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
     );
     let widths = [1usize, 2, 4];
-    let iters = 8;
+    let iters = if util::smoke() { 1 } else { 8 };
     let mut rows = Vec::new();
 
     // GEMM: one m x k @ k x n matmul, rows split across the pool
@@ -129,7 +129,8 @@ fn main() {
         rows.push(row("forward1", t, s, fwd_serial));
     }
 
-    std::fs::write("BENCH_par.json", Value::Arr(rows).to_string_compact())
+    let out_path = util::repo_root_path("BENCH_par.json");
+    std::fs::write(&out_path, Value::Arr(rows).to_string_compact())
         .expect("write BENCH_par.json");
-    println!("wrote BENCH_par.json");
+    println!("wrote {}", out_path.display());
 }

@@ -25,8 +25,9 @@ fn main() {
     let registry = Registry::load(Path::new("artifacts"), &[(arch.to_string(), Mode::Lw)])
         .expect("load registry");
 
-    let clients = 16;
-    let per_client = 128;
+    let smoke = util::smoke();
+    let clients = if smoke { 4 } else { 16 };
+    let per_client = if smoke { 4 } else { 128 };
     let mut rows = Vec::new();
     for &workers in &[1usize, 2, 4] {
         let cfg = ServeConfig {
@@ -34,9 +35,10 @@ fn main() {
             max_batch: 8,
             max_wait: Duration::from_micros(200),
             queue_cap: 512,
+            ..Default::default()
         };
         // warm-up so buffer growth / first-touch doesn't skew the timing
-        let _ = run_closed_loop(&registry, &cfg, clients, 8, 0);
+        let _ = run_closed_loop(&registry, &cfg, clients, if smoke { 1 } else { 8 }, 0);
         let report = util::timed(&format!("{arch}/lw workers={workers}"), || {
             run_closed_loop(&registry, &cfg, clients, per_client, 0)
         });
@@ -72,6 +74,7 @@ fn main() {
             })
             .collect(),
     );
-    std::fs::write("BENCH_serve.json", json.to_string_compact()).expect("write BENCH_serve.json");
-    println!("wrote BENCH_serve.json");
+    let out_path = util::repo_root_path("BENCH_serve.json");
+    std::fs::write(&out_path, json.to_string_compact()).expect("write BENCH_serve.json");
+    println!("wrote {}", out_path.display());
 }

@@ -33,3 +33,19 @@ pub fn micro<R>(label: &str, iters: usize, mut f: impl FnMut() -> R) {
         println!("[micro] {label}: {:.1} ns/op ({iters} iters)", per);
     }
 }
+
+/// Smoke mode (`QFT_BENCH_SMOKE=1`): CI runs every bench harness with a
+/// tiny iteration count so the harnesses cannot rot, without paying real
+/// measurement time.  Numbers produced under smoke are NOT comparable.
+#[allow(dead_code)]
+pub fn smoke() -> bool {
+    std::env::var_os("QFT_BENCH_SMOKE").is_some_and(|v| v != "0" && !v.is_empty())
+}
+
+/// Repo-root path for a bench artifact: cargo runs bench executables with
+/// cwd = the `rust` package root, but the perf-trajectory JSONs
+/// (`BENCH_*.json`) belong at the repository root.
+#[allow(dead_code)]
+pub fn repo_root_path(name: &str) -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join(name)
+}

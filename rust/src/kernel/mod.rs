@@ -1,0 +1,407 @@
+//! `qft::kernel` — the register-blocked, panel-packed f32 GEMM micro-kernel
+//! under every forward path (S17).
+//!
+//! Every path in the reproduction — the QFT training forwards, the integer
+//! deployment twins, the [`crate::serve`] workers, and the [`crate::par`]
+//! chunked kernels — bottoms out in one inner loop: rows of activations
+//! against a `[k, n]` weight matrix.  This module owns that loop.  Two
+//! kernels, one contract:
+//!
+//! * [`gemm_ref`] — the scalar reference: for each output row, walk `kk =
+//!   0..k` ascending and axpy `x[kk] * w[kk, ..]` into the row, skipping
+//!   zero activations.  This is byte-for-byte the historical
+//!   `tensor::matmul_rows` loop; it exists as the baseline the packed
+//!   kernel is proven against (tests and `BENCH_gemm.json`).
+//! * [`gemm`] — the fast path: weights pre-packed into [`PackedW`] panels
+//!   of [`NR`] columns so the `kk` walk streams K-major contiguous memory
+//!   instead of striding `w[kk*n..]`, with an [`MR`]×[`NR`] accumulator
+//!   tile held in registers across the whole `kk` reduction ([`LANES`]-wide
+//!   unrolled f32 arrays the compiler auto-vectorizes — no unsafe, no
+//!   intrinsics).  It is a *write-mode* (beta = 0) kernel: the tile is
+//!   stored over `out`, so callers skip the zero-fill pass entirely.
+//!
+//! ## The bit-exactness contract
+//!
+//! Per output element `out[i, j]` both kernels compute exactly
+//!
+//! ```text
+//! acc = 0.0;  for kk in 0..k ascending { if x[i,kk] != 0.0 { acc += x[i,kk] * w[kk,j] } }
+//! ```
+//!
+//! with one `mul` and one `add` per step (rustc never contracts to FMA by
+//! default).  Register blocking tiles *rows* and vectorization runs across
+//! the *n* (output-column) lanes only — lanes never interact — so the
+//! reduction order per element is identical to the scalar loop and the
+//! packed result is bit-identical to [`gemm_ref`] for every shape,
+//! including the zero-activation skip (which keeps `0 * NaN` / `0 * inf`
+//! weight poison out of the accumulators, a property the deployment twins
+//! rely on).  Parallel callers ([`crate::tensor::matmul_slices_par`], the
+//! conv chunks) hand each pool task a disjoint output-row block running
+//! this same kernel, so results stay bit-identical at any thread count.
+//! `rust/tests/kernel.rs` enforces all of this, under default codegen and
+//! `-Ctarget-cpu=native` in CI.
+//!
+//! ## Who packs, and when
+//!
+//! [`PackedW`] is cached wherever weights are long-lived:
+//! [`crate::quant::deploy::DeployedModel::prepare`] packs every conv (per
+//! group) and the fc head once, offline, so serving workers never repack;
+//! the training-forward / heuristic paths pack per call into reusable
+//! scratch ([`crate::tensor::conv::ConvScratch`] or the thread-local
+//! [`with_pack_scratch`]), amortized over the `m = b*oh*ow` output rows of
+//! the GEMM.
+
+use std::cell::RefCell;
+
+/// Auto-vectorization lane width the micro-kernel is written for: 8 f32s
+/// (one AVX2 `ymm`; on narrower ISAs the compiler splits the lane loop).
+pub const LANES: usize = 8;
+/// Register-tile rows: output rows accumulated simultaneously per panel
+/// sweep.  `MR * NR` f32 accumulators stay live across the `kk` loop.
+pub const MR: usize = 4;
+/// Register-tile columns — one packed panel width (two [`LANES`] vectors).
+pub const NR: usize = 2 * LANES;
+
+/// Panel-packed weights: a `[k, n]` row-major matrix rearranged into
+/// `ceil(n / NR)` panels, each holding its [`NR`]-column slice K-major
+/// (`panel[kk * NR + lane] = w[kk, j0 + lane]`), the ragged last panel
+/// zero-padded to full width.  The micro-kernel then streams each panel
+/// front-to-back — contiguous loads — instead of striding `w[kk * n ..]`.
+///
+/// Packing a `[k, n]` matrix is one O(k·n) copy; [`PackedW::pack_cols`]
+/// reuses the buffer so repacking (training forwards, per-call paths)
+/// allocates nothing once warm.
+#[derive(Clone, Debug, Default)]
+pub struct PackedW {
+    k: usize,
+    n: usize,
+    /// `n.div_ceil(NR)` panels × `k * NR` floats.
+    data: Vec<f32>,
+}
+
+impl PackedW {
+    /// Pack a whole row-major `[k, n]` matrix.
+    pub fn pack(w: &[f32], k: usize, n: usize) -> PackedW {
+        let mut pw = PackedW::default();
+        pw.pack_cols(w, k, n, 0, n);
+        pw
+    }
+
+    /// (Re)pack columns `c0 .. c0 + ncols` of the row-major
+    /// `[k, row_stride]` matrix `w`, reusing the existing buffer.  The
+    /// column slice form is what grouped convs need: group `g` of an HWIO
+    /// kernel is columns `g*cg_out .. (g+1)*cg_out` of the `[k*k*cg_in,
+    /// cout]` matrix, packed without materializing a dense copy first.
+    pub fn pack_cols(&mut self, w: &[f32], k: usize, row_stride: usize, c0: usize, ncols: usize) {
+        assert!(c0 + ncols <= row_stride, "columns {c0}+{ncols} out of stride {row_stride}");
+        assert_eq!(w.len(), k * row_stride, "weight buffer vs [k, row_stride]");
+        self.k = k;
+        self.n = ncols;
+        let panels = ncols.div_ceil(NR);
+        let len = panels * k * NR;
+        if self.data.len() != len {
+            self.data.clear();
+            self.data.resize(len, 0.0);
+        }
+        for p in 0..panels {
+            let j0 = p * NR;
+            let nv = NR.min(ncols - j0);
+            let panel = &mut self.data[p * k * NR..(p + 1) * k * NR];
+            for kk in 0..k {
+                let src = kk * row_stride + c0 + j0;
+                panel[kk * NR..kk * NR + nv].copy_from_slice(&w[src..src + nv]);
+                // pad lanes must be re-zeroed explicitly: a warm buffer may
+                // be repacked at a different (k, n) of the same total
+                // length, leaving stale values where the padding now falls
+                panel[kk * NR + nv..(kk + 1) * NR].fill(0.0);
+            }
+        }
+    }
+
+    /// Reduction depth (rows of the packed matrix).
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Output columns (un-padded logical width).
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Bytes held by the packed buffer (diagnostic / memory accounting).
+    pub fn packed_bytes(&self) -> usize {
+        self.data.len() * std::mem::size_of::<f32>()
+    }
+}
+
+/// The scalar reference kernel (the historical `tensor::matmul_rows` inner
+/// loop): `x` rows (each of length `k`) against row-major `w[k, n]`,
+/// *accumulated* into `out` (callers pre-zero it).  Kept as the ground
+/// truth [`gemm`] is tested and benchmarked against.
+pub fn gemm_ref(x: &[f32], k: usize, w: &[f32], n: usize, out: &mut [f32]) {
+    if k == 0 || n == 0 {
+        return;
+    }
+    for (xrow, orow) in x.chunks_exact(k).zip(out.chunks_exact_mut(n)) {
+        for (kk, &xv) in xrow.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let wrow = &w[kk * n..(kk + 1) * n];
+            for (o, &wv) in orow.iter_mut().zip(wrow) {
+                *o += xv * wv;
+            }
+        }
+    }
+}
+
+/// One `R`×[`NR`] register tile: `R` consecutive x rows (stride `k`)
+/// against one packed panel, accumulators built from zero and *stored*
+/// (write-mode) to `out` rows at stride `n_stride`, `nv` valid lanes.
+#[inline(always)]
+fn micro_tile<const R: usize>(
+    x: &[f32],
+    k: usize,
+    panel: &[f32],
+    out: &mut [f32],
+    n_stride: usize,
+    nv: usize,
+) {
+    let xr: [&[f32]; R] = std::array::from_fn(|r| &x[r * k..(r + 1) * k]);
+    let mut acc = [[0.0f32; NR]; R];
+    for kk in 0..k {
+        let wrow = &panel[kk * NR..kk * NR + NR];
+        for r in 0..R {
+            let xv = xr[r][kk];
+            // preserve the reference kernel's zero-activation skip: it is
+            // load-bearing (0 * NaN/inf weights must not poison the tile)
+            if xv == 0.0 {
+                continue;
+            }
+            for (a, &wv) in acc[r].iter_mut().zip(wrow) {
+                *a += xv * wv;
+            }
+        }
+    }
+    for (r, accr) in acc.iter().enumerate() {
+        out[r * n_stride..r * n_stride + nv].copy_from_slice(&accr[..nv]);
+    }
+}
+
+/// One panel narrower than a single vector lane group: run the identical
+/// reduction over just the `nv` valid lanes instead of all [`NR`].  This is
+/// the depthwise-conv case (`cg_out == 1`: one useful lane in a padded
+/// panel) and the raggedest of ragged tails — full-width tiles would spend
+/// `NR/nv`× the multiply work on zero pad lanes.
+#[allow(clippy::too_many_arguments)]
+fn micro_narrow(
+    x: &[f32],
+    m: usize,
+    k: usize,
+    panel: &[f32],
+    out: &mut [f32],
+    n_stride: usize,
+    nv: usize,
+) {
+    for i in 0..m {
+        let xrow = &x[i * k..(i + 1) * k];
+        let mut acc = [0.0f32; LANES];
+        for (kk, &xv) in xrow.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let wrow = &panel[kk * NR..kk * NR + nv];
+            for (a, &wv) in acc[..nv].iter_mut().zip(wrow) {
+                *a += xv * wv;
+            }
+        }
+        out[i * n_stride..i * n_stride + nv].copy_from_slice(&acc[..nv]);
+    }
+}
+
+/// Write-mode packed GEMM: `out[m, n] = x[m, k] @ w` with `w` pre-packed.
+/// Every element of `out` is overwritten (beta = 0), so callers reuse
+/// right-sized buffers without zero-filling them first.  Bit-identical to
+/// [`gemm_ref`] over a zeroed buffer — see the module docs for why.
+///
+/// Loop order: panels outer, [`MR`]-row blocks inner, so one panel
+/// (`k * NR` floats) stays cache-hot across all `m / MR` row blocks while
+/// the accumulator tile pins the output in registers for the whole `kk`
+/// reduction — the scalar loop instead re-walks the full `n`-wide output
+/// row once per `kk`.  A panel with fewer than [`LANES`] valid lanes
+/// (depthwise convs, the raggedest tails) drops to [`micro_narrow`] so pad
+/// lanes cost no multiplies; per-element reduction order is the same
+/// either way.
+pub fn gemm(x: &[f32], m: usize, pw: &PackedW, out: &mut [f32]) {
+    let (k, n) = (pw.k, pw.n);
+    debug_assert_eq!(x.len(), m * k, "x vs [m, k]");
+    debug_assert_eq!(out.len(), m * n, "out vs [m, n]");
+    if m == 0 || n == 0 {
+        return;
+    }
+    if k == 0 {
+        out.fill(0.0);
+        return;
+    }
+    let panels = n.div_ceil(NR);
+    for p in 0..panels {
+        let j0 = p * NR;
+        let nv = NR.min(n - j0);
+        let panel = &pw.data[p * k * NR..(p + 1) * k * NR];
+        if nv < LANES {
+            micro_narrow(x, m, k, panel, &mut out[j0..], n, nv);
+            continue;
+        }
+        let mut i = 0;
+        while i + MR <= m {
+            micro_tile::<MR>(&x[i * k..(i + MR) * k], k, panel, &mut out[i * n + j0..], n, nv);
+            i += MR;
+        }
+        // ragged row remainder (m % MR); arms must cover 1..MR
+        match m - i {
+            3 => micro_tile::<3>(&x[i * k..], k, panel, &mut out[i * n + j0..], n, nv),
+            2 => micro_tile::<2>(&x[i * k..], k, panel, &mut out[i * n + j0..], n, nv),
+            1 => micro_tile::<1>(&x[i * k..], k, panel, &mut out[i * n + j0..], n, nv),
+            rem => debug_assert_eq!(
+                rem, 0,
+                "write-mode kernel left {rem} rows unwritten — remainder arms lag MR"
+            ),
+        }
+    }
+}
+
+thread_local! {
+    /// Per-thread pack buffer for call sites whose weights are not
+    /// long-lived (training forwards, one-off heuristics): the pack is
+    /// amortized over the GEMM's `m` rows and the buffer over the thread's
+    /// lifetime.
+    static PACK_SCRATCH: RefCell<PackedW> = RefCell::new(PackedW::default());
+}
+
+/// Run `f` with this thread's reusable [`PackedW`] scratch.  Re-entrant
+/// calls (a packed caller invoking another packed caller mid-borrow) fall
+/// back to a fresh buffer instead of panicking.
+pub fn with_pack_scratch<R>(f: impl FnOnce(&mut PackedW) -> R) -> R {
+    PACK_SCRATCH.with(|cell| match cell.try_borrow_mut() {
+        Ok(mut pw) => f(&mut pw),
+        Err(_) => f(&mut PackedW::default()),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rand_vec(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = crate::data::Rng::new(seed);
+        (0..n).map(|_| rng.normal()).collect()
+    }
+
+    fn ref_out(x: &[f32], m: usize, k: usize, w: &[f32], n: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; m * n];
+        gemm_ref(x, k, w, n, &mut out);
+        out
+    }
+
+    #[test]
+    fn packed_layout_streams_columns() {
+        // [2, 3] matrix; single (padded) panel: lane j holds column j
+        let w = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let pw = PackedW::pack(&w, 2, 3);
+        assert_eq!((pw.k(), pw.n()), (2, 3));
+        assert_eq!(pw.data.len(), 2 * NR);
+        assert_eq!(&pw.data[0..3], &[1.0, 2.0, 3.0]);
+        assert_eq!(&pw.data[3..NR], &[0.0; NR - 3]);
+        assert_eq!(&pw.data[NR..NR + 3], &[4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn packed_matches_reference_bit_exactly() {
+        for &(m, k, n) in &[
+            (1usize, 1usize, 1usize),
+            (4, 8, NR),
+            (5, 7, NR + 1),
+            (MR - 1, 16, NR - 1),
+            (17, 33, 40),
+            (MR * 3, 2, 2 * NR),
+            (2, 64, 5),
+        ] {
+            let x = rand_vec(m * k, (m * 31 + k * 7 + n) as u64);
+            let w = rand_vec(k * n, (m + k + n * 13) as u64);
+            let pw = PackedW::pack(&w, k, n);
+            // sentinel fill proves write-mode coverage of every element
+            let mut got = vec![777.0f32; m * n];
+            gemm(&x, m, &pw, &mut got);
+            let want = ref_out(&x, m, k, &w, n);
+            let wb: Vec<u32> = want.iter().map(|v| v.to_bits()).collect();
+            let gb: Vec<u32> = got.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(wb, gb, "m={m} k={k} n={n}");
+        }
+    }
+
+    #[test]
+    fn degenerate_shapes_are_safe() {
+        // k = 0: write-mode must still zero the output
+        let pw = PackedW::pack(&[], 0, 3);
+        let mut out = vec![9.0f32; 2 * 3];
+        gemm(&[], 2, &pw, &mut out);
+        assert_eq!(out, vec![0.0; 6]);
+        // n = 0 and m = 0: no-ops on empty outputs
+        let pw = PackedW::pack(&[], 4, 0);
+        gemm(&rand_vec(8, 1), 2, &pw, &mut []);
+        let pw = PackedW::pack(&rand_vec(8, 2), 4, 2);
+        gemm(&[], 0, &pw, &mut []);
+    }
+
+    #[test]
+    fn zero_activations_mask_nonfinite_weights() {
+        // column kk of x is all-zero exactly where w row kk is poisoned
+        let (m, k, n) = (5usize, 6usize, NR + 3);
+        let mut x = rand_vec(m * k, 3);
+        let mut w = rand_vec(k * n, 4);
+        for i in 0..m {
+            x[i * k + 2] = 0.0;
+            x[i * k + 5] = 0.0;
+        }
+        for j in 0..n {
+            w[2 * n + j] = f32::NAN;
+            w[5 * n + j] = if j % 2 == 0 { f32::INFINITY } else { f32::NEG_INFINITY };
+        }
+        let pw = PackedW::pack(&w, k, n);
+        let mut got = vec![0.0f32; m * n];
+        gemm(&x, m, &pw, &mut got);
+        assert!(got.iter().all(|v| v.is_finite()), "poisoned rows must be skipped");
+        let want = ref_out(&x, m, k, &w, n);
+        assert_eq!(want, got);
+    }
+
+    #[test]
+    fn repacking_reuses_and_matches() {
+        let mut pw = PackedW::default();
+        // (4, 16) -> (2, 20) keeps the same buffer length (64 floats) while
+        // moving where the ragged pad lanes fall: stale-pad regression guard
+        for (k, n, seed) in
+            [(9usize, 21usize, 5u64), (4, 3, 6), (9, 21, 7), (4, 16, 8), (2, 20, 9)]
+        {
+            let w = rand_vec(k * n, seed);
+            pw.pack_cols(&w, k, n, 0, n);
+            let fresh = PackedW::pack(&w, k, n);
+            assert_eq!(pw.data, fresh.data, "k={k} n={n}");
+            assert_eq!((pw.k(), pw.n()), (k, n));
+        }
+    }
+
+    #[test]
+    fn pack_cols_slices_groups() {
+        // columns 2..5 of a [2, 6] matrix == packing the dense 3-col copy
+        let (k, stride) = (2usize, 6usize);
+        let w = rand_vec(k * stride, 8);
+        let mut sliced = PackedW::default();
+        sliced.pack_cols(&w, k, stride, 2, 3);
+        let dense: Vec<f32> = (0..k)
+            .flat_map(|kk| w[kk * stride + 2..kk * stride + 5].to_vec())
+            .collect();
+        let want = PackedW::pack(&dense, k, 3);
+        assert_eq!(sliced.data, want.data);
+    }
+}

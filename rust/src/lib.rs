@@ -44,13 +44,38 @@
 //! checkout (`cargo bench --bench serve_throughput` emits
 //! `BENCH_serve.json`).
 //!
+//! ## The kernel engine — `qft::kernel`
+//!
+//! [`kernel`] owns THE inner loop every forward path bottoms out in: a
+//! register-blocked ([`kernel::MR`]×[`kernel::NR`] accumulator tile,
+//! 8-wide f32 lanes the compiler auto-vectorizes — no unsafe, no
+//! intrinsics) write-mode GEMM over a panel-packed weight layout
+//! ([`kernel::PackedW`]), replacing the historical scalar `matmul_rows`
+//! walk (kept as [`kernel::gemm_ref`], the tested-against baseline).
+//!
+//! *Packing*: [`quant::deploy::DeployedModel::prepare`] packs every conv
+//! (per group, [`tensor::conv::PackedConvW`]) and the fc head once,
+//! offline, so serving workers stream K-major panels and never repack;
+//! training-forward / heuristic paths repack per call into reusable
+//! scratch, amortized over the `b*oh*ow` GEMM rows.
+//!
+//! *Bit-exactness contract*: per output element the reduction is always
+//! `kk = 0..k` ascending with one mul + one add per step and the
+//! zero-activation skip preserved; vectorization runs only across the `n`
+//! output-column lanes, which never interact.  Packed, scalar, serial,
+//! chunk-parallel, conv and batched-deploy results are therefore
+//! bit-identical, at any thread count (`rust/tests/kernel.rs`, under
+//! default codegen and `-Ctarget-cpu=native` in CI).
+//!
 //! ## Parallelism — `qft::par`
 //!
 //! [`par`] is a std-only (threads + channels) chunk-based scoped thread
 //! pool behind every intra-op parallel kernel: the GEMM
 //! [`tensor::matmul_slices_par`], the conv
 //! [`tensor::conv::conv2d_into_par`], and the batch-level
-//! [`quant::deploy::DeployedModel::forward_batch_pooled`].
+//! [`quant::deploy::DeployedModel::forward_batch_pooled`].  GEMM chunks
+//! are [`kernel::MR`]-aligned ([`par::chunk_ranges_aligned`]) so only the
+//! last chunk carries a ragged register tile.
 //!
 //! *Pool sharing model*: there is ONE process-wide pool ([`par::global`]),
 //! sized by the `--threads` CLI flag on `serve` / `bench-serve` / the eval
@@ -58,21 +83,18 @@
 //! and [`coordinator::eval::eval_integer_rust`] all submit scopes to it,
 //! so concurrent callers cooperate on one worker set instead of
 //! oversubscribing the machine; [`serve::ServeStats`] reports the pool
-//! width alongside latency.  Tests and benches build private
+//! width alongside latency, and the batcher reads the pool's live
+//! [`par::Pool::active_scopes`] load to adapt its max-wait policy
+//! (idle pool → dispatch small batches immediately; saturated pool →
+//! hold for full micro-batches).  Tests and benches build private
 //! [`par::Pool`]s at explicit widths.
-//!
-//! *Bit-exactness contract*: every parallel kernel pre-partitions work into
-//! disjoint output-row chunks and runs the identical serial inner loop
-//! (the crate-private `tensor::matmul_rows`) over each, so per-element f32
-//! accumulation order is unchanged and results are bit-identical to the
-//! serial path at any thread count (enforced by `rust/tests/par.rs` at
-//! 1/2/8 threads in both `lw` and `dch` modes).
 //!
 //! The public API is consumed by the `repro` CLI, `examples/` and
 //! `rust/benches/` (one bench per paper table/figure).
 
 pub mod coordinator;
 pub mod data;
+pub mod kernel;
 pub mod nn;
 pub mod par;
 pub mod quant;

@@ -62,6 +62,11 @@ qft::par kernel pool that serve workers and the integer eval share
 (default: available parallelism).  Results never depend on T — the
 parallel kernels are bit-identical to their serial twins.
 
+Batching is pool-aware by default: workers shrink the micro-batch hold
+time while the kernel pool is idle (latency) and grow it when the pool
+is saturated (throughput).  --no-adaptive pins the hold at
+--max-wait-us.  Replies are bit-identical either way.
+
 Weights for serving resolve from weights/A.MODE.qftw (qft export), else
 weights/A.qftw (FP teacher + offline PTQ init), else he-init smoke weights.
 Without artifacts/manifest.json a built-in `synthetic` arch is served.
@@ -73,7 +78,7 @@ const KV_KEYS: &[&str] = &[
     "max-wait-us", "queue-cap", "requests", "concurrency", "threads",
 ];
 /// Every boolean `--flag`.
-const BOOL_FLAGS: &[&str] = &["cle", "frozen-scales", "fast"];
+const BOOL_FLAGS: &[&str] = &["cle", "frozen-scales", "fast", "no-adaptive"];
 /// Every command (validated before any runtime/artifact work happens).
 const COMMANDS: &[&str] = &[
     "pretrain", "eval-fp", "qft", "table1", "table2", "fig3", "fig5", "fig6",
@@ -201,6 +206,7 @@ fn serve_cfg(args: &Args) -> Result<ServeConfig> {
         max_batch: args.usize("max-batch", 8)?,
         max_wait: Duration::from_micros(args.usize("max-wait-us", 200)? as u64),
         queue_cap: args.usize("queue-cap", 256)?,
+        adaptive: !args.flag("no-adaptive"),
     })
 }
 

@@ -4,7 +4,10 @@
 //! module deserializes it and provides a pure-rust FP forward pass used by
 //! the heuristics (CLE, bias correction), the integer deployment simulator,
 //! and the per-channel analysis figures.  The *hot* path (training/eval)
-//! always goes through the AOT HLO executables instead.
+//! always goes through the AOT HLO executables instead — but even this
+//! reference forward runs on the [`crate::kernel`] packed GEMM via
+//! [`crate::tensor::conv::conv2d`] (thread-local scratch, per-call weight
+//! packing), so heuristic loops are not scalar-bound either.
 
 pub mod arch;
 
@@ -56,6 +59,17 @@ pub fn apply_act(t: &Tensor, act: &str) -> Tensor {
     }
 }
 
+/// [`apply_act`] without the output clone — the forward passes own their
+/// conv outputs, so the activation can rewrite them in place (same scalar
+/// ops element-for-element, so results are bit-identical).
+pub fn apply_act_inplace(t: &mut Tensor, act: &str) {
+    match act {
+        "relu" => t.map_inplace(|x| x.max(0.0)),
+        "relu6" => t.map_inplace(|x| x.clamp(0.0, 6.0)),
+        _ => {}
+    }
+}
+
 /// Full-precision forward, collecting every value tensor.
 pub struct Forward {
     pub values: HashMap<usize, Tensor>,
@@ -73,12 +87,14 @@ pub fn fp_forward(arch: &ArchSpec, params: &ParamMap, x: &Tensor) -> Forward {
             OpKind::Conv => {
                 let w = params.get(&format!("w:{}", op.name));
                 let b = params.get(&format!("b:{}", op.name));
-                let y = conv2d(&values[&op.inp], w, &b.data, op.stride, op.groups);
-                values.insert(op.out, apply_act(&y, &op.act));
+                let mut y = conv2d(&values[&op.inp], w, &b.data, op.stride, op.groups);
+                apply_act_inplace(&mut y, &op.act);
+                values.insert(op.out, y);
             }
             OpKind::Add => {
-                let y = values[&op.a].add(&values[&op.b]);
-                values.insert(op.out, apply_act(&y, &op.act));
+                let mut y = values[&op.a].add(&values[&op.b]);
+                apply_act_inplace(&mut y, &op.act);
+                values.insert(op.out, y);
             }
             OpKind::Gap => {
                 feat = Some(values[&op.inp].clone());

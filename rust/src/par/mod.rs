@@ -25,6 +25,7 @@
 //! executes the nested tasks itself if every worker is busy).
 
 use std::ops::Range;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex, OnceLock};
 use std::thread::JoinHandle;
 
@@ -75,6 +76,19 @@ pub struct Pool {
     /// Scope hand-off to workers; `None` only during drop.
     tx: Mutex<Option<mpsc::Sender<Arc<Scope>>>>,
     workers: Vec<JoinHandle<()>>,
+    /// Kernel scopes currently in flight (load signal for the adaptive
+    /// [`crate::serve::Batcher`] policy; nested scopes count individually).
+    active: AtomicUsize,
+}
+
+/// Decrements the pool's active-scope counter even if the scope re-raises
+/// a task panic.
+struct ActiveGuard<'a>(&'a AtomicUsize);
+
+impl Drop for ActiveGuard<'_> {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::Relaxed);
+    }
 }
 
 impl Pool {
@@ -101,12 +115,19 @@ impl Pool {
                     .expect("spawn pool worker")
             })
             .collect();
-        Pool { threads, tx: Mutex::new(Some(tx)), workers }
+        Pool { threads, tx: Mutex::new(Some(tx)), workers, active: AtomicUsize::new(0) }
     }
 
     /// Total parallel width (background workers + the submitting thread).
     pub fn threads(&self) -> usize {
         self.threads
+    }
+
+    /// Kernel scopes currently executing on this pool — a cheap, racy load
+    /// signal (0 = idle).  The serve batcher uses it to trade batching
+    /// latency against pool saturation; correctness never depends on it.
+    pub fn active_scopes(&self) -> usize {
+        self.active.load(Ordering::Relaxed)
     }
 
     /// Run every task to completion before returning, using the calling
@@ -118,6 +139,8 @@ impl Pool {
         if n == 0 {
             return;
         }
+        self.active.fetch_add(1, Ordering::Relaxed);
+        let _active = ActiveGuard(&self.active);
         if self.workers.is_empty() || n == 1 {
             for t in tasks {
                 t();
@@ -183,11 +206,26 @@ impl Drop for Pool {
 /// kernels give each range a disjoint output block run by the serial inner
 /// loop, the boundaries cannot affect results either.
 pub fn chunk_ranges(n: usize, width: usize, min_per_chunk: usize) -> Vec<Range<usize>> {
+    chunk_ranges_aligned(n, width, min_per_chunk, 1)
+}
+
+/// [`chunk_ranges`] with every chunk boundary (except the final end at `n`)
+/// rounded up to a multiple of `align`.  The GEMM callers pass
+/// [`crate::kernel::MR`] so at most ONE chunk — the last — carries a ragged
+/// register-tile remainder; alignment is pure perf, results never depend on
+/// chunk boundaries (see above).
+pub fn chunk_ranges_aligned(
+    n: usize,
+    width: usize,
+    min_per_chunk: usize,
+    align: usize,
+) -> Vec<Range<usize>> {
     if n == 0 {
         return Vec::new();
     }
+    let align = align.max(1);
     let chunks = width.max(1).min(n.div_ceil(min_per_chunk.max(1))).max(1);
-    let per = n.div_ceil(chunks);
+    let per = n.div_ceil(chunks).div_ceil(align) * align;
     (0..n).step_by(per).map(|s| s..(s + per).min(n)).collect()
 }
 
@@ -325,5 +363,37 @@ mod tests {
             assert_eq!(next, n, "ranges must cover 0..{n}");
         }
         assert!(chunk_ranges(0, 4, 1).is_empty());
+    }
+
+    #[test]
+    fn aligned_chunk_boundaries_are_multiples() {
+        for (n, width, min, align) in
+            [(100usize, 4usize, 1usize, 4usize), (37, 8, 1, 4), (64, 3, 8, 8), (5, 4, 1, 4)]
+        {
+            let ranges = chunk_ranges_aligned(n, width, min, align);
+            let mut next = 0;
+            for (i, r) in ranges.iter().enumerate() {
+                assert_eq!(r.start, next, "contiguous");
+                assert!(r.end > r.start);
+                if i + 1 < ranges.len() {
+                    assert_eq!(r.end % align, 0, "interior boundary must be aligned");
+                }
+                next = r.end;
+            }
+            assert_eq!(next, n, "cover 0..{n}");
+        }
+        assert!(chunk_ranges_aligned(0, 4, 1, 4).is_empty());
+    }
+
+    #[test]
+    fn active_scopes_tracks_in_flight_work() {
+        let pool = Pool::new(2);
+        assert_eq!(pool.active_scopes(), 0);
+        let min_seen = AtomicUsize::new(usize::MAX);
+        pool.par_for(4, |_| {
+            min_seen.fetch_min(pool.active_scopes(), Ordering::SeqCst);
+        });
+        assert!(min_seen.load(Ordering::SeqCst) >= 1, "counter visible inside the scope");
+        assert_eq!(pool.active_scopes(), 0, "counter returns to idle");
     }
 }

@@ -27,9 +27,12 @@
 
 use std::collections::HashMap;
 
-use crate::nn::{apply_act, ArchSpec, OpKind, ParamMap};
+use crate::kernel::PackedW;
+use crate::nn::{apply_act_inplace, ArchSpec, OpKind, ParamMap};
 use crate::par::Pool;
-use crate::tensor::conv::{conv2d, conv2d_into, conv2d_into_par, ConvScratch};
+use crate::tensor::conv::{
+    conv2d, conv2d_packed_into, conv2d_packed_into_par, ConvScratch, PackedConvW,
+};
 use crate::tensor::Tensor;
 use crate::WEIGHT_QMAX;
 
@@ -145,8 +148,8 @@ pub fn forward_fakequant(
                 let b = tm.get(&format!("b:{}", op.name));
                 let (s_l, s_r) = kernel_covectors(arch, tm, mode, op);
                 let wq = fq_kernel(w, &s_l, &s_r);
-                let y = conv2d(&vals[&op.inp], &wq, &b.data, op.stride, op.groups);
-                let mut a = apply_act(&y, &op.act);
+                let mut a = conv2d(&vals[&op.inp], &wq, &b.data, op.stride, op.groups);
+                apply_act_inplace(&mut a, &op.act);
                 if mode == Mode::Lw {
                     let (qmin, qmax) = act_range(arch, op.out);
                     a = super::mmse::fq_act(&a, &sv_of(tm, op.out), qmin, qmax);
@@ -154,7 +157,8 @@ pub fn forward_fakequant(
                 vals.insert(op.out, a);
             }
             OpKind::Add => {
-                let mut a = apply_act(&vals[&op.a].add(&vals[&op.b]), &op.act);
+                let mut a = vals[&op.a].add(&vals[&op.b]);
+                apply_act_inplace(&mut a, &op.act);
                 if mode == Mode::Lw {
                     let (qmin, qmax) = act_range(arch, op.out);
                     a = super::mmse::fq_act(&a, &sv_of(tm, op.out), qmin, qmax);
@@ -222,18 +226,20 @@ fn act_scalar(act: &str, v: f32) -> f32 {
     }
 }
 
-/// One conv lowered to frozen deployment constants.  `lw`: `kernel` holds
+/// One conv lowered to frozen deployment constants.  `lw`: `packed` holds
 /// integer codes, `bias` the integer bias at accumulator scale, plus the
-/// recode factor and integer relu6 thresholds.  `dch`: `kernel` holds the
+/// recode factor and integer relu6 thresholds.  `dch`: `packed` holds the
 /// dequantized 4b weights and everything runs at FP32 accumulator precision.
+/// Either way the kernel is stored panel-packed ([`PackedConvW`], one
+/// [`PackedW`] per group) so the online path streams K-major panels through
+/// [`crate::kernel::gemm`] without ever repacking.
 struct PreparedConv {
     inp: usize,
     out: usize,
     stride: usize,
-    groups: usize,
     cout: usize,
     act: String,
-    kernel: Tensor,
+    packed: PackedConvW,
     bias: Vec<f32>,
     /// lw only: per-channel integer clip(6/S_acc) thresholds for relu6.
     relu6_thr: Option<Vec<f32>>,
@@ -254,7 +260,7 @@ enum PreparedOp {
     Conv(PreparedConv),
     Add { a: usize, b: usize, out: usize, act: String, dec: Option<AddScales> },
     Gap { inp: usize, out: usize, dec: Option<Vec<f32>> },
-    Fc { inp: usize, w: Tensor, bias: Vec<f32> },
+    Fc { inp: usize, w: PackedW, bias: Vec<f32> },
 }
 
 /// Reusable buffers for the integer forward: one activation tensor per graph
@@ -349,10 +355,12 @@ impl DeployedModel {
                                 inp: op.inp,
                                 out: op.out,
                                 stride: op.stride,
-                                groups: op.groups,
                                 cout: op.cout,
                                 act: op.act.clone(),
-                                kernel: kernel_codes(w, &s_l, &s_r),
+                                packed: PackedConvW::pack(
+                                    &kernel_codes(w, &s_l, &s_r),
+                                    op.groups,
+                                ),
                                 bias,
                                 relu6_thr,
                                 recode: Some((f, qmin, qmax)),
@@ -362,12 +370,11 @@ impl DeployedModel {
                             inp: op.inp,
                             out: op.out,
                             stride: op.stride,
-                            groups: op.groups,
                             cout: op.cout,
                             act: op.act.clone(),
                             // W4A32: ship 4b codes, accumulate FP32 over the
                             // dequantized kernel (== the fake-quant twin)
-                            kernel: fq_kernel(w, &s_l, &s_r),
+                            packed: PackedConvW::pack(&fq_kernel(w, &s_l, &s_r), op.groups),
                             bias: b.data.clone(),
                             relu6_thr: None,
                             recode: None,
@@ -405,9 +412,11 @@ impl DeployedModel {
                     ops.push(PreparedOp::Gap { inp: op.inp, out: op.out, dec });
                 }
                 OpKind::Fc => {
+                    let w = tm.get(&format!("w:{}", op.name));
+                    assert_eq!(w.rank(), 2, "fc weight must be [k, classes]");
                     ops.push(PreparedOp::Fc {
                         inp: op.inp,
-                        w: tm.get(&format!("w:{}", op.name)).clone(),
+                        w: PackedW::pack(&w.data, w.shape[0], w.shape[1]),
                         bias: tm.get(&format!("b:{}", op.name)).data.clone(),
                     });
                 }
@@ -587,24 +596,23 @@ impl DeployedModel {
                 PreparedOp::Conv(pc) => {
                     let mut acc = take_val(&mut scratch.vals, pc.out);
                     // intra-op (output-row) parallelism when a pool was
-                    // handed down; identical results either way
+                    // handed down; identical results either way.  Weights
+                    // were panel-packed once at prepare time.
                     match pool {
-                        Some(p) => conv2d_into_par(
+                        Some(p) => conv2d_packed_into_par(
                             &scratch.vals[&pc.inp],
-                            &pc.kernel,
+                            &pc.packed,
                             &pc.bias,
                             pc.stride,
-                            pc.groups,
                             &mut scratch.conv,
                             &mut acc,
                             p,
                         ),
-                        None => conv2d_into(
+                        None => conv2d_packed_into(
                             &scratch.vals[&pc.inp],
-                            &pc.kernel,
+                            &pc.packed,
                             &pc.bias,
                             pc.stride,
-                            pc.groups,
                             &mut scratch.conv,
                             &mut acc,
                         ),
@@ -689,7 +697,15 @@ impl DeployedModel {
                     scratch.vals.insert(*out, pooled);
                 }
                 PreparedOp::Fc { inp, w, bias } => {
-                    let mut y = scratch.vals[inp].matmul(w);
+                    let src = &scratch.vals[inp];
+                    assert_eq!(src.rank(), 2);
+                    assert_eq!(src.shape[1], w.k());
+                    let m = src.shape[0];
+                    // logits leave the scratch (they are the return value),
+                    // so this one buffer is allocated per call by design
+                    let mut ydata = Vec::new();
+                    crate::tensor::matmul_packed_slices(&src.data, m, w, &mut ydata);
+                    let mut y = Tensor::new(vec![m, w.n()], ydata);
                     for row in y.data.chunks_mut(bias.len()) {
                         for (v, &bv) in row.iter_mut().zip(bias) {
                             *v += bv;

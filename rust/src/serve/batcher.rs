@@ -8,6 +8,16 @@
 //! no lock-free cleverness, because batch assembly is O(µs) next to a
 //! forward pass.
 //!
+//! The *pool-aware* refinement ([`Batcher::next_batch_pool_aware`] +
+//! [`BatchPolicy::effective_wait`]): once a head request is in hand, the
+//! batcher samples how loaded the shared [`crate::par`] kernel pool is.
+//! An idle pool means an under-filled batch can still use the whole
+//! machine through intra-op parallelism, so holding it open only adds
+//! latency — the wait shrinks.  A contended pool (several kernel scopes
+//! interleaving) means per-batch overhead is the scarce resource, so the
+//! wait grows to fill micro-batches (throughput).  This only moves the
+//! *dispatch moment*; replies are bit-identical either way.
+//!
 //! Invariant the tests lean on: every submitted request is handed to exactly
 //! one worker batch (pop happens under the same lock as push), so requests
 //! are never dropped or duplicated, and FIFO order is preserved.
@@ -63,6 +73,34 @@ impl Default for BatchPolicy {
     }
 }
 
+impl BatchPolicy {
+    /// Pool-aware hold time for the next micro-batch, from `busy_scopes` —
+    /// the number of kernel scopes concurrently in flight on the shared
+    /// pool — and `depth`, the requests already queued.
+    ///
+    /// * queue already holds a full batch → no wait at all (it fills now);
+    /// * pool idle (`busy == 0`) → `max_wait / 4`: dispatch small batches
+    ///   quickly, the idle pool parallelizes them intra-op;
+    /// * pool contended (`busy >= 2`: several scopes interleaving on one
+    ///   worker set, so per-scope throughput is already divided) →
+    ///   `max_wait * 4`: hold for stragglers and amortize per-batch cost;
+    /// * exactly one scope in flight → the configured `max_wait`.
+    ///
+    /// Scope count is compared against *other concurrent work*, not the
+    /// pool width: a scope saturates the whole pool by itself, so width
+    /// says nothing about contention.
+    pub fn effective_wait(&self, busy_scopes: usize, depth: usize) -> Duration {
+        if depth >= self.max_batch {
+            return Duration::ZERO;
+        }
+        match busy_scopes {
+            0 => self.max_wait / 4,
+            1 => self.max_wait,
+            _ => self.max_wait.saturating_mul(4),
+        }
+    }
+}
+
 struct State {
     q: VecDeque<InferRequest>,
     closed: bool,
@@ -113,26 +151,59 @@ impl Batcher {
         Ok(depth)
     }
 
+    /// Next micro-batch for a worker, holding a non-full batch open for up
+    /// to the configured `max_wait`.  See [`Self::next_batch_wait`].
+    pub fn next_batch(&self) -> Option<Vec<InferRequest>> {
+        self.next_batch_wait(self.policy.max_wait)
+    }
+
+    /// [`Self::next_batch_wait`] with the hold time chosen by
+    /// [`BatchPolicy::effective_wait`] from `pool`'s load, sampled *after*
+    /// the head request has arrived — a worker can block here indefinitely
+    /// waiting for traffic, so sampling any earlier would act on
+    /// arbitrarily stale saturation.
+    pub fn next_batch_pool_aware(&self, pool: &crate::par::Pool) -> Option<Vec<InferRequest>> {
+        let st = self.wait_head()?;
+        let wait = self.policy.effective_wait(pool.active_scopes(), st.q.len());
+        Some(self.drain_batch(st, wait))
+    }
+
     /// Next micro-batch for a worker.  Blocks for work; once a head request
     /// exists, drains same-model requests up to `max_batch`, holding the
     /// batch open up to `max_wait` if the queue runs dry first.  Requests
     /// for a *different* model than the batch head are left queued (FIFO
     /// across models is preserved — the next worker picks them up).
     /// Returns `None` once closed and fully drained.
-    pub fn next_batch(&self) -> Option<Vec<InferRequest>> {
+    pub fn next_batch_wait(&self, max_wait: Duration) -> Option<Vec<InferRequest>> {
+        let st = self.wait_head()?;
+        Some(self.drain_batch(st, max_wait))
+    }
+
+    /// Block until the queue is non-empty (returning the held lock) or
+    /// closed-and-drained (`None`).
+    fn wait_head(&self) -> Option<std::sync::MutexGuard<'_, State>> {
         let mut st = self.state.lock().unwrap();
         loop {
             if !st.q.is_empty() {
-                break;
+                return Some(st);
             }
             if st.closed {
                 return None;
             }
             st = self.not_empty.wait(st).unwrap();
         }
+    }
+
+    /// Assemble one micro-batch starting from the (non-empty) queue head,
+    /// holding it open up to `max_wait` to fill.
+    fn drain_batch(
+        &self,
+        mut st: std::sync::MutexGuard<'_, State>,
+        max_wait: Duration,
+    ) -> Vec<InferRequest> {
         let head_model = st.q.front().unwrap().model;
         let mut batch = Vec::with_capacity(self.policy.max_batch);
-        let deadline = Instant::now() + self.policy.max_wait;
+        let deadline = Instant::now() + max_wait;
         loop {
             while batch.len() < self.policy.max_batch
                 && st.q.front().map(|r| r.model == head_model).unwrap_or(false)
@@ -174,7 +245,7 @@ impl Batcher {
         if leftovers {
             self.not_empty.notify_one();
         }
-        Some(batch)
+        batch
     }
 
     /// Stop admitting requests and wake everyone; workers drain what's
@@ -246,6 +317,46 @@ mod tests {
         assert_eq!(b2.iter().map(|r| r.id).collect::<Vec<_>>(), vec![2, 3]);
         let b3 = b.next_batch().unwrap();
         assert_eq!(b3.iter().map(|r| r.id).collect::<Vec<_>>(), vec![4]);
+    }
+
+    #[test]
+    fn effective_wait_tracks_pool_load() {
+        let p = BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_micros(400),
+            queue_cap: 64,
+        };
+        // full queue: dispatch immediately regardless of pool state
+        assert_eq!(p.effective_wait(0, 8), Duration::ZERO);
+        assert_eq!(p.effective_wait(9, 20), Duration::ZERO);
+        // idle pool: shrink; one scope in flight: base; contended: grow
+        let idle = p.effective_wait(0, 1);
+        let base = p.effective_wait(1, 1);
+        let contended = p.effective_wait(2, 1);
+        assert!(idle < base, "idle pool must shorten the hold ({idle:?} vs {base:?})");
+        assert_eq!(base, p.max_wait);
+        assert!(contended > base, "contention must lengthen the hold ({contended:?} vs {base:?})");
+        assert_eq!(p.effective_wait(16, 1), contended, "growth saturates, no overflow");
+    }
+
+    #[test]
+    fn next_batch_wait_zero_dispatches_what_is_queued() {
+        let b = Batcher::new(BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_millis(250),
+            queue_cap: 16,
+        });
+        let mut rxs = Vec::new();
+        for i in 0..3 {
+            let (r, rx) = req(i, 0);
+            b.submit(r).map_err(|_| ()).unwrap();
+            rxs.push(rx);
+        }
+        // a zero hold must not sleep the configured 250 ms
+        let t0 = Instant::now();
+        let batch = b.next_batch_wait(Duration::ZERO).unwrap();
+        assert_eq!(batch.len(), 3);
+        assert!(t0.elapsed() < Duration::from_millis(200), "zero wait must not hold");
     }
 
     #[test]

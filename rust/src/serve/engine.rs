@@ -31,6 +31,12 @@ pub struct ServeConfig {
     pub max_batch: usize,
     pub max_wait: Duration,
     pub queue_cap: usize,
+    /// Pool-aware batching ([`BatchPolicy::effective_wait`]): workers scale
+    /// the batch hold time by the live [`crate::par::global`] pool load —
+    /// idle pool dispatches fast (latency), saturated pool holds for full
+    /// batches (throughput).  Replies are bit-identical either way; off
+    /// (`--no-adaptive`) pins the hold at `max_wait`.
+    pub adaptive: bool,
 }
 
 impl Default for ServeConfig {
@@ -40,6 +46,7 @@ impl Default for ServeConfig {
             max_batch: 8,
             max_wait: Duration::from_micros(200),
             queue_cap: 256,
+            adaptive: true,
         }
     }
 }
@@ -63,12 +70,13 @@ impl Engine {
             queue_cap: cfg.queue_cap.max(1),
         }));
         let stats = Arc::new(ServeStats::with_pool(crate::par::global().threads()));
+        let adaptive = cfg.adaptive;
         let workers = (0..cfg.workers.max(1))
             .map(|_| {
                 let reg = registry.clone();
                 let bat = batcher.clone();
                 let st = stats.clone();
-                std::thread::spawn(move || worker_loop(&reg, &bat, &st))
+                std::thread::spawn(move || worker_loop(&reg, &bat, &st, adaptive))
             })
             .collect();
         Engine {
@@ -167,13 +175,22 @@ impl Client {
 
 /// Worker body: assemble → stack → batched integer forward → reply.
 /// Returns the number of batches it executed (join-side diagnostic).
-fn worker_loop(reg: &Registry, batcher: &Batcher, stats: &ServeStats) -> u64 {
+fn worker_loop(reg: &Registry, batcher: &Batcher, stats: &ServeStats, adaptive: bool) -> u64 {
     let pool = crate::par::global();
     let mut scratch = DeployScratch::new();
     let mut staging: Vec<f32> = Vec::new();
     let mut latencies: Vec<Duration> = Vec::new();
     let mut executed = 0u64;
-    while let Some(mut batch) = batcher.next_batch() {
+    loop {
+        // pool-aware hold: the batcher samples the shared kernel pool's
+        // live load once the head request is in hand (not before blocking
+        // for traffic, which could make the sample arbitrarily stale)
+        let next = if adaptive {
+            batcher.next_batch_pool_aware(pool)
+        } else {
+            batcher.next_batch()
+        };
+        let Some(mut batch) = next else { break };
         // invalid slot (possible only via a raw Batcher submit): drop the
         // batch — the closed senders surface as client-side errors
         let Some(model) = batch.first().and_then(|r| reg.try_get(r.model)).map(|e| &e.model)

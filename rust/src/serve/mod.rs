@@ -10,7 +10,11 @@
 //!   `repro qft` exports, the cached FP teacher, or he-init smoke weights).
 //! * [`batcher`] — [`Batcher`]: bounded request queue with dynamic
 //!   micro-batch assembly under a max-batch / max-wait policy and
-//!   blocking backpressure.
+//!   blocking backpressure.  The policy is *pool-aware*
+//!   ([`BatchPolicy::effective_wait`]): workers shrink the batch hold
+//!   time while the shared [`crate::par`] kernel pool is idle and grow
+//!   it when the pool is saturated, trading latency against throughput
+//!   from live load instead of a fixed knob.
 //! * [`engine`] — [`Engine`]: std-thread worker pool; each worker owns a
 //!   [`crate::quant::deploy::DeployScratch`] so steady-state execution
 //!   does not allocate, and submits its conv/GEMM work to the process-wide

@@ -2,32 +2,118 @@
 //! support — mirrors `jax.lax.conv_general_dilated(NHWC, HWIO)` as used by L2
 //! so the rust deployment simulator reproduces the AOT graphs bit-for-shape.
 //!
-//! Three entry points over one implementation: [`conv2d`] (allocating, for
-//! one-off heuristics), [`conv2d_into`] (writes into caller-owned buffers
-//! via [`ConvScratch`], for the serving / batched-eval hot path), and
-//! [`conv2d_into_par`] (splits the output-row dimension across a
-//! [`crate::par::Pool`]; im2col and the per-group GEMMs run per disjoint
-//! row block).  All run the same inner loops in the same per-element order,
-//! so results are bit-identical.
+//! All entry points lower to one im2col + [`crate::kernel::gemm`] pipeline
+//! over the panel-packed weight layout [`PackedConvW`]:
+//!
+//! * [`conv2d`] — allocating, for one-off heuristics; borrows a
+//!   thread-local [`ConvScratch`] so even the "one-off" path reuses its
+//!   im2col / pack buffers across calls (the nn heuristics hit it in a
+//!   loop).
+//! * [`conv2d_into`] / [`conv2d_into_par`] — write into caller-owned
+//!   buffers via [`ConvScratch`], packing the weight tensor into the
+//!   scratch per call (amortized over the `b*oh*ow` GEMM rows).
+//! * [`conv2d_packed_into`] / [`conv2d_packed_into_par`] — the serving /
+//!   deployment hot path: weights were packed ONCE (per group) at
+//!   [`crate::quant::deploy::DeployedModel::prepare`] time and stream
+//!   K-major through the register-blocked kernel on every call.
+//!
+//! The `_par` variants split the `b*oh*ow` output-row dimension into
+//! [`crate::kernel::MR`]-aligned chunks across a [`crate::par::Pool`];
+//! im2col and the per-group GEMMs run per disjoint row block.  All variants
+//! run the same kernel in the same per-element order, so results are
+//! bit-identical (see the [`crate::kernel`] contract).
 
-use super::{matmul_rows, matmul_slices, Tensor};
+use super::{size_for_write, Tensor};
+use crate::kernel::{self, PackedW};
 
 /// SAME-padding output size for stride s.
 fn out_dim(i: usize, s: usize) -> usize {
     i.div_ceil(s)
 }
 
-/// Reusable im2col / grouped-conv buffers.  After the first call at a given
-/// geometry every buffer is right-sized and later calls allocate nothing.
+/// A conv weight tensor (HWIO `[k, k, cin/groups, cout]`) panel-packed per
+/// group: group `g` is columns `g*cg_out .. (g+1)*cg_out` of the row-major
+/// `[k*k*cin_g, cout]` matrix, packed into its own [`PackedW`] so the
+/// grouped GEMMs need no dense per-group weight copy at all.  Narrow
+/// groups (depthwise: `cg_out == 1`) still pad their panel to full width
+/// but run the kernel's narrow-lane path, so the padding costs memory, not
+/// multiplies.
+#[derive(Clone, Debug, Default)]
+pub struct PackedConvW {
+    k: usize,
+    cin_g: usize,
+    cout: usize,
+    groups: usize,
+    packs: Vec<PackedW>,
+}
+
+impl PackedConvW {
+    /// Pack an HWIO weight tensor for `groups` groups.
+    pub fn pack(w: &Tensor, groups: usize) -> Self {
+        let mut pw = Self::default();
+        pw.pack_into(w, groups);
+        pw
+    }
+
+    /// (Re)pack, reusing the per-group buffers — the per-call conv paths
+    /// drive one of these through every layer of a forward pass.
+    pub fn pack_into(&mut self, w: &Tensor, groups: usize) {
+        assert_eq!(w.rank(), 4, "HWIO weight must be rank 4");
+        assert!(groups >= 1);
+        let k = w.shape[0];
+        assert_eq!(w.shape[1], k, "square kernels only");
+        let (cin_g, cout) = (w.shape[2], w.shape[3]);
+        assert_eq!(cout % groups, 0);
+        let cg_out = cout / groups;
+        self.k = k;
+        self.cin_g = cin_g;
+        self.cout = cout;
+        self.groups = groups;
+        self.packs.truncate(groups);
+        self.packs.resize_with(groups, PackedW::default);
+        let rows = k * k * cin_g;
+        for (g, p) in self.packs.iter_mut().enumerate() {
+            p.pack_cols(&w.data, rows, cout, g * cg_out, cg_out);
+        }
+    }
+
+    /// Kernel spatial size.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Total output channels.
+    pub fn cout(&self) -> usize {
+        self.cout
+    }
+
+    /// Group count (`groups == cin == cout` is depthwise).
+    pub fn groups(&self) -> usize {
+        self.groups
+    }
+
+    /// In-channels per group.
+    pub fn cin_g(&self) -> usize {
+        self.cin_g
+    }
+
+    /// Group `g`'s packed weight slice.
+    pub fn group(&self, g: usize) -> &PackedW {
+        &self.packs[g]
+    }
+}
+
+/// Reusable im2col / grouped-conv / weight-pack buffers.  After the first
+/// call at a given geometry every buffer is right-sized and later calls
+/// allocate nothing.
 #[derive(Default)]
 pub struct ConvScratch {
     /// im2col patch matrix.
     cols: Vec<f32>,
-    /// per-group weight slice(s): one slice (serial path) or all groups
-    /// packed back-to-back (parallel path, read-only across chunks).
-    wg: Vec<f32>,
     /// per-group output block (grouped convs only).
     gout: Vec<f32>,
+    /// per-call weight packing for the Tensor-weight entry points.
+    wpack: PackedConvW,
     /// per-chunk child scratches for [`conv2d_into_par`].
     par: Vec<ConvScratch>,
 }
@@ -90,35 +176,32 @@ fn im2col_into(x: &Tensor, k: usize, stride: usize, c0: usize, cg: usize, cols: 
     im2col_rows_into(x, k, stride, c0, cg, 0..x.shape[0] * oh * ow, cols);
 }
 
-/// Copy group `g`'s weight slice (columns `g*cg_out..(g+1)*cg_out` of the
-/// row-major `[kk_cg_in, cout]` HWIO matrix) into `dst` as a dense
-/// `[kk_cg_in, cg_out]` block.  The serial and parallel grouped paths both
-/// call this, so the slicing can never diverge between them.
-fn pack_group_weights(
-    w: &Tensor,
-    g: usize,
-    kk_cg_in: usize,
-    cg_out: usize,
-    cout: usize,
-    dst: &mut [f32],
-) {
-    for r in 0..kk_cg_in {
-        let src = r * cout + g * cg_out;
-        dst[r * cg_out..(r + 1) * cg_out].copy_from_slice(&w.data[src..src + cg_out]);
-    }
+thread_local! {
+    /// Per-thread scratch behind the allocating [`conv2d`] wrapper, so the
+    /// one-off path stops reallocating im2col buffers per call (the nn
+    /// heuristic loops hit it once per layer per image batch).
+    static CONV_SCRATCH: std::cell::RefCell<ConvScratch> =
+        std::cell::RefCell::new(ConvScratch::new());
 }
 
 /// NHWC conv, SAME padding.  `w` is HWIO `[k,k,cin/groups,cout]`, `bias` is
-/// `[cout]`.  `groups == cin == cout` gives a depthwise conv.
+/// `[cout]`.  `groups == cin == cout` gives a depthwise conv.  Allocates
+/// only the output tensor; intermediates come from a thread-local
+/// [`ConvScratch`] (re-entrant calls fall back to a fresh scratch).
 pub fn conv2d(x: &Tensor, w: &Tensor, bias: &[f32], stride: usize, groups: usize) -> Tensor {
-    let mut scratch = ConvScratch::new();
-    let mut out = Tensor { shape: vec![0], data: Vec::new() };
-    conv2d_into(x, w, bias, stride, groups, &mut scratch, &mut out);
+    let mut out = Tensor::default();
+    CONV_SCRATCH.with(|cell| match cell.try_borrow_mut() {
+        Ok(mut scratch) => conv2d_into(x, w, bias, stride, groups, &mut scratch, &mut out),
+        Err(_) => conv2d_into(x, w, bias, stride, groups, &mut ConvScratch::new(), &mut out),
+    });
     out
 }
 
 /// [`conv2d`] writing into `out` and borrowing all intermediate buffers from
-/// `scratch` — zero allocation on the hot path once buffers are warm.
+/// `scratch` — zero allocation on the hot path once buffers are warm.  The
+/// weight tensor is packed into the scratch's [`PackedConvW`] each call;
+/// long-lived weights should be packed once and run through
+/// [`conv2d_packed_into`] instead.
 pub fn conv2d_into(
     x: &Tensor,
     w: &Tensor,
@@ -128,38 +211,42 @@ pub fn conv2d_into(
     scratch: &mut ConvScratch,
     out: &mut Tensor,
 ) {
+    let mut wp = std::mem::take(&mut scratch.wpack);
+    wp.pack_into(w, groups);
+    conv2d_packed_into(x, &wp, bias, stride, scratch, out);
+    scratch.wpack = wp;
+}
+
+/// The serial conv core over pre-packed weights: im2col per group, one
+/// write-mode GEMM per group, scatter (grouped) plus bias.
+pub fn conv2d_packed_into(
+    x: &Tensor,
+    pw: &PackedConvW,
+    bias: &[f32],
+    stride: usize,
+    scratch: &mut ConvScratch,
+    out: &mut Tensor,
+) {
     assert_eq!(x.rank(), 4);
-    assert_eq!(w.rank(), 4);
     let (b, cin) = (x.shape[0], x.shape[3]);
-    let k = w.shape[0];
-    let (wcin, cout) = (w.shape[2], w.shape[3]);
-    assert_eq!(wcin, cin / groups, "HWIO in-channels vs groups");
-    assert_eq!(cout % groups, 0);
+    let (k, cout, groups) = (pw.k, pw.cout, pw.groups);
+    assert_eq!(pw.cin_g * groups, cin, "HWIO in-channels vs groups");
     assert_eq!(bias.len(), cout);
-    let cg_in = cin / groups;
+    let cg_in = pw.cin_g;
     let cg_out = cout / groups;
     let (oh, ow) = (out_dim(x.shape[1], stride), out_dim(x.shape[2], stride));
+    let rows = b * oh * ow;
+    size_for_write(&mut out.data, rows * cout);
 
     if groups == 1 {
         im2col_into(x, k, stride, 0, cin, &mut scratch.cols);
         // weight [k,k,cin,cout] is already [k*k*cin, cout] row-major
-        matmul_slices(&scratch.cols, b * oh * ow, k * k * cin, &w.data, cout, &mut out.data);
+        kernel::gemm(&scratch.cols, rows, pw.group(0), &mut out.data);
     } else {
-        out.data.clear();
-        out.data.resize(b * oh * ow * cout, 0.0);
         for g in 0..groups {
             im2col_into(x, k, stride, g * cg_in, cg_in, &mut scratch.cols);
-            scratch.wg.clear();
-            scratch.wg.resize(k * k * cg_in * cg_out, 0.0);
-            pack_group_weights(w, g, k * k * cg_in, cg_out, cout, &mut scratch.wg);
-            matmul_slices(
-                &scratch.cols,
-                b * oh * ow,
-                k * k * cg_in,
-                &scratch.wg,
-                cg_out,
-                &mut scratch.gout,
-            );
+            size_for_write(&mut scratch.gout, rows * cg_out);
+            kernel::gemm(&scratch.cols, rows, pw.group(g), &mut scratch.gout);
             for (row, chunk) in scratch.gout.chunks(cg_out).enumerate() {
                 let dst = row * cout + g * cg_out;
                 out.data[dst..dst + cg_out].copy_from_slice(chunk);
@@ -178,12 +265,8 @@ pub fn conv2d_into(
 const MIN_PAR_CONV_ROWS: usize = 64;
 
 /// [`conv2d_into`] with the `b*oh*ow` output-row dimension split across
-/// `pool`: each chunk runs im2col and the (per-group) GEMMs for its own
-/// disjoint row block into its own child [`ConvScratch`], writing a
-/// disjoint slice of `out`.  Per-element accumulation order is identical to
-/// the serial path, so results are bit-identical at any thread count.
-/// Falls back to [`conv2d_into`] when the pool is serial or the output is
-/// too small to split.
+/// `pool` (weights packed into the scratch first, once, on the submitting
+/// thread).  See [`conv2d_packed_into_par`].
 pub fn conv2d_into_par(
     x: &Tensor,
     w: &Tensor,
@@ -194,63 +277,64 @@ pub fn conv2d_into_par(
     out: &mut Tensor,
     pool: &crate::par::Pool,
 ) {
+    let mut wp = std::mem::take(&mut scratch.wpack);
+    wp.pack_into(w, groups);
+    conv2d_packed_into_par(x, &wp, bias, stride, scratch, out, pool);
+    scratch.wpack = wp;
+}
+
+/// [`conv2d_packed_into`] with the `b*oh*ow` output-row dimension split
+/// into [`crate::kernel::MR`]-aligned chunks across `pool`: each chunk runs
+/// im2col and the (per-group) GEMMs for its own disjoint row block into its
+/// own child [`ConvScratch`], writing a disjoint slice of `out`; all chunks
+/// read the same packed panels.  Per-element accumulation order is
+/// identical to the serial path, so results are bit-identical at any thread
+/// count.  Falls back to the serial core when the pool is serial or the
+/// output is too small to split.
+pub fn conv2d_packed_into_par(
+    x: &Tensor,
+    pw: &PackedConvW,
+    bias: &[f32],
+    stride: usize,
+    scratch: &mut ConvScratch,
+    out: &mut Tensor,
+    pool: &crate::par::Pool,
+) {
     assert_eq!(x.rank(), 4);
-    assert_eq!(w.rank(), 4);
     let (b, cin) = (x.shape[0], x.shape[3]);
-    let k = w.shape[0];
-    let (wcin, cout) = (w.shape[2], w.shape[3]);
-    assert_eq!(wcin, cin / groups, "HWIO in-channels vs groups");
-    assert_eq!(cout % groups, 0);
+    let (k, cout, groups) = (pw.k, pw.cout, pw.groups);
+    assert_eq!(pw.cin_g * groups, cin, "HWIO in-channels vs groups");
     assert_eq!(bias.len(), cout);
-    let cg_in = cin / groups;
+    let cg_in = pw.cin_g;
     let cg_out = cout / groups;
     let (oh, ow) = (out_dim(x.shape[1], stride), out_dim(x.shape[2], stride));
     let rows = b * oh * ow;
-    let ranges = crate::par::chunk_ranges(rows, pool.threads(), MIN_PAR_CONV_ROWS);
+    let ranges =
+        crate::par::chunk_ranges_aligned(rows, pool.threads(), MIN_PAR_CONV_ROWS, kernel::MR);
     if pool.threads() <= 1 || ranges.len() <= 1 {
-        conv2d_into(x, w, bias, stride, groups, scratch, out);
+        conv2d_packed_into(x, pw, bias, stride, scratch, out);
         return;
     }
-    out.data.clear();
-    out.data.resize(rows * cout, 0.0);
+    size_for_write(&mut out.data, rows * cout);
     let nch = ranges.len();
-    let ConvScratch { wg, par, .. } = scratch;
-    if par.len() < nch {
-        par.resize_with(nch, ConvScratch::default);
+    if scratch.par.len() < nch {
+        scratch.par.resize_with(nch, ConvScratch::default);
     }
-    // grouped path: pack every group's weight slice once up front; chunks
-    // only ever read it
-    let wg_len = k * k * cg_in * cg_out;
-    if groups > 1 {
-        wg.clear();
-        wg.resize(groups * wg_len, 0.0);
-        for g in 0..groups {
-            let dst = &mut wg[g * wg_len..(g + 1) * wg_len];
-            pack_group_weights(w, g, k * k * cg_in, cg_out, cout, dst);
-        }
-    }
-    let wg_all: &[f32] = wg;
     let mut tasks: Vec<crate::par::ScopedTask<'_>> = Vec::with_capacity(nch);
     let mut rest: &mut [f32] = &mut out.data;
-    for (child, r) in par.iter_mut().take(nch).zip(ranges) {
+    for (child, r) in scratch.par.iter_mut().take(nch).zip(ranges) {
         let nrows = r.end - r.start;
         let (head, tail) = std::mem::take(&mut rest).split_at_mut(nrows * cout);
         rest = tail;
         tasks.push(Box::new(move || {
             if groups == 1 {
                 im2col_rows_into(x, k, stride, 0, cin, r.clone(), &mut child.cols);
-                matmul_rows(&child.cols, k * k * cin, &w.data, cout, head);
+                kernel::gemm(&child.cols, nrows, pw.group(0), head);
             } else {
                 for g in 0..groups {
                     im2col_rows_into(x, k, stride, g * cg_in, cg_in, r.clone(), &mut child.cols);
-                    matmul_slices(
-                        &child.cols,
-                        nrows,
-                        k * k * cg_in,
-                        &wg_all[g * wg_len..(g + 1) * wg_len],
-                        cg_out,
-                        &mut child.gout,
-                    );
+                    size_for_write(&mut child.gout, nrows * cg_out);
+                    kernel::gemm(&child.cols, nrows, pw.group(g), &mut child.gout);
                     for (row, chunk) in child.gout.chunks(cg_out).enumerate() {
                         let dst = row * cout + g * cg_out;
                         head[dst..dst + cg_out].copy_from_slice(chunk);
@@ -405,6 +489,31 @@ mod tests {
             let want = conv2d(&x, &w, &bias, *stride, *groups);
             assert_eq!(out.shape, want.shape, "case {i}");
             assert_eq!(out.data, want.data, "case {i}");
+        }
+    }
+
+    #[test]
+    fn prepacked_path_matches_per_call_packing() {
+        let mk = |shape: &[usize], seed: u64| {
+            let mut rng = crate::data::Rng::new(seed);
+            let n = shape.iter().product::<usize>();
+            Tensor::new(shape.to_vec(), (0..n).map(|_| rng.normal()).collect())
+        };
+        let cases: &[(&[usize], &[usize], usize, usize)] = &[
+            (&[2, 6, 6, 4], &[3, 3, 4, 8], 1, 1),
+            (&[2, 4, 4, 4], &[3, 3, 1, 4], 1, 4),
+            (&[1, 5, 5, 6], &[3, 3, 3, 8], 2, 2),
+        ];
+        for (i, (xs, ws, stride, groups)) in cases.iter().enumerate() {
+            let x = mk(xs, 30 + i as u64);
+            let w = mk(ws, 40 + i as u64);
+            let bias: Vec<f32> = (0..ws[3]).map(|j| j as f32 * 0.05 - 0.1).collect();
+            let want = conv2d(&x, &w, &bias, *stride, *groups);
+            let pw = PackedConvW::pack(&w, *groups);
+            let mut out = Tensor::default();
+            conv2d_packed_into(&x, &pw, &bias, *stride, &mut ConvScratch::new(), &mut out);
+            assert_eq!(want.shape, out.shape, "case {i}");
+            assert_eq!(want.data, out.data, "case {i}");
         }
     }
 }

@@ -5,6 +5,9 @@
 //! im2col ([`conv`]), matmul, reductions.  Small on purpose — the heavy math
 //! runs in AOT-compiled XLA; this substrate exists for heuristics (PPQ, APQ,
 //! CLE, bias correction), analysis figures, and the integer cross-check.
+//! Every matmul here lowers to the [`crate::kernel`] packed register-blocked
+//! GEMM (bit-identical to its scalar reference — see that module's
+//! contract).
 
 pub mod conv;
 
@@ -182,41 +185,42 @@ impl Tensor {
     }
 }
 
-/// The GEMM row kernel: `x` rows (each of length `k`) against `w[k,n]`,
-/// accumulated into the zeroed `out` (one row of `n` per x row).  This is
-/// THE inner loop — the serial [`matmul_slices`], the parallel
-/// [`matmul_slices_par`] chunks, and the conv paths all run exactly this
-/// function over their (disjoint) row blocks, which is what makes every
-/// variant bit-exactly equal: per output element the accumulation order is
-/// always `kk = 0..k` ascending, regardless of how rows are grouped.
-pub(crate) fn matmul_rows(x: &[f32], k: usize, w: &[f32], n: usize, out: &mut [f32]) {
-    if k == 0 || n == 0 {
-        return;
-    }
-    for (xrow, orow) in x.chunks_exact(k).zip(out.chunks_exact_mut(n)) {
-        for (kk, &xv) in xrow.iter().enumerate() {
-            if xv == 0.0 {
-                continue;
-            }
-            let wrow = &w[kk * n..(kk + 1) * n];
-            for (o, &wv) in orow.iter_mut().zip(wrow) {
-                *o += xv * wv;
-            }
-        }
+/// Resize `buf` to exactly `len` elements without zero-filling a buffer
+/// that is already the right size — the write-mode [`crate::kernel::gemm`]
+/// overwrites every element, so the historical clear-then-zero pass is
+/// needed only when the length actually changes.  Shared by the matmul
+/// entry points here and the conv paths in [`conv`].
+pub(crate) fn size_for_write(buf: &mut Vec<f32>, len: usize) {
+    if buf.len() != len {
+        buf.clear();
+        buf.resize(len, 0.0);
     }
 }
 
-/// x[m,k] @ w[k,n] written into `out` (cleared and resized first, so a
-/// right-sized buffer is reused without reallocation).  [`Tensor::matmul`]
-/// and the scratch-based conv path both call it, which is what makes the
-/// buffer-reusing deployment forward bit-exactly equal to the allocating
-/// one.
+/// x[m,k] @ w[k,n] written into `out` (resized to fit, so a right-sized
+/// buffer is reused without reallocation or zero-fill).  `w` is packed into
+/// this thread's [`crate::kernel::PackedW`] scratch and run through the
+/// register-blocked [`crate::kernel::gemm`]; results are bit-identical to
+/// the scalar [`crate::kernel::gemm_ref`] loop (see the kernel module docs
+/// for the contract).  [`Tensor::matmul`] and the scratch-based conv path
+/// both call it, which is what makes the buffer-reusing deployment forward
+/// bit-exactly equal to the allocating one.
 pub fn matmul_slices(x: &[f32], m: usize, k: usize, w: &[f32], n: usize, out: &mut Vec<f32>) {
     debug_assert_eq!(x.len(), m * k);
     debug_assert_eq!(w.len(), k * n);
-    out.clear();
-    out.resize(m * n, 0.0);
-    matmul_rows(x, k, w, n, out);
+    size_for_write(out, m * n);
+    crate::kernel::with_pack_scratch(|pw| {
+        pw.pack_cols(w, k, n, 0, n);
+        crate::kernel::gemm(x, m, pw, out);
+    });
+}
+
+/// [`matmul_slices`] against weights already packed by the caller (the
+/// deployment path packs once at prepare time and reuses forever).
+pub fn matmul_packed_slices(x: &[f32], m: usize, pw: &crate::kernel::PackedW, out: &mut Vec<f32>) {
+    debug_assert_eq!(x.len(), m * pw.k());
+    size_for_write(out, m * pw.n());
+    crate::kernel::gemm(x, m, pw, out);
 }
 
 /// Minimum output rows per parallel GEMM chunk: below this the scope
@@ -224,9 +228,11 @@ pub fn matmul_slices(x: &[f32], m: usize, k: usize, w: &[f32], n: usize, out: &m
 const MIN_PAR_ROWS: usize = 32;
 
 /// [`matmul_slices`] with the `m` (output-row) dimension split into
-/// contiguous cache-sized blocks across `pool`.  Each chunk owns a disjoint
-/// slice of `out` and runs the identical [`matmul_rows`] inner loop, so the
-/// result is bit-identical to the serial call at any thread count.
+/// contiguous cache-sized blocks across `pool`.  `w` is packed once on the
+/// submitting thread; each chunk owns a disjoint [`crate::kernel::MR`]-
+/// aligned slice of `out` and runs the identical [`crate::kernel::gemm`]
+/// kernel, so the result is bit-identical to the serial call at any thread
+/// count.
 pub fn matmul_slices_par(
     x: &[f32],
     m: usize,
@@ -238,11 +244,30 @@ pub fn matmul_slices_par(
 ) {
     debug_assert_eq!(x.len(), m * k);
     debug_assert_eq!(w.len(), k * n);
-    out.clear();
-    out.resize(m * n, 0.0);
-    let ranges = crate::par::chunk_ranges(m, pool.threads(), MIN_PAR_ROWS);
+    size_for_write(out, m * n);
+    crate::kernel::with_pack_scratch(|pw| {
+        pw.pack_cols(w, k, n, 0, n);
+        matmul_packed_rows_par(x, m, pw, out, pool);
+    });
+}
+
+/// The parallel core shared by [`matmul_slices_par`] and the prepacked
+/// deployment callers: split `m` into MR-aligned chunks, each running the
+/// write-mode kernel over its disjoint output rows.
+pub fn matmul_packed_rows_par(
+    x: &[f32],
+    m: usize,
+    pw: &crate::kernel::PackedW,
+    out: &mut [f32],
+    pool: &crate::par::Pool,
+) {
+    let (k, n) = (pw.k(), pw.n());
+    debug_assert_eq!(x.len(), m * k);
+    debug_assert_eq!(out.len(), m * n);
+    let ranges =
+        crate::par::chunk_ranges_aligned(m, pool.threads(), MIN_PAR_ROWS, crate::kernel::MR);
     if pool.threads() <= 1 || ranges.len() <= 1 {
-        matmul_rows(x, k, w, n, out);
+        crate::kernel::gemm(x, m, pw, out);
         return;
     }
     let mut tasks: Vec<crate::par::ScopedTask<'_>> = Vec::with_capacity(ranges.len());
@@ -252,7 +277,7 @@ pub fn matmul_slices_par(
         let (head, tail) = std::mem::take(&mut rest).split_at_mut(rows * n);
         rest = tail;
         let xr = &x[r.start * k..r.end * k];
-        tasks.push(Box::new(move || matmul_rows(xr, k, w, n, head)));
+        tasks.push(Box::new(move || crate::kernel::gemm(xr, rows, pw, head)));
     }
     pool.scope(tasks);
 }

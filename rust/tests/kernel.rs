@@ -1,0 +1,219 @@
+//! `qft::kernel` parity suite: the packed register-blocked kernel must be
+//! bit-identical to an independent scalar reference on every shape —
+//! ragged lanes (`n % NR != 0`), ragged tiles (`m < MR`), degenerate
+//! `k = 0` / `n = 0`, single rows, NaN/Inf weights masked by zero
+//! activations — and through every consumer: `matmul_slices(_par)`,
+//! `conv2d(_into_par)`, and the deployed forwards, at 1/2/8 threads in
+//! both `lw` and `dch` modes.
+//!
+//! CI runs this file twice: under default codegen and under
+//! `RUSTFLAGS=-Ctarget-cpu=native`, to catch any vectorization- or
+//! FMA-contraction-dependent divergence between the kernels.
+
+use qft::kernel::{gemm, gemm_ref, PackedW, MR, NR};
+use qft::par::{chunk_ranges_aligned, Pool};
+use qft::quant::deploy::{DeployScratch, DeployedModel, Mode};
+use qft::serve::synthetic_trainables;
+use qft::tensor::conv::{conv2d, conv2d_packed_into, conv2d_par, ConvScratch, PackedConvW};
+use qft::tensor::{matmul_slices, matmul_slices_par};
+use qft::Tensor;
+
+fn rand_vec(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = qft::data::Rng::new(seed);
+    (0..n).map(|_| rng.normal()).collect()
+}
+
+fn rand_tensor(shape: &[usize], seed: u64) -> Tensor {
+    Tensor::new(shape.to_vec(), rand_vec(shape.iter().product(), seed))
+}
+
+/// Independent scalar reference (not the crate's): `kk` ascending, one mul
+/// + one add per step, zero activations skipped.
+fn naive(x: &[f32], m: usize, k: usize, w: &[f32], n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        for kk in 0..k {
+            let xv = x[i * k + kk];
+            if xv == 0.0 {
+                continue;
+            }
+            for j in 0..n {
+                out[i * n + j] += xv * w[kk * n + j];
+            }
+        }
+    }
+    out
+}
+
+fn assert_bits_eq(want: &[f32], got: &[f32], ctx: &str) {
+    assert_eq!(want.len(), got.len(), "{ctx}: length");
+    for (i, (a, b)) in want.iter().zip(got).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "{ctx}: element {i}: {a} vs {b}");
+    }
+}
+
+#[test]
+fn packed_kernel_matches_naive_on_edge_shapes() {
+    // every m (ragged tiles), n (ragged lanes), k (incl. empty reduction)
+    for &m in &[0usize, 1, 2, 3, MR, MR + 1, 2 * MR + 3, 17] {
+        for &k in &[0usize, 1, 7, 64] {
+            for &n in &[0usize, 1, 5, NR - 1, NR, NR + 1, 2 * NR + 7] {
+                let seed = (m * 1000 + k * 50 + n) as u64;
+                let mut x = rand_vec(m * k, seed);
+                // sprinkle exact zeros so the skip path is exercised
+                for (i, v) in x.iter_mut().enumerate() {
+                    if i % 5 == 0 {
+                        *v = 0.0;
+                    }
+                }
+                let w = rand_vec(k * n, seed + 1);
+                let pw = PackedW::pack(&w, k, n);
+                assert_eq!((pw.k(), pw.n()), (k, n));
+                let mut got = vec![f32::NAN; m * n];
+                gemm(&x, m, &pw, &mut got);
+                let want = naive(&x, m, k, &w, n);
+                assert_bits_eq(&want, &got, &format!("gemm m={m} k={k} n={n}"));
+
+                // and the crate's own scalar reference agrees too
+                let mut refr = vec![0.0f32; m * n];
+                gemm_ref(&x, k, &w, n, &mut refr);
+                assert_bits_eq(&want, &refr, &format!("gemm_ref m={m} k={k} n={n}"));
+            }
+        }
+    }
+}
+
+#[test]
+fn zero_activations_mask_nan_inf_weights_everywhere() {
+    let (m, k, n) = (2 * MR + 1, 9, NR + 5);
+    let mut x = rand_vec(m * k, 11);
+    let mut w = rand_vec(k * n, 12);
+    // poison two whole weight rows; zero the matching activation columns
+    for i in 0..m {
+        x[i * k + 3] = 0.0;
+        x[i * k + 8] = 0.0;
+    }
+    for j in 0..n {
+        w[3 * n + j] = f32::NAN;
+        w[8 * n + j] = f32::INFINITY;
+    }
+    let pw = PackedW::pack(&w, k, n);
+    let mut got = vec![0.0f32; m * n];
+    gemm(&x, m, &pw, &mut got);
+    assert!(got.iter().all(|v| v.is_finite()), "masked poison must not leak");
+    assert_bits_eq(&naive(&x, m, k, &w, n), &got, "nan/inf masking");
+}
+
+#[test]
+fn matmul_slices_matches_naive_and_scales_across_threads() {
+    // deliberately MR/NR-unaligned so every chunk tail is ragged
+    let (m, k, n) = (107usize, 33, NR + 9);
+    let x = rand_vec(m * k, 21);
+    let w = rand_vec(k * n, 22);
+    let want = naive(&x, m, k, &w, n);
+
+    let mut serial = Vec::new();
+    matmul_slices(&x, m, k, &w, n, &mut serial);
+    assert_bits_eq(&want, &serial, "matmul_slices");
+
+    for threads in [1usize, 2, 8] {
+        let pool = Pool::new(threads);
+        let mut par = Vec::new();
+        matmul_slices_par(&x, m, k, &w, n, &mut par, &pool);
+        assert_bits_eq(&want, &par, &format!("matmul_slices_par {threads} threads"));
+    }
+}
+
+#[test]
+fn warm_buffer_reuse_never_leaks_stale_values() {
+    // drive one output buffer through shrinking/growing shapes; the
+    // write-mode kernel skips zero-fill, so stale-tail bugs would show here
+    let mut out = Vec::new();
+    // consecutive same-size shapes reuse the buffer without any zero-fill;
+    // (8,2,6) -> (8,0,6) checks that an empty reduction still clears a
+    // warm, non-zero buffer of the same length
+    let shapes = [
+        (12usize, 5usize, 9usize),
+        (12, 5, 9),
+        (3, 7, 33),
+        (12, 5, 9),
+        (1, 1, 1),
+        (8, 2, 6),
+        (8, 0, 6),
+    ];
+    for (i, (m, k, n)) in shapes.into_iter().enumerate() {
+        let x = rand_vec(m * k, 31 + i as u64);
+        let w = rand_vec(k * n, 41 + i as u64);
+        matmul_slices(&x, m, k, &w, n, &mut out);
+        assert_bits_eq(&naive(&x, m, k, &w, n), &out, &format!("reuse step {i}"));
+    }
+}
+
+#[test]
+fn conv_paths_agree_serial_packed_and_pooled() {
+    // plain / strided / depthwise / grouped / even-kernel geometries
+    let cases: &[(&[usize], &[usize], usize, usize)] = &[
+        (&[2, 12, 12, 4], &[3, 3, 4, 8], 1, 1),
+        (&[1, 16, 16, 3], &[3, 3, 3, 8], 2, 1),
+        (&[2, 12, 12, 8], &[3, 3, 1, 8], 1, 8),
+        (&[2, 12, 12, 8], &[3, 3, 4, 8], 1, 2),
+        (&[1, 9, 9, 2], &[2, 2, 2, 4], 1, 1),
+    ];
+    for (i, (xs, ws, stride, groups)) in cases.iter().enumerate() {
+        let x = rand_tensor(xs, 50 + i as u64);
+        let w = rand_tensor(ws, 60 + i as u64);
+        let bias: Vec<f32> = (0..ws[3]).map(|j| j as f32 * 0.1 - 0.3).collect();
+        let want = conv2d(&x, &w, &bias, *stride, *groups);
+
+        // prepacked serial
+        let pw = PackedConvW::pack(&w, *groups);
+        let mut out = Tensor::default();
+        conv2d_packed_into(&x, &pw, &bias, *stride, &mut ConvScratch::new(), &mut out);
+        assert_eq!(want.shape, out.shape, "case {i} packed shape");
+        assert_bits_eq(&want.data, &out.data, &format!("case {i} packed"));
+
+        // pooled at 1/2/8 threads
+        for threads in [1usize, 2, 8] {
+            let got = conv2d_par(&x, &w, &bias, *stride, *groups, &Pool::new(threads));
+            assert_eq!(want.shape, got.shape, "case {i}, {threads} threads");
+            assert_bits_eq(&want.data, &got.data, &format!("case {i}, {threads} threads"));
+        }
+    }
+}
+
+#[test]
+fn deployed_forward_is_thread_and_packing_invariant_both_modes() {
+    // the full acceptance matrix: serial vs pooled at 1/2/8 threads, lw +
+    // dch, through the prepacked deployment path
+    for mode in [Mode::Lw, Mode::Dch] {
+        let (arch, tm) = synthetic_trainables(mode, 13);
+        let model = DeployedModel::prepare(&arch, &tm, mode);
+        let ds = qft::data::Dataset::new(2);
+        let (xb, _, _) = ds.batch(qft::data::Split::Val, 0, 5);
+        let want = model.forward_batch(&xb, &mut DeployScratch::new());
+        for threads in [1usize, 2, 8] {
+            let pool = Pool::new(threads);
+            let mut scratch = DeployScratch::new();
+            let got = model.forward_batch_pooled(&xb, &mut scratch, &pool);
+            assert_bits_eq(&want.data, &got.data, &format!("{mode:?} {threads} threads"));
+            let again = model.forward_batch_pooled(&xb, &mut scratch, &pool);
+            assert_bits_eq(&want.data, &again.data, &format!("{mode:?} {threads} warm"));
+        }
+    }
+}
+
+#[test]
+fn mr_aligned_chunks_cover_and_align() {
+    for (rows, width) in [(1usize, 8usize), (MR, 2), (10 * MR + 3, 8), (1000, 3)] {
+        let ranges = chunk_ranges_aligned(rows, width, 1, MR);
+        let mut next = 0;
+        for (i, r) in ranges.iter().enumerate() {
+            assert_eq!(r.start, next);
+            if i + 1 < ranges.len() {
+                assert_eq!(r.end % MR, 0, "interior boundaries sit on MR tiles");
+            }
+            next = r.end;
+        }
+        assert_eq!(next, rows);
+    }
+}

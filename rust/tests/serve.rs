@@ -95,6 +95,7 @@ fn engine_neither_drops_nor_duplicates_under_contention() {
         max_batch: 4,
         max_wait: Duration::from_micros(100),
         queue_cap: 8,
+        ..Default::default()
     };
     let engine = Engine::start(registry, &cfg);
     let clients = 8u64;
@@ -160,6 +161,50 @@ fn serving_replies_match_offline_batched_forward() {
         );
     }
     engine.shutdown();
+}
+
+#[test]
+fn adaptive_batching_does_not_change_replies() {
+    // the pool-aware policy only moves the dispatch moment; per-image
+    // logits must be identical with it on or off.  Concurrent clients make
+    // the batcher actually assemble multi-request batches (a sequential
+    // closed loop would pin every batch at size 1 and test nothing).
+    let registry = Registry::load(
+        Path::new("artifacts_nonexistent_for_test"),
+        &[("synthetic".to_string(), Mode::Lw)],
+    )
+    .unwrap();
+    let clients = 6u64;
+    let per_client = 16u64;
+    let mut want: Vec<(u64, Vec<f32>)> = Vec::new();
+    for adaptive in [true, false] {
+        let cfg = ServeConfig { workers: 3, max_batch: 4, adaptive, ..Default::default() };
+        let engine = Engine::start(registry.clone(), &cfg);
+        let seen: Mutex<Vec<(u64, Vec<f32>)>> = Mutex::new(Vec::new());
+        std::thread::scope(|s| {
+            for c in 0..clients {
+                let client = engine.client();
+                let seen = &seen;
+                s.spawn(move || {
+                    let ds = Dataset::new(7);
+                    for i in 0..per_client {
+                        let key = c * per_client + i;
+                        let (img, _) = ds.sample(Split::Val, key);
+                        let rep = client.infer(0, img).unwrap();
+                        seen.lock().unwrap().push((key, rep.logits));
+                    }
+                });
+            }
+        });
+        engine.shutdown();
+        let mut got = seen.into_inner().unwrap();
+        got.sort_by_key(|(key, _)| *key);
+        if want.is_empty() {
+            want = got;
+        } else {
+            assert_eq!(want, got, "adaptive batching changed reply contents");
+        }
+    }
 }
 
 #[test]
