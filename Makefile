@@ -26,8 +26,8 @@ artifacts:
 # BENCH_par.json and BENCH_serve.json at the repo root.
 bench: bench-gemm par-bench bench-serve
 
-# Serving throughput bench (works with or without artifacts; emits
-# BENCH_serve.json).
+# Serving throughput bench: lw / dch / lw-i8 backend sweep at 1/2/4 workers
+# (works with or without artifacts; emits BENCH_serve.json).
 bench-serve:
 	cargo bench --bench serve_throughput
 
@@ -37,7 +37,8 @@ par-bench:
 	cargo bench --bench par_kernels
 
 # GEMM micro-kernel bench: scalar reference vs panel-packed register-blocked
-# kernel, GFLOP/s over ResNet- and edge-shaped GEMMs (emits BENCH_gemm.json).
+# f32 kernel vs the i8 x i8 -> i32 integer kernel, GFLOP/s over ResNet- and
+# edge-shaped GEMMs (emits BENCH_gemm.json).
 bench-gemm:
 	cargo bench --bench gemm_kernels
 

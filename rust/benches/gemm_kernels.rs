@@ -1,12 +1,16 @@
-//! Bench G — the `qft::kernel` GEMM micro-kernel: scalar reference loop
+//! Bench G — the `qft::kernel` GEMM micro-kernels: scalar reference loop
 //! (`gemm_ref`, the historical `matmul_rows` plus its zero-fill pass) vs
-//! the panel-packed register-blocked write-mode kernel (`gemm`), GFLOP/s
-//! over ResNet-shaped im2col GEMMs and ragged edge shapes.  Emits
-//! `BENCH_gemm.json` at the repo root.
+//! the panel-packed register-blocked write-mode kernel (`gemm`) vs the
+//! i8×i8→i32 integer kernel (`gemm_i8`, the `lw-i8` backend's engine),
+//! GFLOP/s (GOP/s for the integer kernel) over ResNet-shaped im2col GEMMs
+//! and ragged edge shapes.  Emits `BENCH_gemm.json` at the repo root with
+//! per-shape f32-vs-i8 numbers.
 //!
-//! Every shape is parity-checked bit-for-bit before timing, so this bench
-//! doubles as a coarse guard against kernel rot.  `QFT_BENCH_SMOKE=1`
-//! drops to a single iteration (CI harness smoke; numbers meaningless).
+//! Every shape is parity-checked before timing (f32 packed vs scalar
+//! bit-for-bit; i8 vs the f32 kernel on the same integer codes, where f32
+//! accumulation is exact), so this bench doubles as a coarse guard against
+//! kernel rot.  `QFT_BENCH_SMOKE=1` drops to a single iteration (CI
+//! harness smoke; numbers meaningless).
 
 #[path = "util/mod.rs"]
 mod util;
@@ -14,7 +18,7 @@ mod util;
 use std::collections::HashMap;
 use std::time::Instant;
 
-use qft::kernel::{gemm, gemm_ref, PackedW};
+use qft::kernel::{gemm, gemm_i8, gemm_ref, PackedW, PackedWi8};
 use qft::util::json::Value;
 
 struct Shape {
@@ -46,6 +50,12 @@ fn rand_vec(n: usize, seed: u64) -> Vec<f32> {
     (0..n).map(|_| rng.normal()).collect()
 }
 
+/// Random integer codes on the lw weight grid (`[-7, 7]`).
+fn rand_codes(n: usize, seed: u64) -> Vec<i8> {
+    let mut rng = qft::data::Rng::new(seed);
+    (0..n).map(|_| (rng.normal() * 4.0).round().clamp(-7.0, 7.0) as i8).collect()
+}
+
 /// Wall time per op over `iters` timed iterations (after 2 warm-up passes).
 fn time_per_op(iters: usize, mut f: impl FnMut()) -> f64 {
     for _ in 0..2 {
@@ -59,10 +69,11 @@ fn time_per_op(iters: usize, mut f: impl FnMut()) -> f64 {
 }
 
 fn main() {
-    util::section("qft::kernel GEMM micro-kernel (scalar vs panel-packed)");
+    util::section("qft::kernel GEMM micro-kernels (scalar vs panel-packed f32 vs i8)");
     let smoke = util::smoke();
     let mut rows = Vec::new();
     let mut rn_speedups: Vec<f64> = Vec::new();
+    let mut rn_i8_speedups: Vec<f64> = Vec::new();
 
     for (si, s) in SHAPES.iter().enumerate() {
         let flops = 2.0 * (s.m * s.k * s.n) as f64;
@@ -105,13 +116,41 @@ fn main() {
             gemm(&x, s.m, &pw_cold, &mut out);
         });
 
+        // the i8 twin on the same shape: lw weight codes as i8 panels,
+        // activations as offset i8 codes, i32 accumulation.  Parity first
+        // against the f32 kernel over the same integer values (both exact
+        // at these magnitudes).
+        let xi = rand_codes(s.m * s.k, 300 + si as u64);
+        let wi = rand_codes(s.k * s.n, 400 + si as u64);
+        let pwi = PackedWi8::pack(&wi, s.k, s.n);
+        let mut got_i = vec![0i32; s.m * s.n];
+        gemm_i8(&xi, s.m, &pwi, &mut got_i);
+        {
+            let xf: Vec<f32> = xi.iter().map(|&v| v as f32).collect();
+            let wf: Vec<f32> = wi.iter().map(|&v| v as f32).collect();
+            let pwf = PackedW::pack(&wf, s.k, s.n);
+            let mut want_f = vec![0.0f32; s.m * s.n];
+            gemm(&xf, s.m, &pwf, &mut want_f);
+            assert!(
+                got_i.iter().zip(&want_f).all(|(&a, &b)| a as f32 == b),
+                "{}: i8 kernel diverged from f32 kernel on integer codes",
+                s.name
+            );
+        }
+        let i8_time = time_per_op(iters, || {
+            gemm_i8(&xi, s.m, &pwi, &mut got_i);
+        });
+
         let speedup = if packed > 0.0 { scalar / packed } else { 0.0 };
+        let i8_speedup = if i8_time > 0.0 { packed / i8_time } else { 0.0 };
         if s.set == "resnet" {
             rn_speedups.push(speedup.max(1e-12));
+            rn_i8_speedups.push(i8_speedup.max(1e-12));
         }
         println!(
             "[{:<16}] {:>5}x{:<5}x{:<5} scalar {:>8.3} ms ({:>6.2} GF/s) | packed {:>8.3} ms \
-             ({:>6.2} GF/s) | +pack {:>8.3} ms | speedup {:.2}x",
+             ({:>6.2} GF/s) | +pack {:>8.3} ms | i8 {:>8.3} ms ({:>6.2} GOP/s) | speedup \
+             {:.2}x | i8-vs-f32 {:.2}x",
             s.name,
             s.m,
             s.k,
@@ -121,7 +160,10 @@ fn main() {
             packed * 1e3,
             flops / packed / 1e9,
             packed_cold * 1e3,
-            speedup
+            i8_time * 1e3,
+            flops / i8_time / 1e9,
+            speedup,
+            i8_speedup
         );
 
         let mut row = HashMap::new();
@@ -133,19 +175,27 @@ fn main() {
         row.insert("scalar_ms".to_string(), Value::Num(scalar * 1e3));
         row.insert("packed_ms".to_string(), Value::Num(packed * 1e3));
         row.insert("packed_cold_ms".to_string(), Value::Num(packed_cold * 1e3));
+        row.insert("i8_ms".to_string(), Value::Num(i8_time * 1e3));
         row.insert("gflops_scalar".to_string(), Value::Num(flops / scalar / 1e9));
         row.insert("gflops_packed".to_string(), Value::Num(flops / packed / 1e9));
+        row.insert("gops_i8".to_string(), Value::Num(flops / i8_time / 1e9));
         row.insert("speedup_vs_scalar".to_string(), Value::Num(speedup));
+        row.insert("i8_speedup_vs_f32".to_string(), Value::Num(i8_speedup));
         rows.push(Value::Obj(row));
     }
 
     let geomean = (rn_speedups.iter().map(|v| v.ln()).sum::<f64>()
         / rn_speedups.len().max(1) as f64)
         .exp();
+    let i8_geomean = (rn_i8_speedups.iter().map(|v| v.ln()).sum::<f64>()
+        / rn_i8_speedups.len().max(1) as f64)
+        .exp();
     println!("resnet-set geomean speedup: {geomean:.2}x (target >= 3x single-thread)");
+    println!("resnet-set geomean i8-vs-f32: {i8_geomean:.2}x");
     let mut summary = HashMap::new();
     summary.insert("set".to_string(), Value::Str("summary".to_string()));
     summary.insert("resnet_geomean_speedup".to_string(), Value::Num(geomean));
+    summary.insert("resnet_geomean_i8_vs_f32".to_string(), Value::Num(i8_geomean));
     summary.insert("smoke".to_string(), Value::Num(if smoke { 1.0 } else { 0.0 }));
     rows.push(Value::Obj(summary));
 

@@ -1,6 +1,7 @@
-//! Bench S — serving throughput over the integer deployment path:
-//! images/sec and p99 latency at 1/2/4 workers, closed-loop load.
-//! Emits `BENCH_serve.json` for trend tracking.
+//! Bench S — serving throughput across execution backends: images/sec and
+//! p99 latency at 1/2/4 workers for each of the `lw`, `dch` and `lw-i8`
+//! grids, closed-loop load.  Emits one `BENCH_serve.json` so the perf
+//! trajectory carries cross-backend numbers.
 
 #[path = "util/mod.rs"]
 mod util;
@@ -9,12 +10,16 @@ use std::collections::HashMap;
 use std::path::Path;
 use std::time::Duration;
 
+use qft::backend::BackendKind;
 use qft::quant::deploy::Mode;
 use qft::serve::{run_closed_loop, Registry, ServeConfig};
 use qft::util::json::Value;
 
+const BACKENDS: &[BackendKind] =
+    &[BackendKind::Int(Mode::Lw), BackendKind::Int(Mode::Dch), BackendKind::Int8];
+
 fn main() {
-    util::section("qft::serve throughput (integer deployment path)");
+    util::section("qft::serve throughput (execution-backend sweep)");
     // prefer a manifest arch when artifacts exist; otherwise the built-in
     // synthetic arch keeps the bench runnable in any checkout
     let arch = if Path::new("artifacts/manifest.json").is_file() {
@@ -22,59 +27,60 @@ fn main() {
     } else {
         "synthetic"
     };
-    let registry = Registry::load(Path::new("artifacts"), &[(arch.to_string(), Mode::Lw)])
-        .expect("load registry");
 
     let smoke = util::smoke();
     let clients = if smoke { 4 } else { 16 };
     let per_client = if smoke { 4 } else { 128 };
     let mut rows = Vec::new();
-    for &workers in &[1usize, 2, 4] {
-        let cfg = ServeConfig {
-            workers,
-            max_batch: 8,
-            max_wait: Duration::from_micros(200),
-            queue_cap: 512,
-            ..Default::default()
-        };
-        // warm-up so buffer growth / first-touch doesn't skew the timing
-        let _ = run_closed_loop(&registry, &cfg, clients, if smoke { 1 } else { 8 }, 0);
-        let report = util::timed(&format!("{arch}/lw workers={workers}"), || {
-            run_closed_loop(&registry, &cfg, clients, per_client, 0)
-        });
-        println!("  workers={workers}: {report}");
-        rows.push((workers, report));
+    for &kind in BACKENDS {
+        let registry = Registry::load(Path::new("artifacts"), &[(arch.to_string(), kind)])
+            .expect("load registry");
+        let mut sweep = Vec::new();
+        for &workers in &[1usize, 2, 4] {
+            let cfg = ServeConfig {
+                workers,
+                max_batch: 8,
+                max_wait: Duration::from_micros(200),
+                queue_cap: 512,
+                ..Default::default()
+            };
+            // warm-up so buffer growth / first-touch doesn't skew the timing
+            let _ = run_closed_loop(&registry, &cfg, clients, if smoke { 1 } else { 8 }, 0);
+            let report = util::timed(&format!("{arch}/{} workers={workers}", kind.key()), || {
+                run_closed_loop(&registry, &cfg, clients, per_client, 0)
+            });
+            println!("  {}/workers={workers}: {report}", kind.key());
+            sweep.push((workers, report));
+        }
+        if sweep.len() >= 2 {
+            let first = sweep.first().unwrap().1.throughput_ips;
+            let last = sweep.last().unwrap().1.throughput_ips;
+            println!(
+                "{}: scaling {}x from {} -> {} workers",
+                kind.key(),
+                if first > 0.0 { last / first } else { 0.0 },
+                sweep.first().unwrap().0,
+                sweep.last().unwrap().0
+            );
+        }
+        for (workers, r) in sweep {
+            let mut m = HashMap::new();
+            m.insert("arch".to_string(), Value::Str(format!("{arch}/{}", kind.key())));
+            m.insert("backend".to_string(), Value::Str(kind.key().to_string()));
+            m.insert("workers".to_string(), Value::Num(workers as f64));
+            m.insert("clients".to_string(), Value::Num(clients as f64));
+            m.insert("requests".to_string(), Value::Num(r.requests as f64));
+            m.insert("images_per_sec".to_string(), Value::Num(r.throughput_ips));
+            m.insert("p50_us".to_string(), Value::Num(r.p50_us as f64));
+            m.insert("p95_us".to_string(), Value::Num(r.p95_us as f64));
+            m.insert("p99_us".to_string(), Value::Num(r.p99_us as f64));
+            m.insert("mean_batch".to_string(), Value::Num(r.mean_batch));
+            rows.push(Value::Obj(m));
+        }
     }
 
-    if rows.len() >= 2 {
-        let first = rows.first().unwrap().1.throughput_ips;
-        let last = rows.last().unwrap().1.throughput_ips;
-        println!(
-            "scaling {}x from {} -> {} workers",
-            if first > 0.0 { last / first } else { 0.0 },
-            rows.first().unwrap().0,
-            rows.last().unwrap().0
-        );
-    }
-
-    let json = Value::Arr(
-        rows.iter()
-            .map(|(workers, r)| {
-                let mut m = HashMap::new();
-                m.insert("arch".to_string(), Value::Str(format!("{arch}/lw")));
-                m.insert("workers".to_string(), Value::Num(*workers as f64));
-                m.insert("clients".to_string(), Value::Num(clients as f64));
-                m.insert("requests".to_string(), Value::Num(r.requests as f64));
-                m.insert("images_per_sec".to_string(), Value::Num(r.throughput_ips));
-                m.insert("p50_us".to_string(), Value::Num(r.p50_us as f64));
-                m.insert("p95_us".to_string(), Value::Num(r.p95_us as f64));
-                m.insert("p99_us".to_string(), Value::Num(r.p99_us as f64));
-                m.insert("mean_batch".to_string(), Value::Num(r.mean_batch));
-                Value::Obj(m)
-            })
-            .collect(),
-    );
     let out_path = util::repo_root_path("BENCH_serve.json");
-    std::fs::write(&out_path, json.to_string_compact()).expect("write BENCH_serve.json");
+    std::fs::write(&out_path, Value::Arr(rows).to_string_compact())
+        .expect("write BENCH_serve.json");
     println!("wrote {}", out_path.display());
 }

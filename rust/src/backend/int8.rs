@@ -1,0 +1,522 @@
+//! `lw-i8` — the true-integer lw deployment backend.
+//!
+//! The historical `lw` path ([`crate::quant::deploy::DeployedModel`]) is
+//! *semantically* integer — every activation and weight is a code — but the
+//! codes are held in f32 and multiplied by the f32 GEMM.  This backend
+//! closes the gap the ROADMAP left open ("i8×i8→i32 integer panels for the
+//! `lw` deployment path"): weight codes are packed into i8 K-major panels
+//! ([`crate::kernel::PackedWi8`], same panel geometry as the f32
+//! [`crate::kernel::PackedW`], 4× denser), activations travel as i8, and
+//! every conv runs the [`crate::kernel::gemm_i8`] i8×i8→i32 accumulate
+//! micro-kernel.
+//!
+//! ## Zero-point folding
+//!
+//! lw activation codes are unsigned (`[0, 255]`) on most values, which does
+//! not fit i8.  Stored activations are therefore offset by a per-value
+//! zero-point `zp` (128 for unsigned grids, 0 for signed):
+//! `stored = q - zp ∈ [-128, 127]`.  Since
+//! `Σ q·w = Σ (q - zp)·w + zp·Σ w`, the correction `zp · col_sum(w)` is a
+//! per-output-channel i32 constant, computed once at prepare time from
+//! [`crate::kernel::PackedWi8::col_sums`] and folded into the integer bias.
+//! SAME-padding patch positions must contribute `q = 0`, so the i8 im2col
+//! fills padding with `-zp` (not 0) — the fold then cancels it exactly.
+//!
+//! ## Relation to `lw`
+//!
+//! Per conv the i32 accumulator holds the *exact* integer sum; the f32 path
+//! computes the same sum in f32, which is exact while the accumulator stays
+//! under 2^24 (lw shapes are far inside that).  Bias, integer relu6
+//! thresholds, and the multiplicative F̂ recode reuse the identical scalar
+//! arithmetic, so `lw-i8` tracks `lw` to near-bit agreement on real
+//! networks — the backend parity suite asserts tight logits agreement and
+//! argmax equality rather than bit equality, since the guarantee decays for
+//! pathological accumulator magnitudes.
+
+use std::collections::HashMap;
+
+use crate::kernel::{gemm_i8, PackedW, PackedWi8};
+use crate::nn::{ArchSpec, OpKind, ParamMap};
+use crate::par::Pool;
+use crate::quant::deploy::{self, Mode};
+use crate::tensor::conv::{im2col_rows_generic, out_dim};
+use crate::tensor::{size_for_write, Tensor};
+
+use super::{Backend, BackendKind, PreparedNet, Scratch};
+
+/// i8 activation-code tensor (shape + offset codes).
+#[derive(Default)]
+struct QTensor {
+    shape: Vec<usize>,
+    data: Vec<i8>,
+}
+
+/// Per-value zero point: unsigned grids store `q - 128`, signed store `q`.
+fn zp_of(arch: &ArchSpec, v: usize) -> i32 {
+    if arch.signed_of(v) {
+        0
+    } else {
+        128
+    }
+}
+
+/// i8 im2col over one group's channel slice, padding filled with `fill`
+/// (`-zp`, so padded positions decode to code 0).  Delegates to the SAME
+/// element-generic geometry core the f32 conv paths run
+/// ([`im2col_rows_generic`]) — one source of truth for the padding math.
+#[allow(clippy::too_many_arguments)]
+fn im2col_i8(
+    x: &QTensor,
+    k: usize,
+    stride: usize,
+    c0: usize,
+    cg: usize,
+    rows: std::ops::Range<usize>,
+    fill: i8,
+    cols: &mut Vec<i8>,
+) {
+    im2col_rows_generic(
+        &x.data, x.shape[1], x.shape[2], x.shape[3], k, stride, c0, cg, rows, fill, cols,
+    );
+}
+
+/// One conv frozen onto the i8 grid.
+struct I8Conv {
+    inp: usize,
+    out: usize,
+    stride: usize,
+    k: usize,
+    cin_g: usize,
+    cout: usize,
+    groups: usize,
+    act: String,
+    /// one i8 panel pack per group (group `g` = columns `g*cg_out ..`).
+    packs: Vec<PackedWi8>,
+    /// integer bias at accumulator scale with the input zero-point
+    /// correction (`zp_in · col_sum`) folded in.
+    bias: Vec<i32>,
+    /// per-channel integer clip(6/S_acc) thresholds for relu6.
+    relu6_thr: Option<Vec<i32>>,
+    /// multiplicative recode factor F̂ (Eq. 11).
+    f: f32,
+    qmin: f32,
+    qmax: f32,
+    zp_out: i32,
+    /// `-zp_in` — the i8 im2col padding fill.
+    fill: i8,
+}
+
+enum I8Op {
+    Conv(I8Conv),
+    Add {
+        a: usize,
+        b: usize,
+        out: usize,
+        act: String,
+        sa: Vec<f32>,
+        sb: Vec<f32>,
+        sout: Vec<f32>,
+        qmin: f32,
+        qmax: f32,
+        zp_a: i32,
+        zp_b: i32,
+        zp_out: i32,
+    },
+    Gap {
+        inp: usize,
+        sv: Vec<f32>,
+        zp: i32,
+    },
+    Fc {
+        w: PackedW,
+        bias: Vec<f32>,
+    },
+}
+
+/// Reusable buffers for the i8 forward (the [`Scratch`] slice this backend
+/// owns): i8 activation tensors per graph value, the i8 im2col matrix, i32
+/// conv accumulators, and the FP decode/pool staging for the head.
+#[derive(Default)]
+pub(crate) struct Int8Scratch {
+    vals: HashMap<usize, QTensor>,
+    cols: Vec<i8>,
+    /// full conv i32 accumulator (`rows * cout`).
+    acc: Vec<i32>,
+    /// per-group i32 accumulator (grouped convs only).
+    gacc: Vec<i32>,
+    /// FP decode buffer (gap / feature map).
+    dec: Tensor,
+    /// pooled FP features feeding the fc head.
+    pooled: Tensor,
+    /// sub-batch input staging for the batch-parallel path.
+    input: Tensor,
+    /// per-chunk child scratches for the batch-parallel path.
+    par: Vec<Int8Scratch>,
+}
+
+fn take_qval(vals: &mut HashMap<usize, QTensor>, id: usize) -> QTensor {
+    vals.remove(&id).unwrap_or_default()
+}
+
+/// The `lw-i8` execution engine.  `prepare` consumes the *same* lw
+/// trainable set as [`super::IntBackend`]`(Mode::Lw)` — same DoF, different
+/// engine — so any exported `{arch}.lw.qftw` serves under either backend.
+pub struct Int8Backend;
+
+impl Backend for Int8Backend {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Int8
+    }
+
+    fn prepare(&self, arch: &ArchSpec, tm: &ParamMap) -> Box<dyn PreparedNet> {
+        Box::new(Int8Prepared::prepare(arch, tm))
+    }
+}
+
+/// A network lowered onto the i8 grid: i8 weight panels, i32 biases with
+/// zero-point folds, recode constants — all frozen offline.
+pub(crate) struct Int8Prepared {
+    input_hw: usize,
+    input_ch: usize,
+    num_classes: usize,
+    /// input encode: per-channel scales + activation grid + zero point.
+    enc0: (Vec<f32>, f32, f32, i32),
+    ops: Vec<I8Op>,
+}
+
+impl Int8Prepared {
+    fn prepare(arch: &ArchSpec, tm: &ParamMap) -> Self {
+        let mode = Mode::Lw;
+        let (qmin0, qmax0) = deploy::act_range(arch, 0);
+        let enc0 = (deploy::sv_of(tm, 0), qmin0, qmax0, zp_of(arch, 0));
+        let mut gap_out = None;
+        let mut ops = Vec::with_capacity(arch.ops.len());
+        for op in &arch.ops {
+            match op.kind() {
+                OpKind::Conv => {
+                    let w = tm.get(&format!("w:{}", op.name));
+                    let b = tm.get(&format!("b:{}", op.name));
+                    let (s_l, s_r) = deploy::kernel_covectors(arch, tm, mode, op);
+                    // f32 codes in [-7, 7] cast to i8.  Non-finite weights
+                    // land exactly where the f32 path puts them: ±inf were
+                    // already clamped to the saturated codes ±7 by
+                    // `kernel_codes`, and NaN (which `clamp` passes through
+                    // and the f32 kernel must mask via its zero-activation
+                    // skip) casts to the zero code — so a NaN tap
+                    // contributes nothing here, matching the f32 kernel's
+                    // masking wherever that masking applies (zero codes)
+                    let codes_f = deploy::kernel_codes(w, &s_l, &s_r);
+                    let codes: Vec<i8> = codes_f.data.iter().map(|&c| c as i8).collect();
+                    let (k, cin_g, cout) = (w.shape[0], w.shape[2], w.shape[3]);
+                    let groups = op.groups;
+                    let cg_out = cout / groups;
+                    let rows = k * k * cin_g;
+                    let mut packs = Vec::with_capacity(groups);
+                    let mut csum = vec![0i32; cout];
+                    for g in 0..groups {
+                        let mut p = PackedWi8::default();
+                        p.pack_cols(&codes, rows, cout, g * cg_out, cg_out);
+                        csum[g * cg_out..(g + 1) * cg_out].copy_from_slice(&p.col_sums());
+                        packs.push(p);
+                    }
+                    let f = deploy::pos(tm.get(&format!("f:{}", op.name)).data[0]);
+                    let sv = deploy::sv_of(tm, op.out);
+                    // accumulator scale per n: S_acc = S_v * F (Eq. 11)
+                    let s_acc: Vec<f32> = sv.iter().map(|&s| s * f).collect();
+                    let zp_in = zp_of(arch, op.inp);
+                    // integer bias (Eq. 7) + the zero-point fold
+                    let bias: Vec<i32> = b
+                        .data
+                        .iter()
+                        .zip(&s_acc)
+                        .zip(&csum)
+                        .map(|((&bv, &s), &cs)| (bv / s).round() as i32 + zp_in * cs)
+                        .collect();
+                    let relu6_thr = (op.act == "relu6")
+                        .then(|| s_acc.iter().map(|&s| (6.0 / s).round() as i32).collect());
+                    let (qmin, qmax) = deploy::act_range(arch, op.out);
+                    ops.push(I8Op::Conv(I8Conv {
+                        inp: op.inp,
+                        out: op.out,
+                        stride: op.stride,
+                        k,
+                        cin_g,
+                        cout,
+                        groups,
+                        act: op.act.clone(),
+                        packs,
+                        bias,
+                        relu6_thr,
+                        f,
+                        qmin,
+                        qmax,
+                        zp_out: zp_of(arch, op.out),
+                        fill: (-zp_in) as i8,
+                    }));
+                }
+                OpKind::Add => {
+                    let (qmin, qmax) = deploy::act_range(arch, op.out);
+                    ops.push(I8Op::Add {
+                        a: op.a,
+                        b: op.b,
+                        out: op.out,
+                        act: op.act.clone(),
+                        sa: deploy::sv_of(tm, op.a),
+                        sb: deploy::sv_of(tm, op.b),
+                        sout: deploy::sv_of(tm, op.out),
+                        qmin,
+                        qmax,
+                        zp_a: zp_of(arch, op.a),
+                        zp_b: zp_of(arch, op.b),
+                        zp_out: zp_of(arch, op.out),
+                    });
+                }
+                OpKind::Gap => {
+                    gap_out = Some(op.out);
+                    ops.push(I8Op::Gap {
+                        inp: op.inp,
+                        sv: deploy::sv_of(tm, op.inp),
+                        zp: zp_of(arch, op.inp),
+                    });
+                }
+                OpKind::Fc => {
+                    assert_eq!(
+                        Some(op.inp),
+                        gap_out,
+                        "lw-i8 expects the fc head to read the gap output"
+                    );
+                    let w = tm.get(&format!("w:{}", op.name));
+                    assert_eq!(w.rank(), 2, "fc weight must be [k, classes]");
+                    ops.push(I8Op::Fc {
+                        w: PackedW::pack(&w.data, w.shape[0], w.shape[1]),
+                        bias: tm.get(&format!("b:{}", op.name)).data.clone(),
+                    });
+                }
+            }
+        }
+        Int8Prepared {
+            input_hw: arch.input_hw,
+            input_ch: arch.input_ch,
+            num_classes: arch.num_classes,
+            enc0,
+            ops,
+        }
+    }
+
+    fn exec(&self, x: &Tensor, s: &mut Int8Scratch, want_feat: bool) -> (Tensor, Option<Tensor>) {
+        assert_eq!(x.rank(), 4, "input must be [b,h,w,c]");
+        // encode the input to offset i8 codes
+        {
+            let mut v0 = take_qval(&mut s.vals, 0);
+            let (sv, qmin, qmax, zp) = &self.enc0;
+            let c = *x.shape.last().unwrap();
+            v0.data.clear();
+            v0.data.extend(x.data.iter().enumerate().map(|(i, &val)| {
+                let q = (val / sv[i % c]).round().clamp(*qmin, *qmax);
+                (q as i32 - zp) as i8
+            }));
+            v0.shape = x.shape.clone();
+            s.vals.insert(0, v0);
+        }
+
+        let mut logits = None;
+        let mut feat = None;
+        for iop in &self.ops {
+            match iop {
+                I8Op::Conv(pc) => {
+                    // phase 1: i8×i8→i32 GEMM into the accumulator
+                    let (b, oh, ow) = {
+                        let xin = &s.vals[&pc.inp];
+                        let b = xin.shape[0];
+                        let (oh, ow) =
+                            (out_dim(xin.shape[1], pc.stride), out_dim(xin.shape[2], pc.stride));
+                        let rows = b * oh * ow;
+                        size_for_write(&mut s.acc, rows * pc.cout);
+                        if pc.groups == 1 {
+                            im2col_i8(
+                                xin, pc.k, pc.stride, 0, pc.cin_g, 0..rows, pc.fill,
+                                &mut s.cols,
+                            );
+                            gemm_i8(&s.cols, rows, &pc.packs[0], &mut s.acc);
+                        } else {
+                            let cg_out = pc.cout / pc.groups;
+                            for g in 0..pc.groups {
+                                im2col_i8(
+                                    xin,
+                                    pc.k,
+                                    pc.stride,
+                                    g * pc.cin_g,
+                                    pc.cin_g,
+                                    0..rows,
+                                    pc.fill,
+                                    &mut s.cols,
+                                );
+                                size_for_write(&mut s.gacc, rows * cg_out);
+                                gemm_i8(&s.cols, rows, &pc.packs[g], &mut s.gacc);
+                                for (row, chunk) in s.gacc.chunks(cg_out).enumerate() {
+                                    let dst = row * pc.cout + g * cg_out;
+                                    s.acc[dst..dst + cg_out].copy_from_slice(chunk);
+                                }
+                            }
+                        }
+                        (b, oh, ow)
+                    };
+                    // phase 2: bias + integer activation + F̂ recode → i8,
+                    // each as its own pass so the activation branch is
+                    // resolved once per conv, not once per element (the
+                    // same structure the f32 lw path uses)
+                    let cout = pc.cout;
+                    for (i, v) in s.acc.iter_mut().enumerate() {
+                        *v += pc.bias[i % cout];
+                    }
+                    match pc.act.as_str() {
+                        "relu" => {
+                            for v in s.acc.iter_mut() {
+                                *v = (*v).max(0);
+                            }
+                        }
+                        "relu6" => {
+                            let thr = pc.relu6_thr.as_ref().unwrap();
+                            for (i, v) in s.acc.iter_mut().enumerate() {
+                                *v = (*v).clamp(0, thr[i % cout]);
+                            }
+                        }
+                        _ => {}
+                    }
+                    // recode: out_code = clip(round(acc * F̂)) — the
+                    // accumulator is exact in i32 and (for lw shapes)
+                    // exactly representable in f32, so this is the same
+                    // scalar arithmetic the f32 lw path runs
+                    let mut o = take_qval(&mut s.vals, pc.out);
+                    o.data.clear();
+                    o.data.extend(s.acc.iter().map(|&v| {
+                        let q = (v as f32 * pc.f).round().clamp(pc.qmin, pc.qmax);
+                        (q as i32 - pc.zp_out) as i8
+                    }));
+                    o.shape = vec![b, oh, ow, cout];
+                    s.vals.insert(pc.out, o);
+                }
+                I8Op::Add { a, b, out, act, sa, sb, sout, qmin, qmax, zp_a, zp_b, zp_out } => {
+                    // decode → FP add (App. D item 1) → re-encode, exactly
+                    // the lw scalar pipeline over decoded codes
+                    let mut o = take_qval(&mut s.vals, *out);
+                    {
+                        let ta = &s.vals[a];
+                        let tb = &s.vals[b];
+                        assert_eq!(ta.shape, tb.shape);
+                        let c = *ta.shape.last().unwrap();
+                        o.data.clear();
+                        o.data.extend(ta.data.iter().zip(&tb.data).enumerate().map(
+                            |(i, (&qa, &qb))| {
+                                let v = (qa as i32 + zp_a) as f32 * sa[i % c]
+                                    + (qb as i32 + zp_b) as f32 * sb[i % c];
+                                let q = (deploy::act_scalar(act, v) / sout[i % c])
+                                    .round()
+                                    .clamp(*qmin, *qmax);
+                                (q as i32 - zp_out) as i8
+                            },
+                        ));
+                        o.shape = ta.shape.clone();
+                    }
+                    s.vals.insert(*out, o);
+                }
+                I8Op::Gap { inp, sv, zp } => {
+                    // decode the backbone to FP for the head
+                    let src = &s.vals[inp];
+                    let fp = &mut s.dec;
+                    let c = *src.shape.last().unwrap();
+                    fp.data.clear();
+                    fp.data.extend(
+                        src.data
+                            .iter()
+                            .enumerate()
+                            .map(|(i, &q)| (q as i32 + zp) as f32 * sv[i % c]),
+                    );
+                    fp.shape = src.shape.clone();
+                    if want_feat {
+                        feat = Some(fp.clone());
+                    }
+                    s.pooled = fp.global_avg_pool();
+                }
+                I8Op::Fc { w, bias } => {
+                    let src = &s.pooled;
+                    assert_eq!(src.rank(), 2);
+                    assert_eq!(src.shape[1], w.k());
+                    let m = src.shape[0];
+                    let mut ydata = Vec::new();
+                    crate::tensor::matmul_packed_slices(&src.data, m, w, &mut ydata);
+                    let mut y = Tensor::new(vec![m, w.n()], ydata);
+                    for row in y.data.chunks_mut(bias.len()) {
+                        for (v, &bv) in row.iter_mut().zip(bias) {
+                            *v += bv;
+                        }
+                    }
+                    logits = Some(y);
+                }
+            }
+        }
+        (logits.expect("arch has fc"), feat)
+    }
+
+    fn exec_pooled(
+        &self,
+        x: &Tensor,
+        s: &mut Int8Scratch,
+        want_feat: bool,
+        pool: &Pool,
+    ) -> (Tensor, Option<Tensor>) {
+        assert_eq!(x.rank(), 4, "input must be [b,h,w,c]");
+        if pool.threads() <= 1 || x.shape[0] <= 1 {
+            return self.exec(x, s, want_feat);
+        }
+        // batch-level parallelism via the SAME chunking/staging/concat
+        // driver the f32 deployment path runs — per-image execution is
+        // independent, so the concatenation is bit-identical to serial
+        deploy::exec_batch_par_generic(
+            x,
+            self.num_classes,
+            want_feat,
+            pool,
+            &mut s.par,
+            |xin, child, wf| self.exec(xin, child, wf),
+        )
+    }
+}
+
+impl deploy::ChunkScratch for Int8Scratch {
+    fn input_buf(&mut self) -> &mut Tensor {
+        &mut self.input
+    }
+}
+
+impl PreparedNet for Int8Prepared {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Int8
+    }
+
+    fn input_hw(&self) -> usize {
+        self.input_hw
+    }
+
+    fn input_ch(&self) -> usize {
+        self.input_ch
+    }
+
+    fn num_classes(&self) -> usize {
+        self.num_classes
+    }
+
+    fn forward_batch(&self, x: &Tensor, scratch: &mut Scratch, pool: &Pool) -> Tensor {
+        self.exec_pooled(x, &mut scratch.int8, false, pool).0
+    }
+
+    fn forward_batch_feat(
+        &self,
+        x: &Tensor,
+        scratch: &mut Scratch,
+        pool: &Pool,
+    ) -> (Tensor, Tensor) {
+        let (logits, feat) = self.exec_pooled(x, &mut scratch.int8, true, pool);
+        (logits, feat.expect("arch has gap"))
+    }
+}

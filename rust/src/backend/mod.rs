@@ -1,0 +1,410 @@
+//! `qft::backend` — ONE execution-backend API over every forward path (S18).
+//!
+//! QFT's core claim is HW-aware parameterization: the *same* network must
+//! run under full precision, fake-quant simulation, and the integer
+//! deployment grid, and stay comparable across them.  Historically those
+//! paths were divergent free functions (`fp_forward`, `forward_fakequant`,
+//! `forward_integer{,_batch}`) plus [`DeployedModel`], each with its own
+//! scratch and batching conventions.  This module is the seam that unifies
+//! them:
+//!
+//! * [`BackendKind`] — the closed set of execution grids, with a stable
+//!   string `key()` / [`BackendKind::from_key`] round trip (`fp`, `fq-lw`,
+//!   `fq-dch`, `lw`, `dch`, `lw-i8`) used by the CLI `--backend` flag, the
+//!   serve registry wire keys, and the bench emitters.
+//! * [`Backend`] — `prepare(&ArchSpec, &ParamMap) -> Box<dyn PreparedNet>`:
+//!   run whatever offline subgraph the grid needs ONCE and freeze it.
+//! * [`PreparedNet`] — the uniform online contract: batched
+//!   `forward_batch` / `forward_batch_feat` over a caller-owned [`Scratch`]
+//!   and a [`Pool`], plus the shape metadata serving needs.  Batched and
+//!   single-image execution are bit-exactly equal per image, and results
+//!   never depend on the pool width (each implementation either chunks the
+//!   batch into per-image-independent sub-batches or runs kernels that are
+//!   bit-identical to their serial twins).
+//! * [`Scratch`] — one reusable buffer bundle per worker/caller, replacing
+//!   the ad-hoc `DeployScratch` threading: every backend borrows the slice
+//!   of it it needs, so holders (serve workers, eval loops) no longer know
+//!   which grid they are driving.
+//!
+//! The existing paths are re-homed as [`FpBackend`], [`FakeQuantBackend`]
+//! and [`IntBackend`] (a thin wrapper over [`DeployedModel`], bit-identical
+//! to the pre-trait `forward_integer_batch`).  The first genuinely new
+//! citizen is [`Int8Backend`] (`lw-i8`): lw weight codes packed into i8
+//! K-major panels ([`crate::kernel::PackedWi8`]) under a true i8×i8→i32
+//! accumulate micro-kernel ([`crate::kernel::gemm_i8`]) with zero-point
+//! folding — see the [`Int8Backend`] docs for the arithmetic.
+//!
+//! Consumers: [`crate::serve::Registry`] stores `Box<dyn PreparedNet>` (one
+//! engine serves any grid), [`crate::coordinator::eval::eval_backend`]
+//! scores any grid offline, and the `repro` CLI exposes all of it behind
+//! `--backend`.
+
+mod int8;
+
+pub use int8::Int8Backend;
+
+use crate::nn::{ArchSpec, ParamMap};
+use crate::par::Pool;
+use crate::quant::deploy::{
+    forward_fakequant, DeployScratch, DeployedModel, Mode,
+};
+use crate::tensor::Tensor;
+
+/// The closed set of execution grids a network can run under.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Full-precision reference (`fp`): the FP32 teacher graph.
+    Fp,
+    /// Fake-quant simulation (`fq-lw` / `fq-dch`): FP32-represented
+    /// quantization, the rust mirror of the L2 student graph.
+    FakeQuant(Mode),
+    /// Integer deployment (`lw` / `dch`): the frozen online subgraph over
+    /// f32-held codes ([`DeployedModel`]).
+    Int(Mode),
+    /// True-integer lw deployment (`lw-i8`): i8 weight panels, i8
+    /// activations (zero-point offset), i32 accumulation.
+    Int8,
+}
+
+impl BackendKind {
+    /// Every kind, in CLI/doc order.
+    pub const ALL: [BackendKind; 6] = [
+        BackendKind::Fp,
+        BackendKind::FakeQuant(Mode::Lw),
+        BackendKind::FakeQuant(Mode::Dch),
+        BackendKind::Int(Mode::Lw),
+        BackendKind::Int(Mode::Dch),
+        BackendKind::Int8,
+    ];
+
+    /// The stable string form: what `--backend` accepts, what registry wire
+    /// keys and bench rows embed.  Round-trips through [`Self::from_key`].
+    pub fn key(self) -> &'static str {
+        match self {
+            BackendKind::Fp => "fp",
+            BackendKind::FakeQuant(Mode::Lw) => "fq-lw",
+            BackendKind::FakeQuant(Mode::Dch) => "fq-dch",
+            BackendKind::Int(Mode::Lw) => "lw",
+            BackendKind::Int(Mode::Dch) => "dch",
+            BackendKind::Int8 => "lw-i8",
+        }
+    }
+
+    /// Fallible inverse of [`Self::key`].  Exact-match only (built on
+    /// [`Mode::from_key`]), so `"LW"`-vs-`"lw"` style drift in flags or
+    /// `.qftw` filenames errors out with the full list of valid keys
+    /// instead of silently resolving to something else.
+    pub fn from_key(s: &str) -> anyhow::Result<BackendKind> {
+        match s {
+            "fp" => Ok(BackendKind::Fp),
+            "lw-i8" => Ok(BackendKind::Int8),
+            _ => {
+                let parsed = match s.strip_prefix("fq-") {
+                    Some(m) => Mode::from_key(m).map(BackendKind::FakeQuant),
+                    None => Mode::from_key(s).map(BackendKind::Int),
+                };
+                parsed.map_err(|_| {
+                    let valid: Vec<&str> = Self::ALL.iter().map(|k| k.key()).collect();
+                    anyhow::anyhow!("unknown backend {s:?} (expected one of {valid:?})")
+                })
+            }
+        }
+    }
+
+    /// The quantization mode whose trainable set this grid consumes
+    /// (`None` for [`BackendKind::Fp`], which runs raw FP parameters).
+    /// `lw-i8` shares the `lw` trainables — same DoF, different engine.
+    pub fn mode(self) -> Option<Mode> {
+        match self {
+            BackendKind::Fp => None,
+            BackendKind::FakeQuant(m) | BackendKind::Int(m) => Some(m),
+            BackendKind::Int8 => Some(Mode::Lw),
+        }
+    }
+}
+
+/// Reusable per-caller buffers for any [`PreparedNet`].  One `Scratch` per
+/// worker/eval loop serves every backend; each implementation borrows only
+/// the fields it needs.  For the deployment grids ([`IntBackend`],
+/// [`Int8Backend`]) the hot path allocates nothing once warm (beyond
+/// per-reply logits rows); the [`FpBackend`] / [`FakeQuantBackend`]
+/// reference grids ignore the scratch and allocate their intermediates per
+/// call — they exist for correctness cross-checks, not serving throughput.
+#[derive(Default)]
+pub struct Scratch {
+    /// [`DeployedModel`] buffers ([`IntBackend`]).
+    pub(crate) deploy: DeployScratch,
+    /// i8 code / i32 accumulator buffers ([`Int8Backend`]).
+    pub(crate) int8: int8::Int8Scratch,
+}
+
+impl Scratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+/// A network frozen for execution under one grid: the uniform online
+/// contract every consumer (serve workers, eval loops, benches) drives.
+pub trait PreparedNet: Send + Sync {
+    /// Which grid this net runs under.
+    fn kind(&self) -> BackendKind;
+
+    /// Input spatial size (square).
+    fn input_hw(&self) -> usize;
+
+    /// Input channels.
+    fn input_ch(&self) -> usize;
+
+    /// Logit width.
+    fn num_classes(&self) -> usize;
+
+    /// Pixels per image (`hw*hw*ch`) — the request payload contract.
+    fn image_len(&self) -> usize {
+        self.input_hw() * self.input_hw() * self.input_ch()
+    }
+
+    /// Batched forward: logits `[batch, classes]`.  Bit-exactly independent
+    /// of how images are grouped into batches and of `pool`'s width.
+    fn forward_batch(&self, x: &Tensor, scratch: &mut Scratch, pool: &Pool) -> Tensor;
+
+    /// As [`Self::forward_batch`] but also returning the backbone feature
+    /// map (the KD target tensor, decoded to FP where the grid is integer).
+    fn forward_batch_feat(
+        &self,
+        x: &Tensor,
+        scratch: &mut Scratch,
+        pool: &Pool,
+    ) -> (Tensor, Tensor);
+}
+
+/// An execution engine: runs a grid's offline subgraph over `(arch,
+/// params)` once and freezes the result behind the uniform online contract.
+pub trait Backend {
+    /// The grid this engine implements.
+    fn kind(&self) -> BackendKind;
+
+    /// Run the offline subgraph and freeze.  `params` is the FP parameter
+    /// map for [`BackendKind::Fp`] and the mode's trainable set otherwise
+    /// (see [`BackendKind::mode`]).
+    fn prepare(&self, arch: &ArchSpec, params: &ParamMap) -> Box<dyn PreparedNet>;
+}
+
+/// The engine for a kind.
+pub fn backend_for(kind: BackendKind) -> Box<dyn Backend> {
+    match kind {
+        BackendKind::Fp => Box::new(FpBackend),
+        BackendKind::FakeQuant(m) => Box::new(FakeQuantBackend(m)),
+        BackendKind::Int(m) => Box::new(IntBackend(m)),
+        BackendKind::Int8 => Box::new(Int8Backend),
+    }
+}
+
+/// One-call prepare: `backend_for(kind).prepare(arch, params)`.
+pub fn prepare(kind: BackendKind, arch: &ArchSpec, params: &ParamMap) -> Box<dyn PreparedNet> {
+    backend_for(kind).prepare(arch, params)
+}
+
+// ------------------------------------------------------------------ fp
+
+/// Full-precision reference backend: the FP32 teacher graph behind the
+/// uniform contract.  `prepare` freezes the `(arch, params)` pair; the
+/// forward is the historical [`crate::nn::fp_forward`] (which already runs
+/// on the packed [`crate::kernel`] GEMM via thread-local scratch).  The
+/// batch is executed serially per call — per-image results are independent
+/// by construction, so pool width cannot change anything.
+pub struct FpBackend;
+
+struct FpPrepared {
+    arch: ArchSpec,
+    params: ParamMap,
+}
+
+impl Backend for FpBackend {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Fp
+    }
+
+    fn prepare(&self, arch: &ArchSpec, params: &ParamMap) -> Box<dyn PreparedNet> {
+        Box::new(FpPrepared { arch: arch.clone(), params: params.clone() })
+    }
+}
+
+impl PreparedNet for FpPrepared {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Fp
+    }
+
+    fn input_hw(&self) -> usize {
+        self.arch.input_hw
+    }
+
+    fn input_ch(&self) -> usize {
+        self.arch.input_ch
+    }
+
+    fn num_classes(&self) -> usize {
+        self.arch.num_classes
+    }
+
+    fn forward_batch(&self, x: &Tensor, _scratch: &mut Scratch, _pool: &Pool) -> Tensor {
+        crate::nn::fp_forward(&self.arch, &self.params, x).logits
+    }
+
+    fn forward_batch_feat(
+        &self,
+        x: &Tensor,
+        _scratch: &mut Scratch,
+        _pool: &Pool,
+    ) -> (Tensor, Tensor) {
+        let f = crate::nn::fp_forward(&self.arch, &self.params, x);
+        (f.logits, f.feat)
+    }
+}
+
+// ------------------------------------------------------------- fake-quant
+
+/// Fake-quant simulation backend: the FP32-represented student graph
+/// ([`forward_fakequant`]) behind the uniform contract — the grid the
+/// analysis figures and AOT parity tests speak.
+pub struct FakeQuantBackend(pub Mode);
+
+struct FakeQuantPrepared {
+    arch: ArchSpec,
+    tm: ParamMap,
+    mode: Mode,
+}
+
+impl Backend for FakeQuantBackend {
+    fn kind(&self) -> BackendKind {
+        BackendKind::FakeQuant(self.0)
+    }
+
+    fn prepare(&self, arch: &ArchSpec, tm: &ParamMap) -> Box<dyn PreparedNet> {
+        Box::new(FakeQuantPrepared { arch: arch.clone(), tm: tm.clone(), mode: self.0 })
+    }
+}
+
+impl PreparedNet for FakeQuantPrepared {
+    fn kind(&self) -> BackendKind {
+        BackendKind::FakeQuant(self.mode)
+    }
+
+    fn input_hw(&self) -> usize {
+        self.arch.input_hw
+    }
+
+    fn input_ch(&self) -> usize {
+        self.arch.input_ch
+    }
+
+    fn num_classes(&self) -> usize {
+        self.arch.num_classes
+    }
+
+    fn forward_batch(&self, x: &Tensor, _scratch: &mut Scratch, _pool: &Pool) -> Tensor {
+        forward_fakequant(&self.arch, &self.tm, self.mode, x).0
+    }
+
+    fn forward_batch_feat(
+        &self,
+        x: &Tensor,
+        _scratch: &mut Scratch,
+        _pool: &Pool,
+    ) -> (Tensor, Tensor) {
+        forward_fakequant(&self.arch, &self.tm, self.mode, x)
+    }
+}
+
+// ------------------------------------------------------------------- int
+
+/// Integer deployment backend: [`DeployedModel`] behind the uniform
+/// contract.  `prepare` is exactly [`DeployedModel::prepare`] and the
+/// forward is exactly `forward_batch_pooled`, so results are bit-identical
+/// to the pre-trait `forward_integer_batch` path at any thread count (the
+/// backend parity suite pins this).
+pub struct IntBackend(pub Mode);
+
+struct IntPrepared {
+    model: DeployedModel,
+    input_hw: usize,
+    input_ch: usize,
+    num_classes: usize,
+}
+
+impl Backend for IntBackend {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Int(self.0)
+    }
+
+    fn prepare(&self, arch: &ArchSpec, tm: &ParamMap) -> Box<dyn PreparedNet> {
+        Box::new(IntPrepared {
+            model: DeployedModel::prepare(arch, tm, self.0),
+            input_hw: arch.input_hw,
+            input_ch: arch.input_ch,
+            num_classes: arch.num_classes,
+        })
+    }
+}
+
+impl PreparedNet for IntPrepared {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Int(self.model.mode)
+    }
+
+    fn input_hw(&self) -> usize {
+        self.input_hw
+    }
+
+    fn input_ch(&self) -> usize {
+        self.input_ch
+    }
+
+    fn num_classes(&self) -> usize {
+        self.num_classes
+    }
+
+    fn forward_batch(&self, x: &Tensor, scratch: &mut Scratch, pool: &Pool) -> Tensor {
+        self.model.forward_batch_pooled(x, &mut scratch.deploy, pool)
+    }
+
+    fn forward_batch_feat(
+        &self,
+        x: &Tensor,
+        scratch: &mut Scratch,
+        pool: &Pool,
+    ) -> (Tensor, Tensor) {
+        self.model.forward_batch_feat_pooled(x, &mut scratch.deploy, pool)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keys_round_trip() {
+        for kind in BackendKind::ALL {
+            assert_eq!(BackendKind::from_key(kind.key()).unwrap(), kind);
+        }
+    }
+
+    #[test]
+    fn bad_keys_are_rejected_with_the_valid_list() {
+        for bad in ["LW", "Lw", "fq_lw", "int8", "i8", "lw-I8", "", " lw"] {
+            let err = BackendKind::from_key(bad).unwrap_err().to_string();
+            assert!(err.contains("unknown backend"), "{bad:?}: {err}");
+            assert!(err.contains("lw-i8"), "{bad:?}: error must list valid keys, got {err}");
+        }
+        assert!(Mode::from_key("LW").is_err());
+        assert!(Mode::from_key("lw").is_ok());
+    }
+
+    #[test]
+    fn mode_of_kind() {
+        assert_eq!(BackendKind::Fp.mode(), None);
+        assert_eq!(BackendKind::Int8.mode(), Some(Mode::Lw));
+        assert_eq!(BackendKind::FakeQuant(Mode::Dch).mode(), Some(Mode::Dch));
+        assert_eq!(BackendKind::Int(Mode::Dch).mode(), Some(Mode::Dch));
+    }
+}

@@ -3,6 +3,7 @@
 
 use anyhow::Result;
 
+use crate::backend::BackendKind;
 use crate::data::{Dataset, Split};
 use crate::nn::ParamMap;
 use crate::quant::deploy::Mode;
@@ -63,21 +64,46 @@ pub fn eval_q(
     Ok(correct as f32 / total.max(1) as f32)
 }
 
-/// Pure-rust quantized eval (fake-quant simulator) — parity cross-check.
-pub fn eval_q_rust(
+/// Pure-rust eval under ANY execution backend: prepares the grid's frozen
+/// state once ([`crate::backend::prepare`]) and drives the uniform batched
+/// [`crate::backend::PreparedNet::forward_batch`] contract — literally the
+/// same code the serving workers run, so offline accuracy numbers and the
+/// online server cannot diverge.  `params` is the FP parameter map for
+/// [`BackendKind::Fp`] and the mode's trainable set otherwise.  Batches go
+/// through the process-wide [`crate::par::global`] pool (the same one the
+/// serve engine submits to), and every backend's parallel path is
+/// bit-identical to its serial one, so accuracies are independent of
+/// `--threads`.
+pub fn eval_backend(
     arch: &crate::nn::ArchSpec,
-    tm: &ParamMap,
-    mode: Mode,
+    params: &ParamMap,
+    kind: BackendKind,
     n_images: usize,
     seed: u64,
 ) -> f32 {
+    let net = crate::backend::prepare(kind, arch, params);
+    eval_prepared(net.as_ref(), arch.batch, n_images, seed)
+}
+
+/// [`eval_backend`] over an already-prepared net (the registry / CLI path).
+/// Scores `eval_image_count(batch, n_images)` images: the batch size is
+/// clamped so small `n_images` still run at least one batch, and the
+/// trailing partial batch is dropped.
+pub fn eval_prepared(
+    net: &dyn crate::backend::PreparedNet,
+    batch: usize,
+    n_images: usize,
+    seed: u64,
+) -> f32 {
+    let mut scratch = crate::backend::Scratch::new();
+    let pool = crate::par::global();
     let ds = Dataset::new(seed);
-    let b = arch.batch;
+    let b = clamped_batch(batch, n_images);
     let mut correct = 0usize;
     let mut total = 0usize;
     for i in 0..n_images / b {
         let (x, _, labels) = ds.batch(Split::Val, (i * b) as u64, b);
-        let (logits, _) = crate::quant::deploy::forward_fakequant(arch, tm, mode, &x);
+        let logits = net.forward_batch(&x, &mut scratch, pool);
         let preds = logits.argmax_lastdim();
         correct += preds.iter().zip(&labels).filter(|(p, l)| p == l).count();
         total += b;
@@ -85,13 +111,21 @@ pub fn eval_q_rust(
     correct as f32 / total.max(1) as f32
 }
 
-/// Pure-rust *integer-deployment* eval: prepares the frozen constants once
-/// and drives the same batched `forward_integer` path (with reused scratch
-/// buffers) that the serving workers run — so offline accuracy numbers and
-/// the online server execute literally the same code.  Batches go through
-/// the process-wide [`crate::par::global`] pool (the same one the serve
-/// engine submits to), and the parallel path is bit-identical to the serial
-/// one, so accuracies are independent of `--threads`.
+/// Pure-rust quantized eval (fake-quant simulator) — parity cross-check.
+/// Thin wrapper over [`eval_backend`] with the `fq-{mode}` grid.
+pub fn eval_q_rust(
+    arch: &crate::nn::ArchSpec,
+    tm: &ParamMap,
+    mode: Mode,
+    n_images: usize,
+    seed: u64,
+) -> f32 {
+    eval_backend(arch, tm, BackendKind::FakeQuant(mode), n_images, seed)
+}
+
+/// Pure-rust *integer-deployment* eval — thin wrapper over [`eval_backend`]
+/// with the `{mode}` integer grid (kept for its many call sites; new code
+/// should name the grid explicitly).
 pub fn eval_integer_rust(
     arch: &crate::nn::ArchSpec,
     tm: &ParamMap,
@@ -99,21 +133,23 @@ pub fn eval_integer_rust(
     n_images: usize,
     seed: u64,
 ) -> f32 {
-    let model = crate::quant::deploy::DeployedModel::prepare(arch, tm, mode);
-    let mut scratch = crate::quant::deploy::DeployScratch::new();
-    let pool = crate::par::global();
-    let ds = Dataset::new(seed);
-    let b = arch.batch;
-    let mut correct = 0usize;
-    let mut total = 0usize;
-    for i in 0..n_images / b {
-        let (x, _, labels) = ds.batch(Split::Val, (i * b) as u64, b);
-        let logits = model.forward_batch_pooled(&x, &mut scratch, pool);
-        let preds = logits.argmax_lastdim();
-        correct += preds.iter().zip(&labels).filter(|(p, l)| p == l).count();
-        total += b;
-    }
-    correct as f32 / total.max(1) as f32
+    eval_backend(arch, tm, BackendKind::Int(mode), n_images, seed)
+}
+
+/// The batch size [`eval_prepared`] actually runs: clamped so small
+/// `n_images` still fill one batch.  ONE copy, shared with
+/// [`eval_image_count`], so the reported image count can never diverge
+/// from the number scored.
+fn clamped_batch(batch: usize, n_images: usize) -> usize {
+    batch.max(1).min(n_images.max(1))
+}
+
+/// Images [`eval_prepared`] actually scores for a requested `(batch,
+/// n_images)` — whole batches only, with the batch clamped to `n_images`.
+/// Callers reporting "top-1 over N images" must use this N.
+pub fn eval_image_count(batch: usize, n_images: usize) -> usize {
+    let b = clamped_batch(batch, n_images);
+    n_images / b * b
 }
 
 /// Collect calibration activation statistics through the AOT `fp_stats`.

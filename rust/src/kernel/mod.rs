@@ -20,6 +20,13 @@
 //!   intrinsics).  It is a *write-mode* (beta = 0) kernel: the tile is
 //!   stored over `out`, so callers skip the zero-fill pass entirely.
 //!
+//! A third kernel lives alongside the f32 pair: [`gemm_i8`] over
+//! [`PackedWi8`] panels — the same panel geometry and loop structure with
+//! i8 weight *codes* and i32 accumulators, serving the `lw-i8` deployment
+//! backend ([`crate::backend::Int8Backend`]).  Its contract is stronger
+//! and simpler: integer accumulation is exact and associative (no rounding
+//! while the true sum fits i32), so no ordering discipline is needed.
+//!
 //! ## The bit-exactness contract
 //!
 //! Per output element `out[i, j]` both kernels compute exactly
@@ -270,6 +277,199 @@ pub fn gemm(x: &[f32], m: usize, pw: &PackedW, out: &mut [f32]) {
     }
 }
 
+// ------------------------------------------------------------ integer twin
+
+/// Panel-packed **i8** weights — the integer twin of [`PackedW`], identical
+/// panel geometry (`ceil(n / NR)` K-major [`NR`]-column panels, ragged last
+/// panel zero-padded) over `i8` weight *codes* instead of f32 values.  This
+/// is the storage the `lw` deployment grid actually implies: weight codes
+/// live in `[-7, 7]` (4 bits), so an i8 panel holds 4× the codes per cache
+/// line of the f32 layout, and [`gemm_i8`] accumulates them in i32 without
+/// any float rounding.  Built by [`crate::backend::Int8Backend`] at prepare
+/// time; the f32 paths never touch it.
+#[derive(Clone, Debug, Default)]
+pub struct PackedWi8 {
+    k: usize,
+    n: usize,
+    /// `n.div_ceil(NR)` panels × `k * NR` codes.
+    data: Vec<i8>,
+}
+
+impl PackedWi8 {
+    /// Pack a whole row-major `[k, n]` code matrix.
+    pub fn pack(w: &[i8], k: usize, n: usize) -> PackedWi8 {
+        let mut pw = PackedWi8::default();
+        pw.pack_cols(w, k, n, 0, n);
+        pw
+    }
+
+    /// (Re)pack columns `c0 .. c0 + ncols` of the row-major
+    /// `[k, row_stride]` code matrix, reusing the buffer — the same column
+    /// slicing [`PackedW::pack_cols`] does for grouped convs.
+    pub fn pack_cols(&mut self, w: &[i8], k: usize, row_stride: usize, c0: usize, ncols: usize) {
+        assert!(c0 + ncols <= row_stride, "columns {c0}+{ncols} out of stride {row_stride}");
+        assert_eq!(w.len(), k * row_stride, "code buffer vs [k, row_stride]");
+        self.k = k;
+        self.n = ncols;
+        let panels = ncols.div_ceil(NR);
+        let len = panels * k * NR;
+        if self.data.len() != len {
+            self.data.clear();
+            self.data.resize(len, 0);
+        }
+        for p in 0..panels {
+            let j0 = p * NR;
+            let nv = NR.min(ncols - j0);
+            let panel = &mut self.data[p * k * NR..(p + 1) * k * NR];
+            for kk in 0..k {
+                let src = kk * row_stride + c0 + j0;
+                panel[kk * NR..kk * NR + nv].copy_from_slice(&w[src..src + nv]);
+                // same stale-pad rule as the f32 packer: a warm buffer can be
+                // repacked at a different (k, n) of equal total length
+                panel[kk * NR + nv..(kk + 1) * NR].fill(0);
+            }
+        }
+    }
+
+    /// Reduction depth (rows of the packed matrix).
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Output columns (un-padded logical width).
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Per-logical-column code sums (`sum_kk w[kk, j]` as i32) — the
+    /// zero-point correction term: an activation stored offset by `zp`
+    /// contributes `zp * col_sum` extra per output, which callers fold into
+    /// the integer bias once at prepare time.
+    pub fn col_sums(&self) -> Vec<i32> {
+        let mut sums = vec![0i32; self.n];
+        let panels = self.n.div_ceil(NR);
+        for p in 0..panels {
+            let j0 = p * NR;
+            let nv = NR.min(self.n - j0);
+            let panel = &self.data[p * self.k * NR..(p + 1) * self.k * NR];
+            for kk in 0..self.k {
+                let row = &panel[kk * NR..kk * NR + nv];
+                for (s, &c) in sums[j0..j0 + nv].iter_mut().zip(row) {
+                    *s += c as i32;
+                }
+            }
+        }
+        sums
+    }
+
+    /// Bytes held by the packed buffer (4× denser than the f32 panels).
+    pub fn packed_bytes(&self) -> usize {
+        self.data.len()
+    }
+}
+
+/// One `R`×[`NR`] i32 register tile: the integer mirror of [`micro_tile`].
+/// No zero-activation skip — in integer arithmetic `0 * w` is exactly 0 for
+/// every representable `w` (there is no NaN/inf to mask), so the branch the
+/// f32 kernel needs for correctness would only cost the i8 kernel its
+/// vectorization.
+#[inline(always)]
+fn micro_tile_i8<const R: usize>(
+    x: &[i8],
+    k: usize,
+    panel: &[i8],
+    out: &mut [i32],
+    n_stride: usize,
+    nv: usize,
+) {
+    let xr: [&[i8]; R] = std::array::from_fn(|r| &x[r * k..(r + 1) * k]);
+    let mut acc = [[0i32; NR]; R];
+    for kk in 0..k {
+        let wrow = &panel[kk * NR..kk * NR + NR];
+        for r in 0..R {
+            let xv = xr[r][kk] as i32;
+            for (a, &wv) in acc[r].iter_mut().zip(wrow) {
+                *a += xv * wv as i32;
+            }
+        }
+    }
+    for (r, accr) in acc.iter().enumerate() {
+        out[r * n_stride..r * n_stride + nv].copy_from_slice(&accr[..nv]);
+    }
+}
+
+/// Narrow-panel i8 path (`nv < LANES`): reduce only the valid lanes, the
+/// depthwise-conv / ragged-tail case of [`micro_narrow`].
+#[allow(clippy::too_many_arguments)]
+fn micro_narrow_i8(
+    x: &[i8],
+    m: usize,
+    k: usize,
+    panel: &[i8],
+    out: &mut [i32],
+    n_stride: usize,
+    nv: usize,
+) {
+    for i in 0..m {
+        let xrow = &x[i * k..(i + 1) * k];
+        let mut acc = [0i32; LANES];
+        for (kk, &xv) in xrow.iter().enumerate() {
+            let xv = xv as i32;
+            let wrow = &panel[kk * NR..kk * NR + nv];
+            for (a, &wv) in acc[..nv].iter_mut().zip(wrow) {
+                *a += xv * wv as i32;
+            }
+        }
+        out[i * n_stride..i * n_stride + nv].copy_from_slice(&acc[..nv]);
+    }
+}
+
+/// Write-mode i8×i8→i32 GEMM: `out[m, n] = x[m, k] @ w` with `w` pre-packed
+/// as i8 codes and every product widened to i32 before accumulation.  Same
+/// loop structure as the f32 [`gemm`] (panels outer, [`MR`]-row register
+/// tiles inner, narrow path for thin panels), but the result is *exact*: as
+/// long as the true sum fits i32 there is no rounding at all, and integer
+/// addition is associative, so any blocking/vectorization the compiler picks
+/// yields bit-identical output.  The `lw` deployment shapes are far inside
+/// the safe range (|x| ≤ 255, |w| ≤ 7 ⇒ k up to ~1.2M rows before i32 could
+/// saturate).
+pub fn gemm_i8(x: &[i8], m: usize, pw: &PackedWi8, out: &mut [i32]) {
+    let (k, n) = (pw.k, pw.n);
+    debug_assert_eq!(x.len(), m * k, "x vs [m, k]");
+    debug_assert_eq!(out.len(), m * n, "out vs [m, n]");
+    if m == 0 || n == 0 {
+        return;
+    }
+    if k == 0 {
+        out.fill(0);
+        return;
+    }
+    let panels = n.div_ceil(NR);
+    for p in 0..panels {
+        let j0 = p * NR;
+        let nv = NR.min(n - j0);
+        let panel = &pw.data[p * k * NR..(p + 1) * k * NR];
+        if nv < LANES {
+            micro_narrow_i8(x, m, k, panel, &mut out[j0..], n, nv);
+            continue;
+        }
+        let mut i = 0;
+        while i + MR <= m {
+            micro_tile_i8::<MR>(&x[i * k..(i + MR) * k], k, panel, &mut out[i * n + j0..], n, nv);
+            i += MR;
+        }
+        match m - i {
+            3 => micro_tile_i8::<3>(&x[i * k..], k, panel, &mut out[i * n + j0..], n, nv),
+            2 => micro_tile_i8::<2>(&x[i * k..], k, panel, &mut out[i * n + j0..], n, nv),
+            1 => micro_tile_i8::<1>(&x[i * k..], k, panel, &mut out[i * n + j0..], n, nv),
+            rem => debug_assert_eq!(
+                rem, 0,
+                "write-mode i8 kernel left {rem} rows unwritten — remainder arms lag MR"
+            ),
+        }
+    }
+}
+
 thread_local! {
     /// Per-thread pack buffer for call sites whose weights are not
     /// long-lived (training forwards, one-off heuristics): the pack is
@@ -388,6 +588,108 @@ mod tests {
             let fresh = PackedW::pack(&w, k, n);
             assert_eq!(pw.data, fresh.data, "k={k} n={n}");
             assert_eq!((pw.k(), pw.n()), (k, n));
+        }
+    }
+
+    fn rand_codes(n: usize, seed: u64) -> Vec<i8> {
+        let mut rng = crate::data::Rng::new(seed);
+        (0..n).map(|_| (rng.normal() * 4.0).round().clamp(-7.0, 7.0) as i8).collect()
+    }
+
+    /// Naive i32 reference for the i8 kernel.
+    fn ref_out_i8(x: &[i8], m: usize, k: usize, w: &[i8], n: usize) -> Vec<i32> {
+        let mut out = vec![0i32; m * n];
+        for i in 0..m {
+            for kk in 0..k {
+                let xv = x[i * k + kk] as i32;
+                for j in 0..n {
+                    out[i * n + j] += xv * w[kk * n + j] as i32;
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn i8_kernel_matches_naive_reference_exactly() {
+        for &(m, k, n) in &[
+            (1usize, 1usize, 1usize),
+            (4, 8, NR),
+            (5, 7, NR + 1),
+            (MR - 1, 16, NR - 1),
+            (17, 33, 40),
+            (MR * 3, 2, 2 * NR),
+            (2, 64, 5),
+            (9, 9, 1), // depthwise: one valid lane per panel
+        ] {
+            let x = rand_codes(m * k, (m * 37 + k * 11 + n) as u64);
+            let w = rand_codes(k * n, (m + k * 3 + n * 17) as u64);
+            let pw = PackedWi8::pack(&w, k, n);
+            let mut got = vec![777i32; m * n];
+            gemm_i8(&x, m, &pw, &mut got);
+            assert_eq!(got, ref_out_i8(&x, m, k, &w, n), "m={m} k={k} n={n}");
+        }
+    }
+
+    #[test]
+    fn i8_degenerate_shapes_are_safe() {
+        let pw = PackedWi8::pack(&[], 0, 3);
+        let mut out = vec![9i32; 2 * 3];
+        gemm_i8(&[], 2, &pw, &mut out);
+        assert_eq!(out, vec![0; 6]);
+        let pw = PackedWi8::pack(&[], 4, 0);
+        gemm_i8(&rand_codes(8, 1), 2, &pw, &mut []);
+        let pw = PackedWi8::pack(&rand_codes(8, 2), 4, 2);
+        gemm_i8(&[], 0, &pw, &mut []);
+    }
+
+    #[test]
+    fn i8_col_sums_and_repack_reuse() {
+        // col_sums must ignore pad lanes; repacking at a different (k, n) of
+        // the same total length must not leak stale codes into sums
+        let mut pw = PackedWi8::default();
+        for (k, n, seed) in [(9usize, 21usize, 5u64), (4, 3, 6), (4, 16, 8), (2, 20, 9)] {
+            let w = rand_codes(k * n, seed);
+            pw.pack_cols(&w, k, n, 0, n);
+            let want: Vec<i32> = (0..n)
+                .map(|j| (0..k).map(|kk| w[kk * n + j] as i32).sum())
+                .collect();
+            assert_eq!(pw.col_sums(), want, "k={k} n={n}");
+            let fresh = PackedWi8::pack(&w, k, n);
+            assert_eq!(pw.data, fresh.data, "k={k} n={n}");
+        }
+    }
+
+    #[test]
+    fn i8_pack_cols_slices_groups() {
+        let (k, stride) = (3usize, 8usize);
+        let w = rand_codes(k * stride, 12);
+        let mut sliced = PackedWi8::default();
+        sliced.pack_cols(&w, k, stride, 2, 4);
+        let dense: Vec<i8> = (0..k)
+            .flat_map(|kk| w[kk * stride + 2..kk * stride + 6].to_vec())
+            .collect();
+        let want = PackedWi8::pack(&dense, k, 4);
+        assert_eq!(sliced.data, want.data);
+    }
+
+    #[test]
+    fn i8_matches_f32_kernel_on_code_matrices() {
+        // on integer-valued inputs within f32's exact range the two kernels
+        // must agree number-for-number
+        let (m, k, n) = (13usize, 57usize, NR + 5);
+        let xi = rand_codes(m * k, 21);
+        let wi = rand_codes(k * n, 22);
+        let xf: Vec<f32> = xi.iter().map(|&v| v as f32).collect();
+        let wf: Vec<f32> = wi.iter().map(|&v| v as f32).collect();
+        let pw8 = PackedWi8::pack(&wi, k, n);
+        let pwf = PackedW::pack(&wf, k, n);
+        let mut got8 = vec![0i32; m * n];
+        gemm_i8(&xi, m, &pw8, &mut got8);
+        let mut gotf = vec![0.0f32; m * n];
+        gemm(&xf, m, &pwf, &mut gotf);
+        for (a, b) in got8.iter().zip(&gotf) {
+            assert_eq!(*a as f32, *b);
         }
     }
 

@@ -20,23 +20,44 @@
 //!   end-to-end pipeline ([`coordinator`]): pretrain → calibrate → MMSE init
 //!   → (CLE) → QFT finetune → export → eval.
 //!
+//! ## Execution backends — `qft::backend`
+//!
+//! [`backend`] is the one seam every forward path now sits behind: a
+//! [`backend::Backend`] runs a grid's offline subgraph once
+//! (`prepare(&ArchSpec, &ParamMap) -> Box<dyn PreparedNet>`) and the frozen
+//! [`backend::PreparedNet`] exposes a uniform batched online contract
+//! (`forward_batch{,_feat}` over a caller-owned [`backend::Scratch`] and a
+//! [`par::Pool`]).  [`backend::BackendKind`] names the grids with stable
+//! string keys (`fp`, `fq-lw`, `fq-dch`, `lw`, `dch`, `lw-i8` —
+//! `BackendKind::{key, from_key}` round-trip), which is what the CLI
+//! `--backend` flag, the serve registry wire keys and the bench emitters
+//! speak.  The historical free functions (`nn::fp_forward`,
+//! `quant::deploy::forward_fakequant`, the integer `DeployedModel`) are
+//! re-homed as [`backend::FpBackend`], [`backend::FakeQuantBackend`] and
+//! [`backend::IntBackend`]; [`backend::Int8Backend`] (`lw-i8`) is the first
+//! genuinely new engine — lw weight codes in i8 K-major panels
+//! ([`kernel::PackedWi8`]) under the i8×i8→i32 [`kernel::gemm_i8`]
+//! micro-kernel, activations carried as zero-point-offset i8 with the
+//! correction folded into the integer bias at prepare time.
+//!
 //! ## Serving
 //!
 //! The paper freezes all deployment constants offline precisely so the
 //! online integer path is cheap; [`serve`] turns that online path into an
-//! inference server.  [`quant::deploy::DeployedModel::prepare`] runs the
-//! offline subgraph once per (arch × mode); [`serve::Registry`] holds the
-//! frozen models; [`serve::Engine`] runs a std-thread worker pool over a
-//! bounded dynamic micro-batching queue ([`serve::Batcher`], max-batch /
-//! max-wait-µs policy with blocking backpressure), each worker reusing one
-//! [`quant::deploy::DeployScratch`] so steady-state execution does not
-//! allocate.  [`serve::ServeStats`] tracks p50/p95/p99 latency, throughput,
-//! and batch/queue-depth histograms.
+//! inference server over ANY backend.  [`backend::Backend::prepare`] runs
+//! the offline subgraph once per (arch × backend); [`serve::Registry`]
+//! holds the frozen `Box<dyn PreparedNet>`s; [`serve::Engine`] runs a
+//! std-thread worker pool over a bounded dynamic micro-batching queue
+//! ([`serve::Batcher`], max-batch / max-wait-µs policy with blocking
+//! backpressure), each worker reusing one [`backend::Scratch`] so
+//! steady-state execution does not allocate.  [`serve::ServeStats`] tracks
+//! p50/p95/p99 latency, throughput, and batch/queue-depth histograms.
 //!
 //! ```text
 //! repro qft --arch resnet_tiny --mode lw        # exports weights/resnet_tiny.lw.qftw
-//! repro serve --arch resnet_tiny --mode lw --workers 4 --max-batch 8
-//! repro bench-serve --workers 4 --concurrency 16 --requests 2048
+//! repro serve --arch resnet_tiny --backend lw-i8 --workers 4 --max-batch 8
+//! repro bench-serve --backend lw --workers 4 --concurrency 16 --requests 2048
+//! repro eval --arch resnet_tiny --backend lw-i8 --images 512
 //! ```
 //!
 //! Without AOT artifacts both commands fall back to a built-in
@@ -92,6 +113,7 @@
 //! The public API is consumed by the `repro` CLI, `examples/` and
 //! `rust/benches/` (one bench per paper table/figure).
 
+pub mod backend;
 pub mod coordinator;
 pub mod data;
 pub mod kernel;

@@ -20,6 +20,7 @@ use std::time::Duration;
 
 use anyhow::{bail, Result};
 
+use qft::backend::BackendKind;
 use qft::coordinator::{eval, experiments, metrics, pretrain, qft as qft_stage};
 use qft::quant::deploy::Mode;
 use qft::runtime::Runtime;
@@ -46,21 +47,30 @@ COMMANDS:
   fig9      [--archs A,B] [--fast]        dch frozen vs trained L/R scales
   fig12     [--arch A] [--fast]           per-layer kernel error lw/CLE/QFT/chw
 
-SERVING (pure-rust integer deployment path; no PJRT needed):
-  serve     [--arch A] [--mode lw|dch] [--workers N] [--max-batch B]
+SERVING / BACKEND EVAL (pure-rust execution backends; no PJRT needed):
+  serve     [--arch A] [--backend K] [--workers N] [--max-batch B]
             [--max-wait-us U] [--queue-cap Q] [--requests R] [--threads T]
-                                          load A/MODE into the registry, run a
+                                          load A/K into the registry, run a
                                           closed-loop smoke client over R val
                                           images, report accuracy + latency
-  bench-serve [--arch A] [--mode lw|dch] [--workers N] [--max-batch B]
+  bench-serve [--arch A] [--backend K] [--workers N] [--max-batch B]
             [--max-wait-us U] [--queue-cap Q] [--concurrency C]
             [--requests R] [--threads T]  C closed-loop clients x R requests
                                           each; reports images/sec + p50/95/99
+  eval      [--arch A] [--backend K] [--images N] [--threads T]
+                                          offline top-1 of A under backend K
+                                          (same forward code the server runs)
+
+--backend K selects the execution grid: fp (FP32 reference), fq-lw /
+fq-dch (fake-quant simulation), lw / dch (integer deployment, f32-held
+codes), lw-i8 (true i8 x i8 -> i32 integer engine over the lw grid).  The
+legacy --mode lw|dch flag is still accepted on these commands and maps
+to the integer backends.
 
 Every command accepts --threads T: the width of the ONE process-wide
-qft::par kernel pool that serve workers and the integer eval share
-(default: available parallelism).  Results never depend on T — the
-parallel kernels are bit-identical to their serial twins.
+qft::par kernel pool that serve workers and the backend evals share
+(default: available parallelism).  Results never depend on T — every
+backend's parallel path is bit-identical to its serial twin.
 
 Batching is pool-aware by default: workers shrink the micro-batch hold
 time while the kernel pool is idle (latency) and grow it when the pool
@@ -74,15 +84,16 @@ Without artifacts/manifest.json a built-in `synthetic` arch is served.
 
 /// Every `--key value` option any command accepts (unknown keys are errors).
 const KV_KEYS: &[&str] = &[
-    "arch", "archs", "steps", "lr", "mode", "ce-mix", "workers", "max-batch",
-    "max-wait-us", "queue-cap", "requests", "concurrency", "threads",
+    "arch", "archs", "steps", "lr", "mode", "backend", "images", "ce-mix",
+    "workers", "max-batch", "max-wait-us", "queue-cap", "requests",
+    "concurrency", "threads",
 ];
 /// Every boolean `--flag`.
 const BOOL_FLAGS: &[&str] = &["cle", "frozen-scales", "fast", "no-adaptive"];
 /// Every command (validated before any runtime/artifact work happens).
 const COMMANDS: &[&str] = &[
     "pretrain", "eval-fp", "qft", "table1", "table2", "fig3", "fig5", "fig6",
-    "fig7", "fig8", "fig9", "fig12", "serve", "bench-serve",
+    "fig7", "fig8", "fig9", "fig12", "serve", "bench-serve", "eval",
 ];
 
 /// flags: `--key value` pairs plus boolean `--flag`s.  Duplicates and
@@ -153,11 +164,36 @@ impl Args {
     }
 }
 
-fn parse_mode(s: &str) -> Result<Mode> {
-    match s {
-        "lw" => Ok(Mode::Lw),
-        "dch" => Ok(Mode::Dch),
-        other => bail!("unknown mode {other} (use lw|dch)"),
+/// Reject options `cmd` reads nothing from — a flag the user typed being
+/// silently ignored defeats the strict-flag contract [`Args::parse`]
+/// enforces (e.g. `repro serve --images 100` almost certainly meant
+/// `--requests`).
+fn reject_unused(args: &Args, cmd: &str, keys: &[&str], flags: &[&str]) -> Result<()> {
+    for k in keys {
+        if args.kv.contains_key(*k) {
+            bail!("--{k} is not used by `{cmd}` (see usage)");
+        }
+    }
+    for f in flags {
+        if args.flag(f) {
+            bail!("--{f} is not used by `{cmd}` (see usage)");
+        }
+    }
+    Ok(())
+}
+
+/// Execution grid for the serving / backend-eval commands: `--backend` wins
+/// when given; the legacy `--mode lw|dch` flag maps to the integer grids
+/// ([`BackendKind::Int`]), which is exactly what those commands ran before
+/// the backend seam existed.  Giving both is a conflict (no silent
+/// precedence).
+fn parse_backend(args: &Args) -> Result<BackendKind> {
+    match (args.kv.get("backend"), args.kv.get("mode")) {
+        (Some(_), Some(_)) => bail!("--backend and --mode are mutually exclusive"),
+        (Some(b), None) => BackendKind::from_key(b),
+        (None, mode) => {
+            Ok(BackendKind::Int(Mode::from_key(mode.map(String::as_str).unwrap_or("lw"))?))
+        }
     }
 }
 
@@ -188,10 +224,11 @@ fn main() -> Result<()> {
     }
 
     match cmd.as_str() {
-        // the serving commands run the pure-rust deployment path and must
-        // work without PJRT/artifacts
+        // the serving / backend-eval commands run the pure-rust execution
+        // backends and must work without PJRT/artifacts
         "serve" => cmd_serve(&artifacts, &args),
         "bench-serve" => cmd_bench_serve(&artifacts, &args),
+        "eval" => cmd_eval(&artifacts, &args),
         _ => {
             let rt = Runtime::load(&artifacts)?;
             eprintln!("platform: {}", rt.platform());
@@ -211,12 +248,13 @@ fn serve_cfg(args: &Args) -> Result<ServeConfig> {
 }
 
 fn cmd_serve(artifacts: &str, args: &Args) -> Result<()> {
+    reject_unused(args, "serve", &["images", "concurrency"], &[])?;
     let arch = args.get("arch", "synthetic");
-    let mode = parse_mode(&args.get("mode", "lw"))?;
+    let kind = parse_backend(args)?;
     let requests = args.usize("requests", 512)?;
     let cfg = serve_cfg(args)?;
 
-    let registry = Registry::load(Path::new(artifacts), &[(arch.clone(), mode)])?;
+    let registry = Registry::load(Path::new(artifacts), &[(arch.clone(), kind)])?;
     let slot = 0;
     let engine = Engine::start(registry.clone(), &cfg);
     let client = engine.client();
@@ -230,7 +268,7 @@ fn cmd_serve(artifacts: &str, args: &Args) -> Result<()> {
         }
     }
     let report = engine.shutdown();
-    println!("serve {arch}/{}: {report}", mode.key());
+    println!("serve {arch}/{}: {report}", kind.key());
     println!(
         "top-1 over {requests} served requests: {:.1}%",
         correct as f32 / requests.max(1) as f32 * 100.0
@@ -239,20 +277,21 @@ fn cmd_serve(artifacts: &str, args: &Args) -> Result<()> {
 }
 
 fn cmd_bench_serve(artifacts: &str, args: &Args) -> Result<()> {
+    reject_unused(args, "bench-serve", &["images"], &[])?;
     let arch = args.get("arch", "synthetic");
-    let mode = parse_mode(&args.get("mode", "lw"))?;
+    let kind = parse_backend(args)?;
     let concurrency = args.usize("concurrency", 16)?;
     let requests = args.usize("requests", 2048)?;
     let cfg = serve_cfg(args)?;
     let per_client = requests.div_ceil(concurrency.max(1));
 
-    let registry = Registry::load(Path::new(artifacts), &[(arch.clone(), mode)])?;
+    let registry = Registry::load(Path::new(artifacts), &[(arch.clone(), kind)])?;
     // warm-up pass so first-touch buffer growth doesn't skew the measurement
     let _ = run_closed_loop(&registry, &cfg, concurrency.max(1), 4, 0);
     let report = run_closed_loop(&registry, &cfg, concurrency.max(1), per_client, 0);
     println!(
         "bench-serve {arch}/{} workers={} max-batch={} concurrency={}:",
-        mode.key(),
+        kind.key(),
         cfg.workers,
         cfg.max_batch,
         concurrency
@@ -267,7 +306,48 @@ fn cmd_bench_serve(artifacts: &str, args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Offline top-1 under any execution backend — the same weight resolution
+/// the serve registry uses and literally the same forward code the serving
+/// workers run, so this is the number the server would produce.
+fn cmd_eval(artifacts: &str, args: &Args) -> Result<()> {
+    reject_unused(
+        args,
+        "eval",
+        &["workers", "max-batch", "max-wait-us", "queue-cap", "concurrency", "requests"],
+        &["no-adaptive"],
+    )?;
+    let arch = args.get("arch", "synthetic");
+    let kind = parse_backend(args)?;
+    let images = args.usize("images", 512)?;
+    let registry = Registry::load(Path::new(artifacts), &[(arch.clone(), kind)])?;
+    let entry = registry.get(0);
+    let batch = 8;
+    // whole batches only — report the count actually scored, not the ask
+    let scored = eval::eval_image_count(batch, images);
+    anyhow::ensure!(scored > 0, "--images {images} evaluates nothing");
+    let t0 = std::time::Instant::now();
+    let acc = eval::eval_prepared(entry.model.as_ref(), batch, images, 0);
+    let dt = t0.elapsed();
+    println!(
+        "eval {}: top-1 {:.1}% over {scored} val images in {:.2}s ({:.0} img/s, pool {})",
+        entry.key,
+        acc * 100.0,
+        dt.as_secs_f64(),
+        scored as f64 / dt.as_secs_f64().max(1e-9),
+        qft::par::global().threads(),
+    );
+    Ok(())
+}
+
 fn run_pipeline_cmd(rt: &Runtime, cmd: &str, args: &Args) -> Result<()> {
+    // serving-only options must not be silently ignored here: `repro qft
+    // --backend dch` looking like it selected a grid (while only --mode is
+    // read) would defeat the strict-flag contract Args::parse enforces
+    for key in ["backend", "images"] {
+        if args.kv.contains_key(key) {
+            bail!("--{key} applies to the serve / bench-serve / eval commands only");
+        }
+    }
     let fast = args.flag("fast");
     match cmd {
         "pretrain" => {
@@ -299,7 +379,7 @@ fn run_pipeline_cmd(rt: &Runtime, cmd: &str, args: &Args) -> Result<()> {
         }
         "qft" => {
             let arch = args.req("arch")?;
-            let mode = parse_mode(&args.get("mode", "lw"))?;
+            let mode = Mode::from_key(&args.get("mode", "lw"))?;
             let t = experiments::teacher_ctx(rt, &arch)?;
             let mut cfg = if fast {
                 qft_stage::QftConfig::fast(mode)

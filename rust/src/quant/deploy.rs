@@ -52,11 +52,23 @@ impl Mode {
             Mode::Dch => "dch",
         }
     }
+
+    /// Fallible inverse of [`Mode::key`].  Exact-match only: `.qftw`
+    /// filenames and wire keys are generated from `key()`, so case or
+    /// whitespace drift (`"LW"`, `"lw "`) is a caller bug we want surfaced,
+    /// not silently accepted.
+    pub fn from_key(s: &str) -> anyhow::Result<Mode> {
+        match s {
+            "lw" => Ok(Mode::Lw),
+            "dch" => Ok(Mode::Dch),
+            other => anyhow::bail!("unknown mode {other:?} (expected \"lw\" or \"dch\")"),
+        }
+    }
 }
 
 const EPS: f32 = 1e-12;
 
-fn pos(v: f32) -> f32 {
+pub(crate) fn pos(v: f32) -> f32 {
     v.abs() + EPS
 }
 
@@ -111,7 +123,7 @@ fn fq_kernel(w: &Tensor, s_l: &Option<Vec<f32>>, s_r: &[f32]) -> Tensor {
     }
 }
 
-fn act_range(arch: &ArchSpec, v: usize) -> (f32, f32) {
+pub(crate) fn act_range(arch: &ArchSpec, v: usize) -> (f32, f32) {
     if arch.signed_of(v) {
         (-crate::ACT_SIGNED_QMAX, crate::ACT_SIGNED_QMAX)
     } else {
@@ -119,7 +131,7 @@ fn act_range(arch: &ArchSpec, v: usize) -> (f32, f32) {
     }
 }
 
-fn sv_of(tm: &ParamMap, v: usize) -> Vec<f32> {
+pub(crate) fn sv_of(tm: &ParamMap, v: usize) -> Vec<f32> {
     tm.get(&format!("sv:{v}")).data.iter().map(|&x| pos(x)).collect()
 }
 
@@ -189,7 +201,7 @@ pub fn forward_fakequant(
 // ------------------------------------------------------------------ deployed
 
 /// Integer weight codes on the Eq. 2 grid (outer-product or per-out-channel).
-fn kernel_codes(w: &Tensor, s_l: &Option<Vec<f32>>, s_r: &[f32]) -> Tensor {
+pub(crate) fn kernel_codes(w: &Tensor, s_l: &Option<Vec<f32>>, s_r: &[f32]) -> Tensor {
     match s_l {
         Some(l) => {
             let (cin, cout) = (w.shape[2], w.shape[3]);
@@ -218,7 +230,7 @@ fn kernel_codes(w: &Tensor, s_l: &Option<Vec<f32>>, s_r: &[f32]) -> Tensor {
     }
 }
 
-fn act_scalar(act: &str, v: f32) -> f32 {
+pub(crate) fn act_scalar(act: &str, v: f32) -> f32 {
     match act {
         "relu" => v.max(0.0),
         "relu6" => v.clamp(0.0, 6.0),
@@ -271,6 +283,7 @@ enum PreparedOp {
 /// a batch into per-chunk sub-batches; each chunk owns one child scratch
 /// from `par` (plus its `input` staging tensor), so chunks never share a
 /// buffer and the same warm-buffer guarantee holds per chunk.
+#[derive(Default)]
 pub struct DeployScratch {
     vals: HashMap<usize, Tensor>,
     conv: ConvScratch,
@@ -281,19 +294,10 @@ pub struct DeployScratch {
     par: Vec<DeployScratch>,
 }
 
-impl Default for DeployScratch {
-    fn default() -> Self {
-        DeployScratch {
-            vals: HashMap::new(),
-            conv: ConvScratch::new(),
-            dec: Tensor { shape: vec![0], data: Vec::new() },
-            input: Tensor::default(),
-            par: Vec::new(),
-        }
-    }
-}
-
 impl DeployScratch {
+    /// The one constructor: zero-state comes from the field types' own
+    /// `Default`s (derived), so adding a scratch field cannot silently
+    /// diverge between `new()` and `default()` — they are the same code.
     pub fn new() -> Self {
         Self::default()
     }
@@ -301,6 +305,85 @@ impl DeployScratch {
 
 fn take_val(vals: &mut HashMap<usize, Tensor>, id: usize) -> Tensor {
     vals.remove(&id).unwrap_or(Tensor { shape: vec![0], data: Vec::new() })
+}
+
+/// Scratch types that can host one batch chunk of the shared batch-parallel
+/// driver ([`exec_batch_par_generic`]): each chunk stages its sub-batch
+/// input in a buffer owned by its child scratch (allocation-free once warm).
+pub(crate) trait ChunkScratch: Default + Send {
+    /// The chunk's input staging tensor (taken for the task, restored after).
+    fn input_buf(&mut self) -> &mut Tensor;
+}
+
+impl ChunkScratch for DeployScratch {
+    fn input_buf(&mut self) -> &mut Tensor {
+        &mut self.input
+    }
+}
+
+/// Batch-level parallel driver shared by every backend whose per-image
+/// execution is independent ([`DeployedModel`] and the i8 engine): split
+/// the batch into contiguous image chunks, run `exec` per chunk on its own
+/// child scratch from `par`, and concatenate per-chunk outputs in order.
+/// Because batched and single-image execution are bit-exactly equal per
+/// image, the concatenation equals the serial full-batch result bit for
+/// bit — ONE copy of that argument and of the chunking/staging/concat
+/// machinery, so the backends cannot drift.
+pub(crate) fn exec_batch_par_generic<S: ChunkScratch>(
+    x: &Tensor,
+    num_classes: usize,
+    want_feat: bool,
+    pool: &Pool,
+    par: &mut Vec<S>,
+    exec: impl Fn(&Tensor, &mut S, bool) -> (Tensor, Option<Tensor>) + Sync,
+) -> (Tensor, Option<Tensor>) {
+    let b = x.shape[0];
+    let px = x.data.len() / b;
+    let ranges = crate::par::chunk_ranges(b, pool.threads(), 1);
+    let nch = ranges.len();
+    if par.len() < nch {
+        par.resize_with(nch, S::default);
+    }
+    let mut parts: Vec<Option<(Tensor, Option<Tensor>)>> = Vec::with_capacity(nch);
+    parts.resize_with(nch, || None);
+    {
+        let children = &mut par[..nch];
+        let exec = &exec;
+        let mut tasks: Vec<crate::par::ScopedTask<'_>> = Vec::with_capacity(nch);
+        for ((child, slot), r) in children.iter_mut().zip(parts.iter_mut()).zip(ranges) {
+            let xdata = &x.data[r.start * px..r.end * px];
+            let (bh, bw, bc) = (x.shape[1], x.shape[2], x.shape[3]);
+            let bn = r.end - r.start;
+            tasks.push(Box::new(move || {
+                // stage the sub-batch in the child's own input buffer
+                // (allocation-free once warm), then run the serial path
+                let mut xin = std::mem::take(child.input_buf());
+                xin.shape.clear();
+                xin.shape.extend_from_slice(&[bn, bh, bw, bc]);
+                xin.data.clear();
+                xin.data.extend_from_slice(xdata);
+                *slot = Some(exec(&xin, child, want_feat));
+                *child.input_buf() = xin;
+            }));
+        }
+        pool.scope(tasks);
+    }
+    let mut logits_data = Vec::with_capacity(b * num_classes);
+    let mut feat_data = Vec::new();
+    let mut feat_dims = [0usize; 3];
+    for part in parts {
+        let (l, f) = part.expect("parallel batch chunk produced no result");
+        logits_data.extend_from_slice(&l.data);
+        if want_feat {
+            let f = f.expect("arch has gap");
+            feat_dims = [f.shape[1], f.shape[2], f.shape[3]];
+            feat_data.extend_from_slice(&f.data);
+        }
+    }
+    let logits = Tensor::new(vec![b, num_classes], logits_data);
+    let feat = want_feat
+        .then(|| Tensor::new(vec![b, feat_dims[0], feat_dims[1], feat_dims[2]], feat_data));
+    (logits, feat)
 }
 
 /// A network lowered for deployment: every constant the online subgraph needs
@@ -499,12 +582,11 @@ impl DeployedModel {
         self.exec(x, scratch, want_feat, Some(pool))
     }
 
-    /// Batch-level parallel exec: contiguous image chunks run the serial
-    /// per-image pipeline concurrently, each on its own child scratch, and
-    /// the per-chunk outputs are concatenated in order.  Because batched
-    /// and single-image execution are bit-exactly equal per image (the PR 1
-    /// invariant, kept under test), the concatenation equals the serial
-    /// full-batch result bit for bit.
+    /// Batch-level parallel exec via the shared [`exec_batch_par_generic`]
+    /// driver: contiguous image chunks run the serial per-image pipeline
+    /// concurrently, each on its own child scratch, and the per-chunk
+    /// outputs are concatenated in order (bit-identical to the serial full
+    /// batch — the PR 1 invariant, kept under test).
     fn exec_batch_par(
         &self,
         x: &Tensor,
@@ -512,53 +594,14 @@ impl DeployedModel {
         want_feat: bool,
         pool: &Pool,
     ) -> (Tensor, Option<Tensor>) {
-        let b = x.shape[0];
-        let px = x.data.len() / b;
-        let ranges = crate::par::chunk_ranges(b, pool.threads(), 1);
-        let nch = ranges.len();
-        if scratch.par.len() < nch {
-            scratch.par.resize_with(nch, DeployScratch::new);
-        }
-        let mut parts: Vec<Option<(Tensor, Option<Tensor>)>> = Vec::with_capacity(nch);
-        parts.resize_with(nch, || None);
-        {
-            let children = &mut scratch.par[..nch];
-            let mut tasks: Vec<crate::par::ScopedTask<'_>> = Vec::with_capacity(nch);
-            for ((child, slot), r) in children.iter_mut().zip(parts.iter_mut()).zip(ranges) {
-                let xdata = &x.data[r.start * px..r.end * px];
-                let (bh, bw, bc) = (x.shape[1], x.shape[2], x.shape[3]);
-                let bn = r.end - r.start;
-                tasks.push(Box::new(move || {
-                    // stage the sub-batch in the child's own input buffer
-                    // (allocation-free once warm), then run the serial path
-                    let mut xin = std::mem::take(&mut child.input);
-                    xin.shape.clear();
-                    xin.shape.extend_from_slice(&[bn, bh, bw, bc]);
-                    xin.data.clear();
-                    xin.data.extend_from_slice(xdata);
-                    *slot = Some(self.exec(&xin, child, want_feat, None));
-                    child.input = xin;
-                }));
-            }
-            pool.scope(tasks);
-        }
-        let mut logits_data = Vec::with_capacity(b * self.num_classes);
-        let mut feat_data = Vec::new();
-        let mut feat_dims = [0usize; 3];
-        for part in parts {
-            let (l, f) = part.expect("parallel batch chunk produced no result");
-            logits_data.extend_from_slice(&l.data);
-            if want_feat {
-                let f = f.expect("arch has gap");
-                feat_dims = [f.shape[1], f.shape[2], f.shape[3]];
-                feat_data.extend_from_slice(&f.data);
-            }
-        }
-        let logits = Tensor::new(vec![b, self.num_classes], logits_data);
-        let feat = want_feat.then(|| {
-            Tensor::new(vec![b, feat_dims[0], feat_dims[1], feat_dims[2]], feat_data)
-        });
-        (logits, feat)
+        exec_batch_par_generic(
+            x,
+            self.num_classes,
+            want_feat,
+            pool,
+            &mut scratch.par,
+            |xin, child, wf| self.exec(xin, child, wf, None),
+        )
     }
 
     fn exec(

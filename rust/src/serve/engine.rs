@@ -1,16 +1,20 @@
 //! The serving engine: a std-thread worker pool executing dynamic
-//! micro-batches through the frozen integer deployment path.
+//! micro-batches through any frozen [`crate::backend::PreparedNet`].
 //!
-//! Each worker owns one [`DeployScratch`] plus an input staging buffer for
-//! its whole lifetime, so a warm worker executes
-//! [`crate::quant::deploy::DeployedModel::forward_batch_pooled`] with zero
-//! hot-path allocation beyond the per-reply logits rows.  All workers
-//! submit their parallel conv/GEMM scopes to the ONE process-wide
-//! [`crate::par::global`] pool (sized by `--threads`), so a large
-//! micro-batch fans out across the machine while concurrent workers
-//! cooperate on the same worker set instead of oversubscribing it — and
-//! because the parallel kernels are bit-identical to their serial twins,
-//! replies do not depend on the pool width.
+//! Each worker owns one [`crate::backend::Scratch`] plus an input staging
+//! buffer for its whole lifetime, so a warm worker executes
+//! [`crate::backend::PreparedNet::forward_batch`] with zero hot-path
+//! allocation beyond the per-reply logits rows on the deployment grids
+//! (`lw` / `dch` / `lw-i8`; the `fp` / fake-quant reference grids allocate
+//! per call — see [`crate::backend::Scratch`]) — and because the registry
+//! stores trait objects, ONE engine serves fp, fake-quant, integer and
+//! `lw-i8` models side by side.  All workers submit their parallel
+//! conv/GEMM scopes to the ONE process-wide [`crate::par::global`] pool
+//! (sized by `--threads`), so a large micro-batch fans out across the
+//! machine while concurrent workers cooperate on the same worker set
+//! instead of oversubscribing it — and because every backend's parallel
+//! path is bit-identical to its serial twin, replies do not depend on the
+//! pool width.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
@@ -19,7 +23,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
-use crate::quant::deploy::DeployScratch;
+use crate::backend::Scratch;
 use crate::serve::batcher::{BatchPolicy, Batcher, InferReply, InferRequest};
 use crate::serve::registry::Registry;
 use crate::serve::stats::{ServeReport, ServeStats};
@@ -173,11 +177,11 @@ impl Client {
     }
 }
 
-/// Worker body: assemble → stack → batched integer forward → reply.
+/// Worker body: assemble → stack → batched backend forward → reply.
 /// Returns the number of batches it executed (join-side diagnostic).
 fn worker_loop(reg: &Registry, batcher: &Batcher, stats: &ServeStats, adaptive: bool) -> u64 {
     let pool = crate::par::global();
-    let mut scratch = DeployScratch::new();
+    let mut scratch = Scratch::new();
     let mut staging: Vec<f32> = Vec::new();
     let mut latencies: Vec<Duration> = Vec::new();
     let mut executed = 0u64;
@@ -211,13 +215,13 @@ fn worker_loop(reg: &Registry, batcher: &Batcher, stats: &ServeStats, adaptive: 
             staging.extend_from_slice(&r.image);
         }
         let x = Tensor::new(
-            vec![n, model.input_hw, model.input_hw, model.input_ch],
+            vec![n, model.input_hw(), model.input_hw(), model.input_ch()],
             std::mem::take(&mut staging),
         );
-        let logits = model.forward_batch_pooled(&x, &mut scratch, pool);
+        let logits = model.forward_batch(&x, &mut scratch, pool);
         staging = x.data; // reclaim the staging buffer
         let done = Instant::now();
-        let nc = model.num_classes;
+        let nc = model.num_classes();
         let top1s = logits.argmax_lastdim();
         latencies.clear();
         for (i, req) in batch.into_iter().enumerate() {

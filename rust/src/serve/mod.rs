@@ -5,9 +5,11 @@
 //! constant from the trained DoF set; *online*, run the cheap frozen integer
 //! graph.  This module is the online half grown into a serving engine:
 //!
-//! * [`registry`] — [`Registry`]: `(arch × mode)` → [`DeployedModel`]
-//!   with all constants frozen at load time (weights resolved from
-//!   `repro qft` exports, the cached FP teacher, or he-init smoke weights).
+//! * [`registry`] — [`Registry`]: `(arch × backend)` → frozen
+//!   [`crate::backend::PreparedNet`] trait objects, all constants derived
+//!   at load time (weights resolved from `repro qft` exports, the cached
+//!   FP teacher, or he-init smoke weights).  One engine serves any
+//!   [`crate::backend::BackendKind`] — `fp`, fake-quant, integer, `lw-i8`.
 //! * [`batcher`] — [`Batcher`]: bounded request queue with dynamic
 //!   micro-batch assembly under a max-batch / max-wait policy and
 //!   blocking backpressure.  The policy is *pool-aware*
@@ -16,8 +18,8 @@
 //!   it when the pool is saturated, trading latency against throughput
 //!   from live load instead of a fixed knob.
 //! * [`engine`] — [`Engine`]: std-thread worker pool; each worker owns a
-//!   [`crate::quant::deploy::DeployScratch`] so steady-state execution
-//!   does not allocate, and submits its conv/GEMM work to the process-wide
+//!   [`crate::backend::Scratch`] so steady-state execution does not
+//!   allocate, and submits its conv/GEMM work to the process-wide
 //!   [`crate::par`] pool (shared with the integer eval path, so callers
 //!   cooperate instead of oversubscribing); [`run_closed_loop`] is the
 //!   load-generator used by `repro bench-serve` and the `serve_throughput`

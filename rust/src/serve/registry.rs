@@ -1,19 +1,25 @@
-//! Model registry: `(arch × mode)` → frozen deployment constants.
+//! Model registry: `(arch × backend)` → frozen execution state.
 //!
 //! All offline-subgraph work (kernel co-vectors, integer weight/bias codes,
-//! recode factors) happens here at load time via
-//! [`DeployedModel::prepare`]; serving workers only ever touch the frozen
-//! [`DeployedModel`]s through immutable references, so the hot path is
-//! lock-free and never re-derives a constant.
+//! i8 panel packing, recode factors) happens here at load time via
+//! [`crate::backend::Backend::prepare`]; serving workers only ever touch
+//! the frozen [`PreparedNet`]s through immutable references, so the hot
+//! path is lock-free and never re-derives a constant.  The registry is
+//! backend-agnostic: one engine serves `fp`, fake-quant, integer and
+//! `lw-i8` models side by side.
 //!
 //! Weight resolution per model, in order:
 //! 1. `{artifacts}/weights/{arch}.{mode}.qftw` — the trainable set exported
-//!    by `repro qft` (the real deployment artifact);
+//!    by `repro qft` (the real deployment artifact; `lw-i8` shares the `lw`
+//!    export — same DoF, different engine);
 //! 2. `{artifacts}/weights/{arch}.qftw` — the cached FP teacher, pushed
 //!    through the offline PTQ init (naive-max calibration on the synthetic
 //!    calib split + MMSE weight scales);
 //! 3. He-init weights through the same PTQ init — accuracy is meaningless
 //!    but every serving code path still runs (smoke/bench mode).
+//!
+//! The `fp` backend consumes raw FP parameters, so it resolves the teacher
+//! file (2) directly, else he-init, with no PTQ init.
 
 use std::collections::HashMap;
 use std::path::Path;
@@ -21,22 +27,23 @@ use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
+use crate::backend::{self, BackendKind, PreparedNet};
 use crate::coordinator::{state, weights_io};
 use crate::data::{Dataset, Split};
 use crate::nn::ArchSpec;
-use crate::quant::deploy::{DeployedModel, Mode};
+use crate::quant::deploy::Mode;
 use crate::runtime::manifest::Manifest;
 
-/// One loaded deployment plus its provenance.
+/// One loaded model plus its provenance.
 pub struct ModelEntry {
-    /// `"arch/mode"`, the wire name clients resolve.
+    /// `"arch/backend-key"`, the wire name clients resolve.
     pub key: String,
-    pub model: DeployedModel,
+    pub model: Box<dyn PreparedNet>,
     /// Where the weights came from (export / teacher / he-init).
     pub source: String,
 }
 
-/// Immutable collection of deployed models, shared by all workers.
+/// Immutable collection of prepared models, shared by all workers.
 #[derive(Default)]
 pub struct Registry {
     entries: Vec<ModelEntry>,
@@ -65,7 +72,7 @@ impl Registry {
         self.entries.get(slot)
     }
 
-    /// Slot for a `"arch/mode"` key.
+    /// Slot for a `"arch/backend-key"` key.
     pub fn resolve(&self, key: &str) -> Option<usize> {
         self.by_key.get(key).copied()
     }
@@ -82,15 +89,16 @@ impl Registry {
         self.entries.iter().map(|e| e.key.as_str())
     }
 
-    /// Load `(arch name, mode)` pairs from an artifacts dir into a shareable
-    /// registry.  Arch specs come from the AOT manifest when present; the
-    /// name `"synthetic"` (or any name when no manifest exists) falls back
-    /// to [`crate::serve::synthetic_arch`] so serving runs artifact-free.
-    pub fn load(dir: &Path, specs: &[(String, Mode)]) -> Result<Arc<Registry>> {
+    /// Load `(arch name, backend)` pairs from an artifacts dir into a
+    /// shareable registry.  Arch specs come from the AOT manifest when
+    /// present; the name `"synthetic"` (or any name when no manifest
+    /// exists) falls back to [`crate::serve::synthetic_arch`] so serving
+    /// runs artifact-free.
+    pub fn load(dir: &Path, specs: &[(String, BackendKind)]) -> Result<Arc<Registry>> {
         anyhow::ensure!(!specs.is_empty(), "registry: no models requested");
         let manifest = Manifest::load(dir.join("manifest.json")).ok();
         let mut reg = Registry::new();
-        for (name, mode) in specs {
+        for (name, kind) in specs {
             let arch: ArchSpec = match &manifest {
                 Some(m) => match m.archs.get(name) {
                     Some(a) => a.clone(),
@@ -112,7 +120,7 @@ impl Registry {
                     a
                 }
             };
-            let entry = load_model(dir, &arch, *mode)?;
+            let entry = load_model(dir, &arch, *kind)?;
             if reg.resolve(&entry.key).is_some() {
                 bail!("model {} requested twice", entry.key);
             }
@@ -123,37 +131,55 @@ impl Registry {
     }
 }
 
-/// Resolve weights for one arch × mode and lower them to a [`DeployedModel`].
-pub fn load_model(dir: &Path, arch: &ArchSpec, mode: Mode) -> Result<ModelEntry> {
-    let key = format!("{}/{}", arch.name, mode.key());
-    let export = dir.join("weights").join(format!("{}.{}.qftw", arch.name, mode.key()));
-    let (tm, source) = if export.is_file() {
-        (weights_io::load(&export)?, format!("qft export {export:?}"))
-    } else {
-        let teacher = dir.join("weights").join(format!("{}.qftw", arch.name));
-        let (params, source) = if teacher.is_file() {
-            (
-                weights_io::load(&teacher)?,
-                format!("fp teacher {teacher:?} + offline PTQ init"),
-            )
-        } else {
-            (
-                state::he_init_params(arch, 0),
-                "he-init + offline PTQ init (untrained: smoke/bench only)".to_string(),
-            )
-        };
-        let ds = Dataset::new(0);
-        let batches: Vec<_> = (0..4)
-            .map(|i| ds.batch(Split::Calib, (i * arch.batch) as u64, arch.batch).0)
-            .collect();
-        let absmax = state::absmax_from_rust_forward(arch, &params, &batches);
-        let winit = match mode {
-            Mode::Lw => state::WeightScaleInit::Uniform,
-            Mode::Dch => state::WeightScaleInit::DoublyChannelwise,
-        };
-        (state::init_trainables(arch, &params, &absmax, mode, winit, None), source)
+/// Resolve weights for one arch × backend and freeze them behind the
+/// uniform [`PreparedNet`] contract.
+pub fn load_model(dir: &Path, arch: &ArchSpec, kind: BackendKind) -> Result<ModelEntry> {
+    let key = format!("{}/{}", arch.name, kind.key());
+    let teacher = dir.join("weights").join(format!("{}.qftw", arch.name));
+    let (params, source) = match kind.mode() {
+        // quantized grids consume the mode's trainable set
+        Some(mode) => {
+            let export =
+                dir.join("weights").join(format!("{}.{}.qftw", arch.name, mode.key()));
+            if export.is_file() {
+                (weights_io::load(&export)?, format!("qft export {export:?}"))
+            } else {
+                let (params, source) = if teacher.is_file() {
+                    (
+                        weights_io::load(&teacher)?,
+                        format!("fp teacher {teacher:?} + offline PTQ init"),
+                    )
+                } else {
+                    (
+                        state::he_init_params(arch, 0),
+                        "he-init + offline PTQ init (untrained: smoke/bench only)".to_string(),
+                    )
+                };
+                let ds = Dataset::new(0);
+                let batches: Vec<_> = (0..4)
+                    .map(|i| ds.batch(Split::Calib, (i * arch.batch) as u64, arch.batch).0)
+                    .collect();
+                let absmax = state::absmax_from_rust_forward(arch, &params, &batches);
+                let winit = match mode {
+                    Mode::Lw => state::WeightScaleInit::Uniform,
+                    Mode::Dch => state::WeightScaleInit::DoublyChannelwise,
+                };
+                (state::init_trainables(arch, &params, &absmax, mode, winit, None), source)
+            }
+        }
+        // the fp grid runs raw FP parameters — no PTQ init
+        None => {
+            if teacher.is_file() {
+                (weights_io::load(&teacher)?, format!("fp teacher {teacher:?}"))
+            } else {
+                (
+                    state::he_init_params(arch, 0),
+                    "he-init (untrained: smoke/bench only)".to_string(),
+                )
+            }
+        }
     };
-    Ok(ModelEntry { key, model: DeployedModel::prepare(arch, &tm, mode), source })
+    Ok(ModelEntry { key, model: backend::prepare(kind, arch, &params), source })
 }
 
 #[cfg(test)]
@@ -165,12 +191,31 @@ mod tests {
         let dir = std::env::temp_dir().join("qft_registry_test_nonexistent");
         let reg = Registry::load(
             &dir,
-            &[("synthetic".to_string(), Mode::Lw), ("synthetic".to_string(), Mode::Dch)],
+            &[
+                ("synthetic".to_string(), BackendKind::Int(Mode::Lw)),
+                ("synthetic".to_string(), BackendKind::Int(Mode::Dch)),
+            ],
         )
         .unwrap();
         assert_eq!(reg.len(), 2);
         assert_eq!(reg.resolve("synthetic/lw"), Some(0));
         assert_eq!(reg.resolve("synthetic/dch"), Some(1));
         assert_eq!(reg.get(0).model.image_len(), 16 * 16 * 3);
+    }
+
+    #[test]
+    fn every_backend_kind_loads_artifact_free() {
+        let dir = std::env::temp_dir().join("qft_registry_test_nonexistent");
+        let specs: Vec<(String, BackendKind)> = BackendKind::ALL
+            .iter()
+            .map(|k| ("synthetic".to_string(), *k))
+            .collect();
+        let reg = Registry::load(&dir, &specs).unwrap();
+        assert_eq!(reg.len(), BackendKind::ALL.len());
+        for kind in BackendKind::ALL {
+            let slot = reg.resolve(&format!("synthetic/{}", kind.key())).unwrap();
+            assert_eq!(reg.get(slot).model.kind(), kind);
+            assert_eq!(reg.get(slot).model.image_len(), 16 * 16 * 3);
+        }
     }
 }

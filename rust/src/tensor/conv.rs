@@ -26,8 +26,9 @@
 use super::{size_for_write, Tensor};
 use crate::kernel::{self, PackedW};
 
-/// SAME-padding output size for stride s.
-fn out_dim(i: usize, s: usize) -> usize {
+/// SAME-padding output size for stride s (shared with the i8 deployment
+/// backend, which must agree on geometry with the f32 paths exactly).
+pub(crate) fn out_dim(i: usize, s: usize) -> usize {
     i.div_ceil(s)
 }
 
@@ -145,12 +146,36 @@ fn im2col_rows_into(
     rows: std::ops::Range<usize>,
     cols: &mut Vec<f32>,
 ) {
-    let (h, w, cin) = (x.shape[1], x.shape[2], x.shape[3]);
+    im2col_rows_generic(
+        &x.data, x.shape[1], x.shape[2], x.shape[3], k, stride, c0, cg, rows, 0.0, cols,
+    );
+}
+
+/// Element-type-generic im2col core behind [`im2col_rows_into`] and the i8
+/// deployment backend's code-tensor im2col: ONE copy of the SAME-padding /
+/// patch-index arithmetic, so the f32 and integer grids cannot drift
+/// geometrically.  `fill` is the padding value — `0.0` for FP tensors, the
+/// negated zero-point for offset i8 codes (so padded positions decode to
+/// activation code 0).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn im2col_rows_generic<T: Copy>(
+    data: &[T],
+    h: usize,
+    w: usize,
+    cin: usize,
+    k: usize,
+    stride: usize,
+    c0: usize,
+    cg: usize,
+    rows: std::ops::Range<usize>,
+    fill: T,
+    cols: &mut Vec<T>,
+) {
     let (oh, ow) = (out_dim(h, stride), out_dim(w, stride));
     let pad_top = ((oh - 1) * stride + k).saturating_sub(h) / 2;
     let pad_left = ((ow - 1) * stride + k).saturating_sub(w) / 2;
     cols.clear();
-    cols.resize((rows.end - rows.start) * k * k * cg, 0.0);
+    cols.resize((rows.end - rows.start) * k * k * cg, fill);
     let mut idx = 0;
     for row in rows {
         let bi = row / (oh * ow);
@@ -162,7 +187,7 @@ fn im2col_rows_into(
                 let ix = (ox * stride + kx) as isize - pad_left as isize;
                 if iy >= 0 && (iy as usize) < h && ix >= 0 && (ix as usize) < w {
                     let base = ((bi * h + iy as usize) * w + ix as usize) * cin + c0;
-                    cols[idx..idx + cg].copy_from_slice(&x.data[base..base + cg]);
+                    cols[idx..idx + cg].copy_from_slice(&data[base..base + cg]);
                 }
                 idx += cg;
             }

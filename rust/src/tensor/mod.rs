@@ -186,14 +186,16 @@ impl Tensor {
 }
 
 /// Resize `buf` to exactly `len` elements without zero-filling a buffer
-/// that is already the right size — the write-mode [`crate::kernel::gemm`]
-/// overwrites every element, so the historical clear-then-zero pass is
-/// needed only when the length actually changes.  Shared by the matmul
-/// entry points here and the conv paths in [`conv`].
-pub(crate) fn size_for_write(buf: &mut Vec<f32>, len: usize) {
+/// that is already the right size — the write-mode kernels
+/// ([`crate::kernel::gemm`], [`crate::kernel::gemm_i8`]) overwrite every
+/// element, so the historical clear-then-zero pass is needed only when the
+/// length actually changes.  ONE copy of the warm-buffer rule, shared by
+/// the matmul entry points here, the conv paths in [`conv`], and the i8
+/// deployment backend's i32 accumulators.
+pub(crate) fn size_for_write<T: Copy + Default>(buf: &mut Vec<T>, len: usize) {
     if buf.len() != len {
         buf.clear();
-        buf.resize(len, 0.0);
+        buf.resize(len, T::default());
     }
 }
 

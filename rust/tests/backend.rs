@@ -1,0 +1,263 @@
+//! Backend parity suite: every [`BackendKind`] behind the unified
+//! `qft::backend` trait must produce bit-identical results to its
+//! pre-refactor twin (the free functions it re-homed), at 1/2/8 threads —
+//! plus the `lw-i8` agreement, batch-invariance and NaN/Inf masking
+//! contracts for the new integer engine.
+//!
+//! Everything is hermetic (built-in synthetic arch, no AOT artifacts).
+
+use std::path::Path;
+use std::time::Duration;
+
+use qft::backend::{self, BackendKind, Scratch};
+use qft::coordinator::state;
+use qft::data::{Dataset, Split};
+use qft::nn::fp_forward;
+use qft::par::Pool;
+use qft::quant::deploy::{forward_fakequant, forward_integer, forward_integer_batch, Mode};
+use qft::serve::{synthetic_arch, synthetic_trainables, Engine, Registry, ServeConfig};
+use qft::Tensor;
+
+const THREADS: &[usize] = &[1, 2, 8];
+
+fn bits(t: &Tensor) -> Vec<u32> {
+    t.data.iter().map(|v| v.to_bits()).collect()
+}
+
+fn val_batch(n: usize, seed: u64) -> Tensor {
+    Dataset::new(seed).batch(Split::Val, 0, n).0
+}
+
+#[test]
+fn fp_backend_is_bit_identical_to_fp_forward() {
+    let arch = synthetic_arch();
+    let params = state::he_init_params(&arch, 11);
+    let x = val_batch(5, 4);
+    let want = fp_forward(&arch, &params, &x);
+    let net = backend::prepare(BackendKind::Fp, &arch, &params);
+    for &t in THREADS {
+        let pool = Pool::new(t);
+        let mut scratch = Scratch::new();
+        let (logits, feat) = net.forward_batch_feat(&x, &mut scratch, &pool);
+        assert_eq!(bits(&want.logits), bits(&logits), "fp logits, {t} threads");
+        assert_eq!(bits(&want.feat), bits(&feat), "fp feat, {t} threads");
+        assert_eq!(bits(&logits), bits(&net.forward_batch(&x, &mut scratch, &pool)));
+    }
+}
+
+#[test]
+fn fakequant_backend_is_bit_identical_to_forward_fakequant() {
+    for mode in [Mode::Lw, Mode::Dch] {
+        let (arch, tm) = synthetic_trainables(mode, 7);
+        let x = val_batch(5, 5);
+        let (wl, wf) = forward_fakequant(&arch, &tm, mode, &x);
+        let net = backend::prepare(BackendKind::FakeQuant(mode), &arch, &tm);
+        assert_eq!(net.kind(), BackendKind::FakeQuant(mode));
+        for &t in THREADS {
+            let pool = Pool::new(t);
+            let mut scratch = Scratch::new();
+            let (logits, feat) = net.forward_batch_feat(&x, &mut scratch, &pool);
+            assert_eq!(bits(&wl), bits(&logits), "{mode:?} logits, {t} threads");
+            assert_eq!(bits(&wf), bits(&feat), "{mode:?} feat, {t} threads");
+        }
+    }
+}
+
+#[test]
+fn int_backend_is_bit_identical_to_pre_refactor_integer_path() {
+    for mode in [Mode::Lw, Mode::Dch] {
+        let (arch, tm) = synthetic_trainables(mode, 42);
+        let x = val_batch(6, 1);
+        // the pre-refactor twin the serving/eval paths used to call
+        let want = forward_integer_batch(&arch, &tm, mode, &x, None);
+        let (wl_feat, wf) = forward_integer(&arch, &tm, mode, &x, None);
+        assert_eq!(bits(&want), bits(&wl_feat));
+        let net = backend::prepare(BackendKind::Int(mode), &arch, &tm);
+        for &t in THREADS {
+            let pool = Pool::new(t);
+            let mut scratch = Scratch::new();
+            let got = net.forward_batch(&x, &mut scratch, &pool);
+            assert_eq!(bits(&want), bits(&got), "{mode:?} logits, {t} threads");
+            // warm-scratch rerun must not drift
+            let again = net.forward_batch(&x, &mut scratch, &pool);
+            assert_eq!(bits(&got), bits(&again), "{mode:?} warm rerun, {t} threads");
+            let (_, feat) = net.forward_batch_feat(&x, &mut scratch, &pool);
+            assert_eq!(bits(&wf), bits(&feat), "{mode:?} feat, {t} threads");
+        }
+    }
+}
+
+#[test]
+fn int8_backend_tracks_int_lw_and_is_thread_invariant() {
+    let (arch, tm) = synthetic_trainables(Mode::Lw, 3);
+    let x = val_batch(8, 9);
+    let int_net = backend::prepare(BackendKind::Int(Mode::Lw), &arch, &tm);
+    let i8_net = backend::prepare(BackendKind::Int8, &arch, &tm);
+    assert_eq!(i8_net.kind(), BackendKind::Int8);
+    assert_eq!(i8_net.image_len(), int_net.image_len());
+
+    let serial = Pool::new(1);
+    let want = int_net.forward_batch(&x, &mut Scratch::new(), &serial);
+    let base = i8_net.forward_batch(&x, &mut Scratch::new(), &serial);
+
+    // logits agreement: the i32 accumulator computes the exact integer sum
+    // the f32 path computes (exactly, at these magnitudes), so the grids
+    // must agree tightly — and must rank identically
+    for (i, (a, b)) in want.data.iter().zip(&base.data).enumerate() {
+        assert!(a.is_finite() && b.is_finite(), "logit {i}: {a} vs {b}");
+        let tol = 1e-4 * a.abs().max(b.abs()).max(1.0);
+        assert!((a - b).abs() <= tol, "logit {i}: lw {a} vs lw-i8 {b}");
+    }
+    assert_eq!(want.argmax_lastdim(), base.argmax_lastdim());
+
+    // thread invariance: the i8 batch-parallel path is bit-identical to its
+    // serial twin, warm or cold
+    for &t in THREADS {
+        let pool = Pool::new(t);
+        let mut scratch = Scratch::new();
+        let got = i8_net.forward_batch(&x, &mut scratch, &pool);
+        assert_eq!(bits(&base), bits(&got), "lw-i8 {t} threads");
+        let again = i8_net.forward_batch(&x, &mut scratch, &pool);
+        assert_eq!(bits(&base), bits(&again), "lw-i8 warm rerun, {t} threads");
+        let (logits, feat) = i8_net.forward_batch_feat(&x, &mut scratch, &pool);
+        assert_eq!(bits(&base), bits(&logits), "lw-i8 feat-path logits, {t} threads");
+        assert_eq!(feat.shape[3], arch.feat_channels);
+        assert!(feat.data.iter().all(|v| v.is_finite()));
+    }
+}
+
+#[test]
+fn int8_batch_split_points_do_not_change_results() {
+    let (arch, tm) = synthetic_trainables(Mode::Lw, 6);
+    let net = backend::prepare(BackendKind::Int8, &arch, &tm);
+    let pool = Pool::new(1);
+    let x = val_batch(6, 2);
+    let px = net.image_len();
+    let mut scratch = Scratch::new();
+    let all = net.forward_batch(&x, &mut scratch, &pool);
+    let nc = net.num_classes();
+    for i in 0..6 {
+        let xi = Tensor::new(
+            vec![1, arch.input_hw, arch.input_hw, arch.input_ch],
+            x.data[i * px..(i + 1) * px].to_vec(),
+        );
+        let li = net.forward_batch(&xi, &mut scratch, &pool);
+        assert_eq!(
+            &all.data[i * nc..(i + 1) * nc],
+            &li.data[..],
+            "image {i}: batched row != single-image logits"
+        );
+    }
+}
+
+#[test]
+fn zero_code_activations_mask_nonfinite_weights_in_both_integer_engines() {
+    // poison every w:conv0 tap that reads input channel 1 (NaN and ±inf),
+    // then feed inputs whose channel 1 is all-zero: ±inf clamps to the
+    // saturated codes ±7 on both grids, NaN survives into the f32 codes
+    // (masked by the kernel's zero-activation skip) but casts to the zero
+    // code on the i8 grid — with zero activations every poisoned tap
+    // contributes nothing either way, so both backends must yield finite,
+    // mutually consistent logits
+    let (arch, mut tm) = synthetic_trainables(Mode::Lw, 12);
+    {
+        let w = tm.get_mut("w:conv0");
+        let (cin, cout) = (w.shape[2], w.shape[3]);
+        assert_eq!(cin, 3);
+        for (idx, v) in w.data.iter_mut().enumerate() {
+            if (idx / cout) % cin == 1 {
+                *v = match idx % 3 {
+                    0 => f32::NAN,
+                    1 => f32::INFINITY,
+                    _ => f32::NEG_INFINITY,
+                };
+            }
+        }
+    }
+    let mut x = val_batch(4, 8);
+    let c = *x.shape.last().unwrap();
+    for (i, v) in x.data.iter_mut().enumerate() {
+        if i % c == 1 {
+            *v = 0.0;
+        }
+    }
+    let pool = Pool::new(2);
+    let int_net = backend::prepare(BackendKind::Int(Mode::Lw), &arch, &tm);
+    let i8_net = backend::prepare(BackendKind::Int8, &arch, &tm);
+    let li = int_net.forward_batch(&x, &mut Scratch::new(), &pool);
+    let l8 = i8_net.forward_batch(&x, &mut Scratch::new(), &pool);
+    assert!(li.data.iter().all(|v| v.is_finite()), "lw logits poisoned: {:?}", li.data);
+    assert!(l8.data.iter().all(|v| v.is_finite()), "lw-i8 logits poisoned: {:?}", l8.data);
+    for (i, (a, b)) in li.data.iter().zip(&l8.data).enumerate() {
+        let tol = 1e-4 * a.abs().max(b.abs()).max(1.0);
+        assert!((a - b).abs() <= tol, "logit {i}: lw {a} vs lw-i8 {b}");
+    }
+}
+
+#[test]
+fn engine_serves_lw_i8_end_to_end() {
+    // the acceptance path behind `repro serve --backend lw-i8`: registry →
+    // engine → replies, and replies equal the offline i8 forward
+    let registry = Registry::load(
+        Path::new("artifacts_nonexistent_for_test"),
+        &[("synthetic".to_string(), BackendKind::Int8)],
+    )
+    .unwrap();
+    assert_eq!(registry.resolve("synthetic/lw-i8"), Some(0));
+    let offline = {
+        let x = val_batch(8, 0);
+        registry.get(0).model.forward_batch(&x, &mut Scratch::new(), qft::par::global())
+    };
+    let engine = Engine::start(
+        registry,
+        &ServeConfig {
+            workers: 2,
+            max_batch: 4,
+            max_wait: Duration::from_micros(100),
+            ..Default::default()
+        },
+    );
+    let client = engine.client();
+    let ds = Dataset::new(0);
+    for i in 0..8usize {
+        let (img, _) = ds.sample(Split::Val, i as u64);
+        let rep = client.infer(0, img).unwrap();
+        let nc = rep.logits.len();
+        assert_eq!(
+            rep.logits,
+            offline.data[i * nc..(i + 1) * nc].to_vec(),
+            "request {i}"
+        );
+    }
+    engine.shutdown();
+}
+
+#[test]
+fn backend_keys_round_trip_and_reject_drift() {
+    for kind in BackendKind::ALL {
+        assert_eq!(BackendKind::from_key(kind.key()).unwrap(), kind);
+    }
+    for bad in ["LW", "DCH", "fq-LW", "FP", "lw-I8", "int", ""] {
+        assert!(BackendKind::from_key(bad).is_err(), "{bad:?} must not parse");
+    }
+    assert!(Mode::from_key("LW").is_err());
+    assert_eq!(Mode::from_key("dch").unwrap(), Mode::Dch);
+}
+
+#[test]
+fn eval_backend_covers_every_kind() {
+    let arch = synthetic_arch();
+    for kind in BackendKind::ALL {
+        let acc = match kind.mode() {
+            Some(mode) => {
+                let (arch, tm) = synthetic_trainables(mode, 0);
+                qft::coordinator::eval::eval_backend(&arch, &tm, kind, 32, 0)
+            }
+            None => {
+                let params = state::he_init_params(&arch, 0);
+                qft::coordinator::eval::eval_backend(&arch, &params, kind, 32, 0)
+            }
+        };
+        assert!((0.0..=1.0).contains(&acc), "{}: {acc}", kind.key());
+    }
+}

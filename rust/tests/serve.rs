@@ -9,6 +9,7 @@ use std::path::Path;
 use std::sync::Mutex;
 use std::time::Duration;
 
+use qft::backend::BackendKind;
 use qft::data::{Dataset, Split};
 use qft::nn::{ArchSpec, ParamMap};
 use qft::quant::deploy::{
@@ -87,7 +88,7 @@ fn engine_neither_drops_nor_duplicates_under_contention() {
     // all under stress; every request must get exactly one reply
     let registry = Registry::load(
         Path::new("artifacts_nonexistent_for_test"),
-        &[("synthetic".to_string(), Mode::Lw)],
+        &[("synthetic".to_string(), BackendKind::Int(Mode::Lw))],
     )
     .unwrap();
     let cfg = ServeConfig {
@@ -138,14 +139,14 @@ fn serving_replies_match_offline_batched_forward() {
     // the engine must return exactly what the offline deployment path returns
     let registry = Registry::load(
         Path::new("artifacts_nonexistent_for_test"),
-        &[("synthetic".to_string(), Mode::Lw)],
+        &[("synthetic".to_string(), BackendKind::Int(Mode::Lw))],
     )
     .unwrap();
     let model_logits = {
         let ds = Dataset::new(0);
         let (x, _, _) = ds.batch(Split::Val, 0, 8);
-        let mut scratch = DeployScratch::new();
-        registry.get(0).model.forward_batch(&x, &mut scratch)
+        let mut scratch = qft::backend::Scratch::new();
+        registry.get(0).model.forward_batch(&x, &mut scratch, qft::par::global())
     };
     let engine = Engine::start(registry, &ServeConfig::default());
     let client = engine.client();
@@ -171,7 +172,7 @@ fn adaptive_batching_does_not_change_replies() {
     // closed loop would pin every batch at size 1 and test nothing).
     let registry = Registry::load(
         Path::new("artifacts_nonexistent_for_test"),
-        &[("synthetic".to_string(), Mode::Lw)],
+        &[("synthetic".to_string(), BackendKind::Int(Mode::Lw))],
     )
     .unwrap();
     let clients = 6u64;
