@@ -1,6 +1,7 @@
 # QFT reproduction — build / verify entry points.
 
-.PHONY: check build test fmt artifacts bench bench-serve par-bench bench-gemm bench-smoke
+.PHONY: check build test fmt artifacts bench bench-serve par-bench bench-gemm bench-smoke \
+        bench-gate bench-baseline
 
 # Tier-1 verification: release build, full test suite, formatting.
 check:
@@ -48,3 +49,16 @@ bench-smoke:
 	QFT_BENCH_SMOKE=1 cargo bench --bench gemm_kernels
 	QFT_BENCH_SMOKE=1 cargo bench --bench par_kernels
 	QFT_BENCH_SMOKE=1 cargo bench --bench serve_throughput
+
+# Perf-regression gate: rerun the gemm + serve benches in their pinned
+# configuration, then compare the gated metrics (kernel speedup geomeans,
+# lw-i8 serving p50s) against the committed BENCH_baseline.json.  Fails on
+# a >15% regression (baseline `tolerance`, QFT_BENCH_GATE_TOL override);
+# emits a markdown delta table (and the CI job summary).
+bench-gate: bench-gemm bench-serve
+	cargo bench --bench bench_gate
+
+# Re-baseline the perf gate from a fresh local run on THIS machine
+# (review + commit the regenerated BENCH_baseline.json).
+bench-baseline: bench-gemm bench-serve
+	QFT_BENCH_WRITE_BASELINE=1 cargo bench --bench bench_gate

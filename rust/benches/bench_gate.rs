@@ -1,0 +1,278 @@
+//! Bench-regression gate — the comparator behind `make bench-gate` and the
+//! CI `bench-gate` job.
+//!
+//! Reads the freshly emitted `BENCH_gemm.json` + `BENCH_serve.json`,
+//! extracts the gated metrics (kernel speedup geomeans over the `resnet`
+//! and `largek` shape sets, i8-vs-f32 geomean, and the `lw-i8` serving
+//! p50s), compares each against the committed `BENCH_baseline.json`, and
+//! prints a markdown delta table (also appended to `$GITHUB_STEP_SUMMARY`
+//! when CI sets it).  A metric that regresses by more than the tolerance
+//! (baseline `tolerance` field, default 15%, `QFT_BENCH_GATE_TOL`
+//! override) fails the run with a non-zero exit.
+//!
+//! `QFT_BENCH_WRITE_BASELINE=1` re-baselines instead: the current run's
+//! values are written to `BENCH_baseline.json` for the operator to review
+//! and commit (`make bench-baseline`).  Smoke-mode numbers
+//! (`QFT_BENCH_SMOKE=1`) are refused — they are not comparable.
+
+#[path = "util/mod.rs"]
+mod util;
+
+use std::collections::HashMap;
+use std::fmt::Write as _;
+use std::io::Write as _;
+
+use anyhow::{anyhow, bail, Context};
+use qft::util::json::Value;
+
+/// Default regression tolerance when the baseline does not pin one.
+const DEFAULT_TOL: f64 = 0.15;
+
+/// One gated metric: a stable name, the direction that counts as better,
+/// and where in the bench JSONs its current value lives (see
+/// [`current_value`]).
+struct Metric {
+    name: &'static str,
+    higher_is_better: bool,
+    desc: &'static str,
+}
+
+const METRICS: &[Metric] = &[
+    Metric {
+        name: "gemm.resnet_geomean_speedup",
+        higher_is_better: true,
+        desc: "packed-vs-scalar GFLOP/s geomean, resnet shape set",
+    },
+    Metric {
+        name: "gemm.largek_geomean_speedup",
+        higher_is_better: true,
+        desc: "packed-vs-scalar GFLOP/s geomean, large-K (k >= 2048, KC-blocked) set",
+    },
+    Metric {
+        name: "gemm.resnet_geomean_i8_vs_f32",
+        higher_is_better: true,
+        desc: "i8-vs-f32 kernel geomean, resnet shape set",
+    },
+    Metric {
+        name: "serve.single_image_lw_i8_p50_us",
+        higher_is_better: false,
+        desc: "lw-i8 batch-1 forward p50 at 4 pool threads (intra-op path)",
+    },
+    Metric {
+        name: "serve.closed_loop_lw_i8_w4_p50_us",
+        higher_is_better: false,
+        desc: "lw-i8 closed-loop serving p50 at 4 workers",
+    },
+];
+
+/// Value of `key` from the gemm bench's `set == "summary"` row.
+fn find_summary(rows: &[Value], key: &str) -> anyhow::Result<f64> {
+    for r in rows {
+        let is_summary = r.opt("set").and_then(|v| v.str().ok()) == Some("summary");
+        if is_summary {
+            if let Some(v) = r.opt(key) {
+                return v.num();
+            }
+        }
+    }
+    bail!("BENCH_gemm.json has no summary key {key:?} — rerun `make bench-gemm`")
+}
+
+/// `p50_us` of the serve-bench row matching `(set, backend, dim_key=dim)`.
+fn find_serve_p50(
+    rows: &[Value],
+    set: &str,
+    backend: &str,
+    dim_key: &str,
+    dim: f64,
+) -> anyhow::Result<f64> {
+    for r in rows {
+        let hit = r.opt("set").and_then(|v| v.str().ok()) == Some(set)
+            && r.opt("backend").and_then(|v| v.str().ok()) == Some(backend)
+            && r.opt(dim_key).and_then(|v| v.num().ok()) == Some(dim);
+        if hit {
+            return r.get("p50_us")?.num();
+        }
+    }
+    bail!(
+        "BENCH_serve.json has no {set}/{backend} row at {dim_key}={dim} — rerun \
+         `make bench-serve`"
+    )
+}
+
+/// Extract a gated metric's current value from the fresh bench JSONs.
+fn current_value(name: &str, gemm: &[Value], serve: &[Value]) -> anyhow::Result<f64> {
+    match name {
+        "gemm.resnet_geomean_speedup" => find_summary(gemm, "resnet_geomean_speedup"),
+        "gemm.largek_geomean_speedup" => find_summary(gemm, "largek_geomean_speedup"),
+        "gemm.resnet_geomean_i8_vs_f32" => find_summary(gemm, "resnet_geomean_i8_vs_f32"),
+        "serve.single_image_lw_i8_p50_us" => {
+            find_serve_p50(serve, "single_image", "lw-i8", "threads", 4.0)
+        }
+        "serve.closed_loop_lw_i8_w4_p50_us" => {
+            find_serve_p50(serve, "closed_loop", "lw-i8", "workers", 4.0)
+        }
+        other => bail!("unknown gate metric {other:?}"),
+    }
+}
+
+fn load_json(name: &str) -> anyhow::Result<Value> {
+    let path = util::repo_root_path(name);
+    let text = std::fs::read_to_string(&path).with_context(|| {
+        format!("read {} (run `make bench-gemm bench-serve` first)", path.display())
+    })?;
+    Value::parse(&text).with_context(|| format!("parse {}", path.display()))
+}
+
+fn main() -> anyhow::Result<()> {
+    util::section("bench-regression gate");
+    let gemm = load_json("BENCH_gemm.json")?;
+    let serve = load_json("BENCH_serve.json")?;
+    let gemm_rows = gemm.arr()?;
+    let serve_rows = serve.arr()?;
+    if find_summary(gemm_rows, "smoke")? != 0.0 {
+        bail!("BENCH_gemm.json was emitted under QFT_BENCH_SMOKE — smoke numbers are not \
+               comparable; rerun the real benches");
+    }
+    let serve_smoke = serve_rows
+        .iter()
+        .any(|r| r.opt("smoke").and_then(|v| v.num().ok()).unwrap_or(0.0) != 0.0);
+    if serve_smoke {
+        bail!("BENCH_serve.json was emitted under QFT_BENCH_SMOKE — smoke numbers are not \
+               comparable; rerun the real benches");
+    }
+
+    let mut current: Vec<(&Metric, f64)> = Vec::with_capacity(METRICS.len());
+    for m in METRICS {
+        current.push((m, current_value(m.name, gemm_rows, serve_rows)?));
+    }
+
+    let base_path = util::repo_root_path("BENCH_baseline.json");
+    if std::env::var_os("QFT_BENCH_WRITE_BASELINE").is_some_and(|v| v != "0" && !v.is_empty()) {
+        // preserve an operator-committed tolerance / comment across
+        // re-baselines: only the metric values are refreshed
+        let prev = std::fs::read_to_string(&base_path)
+            .ok()
+            .and_then(|t| Value::parse(&t).ok());
+        let tol = prev
+            .as_ref()
+            .and_then(|p| p.opt("tolerance"))
+            .and_then(|v| v.num().ok())
+            .unwrap_or(DEFAULT_TOL);
+        let comment = prev
+            .as_ref()
+            .and_then(|p| p.opt("comment"))
+            .and_then(|v| v.str().ok().map(str::to_string));
+        let mut metrics = HashMap::new();
+        for (m, v) in &current {
+            let mut o = HashMap::new();
+            o.insert("value".to_string(), Value::Num(*v));
+            o.insert("higher_is_better".to_string(), Value::Bool(m.higher_is_better));
+            o.insert("desc".to_string(), Value::Str(m.desc.to_string()));
+            metrics.insert(m.name.to_string(), Value::Obj(o));
+        }
+        let mut top = HashMap::new();
+        top.insert("tolerance".to_string(), Value::Num(tol));
+        if let Some(c) = comment {
+            top.insert("comment".to_string(), Value::Str(c));
+        }
+        top.insert("metrics".to_string(), Value::Obj(metrics));
+        std::fs::write(&base_path, Value::Obj(top).to_string_compact())?;
+        println!("wrote fresh baseline {} — review and commit it", base_path.display());
+        return Ok(());
+    }
+
+    let baseline = Value::parse(&std::fs::read_to_string(&base_path).map_err(|e| {
+        anyhow!(
+            "no committed BENCH_baseline.json ({e}); generate one with `make bench-baseline`"
+        )
+    })?)?;
+    let tol: f64 = match std::env::var("QFT_BENCH_GATE_TOL") {
+        Ok(s) => s.parse().context("QFT_BENCH_GATE_TOL must be a float like 0.15")?,
+        Err(_) => match baseline.opt("tolerance") {
+            Some(v) => v.num()?,
+            None => DEFAULT_TOL,
+        },
+    };
+
+    let mut table = String::from(
+        "| metric | baseline | current | delta | status |\n|---|---:|---:|---:|---|\n",
+    );
+    let mut regressions = Vec::new();
+    for (m, cur) in &current {
+        let bm = baseline.get("metrics")?.get(m.name).map_err(|_| {
+            anyhow!("baseline lacks metric {:?} — rerun `make bench-baseline`", m.name)
+        })?;
+        let base = bm.get("value")?.num()?;
+        // direction comes from the gate's METRICS table; a baseline edited
+        // to disagree is config drift we surface instead of silently
+        // ignoring the field
+        if let Some(hib) = bm.opt("higher_is_better") {
+            if hib.boolean()? != m.higher_is_better {
+                bail!(
+                    "BENCH_baseline.json says higher_is_better={} for {:?} but the gate's \
+                     metric table says {} — fix the baseline (or METRICS in bench_gate.rs)",
+                    hib.boolean()?,
+                    m.name,
+                    m.higher_is_better
+                );
+            }
+        }
+        let delta = if base != 0.0 { cur / base - 1.0 } else { 0.0 };
+        let regressed = if m.higher_is_better {
+            *cur < base * (1.0 - tol)
+        } else {
+            *cur > base * (1.0 + tol)
+        };
+        let improved =
+            (m.higher_is_better && delta > tol) || (!m.higher_is_better && delta < -tol);
+        let status = if regressed {
+            "**REGRESSION**"
+        } else if improved {
+            "improved"
+        } else {
+            "ok"
+        };
+        let _ = writeln!(
+            table,
+            "| `{}` | {:.3} | {:.3} | {:+.1}% | {} |",
+            m.name,
+            base,
+            cur,
+            delta * 100.0,
+            status
+        );
+        if regressed {
+            regressions.push(format!(
+                "{}: baseline {:.3} -> current {:.3} ({:+.1}%)",
+                m.name,
+                base,
+                cur,
+                delta * 100.0
+            ));
+        }
+    }
+    println!("{table}");
+    if let Ok(summary_path) = std::env::var("GITHUB_STEP_SUMMARY") {
+        if let Ok(mut f) =
+            std::fs::OpenOptions::new().create(true).append(true).open(summary_path)
+        {
+            let _ = writeln!(f, "## bench-gate (tolerance {:.0}%)\n\n{table}", tol * 100.0);
+        }
+    }
+    if !regressions.is_empty() {
+        let nreg = regressions.len();
+        eprintln!("bench-gate FAILED: >{:.0}% regression on {nreg} metric(s):", tol * 100.0);
+        for r in &regressions {
+            eprintln!("  {r}");
+        }
+        eprintln!("intentional? re-baseline with `make bench-baseline` and commit the result");
+        std::process::exit(1);
+    }
+    println!(
+        "bench-gate OK: {} metrics within {:.0}% of the committed baseline",
+        current.len(),
+        tol * 100.0
+    );
+    Ok(())
+}

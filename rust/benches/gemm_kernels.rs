@@ -2,9 +2,12 @@
 //! (`gemm_ref`, the historical `matmul_rows` plus its zero-fill pass) vs
 //! the panel-packed register-blocked write-mode kernel (`gemm`) vs the
 //! i8×i8→i32 integer kernel (`gemm_i8`, the `lw-i8` backend's engine),
-//! GFLOP/s (GOP/s for the integer kernel) over ResNet-shaped im2col GEMMs
+//! GFLOP/s (GOP/s for the integer kernel) over ResNet-shaped im2col GEMMs,
+//! a large-K set (`k >= 2048`, exercising the KC reduction cache block),
 //! and ragged edge shapes.  Emits `BENCH_gemm.json` at the repo root with
-//! per-shape f32-vs-i8 numbers.
+//! per-shape f32-vs-i8 numbers and per-set geomeans; the `resnet` and
+//! `largek` geomeans feed the CI perf gate (`make bench-gate`,
+//! `BENCH_baseline.json`).
 //!
 //! Every shape is parity-checked before timing (f32 packed vs scalar
 //! bit-for-bit; i8 vs the f32 kernel on the same integer codes, where f32
@@ -36,6 +39,12 @@ const SHAPES: &[Shape] = &[
     Shape { set: "resnet", name: "rn_stage3_3x3", m: 64, k: 2304, n: 256 },
     Shape { set: "resnet", name: "rn_proj_1x1", m: 1024, k: 64, n: 128 },
     Shape { set: "resnet", name: "rn_fc_head", m: 32, k: 512, n: 1000 },
+    // large-K: fc heads and deep 1x1 convs whose reduction outgrows the KC
+    // cache block (KC = 256) — the set the K-blocked kernel targets; the
+    // perf gate pins this set's geomean
+    Shape { set: "largek", name: "lk_fc_mlp", m: 64, k: 4096, n: 256 },
+    Shape { set: "largek", name: "lk_1x1_deep", m: 196, k: 2048, n: 256 },
+    Shape { set: "largek", name: "lk_1x1_wide", m: 49, k: 2304, n: 512 },
     // edge-shaped: ragged lanes / tiles, single rows, skinny reductions,
     // and the depthwise-conv per-group GEMM (one output column)
     Shape { set: "edge", name: "edge_ragged", m: 33, k: 129, n: 17 },
@@ -43,6 +52,10 @@ const SHAPES: &[Shape] = &[
     Shape { set: "edge", name: "edge_thin_k", m: 512, k: 9, n: 40 },
     Shape { set: "edge", name: "edge_tiny", m: 7, k: 27, n: 5 },
     Shape { set: "edge", name: "edge_depthwise_g", m: 1024, k: 9, n: 1 },
+    // folded from the retired benches/kernels.rs micro-bench set: the
+    // square matmul and the small-channel conv im2col it timed
+    Shape { set: "edge", name: "edge_square_256", m: 256, k: 256, n: 256 },
+    Shape { set: "edge", name: "edge_conv_16ch", m: 2048, k: 144, n: 16 },
 ];
 
 fn rand_vec(n: usize, seed: u64) -> Vec<f32> {
@@ -72,8 +85,10 @@ fn main() {
     util::section("qft::kernel GEMM micro-kernels (scalar vs panel-packed f32 vs i8)");
     let smoke = util::smoke();
     let mut rows = Vec::new();
-    let mut rn_speedups: Vec<f64> = Vec::new();
-    let mut rn_i8_speedups: Vec<f64> = Vec::new();
+    // per-set speedup samples for the geomean summary (resnet + largek
+    // feed the perf gate)
+    let mut speedups: HashMap<&'static str, Vec<f64>> = HashMap::new();
+    let mut i8_speedups: HashMap<&'static str, Vec<f64>> = HashMap::new();
 
     for (si, s) in SHAPES.iter().enumerate() {
         let flops = 2.0 * (s.m * s.k * s.n) as f64;
@@ -143,10 +158,8 @@ fn main() {
 
         let speedup = if packed > 0.0 { scalar / packed } else { 0.0 };
         let i8_speedup = if i8_time > 0.0 { packed / i8_time } else { 0.0 };
-        if s.set == "resnet" {
-            rn_speedups.push(speedup.max(1e-12));
-            rn_i8_speedups.push(i8_speedup.max(1e-12));
-        }
+        speedups.entry(s.set).or_default().push(speedup.max(1e-12));
+        i8_speedups.entry(s.set).or_default().push(i8_speedup.max(1e-12));
         println!(
             "[{:<16}] {:>5}x{:<5}x{:<5} scalar {:>8.3} ms ({:>6.2} GF/s) | packed {:>8.3} ms \
              ({:>6.2} GF/s) | +pack {:>8.3} ms | i8 {:>8.3} ms ({:>6.2} GOP/s) | speedup \
@@ -184,18 +197,23 @@ fn main() {
         rows.push(Value::Obj(row));
     }
 
-    let geomean = (rn_speedups.iter().map(|v| v.ln()).sum::<f64>()
-        / rn_speedups.len().max(1) as f64)
-        .exp();
-    let i8_geomean = (rn_i8_speedups.iter().map(|v| v.ln()).sum::<f64>()
-        / rn_i8_speedups.len().max(1) as f64)
-        .exp();
-    println!("resnet-set geomean speedup: {geomean:.2}x (target >= 3x single-thread)");
-    println!("resnet-set geomean i8-vs-f32: {i8_geomean:.2}x");
+    let geomean = |vals: &[f64]| {
+        (vals.iter().map(|v| v.ln()).sum::<f64>() / vals.len().max(1) as f64).exp()
+    };
+    let rn = geomean(speedups.get("resnet").map_or(&[][..], |v| v.as_slice()));
+    let rn_i8 = geomean(i8_speedups.get("resnet").map_or(&[][..], |v| v.as_slice()));
+    let lk = geomean(speedups.get("largek").map_or(&[][..], |v| v.as_slice()));
+    let lk_i8 = geomean(i8_speedups.get("largek").map_or(&[][..], |v| v.as_slice()));
+    println!("resnet-set geomean speedup: {rn:.2}x (target >= 3x single-thread)");
+    println!("resnet-set geomean i8-vs-f32: {rn_i8:.2}x");
+    println!("largek-set geomean speedup: {lk:.2}x (KC-blocked, target >= 1.2x)");
+    println!("largek-set geomean i8-vs-f32: {lk_i8:.2}x");
     let mut summary = HashMap::new();
     summary.insert("set".to_string(), Value::Str("summary".to_string()));
-    summary.insert("resnet_geomean_speedup".to_string(), Value::Num(geomean));
-    summary.insert("resnet_geomean_i8_vs_f32".to_string(), Value::Num(i8_geomean));
+    summary.insert("resnet_geomean_speedup".to_string(), Value::Num(rn));
+    summary.insert("resnet_geomean_i8_vs_f32".to_string(), Value::Num(rn_i8));
+    summary.insert("largek_geomean_speedup".to_string(), Value::Num(lk));
+    summary.insert("largek_geomean_i8_vs_f32".to_string(), Value::Num(lk_i8));
     summary.insert("smoke".to_string(), Value::Num(if smoke { 1.0 } else { 0.0 }));
     rows.push(Value::Obj(summary));
 

@@ -1,18 +1,25 @@
-//! Bench S — serving throughput across execution backends: images/sec and
-//! p99 latency at 1/2/4 workers for each of the `lw`, `dch` and `lw-i8`
-//! grids, closed-loop load.  Emits one `BENCH_serve.json` so the perf
-//! trajectory carries cross-backend numbers.
+//! Bench S — serving performance across execution backends, two sections
+//! in one `BENCH_serve.json` (rows tagged by `set`):
+//!
+//! * `closed_loop` — images/sec and p50/p95/p99 latency at 1/2/4 workers
+//!   for each of the `lw`, `dch` and `lw-i8` grids under closed-loop load.
+//! * `single_image` — batch-1 forward latency straight through the
+//!   backend at 1/2/4 pool threads: the intra-op (output-row) parallelism
+//!   signal for the `lw` / `lw-i8` deployment grids.  The lw-i8 row at the
+//!   widest pool feeds the CI perf gate (`make bench-gate`).
 
 #[path = "util/mod.rs"]
 mod util;
 
 use std::collections::HashMap;
 use std::path::Path;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
-use qft::backend::BackendKind;
+use qft::backend::{self, BackendKind, Scratch};
+use qft::data::{Dataset, Split};
+use qft::par::Pool;
 use qft::quant::deploy::Mode;
-use qft::serve::{run_closed_loop, Registry, ServeConfig};
+use qft::serve::{run_closed_loop, synthetic_trainables, Registry, ServeConfig};
 use qft::util::json::Value;
 
 const BACKENDS: &[BackendKind] =
@@ -65,6 +72,8 @@ fn main() {
         }
         for (workers, r) in sweep {
             let mut m = HashMap::new();
+            m.insert("set".to_string(), Value::Str("closed_loop".to_string()));
+            m.insert("smoke".to_string(), Value::Num(if smoke { 1.0 } else { 0.0 }));
             m.insert("arch".to_string(), Value::Str(format!("{arch}/{}", kind.key())));
             m.insert("backend".to_string(), Value::Str(kind.key().to_string()));
             m.insert("workers".to_string(), Value::Num(workers as f64));
@@ -75,6 +84,48 @@ fn main() {
             m.insert("p95_us".to_string(), Value::Num(r.p95_us as f64));
             m.insert("p99_us".to_string(), Value::Num(r.p99_us as f64));
             m.insert("mean_batch".to_string(), Value::Num(r.mean_batch));
+            rows.push(Value::Obj(m));
+        }
+    }
+
+    // ---- single-image intra-op latency sweep --------------------------
+    // one image straight through the backend (no batcher, no engine) at
+    // pool widths 1/2/4: batch-1 latency should DROP as threads rise now
+    // that the integer grids chunk each conv's output rows across the pool
+    util::section("single-image intra-op latency (batch=1, forward only)");
+    let reps = if smoke { 2 } else { 64 };
+    for &kind in &[BackendKind::Int(Mode::Lw), BackendKind::Int8] {
+        let (arch_s, tm) = synthetic_trainables(Mode::Lw, 0);
+        let net = backend::prepare(kind, &arch_s, &tm);
+        let x = Dataset::new(1).batch(Split::Val, 0, 1).0;
+        for &threads in &[1usize, 2, 4] {
+            let pool = Pool::new(threads);
+            let mut scratch = Scratch::new();
+            for _ in 0..2 {
+                std::hint::black_box(net.forward_batch(&x, &mut scratch, &pool));
+            }
+            let mut lat_us: Vec<u64> = (0..reps)
+                .map(|_| {
+                    let t0 = Instant::now();
+                    std::hint::black_box(net.forward_batch(&x, &mut scratch, &pool));
+                    t0.elapsed().as_micros() as u64
+                })
+                .collect();
+            lat_us.sort_unstable();
+            let p50 = lat_us[lat_us.len() / 2];
+            let mean = lat_us.iter().sum::<u64>() as f64 / lat_us.len() as f64;
+            println!(
+                "  {}/threads={threads}: p50 {p50} us, mean {mean:.1} us ({reps} reps)",
+                kind.key()
+            );
+            let mut m = HashMap::new();
+            m.insert("set".to_string(), Value::Str("single_image".to_string()));
+            m.insert("smoke".to_string(), Value::Num(if smoke { 1.0 } else { 0.0 }));
+            m.insert("backend".to_string(), Value::Str(kind.key().to_string()));
+            m.insert("threads".to_string(), Value::Num(threads as f64));
+            m.insert("reps".to_string(), Value::Num(reps as f64));
+            m.insert("p50_us".to_string(), Value::Num(p50 as f64));
+            m.insert("mean_us".to_string(), Value::Num(mean));
             rows.push(Value::Obj(m));
         }
     }

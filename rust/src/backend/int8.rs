@@ -32,12 +32,25 @@
 //! networks — the backend parity suite asserts tight logits agreement and
 //! argmax equality rather than bit equality, since the guarantee decays for
 //! pathological accumulator magnitudes.
+//!
+//! ## Parallelism
+//!
+//! Multi-image batches split into per-chunk sub-batches over the shared
+//! [`crate::par::Pool`] (the generic batch driver the f32 deployment path
+//! uses).  A *single* image instead gets **intra-op** parallelism: every
+//! conv GEMM chunks its `b*oh*ow` output rows MR-aligned across the pool
+//! ([`conv_gemm`]) and the fc head runs
+//! [`crate::tensor::matmul_packed_rows_par`], mirroring
+//! `conv2d_packed_into_par` on the f32 grids — so batch-1 latency scales
+//! with `--threads`.  Integer accumulation is exact and the chunks own
+//! disjoint accumulator rows, so results are bit-identical to the serial
+//! walk at any thread count (`rust/tests/backend.rs` pins this at batch 1).
 
 use std::collections::HashMap;
 
 use crate::kernel::{gemm_i8, PackedW, PackedWi8};
 use crate::nn::{ArchSpec, OpKind, ParamMap};
-use crate::par::Pool;
+use crate::par::{chunk_ranges_aligned, Pool, ScopedTask};
 use crate::quant::deploy::{self, Mode};
 use crate::tensor::conv::{im2col_rows_generic, out_dim};
 use crate::tensor::{size_for_write, Tensor};
@@ -133,6 +146,15 @@ enum I8Op {
     },
 }
 
+/// Per-chunk im2col / per-group buffers for the single-image intra-op
+/// parallel conv path: each output-row chunk owns its own patch matrix and
+/// grouped-conv staging, so chunks never share a buffer.
+#[derive(Default)]
+struct I8ConvScratch {
+    cols: Vec<i8>,
+    gacc: Vec<i32>,
+}
+
 /// Reusable buffers for the i8 forward (the [`Scratch`] slice this backend
 /// owns): i8 activation tensors per graph value, the i8 im2col matrix, i32
 /// conv accumulators, and the FP decode/pool staging for the head.
@@ -152,10 +174,100 @@ pub(crate) struct Int8Scratch {
     input: Tensor,
     /// per-chunk child scratches for the batch-parallel path.
     par: Vec<Int8Scratch>,
+    /// per-chunk child buffers for the intra-op (output-row) parallel path.
+    intra: Vec<I8ConvScratch>,
 }
 
 fn take_qval(vals: &mut HashMap<usize, QTensor>, id: usize) -> QTensor {
     vals.remove(&id).unwrap_or_default()
+}
+
+/// Minimum output rows per intra-op conv chunk (`b*oh*ow` granularity) —
+/// the same floor the f32 conv path uses: below it the scope submit/latch
+/// overhead outweighs the row work.
+const MIN_PAR_I8_ROWS: usize = 64;
+
+/// The conv GEMM core for one contiguous output-row range: i8 im2col over
+/// `r`, one [`gemm_i8`] per group, grouped results scattered into `out`
+/// (the `r.len() * cout` accumulator slice for exactly those rows).  ONE
+/// copy of this body serves both the serial path (`r = 0..rows` into the
+/// full accumulator) and every parallel chunk (disjoint `r` into its
+/// disjoint slice), so the two cannot drift.
+fn conv_gemm_rows(
+    pc: &I8Conv,
+    xin: &QTensor,
+    r: std::ops::Range<usize>,
+    out: &mut [i32],
+    cols: &mut Vec<i8>,
+    gacc: &mut Vec<i32>,
+) {
+    let nrows = r.end - r.start;
+    let cout = pc.cout;
+    if pc.groups == 1 {
+        im2col_i8(xin, pc.k, pc.stride, 0, pc.cin_g, r, pc.fill, cols);
+        gemm_i8(cols, nrows, &pc.packs[0], out);
+        return;
+    }
+    let cg_out = cout / pc.groups;
+    for g in 0..pc.groups {
+        let c0 = g * pc.cin_g;
+        im2col_i8(xin, pc.k, pc.stride, c0, pc.cin_g, r.clone(), pc.fill, cols);
+        size_for_write(gacc, nrows * cg_out);
+        gemm_i8(cols, nrows, &pc.packs[g], gacc);
+        for (row, chunk) in gacc.chunks(cg_out).enumerate() {
+            let dst = row * cout + g * cg_out;
+            out[dst..dst + cg_out].copy_from_slice(chunk);
+        }
+    }
+}
+
+/// Phase-1 conv GEMM: [`conv_gemm_rows`] into `acc`, either serially over
+/// the whole row space (reusing `cols`/`gacc`) or — when a pool was handed
+/// down for a single image — with the `b*oh*ow` output-row dimension split
+/// into [`crate::kernel::MR`]-aligned chunks via [`chunk_ranges_aligned`],
+/// mirroring [`crate::tensor::conv::conv2d_packed_into_par`].  Each chunk
+/// runs the identical core over its own disjoint row block into its own
+/// disjoint `acc` slice with its own child buffers; integer accumulation
+/// is exact and the chunks do not even share accumulators, so results are
+/// bit-identical to the serial path at any thread count.
+#[allow(clippy::too_many_arguments)]
+fn conv_gemm(
+    pc: &I8Conv,
+    xin: &QTensor,
+    rows: usize,
+    acc: &mut [i32],
+    cols: &mut Vec<i8>,
+    gacc: &mut Vec<i32>,
+    intra: &mut Vec<I8ConvScratch>,
+    pool: Option<&Pool>,
+) {
+    let cout = pc.cout;
+    let ranges = match pool {
+        Some(p) => chunk_ranges_aligned(rows, p.threads(), MIN_PAR_I8_ROWS, crate::kernel::MR),
+        None => Vec::new(),
+    };
+    let pool = match pool {
+        Some(p) if ranges.len() > 1 => p,
+        _ => {
+            conv_gemm_rows(pc, xin, 0..rows, acc, cols, gacc);
+            return;
+        }
+    };
+    let nch = ranges.len();
+    if intra.len() < nch {
+        intra.resize_with(nch, I8ConvScratch::default);
+    }
+    let mut tasks: Vec<ScopedTask<'_>> = Vec::with_capacity(nch);
+    let mut rest: &mut [i32] = acc;
+    for (child, r) in intra.iter_mut().take(nch).zip(ranges) {
+        let nrows = r.end - r.start;
+        let (head, tail) = std::mem::take(&mut rest).split_at_mut(nrows * cout);
+        rest = tail;
+        tasks.push(Box::new(move || {
+            conv_gemm_rows(pc, xin, r, head, &mut child.cols, &mut child.gacc);
+        }));
+    }
+    pool.scope(tasks);
 }
 
 /// The `lw-i8` execution engine.  `prepare` consumes the *same* lw
@@ -303,7 +415,17 @@ impl Int8Prepared {
         }
     }
 
-    fn exec(&self, x: &Tensor, s: &mut Int8Scratch, want_feat: bool) -> (Tensor, Option<Tensor>) {
+    /// The per-op online pipeline.  `pool` is `Some` only on the
+    /// single-image intra-op path: conv (and fc) GEMMs then split their
+    /// output rows across the pool, bit-identically to the serial walk
+    /// (see [`conv_gemm`]); everything elementwise stays serial.
+    fn exec(
+        &self,
+        x: &Tensor,
+        s: &mut Int8Scratch,
+        want_feat: bool,
+        pool: Option<&Pool>,
+    ) -> (Tensor, Option<Tensor>) {
         assert_eq!(x.rank(), 4, "input must be [b,h,w,c]");
         // encode the input to offset i8 codes
         {
@@ -324,7 +446,9 @@ impl Int8Prepared {
         for iop in &self.ops {
             match iop {
                 I8Op::Conv(pc) => {
-                    // phase 1: i8×i8→i32 GEMM into the accumulator
+                    // phase 1: i8×i8→i32 GEMM into the accumulator, serial
+                    // or intra-op row-chunked (see conv_gemm — identical
+                    // results either way)
                     let (b, oh, ow) = {
                         let xin = &s.vals[&pc.inp];
                         let b = xin.shape[0];
@@ -332,33 +456,16 @@ impl Int8Prepared {
                             (out_dim(xin.shape[1], pc.stride), out_dim(xin.shape[2], pc.stride));
                         let rows = b * oh * ow;
                         size_for_write(&mut s.acc, rows * pc.cout);
-                        if pc.groups == 1 {
-                            im2col_i8(
-                                xin, pc.k, pc.stride, 0, pc.cin_g, 0..rows, pc.fill,
-                                &mut s.cols,
-                            );
-                            gemm_i8(&s.cols, rows, &pc.packs[0], &mut s.acc);
-                        } else {
-                            let cg_out = pc.cout / pc.groups;
-                            for g in 0..pc.groups {
-                                im2col_i8(
-                                    xin,
-                                    pc.k,
-                                    pc.stride,
-                                    g * pc.cin_g,
-                                    pc.cin_g,
-                                    0..rows,
-                                    pc.fill,
-                                    &mut s.cols,
-                                );
-                                size_for_write(&mut s.gacc, rows * cg_out);
-                                gemm_i8(&s.cols, rows, &pc.packs[g], &mut s.gacc);
-                                for (row, chunk) in s.gacc.chunks(cg_out).enumerate() {
-                                    let dst = row * pc.cout + g * cg_out;
-                                    s.acc[dst..dst + cg_out].copy_from_slice(chunk);
-                                }
-                            }
-                        }
+                        conv_gemm(
+                            pc,
+                            xin,
+                            rows,
+                            &mut s.acc,
+                            &mut s.cols,
+                            &mut s.gacc,
+                            &mut s.intra,
+                            pool,
+                        );
                         (b, oh, ow)
                     };
                     // phase 2: bias + integer activation + F̂ recode → i8,
@@ -444,7 +551,13 @@ impl Int8Prepared {
                     assert_eq!(src.shape[1], w.k());
                     let m = src.shape[0];
                     let mut ydata = Vec::new();
-                    crate::tensor::matmul_packed_slices(&src.data, m, w, &mut ydata);
+                    match pool {
+                        Some(p) => {
+                            size_for_write(&mut ydata, m * w.n());
+                            crate::tensor::matmul_packed_rows_par(&src.data, m, w, &mut ydata, p);
+                        }
+                        None => crate::tensor::matmul_packed_slices(&src.data, m, w, &mut ydata),
+                    }
                     let mut y = Tensor::new(vec![m, w.n()], ydata);
                     for row in y.data.chunks_mut(bias.len()) {
                         for (v, &bv) in row.iter_mut().zip(bias) {
@@ -458,6 +571,11 @@ impl Int8Prepared {
         (logits.expect("arch has fc"), feat)
     }
 
+    /// Dispatch between batch-level and intra-op parallelism, mirroring
+    /// the f32 [`deploy::DeployedModel`] exactly: a multi-image batch is
+    /// split into per-chunk sub-batches, a single image gets intra-op
+    /// output-row parallelism inside each conv/fc GEMM so its latency
+    /// scales with `--threads`.
     fn exec_pooled(
         &self,
         x: &Tensor,
@@ -466,20 +584,23 @@ impl Int8Prepared {
         pool: &Pool,
     ) -> (Tensor, Option<Tensor>) {
         assert_eq!(x.rank(), 4, "input must be [b,h,w,c]");
-        if pool.threads() <= 1 || x.shape[0] <= 1 {
-            return self.exec(x, s, want_feat);
+        if pool.threads() <= 1 {
+            return self.exec(x, s, want_feat, None);
         }
-        // batch-level parallelism via the SAME chunking/staging/concat
-        // driver the f32 deployment path runs — per-image execution is
-        // independent, so the concatenation is bit-identical to serial
-        deploy::exec_batch_par_generic(
-            x,
-            self.num_classes,
-            want_feat,
-            pool,
-            &mut s.par,
-            |xin, child, wf| self.exec(xin, child, wf),
-        )
+        if x.shape[0] > 1 {
+            // batch-level parallelism via the SAME chunking/staging/concat
+            // driver the f32 deployment path runs — per-image execution is
+            // independent, so the concatenation is bit-identical to serial
+            return deploy::exec_batch_par_generic(
+                x,
+                self.num_classes,
+                want_feat,
+                pool,
+                &mut s.par,
+                |xin, child, wf| self.exec(xin, child, wf, None),
+            );
+        }
+        self.exec(x, s, want_feat, Some(pool))
     }
 }
 

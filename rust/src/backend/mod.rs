@@ -20,7 +20,10 @@
 //!   single-image execution are bit-exactly equal per image, and results
 //!   never depend on the pool width (each implementation either chunks the
 //!   batch into per-image-independent sub-batches or runs kernels that are
-//!   bit-identical to their serial twins).
+//!   bit-identical to their serial twins).  The deployment grids
+//!   ([`IntBackend`], [`Int8Backend`]) additionally give a *single* image
+//!   intra-op (output-row) parallelism inside each conv/fc GEMM, so
+//!   batch-1 latency scales with the pool width too.
 //! * [`Scratch`] — one reusable buffer bundle per worker/caller, replacing
 //!   the ad-hoc `DeployScratch` threading: every backend borrows the slice
 //!   of it it needs, so holders (serve workers, eval loops) no longer know

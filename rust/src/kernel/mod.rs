@@ -1,5 +1,5 @@
-//! `qft::kernel` — the register-blocked, panel-packed f32 GEMM micro-kernel
-//! under every forward path (S17).
+//! `qft::kernel` — the register-blocked, panel-packed, KC-cache-blocked
+//! GEMM micro-kernel under every forward path (S17).
 //!
 //! Every path in the reproduction — the QFT training forwards, the integer
 //! deployment twins, the [`crate::serve`] workers, and the [`crate::par`]
@@ -15,9 +15,9 @@
 //! * [`gemm`] — the fast path: weights pre-packed into [`PackedW`] panels
 //!   of [`NR`] columns so the `kk` walk streams K-major contiguous memory
 //!   instead of striding `w[kk*n..]`, with an [`MR`]×[`NR`] accumulator
-//!   tile held in registers across the whole `kk` reduction ([`LANES`]-wide
-//!   unrolled f32 arrays the compiler auto-vectorizes — no unsafe, no
-//!   intrinsics).  It is a *write-mode* (beta = 0) kernel: the tile is
+//!   tile held in registers across the reduction ([`LANES`]-wide unrolled
+//!   f32 arrays the compiler auto-vectorizes — no unsafe, no intrinsics).
+//!   It is a *write-mode* (beta = 0) kernel: the first K-block's tile is
 //!   stored over `out`, so callers skip the zero-fill pass entirely.
 //!
 //! A third kernel lives alongside the f32 pair: [`gemm_i8`] over
@@ -26,6 +26,33 @@
 //! backend ([`crate::backend::Int8Backend`]).  Its contract is stronger
 //! and simpler: integer accumulation is exact and associative (no rounding
 //! while the true sum fits i32), so no ordering discipline is needed.
+//!
+//! ## KC cache blocking
+//!
+//! Once the reduction depth outgrows the cache, a full-`k` panel (`k * NR`
+//! floats) is evicted between [`MR`]-row tiles and every tile re-streams it
+//! from L2/memory.  The packed layout is therefore *K-block major*: the
+//! reduction is split into [`KC`]-row blocks, and each block holds its
+//! panel sub-slices contiguously —
+//!
+//! ```text
+//!   data = [ block 0: panel 0 | panel 1 | … ]  ← KC rows each, NR lanes
+//!          [ block 1: panel 0 | panel 1 | … ]  ← next KC rows
+//!          [ …                               ]  ← last block ragged (k % KC)
+//! ```
+//!
+//! — so one sub-panel is `KC * NR` f32s (16 KiB at KC = 256; 4 KiB for the
+//! i8 twin) and stays L1-resident across all `m / MR` row tiles of its
+//! block, while the whole buffer is streamed strictly front-to-back.  Both
+//! kernels drive the identical block walk through one generic panel walker
+//! (`walk_blocked_panels`), so the f32 and i8 grids cannot drift
+//! structurally.  Between K-blocks the accumulator tile is spilled to
+//! `out` and reloaded (load-accumulate-store for every block after the
+//! first) — an f32 store/load round trip is lossless, so the *per-element
+//! sequence of arithmetic operations is unchanged* from the unblocked
+//! kernel.  For `k <= KC` there is exactly one block and the walk is the
+//! historical panels-outer/row-tiles-inner loop, bit for bit and
+//! instruction for instruction.
 //!
 //! ## The bit-exactness contract
 //!
@@ -36,17 +63,20 @@
 //! ```
 //!
 //! with one `mul` and one `add` per step (rustc never contracts to FMA by
-//! default).  Register blocking tiles *rows* and vectorization runs across
-//! the *n* (output-column) lanes only — lanes never interact — so the
-//! reduction order per element is identical to the scalar loop and the
-//! packed result is bit-identical to [`gemm_ref`] for every shape,
-//! including the zero-activation skip (which keeps `0 * NaN` / `0 * inf`
-//! weight poison out of the accumulators, a property the deployment twins
-//! rely on).  Parallel callers ([`crate::tensor::matmul_slices_par`], the
-//! conv chunks) hand each pool task a disjoint output-row block running
-//! this same kernel, so results stay bit-identical at any thread count.
-//! `rust/tests/kernel.rs` enforces all of this, under default codegen and
-//! `-Ctarget-cpu=native` in CI.
+//! default).  K-blocks are visited in ascending `kk` order and the
+//! inter-block accumulator spill/reload is exact (see above); register
+//! blocking tiles *rows* and vectorization runs across the *n*
+//! (output-column) lanes only — lanes never interact — so the reduction
+//! order per element is identical to the scalar loop and the packed result
+//! is bit-identical to [`gemm_ref`] for every shape, including the
+//! zero-activation skip (which keeps `0 * NaN` / `0 * inf` weight poison
+//! out of the accumulators in every K-block, a property the deployment
+//! twins rely on).  Parallel callers ([`crate::tensor::matmul_slices_par`],
+//! the conv chunks, the `lw-i8` intra-op row chunks) hand each pool task a
+//! disjoint output-row block running this same kernel, so results stay
+//! bit-identical at any thread count.  `rust/tests/kernel.rs` enforces all
+//! of this — including shapes with `k ≫ KC` and `k % KC != 0` — under
+//! default codegen and `-Ctarget-cpu=native` in CI.
 //!
 //! ## Who packs, and when
 //!
@@ -68,12 +98,114 @@ pub const LANES: usize = 8;
 pub const MR: usize = 4;
 /// Register-tile columns — one packed panel width (two [`LANES`] vectors).
 pub const NR: usize = 2 * LANES;
+/// Reduction-dimension cache block: the packed layout groups [`KC`] K-rows
+/// of every panel contiguously, so one f32 sub-panel is `KC * NR * 4` =
+/// 16 KiB (one quarter of it for the i8 twin) and stays L1-resident across
+/// all row tiles of its block.  Between blocks the accumulator tile is
+/// reloaded from `out` — lossless, so the f32 ordering contract holds.
+pub const KC: usize = 256;
 
-/// Panel-packed weights: a `[k, n]` row-major matrix rearranged into
-/// `ceil(n / NR)` panels, each holding its [`NR`]-column slice K-major
-/// (`panel[kk * NR + lane] = w[kk, j0 + lane]`), the ragged last panel
-/// zero-padded to full width.  The micro-kernel then streams each panel
-/// front-to-back — contiguous loads — instead of striding `w[kk * n ..]`.
+/// Iterate the K-blocks of a `[k, n]` packed buffer in ascending order,
+/// yielding `(k0, kb, boff)` — each block's first reduction row, its row
+/// count, and its element offset into the buffer.  ONE copy of the
+/// block-advance arithmetic, shared by the packer, the kernel walker, and
+/// [`PackedWi8::col_sums`], so the layout cannot drift between them.
+#[inline(always)]
+fn for_each_kblock(k: usize, panels: usize, mut f: impl FnMut(usize, usize, usize)) {
+    let (mut k0, mut boff) = (0usize, 0usize);
+    while k0 < k {
+        let kb = KC.min(k - k0);
+        f(k0, kb, boff);
+        boff += panels * kb * NR;
+        k0 += kb;
+    }
+}
+
+/// Shared (re)packer behind [`PackedW::pack_cols`] and
+/// [`PackedWi8::pack_cols`] — ONE copy of the K-block-major panel layout
+/// (see the module docs), so the f32 and i8 grids cannot drift
+/// geometrically.  Reuses the destination buffer when the total length is
+/// unchanged; pad lanes are re-zeroed explicitly because a warm buffer may
+/// be repacked at a different `(k, n)` of the same total length, leaving
+/// stale values where the padding (or a block boundary) now falls.
+fn pack_cols_blocked<T: Copy + Default>(
+    data: &mut Vec<T>,
+    w: &[T],
+    k: usize,
+    row_stride: usize,
+    c0: usize,
+    ncols: usize,
+) {
+    let panels = ncols.div_ceil(NR);
+    let len = panels * k * NR;
+    if data.len() != len {
+        data.clear();
+        data.resize(len, T::default());
+    }
+    for_each_kblock(k, panels, |k0, kb, boff| {
+        for p in 0..panels {
+            let j0 = p * NR;
+            let nv = NR.min(ncols - j0);
+            let sub = &mut data[boff + p * kb * NR..boff + (p + 1) * kb * NR];
+            for kk in 0..kb {
+                let src = (k0 + kk) * row_stride + c0 + j0;
+                sub[kk * NR..kk * NR + nv].copy_from_slice(&w[src..src + nv]);
+                sub[kk * NR + nv..(kk + 1) * NR].fill(T::default());
+            }
+        }
+    });
+}
+
+/// The generic K-blocked panel walk both kernels run: K-blocks ascending
+/// (load-bearing for the f32 order-preservation contract), panels within a
+/// block, [`MR`]-row register tiles innermost, with the narrow path for
+/// panels thinner than one [`LANES`] group.  `full(i, rows, k0, sub, out,
+/// nv, first)` runs one register tile of `rows ∈ 1..=MR` output rows
+/// starting at row `i` (`out` already offset to `i * n + j0`); `narrow(k0,
+/// sub, out, nv, first)` runs every row of one thin panel (`out` offset to
+/// `j0`).  `first` is true exactly on the first K-block, where the kernels
+/// *store* from-zero accumulators (write mode) instead of
+/// load-accumulate-store.
+fn walk_blocked_panels<T, A>(
+    data: &[T],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [A],
+    mut full: impl FnMut(usize, usize, usize, &[T], &mut [A], usize, bool),
+    mut narrow: impl FnMut(usize, &[T], &mut [A], usize, bool),
+) {
+    let panels = n.div_ceil(NR);
+    for_each_kblock(k, panels, |k0, kb, boff| {
+        let first = k0 == 0;
+        for p in 0..panels {
+            let j0 = p * NR;
+            let nv = NR.min(n - j0);
+            let sub = &data[boff + p * kb * NR..boff + (p + 1) * kb * NR];
+            if nv < LANES {
+                narrow(k0, sub, &mut out[j0..], nv, first);
+                continue;
+            }
+            let mut i = 0;
+            while i + MR <= m {
+                full(i, MR, k0, sub, &mut out[i * n + j0..], nv, first);
+                i += MR;
+            }
+            if i < m {
+                full(i, m - i, k0, sub, &mut out[i * n + j0..], nv, first);
+            }
+        }
+    });
+}
+
+/// Panel-packed weights: a `[k, n]` row-major matrix rearranged into the
+/// K-block-major panel layout the module docs draw — `k.div_ceil(KC)`
+/// blocks of up to [`KC`] K-rows, each block holding `ceil(n / NR)`
+/// contiguous sub-panels with its [`NR`]-column slice K-major
+/// (`sub[kk * NR + lane] = w[k0 + kk, j0 + lane]`), the ragged last panel
+/// zero-padded to full width.  The micro-kernel then streams the whole
+/// buffer front-to-back — contiguous loads — instead of striding
+/// `w[kk * n ..]`.
 ///
 /// Packing a `[k, n]` matrix is one O(k·n) copy; [`PackedW::pack_cols`]
 /// reuses the buffer so repacking (training forwards, per-call paths)
@@ -82,7 +214,8 @@ pub const NR: usize = 2 * LANES;
 pub struct PackedW {
     k: usize,
     n: usize,
-    /// `n.div_ceil(NR)` panels × `k * NR` floats.
+    /// `k.div_ceil(KC)` K-blocks × `n.div_ceil(NR)` sub-panels × `kb * NR`
+    /// floats (`kb` = the block's row count; total `panels * k * NR`).
     data: Vec<f32>,
 }
 
@@ -104,25 +237,7 @@ impl PackedW {
         assert_eq!(w.len(), k * row_stride, "weight buffer vs [k, row_stride]");
         self.k = k;
         self.n = ncols;
-        let panels = ncols.div_ceil(NR);
-        let len = panels * k * NR;
-        if self.data.len() != len {
-            self.data.clear();
-            self.data.resize(len, 0.0);
-        }
-        for p in 0..panels {
-            let j0 = p * NR;
-            let nv = NR.min(ncols - j0);
-            let panel = &mut self.data[p * k * NR..(p + 1) * k * NR];
-            for kk in 0..k {
-                let src = kk * row_stride + c0 + j0;
-                panel[kk * NR..kk * NR + nv].copy_from_slice(&w[src..src + nv]);
-                // pad lanes must be re-zeroed explicitly: a warm buffer may
-                // be repacked at a different (k, n) of the same total
-                // length, leaving stale values where the padding now falls
-                panel[kk * NR + nv..(kk + 1) * NR].fill(0.0);
-            }
-        }
+        pack_cols_blocked(&mut self.data, w, k, row_stride, c0, ncols);
     }
 
     /// Reduction depth (rows of the packed matrix).
@@ -162,21 +277,32 @@ pub fn gemm_ref(x: &[f32], k: usize, w: &[f32], n: usize, out: &mut [f32]) {
     }
 }
 
-/// One `R`×[`NR`] register tile: `R` consecutive x rows (stride `k`)
-/// against one packed panel, accumulators built from zero and *stored*
-/// (write-mode) to `out` rows at stride `n_stride`, `nv` valid lanes.
+/// One `R`×[`NR`] register tile over one K-block: `R` consecutive x rows
+/// (stride `xstride`, already offset to the block's `k0`) against one
+/// packed sub-panel of `kb` K-rows.  On the first block accumulators build
+/// from zero and are *stored* (write mode); on later blocks they reload the
+/// partial sums spilled to `out` — an exact f32 round trip, so per-element
+/// operation order matches the unblocked kernel.
+#[allow(clippy::too_many_arguments)]
 #[inline(always)]
 fn micro_tile<const R: usize>(
     x: &[f32],
-    k: usize,
+    xstride: usize,
+    kb: usize,
     panel: &[f32],
     out: &mut [f32],
     n_stride: usize,
     nv: usize,
+    first: bool,
 ) {
-    let xr: [&[f32]; R] = std::array::from_fn(|r| &x[r * k..(r + 1) * k]);
+    let xr: [&[f32]; R] = std::array::from_fn(|r| &x[r * xstride..r * xstride + kb]);
     let mut acc = [[0.0f32; NR]; R];
-    for kk in 0..k {
+    if !first {
+        for (r, accr) in acc.iter_mut().enumerate() {
+            accr[..nv].copy_from_slice(&out[r * n_stride..r * n_stride + nv]);
+        }
+    }
+    for kk in 0..kb {
         let wrow = &panel[kk * NR..kk * NR + NR];
         for r in 0..R {
             let xv = xr[r][kk];
@@ -199,20 +325,26 @@ fn micro_tile<const R: usize>(
 /// reduction over just the `nv` valid lanes instead of all [`NR`].  This is
 /// the depthwise-conv case (`cg_out == 1`: one useful lane in a padded
 /// panel) and the raggedest of ragged tails — full-width tiles would spend
-/// `NR/nv`× the multiply work on zero pad lanes.
+/// `NR/nv`× the multiply work on zero pad lanes.  Same spill/reload rule
+/// between K-blocks as [`micro_tile`].
 #[allow(clippy::too_many_arguments)]
 fn micro_narrow(
     x: &[f32],
     m: usize,
-    k: usize,
+    xstride: usize,
+    kb: usize,
     panel: &[f32],
     out: &mut [f32],
     n_stride: usize,
     nv: usize,
+    first: bool,
 ) {
     for i in 0..m {
-        let xrow = &x[i * k..(i + 1) * k];
+        let xrow = &x[i * xstride..i * xstride + kb];
         let mut acc = [0.0f32; LANES];
+        if !first {
+            acc[..nv].copy_from_slice(&out[i * n_stride..i * n_stride + nv]);
+        }
         for (kk, &xv) in xrow.iter().enumerate() {
             if xv == 0.0 {
                 continue;
@@ -229,16 +361,18 @@ fn micro_narrow(
 /// Write-mode packed GEMM: `out[m, n] = x[m, k] @ w` with `w` pre-packed.
 /// Every element of `out` is overwritten (beta = 0), so callers reuse
 /// right-sized buffers without zero-filling them first.  Bit-identical to
-/// [`gemm_ref`] over a zeroed buffer — see the module docs for why.
+/// [`gemm_ref`] over a zeroed buffer — see the module docs for why,
+/// including across [`KC`] block boundaries.
 ///
-/// Loop order: panels outer, [`MR`]-row blocks inner, so one panel
-/// (`k * NR` floats) stays cache-hot across all `m / MR` row blocks while
-/// the accumulator tile pins the output in registers for the whole `kk`
-/// reduction — the scalar loop instead re-walks the full `n`-wide output
-/// row once per `kk`.  A panel with fewer than [`LANES`] valid lanes
-/// (depthwise convs, the raggedest tails) drops to [`micro_narrow`] so pad
-/// lanes cost no multiplies; per-element reduction order is the same
-/// either way.
+/// Loop order: K-blocks outer (ascending — the ordering contract), panels
+/// within a block, [`MR`]-row register tiles inner, so one sub-panel
+/// (`kb * NR` floats, L1-sized) stays cache-hot across all `m / MR` row
+/// tiles while the accumulator tile pins the output in registers for the
+/// block's whole `kk` reduction — the scalar loop instead re-walks the
+/// full `n`-wide output row once per `kk`.  A panel with fewer than
+/// [`LANES`] valid lanes (depthwise convs, the raggedest tails) drops to
+/// [`micro_narrow`] so pad lanes cost no multiplies; per-element reduction
+/// order is the same either way.
 pub fn gemm(x: &[f32], m: usize, pw: &PackedW, out: &mut [f32]) {
     let (k, n) = (pw.k, pw.n);
     debug_assert_eq!(x.len(), m * k, "x vs [m, k]");
@@ -250,48 +384,44 @@ pub fn gemm(x: &[f32], m: usize, pw: &PackedW, out: &mut [f32]) {
         out.fill(0.0);
         return;
     }
-    let panels = n.div_ceil(NR);
-    for p in 0..panels {
-        let j0 = p * NR;
-        let nv = NR.min(n - j0);
-        let panel = &pw.data[p * k * NR..(p + 1) * k * NR];
-        if nv < LANES {
-            micro_narrow(x, m, k, panel, &mut out[j0..], n, nv);
-            continue;
-        }
-        let mut i = 0;
-        while i + MR <= m {
-            micro_tile::<MR>(&x[i * k..(i + MR) * k], k, panel, &mut out[i * n + j0..], n, nv);
-            i += MR;
-        }
-        // ragged row remainder (m % MR); arms must cover 1..MR
-        match m - i {
-            3 => micro_tile::<3>(&x[i * k..], k, panel, &mut out[i * n + j0..], n, nv),
-            2 => micro_tile::<2>(&x[i * k..], k, panel, &mut out[i * n + j0..], n, nv),
-            1 => micro_tile::<1>(&x[i * k..], k, panel, &mut out[i * n + j0..], n, nv),
-            rem => debug_assert_eq!(
-                rem, 0,
-                "write-mode kernel left {rem} rows unwritten — remainder arms lag MR"
-            ),
-        }
-    }
+    walk_blocked_panels(
+        &pw.data,
+        m,
+        k,
+        n,
+        out,
+        |i, rows, k0, sub, o, nv, first| {
+            let kb = sub.len() / NR;
+            let xs = &x[i * k + k0..];
+            match rows {
+                MR => micro_tile::<MR>(xs, k, kb, sub, o, n, nv, first),
+                3 => micro_tile::<3>(xs, k, kb, sub, o, n, nv, first),
+                2 => micro_tile::<2>(xs, k, kb, sub, o, n, nv, first),
+                1 => micro_tile::<1>(xs, k, kb, sub, o, n, nv, first),
+                rows => unreachable!("register tiles cover 1..=MR rows, got {rows}"),
+            }
+        },
+        |k0, sub, o, nv, first| {
+            micro_narrow(&x[k0..], m, k, sub.len() / NR, sub, o, n, nv, first)
+        },
+    );
 }
 
 // ------------------------------------------------------------ integer twin
 
 /// Panel-packed **i8** weights — the integer twin of [`PackedW`], identical
-/// panel geometry (`ceil(n / NR)` K-major [`NR`]-column panels, ragged last
-/// panel zero-padded) over `i8` weight *codes* instead of f32 values.  This
-/// is the storage the `lw` deployment grid actually implies: weight codes
-/// live in `[-7, 7]` (4 bits), so an i8 panel holds 4× the codes per cache
-/// line of the f32 layout, and [`gemm_i8`] accumulates them in i32 without
-/// any float rounding.  Built by [`crate::backend::Int8Backend`] at prepare
-/// time; the f32 paths never touch it.
+/// K-block-major panel geometry over `i8` weight *codes* instead of f32
+/// values.  This is the storage the `lw` deployment grid actually implies:
+/// weight codes live in `[-7, 7]` (4 bits), so an i8 panel holds 4× the
+/// codes per cache line of the f32 layout (a [`KC`] sub-panel is 4 KiB),
+/// and [`gemm_i8`] accumulates them in i32 without any float rounding.
+/// Built by [`crate::backend::Int8Backend`] at prepare time; the f32 paths
+/// never touch it.
 #[derive(Clone, Debug, Default)]
 pub struct PackedWi8 {
     k: usize,
     n: usize,
-    /// `n.div_ceil(NR)` panels × `k * NR` codes.
+    /// Same K-block-major layout as the f32 `PackedW` buffer, in codes.
     data: Vec<i8>,
 }
 
@@ -311,24 +441,7 @@ impl PackedWi8 {
         assert_eq!(w.len(), k * row_stride, "code buffer vs [k, row_stride]");
         self.k = k;
         self.n = ncols;
-        let panels = ncols.div_ceil(NR);
-        let len = panels * k * NR;
-        if self.data.len() != len {
-            self.data.clear();
-            self.data.resize(len, 0);
-        }
-        for p in 0..panels {
-            let j0 = p * NR;
-            let nv = NR.min(ncols - j0);
-            let panel = &mut self.data[p * k * NR..(p + 1) * k * NR];
-            for kk in 0..k {
-                let src = kk * row_stride + c0 + j0;
-                panel[kk * NR..kk * NR + nv].copy_from_slice(&w[src..src + nv]);
-                // same stale-pad rule as the f32 packer: a warm buffer can be
-                // repacked at a different (k, n) of equal total length
-                panel[kk * NR + nv..(kk + 1) * NR].fill(0);
-            }
-        }
+        pack_cols_blocked(&mut self.data, w, k, row_stride, c0, ncols);
     }
 
     /// Reduction depth (rows of the packed matrix).
@@ -344,21 +457,24 @@ impl PackedWi8 {
     /// Per-logical-column code sums (`sum_kk w[kk, j]` as i32) — the
     /// zero-point correction term: an activation stored offset by `zp`
     /// contributes `zp * col_sum` extra per output, which callers fold into
-    /// the integer bias once at prepare time.
+    /// the integer bias once at prepare time.  Walks the K-block-major
+    /// layout, ignoring pad lanes.
     pub fn col_sums(&self) -> Vec<i32> {
         let mut sums = vec![0i32; self.n];
         let panels = self.n.div_ceil(NR);
-        for p in 0..panels {
-            let j0 = p * NR;
-            let nv = NR.min(self.n - j0);
-            let panel = &self.data[p * self.k * NR..(p + 1) * self.k * NR];
-            for kk in 0..self.k {
-                let row = &panel[kk * NR..kk * NR + nv];
-                for (s, &c) in sums[j0..j0 + nv].iter_mut().zip(row) {
-                    *s += c as i32;
+        for_each_kblock(self.k, panels, |_k0, kb, boff| {
+            for p in 0..panels {
+                let j0 = p * NR;
+                let nv = NR.min(self.n - j0);
+                let sub = &self.data[boff + p * kb * NR..boff + (p + 1) * kb * NR];
+                for kk in 0..kb {
+                    let row = &sub[kk * NR..kk * NR + nv];
+                    for (s, &c) in sums[j0..j0 + nv].iter_mut().zip(row) {
+                        *s += c as i32;
+                    }
                 }
             }
-        }
+        });
         sums
     }
 
@@ -368,23 +484,32 @@ impl PackedWi8 {
     }
 }
 
-/// One `R`×[`NR`] i32 register tile: the integer mirror of [`micro_tile`].
-/// No zero-activation skip — in integer arithmetic `0 * w` is exactly 0 for
-/// every representable `w` (there is no NaN/inf to mask), so the branch the
-/// f32 kernel needs for correctness would only cost the i8 kernel its
-/// vectorization.
+/// One `R`×[`NR`] i32 register tile over one K-block: the integer mirror
+/// of [`micro_tile`].  No zero-activation skip — in integer arithmetic
+/// `0 * w` is exactly 0 for every representable `w` (there is no NaN/inf
+/// to mask), so the branch the f32 kernel needs for correctness would only
+/// cost the i8 kernel its vectorization.  The inter-block spill/reload is
+/// trivially exact for i32.
+#[allow(clippy::too_many_arguments)]
 #[inline(always)]
 fn micro_tile_i8<const R: usize>(
     x: &[i8],
-    k: usize,
+    xstride: usize,
+    kb: usize,
     panel: &[i8],
     out: &mut [i32],
     n_stride: usize,
     nv: usize,
+    first: bool,
 ) {
-    let xr: [&[i8]; R] = std::array::from_fn(|r| &x[r * k..(r + 1) * k]);
+    let xr: [&[i8]; R] = std::array::from_fn(|r| &x[r * xstride..r * xstride + kb]);
     let mut acc = [[0i32; NR]; R];
-    for kk in 0..k {
+    if !first {
+        for (r, accr) in acc.iter_mut().enumerate() {
+            accr[..nv].copy_from_slice(&out[r * n_stride..r * n_stride + nv]);
+        }
+    }
+    for kk in 0..kb {
         let wrow = &panel[kk * NR..kk * NR + NR];
         for r in 0..R {
             let xv = xr[r][kk] as i32;
@@ -404,15 +529,20 @@ fn micro_tile_i8<const R: usize>(
 fn micro_narrow_i8(
     x: &[i8],
     m: usize,
-    k: usize,
+    xstride: usize,
+    kb: usize,
     panel: &[i8],
     out: &mut [i32],
     n_stride: usize,
     nv: usize,
+    first: bool,
 ) {
     for i in 0..m {
-        let xrow = &x[i * k..(i + 1) * k];
+        let xrow = &x[i * xstride..i * xstride + kb];
         let mut acc = [0i32; LANES];
+        if !first {
+            acc[..nv].copy_from_slice(&out[i * n_stride..i * n_stride + nv]);
+        }
         for (kk, &xv) in xrow.iter().enumerate() {
             let xv = xv as i32;
             let wrow = &panel[kk * NR..kk * NR + nv];
@@ -426,13 +556,12 @@ fn micro_narrow_i8(
 
 /// Write-mode i8×i8→i32 GEMM: `out[m, n] = x[m, k] @ w` with `w` pre-packed
 /// as i8 codes and every product widened to i32 before accumulation.  Same
-/// loop structure as the f32 [`gemm`] (panels outer, [`MR`]-row register
-/// tiles inner, narrow path for thin panels), but the result is *exact*: as
-/// long as the true sum fits i32 there is no rounding at all, and integer
-/// addition is associative, so any blocking/vectorization the compiler picks
-/// yields bit-identical output.  The `lw` deployment shapes are far inside
-/// the safe range (|x| ≤ 255, |w| ≤ 7 ⇒ k up to ~1.2M rows before i32 could
-/// saturate).
+/// K-blocked loop structure as the f32 [`gemm`] (one generic walker drives
+/// both), but the result is *exact*: as long as the true sum fits i32 there
+/// is no rounding at all, and integer addition is associative, so any
+/// blocking/vectorization the compiler picks yields bit-identical output.
+/// The `lw` deployment shapes are far inside the safe range (|x| ≤ 255,
+/// |w| ≤ 7 ⇒ k up to ~1.2M rows before i32 could saturate).
 pub fn gemm_i8(x: &[i8], m: usize, pw: &PackedWi8, out: &mut [i32]) {
     let (k, n) = (pw.k, pw.n);
     debug_assert_eq!(x.len(), m * k, "x vs [m, k]");
@@ -444,30 +573,27 @@ pub fn gemm_i8(x: &[i8], m: usize, pw: &PackedWi8, out: &mut [i32]) {
         out.fill(0);
         return;
     }
-    let panels = n.div_ceil(NR);
-    for p in 0..panels {
-        let j0 = p * NR;
-        let nv = NR.min(n - j0);
-        let panel = &pw.data[p * k * NR..(p + 1) * k * NR];
-        if nv < LANES {
-            micro_narrow_i8(x, m, k, panel, &mut out[j0..], n, nv);
-            continue;
-        }
-        let mut i = 0;
-        while i + MR <= m {
-            micro_tile_i8::<MR>(&x[i * k..(i + MR) * k], k, panel, &mut out[i * n + j0..], n, nv);
-            i += MR;
-        }
-        match m - i {
-            3 => micro_tile_i8::<3>(&x[i * k..], k, panel, &mut out[i * n + j0..], n, nv),
-            2 => micro_tile_i8::<2>(&x[i * k..], k, panel, &mut out[i * n + j0..], n, nv),
-            1 => micro_tile_i8::<1>(&x[i * k..], k, panel, &mut out[i * n + j0..], n, nv),
-            rem => debug_assert_eq!(
-                rem, 0,
-                "write-mode i8 kernel left {rem} rows unwritten — remainder arms lag MR"
-            ),
-        }
-    }
+    walk_blocked_panels(
+        &pw.data,
+        m,
+        k,
+        n,
+        out,
+        |i, rows, k0, sub, o, nv, first| {
+            let kb = sub.len() / NR;
+            let xs = &x[i * k + k0..];
+            match rows {
+                MR => micro_tile_i8::<MR>(xs, k, kb, sub, o, n, nv, first),
+                3 => micro_tile_i8::<3>(xs, k, kb, sub, o, n, nv, first),
+                2 => micro_tile_i8::<2>(xs, k, kb, sub, o, n, nv, first),
+                1 => micro_tile_i8::<1>(xs, k, kb, sub, o, n, nv, first),
+                rows => unreachable!("register tiles cover 1..=MR rows, got {rows}"),
+            }
+        },
+        |k0, sub, o, nv, first| {
+            micro_narrow_i8(&x[k0..], m, k, sub.len() / NR, sub, o, n, nv, first)
+        },
+    );
 }
 
 thread_local! {
@@ -505,7 +631,8 @@ mod tests {
 
     #[test]
     fn packed_layout_streams_columns() {
-        // [2, 3] matrix; single (padded) panel: lane j holds column j
+        // [2, 3] matrix; single K-block, single (padded) panel: lane j
+        // holds column j
         let w = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
         let pw = PackedW::pack(&w, 2, 3);
         assert_eq!((pw.k(), pw.n()), (2, 3));
@@ -513,6 +640,26 @@ mod tests {
         assert_eq!(&pw.data[0..3], &[1.0, 2.0, 3.0]);
         assert_eq!(&pw.data[3..NR], &[0.0; NR - 3]);
         assert_eq!(&pw.data[NR..NR + 3], &[4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn blocked_layout_panel_offsets() {
+        // k spanning two K-blocks: block b starts at b*KC*panels*NR and
+        // holds per-panel sub-slices of that block's row count
+        let (k, n) = (KC + 3, NR + 2);
+        let w = rand_vec(k * n, 77);
+        let pw = PackedW::pack(&w, k, n);
+        let panels = n.div_ceil(NR);
+        assert_eq!(pw.data.len(), panels * k * NR);
+        for &kk in &[0usize, 1, KC - 1, KC, KC + 2] {
+            for &j in &[0usize, 1, NR - 1, NR, n - 1] {
+                let (b, kl) = (kk / KC, kk % KC);
+                let kb = KC.min(k - b * KC);
+                let (p, lane) = (j / NR, j % NR);
+                let idx = b * KC * panels * NR + p * kb * NR + kl * NR + lane;
+                assert_eq!(pw.data[idx], w[kk * n + j], "kk={kk} j={j}");
+            }
+        }
     }
 
     #[test]
@@ -540,6 +687,36 @@ mod tests {
     }
 
     #[test]
+    fn kc_blocked_kernel_matches_reference_bit_exactly() {
+        // shapes straddling the KC reduction block: k < KC, k == KC,
+        // k % KC != 0, k a multiple of KC, k >> KC — with zeros sprinkled
+        // so the skip path crosses block boundaries
+        for &(m, k, n) in &[
+            (5usize, KC - 1, NR + 1),
+            (MR, KC, NR),
+            (7, KC + 1, 2 * NR + 3),
+            (MR + 2, 2 * KC, 5),
+            (3, 4 * KC + 37, NR + 9),
+            (1, 3 * KC, 1),
+        ] {
+            let mut x = rand_vec(m * k, (m * 13 + k + n * 7) as u64);
+            for (i, v) in x.iter_mut().enumerate() {
+                if i % 7 == 0 {
+                    *v = 0.0;
+                }
+            }
+            let w = rand_vec(k * n, (m + k * 3 + n) as u64);
+            let pw = PackedW::pack(&w, k, n);
+            let mut got = vec![f32::NAN; m * n];
+            gemm(&x, m, &pw, &mut got);
+            let want = ref_out(&x, m, k, &w, n);
+            let wb: Vec<u32> = want.iter().map(|v| v.to_bits()).collect();
+            let gb: Vec<u32> = got.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(wb, gb, "m={m} k={k} n={n}");
+        }
+    }
+
+    #[test]
     fn degenerate_shapes_are_safe() {
         // k = 0: write-mode must still zero the output
         let pw = PackedW::pack(&[], 0, 3);
@@ -550,6 +727,10 @@ mod tests {
         let pw = PackedW::pack(&[], 4, 0);
         gemm(&rand_vec(8, 1), 2, &pw, &mut []);
         let pw = PackedW::pack(&rand_vec(8, 2), 4, 2);
+        gemm(&[], 0, &pw, &mut []);
+        // m = 0 with a multi-KC-block, narrow-panel pack: the m/n guard
+        // must fire before any K-block ever offsets into the empty x
+        let pw = PackedW::pack(&rand_vec(2 * KC * 5, 3), 2 * KC, 5);
         gemm(&[], 0, &pw, &mut []);
     }
 
@@ -579,10 +760,18 @@ mod tests {
     fn repacking_reuses_and_matches() {
         let mut pw = PackedW::default();
         // (4, 16) -> (2, 20) keeps the same buffer length (64 floats) while
-        // moving where the ragged pad lanes fall: stale-pad regression guard
-        for (k, n, seed) in
-            [(9usize, 21usize, 5u64), (4, 3, 6), (9, 21, 7), (4, 16, 8), (2, 20, 9)]
-        {
+        // moving where the ragged pad lanes fall; (2*KC, 16) -> (KC, 32)
+        // keeps the length while moving a K-block boundary: stale-pad and
+        // stale-block regression guards
+        for (k, n, seed) in [
+            (9usize, 21usize, 5u64),
+            (4, 3, 6),
+            (9, 21, 7),
+            (4, 16, 8),
+            (2, 20, 9),
+            (2 * KC, 16, 10),
+            (KC, 32, 11),
+        ] {
             let w = rand_vec(k * n, seed);
             pw.pack_cols(&w, k, n, 0, n);
             let fresh = PackedW::pack(&w, k, n);
@@ -632,6 +821,24 @@ mod tests {
     }
 
     #[test]
+    fn i8_kc_blocked_matches_naive_reference_exactly() {
+        // the i8 twin across KC block boundaries (incl. the narrow path)
+        for &(m, k, n) in &[
+            (4usize, KC + 3, NR),
+            (6, 2 * KC + 11, NR + 2),
+            (MR + 1, KC, 2 * NR + 1),
+            (2, 3 * KC, 1),
+        ] {
+            let x = rand_codes(m * k, (m * 41 + k + n) as u64);
+            let w = rand_codes(k * n, (m + k + n * 23) as u64);
+            let pw = PackedWi8::pack(&w, k, n);
+            let mut got = vec![777i32; m * n];
+            gemm_i8(&x, m, &pw, &mut got);
+            assert_eq!(got, ref_out_i8(&x, m, k, &w, n), "m={m} k={k} n={n}");
+        }
+    }
+
+    #[test]
     fn i8_degenerate_shapes_are_safe() {
         let pw = PackedWi8::pack(&[], 0, 3);
         let mut out = vec![9i32; 2 * 3];
@@ -645,10 +852,19 @@ mod tests {
 
     #[test]
     fn i8_col_sums_and_repack_reuse() {
-        // col_sums must ignore pad lanes; repacking at a different (k, n) of
-        // the same total length must not leak stale codes into sums
+        // col_sums must ignore pad lanes and walk the blocked layout
+        // correctly; repacking at a different (k, n) of the same total
+        // length (incl. across a KC boundary) must not leak stale codes
         let mut pw = PackedWi8::default();
-        for (k, n, seed) in [(9usize, 21usize, 5u64), (4, 3, 6), (4, 16, 8), (2, 20, 9)] {
+        for (k, n, seed) in [
+            (9usize, 21usize, 5u64),
+            (4, 3, 6),
+            (4, 16, 8),
+            (2, 20, 9),
+            (KC + 5, 3, 12),
+            (2 * KC, 16, 13),
+            (KC, 32, 14),
+        ] {
             let w = rand_codes(k * n, seed);
             pw.pack_cols(&w, k, n, 0, n);
             let want: Vec<i32> = (0..n)
@@ -676,20 +892,21 @@ mod tests {
     #[test]
     fn i8_matches_f32_kernel_on_code_matrices() {
         // on integer-valued inputs within f32's exact range the two kernels
-        // must agree number-for-number
-        let (m, k, n) = (13usize, 57usize, NR + 5);
-        let xi = rand_codes(m * k, 21);
-        let wi = rand_codes(k * n, 22);
-        let xf: Vec<f32> = xi.iter().map(|&v| v as f32).collect();
-        let wf: Vec<f32> = wi.iter().map(|&v| v as f32).collect();
-        let pw8 = PackedWi8::pack(&wi, k, n);
-        let pwf = PackedW::pack(&wf, k, n);
-        let mut got8 = vec![0i32; m * n];
-        gemm_i8(&xi, m, &pw8, &mut got8);
-        let mut gotf = vec![0.0f32; m * n];
-        gemm(&xf, m, &pwf, &mut gotf);
-        for (a, b) in got8.iter().zip(&gotf) {
-            assert_eq!(*a as f32, *b);
+        // must agree number-for-number — including across KC blocks
+        for &(m, k, n) in &[(13usize, 57usize, NR + 5), (5, KC + 9, NR + 5)] {
+            let xi = rand_codes(m * k, 21 + k as u64);
+            let wi = rand_codes(k * n, 22 + k as u64);
+            let xf: Vec<f32> = xi.iter().map(|&v| v as f32).collect();
+            let wf: Vec<f32> = wi.iter().map(|&v| v as f32).collect();
+            let pw8 = PackedWi8::pack(&wi, k, n);
+            let pwf = PackedW::pack(&wf, k, n);
+            let mut got8 = vec![0i32; m * n];
+            gemm_i8(&xi, m, &pw8, &mut got8);
+            let mut gotf = vec![0.0f32; m * n];
+            gemm(&xf, m, &pwf, &mut gotf);
+            for (a, b) in got8.iter().zip(&gotf) {
+                assert_eq!(*a as f32, *b, "k={k}");
+            }
         }
     }
 

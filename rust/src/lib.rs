@@ -80,13 +80,22 @@
 //! training-forward / heuristic paths repack per call into reusable
 //! scratch, amortized over the `b*oh*ow` GEMM rows.
 //!
+//! *Cache blocking*: the packed layout is K-block major — the reduction
+//! splits into [`kernel::KC`]-row blocks whose panel sub-slices sit
+//! contiguously, so one sub-panel stays L1-resident across all row tiles
+//! of its block once `k` outgrows a single panel; the accumulator tile
+//! spills to `out` and reloads between blocks (a lossless f32 round
+//! trip), and one generic walker drives the f32 and i8 kernels through
+//! the identical block structure.
+//!
 //! *Bit-exactness contract*: per output element the reduction is always
 //! `kk = 0..k` ascending with one mul + one add per step and the
-//! zero-activation skip preserved; vectorization runs only across the `n`
-//! output-column lanes, which never interact.  Packed, scalar, serial,
-//! chunk-parallel, conv and batched-deploy results are therefore
-//! bit-identical, at any thread count (`rust/tests/kernel.rs`, under
-//! default codegen and `-Ctarget-cpu=native` in CI).
+//! zero-activation skip preserved — including across [`kernel::KC`]
+//! boundaries; vectorization runs only across the `n` output-column
+//! lanes, which never interact.  Packed, scalar, serial, chunk-parallel,
+//! conv and batched-deploy results are therefore bit-identical, at any
+//! thread count (`rust/tests/kernel.rs`, under default codegen and
+//! `-Ctarget-cpu=native` in CI).
 //!
 //! ## Parallelism — `qft::par`
 //!

@@ -210,7 +210,8 @@ pub fn chunk_ranges(n: usize, width: usize, min_per_chunk: usize) -> Vec<Range<u
 }
 
 /// [`chunk_ranges`] with every chunk boundary (except the final end at `n`)
-/// rounded up to a multiple of `align`.  The GEMM callers pass
+/// rounded up to a multiple of `align`.  The GEMM callers — the f32 conv /
+/// matmul `_par` paths and the `lw-i8` intra-op conv chunks — pass
 /// [`crate::kernel::MR`] so at most ONE chunk — the last — carries a ragged
 /// register-tile remainder; alignment is pure perf, results never depend on
 /// chunk boundaries (see above).

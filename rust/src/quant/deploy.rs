@@ -747,7 +747,13 @@ impl DeployedModel {
                     // logits leave the scratch (they are the return value),
                     // so this one buffer is allocated per call by design
                     let mut ydata = Vec::new();
-                    crate::tensor::matmul_packed_slices(&src.data, m, w, &mut ydata);
+                    match pool {
+                        Some(p) => {
+                            crate::tensor::size_for_write(&mut ydata, m * w.n());
+                            crate::tensor::matmul_packed_rows_par(&src.data, m, w, &mut ydata, p);
+                        }
+                        None => crate::tensor::matmul_packed_slices(&src.data, m, w, &mut ydata),
+                    }
                     let mut y = Tensor::new(vec![m, w.n()], ydata);
                     for row in y.data.chunks_mut(bias.len()) {
                         for (v, &bv) in row.iter_mut().zip(bias) {

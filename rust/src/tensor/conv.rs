@@ -20,8 +20,12 @@
 //! The `_par` variants split the `b*oh*ow` output-row dimension into
 //! [`crate::kernel::MR`]-aligned chunks across a [`crate::par::Pool`];
 //! im2col and the per-group GEMMs run per disjoint row block.  All variants
-//! run the same kernel in the same per-element order, so results are
-//! bit-identical (see the [`crate::kernel`] contract).
+//! run the same kernel in the same per-element order — including its
+//! [`crate::kernel::KC`] reduction blocking, which reloads accumulators
+//! from the output between K-blocks and is therefore order-preserving —
+//! so results are bit-identical (see the [`crate::kernel`] contract).  The
+//! `lw-i8` backend mirrors this row-chunked structure over its own i8
+//! im2col (`crate::backend::Int8Backend`).
 
 use super::{size_for_write, Tensor};
 use crate::kernel::{self, PackedW};

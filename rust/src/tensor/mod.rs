@@ -254,8 +254,9 @@ pub fn matmul_slices_par(
 }
 
 /// The parallel core shared by [`matmul_slices_par`] and the prepacked
-/// deployment callers: split `m` into MR-aligned chunks, each running the
-/// write-mode kernel over its disjoint output rows.
+/// deployment callers (the f32 fc head and the `lw-i8` backend's fc path):
+/// split `m` into MR-aligned chunks, each running the write-mode kernel
+/// over its disjoint output rows.
 pub fn matmul_packed_rows_par(
     x: &[f32],
     m: usize,

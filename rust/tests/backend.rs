@@ -127,6 +127,36 @@ fn int8_backend_tracks_int_lw_and_is_thread_invariant() {
 }
 
 #[test]
+fn int8_single_image_intra_op_is_bit_identical_across_threads() {
+    // batch = 1: the pooled path must dispatch to intra-op (output-row)
+    // parallelism inside each conv/fc GEMM — and stay bit-identical to the
+    // fully serial walk at every thread count, warm or cold (integer
+    // accumulation is exact and the row chunks own disjoint accumulators)
+    let (arch, tm) = synthetic_trainables(Mode::Lw, 17);
+    let net = backend::prepare(BackendKind::Int8, &arch, &tm);
+    let x = val_batch(1, 3);
+    let want = net.forward_batch(&x, &mut Scratch::new(), &Pool::new(1));
+    for &t in THREADS {
+        let pool = Pool::new(t);
+        let mut scratch = Scratch::new();
+        let got = net.forward_batch(&x, &mut scratch, &pool);
+        assert_eq!(bits(&want), bits(&got), "lw-i8 single image, {t} threads");
+        let again = net.forward_batch(&x, &mut scratch, &pool);
+        assert_eq!(bits(&want), bits(&again), "lw-i8 single image warm, {t} threads");
+        let (logits, feat) = net.forward_batch_feat(&x, &mut scratch, &pool);
+        assert_eq!(bits(&want), bits(&logits), "lw-i8 single image feat path, {t} threads");
+        assert!(feat.data.iter().all(|v| v.is_finite()));
+    }
+    // and the f32 integer twin keeps agreeing on the single-image path
+    let lw = backend::prepare(BackendKind::Int(Mode::Lw), &arch, &tm);
+    let lw_logits = lw.forward_batch(&x, &mut Scratch::new(), &Pool::new(8));
+    for (i, (a, b)) in lw_logits.data.iter().zip(&want.data).enumerate() {
+        let tol = 1e-4 * a.abs().max(b.abs()).max(1.0);
+        assert!((a - b).abs() <= tol, "logit {i}: lw {a} vs lw-i8 {b}");
+    }
+}
+
+#[test]
 fn int8_batch_split_points_do_not_change_results() {
     let (arch, tm) = synthetic_trainables(Mode::Lw, 6);
     let net = backend::prepare(BackendKind::Int8, &arch, &tm);

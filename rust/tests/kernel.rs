@@ -1,16 +1,17 @@
 //! `qft::kernel` parity suite: the packed register-blocked kernel must be
 //! bit-identical to an independent scalar reference on every shape —
 //! ragged lanes (`n % NR != 0`), ragged tiles (`m < MR`), degenerate
-//! `k = 0` / `n = 0`, single rows, NaN/Inf weights masked by zero
-//! activations — and through every consumer: `matmul_slices(_par)`,
-//! `conv2d(_into_par)`, and the deployed forwards, at 1/2/8 threads in
-//! both `lw` and `dch` modes.
+//! `k = 0` / `n = 0`, single rows, reductions straddling the `KC` cache
+//! block (`k >> KC`, `k % KC != 0`, `k < KC`), NaN/Inf weights masked by
+//! zero activations across K-block boundaries — and through every
+//! consumer: `matmul_slices(_par)`, `conv2d(_into_par)`, and the deployed
+//! forwards, at 1/2/8 threads in both `lw` and `dch` modes.
 //!
 //! CI runs this file twice: under default codegen and under
 //! `RUSTFLAGS=-Ctarget-cpu=native`, to catch any vectorization- or
 //! FMA-contraction-dependent divergence between the kernels.
 
-use qft::kernel::{gemm, gemm_ref, PackedW, MR, NR};
+use qft::kernel::{gemm, gemm_ref, PackedW, KC, MR, NR};
 use qft::par::{chunk_ranges_aligned, Pool};
 use qft::quant::deploy::{DeployScratch, DeployedModel, Mode};
 use qft::serve::synthetic_trainables;
@@ -102,6 +103,82 @@ fn zero_activations_mask_nan_inf_weights_everywhere() {
     gemm(&x, m, &pw, &mut got);
     assert!(got.iter().all(|v| v.is_finite()), "masked poison must not leak");
     assert_bits_eq(&naive(&x, m, k, &w, n), &got, "nan/inf masking");
+}
+
+#[test]
+fn kc_blocked_reduction_is_order_preserving_vs_naive() {
+    // shapes straddling the KC reduction block: k >> KC, k % KC != 0,
+    // k == KC exactly, k < KC, single row, and a narrow-panel (n < LANES)
+    // case.  Zeros are sprinkled so the zero-activation skip crosses block
+    // boundaries.  The KC-blocked kernel spills the accumulator tile to
+    // `out` and reloads it between blocks — a lossless f32 round trip — so
+    // every shape must stay BIT-identical to the independent naive loop,
+    // serially and through the chunk-parallel entry points at 1/2/8
+    // threads.
+    for &(m, k, n) in &[
+        (9usize, 4 * KC + 37, NR + 9),
+        (MR + 3, KC + 1, 2 * NR + 1),
+        (MR, KC, NR),
+        (6, KC - 3, NR - 1),
+        (1, 2 * KC, 7),
+        (2 * MR + 1, 2 * KC + 5, 5),
+    ] {
+        let mut x = rand_vec(m * k, (k + n) as u64);
+        for (i, v) in x.iter_mut().enumerate() {
+            if i % 9 == 0 {
+                *v = 0.0;
+            }
+        }
+        let w = rand_vec(k * n, (k * 2 + n) as u64);
+        let want = naive(&x, m, k, &w, n);
+
+        let pw = PackedW::pack(&w, k, n);
+        let mut got = vec![f32::NAN; m * n];
+        gemm(&x, m, &pw, &mut got);
+        assert_bits_eq(&want, &got, &format!("gemm m={m} k={k} n={n}"));
+
+        let mut out = Vec::new();
+        matmul_slices(&x, m, k, &w, n, &mut out);
+        assert_bits_eq(&want, &out, &format!("matmul_slices k={k}"));
+
+        for threads in [1usize, 2, 8] {
+            let pool = Pool::new(threads);
+            let mut par = Vec::new();
+            matmul_slices_par(&x, m, k, &w, n, &mut par, &pool);
+            assert_bits_eq(&want, &par, &format!("k={k} {threads} threads"));
+        }
+    }
+}
+
+#[test]
+fn nan_inf_zero_code_masking_survives_kc_block_boundaries() {
+    // poison whole weight rows on both sides of every KC block boundary
+    // (and at the very first / last kk); the matching all-zero activation
+    // columns must keep masking them in EVERY k-block — a regression guard
+    // for the skip path interacting with the accumulator spill/reload
+    let (m, k, n) = (MR + 1, 3 * KC + 5, NR + 3);
+    let mut x = rand_vec(m * k, 91);
+    let mut w = rand_vec(k * n, 92);
+    let poisoned = [0usize, KC - 1, KC, 2 * KC - 1, 2 * KC, 3 * KC + 4];
+    for i in 0..m {
+        for &kk in &poisoned {
+            x[i * k + kk] = 0.0;
+        }
+    }
+    for (pi, &kk) in poisoned.iter().enumerate() {
+        for j in 0..n {
+            w[kk * n + j] = match pi % 3 {
+                0 => f32::NAN,
+                1 => f32::INFINITY,
+                _ => f32::NEG_INFINITY,
+            };
+        }
+    }
+    let pw = PackedW::pack(&w, k, n);
+    let mut got = vec![0.0f32; m * n];
+    gemm(&x, m, &pw, &mut got);
+    assert!(got.iter().all(|v| v.is_finite()), "poison leaked across a block boundary");
+    assert_bits_eq(&naive(&x, m, k, &w, n), &got, "kc masking");
 }
 
 #[test]
