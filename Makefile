@@ -1,7 +1,7 @@
 # QFT reproduction — build / verify entry points.
 
 .PHONY: check build test fmt artifacts bench bench-serve par-bench bench-gemm bench-smoke \
-        bench-gate bench-baseline
+        bench-gate bench-baseline obs-overhead
 
 # Tier-1 verification: release build, full test suite, formatting.
 check:
@@ -43,12 +43,20 @@ par-bench:
 bench-gemm:
 	cargo bench --bench gemm_kernels
 
+# Observability overhead gate: lw-i8 closed loop with qft::obs on vs off
+# (interleaved rounds); fails if the obs-on p50 regresses more than 3%
+# (+25us slack; QFT_OBS_OVERHEAD_TOL override).  Emits BENCH_obs.json and
+# a validated OBS_metrics.prom Prometheus exposition.
+obs-overhead:
+	cargo bench --bench obs_overhead
+
 # CI harness smoke: every perf bench at a tiny iteration count, so the
 # bench binaries cannot rot without breaking the build.
 bench-smoke:
 	QFT_BENCH_SMOKE=1 cargo bench --bench gemm_kernels
 	QFT_BENCH_SMOKE=1 cargo bench --bench par_kernels
 	QFT_BENCH_SMOKE=1 cargo bench --bench serve_throughput
+	QFT_BENCH_SMOKE=1 cargo bench --bench obs_overhead
 
 # Perf-regression gate: rerun the gemm + serve benches in their pinned
 # configuration, then compare the gated metrics (kernel speedup geomeans,

@@ -1,0 +1,141 @@
+//! Bench O — observability overhead gate (`make obs-overhead`).
+//!
+//! Runs the lw-i8 closed-loop serving config with `qft::obs` recording
+//! fully enabled (default 1-in-16 layer sampling) and fully disabled,
+//! interleaved across rounds so machine drift hits both states equally,
+//! and compares the best closed-loop p50 of each state: obs must cost at
+//! most `QFT_OBS_OVERHEAD_TOL` (default 3%) plus a 25µs absolute slack
+//! for timer noise at small latencies.  Also renders the enabled run's
+//! Prometheus exposition, validates the text format line-by-line
+//! ([`qft::obs::validate_prometheus`]), and lands it at the repo root as
+//! `OBS_metrics.prom` (uploaded by CI next to the `BENCH_*.json`s).
+//!
+//! Under `QFT_BENCH_SMOKE=1` the harness still runs end-to-end (one tiny
+//! round, artifact + validation included) but the overhead gate is
+//! skipped — smoke numbers are not comparable.
+
+#[path = "util/mod.rs"]
+mod util;
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::Duration;
+
+use qft::backend::BackendKind;
+use qft::serve::{run_closed_loop, Registry, ServeConfig};
+use qft::util::json::Value;
+
+fn main() {
+    util::section("qft::obs overhead (lw-i8 closed loop, obs on vs off)");
+    let arch = if Path::new("artifacts/manifest.json").is_file() {
+        "resnet_tiny"
+    } else {
+        "synthetic"
+    };
+    let kind = BackendKind::Int8;
+    let smoke = util::smoke();
+    let clients = if smoke { 2 } else { 8 };
+    let per_client = if smoke { 2 } else { 96 };
+    let rounds = if smoke { 1 } else { 3 };
+    let cfg = ServeConfig {
+        workers: 2,
+        max_batch: 8,
+        max_wait: Duration::from_micros(200),
+        queue_cap: 512,
+        ..Default::default()
+    };
+    let registry = Registry::load(Path::new("artifacts"), &[(arch.to_string(), kind)])
+        .expect("load registry");
+    // warm-up so buffer growth / first-touch doesn't skew either state
+    let _ = run_closed_loop(&registry, &cfg, clients, if smoke { 1 } else { 8 }, 0);
+
+    let mut rows = Vec::new();
+    let mut min_p50 = [u64::MAX; 2]; // [off, on]
+    for round in 0..rounds {
+        // off first, on second, every round: interleaving means slow
+        // drift (thermal, noisy neighbors) cannot masquerade as overhead
+        for (si, on) in [(0usize, false), (1usize, true)] {
+            qft::obs::set_enabled(on);
+            qft::obs::reset();
+            let state = if on { "on" } else { "off" };
+            let report = util::timed(&format!("obs={state} round {round}"), || {
+                run_closed_loop(&registry, &cfg, clients, per_client, 0)
+            });
+            println!(
+                "  obs={state}: p50 {} us, p99 {} us, {:.0} img/s",
+                report.p50_us, report.p99_us, report.throughput_ips
+            );
+            min_p50[si] = min_p50[si].min(report.p50_us);
+            let mut m = HashMap::new();
+            m.insert("set".to_string(), Value::Str("obs_overhead".to_string()));
+            m.insert("smoke".to_string(), Value::Num(if smoke { 1.0 } else { 0.0 }));
+            m.insert("backend".to_string(), Value::Str(kind.key().to_string()));
+            m.insert("obs".to_string(), Value::Str(state.to_string()));
+            m.insert("round".to_string(), Value::Num(round as f64));
+            m.insert("requests".to_string(), Value::Num(report.requests as f64));
+            m.insert("p50_us".to_string(), Value::Num(report.p50_us as f64));
+            m.insert("p99_us".to_string(), Value::Num(report.p99_us as f64));
+            m.insert("images_per_sec".to_string(), Value::Num(report.throughput_ips));
+            rows.push(Value::Obj(m));
+        }
+    }
+    // leave the process in the default-on state for anything that follows
+    qft::obs::set_enabled(true);
+
+    // exposition artifact: the last round ran with obs on, so the registry
+    // holds real stage + layer samples — render, validate, upload
+    let prom = qft::obs::render_prometheus();
+    qft::obs::validate_prometheus(&prom).expect("prometheus exposition must validate");
+    let key = format!("{arch}/{}", kind.key());
+    assert!(
+        prom.contains(&format!("model=\"{key}\",stage=\"compute\"")),
+        "exposition is missing the {key} compute stage"
+    );
+    let prom_path = util::repo_root_path("OBS_metrics.prom");
+    std::fs::write(&prom_path, &prom).expect("write OBS_metrics.prom");
+    println!("wrote {} ({} lines, validated)", prom_path.display(), prom.lines().count());
+
+    let tol: f64 = std::env::var("QFT_OBS_OVERHEAD_TOL")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0.03);
+    const SLACK_US: f64 = 25.0;
+    let off = min_p50[0] as f64;
+    let on = min_p50[1] as f64;
+    let overhead = if off > 0.0 { on / off - 1.0 } else { 0.0 };
+    println!(
+        "obs overhead: off p50 {off:.0} us, on p50 {on:.0} us \
+         ({:+.1}%, tol {:.0}% + {SLACK_US:.0} us slack)",
+        overhead * 100.0,
+        tol * 100.0
+    );
+    let mut m = HashMap::new();
+    m.insert("set".to_string(), Value::Str("obs_overhead_summary".to_string()));
+    m.insert("smoke".to_string(), Value::Num(if smoke { 1.0 } else { 0.0 }));
+    m.insert("backend".to_string(), Value::Str(kind.key().to_string()));
+    m.insert("off_p50_us".to_string(), Value::Num(off));
+    m.insert("on_p50_us".to_string(), Value::Num(on));
+    m.insert("overhead_frac".to_string(), Value::Num(overhead));
+    m.insert("tol".to_string(), Value::Num(tol));
+    m.insert("slack_us".to_string(), Value::Num(SLACK_US));
+    rows.push(Value::Obj(m));
+
+    let out_path = util::repo_root_path("BENCH_obs.json");
+    std::fs::write(&out_path, Value::Arr(rows).to_string_compact())
+        .expect("write BENCH_obs.json");
+    println!("wrote {}", out_path.display());
+
+    if smoke {
+        println!("smoke mode: overhead gate skipped (numbers not comparable)");
+    } else if on > off * (1.0 + tol) + SLACK_US {
+        eprintln!(
+            "FAIL: obs-enabled closed-loop p50 regressed {:.1}% (> {:.0}% + {SLACK_US:.0} us): \
+             {on:.0} us vs {off:.0} us",
+            overhead * 100.0,
+            tol * 100.0
+        );
+        std::process::exit(1);
+    } else {
+        println!("PASS: obs overhead within tolerance");
+    }
+}

@@ -53,11 +53,17 @@ fn main() {
             };
             // warm-up so buffer growth / first-touch doesn't skew the timing
             let _ = run_closed_loop(&registry, &cfg, clients, if smoke { 1 } else { 8 }, 0);
+            // zero the obs histograms so the stage summary covers exactly
+            // this (backend, workers) measured run
+            qft::obs::reset();
             let report = util::timed(&format!("{arch}/{} workers={workers}", kind.key()), || {
                 run_closed_loop(&registry, &cfg, clients, per_client, 0)
             });
             println!("  {}/workers={workers}: {report}", kind.key());
-            sweep.push((workers, report));
+            let stage = qft::obs::snapshot()
+                .stage_for(&format!("{arch}/{}", kind.key()))
+                .cloned();
+            sweep.push((workers, report, stage));
         }
         if sweep.len() >= 2 {
             let first = sweep.first().unwrap().1.throughput_ips;
@@ -70,7 +76,7 @@ fn main() {
                 sweep.last().unwrap().0
             );
         }
-        for (workers, r) in sweep {
+        for (workers, r, stage) in sweep {
             let mut m = HashMap::new();
             m.insert("set".to_string(), Value::Str("closed_loop".to_string()));
             m.insert("smoke".to_string(), Value::Num(if smoke { 1.0 } else { 0.0 }));
@@ -83,7 +89,19 @@ fn main() {
             m.insert("p50_us".to_string(), Value::Num(r.p50_us as f64));
             m.insert("p95_us".to_string(), Value::Num(r.p95_us as f64));
             m.insert("p99_us".to_string(), Value::Num(r.p99_us as f64));
+            m.insert("reply_p50_us".to_string(), Value::Num(r.reply_p50_us as f64));
+            m.insert("reply_p99_us".to_string(), Value::Num(r.reply_p99_us as f64));
             m.insert("mean_batch".to_string(), Value::Num(r.mean_batch));
+            // per-stage breakdown from qft::obs (reply stage lives in the
+            // obs exposition; its end-to-end variant is reply_p50_us above)
+            if let Some(s) = stage {
+                for name in ["queue_wait", "batch_form", "compute"] {
+                    if let Some(h) = s.stage(name) {
+                        m.insert(format!("{name}_p50_us"), Value::Num(h.p50 as f64));
+                        m.insert(format!("{name}_p99_us"), Value::Num(h.p99 as f64));
+                    }
+                }
+            }
             rows.push(Value::Obj(m));
         }
     }

@@ -48,8 +48,11 @@
 
 use std::collections::HashMap;
 
+use std::sync::Arc;
+
 use crate::kernel::{gemm_i8, PackedW, PackedWi8};
 use crate::nn::{ArchSpec, OpKind, ParamMap};
+use crate::obs::{layer, LayerObs, NetObs, Phase};
 use crate::par::{chunk_ranges_aligned, Pool, ScopedTask};
 use crate::quant::deploy::{self, Mode};
 use crate::tensor::conv::{im2col_rows_generic, out_dim};
@@ -193,6 +196,7 @@ const MIN_PAR_I8_ROWS: usize = 64;
 /// copy of this body serves both the serial path (`r = 0..rows` into the
 /// full accumulator) and every parallel chunk (disjoint `r` into its
 /// disjoint slice), so the two cannot drift.
+#[allow(clippy::too_many_arguments)]
 fn conv_gemm_rows(
     pc: &I8Conv,
     xin: &QTensor,
@@ -200,20 +204,27 @@ fn conv_gemm_rows(
     out: &mut [i32],
     cols: &mut Vec<i8>,
     gacc: &mut Vec<i32>,
+    lobs: Option<&LayerObs>,
 ) {
     let nrows = r.end - r.start;
     let cout = pc.cout;
     if pc.groups == 1 {
+        let t0 = layer::start(lobs);
         im2col_i8(xin, pc.k, pc.stride, 0, pc.cin_g, r, pc.fill, cols);
+        let t1 = layer::lap(lobs, Phase::Im2col, t0);
         gemm_i8(cols, nrows, &pc.packs[0], out);
+        layer::lap(lobs, Phase::Gemm, t1);
         return;
     }
     let cg_out = cout / pc.groups;
     for g in 0..pc.groups {
         let c0 = g * pc.cin_g;
+        let t0 = layer::start(lobs);
         im2col_i8(xin, pc.k, pc.stride, c0, pc.cin_g, r.clone(), pc.fill, cols);
+        let t1 = layer::lap(lobs, Phase::Im2col, t0);
         size_for_write(gacc, nrows * cg_out);
         gemm_i8(cols, nrows, &pc.packs[g], gacc);
+        layer::lap(lobs, Phase::Gemm, t1);
         for (row, chunk) in gacc.chunks(cg_out).enumerate() {
             let dst = row * cout + g * cg_out;
             out[dst..dst + cg_out].copy_from_slice(chunk);
@@ -240,6 +251,7 @@ fn conv_gemm(
     gacc: &mut Vec<i32>,
     intra: &mut Vec<I8ConvScratch>,
     pool: Option<&Pool>,
+    lobs: Option<&LayerObs>,
 ) {
     let cout = pc.cout;
     let ranges = match pool {
@@ -249,7 +261,7 @@ fn conv_gemm(
     let pool = match pool {
         Some(p) if ranges.len() > 1 => p,
         _ => {
-            conv_gemm_rows(pc, xin, 0..rows, acc, cols, gacc);
+            conv_gemm_rows(pc, xin, 0..rows, acc, cols, gacc, lobs);
             return;
         }
     };
@@ -264,7 +276,7 @@ fn conv_gemm(
         let (head, tail) = std::mem::take(&mut rest).split_at_mut(nrows * cout);
         rest = tail;
         tasks.push(Box::new(move || {
-            conv_gemm_rows(pc, xin, r, head, &mut child.cols, &mut child.gacc);
+            conv_gemm_rows(pc, xin, r, head, &mut child.cols, &mut child.gacc, lobs);
         }));
     }
     pool.scope(tasks);
@@ -294,11 +306,19 @@ pub(crate) struct Int8Prepared {
     /// input encode: per-channel scales + activation grid + zero point.
     enc0: (Vec<f32>, f32, f32, i32),
     ops: Vec<I8Op>,
+    /// per-layer timing slots (shared with the global [`crate::obs`]
+    /// registry under `"arch/lw-i8"`), filled on sampled passes.
+    obs: Arc<NetObs>,
 }
 
 impl Int8Prepared {
     fn prepare(arch: &ArchSpec, tm: &ParamMap) -> Self {
         let mode = Mode::Lw;
+        let layer_names: Vec<String> = arch.ops.iter().map(|o| o.name.clone()).collect();
+        let obs = crate::obs::net_obs(
+            &format!("{}/{}", arch.name, BackendKind::Int8.key()),
+            &layer_names,
+        );
         let (qmin0, qmax0) = deploy::act_range(arch, 0);
         let enc0 = (deploy::sv_of(tm, 0), qmin0, qmax0, zp_of(arch, 0));
         let mut gap_out = None;
@@ -412,6 +432,7 @@ impl Int8Prepared {
             num_classes: arch.num_classes,
             enc0,
             ops,
+            obs,
         }
     }
 
@@ -425,6 +446,7 @@ impl Int8Prepared {
         s: &mut Int8Scratch,
         want_feat: bool,
         pool: Option<&Pool>,
+        obs: Option<&NetObs>,
     ) -> (Tensor, Option<Tensor>) {
         assert_eq!(x.rank(), 4, "input must be [b,h,w,c]");
         // encode the input to offset i8 codes
@@ -443,9 +465,13 @@ impl Int8Prepared {
 
         let mut logits = None;
         let mut feat = None;
-        for iop in &self.ops {
+        for (i, iop) in self.ops.iter().enumerate() {
+            // i8 ops are 1:1 with arch ops, so index i addresses the
+            // matching per-layer timing slot on a sampled pass
+            let lobs = obs.and_then(|o| o.layer(i));
             match iop {
                 I8Op::Conv(pc) => {
+                    let t0 = layer::start(lobs);
                     // phase 1: i8×i8→i32 GEMM into the accumulator, serial
                     // or intra-op row-chunked (see conv_gemm — identical
                     // results either way)
@@ -465,9 +491,11 @@ impl Int8Prepared {
                             &mut s.gacc,
                             &mut s.intra,
                             pool,
+                            lobs,
                         );
                         (b, oh, ow)
                     };
+                    let tr = layer::start(lobs);
                     // phase 2: bias + integer activation + F̂ recode → i8,
                     // each as its own pass so the activation branch is
                     // resolved once per conv, not once per element (the
@@ -501,6 +529,8 @@ impl Int8Prepared {
                         (q as i32 - pc.zp_out) as i8
                     }));
                     o.shape = vec![b, oh, ow, cout];
+                    layer::lap(lobs, Phase::Recode, tr);
+                    layer::finish(lobs, t0);
                     s.vals.insert(pc.out, o);
                 }
                 I8Op::Add { a, b, out, act, sa, sb, sout, qmin, qmax, zp_a, zp_b, zp_out } => {
@@ -551,6 +581,7 @@ impl Int8Prepared {
                     assert_eq!(src.shape[1], w.k());
                     let m = src.shape[0];
                     let mut ydata = Vec::new();
+                    let t0 = layer::start(lobs);
                     match pool {
                         Some(p) => {
                             size_for_write(&mut ydata, m * w.n());
@@ -558,12 +589,14 @@ impl Int8Prepared {
                         }
                         None => crate::tensor::matmul_packed_slices(&src.data, m, w, &mut ydata),
                     }
+                    layer::lap(lobs, Phase::Gemm, t0);
                     let mut y = Tensor::new(vec![m, w.n()], ydata);
                     for row in y.data.chunks_mut(bias.len()) {
                         for (v, &bv) in row.iter_mut().zip(bias) {
                             *v += bv;
                         }
                     }
+                    layer::finish(lobs, t0);
                     logits = Some(y);
                 }
             }
@@ -582,10 +615,11 @@ impl Int8Prepared {
         s: &mut Int8Scratch,
         want_feat: bool,
         pool: &Pool,
+        obs: Option<&NetObs>,
     ) -> (Tensor, Option<Tensor>) {
         assert_eq!(x.rank(), 4, "input must be [b,h,w,c]");
         if pool.threads() <= 1 {
-            return self.exec(x, s, want_feat, None);
+            return self.exec(x, s, want_feat, None, obs);
         }
         if x.shape[0] > 1 {
             // batch-level parallelism via the SAME chunking/staging/concat
@@ -597,10 +631,10 @@ impl Int8Prepared {
                 want_feat,
                 pool,
                 &mut s.par,
-                |xin, child, wf| self.exec(xin, child, wf, None),
+                |xin, child, wf| self.exec(xin, child, wf, None, obs),
             );
         }
-        self.exec(x, s, want_feat, Some(pool))
+        self.exec(x, s, want_feat, Some(pool), obs)
     }
 }
 
@@ -628,7 +662,8 @@ impl PreparedNet for Int8Prepared {
     }
 
     fn forward_batch(&self, x: &Tensor, scratch: &mut Scratch, pool: &Pool) -> Tensor {
-        self.exec_pooled(x, &mut scratch.int8, false, pool).0
+        let obs = super::sample_obs(&self.obs, scratch, x);
+        self.exec_pooled(x, &mut scratch.int8, false, pool, obs).0
     }
 
     fn forward_batch_feat(
@@ -637,7 +672,8 @@ impl PreparedNet for Int8Prepared {
         scratch: &mut Scratch,
         pool: &Pool,
     ) -> (Tensor, Tensor) {
-        let (logits, feat) = self.exec_pooled(x, &mut scratch.int8, true, pool);
+        let obs = super::sample_obs(&self.obs, scratch, x);
+        let (logits, feat) = self.exec_pooled(x, &mut scratch.int8, true, pool, obs);
         (logits, feat.expect("arch has gap"))
     }
 }

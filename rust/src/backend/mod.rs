@@ -46,10 +46,13 @@ mod int8;
 
 pub use int8::Int8Backend;
 
+use std::sync::Arc;
+
 use crate::nn::{ArchSpec, ParamMap};
+use crate::obs::NetObs;
 use crate::par::Pool;
 use crate::quant::deploy::{
-    forward_fakequant, DeployScratch, DeployedModel, Mode,
+    forward_fakequant_obs, DeployScratch, DeployedModel, Mode,
 };
 use crate::tensor::Tensor;
 
@@ -139,12 +142,39 @@ pub struct Scratch {
     pub(crate) deploy: DeployScratch,
     /// i8 code / i32 accumulator buffers ([`Int8Backend`]).
     pub(crate) int8: int8::Int8Scratch,
+    /// Per-caller 1-in-N sampling countdown for per-layer kernel timing
+    /// ([`crate::obs`]): every backend consults it once per forward, and a
+    /// sampled pass threads its net's timing slots down through the conv /
+    /// GEMM internals.  Unsampled passes cost one branch.
+    pub timer: crate::obs::LayerTimer,
 }
 
 impl Scratch {
     pub fn new() -> Self {
         Self::default()
     }
+}
+
+/// The per-layer timing slot names for an arch: one slot per op, named by
+/// the op (shared by every backend so per-layer rows line up across grids).
+fn obs_layer_names(arch: &ArchSpec) -> Vec<String> {
+    arch.ops.iter().map(|o| o.name.clone()).collect()
+}
+
+/// One sampling decision per forward pass: consult the caller's
+/// [`crate::obs::LayerTimer`]; on a sampled pass, count it (passes +
+/// images) and hand the net's timing slots down the forward path.
+pub(crate) fn sample_obs<'a>(
+    obs: &'a NetObs,
+    scratch: &mut Scratch,
+    x: &Tensor,
+) -> Option<&'a NetObs> {
+    if !scratch.timer.tick() {
+        return None;
+    }
+    obs.passes.add(1);
+    obs.images.add(x.shape[0] as u64);
+    Some(obs)
 }
 
 /// A network frozen for execution under one grid: the uniform online
@@ -221,6 +251,7 @@ pub struct FpBackend;
 struct FpPrepared {
     arch: ArchSpec,
     params: ParamMap,
+    obs: Arc<NetObs>,
 }
 
 impl Backend for FpBackend {
@@ -229,7 +260,11 @@ impl Backend for FpBackend {
     }
 
     fn prepare(&self, arch: &ArchSpec, params: &ParamMap) -> Box<dyn PreparedNet> {
-        Box::new(FpPrepared { arch: arch.clone(), params: params.clone() })
+        let obs = crate::obs::net_obs(
+            &format!("{}/{}", arch.name, self.kind().key()),
+            &obs_layer_names(arch),
+        );
+        Box::new(FpPrepared { arch: arch.clone(), params: params.clone(), obs })
     }
 }
 
@@ -250,17 +285,19 @@ impl PreparedNet for FpPrepared {
         self.arch.num_classes
     }
 
-    fn forward_batch(&self, x: &Tensor, _scratch: &mut Scratch, _pool: &Pool) -> Tensor {
-        crate::nn::fp_forward(&self.arch, &self.params, x).logits
+    fn forward_batch(&self, x: &Tensor, scratch: &mut Scratch, _pool: &Pool) -> Tensor {
+        let obs = sample_obs(&self.obs, scratch, x);
+        crate::nn::fp_forward_obs(&self.arch, &self.params, x, obs).logits
     }
 
     fn forward_batch_feat(
         &self,
         x: &Tensor,
-        _scratch: &mut Scratch,
+        scratch: &mut Scratch,
         _pool: &Pool,
     ) -> (Tensor, Tensor) {
-        let f = crate::nn::fp_forward(&self.arch, &self.params, x);
+        let obs = sample_obs(&self.obs, scratch, x);
+        let f = crate::nn::fp_forward_obs(&self.arch, &self.params, x, obs);
         (f.logits, f.feat)
     }
 }
@@ -276,6 +313,7 @@ struct FakeQuantPrepared {
     arch: ArchSpec,
     tm: ParamMap,
     mode: Mode,
+    obs: Arc<NetObs>,
 }
 
 impl Backend for FakeQuantBackend {
@@ -284,7 +322,11 @@ impl Backend for FakeQuantBackend {
     }
 
     fn prepare(&self, arch: &ArchSpec, tm: &ParamMap) -> Box<dyn PreparedNet> {
-        Box::new(FakeQuantPrepared { arch: arch.clone(), tm: tm.clone(), mode: self.0 })
+        let obs = crate::obs::net_obs(
+            &format!("{}/{}", arch.name, self.kind().key()),
+            &obs_layer_names(arch),
+        );
+        Box::new(FakeQuantPrepared { arch: arch.clone(), tm: tm.clone(), mode: self.0, obs })
     }
 }
 
@@ -305,17 +347,19 @@ impl PreparedNet for FakeQuantPrepared {
         self.arch.num_classes
     }
 
-    fn forward_batch(&self, x: &Tensor, _scratch: &mut Scratch, _pool: &Pool) -> Tensor {
-        forward_fakequant(&self.arch, &self.tm, self.mode, x).0
+    fn forward_batch(&self, x: &Tensor, scratch: &mut Scratch, _pool: &Pool) -> Tensor {
+        let obs = sample_obs(&self.obs, scratch, x);
+        forward_fakequant_obs(&self.arch, &self.tm, self.mode, x, obs).0
     }
 
     fn forward_batch_feat(
         &self,
         x: &Tensor,
-        _scratch: &mut Scratch,
+        scratch: &mut Scratch,
         _pool: &Pool,
     ) -> (Tensor, Tensor) {
-        forward_fakequant(&self.arch, &self.tm, self.mode, x)
+        let obs = sample_obs(&self.obs, scratch, x);
+        forward_fakequant_obs(&self.arch, &self.tm, self.mode, x, obs)
     }
 }
 
@@ -333,6 +377,7 @@ struct IntPrepared {
     input_hw: usize,
     input_ch: usize,
     num_classes: usize,
+    obs: Arc<NetObs>,
 }
 
 impl Backend for IntBackend {
@@ -341,11 +386,16 @@ impl Backend for IntBackend {
     }
 
     fn prepare(&self, arch: &ArchSpec, tm: &ParamMap) -> Box<dyn PreparedNet> {
+        let obs = crate::obs::net_obs(
+            &format!("{}/{}", arch.name, self.kind().key()),
+            &obs_layer_names(arch),
+        );
         Box::new(IntPrepared {
             model: DeployedModel::prepare(arch, tm, self.0),
             input_hw: arch.input_hw,
             input_ch: arch.input_ch,
             num_classes: arch.num_classes,
+            obs,
         })
     }
 }
@@ -368,7 +418,8 @@ impl PreparedNet for IntPrepared {
     }
 
     fn forward_batch(&self, x: &Tensor, scratch: &mut Scratch, pool: &Pool) -> Tensor {
-        self.model.forward_batch_pooled(x, &mut scratch.deploy, pool)
+        let obs = sample_obs(&self.obs, scratch, x);
+        self.model.forward_batch_pooled_obs(x, &mut scratch.deploy, pool, obs)
     }
 
     fn forward_batch_feat(
@@ -377,7 +428,8 @@ impl PreparedNet for IntPrepared {
         scratch: &mut Scratch,
         pool: &Pool,
     ) -> (Tensor, Tensor) {
-        self.model.forward_batch_feat_pooled(x, &mut scratch.deploy, pool)
+        let obs = sample_obs(&self.obs, scratch, x);
+        self.model.forward_batch_feat_pooled_obs(x, &mut scratch.deploy, pool, obs)
     }
 }
 

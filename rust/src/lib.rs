@@ -65,6 +65,26 @@
 //! checkout (`cargo bench --bench serve_throughput` emits
 //! `BENCH_serve.json`).
 //!
+//! ## Observability — `qft::obs`
+//!
+//! [`obs`] is the std-only, always-compiled telemetry layer over the
+//! serving engine.  Lock-free primitives ([`obs::Counter`],
+//! [`obs::Gauge`], the sharded log-linear [`obs::LogHistogram`] — exact
+//! small samples, sub-bucket interpolation for trustworthy p99/p99.9)
+//! feed a process-global registry keyed by the serving wire key.  Every
+//! [`serve::InferRequest`] carries an [`obs::Trace`]; workers stamp an
+//! [`obs::BatchSpan`] (batch-formed → forward-start → forward-end →
+//! replied) so queue wait, batch-formation hold, compute and reply
+//! latency become separate per-model histograms
+//! ([`obs::StageMetrics`]).  Per-layer kernel timing ([`obs::NetObs`])
+//! splits each conv/fc into pack / im2col / gemm / recode phases across
+//! all six backends, sampled 1-in-N (default
+//! [`obs::DEFAULT_SAMPLE_EVERY`], `--obs-sample N` / `--no-obs` to tune)
+//! by an [`obs::LayerTimer`] in [`backend::Scratch`].  Exposition:
+//! [`obs::render_prometheus`] / [`obs::render_json`], the `repro stats`
+//! command, `--stats-json <path>` periodic flushes on `serve` /
+//! `bench-serve`, and a table dump on graceful shutdown.
+//!
 //! ## The kernel engine — `qft::kernel`
 //!
 //! [`kernel`] owns THE inner loop every forward path bottoms out in: a
@@ -127,6 +147,7 @@ pub mod coordinator;
 pub mod data;
 pub mod kernel;
 pub mod nn;
+pub mod obs;
 pub mod par;
 pub mod quant;
 pub mod runtime;

@@ -16,6 +16,8 @@
 
 use std::collections::HashMap;
 use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
 use std::time::Duration;
 
 use anyhow::{bail, Result};
@@ -50,16 +52,21 @@ COMMANDS:
 SERVING / BACKEND EVAL (pure-rust execution backends; no PJRT needed):
   serve     [--arch A] [--backend K] [--workers N] [--max-batch B]
             [--max-wait-us U] [--queue-cap Q] [--requests R] [--threads T]
-                                          load A/K into the registry, run a
+            [--stats-json P]              load A/K into the registry, run a
                                           closed-loop smoke client over R val
                                           images, report accuracy + latency
   bench-serve [--arch A] [--backend K] [--workers N] [--max-batch B]
             [--max-wait-us U] [--queue-cap Q] [--concurrency C]
-            [--requests R] [--threads T]  C closed-loop clients x R requests
+            [--requests R] [--threads T] [--stats-json P]
+                                          C closed-loop clients x R requests
                                           each; reports images/sec + p50/95/99
   eval      [--arch A] [--backend K] [--images N] [--threads T]
                                           offline top-1 of A under backend K
                                           (same forward code the server runs)
+  stats     [--stats-json P] [--prom]     render a flushed obs snapshot
+                                          (default OBS_stats.json) as the
+                                          human table, or as Prometheus text
+                                          with --prom
 
 --backend K selects the execution grid: fp (FP32 reference), fq-lw /
 fq-dch (fake-quant simulation), lw / dch (integer deployment, f32-held
@@ -77,6 +84,16 @@ time while the kernel pool is idle (latency) and grow it when the pool
 is saturated (throughput).  --no-adaptive pins the hold at
 --max-wait-us.  Replies are bit-identical either way.
 
+Observability (qft::obs): serve / bench-serve / eval record per-model
+stage histograms (queue-wait, batch-form, compute, reply; µs) and
+sampled per-layer kernel timings (pack / im2col / gemm / recode).
+--obs-sample N times every Nth forward pass (default 16; 1 = every
+pass, 0 = layer timing off); --no-obs disables all recording.
+--stats-json P flushes the JSON snapshot to P every ~2s (atomic
+tmp+rename, so readers never see a torn file) and once at shutdown;
+`repro stats` renders such a file, and a human-readable stage/layer
+table is printed on graceful shutdown.
+
 Weights for serving resolve from weights/A.MODE.qftw (qft export), else
 weights/A.qftw (FP teacher + offline PTQ init), else he-init smoke weights.
 Without artifacts/manifest.json a built-in `synthetic` arch is served.
@@ -86,14 +103,14 @@ Without artifacts/manifest.json a built-in `synthetic` arch is served.
 const KV_KEYS: &[&str] = &[
     "arch", "archs", "steps", "lr", "mode", "backend", "images", "ce-mix",
     "workers", "max-batch", "max-wait-us", "queue-cap", "requests",
-    "concurrency", "threads",
+    "concurrency", "threads", "stats-json", "obs-sample",
 ];
 /// Every boolean `--flag`.
-const BOOL_FLAGS: &[&str] = &["cle", "frozen-scales", "fast", "no-adaptive"];
+const BOOL_FLAGS: &[&str] = &["cle", "frozen-scales", "fast", "no-adaptive", "no-obs", "prom"];
 /// Every command (validated before any runtime/artifact work happens).
 const COMMANDS: &[&str] = &[
     "pretrain", "eval-fp", "qft", "table1", "table2", "fig3", "fig5", "fig6",
-    "fig7", "fig8", "fig9", "fig12", "serve", "bench-serve", "eval",
+    "fig7", "fig8", "fig9", "fig12", "serve", "bench-serve", "eval", "stats",
 ];
 
 /// flags: `--key value` pairs plus boolean `--flag`s.  Duplicates and
@@ -223,17 +240,83 @@ fn main() -> Result<()> {
         }
     }
 
+    // observability knobs are process-global and must be set before any
+    // backend is prepared (prepare registers the per-layer slots)
+    qft::obs::set_enabled(!args.flag("no-obs"));
+    if let Some(n) = args.kv.get("obs-sample") {
+        qft::obs::set_sample_every(n.parse()?);
+    }
+
     match cmd.as_str() {
         // the serving / backend-eval commands run the pure-rust execution
         // backends and must work without PJRT/artifacts
         "serve" => cmd_serve(&artifacts, &args),
         "bench-serve" => cmd_bench_serve(&artifacts, &args),
         "eval" => cmd_eval(&artifacts, &args),
+        "stats" => cmd_stats(&args),
         _ => {
             let rt = Runtime::load(&artifacts)?;
             eprintln!("platform: {}", rt.platform());
             run_pipeline_cmd(&rt, &cmd, &args)
         }
+    }
+}
+
+/// One atomic `--stats-json` flush: write the snapshot next to the target
+/// and rename over it, so a concurrent `repro stats` reader never parses a
+/// torn file.
+fn write_stats_json(path: &str) -> Result<()> {
+    let tmp = format!("{path}.tmp");
+    std::fs::write(&tmp, qft::obs::render_json())?;
+    std::fs::rename(&tmp, path)?;
+    Ok(())
+}
+
+/// Background `--stats-json` flusher: rewrites the snapshot every ~2s while
+/// the engine runs, plus one final flush when stopped, so the file is fresh
+/// both for live scraping and after shutdown.
+struct StatsFlush {
+    stop: Arc<AtomicBool>,
+    handle: std::thread::JoinHandle<()>,
+}
+
+fn spawn_stats_flush(path: String) -> StatsFlush {
+    let stop = Arc::new(AtomicBool::new(false));
+    let thread_stop = stop.clone();
+    let handle = std::thread::spawn(move || loop {
+        // sleep in 100ms slices so a stop request flushes promptly
+        for _ in 0..20 {
+            if thread_stop.load(Ordering::Relaxed) {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(100));
+        }
+        if let Err(e) = write_stats_json(&path) {
+            eprintln!("stats-json: cannot write {path:?}: {e}");
+        }
+        if thread_stop.load(Ordering::Relaxed) {
+            return;
+        }
+    });
+    StatsFlush { stop, handle }
+}
+
+impl StatsFlush {
+    /// Stop the flusher after one final write (blocks until it lands).
+    fn finish(self) {
+        self.stop.store(true, Ordering::Relaxed);
+        let _ = self.handle.join();
+    }
+}
+
+/// Graceful-shutdown stats dump shared by serve and bench-serve: stop the
+/// periodic flusher (final write included) and print the human table.
+fn obs_shutdown_dump(flush: Option<StatsFlush>) {
+    if let Some(f) = flush {
+        f.finish();
+    }
+    if qft::obs::enabled() {
+        print!("\n{}", qft::obs::snapshot().to_table());
     }
 }
 
@@ -248,7 +331,7 @@ fn serve_cfg(args: &Args) -> Result<ServeConfig> {
 }
 
 fn cmd_serve(artifacts: &str, args: &Args) -> Result<()> {
-    reject_unused(args, "serve", &["images", "concurrency"], &[])?;
+    reject_unused(args, "serve", &["images", "concurrency"], &["prom"])?;
     let arch = args.get("arch", "synthetic");
     let kind = parse_backend(args)?;
     let requests = args.usize("requests", 512)?;
@@ -257,6 +340,7 @@ fn cmd_serve(artifacts: &str, args: &Args) -> Result<()> {
     let registry = Registry::load(Path::new(artifacts), &[(arch.clone(), kind)])?;
     let slot = 0;
     let engine = Engine::start(registry.clone(), &cfg);
+    let flush = args.kv.get("stats-json").cloned().map(spawn_stats_flush);
     let client = engine.client();
     let ds = qft::data::Dataset::new(0);
     let mut correct = 0usize;
@@ -273,11 +357,12 @@ fn cmd_serve(artifacts: &str, args: &Args) -> Result<()> {
         "top-1 over {requests} served requests: {:.1}%",
         correct as f32 / requests.max(1) as f32 * 100.0
     );
+    obs_shutdown_dump(flush);
     Ok(())
 }
 
 fn cmd_bench_serve(artifacts: &str, args: &Args) -> Result<()> {
-    reject_unused(args, "bench-serve", &["images"], &[])?;
+    reject_unused(args, "bench-serve", &["images"], &["prom"])?;
     let arch = args.get("arch", "synthetic");
     let kind = parse_backend(args)?;
     let concurrency = args.usize("concurrency", 16)?;
@@ -288,6 +373,10 @@ fn cmd_bench_serve(artifacts: &str, args: &Args) -> Result<()> {
     let registry = Registry::load(Path::new(artifacts), &[(arch.clone(), kind)])?;
     // warm-up pass so first-touch buffer growth doesn't skew the measurement
     let _ = run_closed_loop(&registry, &cfg, concurrency.max(1), 4, 0);
+    // drop the warm-up's obs samples so the flushed stats cover the
+    // measured run only
+    qft::obs::reset();
+    let flush = args.kv.get("stats-json").cloned().map(spawn_stats_flush);
     let report = run_closed_loop(&registry, &cfg, concurrency.max(1), per_client, 0);
     println!(
         "bench-serve {arch}/{} workers={} max-batch={} concurrency={}:",
@@ -303,6 +392,35 @@ fn cmd_bench_serve(artifacts: &str, args: &Args) -> Result<()> {
     for (lo, hi, n) in report.depth_hist.rows() {
         println!("  queue depth {lo:>4}..{hi:<4} x{n}");
     }
+    obs_shutdown_dump(flush);
+    Ok(())
+}
+
+/// `repro stats` — render a `--stats-json` flush file (any
+/// [`qft::obs::render_json`] document) without touching the engine.
+fn cmd_stats(args: &Args) -> Result<()> {
+    reject_unused(
+        args,
+        "stats",
+        &[
+            "arch", "archs", "steps", "lr", "mode", "backend", "images", "ce-mix",
+            "workers", "max-batch", "max-wait-us", "queue-cap", "requests",
+            "concurrency", "obs-sample",
+        ],
+        &["cle", "frozen-scales", "fast", "no-adaptive", "no-obs"],
+    )?;
+    let path = args.get("stats-json", "OBS_stats.json");
+    let text = std::fs::read_to_string(&path).map_err(|e| {
+        anyhow::anyhow!(
+            "cannot read {path:?} (run serve/bench-serve with --stats-json first): {e}"
+        )
+    })?;
+    let snap = qft::obs::Snapshot::from_json(&text)?;
+    if args.flag("prom") {
+        print!("{}", snap.to_prometheus());
+    } else {
+        print!("{}", snap.to_table());
+    }
     Ok(())
 }
 
@@ -313,8 +431,11 @@ fn cmd_eval(artifacts: &str, args: &Args) -> Result<()> {
     reject_unused(
         args,
         "eval",
-        &["workers", "max-batch", "max-wait-us", "queue-cap", "concurrency", "requests"],
-        &["no-adaptive"],
+        &[
+            "workers", "max-batch", "max-wait-us", "queue-cap", "concurrency",
+            "requests", "stats-json",
+        ],
+        &["no-adaptive", "prom"],
     )?;
     let arch = args.get("arch", "synthetic");
     let kind = parse_backend(args)?;
@@ -336,6 +457,7 @@ fn cmd_eval(artifacts: &str, args: &Args) -> Result<()> {
         scored as f64 / dt.as_secs_f64().max(1e-9),
         qft::par::global().threads(),
     );
+    obs_shutdown_dump(None);
     Ok(())
 }
 
@@ -343,9 +465,14 @@ fn run_pipeline_cmd(rt: &Runtime, cmd: &str, args: &Args) -> Result<()> {
     // serving-only options must not be silently ignored here: `repro qft
     // --backend dch` looking like it selected a grid (while only --mode is
     // read) would defeat the strict-flag contract Args::parse enforces
-    for key in ["backend", "images"] {
+    for key in ["backend", "images", "stats-json", "obs-sample"] {
         if args.kv.contains_key(key) {
-            bail!("--{key} applies to the serve / bench-serve / eval commands only");
+            bail!("--{key} applies to the serve / bench-serve / eval / stats commands only");
+        }
+    }
+    for flag in ["prom", "no-obs"] {
+        if args.flag(flag) {
+            bail!("--{flag} applies to the serve / bench-serve / eval / stats commands only");
         }
     }
     let fast = args.flag("fast");

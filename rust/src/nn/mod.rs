@@ -13,7 +13,7 @@ pub mod arch;
 
 use std::collections::HashMap;
 
-use crate::tensor::{conv::conv2d, Tensor};
+use crate::tensor::{conv::conv2d_obs, Tensor};
 pub use arch::{ArchSpec, OpKind, OpSpec, ParamSpec};
 
 /// Named parameter store (`w:conv0`, `b:conv0`, ... or trainables incl.
@@ -78,17 +78,35 @@ pub struct Forward {
 }
 
 pub fn fp_forward(arch: &ArchSpec, params: &ParamMap, x: &Tensor) -> Forward {
+    fp_forward_obs(arch, params, x, None)
+}
+
+/// [`fp_forward`] with optional per-layer timing: on a sampled pass each
+/// conv/fc op `i` laps its phases into `obs.layer(i)` (`pack` = per-call
+/// weight packing, then `im2col` / `gemm`; the fc matmul is all `gemm`) and
+/// stamps its wall-clock total.
+pub fn fp_forward_obs(
+    arch: &ArchSpec,
+    params: &ParamMap,
+    x: &Tensor,
+    obs: Option<&crate::obs::NetObs>,
+) -> Forward {
+    use crate::obs::layer;
     let mut values: HashMap<usize, Tensor> = HashMap::new();
     values.insert(0, x.clone());
     let mut logits = None;
     let mut feat = None;
-    for op in &arch.ops {
+    for (i, op) in arch.ops.iter().enumerate() {
+        let lobs = obs.and_then(|o| o.layer(i));
         match op.kind() {
             OpKind::Conv => {
                 let w = params.get(&format!("w:{}", op.name));
                 let b = params.get(&format!("b:{}", op.name));
-                let mut y = conv2d(&values[&op.inp], w, &b.data, op.stride, op.groups);
+                let t0 = layer::start(lobs);
+                let mut y =
+                    conv2d_obs(&values[&op.inp], w, &b.data, op.stride, op.groups, lobs);
                 apply_act_inplace(&mut y, &op.act);
+                layer::finish(lobs, t0);
                 values.insert(op.out, y);
             }
             OpKind::Add => {
@@ -103,12 +121,15 @@ pub fn fp_forward(arch: &ArchSpec, params: &ParamMap, x: &Tensor) -> Forward {
             OpKind::Fc => {
                 let w = params.get(&format!("w:{}", op.name));
                 let b = params.get(&format!("b:{}", op.name));
+                let t0 = layer::start(lobs);
                 let mut y = values[&op.inp].matmul(w);
+                layer::lap(lobs, crate::obs::Phase::Gemm, t0);
                 for row in y.data.chunks_mut(b.data.len()) {
                     for (v, &bv) in row.iter_mut().zip(&b.data) {
                         *v += bv;
                     }
                 }
+                layer::finish(lobs, t0);
                 logits = Some(y.clone());
                 values.insert(op.out, y);
             }

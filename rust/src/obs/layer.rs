@@ -1,0 +1,229 @@
+//! Per-layer kernel timing: phase-split wall-time accumulators threaded
+//! through every backend's forward path.
+//!
+//! A [`NetObs`] mirrors one prepared model (one [`LayerObs`] per arch op);
+//! it lives behind an `Arc` inside the prepared net and in the global
+//! [`crate::obs`] registry, so serving workers accumulate into the same
+//! cells the exposition layer reads.  Accumulators are relaxed atomics —
+//! parallel conv chunks add their own im2col/GEMM nanos concurrently, which
+//! means phase times are *CPU time summed across pool threads*, not
+//! elapsed wall time (a 4-way-parallel GEMM contributes ~4× its wall time).
+//! `total_ns` is stamped once per op at the top level, so it *is* wall
+//! time; the two views together show both cost and parallel efficiency.
+//!
+//! Sampling: forwards are timed 1-in-N ([`crate::obs::sample_every`],
+//! default 16) so `Instant::now()` calls stay out of the hot path's noise
+//! floor.  The per-scratch [`LayerTimer`] countdown decides, once per
+//! forward, whether this pass is sampled; unsampled passes run the exact
+//! non-obs code (an `Option` that is `None`).
+
+use std::time::Instant;
+
+use super::metrics::Counter;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Kernel phase of a conv/fc op.  `Pack` is weight/covector preparation
+/// (per-call repack in the fp/fake-quant grids), `Im2col` the patch
+/// gather, `Gemm` the matmul itself, `Recode` the post-GEMM elementwise
+/// epilogue (bias/act/requant).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    Pack = 0,
+    Im2col = 1,
+    Gemm = 2,
+    Recode = 3,
+}
+
+/// Exposition names, indexed by `Phase as usize`.
+pub const PHASE_NAMES: [&str; 4] = ["pack", "im2col", "gemm", "recode"];
+
+/// Phase-split time accumulators for one op (relaxed atomics; safe to add
+/// into from any number of pool threads).
+pub struct LayerObs {
+    /// Op name from the arch spec (`conv0`, `fc`, ...).
+    pub name: String,
+    phase_ns: [AtomicU64; 4],
+    total_ns: AtomicU64,
+}
+
+impl LayerObs {
+    pub fn new(name: &str) -> Self {
+        LayerObs {
+            name: name.to_string(),
+            phase_ns: std::array::from_fn(|_| AtomicU64::new(0)),
+            total_ns: AtomicU64::new(0),
+        }
+    }
+
+    pub fn add_phase_ns(&self, phase: Phase, ns: u64) {
+        self.phase_ns[phase as usize].fetch_add(ns, Ordering::Relaxed);
+    }
+
+    pub fn add_total_ns(&self, ns: u64) {
+        self.total_ns.fetch_add(ns, Ordering::Relaxed);
+    }
+
+    pub fn phase_ns(&self, phase: Phase) -> u64 {
+        self.phase_ns[phase as usize].load(Ordering::Relaxed)
+    }
+
+    pub fn total_ns(&self) -> u64 {
+        self.total_ns.load(Ordering::Relaxed)
+    }
+
+    pub fn clear(&self) {
+        for p in &self.phase_ns {
+            p.store(0, Ordering::Relaxed);
+        }
+        self.total_ns.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Per-model layer timing: one [`LayerObs`] per arch op, plus how many
+/// forwards (and images) were actually sampled — divide by `passes` to get
+/// per-pass averages.
+pub struct NetObs {
+    /// `"arch/backend-key"`, same wire key the registry uses.
+    pub key: String,
+    pub passes: Counter,
+    pub images: Counter,
+    pub layers: Vec<LayerObs>,
+}
+
+impl NetObs {
+    pub fn new(key: &str, layer_names: &[String]) -> Self {
+        NetObs {
+            key: key.to_string(),
+            passes: Counter::new(),
+            images: Counter::new(),
+            layers: layer_names.iter().map(|n| LayerObs::new(n)).collect(),
+        }
+    }
+
+    /// Accumulator for op `i` (index into the arch's op list).
+    pub fn layer(&self, i: usize) -> Option<&LayerObs> {
+        self.layers.get(i)
+    }
+
+    pub fn clear(&self) {
+        self.passes.clear();
+        self.images.clear();
+        for l in &self.layers {
+            l.clear();
+        }
+    }
+}
+
+/// Per-scratch sampling countdown deciding, once per forward pass, whether
+/// this pass gets timed.  Lives in [`crate::backend::Scratch`] so each
+/// worker samples independently of the others; the first pass on a fresh
+/// scratch is always sampled (countdown starts at zero).
+#[derive(Default)]
+pub struct LayerTimer {
+    countdown: u32,
+}
+
+impl LayerTimer {
+    /// `true` ⇒ time this forward.  Consults the global enable flag and
+    /// sampling period on every call, so `--obs-sample` / `--no-obs` take
+    /// effect without rebuilding scratches.
+    pub fn tick(&mut self) -> bool {
+        if !super::enabled() {
+            return false;
+        }
+        self.tick_every(super::sample_every())
+    }
+
+    /// Countdown step for period `n` (`0` = never) — the global-free core
+    /// of [`Self::tick`].
+    fn tick_every(&mut self, n: u32) -> bool {
+        if n == 0 {
+            return false;
+        }
+        if self.countdown == 0 {
+            self.countdown = n - 1;
+            true
+        } else {
+            self.countdown -= 1;
+            false
+        }
+    }
+}
+
+/// Start a phase clock — `None` (and therefore zero work) when not sampling.
+#[inline]
+pub fn start(obs: Option<&LayerObs>) -> Option<Instant> {
+    obs.map(|_| Instant::now())
+}
+
+/// Close the current phase and start the next: charges `t0 → now` to
+/// `phase` and returns the new clock.  No-op when not sampling.
+#[inline]
+pub fn lap(obs: Option<&LayerObs>, phase: Phase, t0: Option<Instant>) -> Option<Instant> {
+    match (obs, t0) {
+        (Some(o), Some(t)) => {
+            let now = Instant::now();
+            o.add_phase_ns(phase, now.saturating_duration_since(t).as_nanos() as u64);
+            Some(now)
+        }
+        _ => None,
+    }
+}
+
+/// Charge `t0 → now` to the op's wall-time total.  No-op when not sampling.
+#[inline]
+pub fn finish(obs: Option<&LayerObs>, t0: Option<Instant>) {
+    if let (Some(o), Some(t)) = (obs, t0) {
+        o.add_total_ns(t.elapsed().as_nanos() as u64);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phases_accumulate_independently() {
+        let l = LayerObs::new("conv0");
+        l.add_phase_ns(Phase::Im2col, 10);
+        l.add_phase_ns(Phase::Gemm, 20);
+        l.add_phase_ns(Phase::Gemm, 5);
+        l.add_total_ns(40);
+        assert_eq!(l.phase_ns(Phase::Im2col), 10);
+        assert_eq!(l.phase_ns(Phase::Gemm), 25);
+        assert_eq!(l.phase_ns(Phase::Pack), 0);
+        assert_eq!(l.total_ns(), 40);
+        l.clear();
+        assert_eq!(l.phase_ns(Phase::Gemm), 0);
+        assert_eq!(l.total_ns(), 0);
+    }
+
+    #[test]
+    fn lap_chains_and_none_is_free() {
+        let l = LayerObs::new("x");
+        let t0 = start(Some(&l));
+        let t1 = lap(Some(&l), Phase::Im2col, t0);
+        lap(Some(&l), Phase::Gemm, t1);
+        finish(Some(&l), t0);
+        // both phases got *some* time and the chain reused the clock
+        assert!(t1.is_some());
+        // the None path must stay None end to end
+        let n0 = start(None);
+        assert!(n0.is_none());
+        assert!(lap(None, Phase::Gemm, n0).is_none());
+    }
+
+    #[test]
+    fn timer_samples_one_in_n() {
+        // tick_every is the countdown core tick() drives with the global
+        // period — testing it directly avoids racing other tests over the
+        // process-wide knob
+        let mut t = LayerTimer::default();
+        let hits: Vec<bool> = (0..9).map(|_| t.tick_every(4)).collect();
+        assert_eq!(hits, vec![true, false, false, false, true, false, false, false, true]);
+        let mut z = LayerTimer::default();
+        assert!(!z.tick_every(0), "period 0 must disable sampling");
+        let mut one = LayerTimer::default();
+        assert!(one.tick_every(1) && one.tick_every(1), "period 1 samples every pass");
+    }
+}

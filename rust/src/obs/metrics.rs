@@ -1,0 +1,398 @@
+//! Lock-free metric primitives: [`Counter`], [`Gauge`], and the sharded
+//! atomic [`LogHistogram`].
+//!
+//! Everything here is built from relaxed atomics only — recording on the
+//! serving hot path is a handful of uncontended `fetch_add`s, never a lock.
+//! The histogram generalizes the power-of-two
+//! [`crate::serve::Pow2Histogram`] two ways:
+//!
+//! * **sub-bucket resolution** — each power-of-two octave splits into
+//!   [`SUB`] log-linear sub-buckets ([`SUB_BITS`] = 4), bounding the
+//!   relative quantization error of any interpolated quantile at
+//!   `2^-SUB_BITS` = 6.25% (HDR-histogram layout), which is what makes
+//!   p99/p99.9 reported from buckets trustworthy;
+//! * **exact small samples** — the first [`EXACT_N`] raw values are kept
+//!   verbatim, so quantiles over few samples are *exact* (nearest-rank over
+//!   the sorted values) instead of bucket-biased.
+//!
+//! Counts are sharded across [`NSHARDS`] cache-line-separated shard arrays
+//! (each thread hashes to a shard via a process-wide thread counter), so
+//! concurrent recorders do not ping-pong the same cache lines; a snapshot
+//! sums the shards.
+
+use std::sync::atomic::{AtomicI64, AtomicU64, AtomicUsize, Ordering};
+
+/// Monotone event counter.
+#[derive(Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub const fn new() -> Self {
+        Counter(AtomicU64::new(0))
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+
+    /// Zero the counter (bench / test plumbing, not a hot-path operation).
+    pub fn clear(&self) {
+        self.0.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Last-write-wins instantaneous value (queue depth, pool load).
+#[derive(Default)]
+pub struct Gauge(AtomicI64);
+
+impl Gauge {
+    pub const fn new() -> Self {
+        Gauge(AtomicI64::new(0))
+    }
+
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, d: i64) {
+        self.0.fetch_add(d, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Sub-bucket resolution: each power-of-two octave splits into `2^SUB_BITS`
+/// log-linear sub-buckets.
+pub const SUB_BITS: u32 = 4;
+/// Sub-buckets per octave.
+pub const SUB: usize = 1 << SUB_BITS;
+/// Total bucket count covering the full `u64` range.
+const NBUCKETS: usize = (64 - SUB_BITS as usize + 1) * SUB;
+/// Raw values kept verbatim for exact small-sample quantiles.
+pub const EXACT_N: usize = 64;
+/// Count shards (power of two); threads hash to a shard by a process-wide
+/// registration counter, so the common case is one thread per shard.
+const NSHARDS: usize = 8;
+
+/// Bucket index of `v` (log-linear / HDR layout): exact below [`SUB`], then
+/// [`SUB`] sub-buckets per octave.
+fn bucket_of(v: u64) -> usize {
+    if v < SUB as u64 {
+        v as usize
+    } else {
+        let msb = 63 - v.leading_zeros() as u64;
+        let shift = msb - SUB_BITS as u64;
+        ((shift + 1) as usize) * SUB + ((v >> shift) as usize - SUB)
+    }
+}
+
+/// Inclusive `[lo, hi]` value range of bucket `i` (inverse of [`bucket_of`]).
+fn bucket_bounds(i: usize) -> (u64, u64) {
+    if i < SUB {
+        (i as u64, i as u64)
+    } else {
+        let shift = (i / SUB - 1) as u32;
+        let lo = ((SUB + i % SUB) as u64) << shift;
+        (lo, lo + (1u64 << shift) - 1)
+    }
+}
+
+/// One shard of bucket counts plus its own count/sum accumulators.
+struct Shard {
+    counts: Box<[AtomicU64]>,
+    sum: AtomicU64,
+}
+
+impl Default for Shard {
+    fn default() -> Self {
+        let counts = (0..NBUCKETS).map(|_| AtomicU64::new(0)).collect();
+        Shard { counts, sum: AtomicU64::new(0) }
+    }
+}
+
+/// Process-wide thread registration counter backing the per-thread shard
+/// choice (round-robin at thread birth — stable for the thread's lifetime).
+static SHARD_SEQ: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    static MY_SHARD: usize = SHARD_SEQ.fetch_add(1, Ordering::Relaxed) & (NSHARDS - 1);
+}
+
+/// Sharded atomic log-linear histogram over `u64` values (latencies in µs
+/// or ns — the metric name declares the unit).  See the module docs for the
+/// layout; [`Self::snapshot`] produces the queryable [`HistSnapshot`].
+pub struct LogHistogram {
+    shards: Box<[Shard]>,
+    /// First [`EXACT_N`] raw values, stored as `v + 1` so a racing snapshot
+    /// reads an unwritten slot as "empty" instead of as a spurious zero.
+    exact: Box<[AtomicU64]>,
+    exact_len: AtomicUsize,
+    min: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        LogHistogram {
+            shards: (0..NSHARDS).map(|_| Shard::default()).collect(),
+            exact: (0..EXACT_N).map(|_| AtomicU64::new(0)).collect(),
+            exact_len: AtomicUsize::new(0),
+            min: AtomicU64::new(u64::MAX),
+            max: AtomicU64::new(0),
+        }
+    }
+}
+
+impl LogHistogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one value — a few relaxed atomic RMWs, no locks, no
+    /// allocation; safe from any number of threads concurrently.
+    pub fn record(&self, v: u64) {
+        let shard = &self.shards[MY_SHARD.with(|s| *s)];
+        shard.counts[bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+        shard.sum.fetch_add(v, Ordering::Relaxed);
+        self.min.fetch_min(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+        if self.exact_len.load(Ordering::Relaxed) < EXACT_N {
+            let i = self.exact_len.fetch_add(1, Ordering::Relaxed);
+            if i < EXACT_N {
+                self.exact[i].store(v + 1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Zero every cell in place (bench plumbing between runs — racing
+    /// recorders will not corrupt anything, but counts taken across a clear
+    /// are obviously mixed).
+    pub fn clear(&self) {
+        for shard in self.shards.iter() {
+            for c in shard.counts.iter() {
+                c.store(0, Ordering::Relaxed);
+            }
+            shard.sum.store(0, Ordering::Relaxed);
+        }
+        for e in self.exact.iter() {
+            e.store(0, Ordering::Relaxed);
+        }
+        self.exact_len.store(0, Ordering::Relaxed);
+        self.min.store(u64::MAX, Ordering::Relaxed);
+        self.max.store(0, Ordering::Relaxed);
+    }
+
+    /// Point-in-time copy: shard counts summed per bucket, exact values
+    /// collected and sorted.  The snapshot's `count` is the bucket-sum, so
+    /// quantile ranks are always internally consistent even if recorders
+    /// are racing the snapshot.
+    pub fn snapshot(&self) -> HistSnapshot {
+        let mut buckets: Vec<(u64, u64, u64)> = Vec::new();
+        let mut count = 0u64;
+        let mut sum = 0u64;
+        for i in 0..NBUCKETS {
+            let c: u64 =
+                self.shards.iter().map(|s| s.counts[i].load(Ordering::Relaxed)).sum();
+            if c > 0 {
+                let (lo, hi) = bucket_bounds(i);
+                buckets.push((lo, hi, c));
+                count += c;
+            }
+        }
+        for s in self.shards.iter() {
+            sum += s.sum.load(Ordering::Relaxed);
+        }
+        let mut exact: Vec<u64> = self
+            .exact
+            .iter()
+            .map(|e| e.load(Ordering::Relaxed))
+            .filter(|&v| v > 0)
+            .map(|v| v - 1)
+            .collect();
+        exact.sort_unstable();
+        let min = self.min.load(Ordering::Relaxed);
+        HistSnapshot {
+            count,
+            sum,
+            min: if count == 0 { 0 } else { min },
+            max: self.max.load(Ordering::Relaxed),
+            buckets,
+            exact,
+        }
+    }
+
+    /// [`HistSnapshot::stats`] in one call.
+    pub fn stats(&self) -> HistStats {
+        self.snapshot().stats()
+    }
+}
+
+/// Point-in-time histogram contents, queryable for quantiles.
+#[derive(Clone, Debug)]
+pub struct HistSnapshot {
+    pub count: u64,
+    pub sum: u64,
+    pub min: u64,
+    pub max: u64,
+    /// `(lo, hi, count)` for non-empty buckets, ascending.
+    pub buckets: Vec<(u64, u64, u64)>,
+    /// Sorted raw values — complete iff `exact.len() as u64 == count`.
+    pub exact: Vec<u64>,
+}
+
+impl HistSnapshot {
+    /// Quantile `q ∈ [0, 1]`.  Exact (nearest-rank over the raw values)
+    /// while every sample is still in the exact window; otherwise
+    /// rank-interpolated *within* the owning bucket, with the bucket range
+    /// clamped to the observed `[min, max]` so tail quantiles never report
+    /// a bucket bound no sample reached.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        if self.exact.len() as u64 == self.count {
+            return self.exact[rank as usize - 1];
+        }
+        let mut cum = 0u64;
+        for &(lo, hi, c) in &self.buckets {
+            if cum + c >= rank {
+                let lo = lo.max(self.min);
+                let hi = hi.min(self.max).max(lo);
+                if c <= 1 || hi == lo {
+                    return lo;
+                }
+                let frac = (rank - cum - 1) as f64 / (c - 1) as f64;
+                return lo + (frac * (hi - lo) as f64).round() as u64;
+            }
+            cum += c;
+        }
+        self.max
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// The fixed stat bundle every exposition format reports.
+    pub fn stats(&self) -> HistStats {
+        HistStats {
+            count: self.count,
+            sum: self.sum,
+            max: self.max,
+            mean: self.mean(),
+            p50: self.quantile(0.50),
+            p95: self.quantile(0.95),
+            p99: self.quantile(0.99),
+            p999: self.quantile(0.999),
+        }
+    }
+}
+
+/// Rendered histogram stats — what snapshots serialize (quantiles are
+/// computed at snapshot time; buckets are not shipped).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct HistStats {
+    pub count: u64,
+    pub sum: u64,
+    pub max: u64,
+    pub mean: f64,
+    pub p50: u64,
+    pub p95: u64,
+    pub p99: u64,
+    pub p999: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_layout_is_contiguous_and_invertible() {
+        // every bucket's bounds map back to its own index, and consecutive
+        // buckets tile the value space with no gaps
+        let mut expect_lo = 0u64;
+        for i in 0..NBUCKETS {
+            let (lo, hi) = bucket_bounds(i);
+            assert_eq!(lo, expect_lo, "bucket {i}");
+            assert_eq!(bucket_of(lo), i);
+            assert_eq!(bucket_of(hi), i);
+            expect_lo = hi.wrapping_add(1);
+        }
+        assert_eq!(expect_lo, 0, "last bucket must end at u64::MAX");
+    }
+
+    #[test]
+    fn sub_bucket_relative_error_is_bounded() {
+        for v in [17u64, 100, 999, 12_345, 1 << 30, u64::MAX / 3] {
+            let (lo, hi) = bucket_bounds(bucket_of(v));
+            assert!(lo <= v && v <= hi);
+            // bucket width / lo <= 2^-SUB_BITS
+            assert!(((hi - lo) as f64) <= lo as f64 / SUB as f64 + 1.0, "v={v} lo={lo} hi={hi}");
+        }
+    }
+
+    #[test]
+    fn exact_window_gives_exact_quantiles() {
+        let h = LogHistogram::new();
+        let vals = [900u64, 5, 42, 7, 7, 123, 0, 31];
+        for &v in &vals {
+            h.record(v);
+        }
+        let snap = h.snapshot();
+        let mut sorted = vals.to_vec();
+        sorted.sort_unstable();
+        for (q, rank) in [(0.5, 4usize), (0.99, 8), (0.001, 1)] {
+            assert_eq!(snap.quantile(q), sorted[rank - 1], "q={q}");
+        }
+        assert_eq!(snap.count, vals.len() as u64);
+        assert_eq!(snap.sum, vals.iter().sum::<u64>());
+        assert_eq!(snap.max, 900);
+        assert_eq!(snap.min, 0);
+    }
+
+    #[test]
+    fn interpolated_quantiles_track_sorted_ground_truth() {
+        // 1..=1000 uniform: far past the exact window, so quantiles come
+        // from bucket interpolation — pin them against the sorted vector
+        let h = LogHistogram::new();
+        for v in 1..=1000u64 {
+            h.record(v);
+        }
+        let snap = h.snapshot();
+        let sorted: Vec<u64> = (1..=1000).collect();
+        for q in [0.50, 0.95, 0.99, 0.999] {
+            let rank = ((q * 1000.0).ceil() as usize).clamp(1, 1000);
+            let truth = sorted[rank - 1] as f64;
+            let got = snap.quantile(q) as f64;
+            let rel = (got - truth).abs() / truth;
+            assert!(rel <= 1.0 / SUB as f64, "q={q}: got {got}, truth {truth}, rel {rel}");
+        }
+        assert_eq!(snap.count, 1000);
+    }
+
+    #[test]
+    fn clear_resets_everything() {
+        let h = LogHistogram::new();
+        for v in 0..200u64 {
+            h.record(v);
+        }
+        h.clear();
+        let snap = h.snapshot();
+        assert_eq!(snap.count, 0);
+        assert_eq!(snap.sum, 0);
+        assert_eq!(snap.quantile(0.5), 0);
+        h.record(9);
+        assert_eq!(h.snapshot().quantile(0.5), 9);
+    }
+}

@@ -1,0 +1,856 @@
+//! `qft::obs` — stage-level tracing, per-layer kernel timing, and metric
+//! exposition for the serving engine.
+//!
+//! Std-only, always compiled, near-zero overhead when idle:
+//!
+//! * [`metrics`] — lock-free primitives: [`Counter`], [`Gauge`], and the
+//!   sharded atomic [`LogHistogram`] (log-linear sub-buckets for accurate
+//!   p99/p99.9, exact small samples, relaxed-atomic recording);
+//! * request lifecycle — every [`crate::serve::InferRequest`] carries a
+//!   [`Trace`]; the worker stamps a [`BatchSpan`] at batch-formed →
+//!   forward-start → forward-end → replied, and
+//!   [`StageMetrics::record_span`] turns the stamps into per-model
+//!   queue-wait / batch-form / compute / reply histograms;
+//! * [`layer`] — per-layer pack/im2col/gemm/recode wall-time accumulators
+//!   ([`NetObs`]) threaded through all six backends' forward paths,
+//!   sampled 1-in-N (default [`DEFAULT_SAMPLE_EVERY`]) by a [`LayerTimer`]
+//!   living in [`crate::backend::Scratch`];
+//! * exposition — [`snapshot`] freezes everything into a [`Snapshot`],
+//!   rendered by [`render_prometheus`] (text format, checked by
+//!   [`validate_prometheus`]) and [`render_json`] (parse back with
+//!   [`Snapshot::from_json`] — quantiles are computed at snapshot time, so
+//!   a flushed file re-renders without the buckets).
+//!
+//! Metric handles are process-global (a `BTreeMap` registry keyed by the
+//! serving wire key `"arch/backend"`), so warm-up and measured runs in one
+//! process accumulate into the same cells; [`reset`] zeroes everything in
+//! place between bench configurations.
+
+pub mod layer;
+pub mod metrics;
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+pub use layer::{LayerObs, LayerTimer, NetObs, Phase, PHASE_NAMES};
+pub use metrics::{Counter, Gauge, HistSnapshot, HistStats, LogHistogram};
+
+use crate::util::json::Value;
+
+/// Default layer-timing sampling period: 1 forward in 16 is timed.
+pub const DEFAULT_SAMPLE_EVERY: u32 = 16;
+
+static ENABLED: AtomicBool = AtomicBool::new(true);
+static SAMPLE_EVERY: AtomicU32 = AtomicU32::new(DEFAULT_SAMPLE_EVERY);
+
+/// Master switch (`--no-obs`).  When off, stage recording and layer timing
+/// are both skipped — the residual cost is one relaxed load per call site.
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Layer-timing sampling period (`--obs-sample N`): every Nth forward pass
+/// per scratch is timed.  `1` times everything, `0` disables layer timing
+/// while leaving stage histograms on.
+pub fn sample_every() -> u32 {
+    SAMPLE_EVERY.load(Ordering::Relaxed)
+}
+
+pub fn set_sample_every(n: u32) {
+    SAMPLE_EVERY.store(n, Ordering::Relaxed);
+}
+
+// ---------------------------------------------------------------------------
+// request lifecycle
+// ---------------------------------------------------------------------------
+
+/// Per-request lifecycle anchor, carried inside every
+/// [`crate::serve::InferRequest`] from client submit onward.
+#[derive(Clone, Copy, Debug)]
+pub struct Trace {
+    /// Client-side submit stamp; queue wait and end-to-end latency both
+    /// anchor here.
+    pub enqueued: Instant,
+}
+
+impl Trace {
+    pub fn start() -> Self {
+        Trace { enqueued: Instant::now() }
+    }
+}
+
+/// Batch-level stage stamps, taken by the worker that executes one
+/// micro-batch.  Every request in the batch shares these four instants;
+/// per-request queue wait comes from its own [`Trace`].
+#[derive(Clone, Copy, Debug)]
+pub struct BatchSpan {
+    /// The batcher handed the assembled batch to the worker.
+    pub formed: Instant,
+    /// Tensor staged, forward about to run.
+    pub fwd_start: Instant,
+    /// Forward returned (logits ready) — this is the completion stamp
+    /// end-to-end latency uses.
+    pub fwd_end: Instant,
+    /// Last reply handed to its channel.
+    pub replied: Instant,
+}
+
+/// Per-model stage histograms (all in µs) plus request/batch counters.
+/// One per registry entry, shared via `Arc` between the engine and the
+/// exposition layer.
+#[derive(Default)]
+pub struct StageMetrics {
+    /// enqueue → batch formed, one sample per request.
+    pub queue_wait_us: LogHistogram,
+    /// batch formed → forward start, one sample per batch.
+    pub batch_form_us: LogHistogram,
+    /// forward start → forward end, one sample per batch.
+    pub compute_us: LogHistogram,
+    /// forward end → last reply sent, one sample per batch.
+    pub reply_us: LogHistogram,
+    pub requests: Counter,
+    pub batches: Counter,
+}
+
+impl StageMetrics {
+    /// Record one executed micro-batch: the shared [`BatchSpan`] stamps
+    /// plus each member request's enqueue instant.  No-op when obs is
+    /// disabled.
+    pub fn record_span<I: IntoIterator<Item = Instant>>(&self, span: &BatchSpan, enqueued: I) {
+        if !enabled() {
+            return;
+        }
+        let us = |a: Instant, b: Instant| b.saturating_duration_since(a).as_micros() as u64;
+        let mut n = 0u64;
+        for enq in enqueued {
+            self.queue_wait_us.record(us(enq, span.formed));
+            n += 1;
+        }
+        self.batch_form_us.record(us(span.formed, span.fwd_start));
+        self.compute_us.record(us(span.fwd_start, span.fwd_end));
+        self.reply_us.record(us(span.fwd_end, span.replied));
+        self.requests.add(n);
+        self.batches.add(1);
+    }
+
+    pub fn clear(&self) {
+        self.queue_wait_us.clear();
+        self.batch_form_us.clear();
+        self.compute_us.clear();
+        self.reply_us.clear();
+        self.requests.clear();
+        self.batches.clear();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// global registry
+// ---------------------------------------------------------------------------
+
+/// Engine-wide instantaneous queue depth (set by the batcher on every
+/// submit/drain).
+pub fn queue_depth() -> &'static Gauge {
+    static G: Gauge = Gauge::new();
+    &G
+}
+
+/// Engine-wide total of admitted requests.
+pub fn submitted() -> &'static Counter {
+    static C: Counter = Counter::new();
+    &C
+}
+
+#[derive(Default)]
+struct Maps {
+    stages: BTreeMap<String, Arc<StageMetrics>>,
+    nets: BTreeMap<String, Arc<NetObs>>,
+}
+
+fn maps() -> &'static Mutex<Maps> {
+    static M: OnceLock<Mutex<Maps>> = OnceLock::new();
+    M.get_or_init(Mutex::default)
+}
+
+/// Get-or-create the stage histograms for a serving wire key
+/// (`"arch/backend"`).  The returned handle is lock-free to record into;
+/// the registry lock is only taken here and at snapshot time.
+pub fn stage_metrics(key: &str) -> Arc<StageMetrics> {
+    let mut m = maps().lock().unwrap();
+    m.stages.entry(key.to_string()).or_default().clone()
+}
+
+/// Get-or-create the per-layer accumulators for a prepared model.  Keyed
+/// like [`stage_metrics`]; re-preparing the same `arch × backend` (warm-up
+/// vs measured registry) reuses the same cells.
+pub fn net_obs(key: &str, layer_names: &[String]) -> Arc<NetObs> {
+    let mut m = maps().lock().unwrap();
+    m.nets
+        .entry(key.to_string())
+        .or_insert_with(|| Arc::new(NetObs::new(key, layer_names)))
+        .clone()
+}
+
+/// Zero every registered metric in place (registrations survive — live
+/// `Arc` handles keep pointing at the same, now-zeroed, cells).  Bench
+/// plumbing between configurations; not meant to race active recording.
+pub fn reset() {
+    queue_depth().set(0);
+    submitted().clear();
+    let m = maps().lock().unwrap();
+    for s in m.stages.values() {
+        s.clear();
+    }
+    for n in m.nets.values() {
+        n.clear();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// snapshot + exposition
+// ---------------------------------------------------------------------------
+
+/// Rendered stage stats for one model.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StageSnapshot {
+    pub model: String,
+    pub requests: u64,
+    pub batches: u64,
+    /// `(stage, stats in µs)` in fixed order:
+    /// queue_wait, batch_form, compute, reply.
+    pub stages: Vec<(String, HistStats)>,
+}
+
+impl StageSnapshot {
+    /// Stats for one stage by name, if present.
+    pub fn stage(&self, name: &str) -> Option<&HistStats> {
+        self.stages.iter().find(|(n, _)| n == name).map(|(_, s)| s)
+    }
+}
+
+/// Accumulated phase nanos for one op.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub struct LayerRow {
+    pub pack_ns: u64,
+    pub im2col_ns: u64,
+    pub gemm_ns: u64,
+    pub recode_ns: u64,
+    pub total_ns: u64,
+}
+
+/// Rendered layer timing for one model.
+#[derive(Clone, Debug, PartialEq)]
+pub struct NetSnapshot {
+    pub model: String,
+    pub passes: u64,
+    pub images: u64,
+    pub layers: Vec<(String, LayerRow)>,
+}
+
+/// Point-in-time copy of every registered metric, with histogram quantiles
+/// already computed — this is what both exposition formats serialize, and
+/// what [`Snapshot::from_json`] reconstructs from a flushed file.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Snapshot {
+    pub enabled: bool,
+    pub sample_every: u32,
+    pub queue_depth: i64,
+    pub submitted: u64,
+    pub stages: Vec<StageSnapshot>,
+    pub nets: Vec<NetSnapshot>,
+}
+
+/// Stage names in exposition order.
+pub const STAGE_NAMES: [&str; 4] = ["queue_wait", "batch_form", "compute", "reply"];
+
+/// Freeze every registered metric.
+pub fn snapshot() -> Snapshot {
+    let m = maps().lock().unwrap();
+    let stages = m
+        .stages
+        .iter()
+        .map(|(key, s)| StageSnapshot {
+            model: key.clone(),
+            requests: s.requests.get(),
+            batches: s.batches.get(),
+            stages: vec![
+                ("queue_wait".to_string(), s.queue_wait_us.stats()),
+                ("batch_form".to_string(), s.batch_form_us.stats()),
+                ("compute".to_string(), s.compute_us.stats()),
+                ("reply".to_string(), s.reply_us.stats()),
+            ],
+        })
+        .collect();
+    let nets = m
+        .nets
+        .iter()
+        .map(|(key, n)| NetSnapshot {
+            model: key.clone(),
+            passes: n.passes.get(),
+            images: n.images.get(),
+            layers: n
+                .layers
+                .iter()
+                .map(|l| {
+                    (
+                        l.name.clone(),
+                        LayerRow {
+                            pack_ns: l.phase_ns(Phase::Pack),
+                            im2col_ns: l.phase_ns(Phase::Im2col),
+                            gemm_ns: l.phase_ns(Phase::Gemm),
+                            recode_ns: l.phase_ns(Phase::Recode),
+                            total_ns: l.total_ns(),
+                        },
+                    )
+                })
+                .collect(),
+        })
+        .collect();
+    Snapshot {
+        enabled: enabled(),
+        sample_every: sample_every(),
+        queue_depth: queue_depth().get(),
+        submitted: submitted().get(),
+        stages,
+        nets,
+    }
+}
+
+/// [`Snapshot::to_prometheus`] of a fresh [`snapshot`].
+pub fn render_prometheus() -> String {
+    snapshot().to_prometheus()
+}
+
+/// [`Snapshot::to_json`] of a fresh [`snapshot`].
+pub fn render_json() -> String {
+    snapshot().to_json()
+}
+
+impl Snapshot {
+    /// Stage snapshot for a wire key, if present.
+    pub fn stage_for(&self, model: &str) -> Option<&StageSnapshot> {
+        self.stages.iter().find(|s| s.model == model)
+    }
+
+    /// Net snapshot for a wire key, if present.
+    pub fn net_for(&self, model: &str) -> Option<&NetSnapshot> {
+        self.nets.iter().find(|n| n.model == model)
+    }
+
+    /// Prometheus text exposition format.
+    pub fn to_prometheus(&self) -> String {
+        use std::fmt::Write as _;
+        let mut o = String::new();
+        let _ = writeln!(o, "# HELP qft_obs_enabled whether obs recording is on");
+        let _ = writeln!(o, "# TYPE qft_obs_enabled gauge");
+        let _ = writeln!(o, "qft_obs_enabled {}", self.enabled as u8);
+        let _ = writeln!(o, "# HELP qft_obs_sample_every layer-timing sampling period (0 = off)");
+        let _ = writeln!(o, "# TYPE qft_obs_sample_every gauge");
+        let _ = writeln!(o, "qft_obs_sample_every {}", self.sample_every);
+        let _ = writeln!(o, "# HELP qft_queue_depth instantaneous engine queue depth");
+        let _ = writeln!(o, "# TYPE qft_queue_depth gauge");
+        let _ = writeln!(o, "qft_queue_depth {}", self.queue_depth);
+        let _ = writeln!(o, "# HELP qft_submitted_total requests admitted by the batcher");
+        let _ = writeln!(o, "# TYPE qft_submitted_total counter");
+        let _ = writeln!(o, "qft_submitted_total {}", self.submitted);
+        if !self.stages.is_empty() {
+            let _ = writeln!(o, "# HELP qft_requests_total requests executed per model");
+            let _ = writeln!(o, "# TYPE qft_requests_total counter");
+            for s in &self.stages {
+                let _ =
+                    writeln!(o, "qft_requests_total{{model=\"{}\"}} {}", esc(&s.model), s.requests);
+            }
+            let _ = writeln!(o, "# HELP qft_batches_total micro-batches executed per model");
+            let _ = writeln!(o, "# TYPE qft_batches_total counter");
+            for s in &self.stages {
+                let _ =
+                    writeln!(o, "qft_batches_total{{model=\"{}\"}} {}", esc(&s.model), s.batches);
+            }
+            let _ = writeln!(o, "# HELP qft_stage_latency_us per-stage latency summary (µs)");
+            let _ = writeln!(o, "# TYPE qft_stage_latency_us summary");
+            for s in &self.stages {
+                for (stage, h) in &s.stages {
+                    let base = format!("model=\"{}\",stage=\"{stage}\"", esc(&s.model));
+                    for (q, v) in
+                        [("0.5", h.p50), ("0.95", h.p95), ("0.99", h.p99), ("0.999", h.p999)]
+                    {
+                        let _ = writeln!(
+                            o,
+                            "qft_stage_latency_us{{{base},quantile=\"{q}\"}} {v}"
+                        );
+                    }
+                    let _ = writeln!(o, "qft_stage_latency_us_sum{{{base}}} {}", h.sum);
+                    let _ = writeln!(o, "qft_stage_latency_us_count{{{base}}} {}", h.count);
+                    let _ = writeln!(o, "qft_stage_latency_us_max{{{base}}} {}", h.max);
+                }
+            }
+        }
+        if !self.nets.is_empty() {
+            let _ = writeln!(o, "# HELP qft_layer_sampled_passes_total sampled forward passes");
+            let _ = writeln!(o, "# TYPE qft_layer_sampled_passes_total counter");
+            for n in &self.nets {
+                let _ = writeln!(
+                    o,
+                    "qft_layer_sampled_passes_total{{model=\"{}\"}} {}",
+                    esc(&n.model),
+                    n.passes
+                );
+            }
+            let _ = writeln!(o, "# HELP qft_layer_sampled_images_total images in sampled passes");
+            let _ = writeln!(o, "# TYPE qft_layer_sampled_images_total counter");
+            for n in &self.nets {
+                let _ = writeln!(
+                    o,
+                    "qft_layer_sampled_images_total{{model=\"{}\"}} {}",
+                    esc(&n.model),
+                    n.images
+                );
+            }
+            let _ = writeln!(
+                o,
+                "# HELP qft_layer_phase_ns_total accumulated ns per layer and kernel phase"
+            );
+            let _ = writeln!(o, "# TYPE qft_layer_phase_ns_total counter");
+            for n in &self.nets {
+                for (name, row) in &n.layers {
+                    let base = format!("model=\"{}\",layer=\"{}\"", esc(&n.model), esc(name));
+                    for (phase, v) in [
+                        ("pack", row.pack_ns),
+                        ("im2col", row.im2col_ns),
+                        ("gemm", row.gemm_ns),
+                        ("recode", row.recode_ns),
+                        ("total", row.total_ns),
+                    ] {
+                        let _ = writeln!(
+                            o,
+                            "qft_layer_phase_ns_total{{{base},phase=\"{phase}\"}} {v}"
+                        );
+                    }
+                }
+            }
+        }
+        o
+    }
+
+    /// Compact JSON exposition (parse back with [`Snapshot::from_json`]).
+    pub fn to_json(&self) -> String {
+        let hist = |h: &HistStats| {
+            obj([
+                ("count", Value::Num(h.count as f64)),
+                ("sum", Value::Num(h.sum as f64)),
+                ("max", Value::Num(h.max as f64)),
+                ("mean", Value::Num(h.mean)),
+                ("p50", Value::Num(h.p50 as f64)),
+                ("p95", Value::Num(h.p95 as f64)),
+                ("p99", Value::Num(h.p99 as f64)),
+                ("p999", Value::Num(h.p999 as f64)),
+            ])
+        };
+        let stages = self
+            .stages
+            .iter()
+            .map(|s| {
+                let mut kv: Vec<(String, Value)> = vec![
+                    ("model".to_string(), Value::Str(s.model.clone())),
+                    ("requests".to_string(), Value::Num(s.requests as f64)),
+                    ("batches".to_string(), Value::Num(s.batches as f64)),
+                ];
+                for (name, h) in &s.stages {
+                    kv.push((stage_json_key(name), hist(h)));
+                }
+                obj(kv)
+            })
+            .collect();
+        let nets = self
+            .nets
+            .iter()
+            .map(|n| {
+                let layers = n
+                    .layers
+                    .iter()
+                    .map(|(name, r)| {
+                        obj([
+                            ("name", Value::Str(name.clone())),
+                            ("pack_ns", Value::Num(r.pack_ns as f64)),
+                            ("im2col_ns", Value::Num(r.im2col_ns as f64)),
+                            ("gemm_ns", Value::Num(r.gemm_ns as f64)),
+                            ("recode_ns", Value::Num(r.recode_ns as f64)),
+                            ("total_ns", Value::Num(r.total_ns as f64)),
+                        ])
+                    })
+                    .collect();
+                obj([
+                    ("model", Value::Str(n.model.clone())),
+                    ("passes", Value::Num(n.passes as f64)),
+                    ("images", Value::Num(n.images as f64)),
+                    ("layers", Value::Arr(layers)),
+                ])
+            })
+            .collect();
+        obj([
+            ("enabled", Value::Bool(self.enabled)),
+            ("sample_every", Value::Num(self.sample_every as f64)),
+            (
+                "engine",
+                obj([
+                    ("queue_depth", Value::Num(self.queue_depth as f64)),
+                    ("submitted", Value::Num(self.submitted as f64)),
+                ]),
+            ),
+            ("stages", Value::Arr(stages)),
+            ("nets", Value::Arr(nets)),
+        ])
+        .to_string_compact()
+    }
+
+    /// Parse a [`Snapshot::to_json`] document back (what `repro stats`
+    /// does to a `--stats-json` flush file).
+    pub fn from_json(text: &str) -> Result<Snapshot> {
+        let v = Value::parse(text).context("obs snapshot: invalid JSON")?;
+        let hist = |v: &Value| -> Result<HistStats> {
+            Ok(HistStats {
+                count: v.get("count")?.num()? as u64,
+                sum: v.get("sum")?.num()? as u64,
+                max: v.get("max")?.num()? as u64,
+                mean: v.get("mean")?.num()?,
+                p50: v.get("p50")?.num()? as u64,
+                p95: v.get("p95")?.num()? as u64,
+                p99: v.get("p99")?.num()? as u64,
+                p999: v.get("p999")?.num()? as u64,
+            })
+        };
+        let engine = v.get("engine")?;
+        let mut stages = Vec::new();
+        for s in v.get("stages")?.arr()? {
+            let mut rows = Vec::new();
+            for name in STAGE_NAMES {
+                rows.push((name.to_string(), hist(s.get(&stage_json_key(name))?)?));
+            }
+            stages.push(StageSnapshot {
+                model: s.get("model")?.str()?.to_string(),
+                requests: s.get("requests")?.num()? as u64,
+                batches: s.get("batches")?.num()? as u64,
+                stages: rows,
+            });
+        }
+        let mut nets = Vec::new();
+        for n in v.get("nets")?.arr()? {
+            let mut layers = Vec::new();
+            for l in n.get("layers")?.arr()? {
+                layers.push((
+                    l.get("name")?.str()?.to_string(),
+                    LayerRow {
+                        pack_ns: l.get("pack_ns")?.num()? as u64,
+                        im2col_ns: l.get("im2col_ns")?.num()? as u64,
+                        gemm_ns: l.get("gemm_ns")?.num()? as u64,
+                        recode_ns: l.get("recode_ns")?.num()? as u64,
+                        total_ns: l.get("total_ns")?.num()? as u64,
+                    },
+                ));
+            }
+            nets.push(NetSnapshot {
+                model: n.get("model")?.str()?.to_string(),
+                passes: n.get("passes")?.num()? as u64,
+                images: n.get("images")?.num()? as u64,
+                layers,
+            });
+        }
+        Ok(Snapshot {
+            enabled: v.get("enabled")?.boolean()?,
+            sample_every: v.get("sample_every")?.num()? as u32,
+            queue_depth: engine.get("queue_depth")?.num()? as i64,
+            submitted: engine.get("submitted")?.num()? as u64,
+            stages,
+            nets,
+        })
+    }
+
+    /// Human-readable table (the `repro stats` default and the shutdown
+    /// dump).
+    pub fn to_table(&self) -> String {
+        use std::fmt::Write as _;
+        let mut o = String::new();
+        let _ = writeln!(
+            o,
+            "obs: {}, layer sampling {} | queue depth {} | {} submitted",
+            if self.enabled { "enabled" } else { "disabled" },
+            match self.sample_every {
+                0 => "off".to_string(),
+                n => format!("1-in-{n}"),
+            },
+            self.queue_depth,
+            self.submitted,
+        );
+        if !self.stages.is_empty() {
+            let _ = writeln!(o, "\n== request stages (µs) ==");
+            for s in &self.stages {
+                let _ = writeln!(
+                    o,
+                    "model {}: {} requests / {} batches",
+                    s.model, s.requests, s.batches
+                );
+                let _ = writeln!(
+                    o,
+                    "  {:<12} {:>8} {:>8} {:>8} {:>8} {:>8} {:>8} {:>9}",
+                    "stage", "count", "p50", "p95", "p99", "p999", "max", "mean"
+                );
+                for (name, h) in &s.stages {
+                    let _ = writeln!(
+                        o,
+                        "  {:<12} {:>8} {:>8} {:>8} {:>8} {:>8} {:>8} {:>9.1}",
+                        name, h.count, h.p50, h.p95, h.p99, h.p999, h.max, h.mean
+                    );
+                }
+            }
+        }
+        let timed: Vec<_> = self.nets.iter().filter(|n| n.passes > 0).collect();
+        if !timed.is_empty() {
+            let _ = writeln!(o, "\n== sampled layer timings (µs per sampled pass) ==");
+            for n in timed {
+                let _ = writeln!(
+                    o,
+                    "model {}: {} passes / {} images",
+                    n.model, n.passes, n.images
+                );
+                let _ = writeln!(
+                    o,
+                    "  {:<12} {:>9} {:>9} {:>9} {:>9} {:>9}",
+                    "layer", "pack", "im2col", "gemm", "recode", "total"
+                );
+                let per = |ns: u64| ns as f64 / n.passes as f64 / 1e3;
+                for (name, r) in &n.layers {
+                    let _ = writeln!(
+                        o,
+                        "  {:<12} {:>9.1} {:>9.1} {:>9.1} {:>9.1} {:>9.1}",
+                        name,
+                        per(r.pack_ns),
+                        per(r.im2col_ns),
+                        per(r.gemm_ns),
+                        per(r.recode_ns),
+                        per(r.total_ns)
+                    );
+                }
+            }
+        }
+        o
+    }
+}
+
+/// JSON object key for a stage histogram (unit-suffixed).
+fn stage_json_key(stage: &str) -> String {
+    format!("{stage}_us")
+}
+
+fn obj<K: Into<String>, I: IntoIterator<Item = (K, Value)>>(kv: I) -> Value {
+    Value::Obj(kv.into_iter().map(|(k, v)| (k.into(), v)).collect())
+}
+
+/// Escape a Prometheus label value.
+fn esc(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+// ---------------------------------------------------------------------------
+// exposition-format validation
+// ---------------------------------------------------------------------------
+
+/// Line-format check for the Prometheus text exposition: every non-empty
+/// line must be a well-formed `# HELP` / `# TYPE` comment or a
+/// `name{labels} value` sample.  Used by the `obs-overhead` bench to
+/// validate the artifact it uploads, and by the test suite.
+pub fn validate_prometheus(text: &str) -> Result<()> {
+    for (i, raw) in text.lines().enumerate() {
+        let ln = i + 1;
+        let line = raw.trim_end();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('#') {
+            let rest = rest.trim_start();
+            let mut it = rest.splitn(3, ' ');
+            let kw = it.next().unwrap_or("");
+            let name = it.next().unwrap_or("");
+            if !matches!(kw, "HELP" | "TYPE") {
+                bail!("line {ln}: comment is neither HELP nor TYPE: {line:?}");
+            }
+            if !valid_metric_name(name) {
+                bail!("line {ln}: bad metric name {name:?}");
+            }
+            let third = it.next().unwrap_or("");
+            if kw == "TYPE"
+                && !matches!(third, "counter" | "gauge" | "summary" | "histogram" | "untyped")
+            {
+                bail!("line {ln}: bad metric type {third:?}");
+            }
+            continue;
+        }
+        parse_sample_line(line).with_context(|| format!("line {ln}: {line:?}"))?;
+    }
+    Ok(())
+}
+
+fn valid_metric_name(s: &str) -> bool {
+    let mut ch = s.chars();
+    match ch.next() {
+        Some(c) if c.is_ascii_alphabetic() || c == '_' || c == ':' => {}
+        _ => return false,
+    }
+    ch.all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+}
+
+fn parse_sample_line(line: &str) -> Result<()> {
+    let b = line.as_bytes();
+    let mut i = 0;
+    while i < b.len() && (b[i].is_ascii_alphanumeric() || b[i] == b'_' || b[i] == b':') {
+        i += 1;
+    }
+    if !valid_metric_name(&line[..i]) {
+        bail!("bad metric name");
+    }
+    if i < b.len() && b[i] == b'{' {
+        i += 1;
+        loop {
+            let s = i;
+            while i < b.len() && (b[i].is_ascii_alphanumeric() || b[i] == b'_') {
+                i += 1;
+            }
+            if i == s {
+                bail!("empty label name");
+            }
+            if i >= b.len() || b[i] != b'=' {
+                bail!("label missing '='");
+            }
+            i += 1;
+            if i >= b.len() || b[i] != b'"' {
+                bail!("label value not quoted");
+            }
+            i += 1;
+            while i < b.len() && b[i] != b'"' {
+                if b[i] == b'\\' {
+                    i += 1;
+                }
+                i += 1;
+            }
+            if i >= b.len() {
+                bail!("unterminated label value");
+            }
+            i += 1;
+            match b.get(i) {
+                Some(b',') => i += 1,
+                Some(b'}') => {
+                    i += 1;
+                    break;
+                }
+                _ => bail!("label list missing ',' or '}}'"),
+            }
+        }
+    }
+    if i >= b.len() || b[i] != b' ' {
+        bail!("missing space before value");
+    }
+    let val = line[i + 1..].trim();
+    if matches!(val, "+Inf" | "-Inf" | "NaN") {
+        return Ok(());
+    }
+    val.parse::<f64>().map(|_| ()).map_err(|_| anyhow::anyhow!("bad sample value {val:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn stage_metrics_split_the_span() {
+        let sm = StageMetrics::default();
+        let t0 = Instant::now();
+        let span = BatchSpan {
+            formed: t0 + Duration::from_micros(100),
+            fwd_start: t0 + Duration::from_micros(150),
+            fwd_end: t0 + Duration::from_micros(950),
+            replied: t0 + Duration::from_micros(1000),
+        };
+        sm.record_span(&span, [t0, t0 + Duration::from_micros(60)]);
+        assert_eq!(sm.requests.get(), 2);
+        assert_eq!(sm.batches.get(), 1);
+        let qw = sm.queue_wait_us.snapshot();
+        assert_eq!(qw.count, 2);
+        assert_eq!(qw.max, 100);
+        assert_eq!(qw.min, 40);
+        assert_eq!(sm.batch_form_us.snapshot().max, 50);
+        assert_eq!(sm.compute_us.snapshot().max, 800);
+        assert_eq!(sm.reply_us.snapshot().max, 50);
+    }
+
+    #[test]
+    fn json_round_trips_through_from_json() {
+        let key = "jsontest/lw";
+        let sm = stage_metrics(key);
+        let no = net_obs(key, &["conv0".to_string(), "fc".to_string()]);
+        let t0 = Instant::now();
+        let span = BatchSpan {
+            formed: t0 + Duration::from_micros(10),
+            fwd_start: t0 + Duration::from_micros(20),
+            fwd_end: t0 + Duration::from_micros(500),
+            replied: t0 + Duration::from_micros(510),
+        };
+        sm.record_span(&span, [t0]);
+        no.passes.add(3);
+        no.images.add(24);
+        no.layers[0].add_phase_ns(Phase::Gemm, 1234);
+        no.layers[0].add_total_ns(2000);
+        let snap = snapshot();
+        let back = Snapshot::from_json(&snap.to_json()).unwrap();
+        assert_eq!(back.stage_for(key), snap.stage_for(key));
+        assert_eq!(back.net_for(key), snap.net_for(key));
+        assert_eq!(back.net_for(key).unwrap().layers[0].1.gemm_ns, 1234);
+        // the table renderer shouldn't panic on real data
+        assert!(back.to_table().contains(key));
+    }
+
+    #[test]
+    fn prometheus_output_validates() {
+        let key = "promtest/dch";
+        let sm = stage_metrics(key);
+        let t0 = Instant::now();
+        let span =
+            BatchSpan { formed: t0, fwd_start: t0, fwd_end: t0, replied: t0 };
+        sm.record_span(&span, [t0]);
+        let text = render_prometheus();
+        validate_prometheus(&text).unwrap();
+        let want =
+            "qft_stage_latency_us{model=\"promtest/dch\",stage=\"compute\",quantile=\"0.99\"}";
+        assert!(text.contains(want));
+        assert!(text.contains("# TYPE qft_stage_latency_us summary"));
+    }
+
+    #[test]
+    fn validator_rejects_malformed_lines() {
+        assert!(validate_prometheus("ok_metric 1\n").is_ok());
+        assert!(validate_prometheus("ok{a=\"b\",c=\"d/e\"} 2.5\n").is_ok());
+        assert!(validate_prometheus("# TYPE x counter\nx 1\n").is_ok());
+        assert!(validate_prometheus("9bad 1\n").is_err());
+        assert!(validate_prometheus("no_value\n").is_err());
+        assert!(validate_prometheus("unquoted{a=b} 1\n").is_err());
+        assert!(validate_prometheus("bad{a=\"b\"} one\n").is_err());
+        assert!(validate_prometheus("# BANANA x y\n").is_err());
+        assert!(validate_prometheus("# TYPE x fruit\n").is_err());
+        assert!(validate_prometheus("open{a=\"b\" 1\n").is_err());
+    }
+
+    #[test]
+    fn config_knobs_round_trip() {
+        let prev = sample_every();
+        set_sample_every(5);
+        assert_eq!(sample_every(), 5);
+        set_sample_every(prev);
+        assert!(enabled(), "tests assume the default-on state");
+    }
+}

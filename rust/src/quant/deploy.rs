@@ -30,8 +30,9 @@ use std::collections::HashMap;
 use crate::kernel::PackedW;
 use crate::nn::{apply_act_inplace, ArchSpec, OpKind, ParamMap};
 use crate::par::Pool;
+use crate::obs::{layer, NetObs, Phase};
 use crate::tensor::conv::{
-    conv2d, conv2d_packed_into, conv2d_packed_into_par, ConvScratch, PackedConvW,
+    conv2d_obs, conv2d_packed_into_obs, conv2d_packed_into_par_obs, ConvScratch, PackedConvW,
 };
 use crate::tensor::Tensor;
 use crate::WEIGHT_QMAX;
@@ -142,6 +143,20 @@ pub fn forward_fakequant(
     mode: Mode,
     x: &Tensor,
 ) -> (Tensor, Tensor) {
+    forward_fakequant_obs(arch, tm, mode, x, None)
+}
+
+/// [`forward_fakequant`] with optional per-layer timing: on a sampled pass
+/// each conv op laps kernel co-vector derivation + fake-quant kernel build
+/// into `pack`, the conv into `im2col` / `gemm`, and the output fake-quant
+/// re-encode (`lw`) into `recode`; the fc matmul is all `gemm`.
+pub fn forward_fakequant_obs(
+    arch: &ArchSpec,
+    tm: &ParamMap,
+    mode: Mode,
+    x: &Tensor,
+    obs: Option<&NetObs>,
+) -> (Tensor, Tensor) {
     let mut vals: std::collections::HashMap<usize, Tensor> = Default::default();
     let x0 = match mode {
         Mode::Lw => {
@@ -153,19 +168,25 @@ pub fn forward_fakequant(
     vals.insert(0, x0);
     let mut logits = None;
     let mut feat = None;
-    for op in &arch.ops {
+    for (i, op) in arch.ops.iter().enumerate() {
+        let lobs = obs.and_then(|o| o.layer(i));
         match op.kind() {
             OpKind::Conv => {
                 let w = tm.get(&format!("w:{}", op.name));
                 let b = tm.get(&format!("b:{}", op.name));
+                let t0 = layer::start(lobs);
                 let (s_l, s_r) = kernel_covectors(arch, tm, mode, op);
                 let wq = fq_kernel(w, &s_l, &s_r);
-                let mut a = conv2d(&vals[&op.inp], &wq, &b.data, op.stride, op.groups);
+                layer::lap(lobs, Phase::Pack, t0);
+                let mut a = conv2d_obs(&vals[&op.inp], &wq, &b.data, op.stride, op.groups, lobs);
                 apply_act_inplace(&mut a, &op.act);
                 if mode == Mode::Lw {
                     let (qmin, qmax) = act_range(arch, op.out);
+                    let tr = layer::start(lobs);
                     a = super::mmse::fq_act(&a, &sv_of(tm, op.out), qmin, qmax);
+                    layer::lap(lobs, Phase::Recode, tr);
                 }
+                layer::finish(lobs, t0);
                 vals.insert(op.out, a);
             }
             OpKind::Add => {
@@ -184,12 +205,15 @@ pub fn forward_fakequant(
             OpKind::Fc => {
                 let w = tm.get(&format!("w:{}", op.name));
                 let b = tm.get(&format!("b:{}", op.name));
+                let t0 = layer::start(lobs);
                 let mut y = vals[&op.inp].matmul(w);
+                layer::lap(lobs, Phase::Gemm, t0);
                 for row in y.data.chunks_mut(b.data.len()) {
                     for (v, &bv) in row.iter_mut().zip(&b.data) {
                         *v += bv;
                     }
                 }
+                layer::finish(lobs, t0);
                 logits = Some(y.clone());
                 vals.insert(op.out, y);
             }
@@ -524,7 +548,7 @@ impl DeployedModel {
     /// Batched online forward: logits `[batch, classes]`.  Results are
     /// bit-exactly independent of how images are grouped into batches.
     pub fn forward_batch(&self, x: &Tensor, scratch: &mut DeployScratch) -> Tensor {
-        self.exec(x, scratch, false, None).0
+        self.exec(x, scratch, false, None, None).0
     }
 
     /// As [`Self::forward_batch`] but also returns the decoded backbone
@@ -534,7 +558,7 @@ impl DeployedModel {
         x: &Tensor,
         scratch: &mut DeployScratch,
     ) -> (Tensor, Tensor) {
-        let (logits, feat) = self.exec(x, scratch, true, None);
+        let (logits, feat) = self.exec(x, scratch, true, None, None);
         (logits, feat.expect("arch has gap"))
     }
 
@@ -548,7 +572,23 @@ impl DeployedModel {
         scratch: &mut DeployScratch,
         pool: &Pool,
     ) -> Tensor {
-        self.exec_pooled(x, scratch, false, pool).0
+        self.exec_pooled(x, scratch, false, pool, None).0
+    }
+
+    /// [`Self::forward_batch_pooled`] with optional per-layer timing: convs
+    /// lap `im2col` / `gemm` inside the kernel and the integer
+    /// activation+recode block into `recode`; the fc matmul is `gemm`.  On
+    /// the batch-parallel path every chunk laps into the same shared
+    /// atomics, so recorded nanoseconds (phases AND totals) are CPU time
+    /// summed across pool threads.
+    pub fn forward_batch_pooled_obs(
+        &self,
+        x: &Tensor,
+        scratch: &mut DeployScratch,
+        pool: &Pool,
+        obs: Option<&NetObs>,
+    ) -> Tensor {
+        self.exec_pooled(x, scratch, false, pool, obs).0
     }
 
     /// As [`Self::forward_batch_pooled`] but also returning the decoded
@@ -559,7 +599,20 @@ impl DeployedModel {
         scratch: &mut DeployScratch,
         pool: &Pool,
     ) -> (Tensor, Tensor) {
-        let (logits, feat) = self.exec_pooled(x, scratch, true, pool);
+        let (logits, feat) = self.exec_pooled(x, scratch, true, pool, None);
+        (logits, feat.expect("arch has gap"))
+    }
+
+    /// As [`Self::forward_batch_pooled_obs`] but also returning the decoded
+    /// backbone feature map.
+    pub fn forward_batch_feat_pooled_obs(
+        &self,
+        x: &Tensor,
+        scratch: &mut DeployScratch,
+        pool: &Pool,
+        obs: Option<&NetObs>,
+    ) -> (Tensor, Tensor) {
+        let (logits, feat) = self.exec_pooled(x, scratch, true, pool, obs);
         (logits, feat.expect("arch has gap"))
     }
 
@@ -571,15 +624,16 @@ impl DeployedModel {
         scratch: &mut DeployScratch,
         want_feat: bool,
         pool: &Pool,
+        obs: Option<&NetObs>,
     ) -> (Tensor, Option<Tensor>) {
         assert_eq!(x.rank(), 4, "input must be [b,h,w,c]");
         if pool.threads() <= 1 {
-            return self.exec(x, scratch, want_feat, None);
+            return self.exec(x, scratch, want_feat, None, obs);
         }
         if x.shape[0] > 1 {
-            return self.exec_batch_par(x, scratch, want_feat, pool);
+            return self.exec_batch_par(x, scratch, want_feat, pool, obs);
         }
-        self.exec(x, scratch, want_feat, Some(pool))
+        self.exec(x, scratch, want_feat, Some(pool), obs)
     }
 
     /// Batch-level parallel exec via the shared [`exec_batch_par_generic`]
@@ -593,6 +647,7 @@ impl DeployedModel {
         scratch: &mut DeployScratch,
         want_feat: bool,
         pool: &Pool,
+        obs: Option<&NetObs>,
     ) -> (Tensor, Option<Tensor>) {
         exec_batch_par_generic(
             x,
@@ -600,7 +655,7 @@ impl DeployedModel {
             want_feat,
             pool,
             &mut scratch.par,
-            |xin, child, wf| self.exec(xin, child, wf, None),
+            |xin, child, wf| self.exec(xin, child, wf, None, obs),
         )
     }
 
@@ -610,6 +665,7 @@ impl DeployedModel {
         scratch: &mut DeployScratch,
         want_feat: bool,
         pool: Option<&Pool>,
+        obs: Option<&NetObs>,
     ) -> (Tensor, Option<Tensor>) {
         assert_eq!(x.rank(), 4, "input must be [b,h,w,c]");
         // input: encode to codes (lw) or pass through (dch)
@@ -634,15 +690,19 @@ impl DeployedModel {
 
         let mut logits = None;
         let mut feat = None;
-        for pop in &self.ops {
+        for (i, pop) in self.ops.iter().enumerate() {
+            // prepared ops are 1:1 with arch ops, so index i addresses the
+            // matching per-layer timing slot on a sampled pass
+            let lobs = obs.and_then(|o| o.layer(i));
             match pop {
                 PreparedOp::Conv(pc) => {
+                    let t0 = layer::start(lobs);
                     let mut acc = take_val(&mut scratch.vals, pc.out);
                     // intra-op (output-row) parallelism when a pool was
                     // handed down; identical results either way.  Weights
                     // were panel-packed once at prepare time.
                     match pool {
-                        Some(p) => conv2d_packed_into_par(
+                        Some(p) => conv2d_packed_into_par_obs(
                             &scratch.vals[&pc.inp],
                             &pc.packed,
                             &pc.bias,
@@ -650,16 +710,19 @@ impl DeployedModel {
                             &mut scratch.conv,
                             &mut acc,
                             p,
+                            lobs,
                         ),
-                        None => conv2d_packed_into(
+                        None => conv2d_packed_into_obs(
                             &scratch.vals[&pc.inp],
                             &pc.packed,
                             &pc.bias,
                             pc.stride,
                             &mut scratch.conv,
                             &mut acc,
+                            lobs,
                         ),
                     }
+                    let tr = layer::start(lobs);
                     match pc.recode {
                         Some((f, qmin, qmax)) => {
                             // integer activation on accumulator codes
@@ -683,6 +746,8 @@ impl DeployedModel {
                             _ => {}
                         },
                     }
+                    layer::lap(lobs, Phase::Recode, tr);
+                    layer::finish(lobs, t0);
                     scratch.vals.insert(pc.out, acc);
                 }
                 PreparedOp::Add { a, b, out, act, dec } => {
@@ -747,6 +812,7 @@ impl DeployedModel {
                     // logits leave the scratch (they are the return value),
                     // so this one buffer is allocated per call by design
                     let mut ydata = Vec::new();
+                    let t0 = layer::start(lobs);
                     match pool {
                         Some(p) => {
                             crate::tensor::size_for_write(&mut ydata, m * w.n());
@@ -754,12 +820,14 @@ impl DeployedModel {
                         }
                         None => crate::tensor::matmul_packed_slices(&src.data, m, w, &mut ydata),
                     }
+                    layer::lap(lobs, Phase::Gemm, t0);
                     let mut y = Tensor::new(vec![m, w.n()], ydata);
                     for row in y.data.chunks_mut(bias.len()) {
                         for (v, &bv) in row.iter_mut().zip(bias) {
                             *v += bv;
                         }
                     }
+                    layer::finish(lobs, t0);
                     logits = Some(y);
                 }
             }

@@ -28,14 +28,16 @@ use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 /// One classification request: an image for a registry slot, plus the reply
-/// channel.  `enqueued` anchors the end-to-end latency measurement.
+/// channel.  The [`crate::obs::Trace`] anchors the end-to-end latency
+/// measurement and the per-request queue-wait stage.
 pub struct InferRequest {
     pub id: u64,
     /// Registry slot of the (arch × mode) deployment to run.
     pub model: usize,
     /// Flat NHWC image, `hw*hw*ch` of the target model.
     pub image: Vec<f32>,
-    pub enqueued: Instant,
+    /// Lifecycle stamps, starting with the client-side enqueue instant.
+    pub trace: crate::obs::Trace,
     pub resp: Sender<InferReply>,
 }
 
@@ -147,6 +149,8 @@ impl Batcher {
         st.q.push_back(req);
         let depth = st.q.len();
         drop(st);
+        crate::obs::queue_depth().set(depth as i64);
+        crate::obs::submitted().add(1);
         self.not_empty.notify_one();
         Ok(depth)
     }
@@ -240,6 +244,7 @@ impl Batcher {
         // make sure an idle worker hears about them even though this thread
         // may have consumed the submitter's notification
         let leftovers = !st.q.is_empty();
+        crate::obs::queue_depth().set(st.q.len() as i64);
         drop(st);
         self.not_full.notify_all();
         if leftovers {
@@ -273,7 +278,7 @@ mod tests {
                 id,
                 model,
                 image: vec![0.0; 4],
-                enqueued: Instant::now(),
+                trace: crate::obs::Trace::start(),
                 resp: tx,
             },
             rx,

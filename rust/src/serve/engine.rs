@@ -24,6 +24,7 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Result};
 
 use crate::backend::Scratch;
+use crate::obs;
 use crate::serve::batcher::{BatchPolicy, Batcher, InferReply, InferRequest};
 use crate::serve::registry::Registry;
 use crate::serve::stats::{ServeReport, ServeStats};
@@ -164,7 +165,7 @@ impl Client {
             id: self.next_id.fetch_add(1, Ordering::Relaxed),
             model,
             image,
-            enqueued: Instant::now(),
+            trace: obs::Trace::start(),
             resp: tx,
         };
         let depth = self
@@ -179,11 +180,21 @@ impl Client {
 
 /// Worker body: assemble → stack → batched backend forward → reply.
 /// Returns the number of batches it executed (join-side diagnostic).
+///
+/// Stage stamps: `formed` (batch in hand) → `fwd_start` (tensor staged) →
+/// `fwd_end` (logits ready; this is the completion stamp end-to-end
+/// latency uses, taken *before* any reply is sent) → `replied` (last reply
+/// handed to its channel).  [`obs::StageMetrics::record_span`] splits them
+/// into per-model queue-wait / batch-form / compute / reply histograms,
+/// and [`ServeStats::record_batch`] records completion and reply-inclusive
+/// end-to-end latency side by side.
 fn worker_loop(reg: &Registry, batcher: &Batcher, stats: &ServeStats, adaptive: bool) -> u64 {
     let pool = crate::par::global();
     let mut scratch = Scratch::new();
     let mut staging: Vec<f32> = Vec::new();
     let mut latencies: Vec<Duration> = Vec::new();
+    let mut reply_lats: Vec<Duration> = Vec::new();
+    let mut enqueues: Vec<Instant> = Vec::new();
     let mut executed = 0u64;
     loop {
         // pool-aware hold: the batcher samples the shared kernel pool's
@@ -195,12 +206,13 @@ fn worker_loop(reg: &Registry, batcher: &Batcher, stats: &ServeStats, adaptive: 
             batcher.next_batch()
         };
         let Some(mut batch) = next else { break };
+        let formed = Instant::now();
         // invalid slot (possible only via a raw Batcher submit): drop the
         // batch — the closed senders surface as client-side errors
-        let Some(model) = batch.first().and_then(|r| reg.try_get(r.model)).map(|e| &e.model)
-        else {
+        let Some(entry) = batch.first().and_then(|r| reg.try_get(r.model)) else {
             continue;
         };
+        let model = &entry.model;
         let px = model.image_len();
         // Client::infer validates payloads at admission; anything that
         // reached us through a raw Batcher submit gets dropped (its sender
@@ -218,16 +230,20 @@ fn worker_loop(reg: &Registry, batcher: &Batcher, stats: &ServeStats, adaptive: 
             vec![n, model.input_hw(), model.input_hw(), model.input_ch()],
             std::mem::take(&mut staging),
         );
+        let fwd_start = Instant::now();
         let logits = model.forward_batch(&x, &mut scratch, pool);
         staging = x.data; // reclaim the staging buffer
         let done = Instant::now();
         let nc = model.num_classes();
         let top1s = logits.argmax_lastdim();
         latencies.clear();
+        reply_lats.clear();
+        enqueues.clear();
         for (i, req) in batch.into_iter().enumerate() {
             let row = logits.data[i * nc..(i + 1) * nc].to_vec();
-            let latency = done.saturating_duration_since(req.enqueued);
+            let latency = done.saturating_duration_since(req.trace.enqueued);
             latencies.push(latency);
+            enqueues.push(req.trace.enqueued);
             // a disappeared client (dropped receiver) is not a worker error
             let _ = req.resp.send(InferReply {
                 id: req.id,
@@ -236,8 +252,17 @@ fn worker_loop(reg: &Registry, batcher: &Batcher, stats: &ServeStats, adaptive: 
                 latency,
                 batch_size: n,
             });
+            // stamped after the send, so reply-channel time is measured
+            // instead of invisible
+            reply_lats
+                .push(Instant::now().saturating_duration_since(enqueues[i]));
         }
-        stats.record_batch(n, &latencies);
+        let replied = Instant::now();
+        stats.record_batch(n, &latencies, &reply_lats);
+        entry.stage.record_span(
+            &obs::BatchSpan { formed, fwd_start, fwd_end: done, replied },
+            enqueues.iter().copied(),
+        );
         executed += 1;
     }
     executed

@@ -41,6 +41,10 @@ pub struct ModelEntry {
     pub model: Box<dyn PreparedNet>,
     /// Where the weights came from (export / teacher / he-init).
     pub source: String,
+    /// Per-model stage histograms (queue wait / batch form / compute /
+    /// reply), shared with the global [`crate::obs`] registry under `key`
+    /// so warm-up and measured engines accumulate into the same cells.
+    pub stage: Arc<crate::obs::StageMetrics>,
 }
 
 /// Immutable collection of prepared models, shared by all workers.
@@ -179,7 +183,8 @@ pub fn load_model(dir: &Path, arch: &ArchSpec, kind: BackendKind) -> Result<Mode
             }
         }
     };
-    Ok(ModelEntry { key, model: backend::prepare(kind, arch, &params), source })
+    let stage = crate::obs::stage_metrics(&key);
+    Ok(ModelEntry { key, model: backend::prepare(kind, arch, &params), source, stage })
 }
 
 #[cfg(test)]

@@ -2,25 +2,64 @@
 //! and queue-depth histograms — the [`crate::runtime::ExecStats`] idiom
 //! (cheap counters sampled on the hot path, reported at the end) made
 //! thread-safe for the worker pool.
+//!
+//! Two latency families are recorded per request ([`ServeStats::record_batch`]):
+//! *completion* (enqueue → forward done, the historical `p50_us` the bench
+//! gate pins) and *reply-inclusive* (enqueue → reply handed to the channel),
+//! so reply-channel time is measured instead of invisible.  Stage-level
+//! breakdowns (queue wait / batch formation / compute / reply) live in
+//! [`crate::obs::StageMetrics`]; this type keeps the end-to-end view.
 
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
+/// Raw values a [`Pow2Histogram`] keeps verbatim; at or below this count
+/// quantiles are exact (nearest-rank over the sorted values).
+const POW2_EXACT: usize = 64;
+
 /// Power-of-two bucketed histogram over small positive integers (queue
 /// depths, batch sizes).  Bucket `i` covers `[2^(i-1), 2^i)`, bucket 0 is
 /// exactly 0.
-#[derive(Clone, Debug, Default)]
+///
+/// Quantiles ([`Self::quantile`]) are exact while every sample is still in
+/// the [`POW2_EXACT`] window, and rank-interpolated within the owning
+/// bucket (clamped to the observed min/max) past it — a raw bucket bound
+/// would overstate p50 by up to 2× at low counts.
+#[derive(Clone, Debug)]
 pub struct Pow2Histogram {
     counts: Vec<u64>,
+    /// First [`POW2_EXACT`] raw values, unsorted.
+    exact: Vec<u64>,
+    total: u64,
+    min: usize,
+    max: usize,
+}
+
+impl Default for Pow2Histogram {
+    fn default() -> Self {
+        Pow2Histogram {
+            counts: Vec::new(),
+            exact: Vec::new(),
+            total: 0,
+            min: usize::MAX,
+            max: 0,
+        }
+    }
 }
 
 impl Pow2Histogram {
-    fn record(&mut self, v: usize) {
+    pub fn record(&mut self, v: usize) {
         let b = (usize::BITS - v.leading_zeros()) as usize;
         if self.counts.len() <= b {
             self.counts.resize(b + 1, 0);
         }
         self.counts[b] += 1;
+        self.total += 1;
+        if self.exact.len() < POW2_EXACT {
+            self.exact.push(v as u64);
+        }
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
     }
 
     /// `(lo..=hi, count)` rows for non-empty buckets.
@@ -35,6 +74,40 @@ impl Pow2Histogram {
             })
             .collect()
     }
+
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    /// Quantile `q ∈ [0, 1]`: nearest-rank over the raw values while all
+    /// of them are retained, otherwise interpolated within the owning
+    /// power-of-two bucket, with the bucket range clamped to the observed
+    /// `[min, max]`.
+    pub fn quantile(&self, q: f64) -> usize {
+        if self.total == 0 {
+            return 0;
+        }
+        let rank = ((q * self.total as f64).ceil() as u64).clamp(1, self.total);
+        if self.exact.len() as u64 == self.total {
+            let mut sorted = self.exact.clone();
+            sorted.sort_unstable();
+            return sorted[rank as usize - 1] as usize;
+        }
+        let mut cum = 0u64;
+        for (lo, hi, c) in self.rows() {
+            if cum + c >= rank {
+                let lo = lo.max(self.min);
+                let hi = hi.min(self.max).max(lo);
+                if c <= 1 || hi == lo {
+                    return lo;
+                }
+                let frac = (rank - cum - 1) as f64 / (c - 1) as f64;
+                return lo + (frac * (hi - lo) as f64).round() as usize;
+            }
+            cum += c;
+        }
+        self.max
+    }
 }
 
 /// Latency sample cap: bounds a long-lived engine's memory (reservoir
@@ -45,6 +118,9 @@ struct Inner {
     lat_us: Vec<u64>,
     /// total latencies observed (>= lat_us.len() once the reservoir is full)
     lat_seen: u64,
+    /// reply-inclusive latencies (enqueue → reply handed to the channel)
+    reply_us: Vec<u64>,
+    reply_seen: u64,
     rng: crate::data::Rng,
     requests: u64,
     batches: u64,
@@ -59,6 +135,8 @@ impl Default for Inner {
         Inner {
             lat_us: Vec::new(),
             lat_seen: 0,
+            reply_us: Vec::new(),
+            reply_seen: 0,
             rng: crate::data::Rng::new(0x5E4E),
             requests: 0,
             batches: 0,
@@ -80,6 +158,18 @@ impl Inner {
             let j = self.rng.below(self.lat_seen as usize);
             if j < LAT_RESERVOIR {
                 self.lat_us[j] = us;
+            }
+        }
+    }
+
+    fn record_reply(&mut self, us: u64) {
+        self.reply_seen += 1;
+        if self.reply_us.len() < LAT_RESERVOIR {
+            self.reply_us.push(us);
+        } else {
+            let j = self.rng.below(self.reply_seen as usize);
+            if j < LAT_RESERVOIR {
+                self.reply_us[j] = us;
             }
         }
     }
@@ -117,14 +207,20 @@ impl ServeStats {
         st.depth_hist.record(depth);
     }
 
-    /// Called by workers once per executed micro-batch.
-    pub fn record_batch(&self, batch: usize, latencies: &[Duration]) {
+    /// Called by workers once per executed micro-batch.  `completion` are
+    /// enqueue → forward-done latencies (stamped *before* replies are
+    /// sent); `replied` are the reply-inclusive enqueue → reply-sent
+    /// latencies for the same requests.
+    pub fn record_batch(&self, batch: usize, completion: &[Duration], replied: &[Duration]) {
         let mut st = self.inner.lock().unwrap();
         st.batches += 1;
-        st.requests += latencies.len() as u64;
+        st.requests += completion.len() as u64;
         st.batch_hist.record(batch);
-        for l in latencies {
+        for l in completion {
             st.record_latency(l.as_micros() as u64);
+        }
+        for l in replied {
+            st.record_reply(l.as_micros() as u64);
         }
         st.last_done = Some(Instant::now());
     }
@@ -134,11 +230,13 @@ impl ServeStats {
         let st = self.inner.lock().unwrap();
         let mut sorted = st.lat_us.clone();
         sorted.sort_unstable();
-        let pct = |p: f64| -> u64 {
+        let mut rsorted = st.reply_us.clone();
+        rsorted.sort_unstable();
+        // nearest-rank: smallest value with at least p% of samples <= it
+        let pct = |sorted: &[u64], p: f64| -> u64 {
             if sorted.is_empty() {
                 return 0;
             }
-            // nearest-rank: smallest value with at least p% of samples <= it
             let rank = (p / 100.0 * sorted.len() as f64).ceil() as usize;
             sorted[rank.clamp(1, sorted.len()) - 1]
         };
@@ -153,10 +251,13 @@ impl ServeStats {
             batches: st.batches,
             wall,
             throughput_ips: if secs > 0.0 { st.requests as f64 / secs } else { 0.0 },
-            p50_us: pct(50.0),
-            p95_us: pct(95.0),
-            p99_us: pct(99.0),
+            p50_us: pct(&sorted, 50.0),
+            p95_us: pct(&sorted, 95.0),
+            p99_us: pct(&sorted, 99.0),
             max_us: sorted.last().copied().unwrap_or(0),
+            reply_p50_us: pct(&rsorted, 50.0),
+            reply_p99_us: pct(&rsorted, 99.0),
+            reply_max_us: rsorted.last().copied().unwrap_or(0),
             mean_batch: if st.batches > 0 {
                 st.requests as f64 / st.batches as f64
             } else {
@@ -177,10 +278,16 @@ pub struct ServeReport {
     pub batches: u64,
     pub wall: Duration,
     pub throughput_ips: f64,
+    /// Completion latency (enqueue → forward done), the historical series
+    /// the bench gate pins.
     pub p50_us: u64,
     pub p95_us: u64,
     pub p99_us: u64,
     pub max_us: u64,
+    /// Reply-inclusive latency (enqueue → reply handed to the channel).
+    pub reply_p50_us: u64,
+    pub reply_p99_us: u64,
+    pub reply_max_us: u64,
     pub mean_batch: f64,
     pub batch_hist: Pow2Histogram,
     pub depth_hist: Pow2Histogram,
@@ -191,7 +298,8 @@ impl std::fmt::Display for ServeReport {
         write!(
             f,
             "{} reqs in {} batches over {:.2} s | {:.0} images/s | \
-             latency µs p50 {} p95 {} p99 {} max {} | mean batch {:.2} | pool {}",
+             latency µs p50 {} p95 {} p99 {} max {} | \
+             reply-incl p50 {} p99 {} | mean batch {:.2} | pool {}",
             self.requests,
             self.batches,
             self.wall.as_secs_f64(),
@@ -200,6 +308,8 @@ impl std::fmt::Display for ServeReport {
             self.p95_us,
             self.p99_us,
             self.max_us,
+            self.reply_p50_us,
+            self.reply_p99_us,
             self.mean_batch,
             self.pool_threads,
         )
@@ -215,13 +325,17 @@ mod tests {
         let s = ServeStats::new();
         s.record_enqueue(1);
         let lats: Vec<Duration> = (1..=100).map(Duration::from_micros).collect();
-        s.record_batch(4, &lats);
+        let replies: Vec<Duration> = (1..=100).map(|v| Duration::from_micros(v + 10)).collect();
+        s.record_batch(4, &lats, &replies);
         let r = s.report();
         assert_eq!(r.requests, 100);
         assert_eq!(r.batches, 1);
         assert_eq!(r.p50_us, 50);
         assert_eq!(r.p99_us, 99);
         assert_eq!(r.max_us, 100);
+        assert_eq!(r.reply_p50_us, 60);
+        assert_eq!(r.reply_p99_us, 109);
+        assert_eq!(r.reply_max_us, 110);
         assert!((r.mean_batch - 100.0).abs() < 1e-9);
     }
 
@@ -236,10 +350,44 @@ mod tests {
     }
 
     #[test]
+    fn pow2_small_sample_quantiles_are_exact() {
+        // the old bucket-bound readout would answer 7 for p50 of [3, 1000]
+        // style data; the exact window must return true sample values
+        let mut h = Pow2Histogram::default();
+        for v in [1000, 3, 7] {
+            h.record(v);
+        }
+        assert_eq!(h.quantile(0.50), 7);
+        assert_eq!(h.quantile(0.99), 1000);
+        assert_eq!(h.quantile(0.01), 3);
+        let mut one = Pow2Histogram::default();
+        one.record(5);
+        assert_eq!(one.quantile(0.5), 5);
+        assert_eq!(Pow2Histogram::default().quantile(0.5), 0);
+    }
+
+    #[test]
+    fn pow2_interpolated_quantiles_match_sorted_ground_truth() {
+        // 1..=1000: far past the exact window; uniform integers make
+        // within-bucket interpolation land exactly on the sorted value
+        let mut h = Pow2Histogram::default();
+        for v in 1..=1000usize {
+            h.record(v);
+        }
+        let sorted: Vec<usize> = (1..=1000).collect();
+        for q in [0.50, 0.95, 0.99] {
+            let rank = ((q * 1000.0).ceil() as usize).clamp(1, 1000);
+            assert_eq!(h.quantile(q), sorted[rank - 1], "q={q}");
+        }
+        assert_eq!(h.total(), 1000);
+    }
+
+    #[test]
     fn empty_report_is_sane() {
         let r = ServeStats::new().report();
         assert_eq!(r.requests, 0);
         assert_eq!(r.p99_us, 0);
+        assert_eq!(r.reply_p99_us, 0);
         assert_eq!(r.throughput_ips, 0.0);
     }
 

@@ -218,10 +218,27 @@ thread_local! {
 /// only the output tensor; intermediates come from a thread-local
 /// [`ConvScratch`] (re-entrant calls fall back to a fresh scratch).
 pub fn conv2d(x: &Tensor, w: &Tensor, bias: &[f32], stride: usize, groups: usize) -> Tensor {
+    conv2d_obs(x, w, bias, stride, groups, None)
+}
+
+/// [`conv2d`] with optional per-layer phase timing (`pack` / `im2col` /
+/// `gemm` accumulate into `obs` when a sampled pass passes one down).
+pub fn conv2d_obs(
+    x: &Tensor,
+    w: &Tensor,
+    bias: &[f32],
+    stride: usize,
+    groups: usize,
+    obs: Option<&crate::obs::LayerObs>,
+) -> Tensor {
     let mut out = Tensor::default();
     CONV_SCRATCH.with(|cell| match cell.try_borrow_mut() {
-        Ok(mut scratch) => conv2d_into(x, w, bias, stride, groups, &mut scratch, &mut out),
-        Err(_) => conv2d_into(x, w, bias, stride, groups, &mut ConvScratch::new(), &mut out),
+        Ok(mut scratch) => {
+            conv2d_into_obs(x, w, bias, stride, groups, &mut scratch, &mut out, obs)
+        }
+        Err(_) => {
+            conv2d_into_obs(x, w, bias, stride, groups, &mut ConvScratch::new(), &mut out, obs)
+        }
     });
     out
 }
@@ -240,9 +257,27 @@ pub fn conv2d_into(
     scratch: &mut ConvScratch,
     out: &mut Tensor,
 ) {
+    conv2d_into_obs(x, w, bias, stride, groups, scratch, out, None);
+}
+
+/// [`conv2d_into`] with optional phase timing: the per-call weight packing
+/// is attributed to the `pack` phase, the core to `im2col` / `gemm`.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_into_obs(
+    x: &Tensor,
+    w: &Tensor,
+    bias: &[f32],
+    stride: usize,
+    groups: usize,
+    scratch: &mut ConvScratch,
+    out: &mut Tensor,
+    obs: Option<&crate::obs::LayerObs>,
+) {
     let mut wp = std::mem::take(&mut scratch.wpack);
+    let t0 = crate::obs::layer::start(obs);
     wp.pack_into(w, groups);
-    conv2d_packed_into(x, &wp, bias, stride, scratch, out);
+    crate::obs::layer::lap(obs, crate::obs::Phase::Pack, t0);
+    conv2d_packed_into_obs(x, &wp, bias, stride, scratch, out, obs);
     scratch.wpack = wp;
 }
 
@@ -256,6 +291,22 @@ pub fn conv2d_packed_into(
     scratch: &mut ConvScratch,
     out: &mut Tensor,
 ) {
+    conv2d_packed_into_obs(x, pw, bias, stride, scratch, out, None);
+}
+
+/// [`conv2d_packed_into`] with optional `im2col` / `gemm` phase timing.
+/// The grouped scatter and the bias add stay untimed — they land in the
+/// layer's wall-clock total only.
+pub fn conv2d_packed_into_obs(
+    x: &Tensor,
+    pw: &PackedConvW,
+    bias: &[f32],
+    stride: usize,
+    scratch: &mut ConvScratch,
+    out: &mut Tensor,
+    obs: Option<&crate::obs::LayerObs>,
+) {
+    use crate::obs::{layer, Phase};
     assert_eq!(x.rank(), 4);
     let (b, cin) = (x.shape[0], x.shape[3]);
     let (k, cout, groups) = (pw.k, pw.cout, pw.groups);
@@ -268,14 +319,20 @@ pub fn conv2d_packed_into(
     size_for_write(&mut out.data, rows * cout);
 
     if groups == 1 {
+        let t0 = layer::start(obs);
         im2col_into(x, k, stride, 0, cin, &mut scratch.cols);
+        let t1 = layer::lap(obs, Phase::Im2col, t0);
         // weight [k,k,cin,cout] is already [k*k*cin, cout] row-major
         kernel::gemm(&scratch.cols, rows, pw.group(0), &mut out.data);
+        layer::lap(obs, Phase::Gemm, t1);
     } else {
         for g in 0..groups {
+            let t0 = layer::start(obs);
             im2col_into(x, k, stride, g * cg_in, cg_in, &mut scratch.cols);
+            let t1 = layer::lap(obs, Phase::Im2col, t0);
             size_for_write(&mut scratch.gout, rows * cg_out);
             kernel::gemm(&scratch.cols, rows, pw.group(g), &mut scratch.gout);
+            layer::lap(obs, Phase::Gemm, t1);
             for (row, chunk) in scratch.gout.chunks(cg_out).enumerate() {
                 let dst = row * cout + g * cg_out;
                 out.data[dst..dst + cg_out].copy_from_slice(chunk);
@@ -296,6 +353,7 @@ const MIN_PAR_CONV_ROWS: usize = 64;
 /// [`conv2d_into`] with the `b*oh*ow` output-row dimension split across
 /// `pool` (weights packed into the scratch first, once, on the submitting
 /// thread).  See [`conv2d_packed_into_par`].
+#[allow(clippy::too_many_arguments)]
 pub fn conv2d_into_par(
     x: &Tensor,
     w: &Tensor,
@@ -306,9 +364,29 @@ pub fn conv2d_into_par(
     out: &mut Tensor,
     pool: &crate::par::Pool,
 ) {
+    conv2d_into_par_obs(x, w, bias, stride, groups, scratch, out, pool, None);
+}
+
+/// [`conv2d_into_par`] with optional phase timing (packing → `pack`, then
+/// the parallel core's per-chunk `im2col` / `gemm` laps — CPU time summed
+/// across pool threads, so phase sums can exceed the layer's wall total).
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_into_par_obs(
+    x: &Tensor,
+    w: &Tensor,
+    bias: &[f32],
+    stride: usize,
+    groups: usize,
+    scratch: &mut ConvScratch,
+    out: &mut Tensor,
+    pool: &crate::par::Pool,
+    obs: Option<&crate::obs::LayerObs>,
+) {
     let mut wp = std::mem::take(&mut scratch.wpack);
+    let t0 = crate::obs::layer::start(obs);
     wp.pack_into(w, groups);
-    conv2d_packed_into_par(x, &wp, bias, stride, scratch, out, pool);
+    crate::obs::layer::lap(obs, crate::obs::Phase::Pack, t0);
+    conv2d_packed_into_par_obs(x, &wp, bias, stride, scratch, out, pool, obs);
     scratch.wpack = wp;
 }
 
@@ -329,6 +407,26 @@ pub fn conv2d_packed_into_par(
     out: &mut Tensor,
     pool: &crate::par::Pool,
 ) {
+    conv2d_packed_into_par_obs(x, pw, bias, stride, scratch, out, pool, None);
+}
+
+/// [`conv2d_packed_into_par`] with optional phase timing: every chunk laps
+/// its own `im2col` / `gemm` into the shared [`crate::obs::LayerObs`]
+/// atomics, so the recorded nanoseconds are CPU time summed across pool
+/// threads (they can exceed the layer's wall-clock total — that gap IS the
+/// parallel speedup).
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_packed_into_par_obs(
+    x: &Tensor,
+    pw: &PackedConvW,
+    bias: &[f32],
+    stride: usize,
+    scratch: &mut ConvScratch,
+    out: &mut Tensor,
+    pool: &crate::par::Pool,
+    obs: Option<&crate::obs::LayerObs>,
+) {
+    use crate::obs::{layer, Phase};
     assert_eq!(x.rank(), 4);
     let (b, cin) = (x.shape[0], x.shape[3]);
     let (k, cout, groups) = (pw.k, pw.cout, pw.groups);
@@ -341,7 +439,7 @@ pub fn conv2d_packed_into_par(
     let ranges =
         crate::par::chunk_ranges_aligned(rows, pool.threads(), MIN_PAR_CONV_ROWS, kernel::MR);
     if pool.threads() <= 1 || ranges.len() <= 1 {
-        conv2d_packed_into(x, pw, bias, stride, scratch, out);
+        conv2d_packed_into_obs(x, pw, bias, stride, scratch, out, obs);
         return;
     }
     size_for_write(&mut out.data, rows * cout);
@@ -357,13 +455,19 @@ pub fn conv2d_packed_into_par(
         rest = tail;
         tasks.push(Box::new(move || {
             if groups == 1 {
+                let t0 = layer::start(obs);
                 im2col_rows_into(x, k, stride, 0, cin, r.clone(), &mut child.cols);
+                let t1 = layer::lap(obs, Phase::Im2col, t0);
                 kernel::gemm(&child.cols, nrows, pw.group(0), head);
+                layer::lap(obs, Phase::Gemm, t1);
             } else {
                 for g in 0..groups {
+                    let t0 = layer::start(obs);
                     im2col_rows_into(x, k, stride, g * cg_in, cg_in, r.clone(), &mut child.cols);
+                    let t1 = layer::lap(obs, Phase::Im2col, t0);
                     size_for_write(&mut child.gout, nrows * cg_out);
                     kernel::gemm(&child.cols, nrows, pw.group(g), &mut child.gout);
+                    layer::lap(obs, Phase::Gemm, t1);
                     for (row, chunk) in child.gout.chunks(cg_out).enumerate() {
                         let dst = row * cout + g * cg_out;
                         head[dst..dst + cg_out].copy_from_slice(chunk);

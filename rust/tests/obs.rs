@@ -1,0 +1,208 @@
+//! Concurrency tests for the `qft::obs` metric primitives and the serving
+//! stats: N threads hammer one metric while a reader snapshots it, and no
+//! recorded count may ever be lost or observed out of order.
+//!
+//! These tests share one process-global obs registry with each other, so
+//! every test registers under its own unique key and none of them calls
+//! `qft::obs::reset()` or flips the global enable switch.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use qft::obs::{self, BatchSpan, LogHistogram};
+use qft::serve::ServeStats;
+
+/// 8 writer threads × 10k records race one histogram while a reader takes
+/// snapshots throughout: every snapshot must be internally consistent
+/// (count == bucket sum == quantile mass) and monotone, and the final
+/// snapshot must hold every single record.
+#[test]
+fn log_histogram_concurrent_recording_loses_nothing() {
+    const WRITERS: u64 = 8;
+    const PER_WRITER: u64 = 10_000;
+    let h = Arc::new(LogHistogram::new());
+    let stop = Arc::new(AtomicBool::new(false));
+
+    let reader = {
+        let h = h.clone();
+        let stop = stop.clone();
+        std::thread::spawn(move || {
+            let mut last_count = 0u64;
+            let mut iters = 0u64;
+            while !stop.load(Ordering::Relaxed) {
+                let snap = h.snapshot();
+                let bucket_sum: u64 = snap.buckets.iter().map(|&(_, _, c)| c).sum();
+                assert_eq!(snap.count, bucket_sum, "count must equal the bucket mass");
+                assert!(
+                    snap.count >= last_count,
+                    "count went backwards: {} -> {}",
+                    last_count,
+                    snap.count
+                );
+                if snap.count > 0 {
+                    // quantiles must stay inside the observed value range
+                    let p99 = snap.quantile(0.99);
+                    assert!(snap.min <= p99 && p99 <= snap.max);
+                }
+                last_count = snap.count;
+                iters += 1;
+            }
+            iters
+        })
+    };
+
+    let writers: Vec<_> = (0..WRITERS)
+        .map(|t| {
+            let h = h.clone();
+            std::thread::spawn(move || {
+                for i in 0..PER_WRITER {
+                    // values spread across many octaves so every shard's
+                    // buckets get real traffic
+                    h.record((i % 1000) + t);
+                }
+            })
+        })
+        .collect();
+    for w in writers {
+        w.join().unwrap();
+    }
+    stop.store(true, Ordering::Relaxed);
+    let reader_iters = reader.join().unwrap();
+    assert!(reader_iters > 0, "reader never observed the histogram");
+
+    let snap = h.snapshot();
+    assert_eq!(snap.count, WRITERS * PER_WRITER, "lost records");
+    let expect_sum: u64 = (0..WRITERS)
+        .map(|t| (0..PER_WRITER).map(|i| (i % 1000) + t).sum::<u64>())
+        .sum();
+    assert_eq!(snap.sum, expect_sum, "lost value mass");
+    assert_eq!(snap.min, 0);
+    assert_eq!(snap.max, 999 + WRITERS - 1);
+}
+
+/// Concurrent `record_span` calls through the global registry: request and
+/// batch totals must both land exactly, per stage.
+#[test]
+fn stage_metrics_concurrent_spans_count_exactly() {
+    const THREADS: u64 = 4;
+    const SPANS: u64 = 250;
+    const REQS_PER_SPAN: u64 = 3;
+    let sm = obs::stage_metrics("obstest-conc/lw");
+    let workers: Vec<_> = (0..THREADS)
+        .map(|_| {
+            let sm = sm.clone();
+            std::thread::spawn(move || {
+                for _ in 0..SPANS {
+                    let t0 = Instant::now();
+                    let span = BatchSpan {
+                        formed: t0 + Duration::from_micros(10),
+                        fwd_start: t0 + Duration::from_micros(20),
+                        fwd_end: t0 + Duration::from_micros(120),
+                        replied: t0 + Duration::from_micros(130),
+                    };
+                    sm.record_span(&span, (0..REQS_PER_SPAN).map(|_| t0));
+                }
+            })
+        })
+        .collect();
+    for w in workers {
+        w.join().unwrap();
+    }
+    assert_eq!(sm.requests.get(), THREADS * SPANS * REQS_PER_SPAN);
+    assert_eq!(sm.batches.get(), THREADS * SPANS);
+    assert_eq!(sm.queue_wait_us.snapshot().count, THREADS * SPANS * REQS_PER_SPAN);
+    assert_eq!(sm.compute_us.snapshot().count, THREADS * SPANS);
+    // the registry hands back the same cells on re-lookup
+    assert_eq!(obs::stage_metrics("obstest-conc/lw").batches.get(), THREADS * SPANS);
+}
+
+/// The exposition renderers must stay valid while recorders are racing
+/// them: render + validate the Prometheus text and round-trip the JSON
+/// under active concurrent writes.
+#[test]
+fn exposition_stays_valid_under_concurrent_recording() {
+    let sm = obs::stage_metrics("obstest-expo/dch");
+    let no = obs::net_obs("obstest-expo/dch", &["conv0".to_string(), "fc".to_string()]);
+    let stop = Arc::new(AtomicBool::new(false));
+    let writer = {
+        let stop = stop.clone();
+        std::thread::spawn(move || {
+            let mut n = 0u64;
+            while !stop.load(Ordering::Relaxed) {
+                let t0 = Instant::now();
+                let span = BatchSpan { formed: t0, fwd_start: t0, fwd_end: t0, replied: t0 };
+                sm.record_span(&span, [t0]);
+                no.passes.add(1);
+                no.layers[0].add_phase_ns(obs::Phase::Gemm, 100);
+                no.layers[0].add_total_ns(150);
+                n += 1;
+            }
+            n
+        })
+    };
+    for _ in 0..50 {
+        let prom = obs::render_prometheus();
+        obs::validate_prometheus(&prom).expect("live exposition must stay well-formed");
+        let snap = obs::snapshot();
+        let back = obs::Snapshot::from_json(&snap.to_json()).unwrap();
+        assert_eq!(back.stage_for("obstest-expo/dch"), snap.stage_for("obstest-expo/dch"));
+    }
+    stop.store(true, Ordering::Relaxed);
+    let written = writer.join().unwrap();
+    assert!(written > 0);
+    let text = obs::render_prometheus();
+    assert!(text.contains("model=\"obstest-expo/dch\""), "key missing from exposition");
+}
+
+/// N threads hammer one `ServeStats` with `record_batch` while a reader
+/// polls `report()`: totals must be monotone and nothing may be lost.
+#[test]
+fn serve_stats_concurrent_batches_count_exactly() {
+    const THREADS: u64 = 8;
+    const BATCHES: u64 = 400;
+    let stats = Arc::new(ServeStats::with_pool(2));
+    let stop = Arc::new(AtomicBool::new(false));
+    let reader = {
+        let stats = stats.clone();
+        let stop = stop.clone();
+        std::thread::spawn(move || {
+            let mut last = 0u64;
+            while !stop.load(Ordering::Relaxed) {
+                let r = stats.report();
+                assert!(r.requests >= last, "requests went backwards");
+                assert_eq!(r.requests, r.batches * 2, "2 requests per batch, always");
+                last = r.requests;
+            }
+        })
+    };
+    let writers: Vec<_> = (0..THREADS)
+        .map(|t| {
+            let stats = stats.clone();
+            std::thread::spawn(move || {
+                let completion =
+                    [Duration::from_micros(100 + t), Duration::from_micros(200 + t)];
+                let replied =
+                    [Duration::from_micros(110 + t), Duration::from_micros(210 + t)];
+                for _ in 0..BATCHES {
+                    stats.record_batch(2, &completion, &replied);
+                }
+            })
+        })
+        .collect();
+    for w in writers {
+        w.join().unwrap();
+    }
+    stop.store(true, Ordering::Relaxed);
+    reader.join().unwrap();
+
+    let r = stats.report();
+    assert_eq!(r.batches, THREADS * BATCHES);
+    assert_eq!(r.requests, THREADS * BATCHES * 2);
+    // every completion latency lies in [100, 200 + THREADS); the quantiles
+    // must too, and reply-inclusive must sit 10µs above completion
+    assert!(r.p50_us >= 100 && r.p50_us < 200 + THREADS);
+    assert!(r.reply_p50_us >= 110 && r.reply_p50_us < 210 + THREADS);
+    assert_eq!(r.max_us, 200 + THREADS - 1);
+    assert_eq!(r.reply_max_us, 210 + THREADS - 1);
+}
