@@ -1,7 +1,7 @@
 # QFT reproduction — build / verify entry points.
 
 .PHONY: check build test fmt artifacts bench bench-serve par-bench bench-gemm bench-smoke \
-        bench-gate bench-baseline obs-overhead
+        bench-gate bench-baseline obs-overhead bench-swap
 
 # Tier-1 verification: release build, full test suite, formatting.
 check:
@@ -24,8 +24,8 @@ artifacts:
 	cd python/compile && python3 aot.py --out ../../artifacts
 
 # Aggregate perf trajectory: every perf bench, landing BENCH_gemm.json,
-# BENCH_par.json and BENCH_serve.json at the repo root.
-bench: bench-gemm par-bench bench-serve
+# BENCH_par.json, BENCH_serve.json and BENCH_swap.json at the repo root.
+bench: bench-gemm par-bench bench-serve bench-swap
 
 # Serving throughput bench: lw / dch / lw-i8 backend sweep at 1/2/4 workers
 # (works with or without artifacts; emits BENCH_serve.json).
@@ -43,6 +43,12 @@ par-bench:
 bench-gemm:
 	cargo bench --bench gemm_kernels
 
+# Hot-swap stall bench: closed-loop latency with the fleet slot steady vs
+# promoting between bit-identical versions every ~500us for the whole run
+# (emits BENCH_swap.json with the swapping/steady p99 stall ratio).
+bench-swap:
+	cargo bench --bench swap_stall
+
 # Observability overhead gate: lw-i8 closed loop with qft::obs on vs off
 # (interleaved rounds); fails if the obs-on p50 regresses more than 3%
 # (+25us slack; QFT_OBS_OVERHEAD_TOL override).  Emits BENCH_obs.json and
@@ -56,6 +62,7 @@ bench-smoke:
 	QFT_BENCH_SMOKE=1 cargo bench --bench gemm_kernels
 	QFT_BENCH_SMOKE=1 cargo bench --bench par_kernels
 	QFT_BENCH_SMOKE=1 cargo bench --bench serve_throughput
+	QFT_BENCH_SMOKE=1 cargo bench --bench swap_stall
 	QFT_BENCH_SMOKE=1 cargo bench --bench obs_overhead
 
 # Perf-regression gate: rerun the gemm + serve benches in their pinned

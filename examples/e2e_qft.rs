@@ -73,10 +73,11 @@ fn main() -> Result<()> {
     let mut agree = 0usize;
     let mut total = 0usize;
     let mut scratch = deploy::DeployScratch::new();
+    let model = deploy::DeployedModel::prepare(&arch, &r.trainables, Mode::Lw);
     for i in 0..16 {
         let (x, _, _) = ds.batch(qft::data::Split::Val, i * 8, 8);
         let (lf, _) = deploy::forward_fakequant(&arch, &r.trainables, Mode::Lw, &x);
-        let (li, _) = deploy::forward_integer(&arch, &r.trainables, Mode::Lw, &x, Some(&mut scratch));
+        let (li, _) = model.forward_batch_feat(&x, &mut scratch);
         agree += lf
             .argmax_lastdim()
             .iter()

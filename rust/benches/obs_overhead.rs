@@ -22,7 +22,7 @@ use std::path::Path;
 use std::time::Duration;
 
 use qft::backend::BackendKind;
-use qft::serve::{run_closed_loop, Registry, ServeConfig};
+use qft::serve::{run_closed_loop, Fleet, ServeConfig};
 use qft::util::json::Value;
 
 fn main() {
@@ -44,10 +44,10 @@ fn main() {
         queue_cap: 512,
         ..Default::default()
     };
-    let registry = Registry::load(Path::new("artifacts"), &[(arch.to_string(), kind)])
-        .expect("load registry");
+    let fleet = Fleet::load(Path::new("artifacts"), &[(arch.to_string(), kind)])
+        .expect("load fleet");
     // warm-up so buffer growth / first-touch doesn't skew either state
-    let _ = run_closed_loop(&registry, &cfg, clients, if smoke { 1 } else { 8 }, 0);
+    let _ = run_closed_loop(&fleet, &cfg, clients, if smoke { 1 } else { 8 }, 0);
 
     let mut rows = Vec::new();
     let mut min_p50 = [u64::MAX; 2]; // [off, on]
@@ -59,7 +59,7 @@ fn main() {
             qft::obs::reset();
             let state = if on { "on" } else { "off" };
             let report = util::timed(&format!("obs={state} round {round}"), || {
-                run_closed_loop(&registry, &cfg, clients, per_client, 0)
+                run_closed_loop(&fleet, &cfg, clients, per_client, 0)
             });
             println!(
                 "  obs={state}: p50 {} us, p99 {} us, {:.0} img/s",

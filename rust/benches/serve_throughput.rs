@@ -19,7 +19,7 @@ use qft::backend::{self, BackendKind, Scratch};
 use qft::data::{Dataset, Split};
 use qft::par::Pool;
 use qft::quant::deploy::Mode;
-use qft::serve::{run_closed_loop, synthetic_trainables, Registry, ServeConfig};
+use qft::serve::{run_closed_loop, synthetic_trainables, Fleet, ServeConfig};
 use qft::util::json::Value;
 
 const BACKENDS: &[BackendKind] =
@@ -40,8 +40,8 @@ fn main() {
     let per_client = if smoke { 4 } else { 128 };
     let mut rows = Vec::new();
     for &kind in BACKENDS {
-        let registry = Registry::load(Path::new("artifacts"), &[(arch.to_string(), kind)])
-            .expect("load registry");
+        let fleet = Fleet::load(Path::new("artifacts"), &[(arch.to_string(), kind)])
+            .expect("load fleet");
         let mut sweep = Vec::new();
         for &workers in &[1usize, 2, 4] {
             let cfg = ServeConfig {
@@ -52,12 +52,12 @@ fn main() {
                 ..Default::default()
             };
             // warm-up so buffer growth / first-touch doesn't skew the timing
-            let _ = run_closed_loop(&registry, &cfg, clients, if smoke { 1 } else { 8 }, 0);
+            let _ = run_closed_loop(&fleet, &cfg, clients, if smoke { 1 } else { 8 }, 0);
             // zero the obs histograms so the stage summary covers exactly
             // this (backend, workers) measured run
             qft::obs::reset();
             let report = util::timed(&format!("{arch}/{} workers={workers}", kind.key()), || {
-                run_closed_loop(&registry, &cfg, clients, per_client, 0)
+                run_closed_loop(&fleet, &cfg, clients, per_client, 0)
             });
             println!("  {}/workers={workers}: {report}", kind.key());
             let stage = qft::obs::snapshot()

@@ -1,0 +1,164 @@
+//! Bench W — hot-swap stall (`make bench-swap`): what does a route change
+//! cost the request path?
+//!
+//! Two closed-loop regimes over the same `synthetic/lw` fleet slot, same
+//! load, same engine config:
+//!
+//! * `steady` — one serving version, no route changes (baseline);
+//! * `swapping` — an admin thread promotes back and forth between two
+//!   bit-identical versions every ~500 µs for the whole run, so nearly
+//!   every micro-batch crosses a swap.
+//!
+//! Promote is a single atomic store and workers clone the routed Arc once
+//! per batch, so the p50/p99 of the two regimes should be
+//! indistinguishable — `stall_ratio` (swapping p99 / steady p99) is the
+//! number to watch in `BENCH_swap.json` (uploaded by CI with the other
+//! bench artifacts; no hard gate, latency tails are too noisy on shared
+//! runners).
+
+#[path = "util/mod.rs"]
+mod util;
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use qft::backend::{self, BackendKind};
+use qft::data::{Dataset, Split};
+use qft::fleet::{Fleet, Slot};
+use qft::quant::deploy::Mode;
+use qft::serve::{Engine, ServeConfig, ServeReport};
+use qft::util::json::Value;
+
+/// Closed-loop run; with `swap_to` set, an admin thread toggles the
+/// primary between v1 and that version for the whole run.  Returns the
+/// engine report and the number of promotes issued.
+fn run(
+    fleet: &Arc<Fleet>,
+    slot: &Arc<Slot>,
+    cfg: &ServeConfig,
+    clients: usize,
+    per_client: usize,
+    swap_to: Option<u32>,
+) -> (ServeReport, u64) {
+    let engine = Engine::start(fleet.clone(), cfg);
+    let done = AtomicBool::new(false);
+    let mut swaps = 0u64;
+    std::thread::scope(|s| {
+        let admin = swap_to.map(|v2| {
+            let slot = slot.clone();
+            let done = &done;
+            s.spawn(move || {
+                let mut n = 0u64;
+                let mut to_v2 = true;
+                while !done.load(Ordering::Relaxed) {
+                    slot.promote(if to_v2 { v2 } else { 1 }).expect("promote bench twin");
+                    to_v2 = !to_v2;
+                    n += 1;
+                    std::thread::sleep(Duration::from_micros(500));
+                }
+                n
+            })
+        });
+        let handles: Vec<_> = (0..clients)
+            .map(|c| {
+                let client = engine.client();
+                s.spawn(move || {
+                    let ds = Dataset::new(c as u64 + 1);
+                    for i in 0..per_client {
+                        let (img, _) = ds.sample(Split::Val, i as u64);
+                        if client.infer(0, img).is_err() {
+                            break;
+                        }
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        done.store(true, Ordering::Relaxed);
+        if let Some(a) = admin {
+            swaps = a.join().unwrap();
+        }
+    });
+    (engine.shutdown(), swaps)
+}
+
+fn main() {
+    util::section("qft::fleet hot-swap stall (steady vs swap-churn closed loop)");
+    let smoke = util::smoke();
+    let clients = if smoke { 2 } else { 8 };
+    let per_client = if smoke { 4 } else { 96 };
+
+    let fleet = Fleet::load(
+        Path::new("artifacts"),
+        &[("synthetic".to_string(), BackendKind::Int(Mode::Lw))],
+    )
+    .expect("load fleet");
+    let slot = fleet.slot(0).expect("slot 0").clone();
+    // a bit-identical twin: same params, same grid, fresh prepare — the
+    // swap itself is the only variable between the regimes
+    let v2 = {
+        let v1 = slot.primary();
+        let model = backend::prepare(v1.kind, &slot.arch, &v1.params);
+        slot.install(v1.kind, model, v1.params.clone(), "bench twin".into())
+            .expect("install twin")
+    };
+
+    let cfg = ServeConfig {
+        workers: 2,
+        max_batch: 8,
+        max_wait: Duration::from_micros(200),
+        queue_cap: 512,
+        ..Default::default()
+    };
+    // warm-up so buffer growth / first-touch doesn't skew either regime
+    let _ = run(&fleet, &slot, &cfg, clients, if smoke { 1 } else { 8 }, None);
+
+    let mut rows = Vec::new();
+    let mut p99 = [0u64; 2]; // [steady, swapping]
+    for (i, (regime, swap_to)) in
+        [("steady", None), ("swapping", Some(v2))].into_iter().enumerate()
+    {
+        slot.promote(1).expect("reset route");
+        qft::obs::reset();
+        let (report, swaps) = util::timed(&format!("{regime} closed loop"), || {
+            run(&fleet, &slot, &cfg, clients, per_client, swap_to)
+        });
+        println!(
+            "  {regime}: p50 {} us, p99 {} us, {:.0} img/s, {swaps} swaps",
+            report.p50_us, report.p99_us, report.throughput_ips
+        );
+        p99[i] = report.p99_us;
+        let mut m = HashMap::new();
+        m.insert("set".to_string(), Value::Str("swap_stall".to_string()));
+        m.insert("smoke".to_string(), Value::Num(if smoke { 1.0 } else { 0.0 }));
+        m.insert("regime".to_string(), Value::Str(regime.to_string()));
+        m.insert("swaps".to_string(), Value::Num(swaps as f64));
+        m.insert("clients".to_string(), Value::Num(clients as f64));
+        m.insert("requests".to_string(), Value::Num(report.requests as f64));
+        m.insert("images_per_sec".to_string(), Value::Num(report.throughput_ips));
+        m.insert("p50_us".to_string(), Value::Num(report.p50_us as f64));
+        m.insert("p99_us".to_string(), Value::Num(report.p99_us as f64));
+        m.insert("reply_p99_us".to_string(), Value::Num(report.reply_p99_us as f64));
+        rows.push(Value::Obj(m));
+    }
+
+    let stall = if p99[0] > 0 { p99[1] as f64 / p99[0] as f64 } else { 0.0 };
+    println!("swap stall ratio (swapping p99 / steady p99): {stall:.3}");
+    let mut m = HashMap::new();
+    m.insert("set".to_string(), Value::Str("swap_stall_summary".to_string()));
+    m.insert("smoke".to_string(), Value::Num(if smoke { 1.0 } else { 0.0 }));
+    m.insert("steady_p99_us".to_string(), Value::Num(p99[0] as f64));
+    m.insert("swapping_p99_us".to_string(), Value::Num(p99[1] as f64));
+    m.insert("stall_ratio".to_string(), Value::Num(stall));
+    rows.push(Value::Obj(m));
+
+    let out_path = util::repo_root_path("BENCH_swap.json");
+    std::fs::write(&out_path, Value::Arr(rows).to_string_compact())
+        .expect("write BENCH_swap.json");
+    println!("wrote {}", out_path.display());
+}

@@ -1,0 +1,263 @@
+//! `CalibBackend` — a calibration-capturing shadow wrapper over any
+//! [`PreparedNet`].
+//!
+//! QFT derives every deployment constant from *calibration ranges*: the
+//! per-channel magnitudes the activations reach on representative inputs.
+//! Offline PTQ guesses those ranges from a handful of calibration batches;
+//! this wrapper closes the loop with production traffic instead.  It
+//! decorates a primary net and
+//!
+//! 1. always answers from the primary — replies are bit-identical to the
+//!    unwrapped net, at any thread count, shadow on or off;
+//! 2. mirrors every `shadow_every`-th micro-batch into a *shadow* FP
+//!    forward over the same input (the trainable map carries the full
+//!    `w:`/`b:` FP weight set, so the reference graph is always
+//!    reconstructible), off the reply path's critical data;
+//! 3. folds the shadow pass's per-value, per-channel observed `min`/`max`
+//!    into a shared [`CalibRanges`] accumulator.
+//!
+//! [`CalibRanges::absmax`] then renders the captured ranges in exactly the
+//! shape [`crate::coordinator::state::init_trainables`] consumes, so
+//! `repro requantize` (and [`crate::fleet::Slot::install_requantized`]) can
+//! rebuild the deployment grid from what the model actually saw and
+//! hot-swap the result in — the fleet-level realization of the paper's
+//! premise that constants should be fit to real activation statistics.
+//!
+//! Cost model: unsampled batches pay one relaxed `fetch_add` and a branch.
+//! Sampled batches run one extra FP forward on the worker thread (the
+//! mirrored fraction is the knob) plus a short mutex hold to merge ranges —
+//! the lock is per-slot and touched only 1-in-`shadow_every` batches, so it
+//! is invisible next to the forward itself.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::{BackendKind, PreparedNet, Scratch};
+use crate::nn::{ArchSpec, ParamMap};
+use crate::obs::Counter;
+use crate::par::Pool;
+use crate::tensor::Tensor;
+
+/// Observed per-value, per-channel activation ranges, merged across every
+/// shadowed batch.  Shared between the wrapper (writer) and the requantize
+/// path (reader) via `Arc`.
+#[derive(Default)]
+pub struct CalibRanges {
+    /// value id → per-channel `(min, max)` over everything shadowed so far.
+    ranges: Mutex<HashMap<usize, Vec<(f32, f32)>>>,
+    /// Micro-batches mirrored into the shadow forward.
+    pub shadow_batches: Counter,
+    /// Images those batches carried.
+    pub shadow_images: Counter,
+}
+
+impl CalibRanges {
+    /// Fold one shadow forward's value tensors in (channelwise min/max,
+    /// channels on the last axis — the same convention as
+    /// [`Tensor::abs_max_per_channel`]).
+    fn record(&self, arch: &ArchSpec, values: &HashMap<usize, Tensor>, images: usize) {
+        let mut r = self.ranges.lock().unwrap();
+        for &v in &arch.quantized_values {
+            let t = &values[&v];
+            let c = *t.shape.last().unwrap();
+            let e = r.entry(v).or_insert_with(|| vec![(f32::INFINITY, f32::NEG_INFINITY); c]);
+            for chunk in t.data.chunks(c) {
+                for ((lo, hi), &x) in e.iter_mut().zip(chunk) {
+                    *lo = lo.min(x);
+                    *hi = hi.max(x);
+                }
+            }
+        }
+        drop(r);
+        self.shadow_batches.add(1);
+        self.shadow_images.add(images as u64);
+    }
+
+    /// Whether anything has been captured yet.
+    pub fn is_empty(&self) -> bool {
+        self.ranges.lock().unwrap().is_empty()
+    }
+
+    /// Per-channel `max(|min|, |max|)` in the exact shape the offline PTQ
+    /// init ([`crate::coordinator::state::init_trainables`]) consumes —
+    /// captured live ranges become drop-in calibration statistics.
+    pub fn absmax(&self) -> HashMap<usize, Vec<f32>> {
+        self.ranges
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(&v, ch)| {
+                (v, ch.iter().map(|&(lo, hi)| lo.abs().max(hi.abs())).collect())
+            })
+            .collect()
+    }
+
+    /// Human-readable range summary, one row per captured value id.
+    pub fn table(&self) -> String {
+        use std::fmt::Write as _;
+        let mut o = String::new();
+        let _ = writeln!(
+            o,
+            "captured ranges: {} shadow batches / {} images",
+            self.shadow_batches.get(),
+            self.shadow_images.get()
+        );
+        let r = self.ranges.lock().unwrap();
+        let mut ids: Vec<_> = r.keys().copied().collect();
+        ids.sort_unstable();
+        for v in ids {
+            let ch = &r[&v];
+            let lo = ch.iter().map(|p| p.0).fold(f32::INFINITY, f32::min);
+            let hi = ch.iter().map(|p| p.1).fold(f32::NEG_INFINITY, f32::max);
+            let _ = writeln!(
+                o,
+                "  value {v:>3}: {:>3} channels, observed [{lo:.4}, {hi:.4}]",
+                ch.len()
+            );
+        }
+        o
+    }
+}
+
+/// The shadow wrapper.  Construct with [`CalibBackend::wrap`]; behaves
+/// exactly like the wrapped primary on every [`PreparedNet`] method.
+pub struct CalibBackend {
+    primary: Box<dyn PreparedNet>,
+    arch: ArchSpec,
+    /// The map the primary was prepared from — it always carries the FP
+    /// `w:`/`b:` tensors, which is all the shadow FP forward reads.
+    params: ParamMap,
+    /// Mirror 1 micro-batch in `every` (0 disables the shadow entirely).
+    every: u32,
+    tick: AtomicU32,
+    ranges: Arc<CalibRanges>,
+}
+
+impl CalibBackend {
+    /// Wrap `primary`, mirroring one micro-batch in `every` as shadow
+    /// traffic.  Returns the wrapped net plus the shared range accumulator
+    /// handle the requantize path reads.
+    pub fn wrap(
+        primary: Box<dyn PreparedNet>,
+        arch: &ArchSpec,
+        params: &ParamMap,
+        every: u32,
+    ) -> (Box<dyn PreparedNet>, Arc<CalibRanges>) {
+        let ranges = Arc::new(CalibRanges::default());
+        let net = CalibBackend {
+            primary,
+            arch: arch.clone(),
+            params: params.clone(),
+            every,
+            tick: AtomicU32::new(0),
+            ranges: ranges.clone(),
+        };
+        (Box::new(net), ranges)
+    }
+
+    /// The shared accumulator (same handle [`CalibBackend::wrap`] returned).
+    pub fn ranges(&self) -> Arc<CalibRanges> {
+        self.ranges.clone()
+    }
+
+    fn maybe_shadow(&self, x: &Tensor) {
+        if self.every == 0 {
+            return;
+        }
+        let t = self.tick.fetch_add(1, Ordering::Relaxed);
+        if t % self.every != 0 {
+            return;
+        }
+        // the reply already left the primary's forward; this runs after
+        let fwd = crate::nn::fp_forward(&self.arch, &self.params, x);
+        self.ranges.record(&self.arch, &fwd.values, x.shape[0]);
+    }
+}
+
+impl PreparedNet for CalibBackend {
+    fn kind(&self) -> BackendKind {
+        self.primary.kind()
+    }
+
+    fn input_hw(&self) -> usize {
+        self.primary.input_hw()
+    }
+
+    fn input_ch(&self) -> usize {
+        self.primary.input_ch()
+    }
+
+    fn num_classes(&self) -> usize {
+        self.primary.num_classes()
+    }
+
+    fn forward_batch(&self, x: &Tensor, scratch: &mut Scratch, pool: &Pool) -> Tensor {
+        let y = self.primary.forward_batch(x, scratch, pool);
+        self.maybe_shadow(x);
+        y
+    }
+
+    fn forward_batch_feat(
+        &self,
+        x: &Tensor,
+        scratch: &mut Scratch,
+        pool: &Pool,
+    ) -> (Tensor, Tensor) {
+        let y = self.primary.forward_batch_feat(x, scratch, pool);
+        self.maybe_shadow(x);
+        y
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::deploy::Mode;
+
+    fn bits(t: &Tensor) -> Vec<u32> {
+        t.data.iter().map(|v| v.to_bits()).collect()
+    }
+
+    #[test]
+    fn replies_are_bit_identical_to_the_unwrapped_primary() {
+        let (arch, tm) = crate::serve::synthetic_trainables(Mode::Lw, 5);
+        let kind = BackendKind::Int(Mode::Lw);
+        let plain = crate::backend::prepare(kind, &arch, &tm);
+        let (wrapped, ranges) =
+            CalibBackend::wrap(crate::backend::prepare(kind, &arch, &tm), &arch, &tm, 1);
+        let x = crate::data::Dataset::new(2).batch(crate::data::Split::Val, 0, 4).0;
+        let pool = crate::par::Pool::new(2);
+        let want = plain.forward_batch(&x, &mut Scratch::new(), &pool);
+        let got = wrapped.forward_batch(&x, &mut Scratch::new(), &pool);
+        assert_eq!(bits(&want), bits(&got), "shadow capture must not touch replies");
+        assert_eq!(wrapped.kind(), kind);
+        assert_eq!(ranges.shadow_batches.get(), 1);
+        assert_eq!(ranges.shadow_images.get(), 4);
+        assert!(!ranges.is_empty());
+    }
+
+    #[test]
+    fn sampling_period_and_absmax_shape_hold() {
+        let (arch, tm) = crate::serve::synthetic_trainables(Mode::Lw, 1);
+        let kind = BackendKind::Int(Mode::Lw);
+        let (net, ranges) =
+            CalibBackend::wrap(crate::backend::prepare(kind, &arch, &tm), &arch, &tm, 3);
+        let x = crate::data::Dataset::new(0).batch(crate::data::Split::Val, 0, 2).0;
+        let pool = crate::par::Pool::new(1);
+        let mut scratch = Scratch::new();
+        for _ in 0..7 {
+            net.forward_batch(&x, &mut scratch, &pool);
+        }
+        // ticks 0,3,6 of 0..7 are sampled
+        assert_eq!(ranges.shadow_batches.get(), 3);
+        let absmax = ranges.absmax();
+        for &v in &arch.quantized_values {
+            let ch = &absmax[&v];
+            let want = arch.value_channels[&v.to_string()];
+            assert_eq!(ch.len(), want, "value {v}");
+            assert!(ch.iter().all(|m| m.is_finite() && *m >= 0.0));
+        }
+        assert!(ranges.table().contains("3 shadow batches"));
+    }
+}

@@ -3,15 +3,14 @@
 //! QFT's core claim is HW-aware parameterization: the *same* network must
 //! run under full precision, fake-quant simulation, and the integer
 //! deployment grid, and stay comparable across them.  Historically those
-//! paths were divergent free functions (`fp_forward`, `forward_fakequant`,
-//! `forward_integer{,_batch}`) plus [`DeployedModel`], each with its own
-//! scratch and batching conventions.  This module is the seam that unifies
-//! them:
+//! paths were divergent free functions (`fp_forward`, `forward_fakequant`)
+//! plus [`DeployedModel`], each with its own scratch and batching
+//! conventions.  This module is the seam that unifies them:
 //!
 //! * [`BackendKind`] — the closed set of execution grids, with a stable
 //!   string `key()` / [`BackendKind::from_key`] round trip (`fp`, `fq-lw`,
 //!   `fq-dch`, `lw`, `dch`, `lw-i8`) used by the CLI `--backend` flag, the
-//!   serve registry wire keys, and the bench emitters.
+//!   fleet slot wire keys, and the bench emitters.
 //! * [`Backend`] — `prepare(&ArchSpec, &ParamMap) -> Box<dyn PreparedNet>`:
 //!   run whatever offline subgraph the grid needs ONCE and freeze it.
 //! * [`PreparedNet`] — the uniform online contract: batched
@@ -30,20 +29,24 @@
 //!   which grid they are driving.
 //!
 //! The existing paths are re-homed as [`FpBackend`], [`FakeQuantBackend`]
-//! and [`IntBackend`] (a thin wrapper over [`DeployedModel`], bit-identical
-//! to the pre-trait `forward_integer_batch`).  The first genuinely new
-//! citizen is [`Int8Backend`] (`lw-i8`): lw weight codes packed into i8
+//! and [`IntBackend`] (a thin wrapper over [`DeployedModel`]).  Genuinely
+//! new citizens: [`Int8Backend`] (`lw-i8`) — lw weight codes packed into i8
 //! K-major panels ([`crate::kernel::PackedWi8`]) under a true i8×i8→i32
 //! accumulate micro-kernel ([`crate::kernel::gemm_i8`]) with zero-point
-//! folding — see the [`Int8Backend`] docs for the arithmetic.
+//! folding (see the [`Int8Backend`] docs for the arithmetic) — and
+//! [`CalibBackend`], a decorator over any prepared net that mirrors a
+//! sampled fraction of live traffic into a shadow FP forward and captures
+//! per-value activation ranges for requantization.
 //!
-//! Consumers: [`crate::serve::Registry`] stores `Box<dyn PreparedNet>` (one
-//! engine serves any grid), [`crate::coordinator::eval::eval_backend`]
-//! scores any grid offline, and the `repro` CLI exposes all of it behind
-//! `--backend`.
+//! Consumers: [`crate::fleet::Fleet`] slots store versioned
+//! `Box<dyn PreparedNet>`s (one engine serves any grid, and hot-swaps
+//! between them), [`crate::coordinator::eval::eval_backend`] scores any
+//! grid offline, and the `repro` CLI exposes all of it behind `--backend`.
 
+mod calib;
 mod int8;
 
+pub use calib::{CalibBackend, CalibRanges};
 pub use int8::Int8Backend;
 
 use std::sync::Arc;
@@ -51,9 +54,7 @@ use std::sync::Arc;
 use crate::nn::{ArchSpec, ParamMap};
 use crate::obs::NetObs;
 use crate::par::Pool;
-use crate::quant::deploy::{
-    forward_fakequant_obs, DeployScratch, DeployedModel, Mode,
-};
+use crate::quant::deploy::{forward_fakequant_obs, DeployScratch, DeployedModel, Mode};
 use crate::tensor::Tensor;
 
 /// The closed set of execution grids a network can run under.
@@ -83,7 +84,7 @@ impl BackendKind {
         BackendKind::Int8,
     ];
 
-    /// The stable string form: what `--backend` accepts, what registry wire
+    /// The stable string form: what `--backend` accepts, what fleet wire
     /// keys and bench rows embed.  Round-trips through [`Self::from_key`].
     pub fn key(self) -> &'static str {
         match self {
@@ -305,7 +306,8 @@ impl PreparedNet for FpPrepared {
 // ------------------------------------------------------------- fake-quant
 
 /// Fake-quant simulation backend: the FP32-represented student graph
-/// ([`forward_fakequant`]) behind the uniform contract — the grid the
+/// ([`crate::quant::deploy::forward_fakequant`]) behind the uniform
+/// contract — the grid the
 /// analysis figures and AOT parity tests speak.
 pub struct FakeQuantBackend(pub Mode);
 
@@ -368,8 +370,8 @@ impl PreparedNet for FakeQuantPrepared {
 /// Integer deployment backend: [`DeployedModel`] behind the uniform
 /// contract.  `prepare` is exactly [`DeployedModel::prepare`] and the
 /// forward is exactly `forward_batch_pooled`, so results are bit-identical
-/// to the pre-trait `forward_integer_batch` path at any thread count (the
-/// backend parity suite pins this).
+/// to driving [`DeployedModel`] directly at any thread count (the backend
+/// parity suite pins this).
 pub struct IntBackend(pub Mode);
 
 struct IntPrepared {

@@ -85,7 +85,7 @@ pub fn eval_backend(
     eval_prepared(net.as_ref(), arch.batch, n_images, seed)
 }
 
-/// [`eval_backend`] over an already-prepared net (the registry / CLI path).
+/// [`eval_backend`] over an already-prepared net (the fleet / CLI path).
 /// Scores `eval_image_count(batch, n_images)` images: the batch size is
 /// clamped so small `n_images` still run at least one batch, and the
 /// trailing partial batch is dropped.
@@ -121,19 +121,6 @@ pub fn eval_q_rust(
     seed: u64,
 ) -> f32 {
     eval_backend(arch, tm, BackendKind::FakeQuant(mode), n_images, seed)
-}
-
-/// Pure-rust *integer-deployment* eval — thin wrapper over [`eval_backend`]
-/// with the `{mode}` integer grid (kept for its many call sites; new code
-/// should name the grid explicitly).
-pub fn eval_integer_rust(
-    arch: &crate::nn::ArchSpec,
-    tm: &ParamMap,
-    mode: Mode,
-    n_images: usize,
-    seed: u64,
-) -> f32 {
-    eval_backend(arch, tm, BackendKind::Int(mode), n_images, seed)
 }
 
 /// The batch size [`eval_prepared`] actually runs: clamped so small

@@ -1,0 +1,889 @@
+//! `qft::fleet` — the model-lifecycle layer behind the serving registry.
+//!
+//! The paper's offline/online split freezes a deployment grid once and
+//! serves it forever; this module makes the *frozen* part replaceable
+//! while the engine is live, so a re-finetuned or requantized grid can be
+//! swapped in without dropping a request.  A registry slot is no longer
+//! one `PreparedNet` but a [`Slot`]: an append-only list of frozen
+//! [`Version`]s plus one atomic *route word* deciding which version(s)
+//! the next micro-batch runs on.
+//!
+//! Lifecycle of a version (the README carries the same diagram):
+//!
+//! ```text
+//!            install()            promote()/set_ab()
+//!  .qftw ──► installed ─────────► serving (primary or A/B arm)
+//!                ▲                    │ rollback()/promote(other)
+//!                │                    ▼
+//!                └──── idle ◄──── draining (in-flight batches only)
+//! ```
+//!
+//! Concurrency model (std-only, no locks on the request path):
+//!
+//! * **Versions** live in a fixed-capacity slab of `OnceLock<Arc<Version>>`
+//!   cells.  `install` reserves an index with a `fetch_add` on the length
+//!   and publishes through the `OnceLock` (release), so readers that learn
+//!   the index through the route word (acquire) always observe a fully
+//!   initialized version — the epoch-pointer idiom over plain std atomics.
+//! * **Routing** is one `AtomicU64` packing `(primary idx, secondary idx,
+//!   weight)` — see [`Slot::set_ab`].  `promote` / `rollback` are a single
+//!   store/swap of that word: atomic, instant, and invisible to workers
+//!   mid-batch.  Each worker clones the routed `Arc<Version>` *once per
+//!   batch*, so an in-flight batch finishes on the version it started on;
+//!   a demoted version is retired (dropped) when its last in-flight
+//!   reference drains — [`Slot::in_flight`] watches exactly that refcount.
+//! * **A/B splits** pick the secondary arm by deficit-weighted routing
+//!   ([`Slot::select`]): arm B serves the next batch iff its request share
+//!   would otherwise fall below the configured weight, so arm counts
+//!   converge to the weight without randomness (reply bits never depend on
+//!   routing — each arm is a frozen net; the fleet tests pin convergence).
+//!
+//! Per-version observability rides the existing [`crate::obs`] registry:
+//! version 1 keeps the slot's wire key (`"arch/backend"`) so single-version
+//! serving is unchanged, and every later version gets a distinct
+//! `"arch/backend@vN"` label with its own stage histograms — A/B arms are
+//! therefore separable in every exposition format for free.
+//!
+//! [`Fleet`] is the collection the engine holds: one [`Slot`] per wire key,
+//! loaded by [`Fleet::load`] (weight resolution order documented there).
+//! With [`FleetOptions::shadow_every`] set, every v1 is wrapped in a
+//! [`crate::backend::CalibBackend`] so live traffic feeds per-value range
+//! capture, and [`Slot::install_requantized`] turns a capture into the next
+//! installed version — the `repro requantize` loop.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, OnceLock};
+
+use anyhow::{bail, Result};
+
+use crate::backend::{self, BackendKind, CalibBackend, CalibRanges, PreparedNet};
+use crate::coordinator::{state, weights_io};
+use crate::data::{Dataset, Split};
+use crate::nn::{ArchSpec, ParamMap};
+use crate::obs::{Counter, StageMetrics};
+use crate::quant::deploy::Mode;
+use crate::runtime::manifest::Manifest;
+
+/// Versions a slot can hold over its lifetime (the slab is fixed so
+/// publication needs no reallocation under readers).
+pub const MAX_VERSIONS: usize = 32;
+
+/// Weight basis points: the A/B weight is `0..=10_000` of traffic to the
+/// secondary arm.
+pub const WEIGHT_SCALE: u32 = 10_000;
+
+/// One frozen deployment grid inside a [`Slot`], plus its lifecycle
+/// counters.  Immutable once installed — all mutability lives in the
+/// slot's route word.
+pub struct Version {
+    /// 1-based id within the slot (`fleet load` order).
+    pub id: u32,
+    /// Obs label: the slot key for v1, `"{slot}@v{id}"` afterwards.
+    pub key: String,
+    /// Grid this version runs under (arms of an A/B split may differ).
+    pub kind: BackendKind,
+    pub model: Box<dyn PreparedNet>,
+    /// Parameter/trainable map the model was prepared from (kept so the
+    /// shadow-calibration and requantize paths can rebuild constants).
+    pub params: ParamMap,
+    /// Where the weights came from (export / teacher / he-init / retune).
+    pub source: String,
+    /// Per-version stage histograms, registered under [`Version::key`].
+    pub stage: Arc<StageMetrics>,
+    /// Requests routed to this version (the A/B convergence measure).
+    pub requests: Counter,
+    /// Micro-batches executed on this version.
+    pub batches: Counter,
+    /// Replies this version could not deliver (dropped receivers).
+    pub errors: Counter,
+}
+
+/// What a version is currently doing, derived — not stored — from the
+/// route word and the live refcount.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Role {
+    /// Routed as the primary arm.
+    Primary,
+    /// Routed as the secondary arm at `weight_bp` basis points.
+    Secondary { weight_bp: u32 },
+    /// Not routed, but in-flight batches still hold it.
+    Draining,
+    /// Not routed, fully drained (installed-but-idle or retired).
+    Idle,
+}
+
+/// One status row per version (the `fleet` CLI table).
+pub struct VersionStatus {
+    pub id: u32,
+    pub key: String,
+    pub kind: BackendKind,
+    pub source: String,
+    pub requests: u64,
+    pub batches: u64,
+    pub errors: u64,
+    pub in_flight: usize,
+    pub role: Role,
+}
+
+// Route word layout: bits 0..16 primary index, 16..32 secondary index
+// (NO_ARM = none), 32..48 weight in basis points to the secondary.
+const NO_ARM: u64 = 0xFFFF;
+
+fn pack(primary: usize, secondary: Option<(usize, u32)>) -> u64 {
+    let (s, w) = match secondary {
+        Some((idx, w_bp)) => (idx as u64, w_bp as u64),
+        None => (NO_ARM, 0),
+    };
+    primary as u64 | (s << 16) | (w << 32)
+}
+
+fn unpack(word: u64) -> (usize, Option<(usize, u32)>) {
+    let primary = (word & 0xFFFF) as usize;
+    let s = (word >> 16) & 0xFFFF;
+    if s == NO_ARM {
+        (primary, None)
+    } else {
+        (primary, Some((s as usize, (word >> 32) as u32)))
+    }
+}
+
+/// A versioned registry slot: every model a wire key has ever loaded, plus
+/// the atomic route word deciding what the next batch runs on.  Shared
+/// freely across workers and admin threads — all methods take `&self`.
+pub struct Slot {
+    /// `"arch/backend-key"`, the wire name clients resolve.
+    pub key: String,
+    /// The arch every version of this slot deploys (new versions are
+    /// prepared against it, and payload compatibility is enforced on
+    /// install).
+    pub arch: ArchSpec,
+    versions: Box<[OnceLock<Arc<Version>>]>,
+    len: AtomicUsize,
+    route: AtomicU64,
+    prev_route: AtomicU64,
+    /// Route-word changes (promote / set_ab / rollback).
+    pub route_changes: Counter,
+    /// Shadow-capture accumulator, present when the slot was loaded with
+    /// [`FleetOptions::shadow_every`] > 0 (set once, at load).
+    calib: OnceLock<Arc<CalibRanges>>,
+}
+
+impl Slot {
+    /// A slot serving its first version.
+    pub fn new(
+        key: String,
+        arch: ArchSpec,
+        kind: BackendKind,
+        model: Box<dyn PreparedNet>,
+        params: ParamMap,
+        source: String,
+    ) -> Arc<Slot> {
+        let slot = Arc::new(Slot {
+            key,
+            arch,
+            versions: (0..MAX_VERSIONS).map(|_| OnceLock::new()).collect(),
+            len: AtomicUsize::new(0),
+            route: AtomicU64::new(pack(0, None)),
+            prev_route: AtomicU64::new(pack(0, None)),
+            route_changes: Counter::new(),
+            calib: OnceLock::new(),
+        });
+        slot.install(kind, model, params, source)
+            .expect("an empty slot accepts its first version");
+        slot
+    }
+
+    fn make_key(&self, id: u32) -> String {
+        if id == 1 {
+            self.key.clone()
+        } else {
+            format!("{}@v{id}", self.key)
+        }
+    }
+
+    /// Install a prepared model as the next version (NOT routed — promote
+    /// or A/B it in explicitly).  Returns the new 1-based version id.
+    /// Fails if the model's payload contract differs from the slot's, or
+    /// the slab is full.
+    pub fn install(
+        &self,
+        kind: BackendKind,
+        model: Box<dyn PreparedNet>,
+        params: ParamMap,
+        source: String,
+    ) -> Result<u32> {
+        if let Some(first) = self.versions[0].get() {
+            // arms must be interchangeable on the wire: same payload, same
+            // logit width
+            if model.image_len() != first.model.image_len()
+                || model.num_classes() != first.model.num_classes()
+            {
+                bail!(
+                    "slot {}: new version has payload {}x{} (expected {}x{})",
+                    self.key,
+                    model.image_len(),
+                    model.num_classes(),
+                    first.model.image_len(),
+                    first.model.num_classes()
+                );
+            }
+        }
+        // reserve an index; the OnceLock publish (release) below is what
+        // makes the version visible to routed readers
+        let idx = self.len.fetch_add(1, Ordering::AcqRel);
+        if idx >= MAX_VERSIONS {
+            self.len.fetch_sub(1, Ordering::AcqRel);
+            bail!("slot {}: version slab full ({MAX_VERSIONS} versions)", self.key);
+        }
+        let id = (idx + 1) as u32;
+        let key = self.make_key(id);
+        let stage = crate::obs::stage_metrics(&key);
+        let v = Arc::new(Version {
+            id,
+            key,
+            kind,
+            model,
+            params,
+            source,
+            stage,
+            requests: Counter::new(),
+            batches: Counter::new(),
+            errors: Counter::new(),
+        });
+        self.versions[idx]
+            .set(v)
+            .unwrap_or_else(|_| unreachable!("index {idx} reserved uniquely"));
+        Ok(id)
+    }
+
+    /// Number of installed (or installing) versions.
+    pub fn version_count(&self) -> usize {
+        self.len.load(Ordering::Acquire).min(MAX_VERSIONS)
+    }
+
+    /// A version by 1-based id, if installed.
+    pub fn version(&self, id: u32) -> Option<Arc<Version>> {
+        let idx = (id as usize).checked_sub(1)?;
+        if idx >= self.version_count() {
+            return None;
+        }
+        self.versions[idx].get().cloned()
+    }
+
+    /// Every installed version, in install order.
+    pub fn versions(&self) -> Vec<Arc<Version>> {
+        (0..self.version_count())
+            .filter_map(|i| self.versions[i].get().cloned())
+            .collect()
+    }
+
+    fn routed(&self, idx: usize) -> Arc<Version> {
+        self.versions[idx]
+            .get()
+            .expect("route words only ever point at installed versions")
+            .clone()
+    }
+
+    fn checked(&self, id: u32, what: &str) -> Result<usize> {
+        match self.version(id) {
+            Some(_) => Ok(id as usize - 1),
+            None => bail!(
+                "slot {}: cannot {what} version {id} ({} installed)",
+                self.key,
+                self.version_count()
+            ),
+        }
+    }
+
+    /// Atomically make version `id` the sole serving version.  In-flight
+    /// batches finish on whatever they started on; the displaced route is
+    /// remembered for [`Slot::rollback`].
+    pub fn promote(&self, id: u32) -> Result<()> {
+        let idx = self.checked(id, "promote")?;
+        let old = self.route.swap(pack(idx, None), Ordering::AcqRel);
+        self.prev_route.store(old, Ordering::Release);
+        self.route_changes.add(1);
+        crate::obs::route_changes().add(1);
+        Ok(())
+    }
+
+    /// Atomically split traffic: primary `a`, secondary `b` at `weight_bp`
+    /// basis points (`0..=10_000`) of requests.
+    pub fn set_ab(&self, a: u32, b: u32, weight_bp: u32) -> Result<()> {
+        let ai = self.checked(a, "route")?;
+        let bi = self.checked(b, "route")?;
+        if a == b {
+            bail!("slot {}: A/B arms must differ (both v{a})", self.key);
+        }
+        if weight_bp > WEIGHT_SCALE {
+            bail!("slot {}: weight {weight_bp} out of range 0..={WEIGHT_SCALE}", self.key);
+        }
+        let old = self.route.swap(pack(ai, Some((bi, weight_bp))), Ordering::AcqRel);
+        self.prev_route.store(old, Ordering::Release);
+        self.route_changes.add(1);
+        crate::obs::route_changes().add(1);
+        Ok(())
+    }
+
+    /// Instantly restore the route displaced by the last promote/set_ab
+    /// (swapping again rolls forward — the two words exchange).
+    pub fn rollback(&self) {
+        let prev = self.prev_route.load(Ordering::Acquire);
+        let old = self.route.swap(prev, Ordering::AcqRel);
+        self.prev_route.store(old, Ordering::Release);
+        self.route_changes.add(1);
+        crate::obs::route_changes().add(1);
+    }
+
+    /// The current route: primary version plus the optional secondary arm
+    /// and its weight.
+    pub fn route(&self) -> (Arc<Version>, Option<(Arc<Version>, u32)>) {
+        let (pi, sec) = unpack(self.route.load(Ordering::Acquire));
+        (self.routed(pi), sec.map(|(si, w)| (self.routed(si), w)))
+    }
+
+    /// The primary serving version (what single-version callers execute).
+    pub fn primary(&self) -> Arc<Version> {
+        self.route().0
+    }
+
+    /// Route one micro-batch of `n` requests: returns the version it must
+    /// run on and charges `n` to that arm's request counter.  One atomic
+    /// load on the single-version fast path; under an A/B split the
+    /// secondary serves iff its share would otherwise drop below the
+    /// configured weight (deficit-weighted, so arm counts converge to the
+    /// weight deterministically).
+    pub fn select(&self, n: usize) -> Arc<Version> {
+        let (pi, sec) = unpack(self.route.load(Ordering::Acquire));
+        let chosen = match sec {
+            None => self.routed(pi),
+            Some((si, w_bp)) => {
+                let a = self.routed(pi);
+                let b = self.routed(si);
+                let (ra, rb, n64) = (a.requests.get(), b.requests.get(), n as u64);
+                if (rb + n64) * WEIGHT_SCALE as u64 <= (ra + rb + n64) * w_bp as u64 {
+                    b
+                } else {
+                    a
+                }
+            }
+        };
+        chosen.requests.add(n as u64);
+        chosen
+    }
+
+    /// Payload contract shared by every version of this slot.
+    pub fn image_len(&self) -> usize {
+        self.versions[0].get().expect("slots hold >= 1 version").model.image_len()
+    }
+
+    /// In-flight references to version `id`: worker-held `Arc` clones, i.e.
+    /// batches currently executing on it (approximate — status readers
+    /// holding the version count too).  A demoted version is retired when
+    /// this drains to zero.
+    pub fn in_flight(&self, id: u32) -> usize {
+        match self.version(id) {
+            // the slab itself holds one reference, `version` a second
+            Some(v) => Arc::strong_count(&v).saturating_sub(2),
+            None => 0,
+        }
+    }
+
+    /// One status row per installed version (role derived from the route
+    /// word + live refcounts).
+    pub fn status(&self) -> Vec<VersionStatus> {
+        let (pi, sec) = unpack(self.route.load(Ordering::Acquire));
+        self.versions()
+            .into_iter()
+            .map(|v| {
+                let idx = v.id as usize - 1;
+                // this scope holds `v` and the `versions()` vec cloned it:
+                // subtract slab + this copy
+                let in_flight = Arc::strong_count(&v).saturating_sub(2);
+                let role = if idx == pi {
+                    Role::Primary
+                } else if sec.map(|(si, _)| si == idx).unwrap_or(false) {
+                    Role::Secondary { weight_bp: sec.unwrap().1 }
+                } else if in_flight > 0 {
+                    Role::Draining
+                } else {
+                    Role::Idle
+                };
+                VersionStatus {
+                    id: v.id,
+                    key: v.key.clone(),
+                    kind: v.kind,
+                    source: v.source.clone(),
+                    requests: v.requests.get(),
+                    batches: v.batches.get(),
+                    errors: v.errors.get(),
+                    in_flight,
+                    role,
+                }
+            })
+            .collect()
+    }
+
+    /// Human-readable status table (the `repro fleet` report).
+    pub fn status_table(&self) -> String {
+        use std::fmt::Write as _;
+        let mut o = String::new();
+        let _ = writeln!(o, "slot {} ({} versions):", self.key, self.version_count());
+        let _ = writeln!(
+            o,
+            "  {:<4} {:<8} {:<22} {:>10} {:>8} {:>7} {:>9}  source",
+            "ver", "backend", "role", "requests", "batches", "errors", "in-flight"
+        );
+        for s in self.status() {
+            let role = match s.role {
+                Role::Primary => "primary".to_string(),
+                Role::Secondary { weight_bp } => {
+                    format!("secondary ({:.1}%)", weight_bp as f64 / 100.0)
+                }
+                Role::Draining => "draining".to_string(),
+                Role::Idle => "idle".to_string(),
+            };
+            let _ = writeln!(
+                o,
+                "  v{:<3} {:<8} {:<22} {:>10} {:>8} {:>7} {:>9}  {}",
+                s.id,
+                s.kind.key(),
+                role,
+                s.requests,
+                s.batches,
+                s.errors,
+                s.in_flight,
+                s.source
+            );
+        }
+        o
+    }
+
+    /// Attach the shadow-capture accumulator (load-time, once; later calls
+    /// are ignored so the handle serving workers see never changes).
+    pub fn attach_calib(&self, ranges: Arc<CalibRanges>) {
+        let _ = self.calib.set(ranges);
+    }
+
+    /// The shadow-capture accumulator, when the slot serves through a
+    /// [`CalibBackend`].
+    pub fn calib(&self) -> Option<Arc<CalibRanges>> {
+        self.calib.get().cloned()
+    }
+
+    /// Rebuild the primary's deployment constants from *observed* activation
+    /// absmax (a [`CalibRanges::absmax`] capture) and install the result as
+    /// the next version — NOT routed; promote it explicitly.  This is the
+    /// requantize loop: the same PTQ init as offline load, fed live ranges.
+    pub fn install_requantized(
+        &self,
+        absmax: &HashMap<usize, Vec<f32>>,
+        source: String,
+    ) -> Result<u32> {
+        let primary = self.primary();
+        let Some(mode) = primary.kind.mode() else {
+            bail!(
+                "slot {}: backend {} has no quantized grid to requantize",
+                self.key,
+                primary.kind.key()
+            );
+        };
+        if absmax.is_empty() {
+            bail!("slot {}: no captured ranges to requantize from", self.key);
+        }
+        let tm =
+            crate::quant::deploy::requantize_trainables(&self.arch, &primary.params, absmax, mode);
+        let model = backend::prepare(primary.kind, &self.arch, &tm);
+        self.install(primary.kind, model, tm, source)
+    }
+}
+
+/// Options for [`Fleet::load_with`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FleetOptions {
+    /// When > 0, wrap every slot's first version in a
+    /// [`CalibBackend`] mirroring one micro-batch in `shadow_every` into a
+    /// shadow FP forward for range capture (0 = no shadow, no overhead).
+    pub shadow_every: u32,
+}
+
+/// The collection of versioned [`Slot`]s one engine serves — the lifecycle
+/// successor of the old frozen registry.  The collection itself is
+/// immutable after load (slot ids are wire-stable); all lifecycle
+/// mutability (install / promote / A/B / rollback) lives *inside* the
+/// slots, so `Arc<Fleet>` is shared freely between workers and admin
+/// threads.
+#[derive(Default)]
+pub struct Fleet {
+    slots: Vec<Arc<Slot>>,
+    by_key: HashMap<String, usize>,
+}
+
+impl Fleet {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register a slot; returns its id (what requests carry on the wire).
+    pub fn insert(&mut self, slot: Arc<Slot>) -> Result<usize> {
+        if self.by_key.contains_key(&slot.key) {
+            bail!("model {} requested twice", slot.key);
+        }
+        let id = self.slots.len();
+        self.by_key.insert(slot.key.clone(), id);
+        self.slots.push(slot);
+        Ok(id)
+    }
+
+    /// Slot by id, if it exists (the request path's non-panicking lookup).
+    pub fn slot(&self, id: usize) -> Option<&Arc<Slot>> {
+        self.slots.get(id)
+    }
+
+    /// Slot id for a `"arch/backend-key"` wire key.
+    pub fn resolve(&self, key: &str) -> Option<usize> {
+        self.by_key.get(key).copied()
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.slots.iter().map(|s| s.key.as_str())
+    }
+
+    /// Status tables for every slot, concatenated.
+    pub fn status_table(&self) -> String {
+        self.slots.iter().map(|s| s.status_table()).collect()
+    }
+
+    /// [`Fleet::load_with`] with default options (no shadow capture).
+    pub fn load(dir: &Path, specs: &[(String, BackendKind)]) -> Result<Arc<Fleet>> {
+        Self::load_with(dir, specs, FleetOptions::default())
+    }
+
+    /// Load `(arch name, backend)` pairs from an artifacts dir into a
+    /// shareable fleet, one slot per pair, each serving its v1.  Arch specs
+    /// come from the AOT manifest when present; the name `"synthetic"` (or
+    /// any name when no manifest exists) falls back to
+    /// [`crate::serve::synthetic_arch`] so serving runs artifact-free.
+    /// Weight resolution per slot is [`resolve_weights`].
+    pub fn load_with(
+        dir: &Path,
+        specs: &[(String, BackendKind)],
+        opts: FleetOptions,
+    ) -> Result<Arc<Fleet>> {
+        anyhow::ensure!(!specs.is_empty(), "fleet: no models requested");
+        let manifest = Manifest::load(dir.join("manifest.json")).ok();
+        let mut fleet = Fleet::new();
+        for (name, kind) in specs {
+            let arch: ArchSpec = match &manifest {
+                Some(m) => match m.archs.get(name) {
+                    Some(a) => a.clone(),
+                    None if name == "synthetic" => crate::serve::synthetic_arch(),
+                    None => bail!(
+                        "unknown arch {name}; manifest has {:?} (plus the built-in \"synthetic\")",
+                        m.archs.keys().collect::<Vec<_>>()
+                    ),
+                },
+                None => {
+                    eprintln!(
+                        "fleet: no manifest under {dir:?}; using the built-in \
+                         synthetic arch for {name:?}"
+                    );
+                    // keep the wire key the caller asked for, even though the
+                    // graph underneath is the synthetic one
+                    let mut a = crate::serve::synthetic_arch();
+                    a.name = name.clone();
+                    a
+                }
+            };
+            let key = format!("{}/{}", arch.name, kind.key());
+            let (params, source) = resolve_weights(dir, &arch, *kind)?;
+            let mut model = backend::prepare(*kind, &arch, &params);
+            let mut calib = None;
+            if opts.shadow_every > 0 {
+                let (wrapped, ranges) =
+                    CalibBackend::wrap(model, &arch, &params, opts.shadow_every);
+                model = wrapped;
+                calib = Some(ranges);
+            }
+            eprintln!("fleet: {key} <- {source}");
+            let slot = Slot::new(key, arch, *kind, model, params, source);
+            if let Some(ranges) = calib {
+                slot.attach_calib(ranges);
+            }
+            fleet.insert(slot)?;
+        }
+        Ok(Arc::new(fleet))
+    }
+}
+
+/// Resolve weights for one arch × backend (shared by [`Fleet::load_with`]
+/// and [`install_version`]).  Resolution order:
+///
+/// 1. `{artifacts}/weights/{arch}.{mode}.qftw` — the trainable set exported
+///    by `repro qft` (the real deployment artifact; `lw-i8` shares the `lw`
+///    export — same DoF, different engine);
+/// 2. `{artifacts}/weights/{arch}.qftw` — the cached FP teacher, pushed
+///    through the offline PTQ init (naive-max calibration on the synthetic
+///    calib split + MMSE weight scales);
+/// 3. He-init weights through the same PTQ init — accuracy is meaningless
+///    but every serving code path still runs (smoke/bench mode).
+///
+/// The `fp` backend consumes raw FP parameters, so it resolves the teacher
+/// file (2) directly, else he-init, with no PTQ init.
+pub fn resolve_weights(
+    dir: &Path,
+    arch: &ArchSpec,
+    kind: BackendKind,
+) -> Result<(ParamMap, String)> {
+    let teacher = dir.join("weights").join(format!("{}.qftw", arch.name));
+    match kind.mode() {
+        // quantized grids consume the mode's trainable set
+        Some(mode) => {
+            let export = dir.join("weights").join(format!("{}.{}.qftw", arch.name, mode.key()));
+            if export.is_file() {
+                Ok((weights_io::load(&export)?, format!("qft export {export:?}")))
+            } else {
+                let (params, source) = if teacher.is_file() {
+                    (
+                        weights_io::load(&teacher)?,
+                        format!("fp teacher {teacher:?} + offline PTQ init"),
+                    )
+                } else {
+                    (
+                        state::he_init_params(arch, 0),
+                        "he-init + offline PTQ init (untrained: smoke/bench only)".to_string(),
+                    )
+                };
+                let ds = Dataset::new(0);
+                let batches: Vec<_> = (0..4)
+                    .map(|i| ds.batch(Split::Calib, (i * arch.batch) as u64, arch.batch).0)
+                    .collect();
+                let absmax = state::absmax_from_rust_forward(arch, &params, &batches);
+                let winit = match mode {
+                    Mode::Lw => state::WeightScaleInit::Uniform,
+                    Mode::Dch => state::WeightScaleInit::DoublyChannelwise,
+                };
+                Ok((state::init_trainables(arch, &params, &absmax, mode, winit, None), source))
+            }
+        }
+        // the fp grid runs raw FP parameters — no PTQ init
+        None => {
+            if teacher.is_file() {
+                Ok((weights_io::load(&teacher)?, format!("fp teacher {teacher:?}")))
+            } else {
+                Ok((
+                    state::he_init_params(arch, 0),
+                    "he-init (untrained: smoke/bench only)".to_string(),
+                ))
+            }
+        }
+    }
+}
+
+/// Resolve weights for `kind` against `slot.arch` and install the prepared
+/// result as the slot's next version (the `fleet load` admin verb; also how
+/// the CLI installs an A/B arm on another backend).  Returns the new
+/// version id — not routed until promoted or A/B'd.
+pub fn install_version(slot: &Slot, dir: &Path, kind: BackendKind) -> Result<u32> {
+    let (params, source) = resolve_weights(dir, &slot.arch, kind)?;
+    let model = backend::prepare(kind, &slot.arch, &params);
+    slot.install(kind, model, params, source)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::deploy::Mode;
+
+    fn slot() -> Arc<Slot> {
+        let (arch, tm) = crate::serve::synthetic_trainables(Mode::Lw, 7);
+        let kind = BackendKind::Int(Mode::Lw);
+        let model = crate::backend::prepare(kind, &arch, &tm);
+        Slot::new("synthetic/lw".into(), arch, kind, model, tm, "test".into())
+    }
+
+    fn install_v2(s: &Slot) -> u32 {
+        let kind = BackendKind::Int(Mode::Lw);
+        let model = crate::backend::prepare(kind, &s.arch, &s.primary().params);
+        s.install(kind, model, s.primary().params.clone(), "test v2".into()).unwrap()
+    }
+
+    #[test]
+    fn install_does_not_reroute_until_promote() {
+        let s = slot();
+        assert_eq!(s.primary().id, 1);
+        let v2 = install_v2(&s);
+        assert_eq!(v2, 2);
+        assert_eq!(s.primary().id, 1, "install must not change the route");
+        s.promote(v2).unwrap();
+        assert_eq!(s.primary().id, 2);
+        s.rollback();
+        assert_eq!(s.primary().id, 1);
+        s.rollback(); // roll forward again: the two words exchange
+        assert_eq!(s.primary().id, 2);
+    }
+
+    #[test]
+    fn version_keys_label_per_version_obs() {
+        let s = slot();
+        install_v2(&s);
+        assert_eq!(s.version(1).unwrap().key, "synthetic/lw");
+        assert_eq!(s.version(2).unwrap().key, "synthetic/lw@v2");
+    }
+
+    #[test]
+    fn bad_route_targets_error() {
+        let s = slot();
+        assert!(s.promote(2).is_err());
+        assert!(s.promote(0).is_err());
+        let v2 = install_v2(&s);
+        assert!(s.set_ab(1, v2, WEIGHT_SCALE + 1).is_err());
+        assert!(s.set_ab(v2, v2, 100).is_err());
+        s.set_ab(1, v2, 2_500).unwrap();
+        let (a, b) = s.route();
+        assert_eq!(a.id, 1);
+        assert_eq!(b.unwrap().0.id, 2);
+    }
+
+    #[test]
+    fn deficit_select_converges_to_weight() {
+        let s = slot();
+        let v2 = install_v2(&s);
+        s.set_ab(1, v2, 2_500).unwrap();
+        for _ in 0..400 {
+            s.select(1);
+        }
+        let rb = s.version(2).unwrap().requests.get();
+        assert_eq!(rb, 100, "25% of 400 single-request batches");
+        // weight 0 / 10000 are the degenerate arms
+        s.set_ab(1, v2, 0).unwrap();
+        let before = s.version(2).unwrap().requests.get();
+        for _ in 0..32 {
+            s.select(3);
+        }
+        assert_eq!(s.version(2).unwrap().requests.get(), before);
+    }
+
+    #[test]
+    fn incompatible_payloads_are_rejected() {
+        let s = slot();
+        let mut arch2 = s.arch.clone();
+        arch2.input_hw = 8; // different payload contract
+        let params = crate::coordinator::state::he_init_params(&arch2, 0);
+        let model = crate::backend::prepare(BackendKind::Fp, &arch2, &params);
+        let err = s.install(BackendKind::Fp, model, params, "bad".into()).unwrap_err();
+        assert!(err.to_string().contains("payload"), "{err}");
+    }
+
+    #[test]
+    fn draining_role_tracks_refcount() {
+        let s = slot();
+        let v2 = install_v2(&s);
+        let held = s.version(1).unwrap(); // simulate an in-flight batch
+        s.promote(v2).unwrap();
+        let st = s.status();
+        assert_eq!(st[0].role, Role::Draining);
+        assert_eq!(st[1].role, Role::Primary);
+        drop(held);
+        assert_eq!(s.status()[0].role, Role::Idle);
+    }
+
+    #[test]
+    fn synthetic_fallback_loads_both_modes() {
+        let dir = std::env::temp_dir().join("qft_fleet_test_nonexistent");
+        let fleet = Fleet::load(
+            &dir,
+            &[
+                ("synthetic".to_string(), BackendKind::Int(Mode::Lw)),
+                ("synthetic".to_string(), BackendKind::Int(Mode::Dch)),
+            ],
+        )
+        .unwrap();
+        assert_eq!(fleet.len(), 2);
+        assert_eq!(fleet.resolve("synthetic/lw"), Some(0));
+        assert_eq!(fleet.resolve("synthetic/dch"), Some(1));
+        assert_eq!(fleet.slot(0).unwrap().image_len(), 16 * 16 * 3);
+        assert!(fleet.slot(0).unwrap().calib().is_none(), "no shadow by default");
+        assert!(fleet.slot(2).is_none());
+    }
+
+    #[test]
+    fn every_backend_kind_loads_artifact_free() {
+        let dir = std::env::temp_dir().join("qft_fleet_test_nonexistent");
+        let specs: Vec<(String, BackendKind)> =
+            BackendKind::ALL.iter().map(|k| ("synthetic".to_string(), *k)).collect();
+        let fleet = Fleet::load(&dir, &specs).unwrap();
+        assert_eq!(fleet.len(), BackendKind::ALL.len());
+        for kind in BackendKind::ALL {
+            let id = fleet.resolve(&format!("synthetic/{}", kind.key())).unwrap();
+            let slot = fleet.slot(id).unwrap();
+            assert_eq!(slot.primary().kind, kind);
+            assert_eq!(slot.image_len(), 16 * 16 * 3);
+        }
+    }
+
+    #[test]
+    fn shadowed_load_captures_and_requantizes() {
+        let dir = std::env::temp_dir().join("qft_fleet_test_nonexistent");
+        let fleet = Fleet::load_with(
+            &dir,
+            &[("synthetic".to_string(), BackendKind::Int(Mode::Lw))],
+            FleetOptions { shadow_every: 1 },
+        )
+        .unwrap();
+        let slot = fleet.slot(0).unwrap();
+        let ranges = slot.calib().expect("shadow_every attaches a recorder");
+        // nothing captured yet: requantize must refuse
+        assert!(slot.install_requantized(&ranges.absmax(), "premature".into()).is_err());
+        // push a batch through v1 so the shadow records
+        let x = crate::data::Dataset::new(1).batch(Split::Val, 0, 4).0;
+        let v1 = slot.primary();
+        let pool = crate::par::Pool::new(1);
+        v1.model.forward_batch(&x, &mut crate::backend::Scratch::new(), &pool);
+        assert!(!ranges.is_empty());
+        let v2 = slot.install_requantized(&ranges.absmax(), "requantized".into()).unwrap();
+        assert_eq!(v2, 2);
+        assert_eq!(slot.primary().id, 1, "install must not reroute");
+        slot.promote(v2).unwrap();
+        let p = slot.primary();
+        assert_eq!(p.id, 2);
+        // the requantized grid serves the same payload contract
+        let y = p.model.forward_batch(&x, &mut crate::backend::Scratch::new(), &pool);
+        assert_eq!(y.shape, vec![4, slot.arch.num_classes]);
+        assert!(y.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn requantize_refuses_grids_without_a_mode() {
+        let dir = std::env::temp_dir().join("qft_fleet_test_nonexistent");
+        let fleet = Fleet::load(&dir, &[("synthetic".to_string(), BackendKind::Fp)]).unwrap();
+        let slot = fleet.slot(0).unwrap();
+        let absmax: HashMap<usize, Vec<f32>> = [(0, vec![1.0])].into();
+        let err = slot.install_requantized(&absmax, "x".into()).unwrap_err();
+        assert!(err.to_string().contains("no quantized grid"), "{err}");
+    }
+
+    #[test]
+    fn install_version_adds_another_backend_arm() {
+        let dir = std::env::temp_dir().join("qft_fleet_test_nonexistent");
+        let fleet =
+            Fleet::load(&dir, &[("synthetic".to_string(), BackendKind::Int(Mode::Lw))]).unwrap();
+        let slot = fleet.slot(0).unwrap();
+        let v2 = install_version(slot, &dir, BackendKind::Int8).unwrap();
+        assert_eq!(slot.version(v2).unwrap().kind, BackendKind::Int8);
+        slot.set_ab(1, v2, 5_000).unwrap();
+        let (a, b) = slot.route();
+        assert_eq!(a.kind, BackendKind::Int(Mode::Lw));
+        assert_eq!(b.unwrap().0.kind, BackendKind::Int8);
+    }
+}

@@ -30,7 +30,7 @@
 //! [`par::Pool`]).  [`backend::BackendKind`] names the grids with stable
 //! string keys (`fp`, `fq-lw`, `fq-dch`, `lw`, `dch`, `lw-i8` —
 //! `BackendKind::{key, from_key}` round-trip), which is what the CLI
-//! `--backend` flag, the serve registry wire keys and the bench emitters
+//! `--backend` flag, the fleet wire keys and the bench emitters
 //! speak.  The historical free functions (`nn::fp_forward`,
 //! `quant::deploy::forward_fakequant`, the integer `DeployedModel`) are
 //! re-homed as [`backend::FpBackend`], [`backend::FakeQuantBackend`] and
@@ -45,8 +45,10 @@
 //! The paper freezes all deployment constants offline precisely so the
 //! online integer path is cheap; [`serve`] turns that online path into an
 //! inference server over ANY backend.  [`backend::Backend::prepare`] runs
-//! the offline subgraph once per (arch × backend); [`serve::Registry`]
-//! holds the frozen `Box<dyn PreparedNet>`s; [`serve::Engine`] runs a
+//! the offline subgraph once per (arch × backend); [`fleet::Fleet`] holds
+//! the frozen `Box<dyn PreparedNet>`s in versioned [`fleet::Slot`]s
+//! (atomic hot-swap / A/B routing / rollback while serving, plus shadow
+//! range capture feeding `repro requantize`); [`serve::Engine`] runs a
 //! std-thread worker pool over a bounded dynamic micro-batching queue
 //! ([`serve::Batcher`], max-batch / max-wait-µs policy with blocking
 //! backpressure), each worker reusing one [`backend::Scratch`] so
@@ -130,7 +132,7 @@
 //! *Pool sharing model*: there is ONE process-wide pool ([`par::global`]),
 //! sized by the `--threads` CLI flag on `serve` / `bench-serve` / the eval
 //! commands (else `available_parallelism`).  The [`serve::Engine`] workers
-//! and [`coordinator::eval::eval_integer_rust`] all submit scopes to it,
+//! and [`coordinator::eval::eval_backend`] all submit scopes to it,
 //! so concurrent callers cooperate on one worker set instead of
 //! oversubscribing the machine; [`serve::ServeStats`] reports the pool
 //! width alongside latency, and the batcher reads the pool's live
@@ -145,6 +147,7 @@
 pub mod backend;
 pub mod coordinator;
 pub mod data;
+pub mod fleet;
 pub mod kernel;
 pub mod nn;
 pub mod obs;

@@ -24,9 +24,10 @@ use anyhow::{bail, Result};
 
 use qft::backend::BackendKind;
 use qft::coordinator::{eval, experiments, metrics, pretrain, qft as qft_stage};
+use qft::fleet::{install_version, Fleet, FleetOptions, Slot};
 use qft::quant::deploy::Mode;
 use qft::runtime::Runtime;
-use qft::serve::{run_closed_loop, Engine, Registry, ServeConfig};
+use qft::serve::{run_closed_loop, Engine, ServeConfig};
 
 const USAGE: &str = "\
 repro — QFT post-training quantization pipeline
@@ -52,9 +53,27 @@ COMMANDS:
 SERVING / BACKEND EVAL (pure-rust execution backends; no PJRT needed):
   serve     [--arch A] [--backend K] [--workers N] [--max-batch B]
             [--max-wait-us U] [--queue-cap Q] [--requests R] [--threads T]
-            [--stats-json P]              load A/K into the registry, run a
+            [--stats-json P]              load A/K into the fleet, run a
                                           closed-loop smoke client over R val
                                           images, report accuracy + latency
+            [--backend-b K2] [--ab-bp W]  install K2 as a second version and
+                                          A/B-split W basis points (of 10000)
+                                          of traffic to it
+            [--shadow-every S]            mirror 1-in-S micro-batches into a
+                                          shadow FP forward capturing live
+                                          activation ranges (0 = off)
+            [--swap-after N]              after N replies, install a
+                                          bit-identical twin version and
+                                          atomically hot-swap to it (replies
+                                          must not change — swap demo/check)
+  requantize [--arch A] [--backend K] [--requests R] [--shadow-every S]
+            [serve options]               closed-loop phase 1 captures live
+                                          ranges via the shadow backend, then
+                                          deployment constants are rebuilt
+                                          from them, hot-swapped in, and
+                                          phase 2 serves the requantized
+                                          grid; per-phase accuracy + the
+                                          fleet status table are printed
   bench-serve [--arch A] [--backend K] [--workers N] [--max-batch B]
             [--max-wait-us U] [--queue-cap Q] [--concurrency C]
             [--requests R] [--threads T] [--stats-json P]
@@ -97,13 +116,22 @@ table is printed on graceful shutdown.
 Weights for serving resolve from weights/A.MODE.qftw (qft export), else
 weights/A.qftw (FP teacher + offline PTQ init), else he-init smoke weights.
 Without artifacts/manifest.json a built-in `synthetic` arch is served.
+
+Model fleet (qft::fleet): every served key is a versioned slot.  New
+versions install while serving; promotion is one atomic route-word swap
+(in-flight batches finish on the old version, which drains and retires);
+rollback is instant.  --backend-b/--ab-bp split traffic between two
+versions with per-arm obs labels (\"arch/backend@v2\"); --shadow-every
+feeds the CalibBackend range capture that `repro requantize` turns into
+freshly fitted deployment constants.
 ";
 
 /// Every `--key value` option any command accepts (unknown keys are errors).
 const KV_KEYS: &[&str] = &[
     "arch", "archs", "steps", "lr", "mode", "backend", "images", "ce-mix",
     "workers", "max-batch", "max-wait-us", "queue-cap", "requests",
-    "concurrency", "threads", "stats-json", "obs-sample",
+    "concurrency", "threads", "stats-json", "obs-sample", "backend-b",
+    "ab-bp", "shadow-every", "swap-after",
 ];
 /// Every boolean `--flag`.
 const BOOL_FLAGS: &[&str] = &["cle", "frozen-scales", "fast", "no-adaptive", "no-obs", "prom"];
@@ -111,6 +139,7 @@ const BOOL_FLAGS: &[&str] = &["cle", "frozen-scales", "fast", "no-adaptive", "no
 const COMMANDS: &[&str] = &[
     "pretrain", "eval-fp", "qft", "table1", "table2", "fig3", "fig5", "fig6",
     "fig7", "fig8", "fig9", "fig12", "serve", "bench-serve", "eval", "stats",
+    "requantize",
 ];
 
 /// flags: `--key value` pairs plus boolean `--flag`s.  Duplicates and
@@ -254,6 +283,7 @@ fn main() -> Result<()> {
         "bench-serve" => cmd_bench_serve(&artifacts, &args),
         "eval" => cmd_eval(&artifacts, &args),
         "stats" => cmd_stats(&args),
+        "requantize" => cmd_requantize(&artifacts, &args),
         _ => {
             let rt = Runtime::load(&artifacts)?;
             eprintln!("platform: {}", rt.platform());
@@ -330,25 +360,61 @@ fn serve_cfg(args: &Args) -> Result<ServeConfig> {
     })
 }
 
+/// Install a bit-identical twin of the slot's primary (same params, same
+/// backend, freshly prepared) and atomically promote it — the hot-swap
+/// demo/check behind `--swap-after`: replies must not change across it.
+fn hot_swap_twin(slot: &Slot) -> Result<u32> {
+    let p = slot.primary();
+    let model = qft::backend::prepare(p.kind, &slot.arch, &p.params);
+    let v = slot.install(p.kind, model, p.params.clone(), format!("hot-swap twin of v{}", p.id))?;
+    slot.promote(v)?;
+    Ok(v)
+}
+
 fn cmd_serve(artifacts: &str, args: &Args) -> Result<()> {
     reject_unused(args, "serve", &["images", "concurrency"], &["prom"])?;
     let arch = args.get("arch", "synthetic");
     let kind = parse_backend(args)?;
     let requests = args.usize("requests", 512)?;
     let cfg = serve_cfg(args)?;
+    let shadow_every = args.usize("shadow-every", 0)? as u32;
+    let swap_after = args.usize("swap-after", 0)?;
 
-    let registry = Registry::load(Path::new(artifacts), &[(arch.clone(), kind)])?;
-    let slot = 0;
-    let engine = Engine::start(registry.clone(), &cfg);
+    let fleet = Fleet::load_with(
+        Path::new(artifacts),
+        &[(arch.clone(), kind)],
+        FleetOptions { shadow_every },
+    )?;
+    let slot_id = 0;
+    let slot = fleet.slot(slot_id).expect("fleet just loaded slot 0").clone();
+    // optional second arm on another backend (e.g. lw vs lw-i8)
+    if let Some(bk) = args.kv.get("backend-b") {
+        let kind_b = BackendKind::from_key(bk)?;
+        let weight_bp = args.usize("ab-bp", 5_000)? as u32;
+        let vb = install_version(&slot, Path::new(artifacts), kind_b)?;
+        slot.set_ab(1, vb, weight_bp)?;
+        eprintln!(
+            "serve: A/B split {:.1}% of traffic to {} (v{vb})",
+            weight_bp as f64 / 100.0,
+            kind_b.key()
+        );
+    } else if args.kv.contains_key("ab-bp") {
+        bail!("--ab-bp requires --backend-b");
+    }
+    let engine = Engine::start(fleet.clone(), &cfg);
     let flush = args.kv.get("stats-json").cloned().map(spawn_stats_flush);
     let client = engine.client();
     let ds = qft::data::Dataset::new(0);
     let mut correct = 0usize;
     for i in 0..requests {
         let (img, label) = ds.sample(qft::data::Split::Val, i as u64);
-        let rep = client.infer(slot, img)?;
+        let rep = client.infer(slot_id, img)?;
         if rep.top1 == label {
             correct += 1;
+        }
+        if swap_after != 0 && i + 1 == swap_after {
+            let v = hot_swap_twin(&slot)?;
+            eprintln!("serve: hot-swapped to v{v} after {} replies", i + 1);
         }
     }
     let report = engine.shutdown();
@@ -357,12 +423,88 @@ fn cmd_serve(artifacts: &str, args: &Args) -> Result<()> {
         "top-1 over {requests} served requests: {:.1}%",
         correct as f32 / requests.max(1) as f32 * 100.0
     );
+    print!("{}", slot.status_table());
+    if let Some(ranges) = slot.calib() {
+        print!("{}", ranges.table());
+    }
+    obs_shutdown_dump(flush);
+    Ok(())
+}
+
+/// `repro requantize` — close the calibration loop end-to-end: phase 1
+/// serves the offline-initialized grid while the shadow backend captures
+/// live activation ranges; the deployment constants are then rebuilt from
+/// exactly those ranges ([`Slot::install_requantized`]) and hot-swapped in;
+/// phase 2 serves the requantized grid.  Accuracy is reported per phase.
+fn cmd_requantize(artifacts: &str, args: &Args) -> Result<()> {
+    reject_unused(
+        args,
+        "requantize",
+        &["images", "concurrency", "backend-b", "ab-bp", "swap-after"],
+        &["prom"],
+    )?;
+    let arch = args.get("arch", "synthetic");
+    let kind = parse_backend(args)?;
+    anyhow::ensure!(
+        kind.mode().is_some(),
+        "--backend {} has no quantized grid to requantize (pick lw / dch / lw-i8)",
+        kind.key()
+    );
+    let requests = args.usize("requests", 512)?;
+    let shadow_every = args.usize("shadow-every", 4)? as u32;
+    anyhow::ensure!(shadow_every > 0, "--shadow-every 0 captures nothing");
+    let cfg = serve_cfg(args)?;
+
+    let fleet = Fleet::load_with(
+        Path::new(artifacts),
+        &[(arch.clone(), kind)],
+        FleetOptions { shadow_every },
+    )?;
+    let slot = fleet.slot(0).expect("fleet just loaded slot 0").clone();
+    let ranges = slot.calib().expect("shadow-every > 0 attaches a recorder");
+    let engine = Engine::start(fleet.clone(), &cfg);
+    let flush = args.kv.get("stats-json").cloned().map(spawn_stats_flush);
+    let client = engine.client();
+    let ds = qft::data::Dataset::new(0);
+    let mut correct = [0usize; 2];
+    for phase in 0..2 {
+        for i in 0..requests {
+            let (img, label) = ds.sample(qft::data::Split::Val, i as u64);
+            let rep = client.infer(0, img)?;
+            if rep.top1 == label {
+                correct[phase] += 1;
+            }
+        }
+        if phase == 0 {
+            let v2 = slot.install_requantized(
+                &ranges.absmax(),
+                format!("requantized from {} shadow batches", ranges.shadow_batches.get()),
+            )?;
+            slot.promote(v2)?;
+            eprintln!("requantize: promoted v{v2} (constants rebuilt from captured ranges)");
+        }
+    }
+    let report = engine.shutdown();
+    println!("requantize {arch}/{}: {report}", kind.key());
+    let pct = |c: usize| c as f32 / requests.max(1) as f32 * 100.0;
+    println!(
+        "top-1 over {requests} requests: phase 1 (offline init) {:.1}% | phase 2 (requantized) {:.1}%",
+        pct(correct[0]),
+        pct(correct[1])
+    );
+    print!("{}", ranges.table());
+    print!("{}", slot.status_table());
     obs_shutdown_dump(flush);
     Ok(())
 }
 
 fn cmd_bench_serve(artifacts: &str, args: &Args) -> Result<()> {
-    reject_unused(args, "bench-serve", &["images"], &["prom"])?;
+    reject_unused(
+        args,
+        "bench-serve",
+        &["images", "backend-b", "ab-bp", "shadow-every", "swap-after"],
+        &["prom"],
+    )?;
     let arch = args.get("arch", "synthetic");
     let kind = parse_backend(args)?;
     let concurrency = args.usize("concurrency", 16)?;
@@ -370,14 +512,14 @@ fn cmd_bench_serve(artifacts: &str, args: &Args) -> Result<()> {
     let cfg = serve_cfg(args)?;
     let per_client = requests.div_ceil(concurrency.max(1));
 
-    let registry = Registry::load(Path::new(artifacts), &[(arch.clone(), kind)])?;
+    let fleet = Fleet::load(Path::new(artifacts), &[(arch.clone(), kind)])?;
     // warm-up pass so first-touch buffer growth doesn't skew the measurement
-    let _ = run_closed_loop(&registry, &cfg, concurrency.max(1), 4, 0);
+    let _ = run_closed_loop(&fleet, &cfg, concurrency.max(1), 4, 0);
     // drop the warm-up's obs samples so the flushed stats cover the
     // measured run only
     qft::obs::reset();
     let flush = args.kv.get("stats-json").cloned().map(spawn_stats_flush);
-    let report = run_closed_loop(&registry, &cfg, concurrency.max(1), per_client, 0);
+    let report = run_closed_loop(&fleet, &cfg, concurrency.max(1), per_client, 0);
     println!(
         "bench-serve {arch}/{} workers={} max-batch={} concurrency={}:",
         kind.key(),
@@ -405,15 +547,14 @@ fn cmd_stats(args: &Args) -> Result<()> {
         &[
             "arch", "archs", "steps", "lr", "mode", "backend", "images", "ce-mix",
             "workers", "max-batch", "max-wait-us", "queue-cap", "requests",
-            "concurrency", "obs-sample",
+            "concurrency", "obs-sample", "backend-b", "ab-bp", "shadow-every",
+            "swap-after",
         ],
         &["cle", "frozen-scales", "fast", "no-adaptive", "no-obs"],
     )?;
     let path = args.get("stats-json", "OBS_stats.json");
     let text = std::fs::read_to_string(&path).map_err(|e| {
-        anyhow::anyhow!(
-            "cannot read {path:?} (run serve/bench-serve with --stats-json first): {e}"
-        )
+        anyhow::anyhow!("cannot read {path:?} (run serve/bench-serve with --stats-json): {e}")
     })?;
     let snap = qft::obs::Snapshot::from_json(&text)?;
     if args.flag("prom") {
@@ -425,7 +566,7 @@ fn cmd_stats(args: &Args) -> Result<()> {
 }
 
 /// Offline top-1 under any execution backend — the same weight resolution
-/// the serve registry uses and literally the same forward code the serving
+/// the serve fleet uses and literally the same forward code the serving
 /// workers run, so this is the number the server would produce.
 fn cmd_eval(artifacts: &str, args: &Args) -> Result<()> {
     reject_unused(
@@ -433,25 +574,26 @@ fn cmd_eval(artifacts: &str, args: &Args) -> Result<()> {
         "eval",
         &[
             "workers", "max-batch", "max-wait-us", "queue-cap", "concurrency",
-            "requests", "stats-json",
+            "requests", "stats-json", "backend-b", "ab-bp", "shadow-every",
+            "swap-after",
         ],
         &["no-adaptive", "prom"],
     )?;
     let arch = args.get("arch", "synthetic");
     let kind = parse_backend(args)?;
     let images = args.usize("images", 512)?;
-    let registry = Registry::load(Path::new(artifacts), &[(arch.clone(), kind)])?;
-    let entry = registry.get(0);
+    let fleet = Fleet::load(Path::new(artifacts), &[(arch.clone(), kind)])?;
+    let version = fleet.slot(0).expect("fleet just loaded slot 0").primary();
     let batch = 8;
     // whole batches only — report the count actually scored, not the ask
     let scored = eval::eval_image_count(batch, images);
     anyhow::ensure!(scored > 0, "--images {images} evaluates nothing");
     let t0 = std::time::Instant::now();
-    let acc = eval::eval_prepared(entry.model.as_ref(), batch, images, 0);
+    let acc = eval::eval_prepared(version.model.as_ref(), batch, images, 0);
     let dt = t0.elapsed();
     println!(
         "eval {}: top-1 {:.1}% over {scored} val images in {:.2}s ({:.0} img/s, pool {})",
-        entry.key,
+        version.key,
         acc * 100.0,
         dt.as_secs_f64(),
         scored as f64 / dt.as_secs_f64().max(1e-9),
@@ -465,14 +607,17 @@ fn run_pipeline_cmd(rt: &Runtime, cmd: &str, args: &Args) -> Result<()> {
     // serving-only options must not be silently ignored here: `repro qft
     // --backend dch` looking like it selected a grid (while only --mode is
     // read) would defeat the strict-flag contract Args::parse enforces
-    for key in ["backend", "images", "stats-json", "obs-sample"] {
+    for key in [
+        "backend", "images", "stats-json", "obs-sample", "backend-b", "ab-bp",
+        "shadow-every", "swap-after",
+    ] {
         if args.kv.contains_key(key) {
-            bail!("--{key} applies to the serve / bench-serve / eval / stats commands only");
+            bail!("--{key} applies to the serving / backend-eval commands only");
         }
     }
     for flag in ["prom", "no-obs"] {
         if args.flag(flag) {
-            bail!("--{flag} applies to the serve / bench-serve / eval / stats commands only");
+            bail!("--{flag} applies to the serving / backend-eval commands only");
         }
     }
     let fast = args.flag("fast");

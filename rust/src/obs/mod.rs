@@ -168,6 +168,14 @@ pub fn submitted() -> &'static Counter {
     &C
 }
 
+/// Fleet-wide total of route-word changes (promote / A/B split / rollback
+/// across every [`crate::fleet::Slot`]); per-slot counts live on the slots
+/// themselves.
+pub fn route_changes() -> &'static Counter {
+    static C: Counter = Counter::new();
+    &C
+}
+
 #[derive(Default)]
 struct Maps {
     stages: BTreeMap<String, Arc<StageMetrics>>,
@@ -204,6 +212,7 @@ pub fn net_obs(key: &str, layer_names: &[String]) -> Arc<NetObs> {
 pub fn reset() {
     queue_depth().set(0);
     submitted().clear();
+    route_changes().clear();
     let m = maps().lock().unwrap();
     for s in m.stages.values() {
         s.clear();
@@ -263,6 +272,7 @@ pub struct Snapshot {
     pub sample_every: u32,
     pub queue_depth: i64,
     pub submitted: u64,
+    pub route_changes: u64,
     pub stages: Vec<StageSnapshot>,
     pub nets: Vec<NetSnapshot>,
 }
@@ -318,6 +328,7 @@ pub fn snapshot() -> Snapshot {
         sample_every: sample_every(),
         queue_depth: queue_depth().get(),
         submitted: submitted().get(),
+        route_changes: route_changes().get(),
         stages,
         nets,
     }
@@ -360,6 +371,9 @@ impl Snapshot {
         let _ = writeln!(o, "# HELP qft_submitted_total requests admitted by the batcher");
         let _ = writeln!(o, "# TYPE qft_submitted_total counter");
         let _ = writeln!(o, "qft_submitted_total {}", self.submitted);
+        let _ = writeln!(o, "# HELP qft_route_changes_total fleet route changes (promote/ab)");
+        let _ = writeln!(o, "# TYPE qft_route_changes_total counter");
+        let _ = writeln!(o, "qft_route_changes_total {}", self.route_changes);
         if !self.stages.is_empty() {
             let _ = writeln!(o, "# HELP qft_requests_total requests executed per model");
             let _ = writeln!(o, "# TYPE qft_requests_total counter");
@@ -502,6 +516,7 @@ impl Snapshot {
                 obj([
                     ("queue_depth", Value::Num(self.queue_depth as f64)),
                     ("submitted", Value::Num(self.submitted as f64)),
+                    ("route_changes", Value::Num(self.route_changes as f64)),
                 ]),
             ),
             ("stages", Value::Arr(stages)),
@@ -567,6 +582,12 @@ impl Snapshot {
             sample_every: v.get("sample_every")?.num()? as u32,
             queue_depth: engine.get("queue_depth")?.num()? as i64,
             submitted: engine.get("submitted")?.num()? as u64,
+            // absent in pre-fleet flush files — read them as zero
+            route_changes: engine
+                .get("route_changes")
+                .and_then(|v| v.num())
+                .map(|n| n as u64)
+                .unwrap_or(0),
             stages,
             nets,
         })
@@ -579,7 +600,7 @@ impl Snapshot {
         let mut o = String::new();
         let _ = writeln!(
             o,
-            "obs: {}, layer sampling {} | queue depth {} | {} submitted",
+            "obs: {}, layer sampling {} | queue depth {} | {} submitted | {} route changes",
             if self.enabled { "enabled" } else { "disabled" },
             match self.sample_every {
                 0 => "off".to_string(),
@@ -587,6 +608,7 @@ impl Snapshot {
             },
             self.queue_depth,
             self.submitted,
+            self.route_changes,
         );
         if !self.stages.is_empty() {
             let _ = writeln!(o, "\n== request stages (µs) ==");

@@ -8,7 +8,7 @@
 //!   so work stealing buys nothing: every primitive here pre-partitions
 //!   work into contiguous chunks and hands one chunk to one task.
 //! * **one process-wide pool** — the serve [`crate::serve::Engine`] workers
-//!   and [`crate::coordinator::eval::eval_integer_rust`] all submit scopes
+//!   and [`crate::coordinator::eval::eval_backend`] all submit scopes
 //!   to the same [`global`] pool, so concurrent callers cooperate (their
 //!   tasks interleave on the same worker set) instead of oversubscribing
 //!   the machine with per-caller pools.

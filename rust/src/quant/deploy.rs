@@ -5,15 +5,14 @@
 //! * [`forward_fakequant`] — the FP32-represented simulation, a rust mirror
 //!   of the L2 `qft.student_forward` graph (used for parity tests against
 //!   the AOT `q_eval` executable and for the analysis figures).
-//! * [`forward_integer`] / [`forward_integer_batch`] — the deployed online
-//!   pipeline.  In `lw` mode it is fully integer: u8/i8 codes, integer
-//!   accumulation, quantized bias at accumulator scale (Eq. 8),
-//!   multiplicative recode by F̂ (Eq. 11), integer activation.  In `dch`
-//!   mode (W4A32) weights ship as 4b codes on the doubly-channelwise grid
-//!   and accumulation stays FP32, so the path is bit-identical to the
-//!   fake-quant twin.  The gap between lw-integer and fake-quant is the
-//!   bias/threshold rounding the paper folds under "additional lossy
-//!   elements".
+//! * [`DeployedModel`] — the deployed online pipeline.  In `lw` mode it is
+//!   fully integer: u8/i8 codes, integer accumulation, quantized bias at
+//!   accumulator scale (Eq. 8), multiplicative recode by F̂ (Eq. 11),
+//!   integer activation.  In `dch` mode (W4A32) weights ship as 4b codes on
+//!   the doubly-channelwise grid and accumulation stays FP32, so the path
+//!   is bit-identical to the fake-quant twin.  The gap between lw-integer
+//!   and fake-quant is the bias/threshold rounding the paper folds under
+//!   "additional lossy elements".
 //!
 //! The deployment split mirrors the paper's offline/online subgraphs:
 //! [`DeployedModel::prepare`] runs the *offline* subgraph once (kernel
@@ -836,41 +835,30 @@ impl DeployedModel {
     }
 }
 
-/// Deployed forward for a single image or small batch, preparing constants on
-/// the fly.  Pass `Some(scratch)` to reuse buffers across calls (the offline
-/// eval loops do); `None` allocates a throwaway scratch.  Delegates to the
-/// batched path, so results are bit-identical to [`forward_integer_batch`].
-pub fn forward_integer(
+/// Rebuild a deployable trainable map from *observed* activation ranges.
+///
+/// The offline PTQ init and the live requantize path are the same
+/// computation fed different statistics: both hand per-value, per-channel
+/// absmax to [`crate::coordinator::state::init_trainables`], which derives
+/// step sizes / preconditioning factors / bias codes from them.  Here the
+/// statistics come from a [`crate::backend::CalibRanges`] capture instead
+/// of offline calibration batches, closing the loop the paper assumes —
+/// deployment constants fit to the ranges production traffic actually
+/// exercises.  `params` may be a raw FP map or a previous trainable map:
+/// only the `w:`/`b:` tensors are read, and every trainable map carries
+/// them.
+pub fn requantize_trainables(
     arch: &ArchSpec,
-    tm: &ParamMap,
+    params: &ParamMap,
+    absmax: &HashMap<usize, Vec<f32>>,
     mode: Mode,
-    x: &Tensor,
-    scratch: Option<&mut DeployScratch>,
-) -> (Tensor, Tensor) {
-    let model = DeployedModel::prepare(arch, tm, mode);
-    match scratch {
-        Some(s) => model.forward_batch_feat(x, s),
-        None => model.forward_batch_feat(x, &mut DeployScratch::new()),
-    }
-}
-
-/// Batched deployed forward (logits only): prepares the frozen constants,
-/// then runs the whole batch through the shared online path.  Long-lived
-/// callers (the serving engine, eval loops) should instead hold a
-/// [`DeployedModel`] and call [`DeployedModel::forward_batch`] directly so
-/// preparation cost is paid once.
-pub fn forward_integer_batch(
-    arch: &ArchSpec,
-    tm: &ParamMap,
-    mode: Mode,
-    x: &Tensor,
-    scratch: Option<&mut DeployScratch>,
-) -> Tensor {
-    let model = DeployedModel::prepare(arch, tm, mode);
-    match scratch {
-        Some(s) => model.forward_batch(x, s),
-        None => model.forward_batch(x, &mut DeployScratch::new()),
-    }
+) -> ParamMap {
+    use crate::coordinator::state::{init_trainables, WeightScaleInit};
+    let winit = match mode {
+        Mode::Lw => WeightScaleInit::Uniform,
+        Mode::Dch => WeightScaleInit::DoublyChannelwise,
+    };
+    init_trainables(arch, params, absmax, mode, winit, None)
 }
 
 #[cfg(test)]
@@ -955,7 +943,8 @@ mod tests {
             None,
         );
         let (lf, _) = forward_fakequant(arch, &tm, Mode::Lw, &x);
-        let (li, _) = forward_integer(arch, &tm, Mode::Lw, &x, None);
+        let model = DeployedModel::prepare(arch, &tm, Mode::Lw);
+        let (li, _) = model.forward_batch_feat(&x, &mut DeployScratch::new());
         // identical argmax on most rows; bias quantization is the only gap
         let af = lf.argmax_lastdim();
         let ai = li.argmax_lastdim();
@@ -976,7 +965,8 @@ mod tests {
         let tm = state::init_trainables(arch, &params, &absmax, Mode::Dch,
                                         state::WeightScaleInit::DoublyChannelwise, None);
         let (lf, ff) = forward_fakequant(arch, &tm, Mode::Dch, &x);
-        let (li, fi) = forward_integer(arch, &tm, Mode::Dch, &x, None);
+        let model = DeployedModel::prepare(arch, &tm, Mode::Dch);
+        let (li, fi) = model.forward_batch_feat(&x, &mut DeployScratch::new());
         assert_eq!(lf.data, li.data);
         assert_eq!(ff.data, fi.data);
     }

@@ -27,19 +27,50 @@ use std::sync::mpsc::Sender;
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-/// One classification request: an image for a registry slot, plus the reply
+/// One classification request: an image for a fleet slot, plus the reply
 /// channel.  The [`crate::obs::Trace`] anchors the end-to-end latency
 /// measurement and the per-request queue-wait stage.
 pub struct InferRequest {
     pub id: u64,
-    /// Registry slot of the (arch × mode) deployment to run.
+    /// Fleet slot of the (arch × backend) deployment to run.
     pub model: usize,
     /// Flat NHWC image, `hw*hw*ch` of the target model.
     pub image: Vec<f32>,
     /// Lifecycle stamps, starting with the client-side enqueue instant.
     pub trace: crate::obs::Trace,
-    pub resp: Sender<InferReply>,
+    pub resp: Sender<InferResult>,
 }
+
+/// What comes back over a request's reply channel: the reply, or a typed
+/// rejection.  [`crate::serve::Client`] validates at admission, so its
+/// callers only ever see `Err` for requests that bypassed it (raw
+/// [`Batcher::submit`]) — a worker answers those instead of dropping them
+/// (and instead of panicking, which a bad slot id once caused).
+pub type InferResult = Result<InferReply, Reject>;
+
+/// Typed worker-side rejection of a malformed request.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Reject {
+    /// The request named a fleet slot that does not exist.
+    UnknownSlot { slot: usize, slots: usize },
+    /// The payload length does not match the slot's image contract.
+    PayloadSize { slot: usize, got: usize, want: usize },
+}
+
+impl std::fmt::Display for Reject {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Reject::UnknownSlot { slot, slots } => {
+                write!(f, "unknown model slot {slot} (fleet has {slots})")
+            }
+            Reject::PayloadSize { slot, got, want } => {
+                write!(f, "payload is {got} floats, slot {slot} expects {want}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for Reject {}
 
 /// Reply to one [`InferRequest`].
 #[derive(Clone, Debug)]
@@ -271,7 +302,7 @@ mod tests {
     use super::*;
     use std::sync::mpsc;
 
-    fn req(id: u64, model: usize) -> (InferRequest, mpsc::Receiver<InferReply>) {
+    fn req(id: u64, model: usize) -> (InferRequest, mpsc::Receiver<InferResult>) {
         let (tx, rx) = mpsc::channel();
         (
             InferRequest {

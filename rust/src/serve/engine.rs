@@ -6,8 +6,8 @@
 //! [`crate::backend::PreparedNet::forward_batch`] with zero hot-path
 //! allocation beyond the per-reply logits rows on the deployment grids
 //! (`lw` / `dch` / `lw-i8`; the `fp` / fake-quant reference grids allocate
-//! per call — see [`crate::backend::Scratch`]) — and because the registry
-//! stores trait objects, ONE engine serves fp, fake-quant, integer and
+//! per call — see [`crate::backend::Scratch`]) — and because fleet slots
+//! store trait objects, ONE engine serves fp, fake-quant, integer and
 //! `lw-i8` models side by side.  All workers submit their parallel
 //! conv/GEMM scopes to the ONE process-wide [`crate::par::global`] pool
 //! (sized by `--threads`), so a large micro-batch fans out across the
@@ -15,6 +15,15 @@
 //! instead of oversubscribing it — and because every backend's parallel
 //! path is bit-identical to its serial twin, replies do not depend on the
 //! pool width.
+//!
+//! Versioning: workers route each micro-batch through
+//! [`crate::fleet::Slot::select`] — one atomic load when a slot serves a
+//! single version — and clone the routed `Arc<Version>` *once per batch*,
+//! so a concurrent promote/rollback never touches a batch already in
+//! flight: it finishes on the version it started on, and the demoted
+//! version is retired when its in-flight references drain.  Replies are
+//! bit-identical across swaps to bit-identical versions at any worker
+//! count (the fleet suite pins this).
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
@@ -24,9 +33,9 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Result};
 
 use crate::backend::Scratch;
+use crate::fleet::Fleet;
 use crate::obs;
-use crate::serve::batcher::{BatchPolicy, Batcher, InferReply, InferRequest};
-use crate::serve::registry::Registry;
+use crate::serve::batcher::{BatchPolicy, Batcher, InferReply, InferRequest, InferResult, Reject};
 use crate::serve::stats::{ServeReport, ServeStats};
 use crate::tensor::Tensor;
 
@@ -56,9 +65,9 @@ impl Default for ServeConfig {
     }
 }
 
-/// Running worker pool over a shared [`Registry`].
+/// Running worker pool over a shared [`Fleet`].
 pub struct Engine {
-    registry: Arc<Registry>,
+    fleet: Arc<Fleet>,
     batcher: Arc<Batcher>,
     stats: Arc<ServeStats>,
     next_id: Arc<AtomicU64>,
@@ -67,8 +76,8 @@ pub struct Engine {
 
 impl Engine {
     /// Spawn the worker pool (at least one worker).
-    pub fn start(registry: Arc<Registry>, cfg: &ServeConfig) -> Engine {
-        assert!(!registry.is_empty(), "engine started with an empty registry");
+    pub fn start(fleet: Arc<Fleet>, cfg: &ServeConfig) -> Engine {
+        assert!(!fleet.is_empty(), "engine started with an empty fleet");
         let batcher = Arc::new(Batcher::new(BatchPolicy {
             max_batch: cfg.max_batch.max(1),
             max_wait: cfg.max_wait,
@@ -78,14 +87,14 @@ impl Engine {
         let adaptive = cfg.adaptive;
         let workers = (0..cfg.workers.max(1))
             .map(|_| {
-                let reg = registry.clone();
+                let fl = fleet.clone();
                 let bat = batcher.clone();
                 let st = stats.clone();
-                std::thread::spawn(move || worker_loop(&reg, &bat, &st, adaptive))
+                std::thread::spawn(move || worker_loop(&fl, &bat, &st, adaptive))
             })
             .collect();
         Engine {
-            registry,
+            fleet,
             batcher,
             stats,
             next_id: Arc::new(AtomicU64::new(0)),
@@ -96,15 +105,17 @@ impl Engine {
     /// A cheap, cloneable submission handle (one per client thread).
     pub fn client(&self) -> Client {
         Client {
-            registry: self.registry.clone(),
+            fleet: self.fleet.clone(),
             batcher: self.batcher.clone(),
             stats: self.stats.clone(),
             next_id: self.next_id.clone(),
         }
     }
 
-    pub fn registry(&self) -> &Registry {
-        &self.registry
+    /// The fleet this engine serves — lifecycle verbs (install / promote /
+    /// A/B / rollback) go through it while the engine is live.
+    pub fn fleet(&self) -> &Arc<Fleet> {
+        &self.fleet
     }
 
     /// Live stats snapshot.
@@ -125,7 +136,7 @@ impl Engine {
 /// Submission handle: closed-loop `infer` plus the raw async pieces.
 #[derive(Clone)]
 pub struct Client {
-    registry: Arc<Registry>,
+    fleet: Arc<Fleet>,
     batcher: Arc<Batcher>,
     stats: Arc<ServeStats>,
     next_id: Arc<AtomicU64>,
@@ -139,25 +150,24 @@ impl Client {
 
     /// Submit one image; error if the engine is shut down or the reply does
     /// not arrive within `timeout`.  Slot and payload size are validated
-    /// here, at admission — a malformed request must never reach a worker.
+    /// here, at admission — a malformed request should never reach a worker
+    /// (workers answer anything that slips past with a typed
+    /// [`Reject`], which surfaces here as an error too).
     pub fn infer_timeout(
         &self,
         model: usize,
         image: Vec<f32>,
         timeout: Duration,
     ) -> Result<InferReply> {
-        if model >= self.registry.len() {
-            return Err(anyhow!(
-                "unknown model slot {model} (registry has {})",
-                self.registry.len()
-            ));
-        }
-        let want = self.registry.get(model).model.image_len();
+        let Some(slot) = self.fleet.slot(model) else {
+            return Err(anyhow!("unknown model slot {model} (fleet has {})", self.fleet.len()));
+        };
+        let want = slot.image_len();
         if image.len() != want {
             return Err(anyhow!(
                 "payload is {} floats, model {} expects {want}",
                 image.len(),
-                self.registry.get(model).key
+                slot.key
             ));
         }
         let (tx, rx) = mpsc::channel();
@@ -173,22 +183,44 @@ impl Client {
             .submit(req)
             .map_err(|_| anyhow!("serve engine is shut down"))?;
         self.stats.record_enqueue(depth);
-        rx.recv_timeout(timeout)
-            .map_err(|e| anyhow!("no reply within {timeout:?}: {e}"))
+        Ok(rx
+            .recv_timeout(timeout)
+            .map_err(|e| anyhow!("no reply within {timeout:?}: {e}"))??)
+    }
+
+    /// Raw submission with NO admission validation — what a non-`Client`
+    /// producer (or a buggy one) amounts to.  Workers answer malformed
+    /// requests with a typed [`Reject`] on the returned channel instead of
+    /// dropping them or dying; the fleet suite pins that contract here.
+    pub fn submit_raw(&self, model: usize, image: Vec<f32>) -> Result<mpsc::Receiver<InferResult>> {
+        let (tx, rx) = mpsc::channel();
+        let req = InferRequest {
+            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            model,
+            image,
+            trace: obs::Trace::start(),
+            resp: tx,
+        };
+        let depth = self
+            .batcher
+            .submit(req)
+            .map_err(|_| anyhow!("serve engine is shut down"))?;
+        self.stats.record_enqueue(depth);
+        Ok(rx)
     }
 }
 
-/// Worker body: assemble → stack → batched backend forward → reply.
+/// Worker body: assemble → route → stack → batched backend forward → reply.
 /// Returns the number of batches it executed (join-side diagnostic).
 ///
 /// Stage stamps: `formed` (batch in hand) → `fwd_start` (tensor staged) →
 /// `fwd_end` (logits ready; this is the completion stamp end-to-end
 /// latency uses, taken *before* any reply is sent) → `replied` (last reply
 /// handed to its channel).  [`obs::StageMetrics::record_span`] splits them
-/// into per-model queue-wait / batch-form / compute / reply histograms,
+/// into per-version queue-wait / batch-form / compute / reply histograms,
 /// and [`ServeStats::record_batch`] records completion and reply-inclusive
 /// end-to-end latency side by side.
-fn worker_loop(reg: &Registry, batcher: &Batcher, stats: &ServeStats, adaptive: bool) -> u64 {
+fn worker_loop(fleet: &Fleet, batcher: &Batcher, stats: &ServeStats, adaptive: bool) -> u64 {
     let pool = crate::par::global();
     let mut scratch = Scratch::new();
     let mut staging: Vec<f32> = Vec::new();
@@ -207,21 +239,40 @@ fn worker_loop(reg: &Registry, batcher: &Batcher, stats: &ServeStats, adaptive: 
         };
         let Some(mut batch) = next else { break };
         let formed = Instant::now();
-        // invalid slot (possible only via a raw Batcher submit): drop the
-        // batch — the closed senders surface as client-side errors
-        let Some(entry) = batch.first().and_then(|r| reg.try_get(r.model)) else {
+        // invalid slot (possible only via a raw Batcher submit): answer the
+        // whole batch with a typed rejection instead of dropping it — and
+        // never abort the worker
+        let slot_id = batch.first().map(|r| r.model).unwrap_or(0);
+        let Some(slot) = fleet.slot(slot_id) else {
+            let reject = Reject::UnknownSlot { slot: slot_id, slots: fleet.len() };
+            for req in batch {
+                let _ = req.resp.send(Err(reject.clone()));
+            }
             continue;
         };
-        let model = &entry.model;
-        let px = model.image_len();
-        // Client::infer validates payloads at admission; anything that
-        // reached us through a raw Batcher submit gets dropped (its sender
-        // drops, the client sees an error) instead of poisoning the batch.
-        batch.retain(|r| r.image.len() == px);
+        // payload checks come BEFORE routing: `select` charges the chosen
+        // arm's request counter, so only requests that will execute count
+        let px = slot.image_len();
+        batch.retain(|r| {
+            if r.image.len() == px {
+                return true;
+            }
+            let _ = r.resp.send(Err(Reject::PayloadSize {
+                slot: slot_id,
+                got: r.image.len(),
+                want: px,
+            }));
+            false
+        });
         if batch.is_empty() {
             continue;
         }
         let n = batch.len();
+        // route the whole micro-batch to one version and hold the Arc until
+        // every reply is out: a promote/rollback racing with us cannot
+        // retire this version until the clone drops
+        let version = slot.select(n);
+        let model = &version.model;
         staging.clear();
         for r in &batch {
             staging.extend_from_slice(&r.image);
@@ -244,22 +295,29 @@ fn worker_loop(reg: &Registry, batcher: &Batcher, stats: &ServeStats, adaptive: 
             let latency = done.saturating_duration_since(req.trace.enqueued);
             latencies.push(latency);
             enqueues.push(req.trace.enqueued);
-            // a disappeared client (dropped receiver) is not a worker error
-            let _ = req.resp.send(InferReply {
-                id: req.id,
-                top1: top1s[i],
-                logits: row,
-                latency,
-                batch_size: n,
-            });
+            // a disappeared client (dropped receiver) is not a worker error,
+            // but the version's error counter records it
+            if req
+                .resp
+                .send(Ok(InferReply {
+                    id: req.id,
+                    top1: top1s[i],
+                    logits: row,
+                    latency,
+                    batch_size: n,
+                }))
+                .is_err()
+            {
+                version.errors.add(1);
+            }
             // stamped after the send, so reply-channel time is measured
             // instead of invisible
-            reply_lats
-                .push(Instant::now().saturating_duration_since(enqueues[i]));
+            reply_lats.push(Instant::now().saturating_duration_since(enqueues[i]));
         }
         let replied = Instant::now();
         stats.record_batch(n, &latencies, &reply_lats);
-        entry.stage.record_span(
+        version.batches.add(1);
+        version.stage.record_span(
             &obs::BatchSpan { formed, fwd_start, fwd_end: done, replied },
             enqueues.iter().copied(),
         );
@@ -269,17 +327,17 @@ fn worker_loop(reg: &Registry, batcher: &Batcher, stats: &ServeStats, adaptive: 
 }
 
 /// Closed-loop load generator: `clients` threads each push
-/// `requests_per_client` back-to-back requests at registry slot `slot`,
-/// then the engine is drained and its report returned.  This is the
+/// `requests_per_client` back-to-back requests at fleet slot `slot`, then
+/// the engine is drained and its report returned.  This is the
 /// `repro bench-serve` / `cargo bench serve_throughput` core.
 pub fn run_closed_loop(
-    registry: &Arc<Registry>,
+    fleet: &Arc<Fleet>,
     cfg: &ServeConfig,
     clients: usize,
     requests_per_client: usize,
     slot: usize,
 ) -> ServeReport {
-    let engine = Engine::start(registry.clone(), cfg);
+    let engine = Engine::start(fleet.clone(), cfg);
     std::thread::scope(|s| {
         for c in 0..clients {
             let client = engine.client();

@@ -5,11 +5,13 @@
 //! constant from the trained DoF set; *online*, run the cheap frozen integer
 //! graph.  This module is the online half grown into a serving engine:
 //!
-//! * [`registry`] — [`Registry`]: `(arch × backend)` → frozen
-//!   [`crate::backend::PreparedNet`] trait objects, all constants derived
-//!   at load time (weights resolved from `repro qft` exports, the cached
-//!   FP teacher, or he-init smoke weights).  One engine serves any
-//!   [`crate::backend::BackendKind`] — `fp`, fake-quant, integer, `lw-i8`.
+//! * [`crate::fleet`] — [`Fleet`]: `(arch × backend)` → a versioned
+//!   [`crate::fleet::Slot`] of frozen [`crate::backend::PreparedNet`] trait
+//!   objects, all constants derived at load time (weights resolved from
+//!   `repro qft` exports, the cached FP teacher, or he-init smoke weights).
+//!   One engine serves any [`crate::backend::BackendKind`] — `fp`,
+//!   fake-quant, integer, `lw-i8` — and can install / promote / A/B /
+//!   rollback versions while serving.
 //! * [`batcher`] — [`Batcher`]: bounded request queue with dynamic
 //!   micro-batch assembly under a max-batch / max-wait policy and
 //!   blocking backpressure.  The policy is *pool-aware*
@@ -33,12 +35,11 @@
 
 pub mod batcher;
 pub mod engine;
-pub mod registry;
 pub mod stats;
 
-pub use batcher::{BatchPolicy, Batcher, InferReply, InferRequest};
+pub use crate::fleet::{Fleet, FleetOptions, Slot, Version};
+pub use batcher::{BatchPolicy, Batcher, InferReply, InferRequest, InferResult, Reject};
 pub use engine::{run_closed_loop, Client, Engine, ServeConfig};
-pub use registry::{load_model, ModelEntry, Registry};
 pub use stats::{Pow2Histogram, ServeReport, ServeStats};
 
 use crate::nn::arch::{ArchSpec, OpSpec, ParamSpec};
@@ -46,8 +47,8 @@ use crate::quant::deploy::DeployedModel;
 
 /// A small self-contained conv / residual / depthwise arch over the same IR
 /// as the manifest archs.  It lets the whole serving stack (and its tests
-/// and benches) run without AOT artifacts: `Registry` falls back to it when
-/// no manifest is present, and tests build trainables for it with the
+/// and benches) run without AOT artifacts: [`Fleet::load`] falls back to it
+/// when no manifest is present, and tests build trainables for it with the
 /// regular [`crate::coordinator::state`] machinery.
 pub fn synthetic_arch() -> ArchSpec {
     use std::collections::HashMap;

@@ -14,8 +14,8 @@ use qft::coordinator::state;
 use qft::data::{Dataset, Split};
 use qft::nn::fp_forward;
 use qft::par::Pool;
-use qft::quant::deploy::{forward_fakequant, forward_integer, forward_integer_batch, Mode};
-use qft::serve::{synthetic_arch, synthetic_trainables, Engine, Registry, ServeConfig};
+use qft::quant::deploy::{forward_fakequant, DeployScratch, DeployedModel, Mode};
+use qft::serve::{synthetic_arch, synthetic_trainables, Engine, Fleet, ServeConfig};
 use qft::Tensor;
 
 const THREADS: &[usize] = &[1, 2, 8];
@@ -68,9 +68,10 @@ fn int_backend_is_bit_identical_to_pre_refactor_integer_path() {
     for mode in [Mode::Lw, Mode::Dch] {
         let (arch, tm) = synthetic_trainables(mode, 42);
         let x = val_batch(6, 1);
-        // the pre-refactor twin the serving/eval paths used to call
-        let want = forward_integer_batch(&arch, &tm, mode, &x, None);
-        let (wl_feat, wf) = forward_integer(&arch, &tm, mode, &x, None);
+        // the pre-refactor twin the serving/eval paths used to drive directly
+        let deployed = DeployedModel::prepare(&arch, &tm, mode);
+        let want = deployed.forward_batch(&x, &mut DeployScratch::new());
+        let (wl_feat, wf) = deployed.forward_batch_feat(&x, &mut DeployScratch::new());
         assert_eq!(bits(&want), bits(&wl_feat));
         let net = backend::prepare(BackendKind::Int(mode), &arch, &tm);
         for &t in THREADS {
@@ -226,20 +227,21 @@ fn zero_code_activations_mask_nonfinite_weights_in_both_integer_engines() {
 
 #[test]
 fn engine_serves_lw_i8_end_to_end() {
-    // the acceptance path behind `repro serve --backend lw-i8`: registry →
+    // the acceptance path behind `repro serve --backend lw-i8`: fleet →
     // engine → replies, and replies equal the offline i8 forward
-    let registry = Registry::load(
+    let fleet = Fleet::load(
         Path::new("artifacts_nonexistent_for_test"),
         &[("synthetic".to_string(), BackendKind::Int8)],
     )
     .unwrap();
-    assert_eq!(registry.resolve("synthetic/lw-i8"), Some(0));
+    assert_eq!(fleet.resolve("synthetic/lw-i8"), Some(0));
     let offline = {
         let x = val_batch(8, 0);
-        registry.get(0).model.forward_batch(&x, &mut Scratch::new(), qft::par::global())
+        let v1 = fleet.slot(0).unwrap().primary();
+        v1.model.forward_batch(&x, &mut Scratch::new(), qft::par::global())
     };
     let engine = Engine::start(
-        registry,
+        fleet,
         &ServeConfig {
             workers: 2,
             max_batch: 4,

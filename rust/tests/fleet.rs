@@ -1,0 +1,309 @@
+//! Fleet lifecycle integration tests: atomic hot-swap under load, A/B
+//! routing convergence through the engine, the shadow-calibration →
+//! requantize → promote loop end-to-end, and typed worker-side rejections.
+//!
+//! Hermetic — everything runs on the built-in synthetic arch with he-init
+//! weights, no AOT artifacts.  Swap losslessness is a *property* test:
+//! promote / rollback / re-weight at randomized instants while clients
+//! hammer the engine, and every request must still get exactly one reply
+//! with the exact bits the frozen grid produces.
+
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use qft::backend::{self, BackendKind, Scratch};
+use qft::data::{Dataset, Split};
+use qft::fleet::{Fleet, FleetOptions, Slot};
+use qft::quant::deploy::Mode;
+use qft::serve::{run_closed_loop, Engine, Reject, ServeConfig};
+use qft::Tensor;
+
+fn load_lw() -> Arc<Fleet> {
+    Fleet::load(
+        Path::new("artifacts_nonexistent_for_test"),
+        &[("synthetic".to_string(), BackendKind::Int(Mode::Lw))],
+    )
+    .unwrap()
+}
+
+/// Install a bit-identical twin of the slot's v1 (same kind, same params,
+/// fresh prepare) and return its version id.
+fn install_twin(slot: &Slot) -> u32 {
+    let v1 = slot.primary();
+    let model = backend::prepare(v1.kind, &slot.arch, &v1.params);
+    slot.install(v1.kind, model, v1.params.clone(), "twin".into()).unwrap()
+}
+
+fn xorshift(s: &mut u64) -> u64 {
+    *s ^= *s << 13;
+    *s ^= *s >> 7;
+    *s ^= *s << 17;
+    *s
+}
+
+#[test]
+fn hot_swap_neither_drops_nor_duplicates_under_randomized_churn() {
+    // an admin thread promotes / rolls back / re-weights at random while 8
+    // clients push through a tiny queue: every request gets exactly one
+    // reply, and every served request lands on exactly one version counter
+    let fleet = load_lw();
+    let slot = fleet.slot(0).unwrap().clone();
+    let v2 = install_twin(&slot);
+    let cfg = ServeConfig {
+        workers: 4,
+        max_batch: 4,
+        max_wait: Duration::from_micros(100),
+        queue_cap: 8,
+        ..Default::default()
+    };
+    let engine = Engine::start(fleet.clone(), &cfg);
+    let clients = 8u64;
+    let per_client = 40u64;
+    let done = AtomicBool::new(false);
+    let seen: Mutex<Vec<u64>> = Mutex::new(Vec::new());
+
+    std::thread::scope(|s| {
+        let slot_ref = &slot;
+        let done_ref = &done;
+        let admin = s.spawn(move || {
+            let mut rng = 0x9E37_79B9_7F4A_7C15u64;
+            let mut churns = 0u64;
+            while !done_ref.load(Ordering::Relaxed) {
+                match xorshift(&mut rng) % 4 {
+                    0 => slot_ref.promote(v2).unwrap(),
+                    1 => slot_ref.promote(1).unwrap(),
+                    2 => slot_ref.rollback(),
+                    _ => {
+                        let w = (xorshift(&mut rng) % 10_001) as u32;
+                        slot_ref.set_ab(1, v2, w).unwrap();
+                    }
+                }
+                churns += 1;
+                std::thread::sleep(Duration::from_micros(50));
+            }
+            churns
+        });
+        let handles: Vec<_> = (0..clients)
+            .map(|c| {
+                let client = engine.client();
+                let seen = &seen;
+                s.spawn(move || {
+                    let ds = Dataset::new(c);
+                    for i in 0..per_client {
+                        let (img, _) = ds.sample(Split::Val, i);
+                        let rep = client
+                            .infer_timeout(0, img, Duration::from_secs(60))
+                            .expect("request dropped during churn");
+                        assert!(rep.top1 < qft::data::NUM_CLASSES);
+                        seen.lock().unwrap().push(rep.id);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        done.store(true, Ordering::Relaxed);
+        let churns = admin.join().unwrap();
+        assert!(churns > 0, "the admin thread must actually interleave route changes");
+    });
+
+    let report = engine.shutdown();
+    let want = (clients * per_client) as usize;
+    let mut ids = seen.into_inner().unwrap();
+    assert_eq!(ids.len(), want, "missing replies");
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), want, "duplicated replies");
+    assert_eq!(report.requests as usize, want);
+    // every request was charged to exactly one arm
+    let ra = slot.version(1).unwrap().requests.get();
+    let rb = slot.version(v2).unwrap().requests.get();
+    assert_eq!((ra + rb) as usize, want, "arm counters must partition the traffic");
+    // workers joined: nothing can still hold an in-flight reference
+    assert_eq!(slot.in_flight(1), 0);
+    assert_eq!(slot.in_flight(v2), 0);
+    assert!(slot.route_changes.get() > 0);
+}
+
+#[test]
+fn mid_stream_hot_swap_to_identical_twin_changes_no_reply_bits() {
+    // swapping between bit-identical versions mid-stream must be invisible
+    // in the replies, at 1 / 2 / 8 workers
+    let fleet = load_lw();
+    let slot = fleet.slot(0).unwrap().clone();
+    let v2 = install_twin(&slot);
+    let clients = 4u64;
+    let per_client = 24u64;
+    let hw = slot.arch.input_hw;
+    let ch = slot.arch.input_ch;
+
+    // offline per-image expectation from v1 (== v2: same params, same grid)
+    let ds = Dataset::new(11);
+    let v1 = slot.primary();
+    let expected: Vec<Vec<u32>> = (0..clients * per_client)
+        .map(|key| {
+            let (img, _) = ds.sample(Split::Val, key);
+            let x = Tensor::new(vec![1, hw, hw, ch], img);
+            let logits = v1.model.forward_batch(&x, &mut Scratch::new(), qft::par::global());
+            logits.data.iter().map(|v| v.to_bits()).collect()
+        })
+        .collect();
+    drop(v1);
+
+    for workers in [1usize, 2, 8] {
+        slot.promote(1).unwrap();
+        let cfg = ServeConfig {
+            workers,
+            max_batch: 4,
+            max_wait: Duration::from_micros(100),
+            ..Default::default()
+        };
+        let engine = Engine::start(fleet.clone(), &cfg);
+        let done = AtomicBool::new(false);
+        std::thread::scope(|s| {
+            let slot_ref = &slot;
+            let done_ref = &done;
+            let admin = s.spawn(move || {
+                let mut to_v2 = true;
+                while !done_ref.load(Ordering::Relaxed) {
+                    slot_ref.promote(if to_v2 { v2 } else { 1 }).unwrap();
+                    to_v2 = !to_v2;
+                    std::thread::sleep(Duration::from_micros(100));
+                }
+            });
+            let handles: Vec<_> = (0..clients)
+                .map(|c| {
+                    let client = engine.client();
+                    let expected = &expected;
+                    s.spawn(move || {
+                        let ds = Dataset::new(11);
+                        for i in 0..per_client {
+                            let key = c * per_client + i;
+                            let (img, _) = ds.sample(Split::Val, key);
+                            let rep = client
+                                .infer_timeout(0, img, Duration::from_secs(60))
+                                .expect("request dropped");
+                            let got: Vec<u32> = rep.logits.iter().map(|v| v.to_bits()).collect();
+                            assert_eq!(
+                                expected[key as usize],
+                                got,
+                                "request {key} bits changed under swap ({workers} workers)"
+                            );
+                        }
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().unwrap();
+            }
+            done.store(true, Ordering::Relaxed);
+            admin.join().unwrap();
+        });
+        engine.shutdown();
+    }
+}
+
+#[test]
+fn ab_arm_counts_converge_to_the_configured_weight() {
+    let fleet = load_lw();
+    let slot = fleet.slot(0).unwrap().clone();
+    let v2 = install_twin(&slot);
+    slot.set_ab(1, v2, 2_500).unwrap();
+    let cfg = ServeConfig {
+        workers: 3,
+        max_batch: 4,
+        max_wait: Duration::from_micros(100),
+        ..Default::default()
+    };
+    let report = run_closed_loop(&fleet, &cfg, 4, 64, 0);
+    assert_eq!(report.requests, 256);
+    let ra = slot.version(1).unwrap().requests.get();
+    let rb = slot.version(v2).unwrap().requests.get();
+    assert_eq!(ra + rb, 256);
+    // deficit routing bounds the deviation structurally, not as a
+    // statistical tail: 25% of 256 = 64, give or take one stale-counter
+    // micro-batch per concurrent worker (3 workers × max_batch 4)
+    assert!((52..=76).contains(&rb), "secondary arm got {rb}/256 requests, want ~64 (25%)");
+}
+
+#[test]
+fn shadow_capture_requantizes_and_hot_swaps_through_a_live_engine() {
+    // the `repro requantize` loop, end-to-end: serve shadowed traffic,
+    // rebuild deployment constants from the captured ranges, install the
+    // result and promote it — all without stopping the engine
+    let fleet = Fleet::load_with(
+        Path::new("artifacts_nonexistent_for_test"),
+        &[("synthetic".to_string(), BackendKind::Int(Mode::Lw))],
+        FleetOptions { shadow_every: 1 },
+    )
+    .unwrap();
+    let slot = fleet.slot(0).unwrap().clone();
+    let engine = Engine::start(fleet.clone(), &ServeConfig::default());
+    let client = engine.client();
+    let ds = Dataset::new(5);
+    for i in 0..16u64 {
+        let (img, _) = ds.sample(Split::Val, i);
+        client.infer(0, img).unwrap();
+    }
+    let ranges = slot.calib().expect("shadow_every attaches a recorder");
+    assert!(!ranges.is_empty(), "shadow forwards must have captured ranges");
+    let absmax = ranges.absmax();
+    for v in &slot.arch.quantized_values {
+        assert!(absmax.contains_key(v), "value {v} missing from capture");
+    }
+    let v2 = slot
+        .install_requantized(&absmax, "requantized from live shadow capture".into())
+        .unwrap();
+    slot.promote(v2).unwrap();
+    // the engine keeps serving, now on the requantized grid
+    for i in 16..32u64 {
+        let (img, _) = ds.sample(Split::Val, i);
+        let rep = client.infer(0, img).unwrap();
+        assert!(rep.logits.iter().all(|v| v.is_finite()));
+        assert!(rep.top1 < qft::data::NUM_CLASSES);
+    }
+    let report = engine.shutdown();
+    assert_eq!(report.requests, 32);
+    assert_eq!(slot.primary().id, v2);
+    let v2_batches = slot.version(v2).unwrap().batches.get();
+    assert!(v2_batches > 0, "phase 2 must have executed on the requantized version");
+    assert!(slot.status_table().contains("requantized"), "{}", slot.status_table());
+}
+
+#[test]
+fn raw_submits_get_typed_rejections_and_workers_survive() {
+    let fleet = load_lw();
+    let want_len = fleet.slot(0).unwrap().image_len();
+    let engine = Engine::start(fleet, &ServeConfig { workers: 2, ..Default::default() });
+    let client = engine.client();
+
+    // unknown slot: the worker answers instead of panicking or dropping
+    let rx = client.submit_raw(7, vec![0.0; want_len]).unwrap();
+    match rx.recv_timeout(Duration::from_secs(30)).unwrap() {
+        Err(Reject::UnknownSlot { slot: 7, slots: 1 }) => {}
+        other => panic!("want UnknownSlot, got {other:?}"),
+    }
+
+    // short payload: per-request typed rejection
+    let rx = client.submit_raw(0, vec![0.0; 3]).unwrap();
+    match rx.recv_timeout(Duration::from_secs(30)).unwrap() {
+        Err(Reject::PayloadSize { slot: 0, got: 3, want }) => assert_eq!(want, want_len),
+        other => panic!("want PayloadSize, got {other:?}"),
+    }
+
+    // the checked path rejects the same garbage at admission
+    assert!(client.infer(7, vec![0.0; want_len]).is_err());
+    assert!(client.infer(0, vec![0.0; 3]).is_err());
+
+    // and the workers are still alive and serving
+    let ds = Dataset::new(0);
+    let (img, _) = ds.sample(Split::Val, 0);
+    let rep = client.infer(0, img).unwrap();
+    assert!(rep.top1 < qft::data::NUM_CLASSES);
+    let report = engine.shutdown();
+    // only the served request counts; rejects never reach a version arm
+    assert_eq!(report.requests, 1);
+}

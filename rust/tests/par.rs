@@ -108,7 +108,7 @@ fn pooled_forward_feat_is_bit_identical() {
 }
 
 #[test]
-fn eval_integer_rust_is_thread_count_independent() {
+fn integer_eval_backend_is_thread_count_independent() {
     // the pooled eval path (process-wide pool, whatever width this machine
     // gives it) must agree with a hand-rolled serial accuracy loop
     let (arch, tm) = synthetic_trainables(Mode::Lw, 0);
@@ -124,7 +124,13 @@ fn eval_integer_rust_is_thread_count_independent() {
         correct += preds.iter().zip(&labels).filter(|(p, l)| p == l).count();
     }
     let want = correct as f32 / n_images as f32;
-    let got = qft::coordinator::eval::eval_integer_rust(&arch, &tm, Mode::Lw, n_images, 0);
+    let got = qft::coordinator::eval::eval_backend(
+        &arch,
+        &tm,
+        qft::backend::BackendKind::Int(Mode::Lw),
+        n_images,
+        0,
+    );
     assert_eq!(want, got);
 }
 

@@ -12,10 +12,8 @@ use std::time::Duration;
 use qft::backend::BackendKind;
 use qft::data::{Dataset, Split};
 use qft::nn::{ArchSpec, ParamMap};
-use qft::quant::deploy::{
-    forward_integer, forward_integer_batch, DeployScratch, DeployedModel, Mode,
-};
-use qft::serve::{synthetic_trainables, Engine, Registry, ServeConfig};
+use qft::quant::deploy::{DeployScratch, DeployedModel, Mode};
+use qft::serve::{synthetic_trainables, Engine, Fleet, ServeConfig};
 use qft::Tensor;
 
 fn trainables(mode: Mode, seed: u64) -> (ArchSpec, ParamMap) {
@@ -26,6 +24,7 @@ fn trainables(mode: Mode, seed: u64) -> (ArchSpec, ParamMap) {
 fn batched_integer_forward_matches_singles_bit_exactly() {
     for mode in [Mode::Lw, Mode::Dch] {
         let (arch, tm) = trainables(mode, 42);
+        let model = DeployedModel::prepare(&arch, &tm, mode);
         let ds = Dataset::new(1);
         let n = 6;
         let (xb, _, _) = ds.batch(Split::Val, 0, n);
@@ -33,7 +32,7 @@ fn batched_integer_forward_matches_singles_bit_exactly() {
         let nc = arch.num_classes;
 
         let mut scratch = DeployScratch::new();
-        let lb = forward_integer_batch(&arch, &tm, mode, &xb, Some(&mut scratch));
+        let lb = model.forward_batch(&xb, &mut scratch);
         assert_eq!(lb.shape, vec![n, nc]);
 
         for i in 0..n {
@@ -41,7 +40,7 @@ fn batched_integer_forward_matches_singles_bit_exactly() {
                 vec![1, arch.input_hw, arch.input_hw, arch.input_ch],
                 xb.data[i * px..(i + 1) * px].to_vec(),
             );
-            let (li, _) = forward_integer(&arch, &tm, mode, &xi, None);
+            let li = model.forward_batch(&xi, &mut DeployScratch::new());
             assert_eq!(
                 &lb.data[i * nc..(i + 1) * nc],
                 &li.data[..],
@@ -77,7 +76,8 @@ fn dch_integer_deployment_is_bit_exact_with_fakequant_twin() {
     let ds = Dataset::new(3);
     let (x, _, _) = ds.batch(Split::Val, 0, 4);
     let (lf, ff) = qft::quant::deploy::forward_fakequant(&arch, &tm, Mode::Dch, &x);
-    let (li, fi) = forward_integer(&arch, &tm, Mode::Dch, &x, None);
+    let model = DeployedModel::prepare(&arch, &tm, Mode::Dch);
+    let (li, fi) = model.forward_batch_feat(&x, &mut DeployScratch::new());
     assert_eq!(lf.data, li.data);
     assert_eq!(ff.data, fi.data);
 }
@@ -86,7 +86,7 @@ fn dch_integer_deployment_is_bit_exact_with_fakequant_twin() {
 fn engine_neither_drops_nor_duplicates_under_contention() {
     // tiny queue + many clients: backpressure, batching and reply routing
     // all under stress; every request must get exactly one reply
-    let registry = Registry::load(
+    let fleet = Fleet::load(
         Path::new("artifacts_nonexistent_for_test"),
         &[("synthetic".to_string(), BackendKind::Int(Mode::Lw))],
     )
@@ -98,7 +98,7 @@ fn engine_neither_drops_nor_duplicates_under_contention() {
         queue_cap: 8,
         ..Default::default()
     };
-    let engine = Engine::start(registry, &cfg);
+    let engine = Engine::start(fleet, &cfg);
     let clients = 8u64;
     let per_client = 40u64;
     let seen: Mutex<Vec<u64>> = Mutex::new(Vec::new());
@@ -137,7 +137,7 @@ fn engine_neither_drops_nor_duplicates_under_contention() {
 #[test]
 fn serving_replies_match_offline_batched_forward() {
     // the engine must return exactly what the offline deployment path returns
-    let registry = Registry::load(
+    let fleet = Fleet::load(
         Path::new("artifacts_nonexistent_for_test"),
         &[("synthetic".to_string(), BackendKind::Int(Mode::Lw))],
     )
@@ -146,9 +146,10 @@ fn serving_replies_match_offline_batched_forward() {
         let ds = Dataset::new(0);
         let (x, _, _) = ds.batch(Split::Val, 0, 8);
         let mut scratch = qft::backend::Scratch::new();
-        registry.get(0).model.forward_batch(&x, &mut scratch, qft::par::global())
+        let v1 = fleet.slot(0).unwrap().primary();
+        v1.model.forward_batch(&x, &mut scratch, qft::par::global())
     };
-    let engine = Engine::start(registry, &ServeConfig::default());
+    let engine = Engine::start(fleet, &ServeConfig::default());
     let client = engine.client();
     let ds = Dataset::new(0);
     for i in 0..8usize {
@@ -170,7 +171,7 @@ fn adaptive_batching_does_not_change_replies() {
     // logits must be identical with it on or off.  Concurrent clients make
     // the batcher actually assemble multi-request batches (a sequential
     // closed loop would pin every batch at size 1 and test nothing).
-    let registry = Registry::load(
+    let fleet = Fleet::load(
         Path::new("artifacts_nonexistent_for_test"),
         &[("synthetic".to_string(), BackendKind::Int(Mode::Lw))],
     )
@@ -180,7 +181,7 @@ fn adaptive_batching_does_not_change_replies() {
     let mut want: Vec<(u64, Vec<f32>)> = Vec::new();
     for adaptive in [true, false] {
         let cfg = ServeConfig { workers: 3, max_batch: 4, adaptive, ..Default::default() };
-        let engine = Engine::start(registry.clone(), &cfg);
+        let engine = Engine::start(fleet.clone(), &cfg);
         let seen: Mutex<Vec<(u64, Vec<f32>)>> = Mutex::new(Vec::new());
         std::thread::scope(|s| {
             for c in 0..clients {
@@ -209,8 +210,8 @@ fn adaptive_batching_does_not_change_replies() {
 }
 
 #[test]
-fn eval_integer_rust_runs_on_synthetic_arch() {
+fn integer_eval_backend_runs_on_synthetic_arch() {
     let (arch, tm) = trainables(Mode::Lw, 0);
-    let acc = qft::coordinator::eval::eval_integer_rust(&arch, &tm, Mode::Lw, 64, 0);
+    let acc = qft::coordinator::eval::eval_backend(&arch, &tm, BackendKind::Int(Mode::Lw), 64, 0);
     assert!((0.0..=1.0).contains(&acc));
 }
