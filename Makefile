@@ -38,8 +38,10 @@ par-bench:
 	cargo bench --bench par_kernels
 
 # GEMM micro-kernel bench: scalar reference vs panel-packed register-blocked
-# f32 kernel vs the i8 x i8 -> i32 integer kernel, GFLOP/s over ResNet- and
-# edge-shaped GEMMs (emits BENCH_gemm.json).
+# f32 kernel vs the runtime-dispatched integer kernels (i8 byte panels and
+# W4 nibble panels), GFLOP/s over ResNet- and edge-shaped GEMMs (emits
+# BENCH_gemm.json, including the dispatched kernel path).  Prefix with
+# QFT_KERNEL=scalar|avx2|vnni|neon to force a dispatch path.
 bench-gemm:
 	cargo bench --bench gemm_kernels
 
@@ -67,13 +69,20 @@ bench-smoke:
 
 # Perf-regression gate: rerun the gemm + serve benches in their pinned
 # configuration, then compare the gated metrics (kernel speedup geomeans,
-# lw-i8 serving p50s) against the committed BENCH_baseline.json.  Fails on
-# a >15% regression (baseline `tolerance`, QFT_BENCH_GATE_TOL override);
-# emits a markdown delta table (and the CI job summary).
+# the i8/W4 ratio floors, lw-i8 serving p50s) against the committed
+# BENCH_baseline.json.  Per-metric tolerance: QFT_BENCH_GATE_TOL override
+# > the baseline entry's own `tol` (the ratio floors pin 0%) > the global
+# `tolerance` (15%).  SIMD-only floors are skipped when the gemm bench
+# reports scalar dispatch.  Emits a markdown delta table (and the CI job
+# summary).
 bench-gate: bench-gemm bench-serve
 	cargo bench --bench bench_gate
 
-# Re-baseline the perf gate from a fresh local run on THIS machine
-# (review + commit the regenerated BENCH_baseline.json).
+# Re-baseline the perf gate from a fresh local run on THIS machine: reruns
+# the pinned benches, rewrites BENCH_baseline.json (preserving the global
+# tolerance, the comment, and any per-metric `tol` pins), and prints a
+# delta table vs the previous baseline.  Review + commit the result; run
+# on a SIMD-capable host or the integer-ratio floors will reflect scalar
+# kernels.
 bench-baseline: bench-gemm bench-serve
 	QFT_BENCH_WRITE_BASELINE=1 cargo bench --bench bench_gate

@@ -3,17 +3,26 @@
 //!
 //! Reads the freshly emitted `BENCH_gemm.json` + `BENCH_serve.json`,
 //! extracts the gated metrics (kernel speedup geomeans over the `resnet`
-//! and `largek` shape sets, i8-vs-f32 geomean, and the `lw-i8` serving
-//! p50s), compares each against the committed `BENCH_baseline.json`, and
-//! prints a markdown delta table (also appended to `$GITHUB_STEP_SUMMARY`
-//! when CI sets it).  A metric that regresses by more than the tolerance
-//! (baseline `tolerance` field, default 15%, `QFT_BENCH_GATE_TOL`
-//! override) fails the run with a non-zero exit.
+//! and `largek` shape sets, the i8-vs-f32 and W4-vs-i8 geomeans, and the
+//! `lw-i8` serving p50s), compares each against the committed
+//! `BENCH_baseline.json`, and prints a markdown delta table (also appended
+//! to `$GITHUB_STEP_SUMMARY` when CI sets it).  A metric that regresses by
+//! more than its tolerance fails the run with a non-zero exit.  Tolerance
+//! precedence, per metric: `QFT_BENCH_GATE_TOL` env override > the
+//! baseline entry's own `tol` field (how strict floors like the i8/W4
+//! ratio gates pin 0%) > the baseline's global `tolerance` > 15%.
+//!
+//! The integer-ratio floors (`needs_simd` metrics) only hold where a SIMD
+//! path dispatched; when the gemm bench reports `kernel_dispatch ==
+//! "scalar"` they are reported as skipped instead of failed, so the gate
+//! stays honest on runners without AVX2/NEON.
 //!
 //! `QFT_BENCH_WRITE_BASELINE=1` re-baselines instead: the current run's
 //! values are written to `BENCH_baseline.json` for the operator to review
-//! and commit (`make bench-baseline`).  Smoke-mode numbers
-//! (`QFT_BENCH_SMOKE=1`) are refused — they are not comparable.
+//! and commit (`make bench-baseline`), preserving any per-metric `tol`
+//! pins and printing a delta table against the previous baseline.
+//! Smoke-mode numbers (`QFT_BENCH_SMOKE=1`) are refused — they are not
+//! comparable.
 
 #[path = "util/mod.rs"]
 mod util;
@@ -29,11 +38,12 @@ use qft::util::json::Value;
 const DEFAULT_TOL: f64 = 0.15;
 
 /// One gated metric: a stable name, the direction that counts as better,
-/// and where in the bench JSONs its current value lives (see
-/// [`current_value`]).
+/// whether it only holds under a dispatched SIMD kernel path, and where in
+/// the bench JSONs its current value lives (see [`current_value`]).
 struct Metric {
     name: &'static str,
     higher_is_better: bool,
+    needs_simd: bool,
     desc: &'static str,
 }
 
@@ -41,26 +51,37 @@ const METRICS: &[Metric] = &[
     Metric {
         name: "gemm.resnet_geomean_speedup",
         higher_is_better: true,
+        needs_simd: false,
         desc: "packed-vs-scalar GFLOP/s geomean, resnet shape set",
     },
     Metric {
         name: "gemm.largek_geomean_speedup",
         higher_is_better: true,
+        needs_simd: false,
         desc: "packed-vs-scalar GFLOP/s geomean, large-K (k >= 2048, KC-blocked) set",
     },
     Metric {
         name: "gemm.resnet_geomean_i8_vs_f32",
         higher_is_better: true,
-        desc: "i8-vs-f32 kernel geomean, resnet shape set",
+        needs_simd: true,
+        desc: "i8-vs-f32 kernel geomean, resnet shape set (SIMD dot-product path)",
+    },
+    Metric {
+        name: "gemm.largek_geomean_w4_vs_i8",
+        higher_is_better: true,
+        needs_simd: true,
+        desc: "W4-vs-i8 kernel geomean, large-K set (nibble-packed weight bandwidth win)",
     },
     Metric {
         name: "serve.single_image_lw_i8_p50_us",
         higher_is_better: false,
+        needs_simd: false,
         desc: "lw-i8 batch-1 forward p50 at 4 pool threads (intra-op path)",
     },
     Metric {
         name: "serve.closed_loop_lw_i8_w4_p50_us",
         higher_is_better: false,
+        needs_simd: false,
         desc: "lw-i8 closed-loop serving p50 at 4 workers",
     },
 ];
@@ -76,6 +97,15 @@ fn find_summary(rows: &[Value], key: &str) -> anyhow::Result<f64> {
         }
     }
     bail!("BENCH_gemm.json has no summary key {key:?} — rerun `make bench-gemm`")
+}
+
+/// String value of `key` from the gemm summary row; empty when absent
+/// (bench emissions that predate the field).
+fn summary_str(rows: &[Value], key: &str) -> String {
+    rows.iter()
+        .filter(|r| r.opt("set").and_then(|v| v.str().ok()) == Some("summary"))
+        .find_map(|r| r.opt(key).and_then(|v| v.str().ok()).map(str::to_string))
+        .unwrap_or_default()
 }
 
 /// `p50_us` of the serve-bench row matching `(set, backend, dim_key=dim)`.
@@ -106,6 +136,7 @@ fn current_value(name: &str, gemm: &[Value], serve: &[Value]) -> anyhow::Result<
         "gemm.resnet_geomean_speedup" => find_summary(gemm, "resnet_geomean_speedup"),
         "gemm.largek_geomean_speedup" => find_summary(gemm, "largek_geomean_speedup"),
         "gemm.resnet_geomean_i8_vs_f32" => find_summary(gemm, "resnet_geomean_i8_vs_f32"),
+        "gemm.largek_geomean_w4_vs_i8" => find_summary(gemm, "largek_geomean_w4_vs_i8"),
         "serve.single_image_lw_i8_p50_us" => {
             find_serve_p50(serve, "single_image", "lw-i8", "threads", 4.0)
         }
@@ -142,6 +173,15 @@ fn main() -> anyhow::Result<()> {
                comparable; rerun the real benches");
     }
 
+    let dispatch = summary_str(gemm_rows, "kernel_dispatch");
+    // an empty field means a stale BENCH_gemm.json from before the bench
+    // emitted the path — treat it like scalar (skip, never fake-pass)
+    let scalar_only = dispatch.is_empty() || dispatch == "scalar";
+    println!(
+        "kernel dispatch: {}",
+        if dispatch.is_empty() { "? (stale BENCH_gemm.json)" } else { &dispatch }
+    );
+
     let mut current: Vec<(&Metric, f64)> = Vec::with_capacity(METRICS.len());
     for m in METRICS {
         current.push((m, current_value(m.name, gemm_rows, serve_rows)?));
@@ -149,8 +189,9 @@ fn main() -> anyhow::Result<()> {
 
     let base_path = util::repo_root_path("BENCH_baseline.json");
     if std::env::var_os("QFT_BENCH_WRITE_BASELINE").is_some_and(|v| v != "0" && !v.is_empty()) {
-        // preserve an operator-committed tolerance / comment across
-        // re-baselines: only the metric values are refreshed
+        // preserve operator-committed knobs across re-baselines — the
+        // global tolerance, the comment, and any per-metric `tol` pins;
+        // only the metric values are refreshed
         let prev = std::fs::read_to_string(&base_path)
             .ok()
             .and_then(|t| Value::parse(&t).ok());
@@ -163,12 +204,46 @@ fn main() -> anyhow::Result<()> {
             .as_ref()
             .and_then(|p| p.opt("comment"))
             .and_then(|v| v.str().ok().map(str::to_string));
+        let prev_metric = |name: &str| -> Option<&Value> {
+            prev.as_ref().and_then(|p| p.opt("metrics")).and_then(|ms| ms.opt(name))
+        };
+        if scalar_only {
+            eprintln!(
+                "warning: re-baselining under scalar dispatch — the i8/W4 ratio floors will \
+                 reflect scalar kernels; prefer a SIMD-capable host"
+            );
+        }
+        let mut table =
+            String::from("| metric | previous | new | delta |\n|---|---:|---:|---:|\n");
         let mut metrics = HashMap::new();
         for (m, v) in &current {
             let mut o = HashMap::new();
             o.insert("value".to_string(), Value::Num(*v));
             o.insert("higher_is_better".to_string(), Value::Bool(m.higher_is_better));
             o.insert("desc".to_string(), Value::Str(m.desc.to_string()));
+            let pinned_tol =
+                prev_metric(m.name).and_then(|pm| pm.opt("tol")).and_then(|t| t.num().ok());
+            if let Some(t) = pinned_tol {
+                o.insert("tol".to_string(), Value::Num(t));
+            }
+            let pval = prev_metric(m.name)
+                .and_then(|pm| pm.opt("value"))
+                .and_then(|t| t.num().ok());
+            match pval {
+                Some(p) if p != 0.0 => {
+                    let _ = writeln!(
+                        table,
+                        "| `{}` | {:.3} | {:.3} | {:+.1}% |",
+                        m.name,
+                        p,
+                        *v,
+                        (*v / p - 1.0) * 100.0
+                    );
+                }
+                _ => {
+                    let _ = writeln!(table, "| `{}` | (new) | {:.3} | - |", m.name, *v);
+                }
+            }
             metrics.insert(m.name.to_string(), Value::Obj(o));
         }
         let mut top = HashMap::new();
@@ -178,6 +253,7 @@ fn main() -> anyhow::Result<()> {
         }
         top.insert("metrics".to_string(), Value::Obj(metrics));
         std::fs::write(&base_path, Value::Obj(top).to_string_compact())?;
+        println!("delta vs previous baseline:\n{table}");
         println!("wrote fresh baseline {} — review and commit it", base_path.display());
         return Ok(());
     }
@@ -187,23 +263,30 @@ fn main() -> anyhow::Result<()> {
             "no committed BENCH_baseline.json ({e}); generate one with `make bench-baseline`"
         )
     })?)?;
-    let tol: f64 = match std::env::var("QFT_BENCH_GATE_TOL") {
-        Ok(s) => s.parse().context("QFT_BENCH_GATE_TOL must be a float like 0.15")?,
-        Err(_) => match baseline.opt("tolerance") {
-            Some(v) => v.num()?,
-            None => DEFAULT_TOL,
-        },
+    let env_tol: Option<f64> = match std::env::var("QFT_BENCH_GATE_TOL") {
+        Ok(s) => Some(s.parse().context("QFT_BENCH_GATE_TOL must be a float like 0.15")?),
+        Err(_) => None,
+    };
+    let global_tol: f64 = match baseline.opt("tolerance") {
+        Some(v) => v.num()?,
+        None => DEFAULT_TOL,
     };
 
     let mut table = String::from(
-        "| metric | baseline | current | delta | status |\n|---|---:|---:|---:|---|\n",
+        "| metric | baseline | current | delta | tol | status |\n|---|---:|---:|---:|---:|---|\n",
     );
     let mut regressions = Vec::new();
+    let mut skips = 0usize;
     for (m, cur) in &current {
         let bm = baseline.get("metrics")?.get(m.name).map_err(|_| {
             anyhow!("baseline lacks metric {:?} — rerun `make bench-baseline`", m.name)
         })?;
         let base = bm.get("value")?.num()?;
+        // tolerance precedence: env override > per-metric pin > global
+        let tol = match env_tol {
+            Some(t) => t,
+            None => bm.opt("tol").and_then(|v| v.num().ok()).unwrap_or(global_tol),
+        };
         // direction comes from the gate's METRICS table; a baseline edited
         // to disagree is config drift we surface instead of silently
         // ignoring the field
@@ -218,15 +301,21 @@ fn main() -> anyhow::Result<()> {
                 );
             }
         }
+        // the integer-ratio floors only hold where a SIMD path dispatched;
+        // on a scalar-only runner they are skipped, never failed or passed
+        let skipped = m.needs_simd && scalar_only;
         let delta = if base != 0.0 { cur / base - 1.0 } else { 0.0 };
-        let regressed = if m.higher_is_better {
-            *cur < base * (1.0 - tol)
-        } else {
-            *cur > base * (1.0 + tol)
-        };
-        let improved =
-            (m.higher_is_better && delta > tol) || (!m.higher_is_better && delta < -tol);
-        let status = if regressed {
+        let regressed = !skipped
+            && if m.higher_is_better {
+                *cur < base * (1.0 - tol)
+            } else {
+                *cur > base * (1.0 + tol)
+            };
+        let improved = !skipped
+            && ((m.higher_is_better && delta > tol) || (!m.higher_is_better && delta < -tol));
+        let status = if skipped {
+            "skipped (scalar dispatch)"
+        } else if regressed {
             "**REGRESSION**"
         } else if improved {
             "improved"
@@ -235,20 +324,25 @@ fn main() -> anyhow::Result<()> {
         };
         let _ = writeln!(
             table,
-            "| `{}` | {:.3} | {:.3} | {:+.1}% | {} |",
+            "| `{}` | {:.3} | {:.3} | {:+.1}% | {:.0}% | {} |",
             m.name,
             base,
             cur,
             delta * 100.0,
+            tol * 100.0,
             status
         );
+        if skipped {
+            skips += 1;
+        }
         if regressed {
             regressions.push(format!(
-                "{}: baseline {:.3} -> current {:.3} ({:+.1}%)",
+                "{}: baseline {:.3} -> current {:.3} ({:+.1}%, tol {:.0}%)",
                 m.name,
                 base,
                 cur,
-                delta * 100.0
+                delta * 100.0,
+                tol * 100.0
             ));
         }
     }
@@ -257,12 +351,13 @@ fn main() -> anyhow::Result<()> {
         if let Ok(mut f) =
             std::fs::OpenOptions::new().create(true).append(true).open(summary_path)
         {
-            let _ = writeln!(f, "## bench-gate (tolerance {:.0}%)\n\n{table}", tol * 100.0);
+            let disp = if dispatch.is_empty() { "?" } else { &dispatch };
+            let _ = writeln!(f, "## bench-gate (dispatch {disp})\n\n{table}");
         }
     }
     if !regressions.is_empty() {
         let nreg = regressions.len();
-        eprintln!("bench-gate FAILED: >{:.0}% regression on {nreg} metric(s):", tol * 100.0);
+        eprintln!("bench-gate FAILED: {nreg} metric(s) regressed beyond tolerance:");
         for r in &regressions {
             eprintln!("  {r}");
         }
@@ -270,9 +365,13 @@ fn main() -> anyhow::Result<()> {
         std::process::exit(1);
     }
     println!(
-        "bench-gate OK: {} metrics within {:.0}% of the committed baseline",
-        current.len(),
-        tol * 100.0
+        "bench-gate OK: {} metrics within tolerance of the committed baseline{}",
+        current.len() - skips,
+        if skips > 0 {
+            format!(" ({skips} SIMD floor(s) skipped under scalar dispatch)")
+        } else {
+            String::new()
+        }
     );
     Ok(())
 }

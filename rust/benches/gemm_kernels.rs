@@ -1,19 +1,20 @@
 //! Bench G — the `qft::kernel` GEMM micro-kernels: scalar reference loop
 //! (`gemm_ref`, the historical `matmul_rows` plus its zero-fill pass) vs
 //! the panel-packed register-blocked write-mode kernel (`gemm`) vs the
-//! i8×i8→i32 integer kernel (`gemm_i8`, the `lw-i8` backend's engine),
-//! GFLOP/s (GOP/s for the integer kernel) over ResNet-shaped im2col GEMMs,
-//! a large-K set (`k >= 2048`, exercising the KC reduction cache block),
-//! and ragged edge shapes.  Emits `BENCH_gemm.json` at the repo root with
-//! per-shape f32-vs-i8 numbers and per-set geomeans; the `resnet` and
-//! `largek` geomeans feed the CI perf gate (`make bench-gate`,
-//! `BENCH_baseline.json`).
+//! runtime-dispatched integer kernels (`gemm_i8` over byte panels and
+//! `gemm_w4` over nibble-packed panels — the `lw-i8` backend's engines),
+//! GFLOP/s (GOP/s for the integer kernels) over ResNet-shaped im2col
+//! GEMMs, a large-K set (`k >= 2048`, exercising the KC reduction cache
+//! block), and ragged edge shapes.  Emits `BENCH_gemm.json` at the repo
+//! root with per-shape f32/i8/W4 numbers, the dispatched kernel path, and
+//! per-set geomeans; the `resnet` and `largek` geomeans feed the CI perf
+//! gate (`make bench-gate`, `BENCH_baseline.json`).
 //!
 //! Every shape is parity-checked before timing (f32 packed vs scalar
 //! bit-for-bit; i8 vs the f32 kernel on the same integer codes, where f32
-//! accumulation is exact), so this bench doubles as a coarse guard against
-//! kernel rot.  `QFT_BENCH_SMOKE=1` drops to a single iteration (CI
-//! harness smoke; numbers meaningless).
+//! accumulation is exact; W4 bit-identical to i8), so this bench doubles
+//! as a coarse guard against kernel rot.  `QFT_BENCH_SMOKE=1` drops to a
+//! single iteration (CI harness smoke; numbers meaningless).
 
 #[path = "util/mod.rs"]
 mod util;
@@ -21,7 +22,7 @@ mod util;
 use std::collections::HashMap;
 use std::time::Instant;
 
-use qft::kernel::{gemm, gemm_i8, gemm_ref, PackedW, PackedWi8};
+use qft::kernel::{gemm, gemm_i8, gemm_ref, gemm_w4, kernel_dispatch, PackedW, PackedW4, PackedWi8};
 use qft::util::json::Value;
 
 struct Shape {
@@ -82,13 +83,15 @@ fn time_per_op(iters: usize, mut f: impl FnMut()) -> f64 {
 }
 
 fn main() {
-    util::section("qft::kernel GEMM micro-kernels (scalar vs panel-packed f32 vs i8)");
+    util::section("qft::kernel GEMM micro-kernels (scalar vs panel-packed f32 vs i8 vs W4)");
+    println!("kernel dispatch: {}", kernel_dispatch());
     let smoke = util::smoke();
     let mut rows = Vec::new();
     // per-set speedup samples for the geomean summary (resnet + largek
     // feed the perf gate)
     let mut speedups: HashMap<&'static str, Vec<f64>> = HashMap::new();
     let mut i8_speedups: HashMap<&'static str, Vec<f64>> = HashMap::new();
+    let mut w4_speedups: HashMap<&'static str, Vec<f64>> = HashMap::new();
 
     for (si, s) in SHAPES.iter().enumerate() {
         let flops = 2.0 * (s.m * s.k * s.n) as f64;
@@ -156,14 +159,27 @@ fn main() {
             gemm_i8(&xi, s.m, &pwi, &mut got_i);
         });
 
+        // the nibble-packed twin: same lw codes (always in [-7, 7], so
+        // always W4-packable), two codes per byte, bit-identical to the
+        // i8 panel kernel by contract
+        let pw4 = PackedW4::pack(&wi, s.k, s.n);
+        let mut got_w4 = vec![0i32; s.m * s.n];
+        gemm_w4(&xi, s.m, &pw4, &mut got_w4);
+        assert_eq!(got_w4, got_i, "{}: W4 kernel diverged from i8 kernel", s.name);
+        let w4_time = time_per_op(iters, || {
+            gemm_w4(&xi, s.m, &pw4, &mut got_w4);
+        });
+
         let speedup = if packed > 0.0 { scalar / packed } else { 0.0 };
         let i8_speedup = if i8_time > 0.0 { packed / i8_time } else { 0.0 };
+        let w4_speedup = if w4_time > 0.0 { i8_time / w4_time } else { 0.0 };
         speedups.entry(s.set).or_default().push(speedup.max(1e-12));
         i8_speedups.entry(s.set).or_default().push(i8_speedup.max(1e-12));
+        w4_speedups.entry(s.set).or_default().push(w4_speedup.max(1e-12));
         println!(
             "[{:<16}] {:>5}x{:<5}x{:<5} scalar {:>8.3} ms ({:>6.2} GF/s) | packed {:>8.3} ms \
-             ({:>6.2} GF/s) | +pack {:>8.3} ms | i8 {:>8.3} ms ({:>6.2} GOP/s) | speedup \
-             {:.2}x | i8-vs-f32 {:.2}x",
+             ({:>6.2} GF/s) | +pack {:>8.3} ms | i8 {:>8.3} ms ({:>6.2} GOP/s) | w4 {:>8.3} ms \
+             ({:>6.2} GOP/s) | speedup {:.2}x | i8-vs-f32 {:.2}x | w4-vs-i8 {:.2}x",
             s.name,
             s.m,
             s.k,
@@ -175,8 +191,11 @@ fn main() {
             packed_cold * 1e3,
             i8_time * 1e3,
             flops / i8_time / 1e9,
+            w4_time * 1e3,
+            flops / w4_time / 1e9,
             speedup,
-            i8_speedup
+            i8_speedup,
+            w4_speedup
         );
 
         let mut row = HashMap::new();
@@ -189,11 +208,14 @@ fn main() {
         row.insert("packed_ms".to_string(), Value::Num(packed * 1e3));
         row.insert("packed_cold_ms".to_string(), Value::Num(packed_cold * 1e3));
         row.insert("i8_ms".to_string(), Value::Num(i8_time * 1e3));
+        row.insert("w4_ms".to_string(), Value::Num(w4_time * 1e3));
         row.insert("gflops_scalar".to_string(), Value::Num(flops / scalar / 1e9));
         row.insert("gflops_packed".to_string(), Value::Num(flops / packed / 1e9));
         row.insert("gops_i8".to_string(), Value::Num(flops / i8_time / 1e9));
+        row.insert("gops_w4".to_string(), Value::Num(flops / w4_time / 1e9));
         row.insert("speedup_vs_scalar".to_string(), Value::Num(speedup));
         row.insert("i8_speedup_vs_f32".to_string(), Value::Num(i8_speedup));
+        row.insert("w4_speedup_vs_i8".to_string(), Value::Num(w4_speedup));
         rows.push(Value::Obj(row));
     }
 
@@ -202,18 +224,25 @@ fn main() {
     };
     let rn = geomean(speedups.get("resnet").map_or(&[][..], |v| v.as_slice()));
     let rn_i8 = geomean(i8_speedups.get("resnet").map_or(&[][..], |v| v.as_slice()));
+    let rn_w4 = geomean(w4_speedups.get("resnet").map_or(&[][..], |v| v.as_slice()));
     let lk = geomean(speedups.get("largek").map_or(&[][..], |v| v.as_slice()));
     let lk_i8 = geomean(i8_speedups.get("largek").map_or(&[][..], |v| v.as_slice()));
+    let lk_w4 = geomean(w4_speedups.get("largek").map_or(&[][..], |v| v.as_slice()));
     println!("resnet-set geomean speedup: {rn:.2}x (target >= 3x single-thread)");
     println!("resnet-set geomean i8-vs-f32: {rn_i8:.2}x");
+    println!("resnet-set geomean w4-vs-i8: {rn_w4:.2}x");
     println!("largek-set geomean speedup: {lk:.2}x (KC-blocked, target >= 1.2x)");
     println!("largek-set geomean i8-vs-f32: {lk_i8:.2}x");
+    println!("largek-set geomean w4-vs-i8: {lk_w4:.2}x (half the weight bandwidth)");
     let mut summary = HashMap::new();
     summary.insert("set".to_string(), Value::Str("summary".to_string()));
+    summary.insert("kernel_dispatch".to_string(), Value::Str(kernel_dispatch().to_string()));
     summary.insert("resnet_geomean_speedup".to_string(), Value::Num(rn));
     summary.insert("resnet_geomean_i8_vs_f32".to_string(), Value::Num(rn_i8));
+    summary.insert("resnet_geomean_w4_vs_i8".to_string(), Value::Num(rn_w4));
     summary.insert("largek_geomean_speedup".to_string(), Value::Num(lk));
     summary.insert("largek_geomean_i8_vs_f32".to_string(), Value::Num(lk_i8));
+    summary.insert("largek_geomean_w4_vs_i8".to_string(), Value::Num(lk_w4));
     summary.insert("smoke".to_string(), Value::Num(if smoke { 1.0 } else { 0.0 }));
     rows.push(Value::Obj(summary));
 

@@ -8,7 +8,11 @@
 //! ([`crate::kernel::PackedWi8`], same panel geometry as the f32
 //! [`crate::kernel::PackedW`], 4× denser), activations travel as i8, and
 //! every conv runs the [`crate::kernel::gemm_i8`] i8×i8→i32 accumulate
-//! micro-kernel.
+//! micro-kernel — or, when the codebook fits 4 bits and a SIMD path is
+//! dispatched, nibble-packed [`crate::kernel::PackedW4`] panels under
+//! [`crate::kernel::gemm_w4`] at half the weight bandwidth (see
+//! [`Int8Backend`] for the selection rules; the results are bit-identical
+//! either way).
 //!
 //! ## Zero-point folding
 //!
@@ -50,7 +54,7 @@ use std::collections::HashMap;
 
 use std::sync::Arc;
 
-use crate::kernel::{gemm_i8, PackedW, PackedWi8};
+use crate::kernel::{gemm_i8, gemm_w4, kernel_path, KernelPath, PackedW, PackedW4, PackedWi8};
 use crate::nn::{ArchSpec, OpKind, ParamMap};
 use crate::obs::{layer, LayerObs, NetObs, Phase};
 use crate::par::{chunk_ranges_aligned, Pool, ScopedTask};
@@ -96,6 +100,27 @@ fn im2col_i8(
     );
 }
 
+/// The weight panels of one conv: byte-per-code i8 panels, or — when the
+/// codebook fits the two's-complement nibble range and the backend elected
+/// the 4-bit path — nibble-packed [`PackedW4`] panels at half the weight
+/// bandwidth.  Both run the same dispatched integer kernels and produce
+/// bit-identical accumulators (the codes are identical, only the storage
+/// density differs), so the choice is pure performance.
+enum I8Panels {
+    I8(Vec<PackedWi8>),
+    W4(Vec<PackedW4>),
+}
+
+impl I8Panels {
+    /// Run group `g`'s panel GEMM through whichever storage this conv uses.
+    fn gemm(&self, g: usize, cols: &[i8], nrows: usize, out: &mut [i32]) {
+        match self {
+            I8Panels::I8(p) => gemm_i8(cols, nrows, &p[g], out),
+            I8Panels::W4(p) => gemm_w4(cols, nrows, &p[g], out),
+        }
+    }
+}
+
 /// One conv frozen onto the i8 grid.
 struct I8Conv {
     inp: usize,
@@ -106,8 +131,8 @@ struct I8Conv {
     cout: usize,
     groups: usize,
     act: String,
-    /// one i8 panel pack per group (group `g` = columns `g*cg_out ..`).
-    packs: Vec<PackedWi8>,
+    /// one panel pack per group (group `g` = columns `g*cg_out ..`).
+    packs: I8Panels,
     /// integer bias at accumulator scale with the input zero-point
     /// correction (`zp_in · col_sum`) folded in.
     bias: Vec<i32>,
@@ -212,7 +237,7 @@ fn conv_gemm_rows(
         let t0 = layer::start(lobs);
         im2col_i8(xin, pc.k, pc.stride, 0, pc.cin_g, r, pc.fill, cols);
         let t1 = layer::lap(lobs, Phase::Im2col, t0);
-        gemm_i8(cols, nrows, &pc.packs[0], out);
+        pc.packs.gemm(0, cols, nrows, out);
         layer::lap(lobs, Phase::Gemm, t1);
         return;
     }
@@ -223,7 +248,7 @@ fn conv_gemm_rows(
         im2col_i8(xin, pc.k, pc.stride, c0, pc.cin_g, r.clone(), pc.fill, cols);
         let t1 = layer::lap(lobs, Phase::Im2col, t0);
         size_for_write(gacc, nrows * cg_out);
-        gemm_i8(cols, nrows, &pc.packs[g], gacc);
+        pc.packs.gemm(g, cols, nrows, gacc);
         layer::lap(lobs, Phase::Gemm, t1);
         for (row, chunk) in gacc.chunks(cg_out).enumerate() {
             let dst = row * cout + g * cg_out;
@@ -285,7 +310,50 @@ fn conv_gemm(
 /// The `lw-i8` execution engine.  `prepare` consumes the *same* lw
 /// trainable set as [`super::IntBackend`]`(Mode::Lw)` — same DoF, different
 /// engine — so any exported `{arch}.lw.qftw` serves under either backend.
-pub struct Int8Backend;
+///
+/// ## W4 panel selection
+///
+/// Per conv, weights pack as byte-per-code i8 panels or nibble-packed
+/// [`PackedW4`] panels ([`I8Panels`]).  Resolution order at prepare time:
+/// an explicit [`Int8Backend::with_w4`] choice, else the `QFT_W4=1|0` env
+/// override, else *auto* — W4 whenever the conv's codes fit the nibble
+/// range `[-8, 7]` (always true on the lw grids, `|w| ≤ 7`) **and** the
+/// dispatched kernel path is SIMD ([`kernel_path`] `!= Scalar`; the scalar
+/// W4 decode costs more than the bandwidth it saves).  Both storages hold
+/// identical codes and accumulate exactly, so outputs are bit-identical
+/// either way — the choice is pure performance.
+#[derive(Default)]
+pub struct Int8Backend {
+    /// `Some` forces the W4 path on/off; `None` resolves env + auto probe.
+    w4: Option<bool>,
+}
+
+impl Int8Backend {
+    /// Auto-selecting backend (the [`super::backend_for`] construction).
+    pub fn new() -> Int8Backend {
+        Int8Backend::default()
+    }
+
+    /// Force the W4 panel path on or off, ignoring `QFT_W4` and the auto
+    /// probe — the hook tests use to pin both storages without touching
+    /// process-global env.
+    pub fn with_w4(w4: bool) -> Int8Backend {
+        Int8Backend { w4: Some(w4) }
+    }
+
+    /// Resolve the W4 choice (see the type docs for the order).
+    fn resolve_w4(&self) -> bool {
+        if let Some(forced) = self.w4 {
+            return forced;
+        }
+        match std::env::var("QFT_W4") {
+            Ok(v) if v == "1" => true,
+            Ok(v) if v == "0" => false,
+            Ok(v) => panic!("QFT_W4={v}: expected 1 or 0"),
+            Err(_) => kernel_path() != KernelPath::Scalar,
+        }
+    }
+}
 
 impl Backend for Int8Backend {
     fn kind(&self) -> BackendKind {
@@ -293,7 +361,7 @@ impl Backend for Int8Backend {
     }
 
     fn prepare(&self, arch: &ArchSpec, tm: &ParamMap) -> Box<dyn PreparedNet> {
-        Box::new(Int8Prepared::prepare(arch, tm))
+        Box::new(Int8Prepared::prepare(arch, tm, self.resolve_w4()))
     }
 }
 
@@ -312,7 +380,7 @@ pub(crate) struct Int8Prepared {
 }
 
 impl Int8Prepared {
-    fn prepare(arch: &ArchSpec, tm: &ParamMap) -> Self {
+    fn prepare(arch: &ArchSpec, tm: &ParamMap, want_w4: bool) -> Self {
         let mode = Mode::Lw;
         let layer_names: Vec<String> = arch.ops.iter().map(|o| o.name.clone()).collect();
         let obs = crate::obs::net_obs(
@@ -343,14 +411,29 @@ impl Int8Prepared {
                     let groups = op.groups;
                     let cg_out = cout / groups;
                     let rows = k * k * cin_g;
-                    let mut packs = Vec::with_capacity(groups);
                     let mut csum = vec![0i32; cout];
-                    for g in 0..groups {
-                        let mut p = PackedWi8::default();
-                        p.pack_cols(&codes, rows, cout, g * cg_out, cg_out);
-                        csum[g * cg_out..(g + 1) * cg_out].copy_from_slice(&p.col_sums());
-                        packs.push(p);
-                    }
+                    // W4 needs every code in the nibble range; the lw grid
+                    // guarantees it, but a forced-on backend must still
+                    // fall back per conv rather than corrupt wider codes
+                    let packs = if want_w4 && deploy::codes_fit_w4(&codes) {
+                        let mut ps = Vec::with_capacity(groups);
+                        for g in 0..groups {
+                            let mut p = PackedW4::default();
+                            p.pack_cols(&codes, rows, cout, g * cg_out, cg_out);
+                            csum[g * cg_out..(g + 1) * cg_out].copy_from_slice(&p.col_sums());
+                            ps.push(p);
+                        }
+                        I8Panels::W4(ps)
+                    } else {
+                        let mut ps = Vec::with_capacity(groups);
+                        for g in 0..groups {
+                            let mut p = PackedWi8::default();
+                            p.pack_cols(&codes, rows, cout, g * cg_out, cg_out);
+                            csum[g * cg_out..(g + 1) * cg_out].copy_from_slice(&p.col_sums());
+                            ps.push(p);
+                        }
+                        I8Panels::I8(ps)
+                    };
                     let f = deploy::pos(tm.get(&format!("f:{}", op.name)).data[0]);
                     let sv = deploy::sv_of(tm, op.out);
                     // accumulator scale per n: S_acc = S_v * F (Eq. 11)

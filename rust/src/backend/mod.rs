@@ -230,7 +230,7 @@ pub fn backend_for(kind: BackendKind) -> Box<dyn Backend> {
         BackendKind::Fp => Box::new(FpBackend),
         BackendKind::FakeQuant(m) => Box::new(FakeQuantBackend(m)),
         BackendKind::Int(m) => Box::new(IntBackend(m)),
-        BackendKind::Int8 => Box::new(Int8Backend),
+        BackendKind::Int8 => Box::new(Int8Backend::new()),
     }
 }
 

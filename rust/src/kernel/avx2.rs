@@ -1,0 +1,268 @@
+//! AVX2 u8×i8 integer kernels — `_mm256_maddubs_epi16` dot products over
+//! the quad-interleaved [`PackedWi8`] / nibble-packed [`PackedW4`] panels.
+//!
+//! Per quad of 4 K-rows and 8 output lanes, one 32-byte weight load feeds
+//! `maddubs` (u8×i8 → saturating i16 pairs) + `madd` (i16 pairs → i32) —
+//! exact under the pack-time `|w| ≤ 64` invariant, since the worst i16
+//! pair sum is `255·64·2 = 32640 < 32767`.  Activations are stored signed
+//! (`q - zp`); the kernel re-biases them to unsigned in-register (one XOR
+//! with `0x80` per byte, i.e. `+128`) and subtracts the pack-time
+//! compensation `128 · Σ w` per lane afterwards, so results are
+//! bit-identical to the signed scalar twin (integer arithmetic is exact).
+//! `kb % 4` (i8) / `kb % 8` (W4) tail rows and sub-[`LANES`] panels run
+//! the scalar twins directly.
+//!
+//! ## `unsafe` policy
+//!
+//! This module (with its `vnni`/`neon` siblings) is the only place the
+//! crate allows `unsafe`: every block sits inside a `#[target_feature]`
+//! function whose safe wrapper asserts the feature at runtime, carries a
+//! `SAFETY:` comment, and is pinned bit-for-bit against the scalar twin
+//! by `rust/tests/kernel.rs`.
+#![allow(unsafe_code)]
+
+#[cfg(target_arch = "x86")]
+use std::arch::x86::*;
+#[cfg(target_arch = "x86_64")]
+use std::arch::x86_64::*;
+
+use super::{
+    for_each_kblock, for_each_kblock_w4, merge_spill, micro_narrow_i8, micro_w4, w4_hi, w4_lo,
+    PackedW4, PackedWi8, KC, LANES, NR,
+};
+
+/// `acc += Σ_quad u8(x)·i8(w)` per i32 lane: `maddubs` (exact under
+/// `|w| ≤ 64`) then `madd` against ones.
+#[target_feature(enable = "avx2")]
+#[inline]
+unsafe fn dot_u8i8(acc: __m256i, xv: __m256i, w: __m256i, ones: __m256i) -> __m256i {
+    // SAFETY: pure register arithmetic; the caller has AVX2 enabled.
+    unsafe { _mm256_add_epi32(acc, _mm256_madd_epi16(_mm256_maddubs_epi16(xv, w), ones)) }
+}
+
+/// Bytewise two's-complement sign fix for unpacked nibbles: `(v ^ 8) - 8`
+/// maps `0..=15` onto `-8..=7`.
+#[target_feature(enable = "avx2")]
+#[inline]
+pub(super) unsafe fn sign4(v: __m256i, eight: __m256i) -> __m256i {
+    // SAFETY: pure register arithmetic; the caller has AVX2 enabled.
+    unsafe { _mm256_sub_epi8(_mm256_xor_si256(v, eight), eight) }
+}
+
+/// Safe entry: assert AVX2 once, then run the feature-gated kernel.
+pub(super) fn gemm_i8(x: &[i8], m: usize, pw: &PackedWi8, out: &mut [i32]) {
+    assert!(std::arch::is_x86_feature_detected!("avx2"), "avx2 kernel dispatched without AVX2");
+    // SAFETY: AVX2 support was just asserted at runtime — the only
+    // precondition of the target_feature function.
+    unsafe { gemm_i8_avx2(x, m, pw, out) }
+}
+
+/// Safe entry for the W4 kernel — same runtime gate as [`gemm_i8`].
+pub(super) fn gemm_w4(x: &[i8], m: usize, pw: &PackedW4, out: &mut [i32]) {
+    assert!(std::arch::is_x86_feature_detected!("avx2"), "avx2 kernel dispatched without AVX2");
+    // SAFETY: AVX2 support was just asserted at runtime — the only
+    // precondition of the target_feature function.
+    unsafe { gemm_w4_avx2(x, m, pw, out) }
+}
+
+/// The K-blocked panel walk over AVX2 row kernels.  Callers (the dispatch
+/// layer) guarantee `m, k, n > 0` and the `x`/`out` shape contracts.
+#[target_feature(enable = "avx2")]
+unsafe fn gemm_i8_avx2(x: &[i8], m: usize, pw: &PackedWi8, out: &mut [i32]) {
+    let (k, n) = (pw.k, pw.n);
+    let panels = n.div_ceil(NR);
+    for_each_kblock(k, panels, |k0, kb, boff| {
+        let first = k0 == 0;
+        let b = k0 / KC;
+        for p in 0..panels {
+            let j0 = p * NR;
+            let nv = NR.min(n - j0);
+            let sub = &pw.data[boff + p * kb * NR..boff + (p + 1) * kb * NR];
+            if nv < LANES {
+                // thin panels (depthwise convs): the scalar narrow twin —
+                // integer accumulation is exact, so values are identical
+                micro_narrow_i8(&x[k0..], m, k, kb, sub, &mut out[j0..], n, nv, first);
+                continue;
+            }
+            let uc = &pw.ucomp[(b * panels + p) * NR..(b * panels + p + 1) * NR];
+            for i in 0..m {
+                let xrow = &x[i * k + k0..i * k + k0 + kb];
+                // SAFETY: AVX2 is enabled for this caller (same
+                // target_feature), and `out[i*n + j0..]` holds at least
+                // `nv` elements for every row `i < m`.
+                unsafe { row_i8(xrow, kb, sub, uc, &mut out[i * n + j0..], nv, first) };
+            }
+        }
+    });
+}
+
+/// One output row over one i8 `(block, panel)`: 16 i32 lanes in two ymm
+/// accumulators across the quad region, compensation subtract, scalar
+/// signed tail, then a write-mode store or a load-add-store merge.
+#[target_feature(enable = "avx2")]
+unsafe fn row_i8(
+    xrow: &[i8],
+    kb: usize,
+    sub: &[i8],
+    uc: &[i32],
+    orow: &mut [i32],
+    nv: usize,
+    first: bool,
+) {
+    let nq = kb / 4;
+    // SAFETY: every pointer access below is in-bounds — `sub` holds
+    // `kb * NR` bytes (so `nq` quads of 64 bytes plus the tail rows),
+    // `xrow` holds `kb` bytes (4 per quad), `uc` holds NR i32, and the
+    // callers guarantee `orow` holds at least `nv` (NR on the vector
+    // store path) i32s.  Unaligned access uses read_unaligned / loadu /
+    // storeu throughout.
+    unsafe {
+        let ones = _mm256_set1_epi16(1);
+        let mut acc0 = _mm256_setzero_si256();
+        let mut acc1 = _mm256_setzero_si256();
+        let xp = xrow.as_ptr();
+        let wp = sub.as_ptr();
+        for q in 0..nq {
+            // 4 consecutive signed x bytes, re-biased to u8 by +128 (XOR
+            // 0x80 per byte), broadcast to every 32-bit lane
+            let xq = (xp.add(4 * q) as *const u32).read_unaligned() ^ 0x8080_8080;
+            let xv = _mm256_set1_epi32(xq as i32);
+            let w0 = _mm256_loadu_si256(wp.add(64 * q) as *const __m256i);
+            let w1 = _mm256_loadu_si256(wp.add(64 * q + 32) as *const __m256i);
+            acc0 = dot_u8i8(acc0, xv, w0, ones);
+            acc1 = dot_u8i8(acc1, xv, w1, ones);
+        }
+        // undo the unsigned re-bias: acc holds Σ (x+128)·w, the true sum
+        // is Σ x·w = acc - 128·Σw (pack-time per-lane constant)
+        let ucp = uc.as_ptr();
+        acc0 = _mm256_sub_epi32(acc0, _mm256_loadu_si256(ucp as *const __m256i));
+        acc1 = _mm256_sub_epi32(acc1, _mm256_loadu_si256(ucp.add(8) as *const __m256i));
+        if kb == 4 * nq && nv == NR {
+            let op = orow.as_mut_ptr() as *mut __m256i;
+            if !first {
+                acc0 = _mm256_add_epi32(acc0, _mm256_loadu_si256(op));
+                acc1 = _mm256_add_epi32(acc1, _mm256_loadu_si256(op.add(1)));
+            }
+            _mm256_storeu_si256(op, acc0);
+            _mm256_storeu_si256(op.add(1), acc1);
+            return;
+        }
+        // ragged panel (nv < NR) and/or K tail (kb % 4 != 0, final block
+        // only): spill, finish the tail scalar-signed, merge nv lanes
+        let mut buf = [0i32; NR];
+        _mm256_storeu_si256(buf.as_mut_ptr() as *mut __m256i, acc0);
+        _mm256_storeu_si256(buf.as_mut_ptr().add(8) as *mut __m256i, acc1);
+        for kk in 4 * nq..kb {
+            let xv = xrow[kk] as i32;
+            let roff = 4 * nq * NR + (kk - 4 * nq) * NR;
+            for (lane, a) in buf.iter_mut().enumerate() {
+                *a += xv * sub[roff + lane] as i32;
+            }
+        }
+        merge_spill(orow, &buf, nv, first);
+    }
+}
+
+/// The K-blocked panel walk over AVX2 W4 row kernels.
+#[target_feature(enable = "avx2")]
+unsafe fn gemm_w4_avx2(x: &[i8], m: usize, pw: &PackedW4, out: &mut [i32]) {
+    let (k, n) = (pw.k, pw.n);
+    let panels = n.div_ceil(NR);
+    for_each_kblock_w4(k, panels, |k0, kb, boff| {
+        let first = k0 == 0;
+        let b = k0 / KC;
+        let pbytes = kb.div_ceil(2) * NR;
+        for p in 0..panels {
+            let j0 = p * NR;
+            let nv = NR.min(n - j0);
+            let sub = &pw.data[boff + p * pbytes..boff + (p + 1) * pbytes];
+            if nv < LANES {
+                micro_w4(&x[k0..], m, k, kb, sub, &mut out[j0..], n, nv, first);
+                continue;
+            }
+            let uc = &pw.ucomp[(b * panels + p) * NR..(b * panels + p + 1) * NR];
+            for i in 0..m {
+                let xrow = &x[i * k + k0..i * k + k0 + kb];
+                // SAFETY: AVX2 is enabled for this caller (same
+                // target_feature), and `out[i*n + j0..]` holds at least
+                // `nv` elements for every row `i < m`.
+                unsafe { row_w4(xrow, kb, sub, uc, &mut out[i * n + j0..], nv, first) };
+            }
+        }
+    });
+}
+
+/// One output row over one W4 `(block, panel)`: 32-byte octet loads are
+/// nibble-unpacked in-register (`& 0x0F` / `>> 4`, sign-fix
+/// `(v ^ 8) - 8`) into the same quad-interleaved operands the i8 path
+/// streams, at half the bandwidth.
+#[target_feature(enable = "avx2")]
+unsafe fn row_w4(
+    xrow: &[i8],
+    kb: usize,
+    sub: &[u8],
+    uc: &[i32],
+    orow: &mut [i32],
+    nv: usize,
+    first: bool,
+) {
+    let noct = kb / 8;
+    // SAFETY: in-bounds by layout — `sub` holds `kb.div_ceil(2) * NR`
+    // bytes (`noct` octets of 64 bytes plus the pair-packed tail), `xrow`
+    // holds `kb` bytes (8 per octet), `uc` holds NR i32, and callers
+    // guarantee `orow` holds at least `nv` i32s.  All memory ops are
+    // unaligned-tolerant (read_unaligned / loadu / storeu).
+    unsafe {
+        let ones = _mm256_set1_epi16(1);
+        let lomask = _mm256_set1_epi8(0x0F);
+        let eight = _mm256_set1_epi8(8);
+        let mut acc0 = _mm256_setzero_si256();
+        let mut acc1 = _mm256_setzero_si256();
+        let xp = xrow.as_ptr();
+        let wp = sub.as_ptr();
+        for o in 0..noct {
+            let xlo = (xp.add(8 * o) as *const u32).read_unaligned() ^ 0x8080_8080;
+            let xhi = (xp.add(8 * o + 4) as *const u32).read_unaligned() ^ 0x8080_8080;
+            let xl = _mm256_set1_epi32(xlo as i32);
+            let xh = _mm256_set1_epi32(xhi as i32);
+            let v0 = _mm256_loadu_si256(wp.add(64 * o) as *const __m256i);
+            let v1 = _mm256_loadu_si256(wp.add(64 * o + 32) as *const __m256i);
+            // nibble unpack + two's-complement sign fix
+            let lo0 = sign4(_mm256_and_si256(v0, lomask), eight);
+            let lo1 = sign4(_mm256_and_si256(v1, lomask), eight);
+            let hi0 = sign4(_mm256_and_si256(_mm256_srli_epi16(v0, 4), lomask), eight);
+            let hi1 = sign4(_mm256_and_si256(_mm256_srli_epi16(v1, 4), lomask), eight);
+            acc0 = dot_u8i8(acc0, xl, lo0, ones);
+            acc0 = dot_u8i8(acc0, xh, hi0, ones);
+            acc1 = dot_u8i8(acc1, xl, lo1, ones);
+            acc1 = dot_u8i8(acc1, xh, hi1, ones);
+        }
+        let ucp = uc.as_ptr();
+        acc0 = _mm256_sub_epi32(acc0, _mm256_loadu_si256(ucp as *const __m256i));
+        acc1 = _mm256_sub_epi32(acc1, _mm256_loadu_si256(ucp.add(8) as *const __m256i));
+        if kb == 8 * noct && nv == NR {
+            let op = orow.as_mut_ptr() as *mut __m256i;
+            if !first {
+                acc0 = _mm256_add_epi32(acc0, _mm256_loadu_si256(op));
+                acc1 = _mm256_add_epi32(acc1, _mm256_loadu_si256(op.add(1)));
+            }
+            _mm256_storeu_si256(op, acc0);
+            _mm256_storeu_si256(op.add(1), acc1);
+            return;
+        }
+        let mut buf = [0i32; NR];
+        _mm256_storeu_si256(buf.as_mut_ptr() as *mut __m256i, acc0);
+        _mm256_storeu_si256(buf.as_mut_ptr().add(8) as *mut __m256i, acc1);
+        for kk in 8 * noct..kb {
+            let r = kk - 8 * noct;
+            let xv = xrow[kk] as i32;
+            let roff = 4 * noct * NR + r / 2 * NR;
+            for (lane, a) in buf.iter_mut().enumerate() {
+                let bb = sub[roff + lane];
+                let c = if r % 2 == 0 { w4_lo(bb) } else { w4_hi(bb) };
+                *a += xv * c as i32;
+            }
+        }
+        merge_spill(orow, &buf, nv, first);
+    }
+}

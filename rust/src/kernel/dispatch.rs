@@ -1,0 +1,182 @@
+//! Runtime CPU-feature dispatch for the integer kernels.
+//!
+//! The integer GEMMs ([`super::gemm_i8`], [`super::gemm_w4`]) have one
+//! safe scalar implementation (the *twin*, ground truth) and explicit
+//! SIMD implementations per ISA.  This module picks between them ONCE per
+//! process: [`kernel_path`] probes the CPU with
+//! `is_x86_feature_detected!` / `is_aarch64_feature_detected!` and caches
+//! the best supported path in a `OnceLock`; the hot kernel entry points
+//! then branch on a copy of that enum (a predictable two-instruction
+//! dispatch, no per-call feature probing).
+//!
+//! ## Forcing a path
+//!
+//! `QFT_KERNEL=scalar|avx2|vnni|neon` forces the dispatch for the whole
+//! process — the CI forced-dispatch matrix reruns the kernel + backend
+//! parity suites under `scalar` and `avx2` so the fallback and each ISA
+//! kernel stay tested on runners whose best path is better.  Forcing a
+//! path the CPU does not support (or a name that is not a path) is a hard
+//! panic, never a silent fallback: a forced CI leg that quietly degraded
+//! to scalar would rot without anyone noticing.
+//!
+//! ## The parity contract
+//!
+//! Integer accumulation is exact and associative, so every path must be
+//! **bit-identical** to the scalar twin on every shape — no tolerance.
+//! [`gemm_i8_with`] / [`gemm_w4_with`] expose the per-path entry points
+//! the parity tests iterate over [`supported_paths`], independent of the
+//! process-wide dispatch choice.
+
+use std::sync::OnceLock;
+
+use super::{PackedW4, PackedWi8};
+
+/// One integer-kernel implementation path (see the module docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelPath {
+    /// The safe scalar twins — always available, the ground truth every
+    /// SIMD path is proven bit-identical against.
+    Scalar,
+    /// AVX2 `_mm256_maddubs_epi16` + `_mm256_madd_epi16` u8×i8 path
+    /// (x86-64; the i16 pair sums stay exact under the pack-time
+    /// `|w| ≤ 64` invariant).
+    Avx2,
+    /// AVX-512-VNNI `_mm256_dpbusd_epi32` at 256-bit width (requires
+    /// AVX512VNNI + AVX512VL) — one non-saturating u8×i8→i32 instruction
+    /// per quad.
+    Vnni,
+    /// NEON `vdotq_s32` signed×signed dot product (aarch64 `dotprod`) —
+    /// no unsigned rebias, no compensation term.
+    Neon,
+}
+
+impl KernelPath {
+    /// Stable lowercase name — the `QFT_KERNEL` vocabulary, the
+    /// `kernel_dispatch` obs/bench field, and the startup print.
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelPath::Scalar => "scalar",
+            KernelPath::Avx2 => "avx2",
+            KernelPath::Vnni => "vnni",
+            KernelPath::Neon => "neon",
+        }
+    }
+
+    fn from_name(s: &str) -> Option<KernelPath> {
+        match s {
+            "scalar" => Some(KernelPath::Scalar),
+            "avx2" => Some(KernelPath::Avx2),
+            "vnni" => Some(KernelPath::Vnni),
+            "neon" => Some(KernelPath::Neon),
+            _ => None,
+        }
+    }
+}
+
+/// Every path this CPU supports, scalar first and the preferred path
+/// last.  This is what the per-ISA parity tests iterate, so each kernel
+/// is pinned against the scalar twin on whatever hardware runs the suite.
+pub fn supported_paths() -> Vec<KernelPath> {
+    let mut paths = vec![KernelPath::Scalar];
+    #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            paths.push(KernelPath::Avx2);
+        }
+        if std::arch::is_x86_feature_detected!("avx512vnni")
+            && std::arch::is_x86_feature_detected!("avx512vl")
+        {
+            paths.push(KernelPath::Vnni);
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if std::arch::is_aarch64_feature_detected!("dotprod") {
+            paths.push(KernelPath::Neon);
+        }
+    }
+    paths
+}
+
+/// Resolve the process dispatch: the `QFT_KERNEL` override (hard panic on
+/// unknown or unsupported values) or the best autodetected path.
+fn pick() -> KernelPath {
+    let supported = supported_paths();
+    if let Ok(forced) = std::env::var("QFT_KERNEL") {
+        let path = KernelPath::from_name(&forced).unwrap_or_else(|| {
+            panic!("QFT_KERNEL={forced}: unknown kernel path (scalar|avx2|vnni|neon)")
+        });
+        assert!(
+            supported.contains(&path),
+            "QFT_KERNEL={forced}: path unsupported on this CPU (supported: {supported:?})"
+        );
+        return path;
+    }
+    *supported.last().expect("scalar is always supported")
+}
+
+/// The process-wide kernel path: autodetected best (or the `QFT_KERNEL`
+/// override), probed once and cached.
+pub fn kernel_path() -> KernelPath {
+    static PATH: OnceLock<KernelPath> = OnceLock::new();
+    *PATH.get_or_init(pick)
+}
+
+/// The dispatch name (`"scalar"` / `"avx2"` / `"vnni"` / `"neon"`) —
+/// carried by the obs snapshot and the `BENCH_gemm.json` summary, and
+/// printed at `repro eval` / `serve` startup, so artifacts from different
+/// machines are comparable.
+pub fn kernel_dispatch() -> &'static str {
+    kernel_path().name()
+}
+
+/// [`super::gemm_i8`] through an explicit path — the parity-test entry
+/// point (the public kernel routes here with [`kernel_path`]).  Handles
+/// the degenerate shapes once so every implementation may assume
+/// `m, k, n > 0`.
+pub fn gemm_i8_with(path: KernelPath, x: &[i8], m: usize, pw: &PackedWi8, out: &mut [i32]) {
+    debug_assert_eq!(x.len(), m * pw.k(), "x vs [m, k]");
+    debug_assert_eq!(out.len(), m * pw.n(), "out vs [m, n]");
+    if m == 0 || pw.n() == 0 {
+        return;
+    }
+    if pw.k() == 0 {
+        out.fill(0);
+        return;
+    }
+    match path {
+        KernelPath::Scalar => super::gemm_i8_scalar(x, m, pw, out),
+        #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+        KernelPath::Avx2 => super::avx2::gemm_i8(x, m, pw, out),
+        #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+        KernelPath::Vnni => super::vnni::gemm_i8(x, m, pw, out),
+        #[cfg(target_arch = "aarch64")]
+        KernelPath::Neon => super::neon::gemm_i8(x, m, pw, out),
+        #[allow(unreachable_patterns)]
+        other => unreachable!("kernel path {other:?} is not compiled for this target"),
+    }
+}
+
+/// [`super::gemm_w4`] through an explicit path — see [`gemm_i8_with`].
+pub fn gemm_w4_with(path: KernelPath, x: &[i8], m: usize, pw: &PackedW4, out: &mut [i32]) {
+    debug_assert_eq!(x.len(), m * pw.k(), "x vs [m, k]");
+    debug_assert_eq!(out.len(), m * pw.n(), "out vs [m, n]");
+    if m == 0 || pw.n() == 0 {
+        return;
+    }
+    if pw.k() == 0 {
+        out.fill(0);
+        return;
+    }
+    match path {
+        KernelPath::Scalar => super::gemm_w4_scalar(x, m, pw, out),
+        #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+        KernelPath::Avx2 => super::avx2::gemm_w4(x, m, pw, out),
+        #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+        KernelPath::Vnni => super::vnni::gemm_w4(x, m, pw, out),
+        #[cfg(target_arch = "aarch64")]
+        KernelPath::Neon => super::neon::gemm_w4(x, m, pw, out),
+        #[allow(unreachable_patterns)]
+        other => unreachable!("kernel path {other:?} is not compiled for this target"),
+    }
+}

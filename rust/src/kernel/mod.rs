@@ -25,7 +25,32 @@
 //! i8 weight *codes* and i32 accumulators, serving the `lw-i8` deployment
 //! backend ([`crate::backend::Int8Backend`]).  Its contract is stronger
 //! and simpler: integer accumulation is exact and associative (no rounding
-//! while the true sum fits i32), so no ordering discipline is needed.
+//! while the true sum fits i32), so no ordering discipline is needed.  A
+//! fourth, [`gemm_w4`] over [`PackedW4`], packs two 4-bit codes per byte in
+//! the same K-block-major geometry — half the weight bandwidth of the i8
+//! panels, which is the lever on large-K shapes where the panel stream, not
+//! the multiplies, bounds throughput.
+//!
+//! ## Runtime dispatch ([`dispatch`])
+//!
+//! The integer kernels are *runtime-dispatched*: [`kernel_path`] probes the
+//! CPU once (`is_x86_feature_detected!` / `is_aarch64_feature_detected!`,
+//! cached in a `OnceLock`) and [`gemm_i8`] / [`gemm_w4`] route to explicit
+//! u8×i8 dot-product micro-kernels — AVX2 `_mm256_maddubs_epi16`
+//! ([`avx2`]), AVX-512-VNNI `_mm256_dpbusd_epi32` ([`vnni`]), NEON
+//! `vdotq_s32` ([`neon`]) — falling back to the safe scalar twins
+//! everywhere else.  `QFT_KERNEL=scalar|avx2|vnni|neon` forces any path
+//! (panicking if the CPU lacks it, so a forced CI leg can never silently
+//! rot into the fallback).  Because integer accumulation is exact and
+//! associative, every path returns **bit-identical** results to the scalar
+//! kernel on every shape at any thread count — no tolerance; the per-ISA
+//! parity tests in `rust/tests/kernel.rs` pin it.
+//!
+//! These ISA modules are the only place in the crate where `unsafe`
+//! appears for kernels (see the crate-level policy in the README): every
+//! `unsafe` block is confined to `#[target_feature]` functions guarded by
+//! a runtime feature assert, carries a `SAFETY:` comment, and is pinned by
+//! a scalar-twin parity test.
 //!
 //! ## KC cache blocking
 //!
@@ -90,6 +115,19 @@
 
 use std::cell::RefCell;
 
+pub mod dispatch;
+
+#[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+mod avx2;
+#[cfg(target_arch = "aarch64")]
+mod neon;
+#[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+mod vnni;
+
+pub use dispatch::{
+    gemm_i8_with, gemm_w4_with, kernel_dispatch, kernel_path, supported_paths, KernelPath,
+};
+
 /// Auto-vectorization lane width the micro-kernel is written for: 8 f32s
 /// (one AVX2 `ymm`; on narrower ISAs the compiler splits the lane loop).
 pub const LANES: usize = 8;
@@ -121,13 +159,72 @@ fn for_each_kblock(k: usize, panels: usize, mut f: impl FnMut(usize, usize, usiz
     }
 }
 
-/// Shared (re)packer behind [`PackedW::pack_cols`] and
-/// [`PackedWi8::pack_cols`] — ONE copy of the K-block-major panel layout
-/// (see the module docs), so the f32 and i8 grids cannot drift
-/// geometrically.  Reuses the destination buffer when the total length is
-/// unchanged; pad lanes are re-zeroed explicitly because a warm buffer may
-/// be repacked at a different `(k, n)` of the same total length, leaving
-/// stale values where the padding (or a block boundary) now falls.
+/// [`for_each_kblock`] for the nibble-packed [`PackedW4`] buffer, whose
+/// per-(block, panel) sub-slice holds `kb.div_ceil(2) * NR` *bytes* (two
+/// codes per byte) instead of `kb * NR`.  Same ascending-`k0` walk, its own
+/// block-advance arithmetic — kept next to its sibling so the two cannot
+/// drift.
+#[inline(always)]
+fn for_each_kblock_w4(k: usize, panels: usize, mut f: impl FnMut(usize, usize, usize)) {
+    let (mut k0, mut boff) = (0usize, 0usize);
+    while k0 < k {
+        let kb = KC.min(k - k0);
+        f(k0, kb, boff);
+        boff += panels * kb.div_ceil(2) * NR;
+        k0 += kb;
+    }
+}
+
+/// Byte offset of logical element `(kk, lane)` inside one quad-interleaved
+/// i8 sub-panel of `kb` reduction rows (see [`PackedWi8`] for the layout).
+/// ONE copy of the placement arithmetic, shared by the packer,
+/// [`PackedWi8::col_sums`] and the layout tests.
+#[inline(always)]
+fn i8_sub_index(kb: usize, kk: usize, lane: usize) -> usize {
+    let nq = kb / 4;
+    if kk < 4 * nq {
+        (kk / 4 * NR + lane) * 4 + kk % 4
+    } else {
+        4 * nq * NR + (kk - 4 * nq) * NR + lane
+    }
+}
+
+/// `(byte offset, is_high_nibble)` of logical code `(kk, lane)` inside one
+/// nibble-packed W4 sub-panel of `kb` reduction rows (see [`PackedW4`] for
+/// the layout).  Shared by the packer, the scalar kernel's tail walk,
+/// [`PackedW4::unpack`] and the layout tests.
+#[inline(always)]
+fn w4_sub_index(kb: usize, kk: usize, lane: usize) -> (usize, bool) {
+    let noct = kb / 8;
+    if kk < 8 * noct {
+        let (o, j) = (kk / 8, kk % 8);
+        ((o * NR + lane) * 4 + j % 4, j >= 4)
+    } else {
+        let r = kk - 8 * noct;
+        (4 * noct * NR + r / 2 * NR + lane, r % 2 == 1)
+    }
+}
+
+/// Decode the low / high two's-complement nibble of a W4 byte.
+#[inline(always)]
+fn w4_lo(b: u8) -> i8 {
+    ((b << 4) as i8) >> 4
+}
+#[inline(always)]
+fn w4_hi(b: u8) -> i8 {
+    (b as i8) >> 4
+}
+
+/// The f32 (re)packer behind [`PackedW::pack_cols`] — the K-block-major
+/// panel layout (see the module docs) with rows K-major inside each
+/// sub-panel.  The integer packers ([`PackedWi8::pack_cols`],
+/// [`PackedW4::pack_cols`]) share the same block walk
+/// ([`for_each_kblock`] / [`for_each_kblock_w4`]) but interleave elements
+/// inside the sub-panel for the SIMD dot-product instructions.  Reuses the
+/// destination buffer when the total length is unchanged; pad lanes are
+/// re-zeroed explicitly because a warm buffer may be repacked at a
+/// different `(k, n)` of the same total length, leaving stale values where
+/// the padding (or a block boundary) now falls.
 fn pack_cols_blocked<T: Copy + Default>(
     data: &mut Vec<T>,
     w: &[T],
@@ -410,19 +507,47 @@ pub fn gemm(x: &[f32], m: usize, pw: &PackedW, out: &mut [f32]) {
 // ------------------------------------------------------------ integer twin
 
 /// Panel-packed **i8** weights — the integer twin of [`PackedW`], identical
-/// K-block-major panel geometry over `i8` weight *codes* instead of f32
+/// K-block-major *block* geometry over `i8` weight *codes* instead of f32
 /// values.  This is the storage the `lw` deployment grid actually implies:
 /// weight codes live in `[-7, 7]` (4 bits), so an i8 panel holds 4× the
 /// codes per cache line of the f32 layout (a [`KC`] sub-panel is 4 KiB),
 /// and [`gemm_i8`] accumulates them in i32 without any float rounding.
 /// Built by [`crate::backend::Int8Backend`] at prepare time; the f32 paths
 /// never touch it.
+///
+/// ## In-panel layout: K-quad interleaved
+///
+/// Inside one `(block, panel)` sub-slice the codes are *quad-interleaved*
+/// for the u8×i8 dot-product instructions (`vpdpbusd` / `maddubs` /
+/// `sdot`), which each consume **4 consecutive K-rows per output lane**:
+///
+/// ```text
+///   quads (kk < 4*(kb/4)):  sub[(kk/4 * NR + lane) * 4 + kk%4]
+///   tail  (kb % 4 rows)  :  sub[4*(kb/4)*NR + r*NR + lane]   (row-major)
+/// ```
+///
+/// — so a 32-byte SIMD load at `q*4*NR + lane0*4` yields 8 output lanes ×
+/// 4 K-rows, exactly one dot-product operand.  The sub-slice is still
+/// `kb * NR` bytes, so the block walk ([`for_each_kblock`]) is shared with
+/// the f32 layout unchanged; the tail rows only exist in the final block
+/// ([`KC`] is a multiple of 4) and every kernel handles them scalar.
+///
+/// ## The unsigned-rebias compensation (`ucomp`)
+///
+/// The x86 dot products are u8×i8: the SIMD kernels re-bias the stored
+/// signed activations `x_s = q - zp` to `u = x_s + 128` in-register (one
+/// XOR), compute `Σ u·w`, and subtract `128 · Σ w` afterwards.  That
+/// per-lane correction over each block's quad region is precomputed here
+/// at pack time (`ucomp[(block*panels + p)*NR + lane]`); the scalar and
+/// NEON kernels (signed×signed) never read it.
 #[derive(Clone, Debug, Default)]
 pub struct PackedWi8 {
     k: usize,
     n: usize,
-    /// Same K-block-major layout as the f32 `PackedW` buffer, in codes.
+    /// K-block-major blocks of quad-interleaved sub-panels (see above).
     data: Vec<i8>,
+    /// `128 · Σ_quad-region w[kk, lane]` per (block, panel, lane).
+    ucomp: Vec<i32>,
 }
 
 impl PackedWi8 {
@@ -435,13 +560,53 @@ impl PackedWi8 {
 
     /// (Re)pack columns `c0 .. c0 + ncols` of the row-major
     /// `[k, row_stride]` code matrix, reusing the buffer — the same column
-    /// slicing [`PackedW::pack_cols`] does for grouped convs.
+    /// slicing [`PackedW::pack_cols`] does for grouped convs.  Codes must
+    /// lie in `[-64, 64]`: the AVX2 kernel's `maddubs` i16 pair sums
+    /// saturate beyond `255·|w1| + 255·|w2|` = 32640, so the bound is a
+    /// pack-time invariant, not a per-call check (the deployment grids use
+    /// `[-7, 7]`, far inside it).
     pub fn pack_cols(&mut self, w: &[i8], k: usize, row_stride: usize, c0: usize, ncols: usize) {
         assert!(c0 + ncols <= row_stride, "columns {c0}+{ncols} out of stride {row_stride}");
         assert_eq!(w.len(), k * row_stride, "code buffer vs [k, row_stride]");
         self.k = k;
         self.n = ncols;
-        pack_cols_blocked(&mut self.data, w, k, row_stride, c0, ncols);
+        let panels = ncols.div_ceil(NR);
+        let len = panels * k * NR;
+        if self.data.len() != len {
+            self.data.clear();
+            self.data.resize(len, 0);
+        }
+        let nuc = k.div_ceil(KC) * panels * NR;
+        if self.ucomp.len() != nuc {
+            self.ucomp.clear();
+            self.ucomp.resize(nuc, 0);
+        }
+        for_each_kblock(k, panels, |k0, kb, boff| {
+            let b = k0 / KC;
+            for p in 0..panels {
+                let j0 = p * NR;
+                let nv = NR.min(ncols - j0);
+                let sub = &mut self.data[boff + p * kb * NR..boff + (p + 1) * kb * NR];
+                sub.fill(0);
+                for kk in 0..kb {
+                    let src = (k0 + kk) * row_stride + c0 + j0;
+                    for (lane, &c) in w[src..src + nv].iter().enumerate() {
+                        assert!((-64..=64).contains(&c), "i8 panel code {c} out of [-64, 64]");
+                        sub[i8_sub_index(kb, kk, lane)] = c;
+                    }
+                }
+                let uc = &mut self.ucomp[(b * panels + p) * NR..(b * panels + p + 1) * NR];
+                uc.fill(0);
+                for kk in 0..kb / 4 * 4 {
+                    for (lane, u) in uc.iter_mut().enumerate() {
+                        *u += sub[i8_sub_index(kb, kk, lane)] as i32;
+                    }
+                }
+                for u in uc.iter_mut() {
+                    *u *= 128;
+                }
+            }
+        });
     }
 
     /// Reduction depth (rows of the packed matrix).
@@ -458,7 +623,7 @@ impl PackedWi8 {
     /// zero-point correction term: an activation stored offset by `zp`
     /// contributes `zp * col_sum` extra per output, which callers fold into
     /// the integer bias once at prepare time.  Walks the K-block-major
-    /// layout, ignoring pad lanes.
+    /// quad-interleaved layout, ignoring pad lanes.
     pub fn col_sums(&self) -> Vec<i32> {
         let mut sums = vec![0i32; self.n];
         let panels = self.n.div_ceil(NR);
@@ -468,9 +633,8 @@ impl PackedWi8 {
                 let nv = NR.min(self.n - j0);
                 let sub = &self.data[boff + p * kb * NR..boff + (p + 1) * kb * NR];
                 for kk in 0..kb {
-                    let row = &sub[kk * NR..kk * NR + nv];
-                    for (s, &c) in sums[j0..j0 + nv].iter_mut().zip(row) {
-                        *s += c as i32;
+                    for (lane, s) in sums[j0..j0 + nv].iter_mut().enumerate() {
+                        *s += sub[i8_sub_index(kb, kk, lane)] as i32;
                     }
                 }
             }
@@ -484,8 +648,10 @@ impl PackedWi8 {
     }
 }
 
-/// One `R`×[`NR`] i32 register tile over one K-block: the integer mirror
-/// of [`micro_tile`].  No zero-activation skip — in integer arithmetic
+/// One `R`×[`NR`] i32 register tile over one K-block of the
+/// quad-interleaved i8 layout (the scalar twin every SIMD path is proven
+/// against): quads stream 4 contiguous weight bytes per lane, the `kb % 4`
+/// tail rows go row-major.  No zero-activation skip — in integer arithmetic
 /// `0 * w` is exactly 0 for every representable `w` (there is no NaN/inf
 /// to mask), so the branch the f32 kernel needs for correctness would only
 /// cost the i8 kernel its vectorization.  The inter-block spill/reload is
@@ -509,8 +675,24 @@ fn micro_tile_i8<const R: usize>(
             accr[..nv].copy_from_slice(&out[r * n_stride..r * n_stride + nv]);
         }
     }
-    for kk in 0..kb {
-        let wrow = &panel[kk * NR..kk * NR + NR];
+    let nq = kb / 4;
+    for q in 0..nq {
+        let base = q * 4 * NR;
+        for r in 0..R {
+            let xq = &xr[r][4 * q..4 * q + 4];
+            let (x0, x1, x2, x3) = (xq[0] as i32, xq[1] as i32, xq[2] as i32, xq[3] as i32);
+            for (lane, a) in acc[r].iter_mut().enumerate() {
+                let wq = &panel[base + lane * 4..base + lane * 4 + 4];
+                *a += x0 * wq[0] as i32
+                    + x1 * wq[1] as i32
+                    + x2 * wq[2] as i32
+                    + x3 * wq[3] as i32;
+            }
+        }
+    }
+    for kk in 4 * nq..kb {
+        let roff = 4 * nq * NR + (kk - 4 * nq) * NR;
+        let wrow = &panel[roff..roff + NR];
         for r in 0..R {
             let xv = xr[r][kk] as i32;
             for (a, &wv) in acc[r].iter_mut().zip(wrow) {
@@ -537,16 +719,29 @@ fn micro_narrow_i8(
     nv: usize,
     first: bool,
 ) {
+    let nq = kb / 4;
     for i in 0..m {
         let xrow = &x[i * xstride..i * xstride + kb];
         let mut acc = [0i32; LANES];
         if !first {
             acc[..nv].copy_from_slice(&out[i * n_stride..i * n_stride + nv]);
         }
-        for (kk, &xv) in xrow.iter().enumerate() {
-            let xv = xv as i32;
-            let wrow = &panel[kk * NR..kk * NR + nv];
-            for (a, &wv) in acc[..nv].iter_mut().zip(wrow) {
+        for q in 0..nq {
+            let base = q * 4 * NR;
+            let xq = &xrow[4 * q..4 * q + 4];
+            let (x0, x1, x2, x3) = (xq[0] as i32, xq[1] as i32, xq[2] as i32, xq[3] as i32);
+            for (lane, a) in acc[..nv].iter_mut().enumerate() {
+                let wq = &panel[base + lane * 4..base + lane * 4 + 4];
+                *a += x0 * wq[0] as i32
+                    + x1 * wq[1] as i32
+                    + x2 * wq[2] as i32
+                    + x3 * wq[3] as i32;
+            }
+        }
+        for kk in 4 * nq..kb {
+            let xv = xrow[kk] as i32;
+            let roff = 4 * nq * NR + (kk - 4 * nq) * NR;
+            for (a, &wv) in acc[..nv].iter_mut().zip(&panel[roff..roff + nv]) {
                 *a += xv * wv as i32;
             }
         }
@@ -555,24 +750,20 @@ fn micro_narrow_i8(
 }
 
 /// Write-mode i8×i8→i32 GEMM: `out[m, n] = x[m, k] @ w` with `w` pre-packed
-/// as i8 codes and every product widened to i32 before accumulation.  Same
-/// K-blocked loop structure as the f32 [`gemm`] (one generic walker drives
-/// both), but the result is *exact*: as long as the true sum fits i32 there
-/// is no rounding at all, and integer addition is associative, so any
-/// blocking/vectorization the compiler picks yields bit-identical output.
-/// The `lw` deployment shapes are far inside the safe range (|x| ≤ 255,
-/// |w| ≤ 7 ⇒ k up to ~1.2M rows before i32 could saturate).
+/// as i8 codes and every product widened to i32 before accumulation.  The
+/// result is *exact*: as long as the true sum fits i32 there is no rounding
+/// at all, and integer addition is associative, so every dispatch path
+/// (scalar twin, AVX2, VNNI, NEON — see [`dispatch`]) yields bit-identical
+/// output.  The `lw` deployment shapes are far inside the safe range
+/// (|x| ≤ 255, |w| ≤ 7 ⇒ k up to ~1.2M rows before i32 could saturate).
 pub fn gemm_i8(x: &[i8], m: usize, pw: &PackedWi8, out: &mut [i32]) {
+    gemm_i8_with(kernel_path(), x, m, pw, out)
+}
+
+/// The safe scalar `gemm_i8` twin — the K-blocked walker over the
+/// quad-interleaved panels, ground truth for every SIMD path.
+fn gemm_i8_scalar(x: &[i8], m: usize, pw: &PackedWi8, out: &mut [i32]) {
     let (k, n) = (pw.k, pw.n);
-    debug_assert_eq!(x.len(), m * k, "x vs [m, k]");
-    debug_assert_eq!(out.len(), m * n, "out vs [m, n]");
-    if m == 0 || n == 0 {
-        return;
-    }
-    if k == 0 {
-        out.fill(0);
-        return;
-    }
     walk_blocked_panels(
         &pw.data,
         m,
@@ -594,6 +785,252 @@ pub fn gemm_i8(x: &[i8], m: usize, pw: &PackedWi8, out: &mut [i32]) {
             micro_narrow_i8(&x[k0..], m, k, sub.len() / NR, sub, o, n, nv, first)
         },
     );
+}
+
+// ------------------------------------------------------------ W4 panels
+
+/// Nibble-packed **4-bit** weight panels — two codes per byte in the same
+/// K-block-major panel geometry as [`PackedWi8`], *halving* weight
+/// bandwidth.  The paper's grids are ≤4-bit weight codes (`[-7, 7]`), so a
+/// byte per code wastes half the panel stream; on large-K KC-blocked
+/// shapes the stream, not the multiplies, bounds throughput, and W4 panels
+/// let them run from L2 instead of memory.  Built by
+/// [`crate::backend::Int8Backend`] when the codebook fits 4 bits
+/// (two's-complement nibbles, `[-8, 7]`).
+///
+/// ## Byte layout (per `(block, panel)` sub-slice)
+///
+/// Octets — groups of 8 K-rows — interleave so one in-register nibble
+/// unpack yields two dot-product quad operands:
+///
+/// ```text
+///   octet o, lane L, byte j (= (o*NR + L)*4 + j,  j in 0..4):
+///     low  nibble = code[k0 + 8o + j,     lane L]   (K-quad j   of o)
+///     high nibble = code[k0 + 8o + 4 + j, lane L]   (K-quad j+4 of o)
+///   tail (kb % 8 rows, pair-packed row-major after the octets):
+///     byte[4*(kb/8)*NR + r/2*NR + L]: low = row r even, high = row r odd
+/// ```
+///
+/// — a 32-byte load covers 8 lanes × 4 bytes; `v & 0x0F` is the
+/// quad-interleaved i8 operand for K-rows `8o..8o+4` and `(v >> 4) & 0x0F`
+/// the one for `8o+4..8o+8`, each sign-fixed bytewise via `(nib ^ 8) - 8`.
+/// The sub-slice is `kb.div_ceil(2) * NR` bytes ([`for_each_kblock_w4`]);
+/// tail rows only exist in the final block and every kernel handles them
+/// scalar.  `ucomp` mirrors [`PackedWi8`]'s unsigned-rebias correction
+/// over each block's octet region.
+#[derive(Clone, Debug, Default)]
+pub struct PackedW4 {
+    k: usize,
+    n: usize,
+    /// K-block-major blocks of nibble-packed sub-panels (see above).
+    data: Vec<u8>,
+    /// `128 · Σ_octet-region code[kk, lane]` per (block, panel, lane).
+    ucomp: Vec<i32>,
+}
+
+impl PackedW4 {
+    /// Pack a whole row-major `[k, n]` code matrix.
+    pub fn pack(w: &[i8], k: usize, n: usize) -> PackedW4 {
+        let mut pw = PackedW4::default();
+        pw.pack_cols(w, k, n, 0, n);
+        pw
+    }
+
+    /// (Re)pack columns `c0 .. c0 + ncols` of the row-major
+    /// `[k, row_stride]` code matrix — the same grouped-conv column slicing
+    /// as [`PackedWi8::pack_cols`].  Codes must fit the two's-complement
+    /// nibble range `[-8, 7]` (the deployment grids use `[-7, 7]`).
+    pub fn pack_cols(&mut self, w: &[i8], k: usize, row_stride: usize, c0: usize, ncols: usize) {
+        assert!(c0 + ncols <= row_stride, "columns {c0}+{ncols} out of stride {row_stride}");
+        assert_eq!(w.len(), k * row_stride, "code buffer vs [k, row_stride]");
+        self.k = k;
+        self.n = ncols;
+        let panels = ncols.div_ceil(NR);
+        let len = panels * k.div_ceil(2) * NR;
+        if self.data.len() != len {
+            self.data.clear();
+            self.data.resize(len, 0);
+        }
+        let nuc = k.div_ceil(KC) * panels * NR;
+        if self.ucomp.len() != nuc {
+            self.ucomp.clear();
+            self.ucomp.resize(nuc, 0);
+        }
+        for_each_kblock_w4(k, panels, |k0, kb, boff| {
+            let b = k0 / KC;
+            let pbytes = kb.div_ceil(2) * NR;
+            let octrows = kb / 8 * 8;
+            for p in 0..panels {
+                let j0 = p * NR;
+                let nv = NR.min(ncols - j0);
+                let sub = &mut self.data[boff + p * pbytes..boff + (p + 1) * pbytes];
+                sub.fill(0);
+                let uc = &mut self.ucomp[(b * panels + p) * NR..(b * panels + p + 1) * NR];
+                uc.fill(0);
+                for kk in 0..kb {
+                    let src = (k0 + kk) * row_stride + c0 + j0;
+                    for (lane, &c) in w[src..src + nv].iter().enumerate() {
+                        assert!((-8..=7).contains(&c), "W4 code {c} out of nibble range [-8, 7]");
+                        let (byte, hi) = w4_sub_index(kb, kk, lane);
+                        let nib = (c as u8) & 0x0F;
+                        sub[byte] |= if hi { nib << 4 } else { nib };
+                        if kk < octrows {
+                            uc[lane] += c as i32;
+                        }
+                    }
+                }
+                for u in uc.iter_mut() {
+                    *u *= 128;
+                }
+            }
+        });
+    }
+
+    /// Reduction depth (rows of the packed matrix).
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Output columns (un-padded logical width).
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Decode back to the dense row-major `[k, n]` code matrix — the
+    /// round-trip half of the pack/unpack property tests, and the one
+    /// decode loop [`PackedW4::col_sums`] reuses.
+    pub fn unpack(&self) -> Vec<i8> {
+        let mut out = vec![0i8; self.k * self.n];
+        let panels = self.n.div_ceil(NR);
+        for_each_kblock_w4(self.k, panels, |k0, kb, boff| {
+            let pbytes = kb.div_ceil(2) * NR;
+            for p in 0..panels {
+                let j0 = p * NR;
+                let nv = NR.min(self.n - j0);
+                let sub = &self.data[boff + p * pbytes..boff + (p + 1) * pbytes];
+                for kk in 0..kb {
+                    for lane in 0..nv {
+                        let (byte, hi) = w4_sub_index(kb, kk, lane);
+                        let b = sub[byte];
+                        out[(k0 + kk) * self.n + j0 + lane] =
+                            if hi { w4_hi(b) } else { w4_lo(b) };
+                    }
+                }
+            }
+        });
+        out
+    }
+
+    /// Per-logical-column code sums — the same zero-point fold term as
+    /// [`PackedWi8::col_sums`], decoded from the nibble panels.
+    pub fn col_sums(&self) -> Vec<i32> {
+        let mut sums = vec![0i32; self.n];
+        if self.n == 0 {
+            return sums;
+        }
+        for row in self.unpack().chunks_exact(self.n) {
+            for (s, &c) in sums.iter_mut().zip(row) {
+                *s += c as i32;
+            }
+        }
+        sums
+    }
+
+    /// Bytes held by the packed buffer (half the i8 panels).
+    pub fn packed_bytes(&self) -> usize {
+        self.data.len()
+    }
+}
+
+/// Write-mode W4×i8→i32 GEMM: `out[m, n] = x[m, k] @ w` with `w` packed as
+/// two 4-bit codes per byte ([`PackedW4`]).  Decode happens in-register
+/// (shift/mask + sign-fix) inside the dispatched micro-kernel; integer
+/// accumulation is exact, so every path is bit-identical to the scalar
+/// twin — and to [`gemm_i8`] over the same codes.
+pub fn gemm_w4(x: &[i8], m: usize, pw: &PackedW4, out: &mut [i32]) {
+    gemm_w4_with(kernel_path(), x, m, pw, out)
+}
+
+/// The safe scalar `gemm_w4` twin: the identical K-block/panel walk with
+/// scalar nibble decode, ground truth for the SIMD W4 paths.
+fn gemm_w4_scalar(x: &[i8], m: usize, pw: &PackedW4, out: &mut [i32]) {
+    let (k, n) = (pw.k, pw.n);
+    let panels = n.div_ceil(NR);
+    for_each_kblock_w4(k, panels, |k0, kb, boff| {
+        let pbytes = kb.div_ceil(2) * NR;
+        for p in 0..panels {
+            let j0 = p * NR;
+            let nv = NR.min(n - j0);
+            let sub = &pw.data[boff + p * pbytes..boff + (p + 1) * pbytes];
+            micro_w4(&x[k0..], m, k, kb, sub, &mut out[j0..], n, nv, k0 == 0);
+        }
+    });
+}
+
+/// Scalar W4 micro-kernel over one `(block, panel)`: every output row
+/// reduced across the block's `kb` K-rows with scalar nibble decode —
+/// octets first (4 low-nibble + 4 high-nibble codes per lane byte group),
+/// then the pair-packed `kb % 8` tail.  Shared by the scalar twin and the
+/// SIMD paths' narrow-panel (`nv <` [`LANES`]) fallback.
+#[allow(clippy::too_many_arguments)]
+fn micro_w4(
+    x: &[i8],
+    m: usize,
+    xstride: usize,
+    kb: usize,
+    panel: &[u8],
+    out: &mut [i32],
+    n_stride: usize,
+    nv: usize,
+    first: bool,
+) {
+    let noct = kb / 8;
+    for i in 0..m {
+        let xrow = &x[i * xstride..i * xstride + kb];
+        let mut acc = [0i32; NR];
+        if !first {
+            acc[..nv].copy_from_slice(&out[i * n_stride..i * n_stride + nv]);
+        }
+        for o in 0..noct {
+            let base = o * 4 * NR;
+            let xo = &xrow[8 * o..8 * o + 8];
+            for (lane, a) in acc[..nv].iter_mut().enumerate() {
+                let wb = &panel[base + lane * 4..base + lane * 4 + 4];
+                let mut s = 0i32;
+                for j in 0..4 {
+                    s += xo[j] as i32 * w4_lo(wb[j]) as i32;
+                    s += xo[4 + j] as i32 * w4_hi(wb[j]) as i32;
+                }
+                *a += s;
+            }
+        }
+        for kk in 8 * noct..kb {
+            let r = kk - 8 * noct;
+            let xv = xrow[kk] as i32;
+            let roff = 4 * noct * NR + r / 2 * NR;
+            for (lane, a) in acc[..nv].iter_mut().enumerate() {
+                let b = panel[roff + lane];
+                let c = if r % 2 == 0 { w4_lo(b) } else { w4_hi(b) };
+                *a += xv * c as i32;
+            }
+        }
+        out[i * n_stride..i * n_stride + nv].copy_from_slice(&acc[..nv]);
+    }
+}
+
+/// Merge one spilled accumulator row into `out` — write-mode on the first
+/// K-block, accumulate after.  The ragged-panel / K-tail exit every SIMD
+/// row kernel shares.
+#[cfg(any(target_arch = "x86", target_arch = "x86_64", target_arch = "aarch64"))]
+#[inline(always)]
+fn merge_spill(orow: &mut [i32], buf: &[i32; NR], nv: usize, first: bool) {
+    if first {
+        orow[..nv].copy_from_slice(&buf[..nv]);
+    } else {
+        for (o, v) in orow[..nv].iter_mut().zip(buf) {
+            *o += v;
+        }
+    }
 }
 
 thread_local! {
@@ -922,5 +1359,159 @@ mod tests {
             .collect();
         let want = PackedW::pack(&dense, k, 3);
         assert_eq!(sliced.data, want.data);
+    }
+
+    #[test]
+    fn i8_quad_layout_pin() {
+        // pin the quad-interleave placement byte-for-byte: quads first
+        // (4 K-rows per lane), then the kb % 4 tail rows row-major — and
+        // the ucomp table as 128 * the quad-region column sums per block
+        let (k, n) = (KC + 7, NR + 3);
+        let w = rand_codes(k * n, 31);
+        let pw = PackedWi8::pack(&w, k, n);
+        let panels = n.div_ceil(NR);
+        for_each_kblock(k, panels, |k0, kb, boff| {
+            let b = k0 / KC;
+            for p in 0..panels {
+                let j0 = p * NR;
+                let nv = NR.min(n - j0);
+                let sub = &pw.data[boff + p * kb * NR..boff + (p + 1) * kb * NR];
+                for kk in 0..kb {
+                    for lane in 0..nv {
+                        let want = w[(k0 + kk) * n + j0 + lane];
+                        assert_eq!(sub[i8_sub_index(kb, kk, lane)], want, "kk={kk} lane={lane}");
+                    }
+                }
+                let uc = &pw.ucomp[(b * panels + p) * NR..(b * panels + p + 1) * NR];
+                for (lane, &u) in uc.iter().enumerate() {
+                    let want: i32 = if lane < nv {
+                        (0..kb / 4 * 4).map(|kk| w[(k0 + kk) * n + j0 + lane] as i32).sum()
+                    } else {
+                        0
+                    };
+                    assert_eq!(u, 128 * want, "b={b} p={p} lane={lane}");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn w4_pack_unpack_round_trips() {
+        // every tail class: k % 2 != 0 (half-filled final byte), k % 8 != 0
+        // (pair-packed tail rows), k % KC != 0 (ragged final block), k > KC
+        for &(k, n) in &[
+            (1usize, 1usize),
+            (7, NR + 3),
+            (8, NR),
+            (9, 2 * NR + 1),
+            (KC, NR + 5),
+            (KC + 13, NR - 1),
+            (2 * KC + 5, 2 * NR + 7),
+        ] {
+            let w = rand_codes(k * n, (k * 7 + n) as u64);
+            let pw = PackedW4::pack(&w, k, n);
+            assert_eq!((pw.k(), pw.n()), (k, n));
+            assert_eq!(pw.packed_bytes(), n.div_ceil(NR) * k.div_ceil(2) * NR);
+            assert_eq!(pw.unpack(), w, "k={k} n={n}");
+            let want: Vec<i32> = (0..n)
+                .map(|j| (0..k).map(|kk| w[kk * n + j] as i32).sum())
+                .collect();
+            assert_eq!(pw.col_sums(), want, "k={k} n={n}");
+        }
+    }
+
+    #[test]
+    fn w4_full_nibble_range_round_trips() {
+        // all 16 two's-complement nibble values in both byte halves
+        let n = NR;
+        let k = 32;
+        let w: Vec<i8> = (0..k * n).map(|i| (i % 16) as i8 - 8).collect();
+        let pw = PackedW4::pack(&w, k, n);
+        assert_eq!(pw.unpack(), w);
+    }
+
+    #[test]
+    fn w4_pack_cols_slices_groups() {
+        // the grouped-conv column slice must equal packing the dense copy
+        let (k, stride) = (11usize, 8usize);
+        let w = rand_codes(k * stride, 19);
+        let mut sliced = PackedW4::default();
+        sliced.pack_cols(&w, k, stride, 2, 4);
+        let dense: Vec<i8> = (0..k)
+            .flat_map(|kk| w[kk * stride + 2..kk * stride + 6].to_vec())
+            .collect();
+        let want = PackedW4::pack(&dense, k, 4);
+        assert_eq!(sliced.data, want.data);
+        assert_eq!(sliced.ucomp, want.ucomp);
+    }
+
+    #[test]
+    fn w4_kernel_matches_naive_and_i8() {
+        // gemm_w4 (dispatched) and its scalar twin vs the naive i32
+        // reference AND gemm_i8 over the same codes — bit-identical, with
+        // odd-K tails and KC straddles
+        for &(m, k, n) in &[
+            (1usize, 1usize, 1usize),
+            (4, 7, NR),
+            (5, 9, NR + 1),
+            (3, 16, NR - 1),
+            (17, 33, 40),
+            (9, 9, 1), // depthwise: one valid lane per panel
+            (4, KC + 3, NR),
+            (6, 2 * KC + 11, NR + 2),
+            (2, 3 * KC, 1),
+        ] {
+            let x = rand_codes(m * k, (m * 37 + k * 11 + n) as u64);
+            let w = rand_codes(k * n, (m + k * 3 + n * 17) as u64);
+            let pw4 = PackedW4::pack(&w, k, n);
+            let pw8 = PackedWi8::pack(&w, k, n);
+            let want = ref_out_i8(&x, m, k, &w, n);
+            let mut got = vec![777i32; m * n];
+            gemm_w4(&x, m, &pw4, &mut got);
+            assert_eq!(got, want, "dispatched m={m} k={k} n={n}");
+            let mut got_s = vec![777i32; m * n];
+            gemm_w4_with(KernelPath::Scalar, &x, m, &pw4, &mut got_s);
+            assert_eq!(got_s, want, "scalar m={m} k={k} n={n}");
+            let mut got8 = vec![777i32; m * n];
+            gemm_i8(&x, m, &pw8, &mut got8);
+            assert_eq!(got, got8, "w4 vs i8 m={m} k={k} n={n}");
+        }
+    }
+
+    #[test]
+    fn w4_degenerate_shapes_are_safe() {
+        let pw = PackedW4::pack(&[], 0, 3);
+        let mut out = vec![9i32; 2 * 3];
+        gemm_w4(&[], 2, &pw, &mut out);
+        assert_eq!(out, vec![0; 6]);
+        let pw = PackedW4::pack(&[], 4, 0);
+        gemm_w4(&rand_codes(8, 1), 2, &pw, &mut []);
+        let pw = PackedW4::pack(&rand_codes(8, 2), 4, 2);
+        gemm_w4(&[], 0, &pw, &mut []);
+        assert!(PackedW4::pack(&[], 4, 0).col_sums().is_empty());
+    }
+
+    #[test]
+    fn every_supported_path_is_bit_identical_in_module() {
+        // the cheap in-module parity smoke (the full sweep lives in
+        // rust/tests/kernel.rs): every path this CPU supports vs scalar
+        let (m, k, n) = (5usize, KC + 9, NR + 3);
+        let x = rand_codes(m * k, 61);
+        let w = rand_codes(k * n, 62);
+        let pw8 = PackedWi8::pack(&w, k, n);
+        let pw4 = PackedW4::pack(&w, k, n);
+        let mut want8 = vec![0i32; m * n];
+        gemm_i8_with(KernelPath::Scalar, &x, m, &pw8, &mut want8);
+        let mut want4 = vec![0i32; m * n];
+        gemm_w4_with(KernelPath::Scalar, &x, m, &pw4, &mut want4);
+        assert_eq!(want8, want4);
+        for path in supported_paths() {
+            let mut got = vec![777i32; m * n];
+            gemm_i8_with(path, &x, m, &pw8, &mut got);
+            assert_eq!(got, want8, "i8 path {path:?}");
+            let mut got = vec![777i32; m * n];
+            gemm_w4_with(path, &x, m, &pw4, &mut got);
+            assert_eq!(got, want4, "w4 path {path:?}");
+        }
     }
 }

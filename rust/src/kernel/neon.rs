@@ -1,0 +1,225 @@
+//! NEON integer kernels (aarch64 `dotprod`) — `vdotq_s32` signed×signed
+//! dot products, four `int32x4_t` accumulators per output row.
+//!
+//! Unlike the x86 paths there is no unsigned rebias and no compensation
+//! term: `vdotq_s32` multiplies signed i8 directly, so the stored
+//! activations are consumed as-is and the `ucomp` table in the packs is
+//! simply ignored.  The layout walk, tail handling and narrow-panel
+//! fallback mirror [`super::avx2`].  Same `unsafe` policy: runtime
+//! feature-asserted safe wrappers, `SAFETY:` comments on every block,
+//! bit-identical to the scalar twin by test (integer accumulation is
+//! exact, so ordering is free).
+#![allow(unsafe_code)]
+
+use std::arch::aarch64::*;
+
+use super::{
+    for_each_kblock, for_each_kblock_w4, merge_spill, micro_narrow_i8, micro_w4, w4_hi, w4_lo,
+    PackedW4, PackedWi8, LANES, NR,
+};
+
+fn assert_dotprod() {
+    assert!(
+        std::arch::is_aarch64_feature_detected!("dotprod"),
+        "neon kernel dispatched without the dotprod feature"
+    );
+}
+
+/// Safe entry: assert `dotprod` once, then run the gated kernel.
+pub(super) fn gemm_i8(x: &[i8], m: usize, pw: &PackedWi8, out: &mut [i32]) {
+    assert_dotprod();
+    // SAFETY: dotprod support was just asserted at runtime — the only
+    // precondition of the target_feature function.
+    unsafe { gemm_i8_neon(x, m, pw, out) }
+}
+
+/// Safe entry for the W4 kernel — same runtime gate as [`gemm_i8`].
+pub(super) fn gemm_w4(x: &[i8], m: usize, pw: &PackedW4, out: &mut [i32]) {
+    assert_dotprod();
+    // SAFETY: dotprod support was just asserted at runtime — the only
+    // precondition of the target_feature function.
+    unsafe { gemm_w4_neon(x, m, pw, out) }
+}
+
+/// The K-blocked panel walk over NEON row kernels.
+#[target_feature(enable = "dotprod")]
+unsafe fn gemm_i8_neon(x: &[i8], m: usize, pw: &PackedWi8, out: &mut [i32]) {
+    let (k, n) = (pw.k, pw.n);
+    let panels = n.div_ceil(NR);
+    for_each_kblock(k, panels, |k0, kb, boff| {
+        let first = k0 == 0;
+        for p in 0..panels {
+            let j0 = p * NR;
+            let nv = NR.min(n - j0);
+            let sub = &pw.data[boff + p * kb * NR..boff + (p + 1) * kb * NR];
+            if nv < LANES {
+                micro_narrow_i8(&x[k0..], m, k, kb, sub, &mut out[j0..], n, nv, first);
+                continue;
+            }
+            for i in 0..m {
+                let xrow = &x[i * k + k0..i * k + k0 + kb];
+                // SAFETY: dotprod is enabled for this caller (same
+                // target_feature), and `out[i*n + j0..]` holds at least
+                // `nv` elements for every row `i < m`.
+                unsafe { row_i8(xrow, kb, sub, &mut out[i * n + j0..], nv, first) };
+            }
+        }
+    });
+}
+
+/// One output row over one i8 `(block, panel)`: `vdotq_s32` per quad and
+/// lane group, signed activations straight from memory.
+#[target_feature(enable = "dotprod")]
+unsafe fn row_i8(xrow: &[i8], kb: usize, sub: &[i8], orow: &mut [i32], nv: usize, first: bool) {
+    let nq = kb / 4;
+    // SAFETY: in-bounds by layout — `sub` holds `kb * NR` bytes (`nq`
+    // quads of 64 bytes plus the tail rows), `xrow` holds `kb` bytes,
+    // and callers guarantee `orow` holds at least `nv` i32s.  NEON loads
+    // and stores are unaligned-tolerant.
+    unsafe {
+        let mut acc0 = vdupq_n_s32(0);
+        let mut acc1 = vdupq_n_s32(0);
+        let mut acc2 = vdupq_n_s32(0);
+        let mut acc3 = vdupq_n_s32(0);
+        let xp = xrow.as_ptr();
+        let wp = sub.as_ptr();
+        for q in 0..nq {
+            let xq = (xp.add(4 * q) as *const u32).read_unaligned();
+            let xv = vreinterpretq_s8_u32(vdupq_n_u32(xq));
+            acc0 = vdotq_s32(acc0, vld1q_s8(wp.add(64 * q)), xv);
+            acc1 = vdotq_s32(acc1, vld1q_s8(wp.add(64 * q + 16)), xv);
+            acc2 = vdotq_s32(acc2, vld1q_s8(wp.add(64 * q + 32)), xv);
+            acc3 = vdotq_s32(acc3, vld1q_s8(wp.add(64 * q + 48)), xv);
+        }
+        if kb == 4 * nq && nv == NR {
+            let op = orow.as_mut_ptr();
+            if !first {
+                acc0 = vaddq_s32(acc0, vld1q_s32(op));
+                acc1 = vaddq_s32(acc1, vld1q_s32(op.add(4)));
+                acc2 = vaddq_s32(acc2, vld1q_s32(op.add(8)));
+                acc3 = vaddq_s32(acc3, vld1q_s32(op.add(12)));
+            }
+            vst1q_s32(op, acc0);
+            vst1q_s32(op.add(4), acc1);
+            vst1q_s32(op.add(8), acc2);
+            vst1q_s32(op.add(12), acc3);
+            return;
+        }
+        let mut buf = [0i32; NR];
+        vst1q_s32(buf.as_mut_ptr(), acc0);
+        vst1q_s32(buf.as_mut_ptr().add(4), acc1);
+        vst1q_s32(buf.as_mut_ptr().add(8), acc2);
+        vst1q_s32(buf.as_mut_ptr().add(12), acc3);
+        for kk in 4 * nq..kb {
+            let xv = xrow[kk] as i32;
+            let roff = 4 * nq * NR + (kk - 4 * nq) * NR;
+            for (lane, a) in buf.iter_mut().enumerate() {
+                *a += xv * sub[roff + lane] as i32;
+            }
+        }
+        merge_spill(orow, &buf, nv, first);
+    }
+}
+
+/// The K-blocked panel walk over NEON W4 row kernels.
+#[target_feature(enable = "dotprod")]
+unsafe fn gemm_w4_neon(x: &[i8], m: usize, pw: &PackedW4, out: &mut [i32]) {
+    let (k, n) = (pw.k, pw.n);
+    let panels = n.div_ceil(NR);
+    for_each_kblock_w4(k, panels, |k0, kb, boff| {
+        let first = k0 == 0;
+        let pbytes = kb.div_ceil(2) * NR;
+        for p in 0..panels {
+            let j0 = p * NR;
+            let nv = NR.min(n - j0);
+            let sub = &pw.data[boff + p * pbytes..boff + (p + 1) * pbytes];
+            if nv < LANES {
+                micro_w4(&x[k0..], m, k, kb, sub, &mut out[j0..], n, nv, first);
+                continue;
+            }
+            for i in 0..m {
+                let xrow = &x[i * k + k0..i * k + k0 + kb];
+                // SAFETY: dotprod is enabled for this caller (same
+                // target_feature), and `out[i*n + j0..]` holds at least
+                // `nv` elements for every row `i < m`.
+                unsafe { row_w4(xrow, kb, sub, &mut out[i * n + j0..], nv, first) };
+            }
+        }
+    });
+}
+
+/// Sign-extend the low nibbles of 16 packed lanes: `(nib ^ 8) - 8`.
+#[target_feature(enable = "dotprod")]
+#[inline]
+unsafe fn sign4(v: uint8x16_t) -> int8x16_t {
+    // SAFETY: pure register arithmetic; the caller has NEON enabled.
+    unsafe { vsubq_s8(vreinterpretq_s8_u8(veorq_u8(v, vdupq_n_u8(8))), vdupq_n_s8(8)) }
+}
+
+/// One output row over one W4 `(block, panel)`: nibble unpack with
+/// `vandq_u8` / `vshrq_n_u8`, then `vdotq_s32` per half-octet.
+#[target_feature(enable = "dotprod")]
+unsafe fn row_w4(xrow: &[i8], kb: usize, sub: &[u8], orow: &mut [i32], nv: usize, first: bool) {
+    let noct = kb / 8;
+    // SAFETY: in-bounds by layout — `sub` holds `kb.div_ceil(2) * NR`
+    // bytes (`noct` octets of 64 bytes plus the pair-packed tail), `xrow`
+    // holds `kb` bytes, and callers guarantee `orow` holds at least `nv`
+    // i32s.  NEON loads and stores are unaligned-tolerant.
+    unsafe {
+        let lomask = vdupq_n_u8(0x0F);
+        let mut acc0 = vdupq_n_s32(0);
+        let mut acc1 = vdupq_n_s32(0);
+        let mut acc2 = vdupq_n_s32(0);
+        let mut acc3 = vdupq_n_s32(0);
+        let xp = xrow.as_ptr();
+        let wp = sub.as_ptr();
+        for o in 0..noct {
+            let xlo = (xp.add(8 * o) as *const u32).read_unaligned();
+            let xhi = (xp.add(8 * o + 4) as *const u32).read_unaligned();
+            let xl = vreinterpretq_s8_u32(vdupq_n_u32(xlo));
+            let xh = vreinterpretq_s8_u32(vdupq_n_u32(xhi));
+            let v0 = vld1q_u8(wp.add(64 * o));
+            let v1 = vld1q_u8(wp.add(64 * o + 16));
+            let v2 = vld1q_u8(wp.add(64 * o + 32));
+            let v3 = vld1q_u8(wp.add(64 * o + 48));
+            acc0 = vdotq_s32(acc0, sign4(vandq_u8(v0, lomask)), xl);
+            acc1 = vdotq_s32(acc1, sign4(vandq_u8(v1, lomask)), xl);
+            acc2 = vdotq_s32(acc2, sign4(vandq_u8(v2, lomask)), xl);
+            acc3 = vdotq_s32(acc3, sign4(vandq_u8(v3, lomask)), xl);
+            acc0 = vdotq_s32(acc0, sign4(vshrq_n_u8(v0, 4)), xh);
+            acc1 = vdotq_s32(acc1, sign4(vshrq_n_u8(v1, 4)), xh);
+            acc2 = vdotq_s32(acc2, sign4(vshrq_n_u8(v2, 4)), xh);
+            acc3 = vdotq_s32(acc3, sign4(vshrq_n_u8(v3, 4)), xh);
+        }
+        if kb == 8 * noct && nv == NR {
+            let op = orow.as_mut_ptr();
+            if !first {
+                acc0 = vaddq_s32(acc0, vld1q_s32(op));
+                acc1 = vaddq_s32(acc1, vld1q_s32(op.add(4)));
+                acc2 = vaddq_s32(acc2, vld1q_s32(op.add(8)));
+                acc3 = vaddq_s32(acc3, vld1q_s32(op.add(12)));
+            }
+            vst1q_s32(op, acc0);
+            vst1q_s32(op.add(4), acc1);
+            vst1q_s32(op.add(8), acc2);
+            vst1q_s32(op.add(12), acc3);
+            return;
+        }
+        let mut buf = [0i32; NR];
+        vst1q_s32(buf.as_mut_ptr(), acc0);
+        vst1q_s32(buf.as_mut_ptr().add(4), acc1);
+        vst1q_s32(buf.as_mut_ptr().add(8), acc2);
+        vst1q_s32(buf.as_mut_ptr().add(12), acc3);
+        for kk in 8 * noct..kb {
+            let r = kk - 8 * noct;
+            let xv = xrow[kk] as i32;
+            let roff = 4 * noct * NR + r / 2 * NR;
+            for (lane, a) in buf.iter_mut().enumerate() {
+                let bb = sub[roff + lane];
+                let c = if r % 2 == 0 { w4_lo(bb) } else { w4_hi(bb) };
+                *a += xv * c as i32;
+            }
+        }
+        merge_spill(orow, &buf, nv, first);
+    }
+}

@@ -1,0 +1,233 @@
+//! AVX-512-VNNI integer kernels at 256-bit width — one non-saturating
+//! `_mm256_dpbusd_epi32` (u8×i8 → i32 accumulate) per quad, replacing the
+//! AVX2 `maddubs`/`madd` pair.
+//!
+//! Identical structure, layout walk, unsigned-rebias compensation, tail
+//! and narrow-panel handling as the [`super::avx2`] module — only the
+//! inner dot product differs (`vpdpbusd` never saturates, so the
+//! `|w| ≤ 64` pack invariant is not even needed here; it is kept anyway
+//! because one pack serves every path).  Requires AVX512VNNI + AVX512VL
+//! (the 256-bit encodings); the nibble unpack reuses the AVX2 ops.  Same
+//! `unsafe` policy as the sibling: feature-asserted safe wrappers,
+//! `SAFETY:` comments, bit-identical to the scalar twin by test.
+#![allow(unsafe_code)]
+
+#[cfg(target_arch = "x86")]
+use std::arch::x86::*;
+#[cfg(target_arch = "x86_64")]
+use std::arch::x86_64::*;
+
+use super::avx2::sign4;
+use super::{
+    for_each_kblock, for_each_kblock_w4, merge_spill, micro_narrow_i8, micro_w4, w4_hi, w4_lo,
+    PackedW4, PackedWi8, KC, LANES, NR,
+};
+
+fn assert_vnni() {
+    assert!(
+        std::arch::is_x86_feature_detected!("avx512vnni")
+            && std::arch::is_x86_feature_detected!("avx512vl")
+            && std::arch::is_x86_feature_detected!("avx2"),
+        "vnni kernel dispatched without AVX512VNNI+AVX512VL"
+    );
+}
+
+/// Safe entry: assert the VNNI features once, then run the gated kernel.
+pub(super) fn gemm_i8(x: &[i8], m: usize, pw: &PackedWi8, out: &mut [i32]) {
+    assert_vnni();
+    // SAFETY: AVX512VNNI + AVX512VL + AVX2 support was just asserted at
+    // runtime — the only precondition of the target_feature function.
+    unsafe { gemm_i8_vnni(x, m, pw, out) }
+}
+
+/// Safe entry for the W4 kernel — same runtime gate as [`gemm_i8`].
+pub(super) fn gemm_w4(x: &[i8], m: usize, pw: &PackedW4, out: &mut [i32]) {
+    assert_vnni();
+    // SAFETY: AVX512VNNI + AVX512VL + AVX2 support was just asserted at
+    // runtime — the only precondition of the target_feature function.
+    unsafe { gemm_w4_vnni(x, m, pw, out) }
+}
+
+/// The K-blocked panel walk over VNNI row kernels.
+#[target_feature(enable = "avx512vnni,avx512vl,avx2")]
+unsafe fn gemm_i8_vnni(x: &[i8], m: usize, pw: &PackedWi8, out: &mut [i32]) {
+    let (k, n) = (pw.k, pw.n);
+    let panels = n.div_ceil(NR);
+    for_each_kblock(k, panels, |k0, kb, boff| {
+        let first = k0 == 0;
+        let b = k0 / KC;
+        for p in 0..panels {
+            let j0 = p * NR;
+            let nv = NR.min(n - j0);
+            let sub = &pw.data[boff + p * kb * NR..boff + (p + 1) * kb * NR];
+            if nv < LANES {
+                micro_narrow_i8(&x[k0..], m, k, kb, sub, &mut out[j0..], n, nv, first);
+                continue;
+            }
+            let uc = &pw.ucomp[(b * panels + p) * NR..(b * panels + p + 1) * NR];
+            for i in 0..m {
+                let xrow = &x[i * k + k0..i * k + k0 + kb];
+                // SAFETY: the VNNI features are enabled for this caller
+                // (same target_feature), and `out[i*n + j0..]` holds at
+                // least `nv` elements for every row `i < m`.
+                unsafe { row_i8(xrow, kb, sub, uc, &mut out[i * n + j0..], nv, first) };
+            }
+        }
+    });
+}
+
+/// One output row over one i8 `(block, panel)`: `vpdpbusd` accumulates
+/// each quad straight into the i32 lanes.
+#[target_feature(enable = "avx512vnni,avx512vl,avx2")]
+unsafe fn row_i8(
+    xrow: &[i8],
+    kb: usize,
+    sub: &[i8],
+    uc: &[i32],
+    orow: &mut [i32],
+    nv: usize,
+    first: bool,
+) {
+    let nq = kb / 4;
+    // SAFETY: in-bounds by layout — `sub` holds `kb * NR` bytes (`nq`
+    // quads of 64 bytes plus the tail rows), `xrow` holds `kb` bytes,
+    // `uc` holds NR i32, and callers guarantee `orow` holds at least
+    // `nv` i32s.  All memory ops are unaligned-tolerant.
+    unsafe {
+        let mut acc0 = _mm256_setzero_si256();
+        let mut acc1 = _mm256_setzero_si256();
+        let xp = xrow.as_ptr();
+        let wp = sub.as_ptr();
+        for q in 0..nq {
+            let xq = (xp.add(4 * q) as *const u32).read_unaligned() ^ 0x8080_8080;
+            let xv = _mm256_set1_epi32(xq as i32);
+            let w0 = _mm256_loadu_si256(wp.add(64 * q) as *const __m256i);
+            let w1 = _mm256_loadu_si256(wp.add(64 * q + 32) as *const __m256i);
+            acc0 = _mm256_dpbusd_epi32(acc0, xv, w0);
+            acc1 = _mm256_dpbusd_epi32(acc1, xv, w1);
+        }
+        let ucp = uc.as_ptr();
+        acc0 = _mm256_sub_epi32(acc0, _mm256_loadu_si256(ucp as *const __m256i));
+        acc1 = _mm256_sub_epi32(acc1, _mm256_loadu_si256(ucp.add(8) as *const __m256i));
+        if kb == 4 * nq && nv == NR {
+            let op = orow.as_mut_ptr() as *mut __m256i;
+            if !first {
+                acc0 = _mm256_add_epi32(acc0, _mm256_loadu_si256(op));
+                acc1 = _mm256_add_epi32(acc1, _mm256_loadu_si256(op.add(1)));
+            }
+            _mm256_storeu_si256(op, acc0);
+            _mm256_storeu_si256(op.add(1), acc1);
+            return;
+        }
+        let mut buf = [0i32; NR];
+        _mm256_storeu_si256(buf.as_mut_ptr() as *mut __m256i, acc0);
+        _mm256_storeu_si256(buf.as_mut_ptr().add(8) as *mut __m256i, acc1);
+        for kk in 4 * nq..kb {
+            let xv = xrow[kk] as i32;
+            let roff = 4 * nq * NR + (kk - 4 * nq) * NR;
+            for (lane, a) in buf.iter_mut().enumerate() {
+                *a += xv * sub[roff + lane] as i32;
+            }
+        }
+        merge_spill(orow, &buf, nv, first);
+    }
+}
+
+/// The K-blocked panel walk over VNNI W4 row kernels.
+#[target_feature(enable = "avx512vnni,avx512vl,avx2")]
+unsafe fn gemm_w4_vnni(x: &[i8], m: usize, pw: &PackedW4, out: &mut [i32]) {
+    let (k, n) = (pw.k, pw.n);
+    let panels = n.div_ceil(NR);
+    for_each_kblock_w4(k, panels, |k0, kb, boff| {
+        let first = k0 == 0;
+        let b = k0 / KC;
+        let pbytes = kb.div_ceil(2) * NR;
+        for p in 0..panels {
+            let j0 = p * NR;
+            let nv = NR.min(n - j0);
+            let sub = &pw.data[boff + p * pbytes..boff + (p + 1) * pbytes];
+            if nv < LANES {
+                micro_w4(&x[k0..], m, k, kb, sub, &mut out[j0..], n, nv, first);
+                continue;
+            }
+            let uc = &pw.ucomp[(b * panels + p) * NR..(b * panels + p + 1) * NR];
+            for i in 0..m {
+                let xrow = &x[i * k + k0..i * k + k0 + kb];
+                // SAFETY: the VNNI features are enabled for this caller
+                // (same target_feature), and `out[i*n + j0..]` holds at
+                // least `nv` elements for every row `i < m`.
+                unsafe { row_w4(xrow, kb, sub, uc, &mut out[i * n + j0..], nv, first) };
+            }
+        }
+    });
+}
+
+/// One output row over one W4 `(block, panel)`: AVX2 nibble unpack, then
+/// `vpdpbusd` per half-octet.
+#[target_feature(enable = "avx512vnni,avx512vl,avx2")]
+unsafe fn row_w4(
+    xrow: &[i8],
+    kb: usize,
+    sub: &[u8],
+    uc: &[i32],
+    orow: &mut [i32],
+    nv: usize,
+    first: bool,
+) {
+    let noct = kb / 8;
+    // SAFETY: in-bounds by layout — `sub` holds `kb.div_ceil(2) * NR`
+    // bytes (`noct` octets of 64 bytes plus the pair-packed tail), `xrow`
+    // holds `kb` bytes, `uc` holds NR i32, and callers guarantee `orow`
+    // holds at least `nv` i32s.  All memory ops are unaligned-tolerant.
+    unsafe {
+        let lomask = _mm256_set1_epi8(0x0F);
+        let eight = _mm256_set1_epi8(8);
+        let mut acc0 = _mm256_setzero_si256();
+        let mut acc1 = _mm256_setzero_si256();
+        let xp = xrow.as_ptr();
+        let wp = sub.as_ptr();
+        for o in 0..noct {
+            let xlo = (xp.add(8 * o) as *const u32).read_unaligned() ^ 0x8080_8080;
+            let xhi = (xp.add(8 * o + 4) as *const u32).read_unaligned() ^ 0x8080_8080;
+            let xl = _mm256_set1_epi32(xlo as i32);
+            let xh = _mm256_set1_epi32(xhi as i32);
+            let v0 = _mm256_loadu_si256(wp.add(64 * o) as *const __m256i);
+            let v1 = _mm256_loadu_si256(wp.add(64 * o + 32) as *const __m256i);
+            let lo0 = sign4(_mm256_and_si256(v0, lomask), eight);
+            let lo1 = sign4(_mm256_and_si256(v1, lomask), eight);
+            let hi0 = sign4(_mm256_and_si256(_mm256_srli_epi16(v0, 4), lomask), eight);
+            let hi1 = sign4(_mm256_and_si256(_mm256_srli_epi16(v1, 4), lomask), eight);
+            acc0 = _mm256_dpbusd_epi32(acc0, xl, lo0);
+            acc0 = _mm256_dpbusd_epi32(acc0, xh, hi0);
+            acc1 = _mm256_dpbusd_epi32(acc1, xl, lo1);
+            acc1 = _mm256_dpbusd_epi32(acc1, xh, hi1);
+        }
+        let ucp = uc.as_ptr();
+        acc0 = _mm256_sub_epi32(acc0, _mm256_loadu_si256(ucp as *const __m256i));
+        acc1 = _mm256_sub_epi32(acc1, _mm256_loadu_si256(ucp.add(8) as *const __m256i));
+        if kb == 8 * noct && nv == NR {
+            let op = orow.as_mut_ptr() as *mut __m256i;
+            if !first {
+                acc0 = _mm256_add_epi32(acc0, _mm256_loadu_si256(op));
+                acc1 = _mm256_add_epi32(acc1, _mm256_loadu_si256(op.add(1)));
+            }
+            _mm256_storeu_si256(op, acc0);
+            _mm256_storeu_si256(op.add(1), acc1);
+            return;
+        }
+        let mut buf = [0i32; NR];
+        _mm256_storeu_si256(buf.as_mut_ptr() as *mut __m256i, acc0);
+        _mm256_storeu_si256(buf.as_mut_ptr().add(8) as *mut __m256i, acc1);
+        for kk in 8 * noct..kb {
+            let r = kk - 8 * noct;
+            let xv = xrow[kk] as i32;
+            let roff = 4 * noct * NR + r / 2 * NR;
+            for (lane, a) in buf.iter_mut().enumerate() {
+                let bb = sub[roff + lane];
+                let c = if r % 2 == 0 { w4_lo(bb) } else { w4_hi(bb) };
+                *a += xv * c as i32;
+            }
+        }
+        merge_spill(orow, &buf, nv, first);
+    }
+}

@@ -91,10 +91,17 @@
 //!
 //! [`kernel`] owns THE inner loop every forward path bottoms out in: a
 //! register-blocked ([`kernel::MR`]×[`kernel::NR`] accumulator tile,
-//! 8-wide f32 lanes the compiler auto-vectorizes — no unsafe, no
-//! intrinsics) write-mode GEMM over a panel-packed weight layout
+//! 8-wide lanes) write-mode GEMM over a panel-packed weight layout
 //! ([`kernel::PackedW`]), replacing the historical scalar `matmul_rows`
-//! walk (kept as [`kernel::gemm_ref`], the tested-against baseline).
+//! walk (kept as [`kernel::gemm_ref`], the tested-against baseline).  The
+//! f32 kernel stays safe auto-vectorized Rust; the **integer kernels are
+//! runtime-dispatched** ([`kernel::kernel_path`], probed once) to explicit
+//! u8×i8 dot-product micro-kernels — AVX2 `maddubs`, AVX-512-VNNI
+//! `vpdpbusd`, NEON `sdot` — over byte-per-code [`kernel::PackedWi8`] or
+//! nibble-packed [`kernel::PackedW4`] panels (two 4-bit codes per byte,
+//! half the weight bandwidth), with safe scalar twins as the
+//! always-present fallback and ground truth.
+//! `QFT_KERNEL=scalar|avx2|vnni|neon` forces any path.
 //!
 //! *Packing*: [`quant::deploy::DeployedModel::prepare`] packs every conv
 //! (per group, [`tensor::conv::PackedConvW`]) and the fc head once,
@@ -110,14 +117,23 @@
 //! trip), and one generic walker drives the f32 and i8 kernels through
 //! the identical block structure.
 //!
-//! *Bit-exactness contract*: per output element the reduction is always
-//! `kk = 0..k` ascending with one mul + one add per step and the
+//! *Bit-exactness contract*: per output element the f32 reduction is
+//! always `kk = 0..k` ascending with one mul + one add per step and the
 //! zero-activation skip preserved — including across [`kernel::KC`]
 //! boundaries; vectorization runs only across the `n` output-column
-//! lanes, which never interact.  Packed, scalar, serial, chunk-parallel,
-//! conv and batched-deploy results are therefore bit-identical, at any
-//! thread count (`rust/tests/kernel.rs`, under default codegen and
-//! `-Ctarget-cpu=native` in CI).
+//! lanes, which never interact.  The integer kernels are exact i32
+//! arithmetic, so every dispatch path is bit-identical to the scalar
+//! twin with no ordering discipline at all.  Packed, scalar, serial,
+//! chunk-parallel, conv and batched-deploy results are therefore
+//! bit-identical, at any thread count (`rust/tests/kernel.rs`, under
+//! default codegen, forced `QFT_KERNEL` legs and `-Ctarget-cpu=native`
+//! in CI).
+//!
+//! *Unsafe policy*: the crate denies `unsafe_code` globally; the per-ISA
+//! kernel modules and the scoped-pool lifetime erasure in [`par`] carry
+//! the only module-level allows, every block has a `SAFETY:` comment,
+//! and every SIMD kernel is pinned by a scalar-twin parity test (see the
+//! README's "Kernel engine" section for the full policy).
 //!
 //! ## Parallelism — `qft::par`
 //!
@@ -143,6 +159,11 @@
 //!
 //! The public API is consumed by the `repro` CLI, `examples/` and
 //! `rust/benches/` (one bench per paper table/figure).
+
+// `unsafe` is opt-in per module: only the kernel ISA modules (runtime
+// feature-gated intrinsics, scalar-parity-pinned) and the par scope
+// lifetime erasure may allow it — see the README "unsafe policy".
+#![deny(unsafe_code)]
 
 pub mod backend;
 pub mod coordinator;

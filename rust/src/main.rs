@@ -380,6 +380,7 @@ fn cmd_serve(artifacts: &str, args: &Args) -> Result<()> {
     let shadow_every = args.usize("shadow-every", 0)? as u32;
     let swap_after = args.usize("swap-after", 0)?;
 
+    eprintln!("serve: kernel dispatch {}", qft::kernel::kernel_dispatch());
     let fleet = Fleet::load_with(
         Path::new(artifacts),
         &[(arch.clone(), kind)],
@@ -512,6 +513,7 @@ fn cmd_bench_serve(artifacts: &str, args: &Args) -> Result<()> {
     let cfg = serve_cfg(args)?;
     let per_client = requests.div_ceil(concurrency.max(1));
 
+    eprintln!("bench-serve: kernel dispatch {}", qft::kernel::kernel_dispatch());
     let fleet = Fleet::load(Path::new(artifacts), &[(arch.clone(), kind)])?;
     // warm-up pass so first-touch buffer growth doesn't skew the measurement
     let _ = run_closed_loop(&fleet, &cfg, concurrency.max(1), 4, 0);
@@ -582,6 +584,7 @@ fn cmd_eval(artifacts: &str, args: &Args) -> Result<()> {
     let arch = args.get("arch", "synthetic");
     let kind = parse_backend(args)?;
     let images = args.usize("images", 512)?;
+    eprintln!("eval: kernel dispatch {}", qft::kernel::kernel_dispatch());
     let fleet = Fleet::load(Path::new(artifacts), &[(arch.clone(), kind)])?;
     let version = fleet.slot(0).expect("fleet just loaded slot 0").primary();
     let batch = 8;

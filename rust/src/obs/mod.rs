@@ -273,6 +273,10 @@ pub struct Snapshot {
     pub queue_depth: i64,
     pub submitted: u64,
     pub route_changes: u64,
+    /// The dispatched integer-kernel path name
+    /// ([`crate::kernel::kernel_dispatch`]) — carried in every flush so
+    /// artifacts from different machines stay comparable.
+    pub kernel_dispatch: String,
     pub stages: Vec<StageSnapshot>,
     pub nets: Vec<NetSnapshot>,
 }
@@ -329,6 +333,7 @@ pub fn snapshot() -> Snapshot {
         queue_depth: queue_depth().get(),
         submitted: submitted().get(),
         route_changes: route_changes().get(),
+        kernel_dispatch: crate::kernel::kernel_dispatch().to_string(),
         stages,
         nets,
     }
@@ -374,6 +379,13 @@ impl Snapshot {
         let _ = writeln!(o, "# HELP qft_route_changes_total fleet route changes (promote/ab)");
         let _ = writeln!(o, "# TYPE qft_route_changes_total counter");
         let _ = writeln!(o, "qft_route_changes_total {}", self.route_changes);
+        let _ = writeln!(o, "# HELP qft_kernel_dispatch dispatched integer kernel path");
+        let _ = writeln!(o, "# TYPE qft_kernel_dispatch gauge");
+        let _ = writeln!(
+            o,
+            "qft_kernel_dispatch{{path=\"{}\"}} 1",
+            esc(&self.kernel_dispatch)
+        );
         if !self.stages.is_empty() {
             let _ = writeln!(o, "# HELP qft_requests_total requests executed per model");
             let _ = writeln!(o, "# TYPE qft_requests_total counter");
@@ -517,6 +529,7 @@ impl Snapshot {
                     ("queue_depth", Value::Num(self.queue_depth as f64)),
                     ("submitted", Value::Num(self.submitted as f64)),
                     ("route_changes", Value::Num(self.route_changes as f64)),
+                    ("kernel_dispatch", Value::Str(self.kernel_dispatch.clone())),
                 ]),
             ),
             ("stages", Value::Arr(stages)),
@@ -588,6 +601,12 @@ impl Snapshot {
                 .and_then(|v| v.num())
                 .map(|n| n as u64)
                 .unwrap_or(0),
+            // absent in pre-dispatch flush files — read as unknown
+            kernel_dispatch: engine
+                .get("kernel_dispatch")
+                .and_then(|v| v.str())
+                .map(str::to_string)
+                .unwrap_or_default(),
             stages,
             nets,
         })
@@ -600,7 +619,8 @@ impl Snapshot {
         let mut o = String::new();
         let _ = writeln!(
             o,
-            "obs: {}, layer sampling {} | queue depth {} | {} submitted | {} route changes",
+            "obs: {}, layer sampling {} | queue depth {} | {} submitted | {} route changes \
+             | kernel {}",
             if self.enabled { "enabled" } else { "disabled" },
             match self.sample_every {
                 0 => "off".to_string(),
@@ -609,6 +629,7 @@ impl Snapshot {
             self.queue_depth,
             self.submitted,
             self.route_changes,
+            if self.kernel_dispatch.is_empty() { "?" } else { &self.kernel_dispatch },
         );
         if !self.stages.is_empty() {
             let _ = writeln!(o, "\n== request stages (µs) ==");
@@ -829,12 +850,15 @@ mod tests {
         no.layers[0].add_phase_ns(Phase::Gemm, 1234);
         no.layers[0].add_total_ns(2000);
         let snap = snapshot();
+        assert_eq!(snap.kernel_dispatch, crate::kernel::kernel_dispatch());
         let back = Snapshot::from_json(&snap.to_json()).unwrap();
         assert_eq!(back.stage_for(key), snap.stage_for(key));
         assert_eq!(back.net_for(key), snap.net_for(key));
         assert_eq!(back.net_for(key).unwrap().layers[0].1.gemm_ns, 1234);
+        assert_eq!(back.kernel_dispatch, snap.kernel_dispatch);
         // the table renderer shouldn't panic on real data
         assert!(back.to_table().contains(key));
+        assert!(back.to_table().contains(&format!("kernel {}", snap.kernel_dispatch)));
     }
 
     #[test]
@@ -851,6 +875,11 @@ mod tests {
             "qft_stage_latency_us{model=\"promtest/dch\",stage=\"compute\",quantile=\"0.99\"}";
         assert!(text.contains(want));
         assert!(text.contains("# TYPE qft_stage_latency_us summary"));
+        let disp = format!(
+            "qft_kernel_dispatch{{path=\"{}\"}} 1",
+            crate::kernel::kernel_dispatch()
+        );
+        assert!(text.contains(&disp));
     }
 
     #[test]

@@ -24,6 +24,11 @@
 //! nested scope opened from inside a pool task cannot deadlock (its opener
 //! executes the nested tasks itself if every worker is busy).
 
+// One of the two sanctioned `unsafe` sites in the crate (see the README
+// "unsafe policy"): the scoped-task lifetime erasure in `Pool::scope`,
+// sound because the scope latch blocks until every erased task has run.
+#![allow(unsafe_code)]
+
 use std::ops::Range;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex, OnceLock};

@@ -223,6 +223,15 @@ pub fn forward_fakequant_obs(
 
 // ------------------------------------------------------------------ deployed
 
+/// Whether every i8 weight code fits the two's-complement nibble range a
+/// [`crate::kernel::PackedW4`] panel stores (`[-8, 7]`).  The lw grids clamp
+/// to `±`[`WEIGHT_QMAX`]` = ±7`, so this always holds for them; the probe is
+/// what lets [`crate::backend::Int8Backend`] fall back per conv if a wider
+/// codebook ever reaches it.
+pub(crate) fn codes_fit_w4(codes: &[i8]) -> bool {
+    codes.iter().all(|&c| (-8..=7).contains(&c))
+}
+
 /// Integer weight codes on the Eq. 2 grid (outer-product or per-out-channel).
 pub(crate) fn kernel_codes(w: &Tensor, s_l: &Option<Vec<f32>>, s_r: &[f32]) -> Tensor {
     match s_l {

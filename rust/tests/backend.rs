@@ -2,14 +2,19 @@
 //! `qft::backend` trait must produce bit-identical results to its
 //! pre-refactor twin (the free functions it re-homed), at 1/2/8 threads —
 //! plus the `lw-i8` agreement, batch-invariance and NaN/Inf masking
-//! contracts for the new integer engine.
+//! contracts for the new integer engine, and the W4-vs-i8 panel equality
+//! contract (nibble packing is a pure storage change: forced-on vs
+//! forced-off must be bit-identical at every thread count, poison
+//! included).
 //!
 //! Everything is hermetic (built-in synthetic arch, no AOT artifacts).
+//! CI reruns the suite under forced `QFT_KERNEL=scalar` / `=avx2` legs,
+//! which exercises the auto W4 selection under each dispatch path.
 
 use std::path::Path;
 use std::time::Duration;
 
-use qft::backend::{self, BackendKind, Scratch};
+use qft::backend::{self, Backend, BackendKind, Int8Backend, Scratch};
 use qft::coordinator::state;
 use qft::data::{Dataset, Split};
 use qft::nn::fp_forward;
@@ -222,6 +227,93 @@ fn zero_code_activations_mask_nonfinite_weights_in_both_integer_engines() {
     for (i, (a, b)) in li.data.iter().zip(&l8.data).enumerate() {
         let tol = 1e-4 * a.abs().max(b.abs()).max(1.0);
         assert!((a - b).abs() <= tol, "logit {i}: lw {a} vs lw-i8 {b}");
+    }
+}
+
+#[test]
+fn int8_w4_panels_are_bit_identical_to_i8_panels() {
+    // nibble packing is a pure storage change — same codes, same exact
+    // integer arithmetic — so forcing the W4 panels on vs off must agree
+    // to the BIT, at every thread count, warm or cold, on both forward
+    // entry points
+    let (arch, tm) = synthetic_trainables(Mode::Lw, 21);
+    let i8_net = Int8Backend::with_w4(false).prepare(&arch, &tm);
+    let w4_net = Int8Backend::with_w4(true).prepare(&arch, &tm);
+    let x = val_batch(5, 14);
+    let want = i8_net.forward_batch(&x, &mut Scratch::new(), &Pool::new(1));
+    for &t in THREADS {
+        let pool = Pool::new(t);
+        let mut scratch = Scratch::new();
+        let got = w4_net.forward_batch(&x, &mut scratch, &pool);
+        assert_eq!(bits(&want), bits(&got), "W4 vs i8 panels, {t} threads");
+        let again = w4_net.forward_batch(&x, &mut scratch, &pool);
+        assert_eq!(bits(&want), bits(&again), "W4 warm rerun, {t} threads");
+        let (logits, feat) = w4_net.forward_batch_feat(&x, &mut scratch, &pool);
+        assert_eq!(bits(&want), bits(&logits), "W4 feat-path logits, {t} threads");
+        assert!(feat.data.iter().all(|v| v.is_finite()));
+    }
+    // the default backend (auto selection) must match both, whichever
+    // panel store it picked for this host/env
+    let auto = backend::prepare(BackendKind::Int8, &arch, &tm)
+        .forward_batch(&x, &mut Scratch::new(), &Pool::new(1));
+    assert_eq!(bits(&want), bits(&auto), "auto panel selection drifted");
+}
+
+#[test]
+fn int8_w4_single_image_intra_op_is_bit_identical_across_threads() {
+    // batch = 1 through the W4 panels: the intra-op (output-row) split
+    // must stay bit-identical to the serial walk at every thread count
+    let (arch, tm) = synthetic_trainables(Mode::Lw, 17);
+    let net = Int8Backend::with_w4(true).prepare(&arch, &tm);
+    let x = val_batch(1, 3);
+    let want = net.forward_batch(&x, &mut Scratch::new(), &Pool::new(1));
+    for &t in THREADS {
+        let pool = Pool::new(t);
+        let mut scratch = Scratch::new();
+        let got = net.forward_batch(&x, &mut scratch, &pool);
+        assert_eq!(bits(&want), bits(&got), "W4 single image, {t} threads");
+        let again = net.forward_batch(&x, &mut scratch, &pool);
+        assert_eq!(bits(&want), bits(&again), "W4 single image warm, {t} threads");
+    }
+}
+
+#[test]
+fn zero_code_activations_mask_nonfinite_weights_through_w4_panels() {
+    // the same poison pattern as the i8-panel masking test above, forced
+    // through the nibble-packed panels at 1/2/8 threads: NaN casts to the
+    // zero code and ±inf saturates to ±7 — both inside the W4 nibble
+    // range — and the all-zero activation codes contribute nothing, so
+    // W4 logits must be finite and bit-identical to the i8 panels'
+    let (arch, mut tm) = synthetic_trainables(Mode::Lw, 12);
+    {
+        let w = tm.get_mut("w:conv0");
+        let (cin, cout) = (w.shape[2], w.shape[3]);
+        assert_eq!(cin, 3);
+        for (idx, v) in w.data.iter_mut().enumerate() {
+            if (idx / cout) % cin == 1 {
+                *v = match idx % 3 {
+                    0 => f32::NAN,
+                    1 => f32::INFINITY,
+                    _ => f32::NEG_INFINITY,
+                };
+            }
+        }
+    }
+    let mut x = val_batch(4, 8);
+    let c = *x.shape.last().unwrap();
+    for (i, v) in x.data.iter_mut().enumerate() {
+        if i % c == 1 {
+            *v = 0.0;
+        }
+    }
+    let i8_net = Int8Backend::with_w4(false).prepare(&arch, &tm);
+    let w4_net = Int8Backend::with_w4(true).prepare(&arch, &tm);
+    let want = i8_net.forward_batch(&x, &mut Scratch::new(), &Pool::new(1));
+    assert!(want.data.iter().all(|v| v.is_finite()), "i8 logits poisoned: {:?}", want.data);
+    for &t in THREADS {
+        let got = w4_net.forward_batch(&x, &mut Scratch::new(), &Pool::new(t));
+        assert!(got.data.iter().all(|v| v.is_finite()), "W4 logits poisoned at {t} threads");
+        assert_eq!(bits(&want), bits(&got), "W4 vs i8 under poison, {t} threads");
     }
 }
 

@@ -7,11 +7,24 @@
 //! consumer: `matmul_slices(_par)`, `conv2d(_into_par)`, and the deployed
 //! forwards, at 1/2/8 threads in both `lw` and `dch` modes.
 //!
-//! CI runs this file twice: under default codegen and under
-//! `RUSTFLAGS=-Ctarget-cpu=native`, to catch any vectorization- or
-//! FMA-contraction-dependent divergence between the kernels.
+//! The integer kernels get the same treatment per dispatch path: every
+//! path [`qft::kernel::supported_paths`] reports (scalar always; AVX2 /
+//! VNNI / NEON where the host has them) must be BIT-identical to the
+//! scalar twin for both the byte-panel (`gemm_i8`) and nibble-packed
+//! (`gemm_w4`) kernels, on shapes covering `k >> KC`, `k % KC != 0`, odd
+//! `k` (the W4 pair-packed tail), ragged lanes, and the depthwise `n = 1`
+//! column, plus `PackedW4` pack/unpack round-trip and grouped-conv column
+//! slicing properties.
+//!
+//! CI runs this file several ways: under default codegen, under
+//! `RUSTFLAGS=-Ctarget-cpu=native`, and under forced `QFT_KERNEL=scalar` /
+//! `QFT_KERNEL=avx2` legs, to catch any vectorization-, FMA-contraction-
+//! or dispatch-dependent divergence between the kernels.
 
-use qft::kernel::{gemm, gemm_ref, PackedW, KC, MR, NR};
+use qft::kernel::{
+    gemm, gemm_i8, gemm_i8_with, gemm_ref, gemm_w4, gemm_w4_with, kernel_dispatch, kernel_path,
+    supported_paths, KernelPath, PackedW, PackedW4, PackedWi8, KC, MR, NR,
+};
 use qft::par::{chunk_ranges_aligned, Pool};
 use qft::quant::deploy::{DeployScratch, DeployedModel, Mode};
 use qft::serve::synthetic_trainables;
@@ -276,6 +289,164 @@ fn deployed_forward_is_thread_and_packing_invariant_both_modes() {
             let again = model.forward_batch_pooled(&xb, &mut scratch, &pool);
             assert_bits_eq(&want.data, &again.data, &format!("{mode:?} {threads} warm"));
         }
+    }
+}
+
+/// Random integer codes on the lw weight grid (`[-7, 7]`).
+fn rand_codes(len: usize, seed: u64) -> Vec<i8> {
+    let mut rng = qft::data::Rng::new(seed);
+    (0..len).map(|_| (rng.normal() * 4.0).round().clamp(-7.0, 7.0) as i8).collect()
+}
+
+/// Independent integer reference: plain triple loop, exact i32 arithmetic.
+fn naive_i8(x: &[i8], m: usize, k: usize, w: &[i8], n: usize) -> Vec<i32> {
+    let mut out = vec![0i32; m * n];
+    for i in 0..m {
+        for kk in 0..k {
+            let xv = x[i * k + kk] as i32;
+            for j in 0..n {
+                out[i * n + j] += xv * w[kk * n + j] as i32;
+            }
+        }
+    }
+    out
+}
+
+/// Integer-shape sweep for the dispatch parity tests: KC straddles
+/// (`k >> KC`, `k % KC != 0`, `k == KC`), odd `k` (the W4 pair-packed
+/// tail), ragged lanes/tiles, single rows, and the depthwise `n = 1`
+/// per-group GEMM column.
+const INT_SHAPES: &[(usize, usize, usize)] = &[
+    (9, 4 * KC + 37, NR + 9),
+    (MR + 3, KC + 1, 2 * NR + 1),
+    (MR, KC, NR),
+    (6, KC - 3, NR - 1),
+    (1, 2 * KC, 7),
+    (2 * MR + 1, 129, 17),
+    (7, 9, 1),
+    (64, 27, 5),
+    (3, 1, NR + 1),
+];
+
+#[test]
+fn every_supported_path_is_bit_identical_to_naive_i8_and_w4() {
+    // the tentpole acceptance matrix: every dispatch path the host supports
+    // (scalar always; AVX2 / VNNI / NEON where present) must produce the
+    // EXACT i32s of the independent naive loop, for both panel layouts
+    let paths = supported_paths();
+    assert_eq!(paths[0], KernelPath::Scalar, "scalar is the always-present fallback");
+    assert!(paths.contains(&kernel_path()), "the picked path must be a supported one");
+    for &(m, k, n) in INT_SHAPES {
+        let x = rand_codes(m * k, (m * 7 + k * 3 + n) as u64);
+        let w = rand_codes(k * n, (m + k * 5 + n * 11) as u64);
+        let want = naive_i8(&x, m, k, &w, n);
+        let pwi = PackedWi8::pack(&w, k, n);
+        let pw4 = PackedW4::pack(&w, k, n);
+        for &path in &paths {
+            let mut got = vec![i32::MIN; m * n];
+            gemm_i8_with(path, &x, m, &pwi, &mut got);
+            assert_eq!(want, got, "i8 path {} diverged on m={m} k={k} n={n}", path.name());
+            let mut got4 = vec![i32::MIN; m * n];
+            gemm_w4_with(path, &x, m, &pw4, &mut got4);
+            assert_eq!(want, got4, "W4 path {} diverged on m={m} k={k} n={n}", path.name());
+        }
+        // and the auto-dispatched entry points agree with all of the above
+        let mut auto_i8 = vec![0i32; m * n];
+        gemm_i8(&x, m, &pwi, &mut auto_i8);
+        assert_eq!(want, auto_i8, "dispatched gemm_i8 m={m} k={k} n={n}");
+        let mut auto_w4 = vec![0i32; m * n];
+        gemm_w4(&x, m, &pw4, &mut auto_w4);
+        assert_eq!(want, auto_w4, "dispatched gemm_w4 m={m} k={k} n={n}");
+    }
+}
+
+#[test]
+fn dispatch_pick_is_supported_and_honors_forcing() {
+    let path = kernel_path();
+    assert!(supported_paths().contains(&path));
+    assert_eq!(kernel_dispatch(), path.name());
+    // under the CI forced-dispatch legs this pins the env contract; when
+    // QFT_KERNEL is unset it is vacuous
+    if let Ok(forced) = std::env::var("QFT_KERNEL") {
+        assert_eq!(path.name(), forced, "QFT_KERNEL={forced} must win the dispatch");
+    }
+}
+
+#[test]
+fn w4_pack_unpack_round_trips_on_odd_k_shapes() {
+    // property: unpack(pack(w)) == w for every tail geometry the layout
+    // has — odd k (pair tail), k % 8 (octet tail), k % KC (block tail) —
+    // and the packed buffer really is ~half the i8 bytes
+    for &(k, n) in &[
+        (1usize, 1usize),
+        (2, NR),
+        (7, NR + 3),
+        (8, 2 * NR + 1),
+        (KC - 1, 5),
+        (KC + 9, NR - 1),
+        (2 * KC + 13, NR + 1),
+    ] {
+        let w = rand_codes(k * n, (k * 31 + n) as u64);
+        let pw4 = PackedW4::pack(&w, k, n);
+        assert_eq!((pw4.k(), pw4.n()), (k, n));
+        assert_eq!(pw4.unpack(), w, "k={k} n={n} round trip");
+        let pwi = PackedWi8::pack(&w, k, n);
+        assert_eq!(pw4.col_sums(), pwi.col_sums(), "k={k} n={n} col_sums");
+        // odd k rounds each panel's K-block tail up to a whole byte row,
+        // so the halving bound carries one NR-row of slack per panel
+        assert!(
+            2 * pw4.packed_bytes() <= pwi.packed_bytes() + n.div_ceil(NR) * NR,
+            "k={k} n={n}: W4 must halve the panel bytes (got {} vs {})",
+            pw4.packed_bytes(),
+            pwi.packed_bytes()
+        );
+    }
+}
+
+#[test]
+fn w4_pack_cols_slices_grouped_conv_columns() {
+    // grouped-conv packing slices columns `c0..c0+ncols` out of a wider
+    // row-major matrix without materializing the dense sub-matrix; the
+    // sliced pack must equal packing the extracted columns, odd k included
+    let (k, stride) = (KC + 7, 24usize);
+    let w = rand_codes(k * stride, 77);
+    for &(c0, ncols) in &[(0usize, 8usize), (8, 8), (5, 7), (16, 8), (stride - 1, 1)] {
+        let mut sliced = PackedW4::default();
+        sliced.pack_cols(&w, k, stride, c0, ncols);
+        let dense: Vec<i8> = (0..k)
+            .flat_map(|kk| w[kk * stride + c0..kk * stride + c0 + ncols].iter().copied())
+            .collect();
+        let direct = PackedW4::pack(&dense, k, ncols);
+        assert_eq!(sliced.unpack(), direct.unpack(), "c0={c0} ncols={ncols}");
+        assert_eq!(sliced.col_sums(), direct.col_sums(), "c0={c0} ncols={ncols} sums");
+
+        // and the kernel sees identical results through both packs
+        let m = MR + 1;
+        let x = rand_codes(m * k, (c0 * 13 + ncols) as u64);
+        let want = naive_i8(&x, m, k, &dense, ncols);
+        for &path in &supported_paths() {
+            let mut got = vec![0i32; m * ncols];
+            gemm_w4_with(path, &x, m, &sliced, &mut got);
+            assert_eq!(want, got, "sliced W4 path {} c0={c0}", path.name());
+        }
+    }
+}
+
+#[test]
+fn w4_full_nibble_range_is_exact_on_every_path() {
+    // codes spanning the full two's-complement nibble range [-8, 7] —
+    // including -8, which the lw grid never emits but the layout must
+    // still decode exactly (sign-extension edge)
+    let (m, k, n) = (5usize, 4 * 16 + 3, NR + 2);
+    let w: Vec<i8> = (0..k * n).map(|i| (i % 16) as i8 - 8).collect();
+    let x = rand_codes(m * k, 123);
+    let pw4 = PackedW4::pack(&w, k, n);
+    assert_eq!(pw4.unpack(), w);
+    let want = naive_i8(&x, m, k, &w, n);
+    for &path in &supported_paths() {
+        let mut got = vec![0i32; m * n];
+        gemm_w4_with(path, &x, m, &pw4, &mut got);
+        assert_eq!(want, got, "nibble range on path {}", path.name());
     }
 }
 
