@@ -1,7 +1,7 @@
 # QFT reproduction — build / verify entry points.
 
-.PHONY: check build test fmt artifacts bench bench-serve par-bench bench-gemm bench-smoke \
-        bench-gate bench-baseline obs-overhead bench-swap
+.PHONY: check build test fmt artifacts bench bench-serve par-bench bench-gemm bench-net \
+        bench-smoke bench-gate bench-baseline obs-overhead bench-swap
 
 # Tier-1 verification: release build, full test suite, formatting.
 check:
@@ -24,8 +24,9 @@ artifacts:
 	cd python/compile && python3 aot.py --out ../../artifacts
 
 # Aggregate perf trajectory: every perf bench, landing BENCH_gemm.json,
-# BENCH_par.json, BENCH_serve.json and BENCH_swap.json at the repo root.
-bench: bench-gemm par-bench bench-serve bench-swap
+# BENCH_par.json, BENCH_serve.json, BENCH_swap.json and BENCH_net.json at
+# the repo root.
+bench: bench-gemm par-bench bench-serve bench-swap bench-net
 
 # Serving throughput bench: lw / dch / lw-i8 backend sweep at 1/2/4 workers
 # (works with or without artifacts; emits BENCH_serve.json).
@@ -44,6 +45,15 @@ par-bench:
 # QFT_KERNEL=scalar|avx2|vnni|neon to force a dispatch path.
 bench-gemm:
 	cargo bench --bench gemm_kernels
+
+# Open-loop wire-latency bench: Poisson arrivals over real TCP against the
+# qft::net front-end, backend x connections x offered-rate sweep at a fixed
+# 2-worker engine; latency is measured from the *scheduled* send instant so
+# queueing delay lands in the percentiles (no coordinated omission).  Emits
+# BENCH_net.json with p50/p99/p99.9-under-load; the lw-i8 row at 4 conns /
+# 200 rps feeds the perf gate.
+bench-net:
+	cargo bench --bench net_load
 
 # Hot-swap stall bench: closed-loop latency with the fleet slot steady vs
 # promoting between bit-identical versions every ~500us for the whole run
@@ -66,16 +76,19 @@ bench-smoke:
 	QFT_BENCH_SMOKE=1 cargo bench --bench serve_throughput
 	QFT_BENCH_SMOKE=1 cargo bench --bench swap_stall
 	QFT_BENCH_SMOKE=1 cargo bench --bench obs_overhead
+	QFT_BENCH_SMOKE=1 cargo bench --bench net_load
 
-# Perf-regression gate: rerun the gemm + serve benches in their pinned
-# configuration, then compare the gated metrics (kernel speedup geomeans,
-# the i8/W4 ratio floors, lw-i8 serving p50s) against the committed
-# BENCH_baseline.json.  Per-metric tolerance: QFT_BENCH_GATE_TOL override
-# > the baseline entry's own `tol` (the ratio floors pin 0%) > the global
-# `tolerance` (15%).  SIMD-only floors are skipped when the gemm bench
-# reports scalar dispatch.  Emits a markdown delta table (and the CI job
+# Perf-regression gate: rerun the gemm + serve + net benches in their
+# pinned configuration, then compare the gated metrics (kernel speedup
+# geomeans, the i8/W4 ratio floors, lw-i8 serving p50s, the lw-i8 wire
+# p99) against the committed BENCH_baseline.json.  Per-metric tolerance:
+# QFT_BENCH_GATE_TOL override > the baseline entry's own `tol` (the ratio
+# floors pin 0%) > the global `tolerance` (15%).  SIMD-only floors are
+# skipped when the gemm bench reports scalar dispatch; the wire-latency
+# metric is skipped (visibly, never faked) when BENCH_net.json is absent
+# or smoke-tainted.  Emits a markdown delta table (and the CI job
 # summary).
-bench-gate: bench-gemm bench-serve
+bench-gate: bench-gemm bench-serve bench-net
 	cargo bench --bench bench_gate
 
 # Re-baseline the perf gate from a fresh local run on THIS machine: reruns
@@ -84,5 +97,5 @@ bench-gate: bench-gemm bench-serve
 # delta table vs the previous baseline.  Review + commit the result; run
 # on a SIMD-capable host or the integer-ratio floors will reflect scalar
 # kernels.
-bench-baseline: bench-gemm bench-serve
+bench-baseline: bench-gemm bench-serve bench-net
 	QFT_BENCH_WRITE_BASELINE=1 cargo bench --bench bench_gate

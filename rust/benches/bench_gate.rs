@@ -6,7 +6,10 @@
 //! and `largek` shape sets, the i8-vs-f32 and W4-vs-i8 geomeans, and the
 //! `lw-i8` serving p50s), compares each against the committed
 //! `BENCH_baseline.json`, and prints a markdown delta table (also appended
-//! to `$GITHUB_STEP_SUMMARY` when CI sets it).  A metric that regresses by
+//! to `$GITHUB_STEP_SUMMARY` when CI sets it).  `BENCH_net.json` (from
+//! `make bench-net`) is consumed *optionally*: when it is absent or was
+//! emitted under smoke, the wire-latency metric is reported as skipped —
+//! never failed, never silently passed.  A metric that regresses by
 //! more than its tolerance fails the run with a non-zero exit.  Tolerance
 //! precedence, per metric: `QFT_BENCH_GATE_TOL` env override > the
 //! baseline entry's own `tol` field (how strict floors like the i8/W4
@@ -84,6 +87,12 @@ const METRICS: &[Metric] = &[
         needs_simd: false,
         desc: "lw-i8 closed-loop serving p50 at 4 workers",
     },
+    Metric {
+        name: "net.open_loop_lw_i8_p99_us",
+        higher_is_better: false,
+        needs_simd: false,
+        desc: "lw-i8 open-loop wire p99 at 4 conns / 200 rps offered (2 workers)",
+    },
 ];
 
 /// Value of `key` from the gemm bench's `set == "summary"` row.
@@ -130,19 +139,56 @@ fn find_serve_p50(
     )
 }
 
+/// `p99_us` of the open-loop net-bench row at `(backend, connections,
+/// rate_rps)`.  Only called once `BENCH_net.json` exists and is non-smoke
+/// — a present file missing the pinned row is an error, not a skip.
+fn find_net_p99(
+    rows: &[Value],
+    backend: &str,
+    connections: f64,
+    rate_rps: f64,
+) -> anyhow::Result<f64> {
+    for r in rows {
+        let hit = r.opt("set").and_then(|v| v.str().ok()) == Some("open_loop")
+            && r.opt("backend").and_then(|v| v.str().ok()) == Some(backend)
+            && r.opt("connections").and_then(|v| v.num().ok()) == Some(connections)
+            && r.opt("rate_rps").and_then(|v| v.num().ok()) == Some(rate_rps);
+        if hit {
+            return r.get("p99_us")?.num();
+        }
+    }
+    bail!(
+        "BENCH_net.json has no open_loop/{backend} row at connections={connections} \
+         rate_rps={rate_rps} — rerun `make bench-net`"
+    )
+}
+
 /// Extract a gated metric's current value from the fresh bench JSONs.
-fn current_value(name: &str, gemm: &[Value], serve: &[Value]) -> anyhow::Result<f64> {
+/// `Ok(None)` means the metric's source bench was legitimately not run
+/// (optional `BENCH_net.json` absent/smoke) — reported as skipped.
+fn current_value(
+    name: &str,
+    gemm: &[Value],
+    serve: &[Value],
+    net: Option<&[Value]>,
+) -> anyhow::Result<Option<f64>> {
     match name {
-        "gemm.resnet_geomean_speedup" => find_summary(gemm, "resnet_geomean_speedup"),
-        "gemm.largek_geomean_speedup" => find_summary(gemm, "largek_geomean_speedup"),
-        "gemm.resnet_geomean_i8_vs_f32" => find_summary(gemm, "resnet_geomean_i8_vs_f32"),
-        "gemm.largek_geomean_w4_vs_i8" => find_summary(gemm, "largek_geomean_w4_vs_i8"),
+        "gemm.resnet_geomean_speedup" => find_summary(gemm, "resnet_geomean_speedup").map(Some),
+        "gemm.largek_geomean_speedup" => find_summary(gemm, "largek_geomean_speedup").map(Some),
+        "gemm.resnet_geomean_i8_vs_f32" => {
+            find_summary(gemm, "resnet_geomean_i8_vs_f32").map(Some)
+        }
+        "gemm.largek_geomean_w4_vs_i8" => find_summary(gemm, "largek_geomean_w4_vs_i8").map(Some),
         "serve.single_image_lw_i8_p50_us" => {
-            find_serve_p50(serve, "single_image", "lw-i8", "threads", 4.0)
+            find_serve_p50(serve, "single_image", "lw-i8", "threads", 4.0).map(Some)
         }
         "serve.closed_loop_lw_i8_w4_p50_us" => {
-            find_serve_p50(serve, "closed_loop", "lw-i8", "workers", 4.0)
+            find_serve_p50(serve, "closed_loop", "lw-i8", "workers", 4.0).map(Some)
         }
+        "net.open_loop_lw_i8_p99_us" => match net {
+            Some(rows) => find_net_p99(rows, "lw-i8", 4.0, 200.0).map(Some),
+            None => Ok(None),
+        },
         other => bail!("unknown gate metric {other:?}"),
     }
 }
@@ -172,6 +218,40 @@ fn main() -> anyhow::Result<()> {
         bail!("BENCH_serve.json was emitted under QFT_BENCH_SMOKE — smoke numbers are not \
                comparable; rerun the real benches");
     }
+    // BENCH_net.json is optional: absent or smoke-tainted means the
+    // wire-latency metric is SKIPPED (visibly), never failed or faked
+    let net: Option<Value> = match std::fs::read_to_string(util::repo_root_path("BENCH_net.json"))
+    {
+        Err(_) => {
+            println!("no BENCH_net.json — wire-latency metric skipped (run `make bench-net`)");
+            None
+        }
+        Ok(text) => match Value::parse(&text) {
+            Ok(v) => Some(v),
+            Err(e) => {
+                println!("BENCH_net.json unreadable ({e}) — wire-latency metric skipped");
+                None
+            }
+        },
+    };
+    let net_rows: Option<&[Value]> = match net.as_ref() {
+        None => None,
+        Some(v) => {
+            let rows = v.arr()?;
+            let net_smoke = rows
+                .iter()
+                .any(|r| r.opt("smoke").and_then(|v| v.num().ok()).unwrap_or(0.0) != 0.0);
+            if net_smoke {
+                println!(
+                    "BENCH_net.json was emitted under QFT_BENCH_SMOKE — wire-latency metric \
+                     skipped, not faked"
+                );
+                None
+            } else {
+                Some(rows)
+            }
+        }
+    };
 
     let dispatch = summary_str(gemm_rows, "kernel_dispatch");
     // an empty field means a stale BENCH_gemm.json from before the bench
@@ -182,9 +262,9 @@ fn main() -> anyhow::Result<()> {
         if dispatch.is_empty() { "? (stale BENCH_gemm.json)" } else { &dispatch }
     );
 
-    let mut current: Vec<(&Metric, f64)> = Vec::with_capacity(METRICS.len());
+    let mut current: Vec<(&Metric, Option<f64>)> = Vec::with_capacity(METRICS.len());
     for m in METRICS {
-        current.push((m, current_value(m.name, gemm_rows, serve_rows)?));
+        current.push((m, current_value(m.name, gemm_rows, serve_rows, net_rows)?));
     }
 
     let base_path = util::repo_root_path("BENCH_baseline.json");
@@ -217,6 +297,17 @@ fn main() -> anyhow::Result<()> {
             String::from("| metric | previous | new | delta |\n|---|---:|---:|---:|\n");
         let mut metrics = HashMap::new();
         for (m, v) in &current {
+            // a skipped optional bench keeps its previous baseline entry
+            // verbatim instead of being overwritten with nothing
+            let Some(v) = v else {
+                if let Some(pm) = prev_metric(m.name) {
+                    metrics.insert(m.name.to_string(), pm.clone());
+                    let _ = writeln!(table, "| `{}` | (kept) | (bench not run) | - |", m.name);
+                } else {
+                    let _ = writeln!(table, "| `{}` | - | (bench not run) | - |", m.name);
+                }
+                continue;
+            };
             let mut o = HashMap::new();
             o.insert("value".to_string(), Value::Num(*v));
             o.insert("higher_is_better".to_string(), Value::Bool(m.higher_is_better));
@@ -278,6 +369,11 @@ fn main() -> anyhow::Result<()> {
     let mut regressions = Vec::new();
     let mut skips = 0usize;
     for (m, cur) in &current {
+        let Some(cur) = cur else {
+            let _ = writeln!(table, "| `{}` | - | - | - | - | skipped (bench not run) |", m.name);
+            skips += 1;
+            continue;
+        };
         let bm = baseline.get("metrics")?.get(m.name).map_err(|_| {
             anyhow!("baseline lacks metric {:?} — rerun `make bench-baseline`", m.name)
         })?;
@@ -367,11 +463,7 @@ fn main() -> anyhow::Result<()> {
     println!(
         "bench-gate OK: {} metrics within tolerance of the committed baseline{}",
         current.len() - skips,
-        if skips > 0 {
-            format!(" ({skips} SIMD floor(s) skipped under scalar dispatch)")
-        } else {
-            String::new()
-        }
+        if skips > 0 { format!(" ({skips} skipped)") } else { String::new() }
     );
     Ok(())
 }

@@ -1,0 +1,129 @@
+//! Bench N — tail latency of the TCP front-end under **open-loop** load,
+//! one `BENCH_net.json` (rows tagged `set == "open_loop"`).
+//!
+//! Each configuration starts a fresh engine + [`qft::net::NetServer`] on an
+//! ephemeral loopback port and drives it with [`qft::net::open_loop`]:
+//! every connection runs an independent Poisson arrival process and sends
+//! at its *scheduled* instants whether or not earlier replies are back, so
+//! — unlike the closed-loop `serve_throughput` bench — queueing delay shows
+//! up in the percentiles instead of silently throttling the offered rate
+//! (coordinated omission).  Latency is measured from the scheduled arrival;
+//! `p99.9` is the headline column.
+//!
+//! Sweep: backend (`lw`, `lw-i8`) × connections × total offered rate, at a
+//! fixed 2-worker engine.  The `lw-i8` row at 4 connections / 200 rps feeds
+//! the CI perf gate (`make bench-gate`).  Smoke mode shrinks everything and
+//! tags the rows so the gate skips them.
+
+#[path = "util/mod.rs"]
+mod util;
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::Duration;
+
+use qft::backend::BackendKind;
+use qft::net::{open_loop, LoadConfig, NetConfig, NetServer};
+use qft::quant::deploy::Mode;
+use qft::serve::{Engine, Fleet, ServeConfig};
+use qft::util::json::Value;
+
+/// Engine width is pinned so the sweep varies only offered load.
+const WORKERS: usize = 2;
+
+fn main() {
+    util::section("qft::net open-loop wire latency (Poisson arrivals)");
+    let smoke = util::smoke();
+    let backends: &[BackendKind] = if smoke {
+        &[BackendKind::Int8]
+    } else {
+        &[BackendKind::Int(Mode::Lw), BackendKind::Int8]
+    };
+    let conn_sweep: &[usize] = if smoke { &[2] } else { &[4, 16] };
+    let rate_sweep: &[f64] = if smoke { &[100.0] } else { &[200.0, 800.0] };
+    let secs = if smoke { 0.3 } else { 2.5 };
+    // prefer a manifest arch when artifacts exist; otherwise the built-in
+    // synthetic arch keeps the bench runnable in any checkout
+    let arch = if Path::new("artifacts/manifest.json").is_file() {
+        "resnet_tiny"
+    } else {
+        "synthetic"
+    };
+
+    let mut rows = Vec::new();
+    for &kind in backends {
+        let fleet = Fleet::load(Path::new("artifacts"), &[(arch.to_string(), kind)])
+            .expect("load fleet");
+        let slot = fleet.slot(0).expect("fleet slot 0");
+        let (slot_key, image_len) = (slot.key.clone(), slot.image_len());
+        for &connections in conn_sweep {
+            for &rate in rate_sweep {
+                let cfg = ServeConfig {
+                    workers: WORKERS,
+                    max_batch: 8,
+                    max_wait: Duration::from_micros(200),
+                    queue_cap: 256,
+                    ..Default::default()
+                };
+                let engine = Engine::start(fleet.clone(), &cfg);
+                let server = NetServer::start(engine, &NetConfig::default())
+                    .expect("bind ephemeral loopback port");
+                let run = LoadConfig {
+                    addr: server.local_addr(),
+                    slot_key: slot_key.clone(),
+                    image_len,
+                    connections,
+                    rate_rps: rate,
+                    duration: Duration::from_secs_f64(secs),
+                    seed: 7,
+                };
+                // trickle warm-up (first-touch, listener, scratch growth),
+                // then zero the obs registry so the net counters cover
+                // exactly the measured window
+                let warm = LoadConfig {
+                    rate_rps: rate.min(50.0),
+                    duration: Duration::from_secs_f64(0.2),
+                    ..run.clone()
+                };
+                open_loop(&warm).expect("warm-up run");
+                qft::obs::reset();
+                let label = format!("{slot_key} conns={connections} rate={rate:.0}rps");
+                let report = util::timed(&label, || open_loop(&run).expect("open-loop run"));
+                println!("{report}");
+                let net_report = server.shutdown(Duration::from_secs(5));
+                if net_report.drain.dropped > 0 {
+                    println!(
+                        "  (drain shed {} queued requests at the shutdown deadline)",
+                        net_report.drain.dropped
+                    );
+                }
+
+                let mut m = HashMap::new();
+                m.insert("set".to_string(), Value::Str("open_loop".to_string()));
+                m.insert("smoke".to_string(), Value::Num(if smoke { 1.0 } else { 0.0 }));
+                m.insert("arch".to_string(), Value::Str(slot_key.clone()));
+                m.insert("backend".to_string(), Value::Str(kind.key().to_string()));
+                m.insert("workers".to_string(), Value::Num(WORKERS as f64));
+                m.insert("connections".to_string(), Value::Num(connections as f64));
+                m.insert("rate_rps".to_string(), Value::Num(rate));
+                m.insert("duration_s".to_string(), Value::Num(secs));
+                m.insert("offered".to_string(), Value::Num(report.offered as f64));
+                m.insert("replies".to_string(), Value::Num(report.replies as f64));
+                m.insert("shed".to_string(), Value::Num(report.shed as f64));
+                m.insert("errors".to_string(), Value::Num(report.errors as f64));
+                m.insert("throughput_rps".to_string(), Value::Num(report.throughput_rps));
+                m.insert("p50_us".to_string(), Value::Num(report.p50_us as f64));
+                m.insert("p99_us".to_string(), Value::Num(report.p99_us as f64));
+                m.insert("p999_us".to_string(), Value::Num(report.p999_us as f64));
+                m.insert("max_us".to_string(), Value::Num(report.max_us as f64));
+                m.insert("mean_us".to_string(), Value::Num(report.mean_us));
+                rows.push(Value::Obj(m));
+            }
+        }
+    }
+
+    let out_path = util::repo_root_path("BENCH_net.json");
+    std::fs::write(&out_path, Value::Arr(rows).to_string_compact())
+        .expect("write BENCH_net.json");
+    println!("wrote {}", out_path.display());
+}

@@ -67,6 +67,23 @@
 //! checkout (`cargo bench --bench serve_throughput` emits
 //! `BENCH_serve.json`).
 //!
+//! ## Serving on the wire — `qft::net`
+//!
+//! [`net`] puts the engine on a TCP socket: one listener speaks a
+//! length-prefixed binary protocol ([`net::frame`] — magic + version +
+//! fleet slot key + f32 payload, typed error frames mirroring
+//! [`serve::Reject`]) and a minimal HTTP/1.1 shim ([`net::http`] —
+//! `POST /infer`, `GET /healthz`, `GET /metrics` Prometheus text), told
+//! apart by sniffing the first four bytes.  Admission control sheds
+//! over-capacity load with explicit `Busy` frames
+//! ([`serve::Client::try_submit`]) instead of letting the queue collapse;
+//! [`net::NetServer::shutdown`] drains gracefully through
+//! [`serve::Engine::drain`] (bounded, dropped requests answered with
+//! typed `Shutdown` rejections and counted).  [`net::open_loop`] is the
+//! open-loop Poisson load harness behind `cargo bench --bench net_load`
+//! (`BENCH_net.json`: throughput + p50/p99/p99.9-under-load, measured
+//! from scheduled arrivals so coordinated omission cannot hide queueing).
+//!
 //! ## Observability — `qft::obs`
 //!
 //! [`obs`] is the std-only, always-compiled telemetry layer over the
@@ -170,6 +187,7 @@ pub mod coordinator;
 pub mod data;
 pub mod fleet;
 pub mod kernel;
+pub mod net;
 pub mod nn;
 pub mod obs;
 pub mod par;

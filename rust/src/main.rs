@@ -66,6 +66,21 @@ SERVING / BACKEND EVAL (pure-rust execution backends; no PJRT needed):
                                           bit-identical twin version and
                                           atomically hot-swap to it (replies
                                           must not change — swap demo/check)
+            [--listen ADDR]               serve over TCP instead of the
+                                          in-process smoke client: binary
+                                          QFN1 protocol + HTTP shim (/infer,
+                                          /healthz, /metrics) on one port
+            [--serve-secs S]              with --listen: serve S seconds then
+                                          drain gracefully (0 = until killed)
+            [--max-conns N]               with --listen: connection cap;
+                                          over-cap connections get one Busy
+                                          reply and are closed
+  net-bench [--arch A] [--backend K] [--workers N] [--connections C]
+            [--rate R] [--secs S] [serve options]
+                                          self-hosted open-loop Poisson load
+                                          (R req/s over C connections against
+                                          a fresh wire server); prints
+                                          p50/p99/p99.9-under-load
   requantize [--arch A] [--backend K] [--requests R] [--shadow-every S]
             [serve options]               closed-loop phase 1 captures live
                                           ranges via the shadow backend, then
@@ -131,7 +146,8 @@ const KV_KEYS: &[&str] = &[
     "arch", "archs", "steps", "lr", "mode", "backend", "images", "ce-mix",
     "workers", "max-batch", "max-wait-us", "queue-cap", "requests",
     "concurrency", "threads", "stats-json", "obs-sample", "backend-b",
-    "ab-bp", "shadow-every", "swap-after",
+    "ab-bp", "shadow-every", "swap-after", "listen", "serve-secs",
+    "max-conns", "connections", "rate", "secs",
 ];
 /// Every boolean `--flag`.
 const BOOL_FLAGS: &[&str] = &["cle", "frozen-scales", "fast", "no-adaptive", "no-obs", "prom"];
@@ -139,7 +155,7 @@ const BOOL_FLAGS: &[&str] = &["cle", "frozen-scales", "fast", "no-adaptive", "no
 const COMMANDS: &[&str] = &[
     "pretrain", "eval-fp", "qft", "table1", "table2", "fig3", "fig5", "fig6",
     "fig7", "fig8", "fig9", "fig12", "serve", "bench-serve", "eval", "stats",
-    "requantize",
+    "requantize", "net-bench",
 ];
 
 /// flags: `--key value` pairs plus boolean `--flag`s.  Duplicates and
@@ -281,6 +297,7 @@ fn main() -> Result<()> {
         // backends and must work without PJRT/artifacts
         "serve" => cmd_serve(&artifacts, &args),
         "bench-serve" => cmd_bench_serve(&artifacts, &args),
+        "net-bench" => cmd_net_bench(&artifacts, &args),
         "eval" => cmd_eval(&artifacts, &args),
         "stats" => cmd_stats(&args),
         "requantize" => cmd_requantize(&artifacts, &args),
@@ -372,7 +389,19 @@ fn hot_swap_twin(slot: &Slot) -> Result<u32> {
 }
 
 fn cmd_serve(artifacts: &str, args: &Args) -> Result<()> {
-    reject_unused(args, "serve", &["images", "concurrency"], &["prom"])?;
+    reject_unused(
+        args,
+        "serve",
+        &["images", "concurrency", "connections", "rate", "secs"],
+        &["prom"],
+    )?;
+    if !args.kv.contains_key("listen") {
+        for k in ["serve-secs", "max-conns"] {
+            if args.kv.contains_key(k) {
+                bail!("--{k} only applies with --listen");
+            }
+        }
+    }
     let arch = args.get("arch", "synthetic");
     let kind = parse_backend(args)?;
     let requests = args.usize("requests", 512)?;
@@ -404,6 +433,48 @@ fn cmd_serve(artifacts: &str, args: &Args) -> Result<()> {
     }
     let engine = Engine::start(fleet.clone(), &cfg);
     let flush = args.kv.get("stats-json").cloned().map(spawn_stats_flush);
+    if let Some(listen) = args.kv.get("listen") {
+        // wire mode: traffic arrives over TCP, not from the smoke client
+        for k in ["requests", "swap-after"] {
+            if args.kv.contains_key(k) {
+                bail!("--{k} drives the in-process smoke client; with --listen traffic \
+                       comes over the wire");
+            }
+        }
+        let net_cfg = qft::net::NetConfig {
+            addr: listen.clone(),
+            max_conns: args.usize("max-conns", 256)?,
+            ..Default::default()
+        };
+        let server = qft::net::NetServer::start(engine, &net_cfg)?;
+        let secs = args.usize("serve-secs", 0)?;
+        println!(
+            "serving {arch}/{} on {} (binary QFN1 + HTTP /infer /healthz /metrics)",
+            kind.key(),
+            server.local_addr()
+        );
+        if secs == 0 {
+            eprintln!("serve: no --serve-secs given; serving until killed");
+            loop {
+                std::thread::sleep(Duration::from_secs(3600));
+            }
+        }
+        std::thread::sleep(Duration::from_secs(secs as u64));
+        let rep = server.shutdown(Duration::from_secs(5));
+        println!("serve {arch}/{}: {}", kind.key(), rep.drain.report);
+        if rep.drain.dropped > 0 {
+            println!(
+                "drain: {} queued requests answered with Shutdown at the deadline",
+                rep.drain.dropped
+            );
+        }
+        print!("{}", slot.status_table());
+        if let Some(ranges) = slot.calib() {
+            print!("{}", ranges.table());
+        }
+        obs_shutdown_dump(flush);
+        return Ok(());
+    }
     let client = engine.client();
     let ds = qft::data::Dataset::new(0);
     let mut correct = 0usize;
@@ -441,7 +512,10 @@ fn cmd_requantize(artifacts: &str, args: &Args) -> Result<()> {
     reject_unused(
         args,
         "requantize",
-        &["images", "concurrency", "backend-b", "ab-bp", "swap-after"],
+        &[
+            "images", "concurrency", "backend-b", "ab-bp", "swap-after",
+            "listen", "serve-secs", "max-conns", "connections", "rate", "secs",
+        ],
         &["prom"],
     )?;
     let arch = args.get("arch", "synthetic");
@@ -503,7 +577,10 @@ fn cmd_bench_serve(artifacts: &str, args: &Args) -> Result<()> {
     reject_unused(
         args,
         "bench-serve",
-        &["images", "backend-b", "ab-bp", "shadow-every", "swap-after"],
+        &[
+            "images", "backend-b", "ab-bp", "shadow-every", "swap-after",
+            "listen", "serve-secs", "max-conns", "connections", "rate", "secs",
+        ],
         &["prom"],
     )?;
     let arch = args.get("arch", "synthetic");
@@ -540,6 +617,65 @@ fn cmd_bench_serve(artifacts: &str, args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `repro net-bench` — self-hosted open-loop wire bench: start a fresh
+/// engine + TCP front-end on an ephemeral loopback port, drive it with the
+/// [`qft::net::open_loop`] Poisson harness, and print
+/// latency-under-load.  The same harness (swept) backs `make bench-net`.
+fn cmd_net_bench(artifacts: &str, args: &Args) -> Result<()> {
+    reject_unused(
+        args,
+        "net-bench",
+        &[
+            "images", "concurrency", "requests", "listen", "serve-secs",
+            "backend-b", "ab-bp", "shadow-every", "swap-after", "stats-json",
+        ],
+        &["prom"],
+    )?;
+    let arch = args.get("arch", "synthetic");
+    let kind = parse_backend(args)?;
+    let cfg = serve_cfg(args)?;
+    let connections = args.usize("connections", 4)?;
+    let rate = args.f32("rate", 200.0)? as f64;
+    let secs = args.usize("secs", 3)?;
+    anyhow::ensure!(rate > 0.0, "--rate must be positive");
+    anyhow::ensure!(secs > 0, "--secs must be positive");
+
+    eprintln!("net-bench: kernel dispatch {}", qft::kernel::kernel_dispatch());
+    let fleet = Fleet::load(Path::new(artifacts), &[(arch.clone(), kind)])?;
+    let slot = fleet.slot(0).expect("fleet just loaded slot 0");
+    let slot_key = slot.key.clone();
+    let image_len = slot.image_len();
+    let engine = Engine::start(fleet.clone(), &cfg);
+    let net_cfg = qft::net::NetConfig {
+        max_conns: args.usize("max-conns", 256)?,
+        ..Default::default()
+    };
+    let server = qft::net::NetServer::start(engine, &net_cfg)?;
+    let load_cfg = qft::net::LoadConfig {
+        addr: server.local_addr(),
+        slot_key: slot_key.clone(),
+        image_len,
+        connections,
+        rate_rps: rate,
+        duration: Duration::from_secs(secs as u64),
+        seed: 7,
+    };
+    let report = qft::net::open_loop(&load_cfg)?;
+    println!(
+        "net-bench {slot_key} workers={} connections={connections} offered={rate:.0}/s:",
+        cfg.workers
+    );
+    println!("{report}");
+    let rep = server.shutdown(Duration::from_secs(5));
+    println!(
+        "drain: {} dropped{}",
+        rep.drain.dropped,
+        if rep.drain.timed_out { " (deadline hit)" } else { "" }
+    );
+    obs_shutdown_dump(None);
+    Ok(())
+}
+
 /// `repro stats` — render a `--stats-json` flush file (any
 /// [`qft::obs::render_json`] document) without touching the engine.
 fn cmd_stats(args: &Args) -> Result<()> {
@@ -550,7 +686,8 @@ fn cmd_stats(args: &Args) -> Result<()> {
             "arch", "archs", "steps", "lr", "mode", "backend", "images", "ce-mix",
             "workers", "max-batch", "max-wait-us", "queue-cap", "requests",
             "concurrency", "obs-sample", "backend-b", "ab-bp", "shadow-every",
-            "swap-after",
+            "swap-after", "listen", "serve-secs", "max-conns", "connections",
+            "rate", "secs",
         ],
         &["cle", "frozen-scales", "fast", "no-adaptive", "no-obs"],
     )?;
@@ -577,7 +714,8 @@ fn cmd_eval(artifacts: &str, args: &Args) -> Result<()> {
         &[
             "workers", "max-batch", "max-wait-us", "queue-cap", "concurrency",
             "requests", "stats-json", "backend-b", "ab-bp", "shadow-every",
-            "swap-after",
+            "swap-after", "listen", "serve-secs", "max-conns", "connections",
+            "rate", "secs",
         ],
         &["no-adaptive", "prom"],
     )?;
@@ -612,7 +750,8 @@ fn run_pipeline_cmd(rt: &Runtime, cmd: &str, args: &Args) -> Result<()> {
     // read) would defeat the strict-flag contract Args::parse enforces
     for key in [
         "backend", "images", "stats-json", "obs-sample", "backend-b", "ab-bp",
-        "shadow-every", "swap-after",
+        "shadow-every", "swap-after", "listen", "serve-secs", "max-conns",
+        "connections", "rate", "secs",
     ] {
         if args.kv.contains_key(key) {
             bail!("--{key} applies to the serving / backend-eval commands only");

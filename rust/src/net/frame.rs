@@ -1,0 +1,375 @@
+//! Length-prefixed binary wire protocol for the serving front-end.
+//!
+//! Every frame is a fixed 20-byte header followed by a bounded payload:
+//!
+//! ```text
+//! offset  size  field
+//!      0     4  magic            b"QFN1"
+//!      4     1  version          0x01
+//!      5     1  frame type       1 = infer, 2 = reply, 3 = error
+//!      6     2  reserved         must be 0
+//!      8     8  request id       u64 LE (echoed verbatim in the reply)
+//!     16     4  payload length   u32 LE, <= MAX_PAYLOAD (1 MiB)
+//!     20     n  payload          (per frame type, below)
+//! ```
+//!
+//! Payloads (all integers little-endian):
+//!
+//! * **infer** — `[slot_len: u16][slot key: utf8][image: f32 × n]`; the
+//!   image region must be a multiple of 4 bytes.  The slot key is the
+//!   fleet wire key (`"arch/backend"`, e.g. `"synthetic/lw-i8"`).
+//! * **reply** — `[top1: u16][batch: u16][latency_us: u32][logits: f32 × n]`.
+//! * **error** — `[code: u16][message: utf8]`; codes mirror
+//!   [`crate::serve::Reject`] plus the framing failures ([`ErrCode`]).
+//!
+//! Decoding is total: any byte sequence either yields a frame or a typed
+//! [`FrameError`] — never a panic, never an allocation proportional to a
+//! lying length prefix (lengths are validated against [`MAX_PAYLOAD`] and
+//! the bytes actually present before anything is copied).
+
+use std::io::{Read, Write};
+
+use crate::serve::Reject;
+
+/// First four bytes of every frame (and what the server sniffs to tell
+/// binary clients from HTTP ones on the same port).
+pub const MAGIC: [u8; 4] = *b"QFN1";
+/// Protocol version carried in byte 4.
+pub const VERSION: u8 = 1;
+/// Fixed header size in bytes.
+pub const HEADER_LEN: usize = 20;
+/// Upper bound on a payload: large enough for any deployment image
+/// (`224*224*4` floats ≈ 784 KiB), small enough that a lying length prefix
+/// cannot balloon allocation.
+pub const MAX_PAYLOAD: usize = 1 << 20;
+
+pub const TY_INFER: u8 = 1;
+pub const TY_REPLY: u8 = 2;
+pub const TY_ERROR: u8 = 3;
+
+/// Typed error codes carried in error-frame payloads.  The first four
+/// mirror [`Reject`] (engine-side admission failures); the rest are
+/// framing failures the server answers before a request ever reaches the
+/// engine.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ErrCode {
+    UnknownSlot,
+    PayloadSize,
+    Busy,
+    Shutdown,
+    BadMagic,
+    BadVersion,
+    Oversized,
+    Truncated,
+    Malformed,
+    Internal,
+}
+
+impl ErrCode {
+    pub fn as_u16(self) -> u16 {
+        match self {
+            ErrCode::UnknownSlot => 1,
+            ErrCode::PayloadSize => 2,
+            ErrCode::Busy => 3,
+            ErrCode::Shutdown => 4,
+            ErrCode::BadMagic => 5,
+            ErrCode::BadVersion => 6,
+            ErrCode::Oversized => 7,
+            ErrCode::Truncated => 8,
+            ErrCode::Malformed => 9,
+            ErrCode::Internal => 10,
+        }
+    }
+
+    pub fn from_u16(v: u16) -> Option<ErrCode> {
+        Some(match v {
+            1 => ErrCode::UnknownSlot,
+            2 => ErrCode::PayloadSize,
+            3 => ErrCode::Busy,
+            4 => ErrCode::Shutdown,
+            5 => ErrCode::BadMagic,
+            6 => ErrCode::BadVersion,
+            7 => ErrCode::Oversized,
+            8 => ErrCode::Truncated,
+            9 => ErrCode::Malformed,
+            10 => ErrCode::Internal,
+            _ => return None,
+        })
+    }
+
+    /// Stable lowercase name (HTTP shim error bodies, logs).
+    pub fn key(self) -> &'static str {
+        match self {
+            ErrCode::UnknownSlot => "unknown_slot",
+            ErrCode::PayloadSize => "payload_size",
+            ErrCode::Busy => "busy",
+            ErrCode::Shutdown => "shutdown",
+            ErrCode::BadMagic => "bad_magic",
+            ErrCode::BadVersion => "bad_version",
+            ErrCode::Oversized => "oversized",
+            ErrCode::Truncated => "truncated",
+            ErrCode::Malformed => "malformed",
+            ErrCode::Internal => "internal",
+        }
+    }
+}
+
+/// Typed decode failure.  [`decode`] returns these instead of panicking on
+/// any input; the server turns them into error frames via
+/// [`Frame::from_frame_error`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum FrameError {
+    /// First four bytes are not [`MAGIC`].
+    BadMagic([u8; 4]),
+    /// Unsupported protocol version.
+    BadVersion(u8),
+    /// Unknown frame type byte.
+    BadType(u8),
+    /// Length prefix exceeds [`MAX_PAYLOAD`].
+    Oversized { len: usize, max: usize },
+    /// Fewer bytes than the header + length prefix promise.
+    Truncated { want: usize, got: usize },
+    /// Header fine, payload internally inconsistent.
+    Malformed(&'static str),
+}
+
+impl std::fmt::Display for FrameError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FrameError::BadMagic(m) => write!(f, "bad magic {m:02x?} (want {MAGIC:02x?})"),
+            FrameError::BadVersion(v) => write!(f, "unsupported protocol version {v}"),
+            FrameError::BadType(t) => write!(f, "unknown frame type {t}"),
+            FrameError::Oversized { len, max } => {
+                write!(f, "payload length {len} exceeds maximum {max}")
+            }
+            FrameError::Truncated { want, got } => {
+                write!(f, "truncated frame: want {want} bytes, got {got}")
+            }
+            FrameError::Malformed(why) => write!(f, "malformed payload: {why}"),
+        }
+    }
+}
+
+impl std::error::Error for FrameError {}
+
+impl FrameError {
+    /// The wire code an error frame reporting this failure carries.
+    pub fn code(&self) -> ErrCode {
+        match self {
+            FrameError::BadMagic(_) => ErrCode::BadMagic,
+            FrameError::BadVersion(_) => ErrCode::BadVersion,
+            FrameError::BadType(_) | FrameError::Malformed(_) => ErrCode::Malformed,
+            FrameError::Oversized { .. } => ErrCode::Oversized,
+            FrameError::Truncated { .. } => ErrCode::Truncated,
+        }
+    }
+}
+
+/// One decoded wire frame.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Frame {
+    /// Client → server: classify `image` on fleet slot `slot_key`.
+    Infer { id: u64, slot_key: String, image: Vec<f32> },
+    /// Server → client: the classification result.
+    Reply { id: u64, top1: u16, batch: u16, latency_us: u32, logits: Vec<f32> },
+    /// Server → client: typed failure (admission or framing).
+    Error { id: u64, code: ErrCode, msg: String },
+}
+
+impl Frame {
+    pub fn id(&self) -> u64 {
+        match self {
+            Frame::Infer { id, .. } | Frame::Reply { id, .. } | Frame::Error { id, .. } => *id,
+        }
+    }
+
+    /// The error frame mirroring an engine-side [`Reject`].
+    pub fn from_reject(id: u64, r: &Reject) -> Frame {
+        let code = match r {
+            Reject::UnknownSlot { .. } => ErrCode::UnknownSlot,
+            Reject::PayloadSize { .. } => ErrCode::PayloadSize,
+            Reject::Busy { .. } => ErrCode::Busy,
+            Reject::Shutdown => ErrCode::Shutdown,
+        };
+        Frame::Error { id, code, msg: r.to_string() }
+    }
+
+    /// The error frame reporting a framing failure.
+    pub fn from_frame_error(id: u64, e: &FrameError) -> Frame {
+        Frame::Error { id, code: e.code(), msg: e.to_string() }
+    }
+
+    /// Serialize to header + payload bytes.
+    pub fn encode(&self) -> Vec<u8> {
+        let (ty, payload) = match self {
+            Frame::Infer { slot_key, image, .. } => {
+                let key = slot_key.as_bytes();
+                let n = key.len().min(u16::MAX as usize);
+                let mut p = Vec::with_capacity(2 + n + image.len() * 4);
+                p.extend_from_slice(&(n as u16).to_le_bytes());
+                p.extend_from_slice(&key[..n]);
+                for v in image {
+                    p.extend_from_slice(&v.to_le_bytes());
+                }
+                (TY_INFER, p)
+            }
+            Frame::Reply { top1, batch, latency_us, logits, .. } => {
+                let mut p = Vec::with_capacity(8 + logits.len() * 4);
+                p.extend_from_slice(&top1.to_le_bytes());
+                p.extend_from_slice(&batch.to_le_bytes());
+                p.extend_from_slice(&latency_us.to_le_bytes());
+                for v in logits {
+                    p.extend_from_slice(&v.to_le_bytes());
+                }
+                (TY_REPLY, p)
+            }
+            Frame::Error { code, msg, .. } => {
+                let m = msg.as_bytes();
+                let n = m.len().min(MAX_PAYLOAD - 2);
+                let mut p = Vec::with_capacity(2 + n);
+                p.extend_from_slice(&code.as_u16().to_le_bytes());
+                p.extend_from_slice(&m[..n]);
+                (TY_ERROR, p)
+            }
+        };
+        debug_assert!(payload.len() <= MAX_PAYLOAD);
+        let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
+        out.extend_from_slice(&MAGIC);
+        out.push(VERSION);
+        out.push(ty);
+        out.extend_from_slice(&[0, 0]);
+        out.extend_from_slice(&self.id().to_le_bytes());
+        out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        out.extend_from_slice(&payload);
+        out
+    }
+}
+
+/// Validated header fields.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Header {
+    pub ty: u8,
+    pub id: u64,
+    pub len: usize,
+}
+
+/// Validate a full 20-byte header: magic, version, type, and the length
+/// prefix against [`MAX_PAYLOAD`].
+pub fn parse_header(h: &[u8; HEADER_LEN]) -> Result<Header, FrameError> {
+    if h[..4] != MAGIC {
+        return Err(FrameError::BadMagic([h[0], h[1], h[2], h[3]]));
+    }
+    if h[4] != VERSION {
+        return Err(FrameError::BadVersion(h[4]));
+    }
+    let ty = h[5];
+    if !matches!(ty, TY_INFER | TY_REPLY | TY_ERROR) {
+        return Err(FrameError::BadType(ty));
+    }
+    let id = u64::from_le_bytes(h[8..16].try_into().unwrap());
+    let len = u32::from_le_bytes(h[16..20].try_into().unwrap()) as usize;
+    if len > MAX_PAYLOAD {
+        return Err(FrameError::Oversized { len, max: MAX_PAYLOAD });
+    }
+    Ok(Header { ty, id, len })
+}
+
+/// Decode a payload whose header already validated.
+pub fn decode_payload(ty: u8, id: u64, p: &[u8]) -> Result<Frame, FrameError> {
+    match ty {
+        TY_INFER => {
+            if p.len() < 2 {
+                return Err(FrameError::Malformed("infer payload shorter than slot_len"));
+            }
+            let n = u16::from_le_bytes([p[0], p[1]]) as usize;
+            if 2 + n > p.len() {
+                return Err(FrameError::Malformed("slot key runs past the payload"));
+            }
+            let slot_key = std::str::from_utf8(&p[2..2 + n])
+                .map_err(|_| FrameError::Malformed("slot key is not utf-8"))?
+                .to_string();
+            let img = &p[2 + n..];
+            if img.len() % 4 != 0 {
+                return Err(FrameError::Malformed("image region is not a multiple of 4 bytes"));
+            }
+            let image = img
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            Ok(Frame::Infer { id, slot_key, image })
+        }
+        TY_REPLY => {
+            if p.len() < 8 {
+                return Err(FrameError::Malformed("reply payload shorter than its fixed part"));
+            }
+            let rest = &p[8..];
+            if rest.len() % 4 != 0 {
+                return Err(FrameError::Malformed("logits region is not a multiple of 4 bytes"));
+            }
+            Ok(Frame::Reply {
+                id,
+                top1: u16::from_le_bytes([p[0], p[1]]),
+                batch: u16::from_le_bytes([p[2], p[3]]),
+                latency_us: u32::from_le_bytes([p[4], p[5], p[6], p[7]]),
+                logits: rest
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect(),
+            })
+        }
+        TY_ERROR => {
+            if p.len() < 2 {
+                return Err(FrameError::Malformed("error payload shorter than its code"));
+            }
+            let code = ErrCode::from_u16(u16::from_le_bytes([p[0], p[1]]))
+                .ok_or(FrameError::Malformed("unknown error code"))?;
+            let msg = String::from_utf8_lossy(&p[2..]).into_owned();
+            Ok(Frame::Error { id, code, msg })
+        }
+        other => Err(FrameError::BadType(other)),
+    }
+}
+
+/// Decode one frame from the front of `buf`; on success also returns how
+/// many bytes it consumed (trailing bytes are the next frame).  Total over
+/// arbitrary input — every failure is a typed [`FrameError`].
+pub fn decode(buf: &[u8]) -> Result<(Frame, usize), FrameError> {
+    if buf.len() < HEADER_LEN {
+        // report the most specific failure the bytes present allow, so a
+        // short garbage prefix is "bad magic", not "truncated"
+        if buf.len() >= 4 && buf[..4] != MAGIC {
+            return Err(FrameError::BadMagic([buf[0], buf[1], buf[2], buf[3]]));
+        }
+        if buf.len() >= 5 && buf[4] != VERSION {
+            return Err(FrameError::BadVersion(buf[4]));
+        }
+        return Err(FrameError::Truncated { want: HEADER_LEN, got: buf.len() });
+    }
+    let hdr: &[u8; HEADER_LEN] = buf[..HEADER_LEN].try_into().unwrap();
+    let h = parse_header(hdr)?;
+    let total = HEADER_LEN + h.len;
+    if buf.len() < total {
+        return Err(FrameError::Truncated { want: total, got: buf.len() });
+    }
+    let frame = decode_payload(h.ty, h.id, &buf[HEADER_LEN..total])?;
+    Ok((frame, total))
+}
+
+/// Blocking client-side read of one whole frame (test + load-harness
+/// helper; the server has its own poll-aware read path).
+pub fn read_frame<R: Read>(r: &mut R) -> anyhow::Result<Frame> {
+    let mut hdr = [0u8; HEADER_LEN];
+    r.read_exact(&mut hdr)?;
+    let h = parse_header(&hdr)?;
+    let mut payload = vec![0u8; h.len];
+    r.read_exact(&mut payload)?;
+    Ok(decode_payload(h.ty, h.id, &payload)?)
+}
+
+/// Write one frame and flush; returns the encoded byte count.
+pub fn write_frame<W: Write>(w: &mut W, f: &Frame) -> std::io::Result<usize> {
+    let bytes = f.encode();
+    w.write_all(&bytes)?;
+    w.flush()?;
+    Ok(bytes.len())
+}

@@ -1,0 +1,218 @@
+//! Minimal HTTP/1.1 shim so `curl` can reach the serving engine without a
+//! binary-protocol client.
+//!
+//! One request per connection (`Connection: close`), three routes:
+//!
+//! * `GET /healthz` — `200 ok` while serving, `503 draining` once
+//!   shutdown has begun (load-balancer health probe semantics);
+//! * `GET /metrics` — Prometheus text exposition from [`crate::obs`];
+//! * `POST /infer` — body `{"slot": "arch/backend", "image": [f32, …]}`,
+//!   reply `{"id", "top1", "batch", "latency_us", "logits"}`; admission
+//!   failures map onto HTTP status codes (`Busy` → 429, unknown slot →
+//!   404, shutdown → 503, malformed → 400).
+//!
+//! This is a shim, not a web server: no keep-alive, no chunked encoding,
+//! no TLS — the binary protocol ([`super::frame`]) is the production
+//! path, and everything here routes through the same
+//! [`super::serve_infer`] admission logic.
+
+use std::io::Write;
+use std::net::TcpStream;
+use std::sync::atomic::Ordering;
+use std::time::{Duration, Instant};
+
+use crate::obs;
+use crate::util::json::Value;
+
+use super::frame::MAX_PAYLOAD;
+use super::{read_exact_poll, serve_infer, ConnCtx, ErrCode, Frame};
+
+/// Largest request head (request line + headers) the shim will buffer.
+const MAX_HEAD: usize = 16 * 1024;
+/// Whole-request deadline: a client must deliver head + body within this.
+const REQUEST_DEADLINE: Duration = Duration::from_secs(10);
+
+/// Serve one HTTP request on a freshly sniffed connection.  `first` holds
+/// the already-consumed sniff bytes (the start of the request line).
+pub(crate) fn handle(
+    mut stream: TcpStream,
+    first: &[u8],
+    ctx: &ConnCtx,
+    shed_conn: bool,
+) -> std::io::Result<()> {
+    let deadline = Instant::now() + REQUEST_DEADLINE;
+    let mut buf: Vec<u8> = first.to_vec();
+    // read until the blank line ending the head
+    let head_end = loop {
+        if let Some(pos) = find_head_end(&buf) {
+            break pos;
+        }
+        if buf.len() > MAX_HEAD {
+            return respond(&mut stream, 431, "request head too large\n", "text/plain");
+        }
+        if Instant::now() > deadline || ctx.stop.load(Ordering::SeqCst) {
+            return respond(&mut stream, 408, "request timeout\n", "text/plain");
+        }
+        let mut chunk = [0u8; 1024];
+        match std::io::Read::read(&mut stream, &mut chunk) {
+            Ok(0) => return Ok(()), // peer gave up
+            Ok(n) => buf.extend_from_slice(&chunk[..n]),
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) => {}
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    };
+    let head = String::from_utf8_lossy(&buf[..head_end]).into_owned();
+    let mut lines = head.lines();
+    let request_line = lines.next().unwrap_or("");
+    let mut parts = request_line.split_whitespace();
+    let method = parts.next().unwrap_or("");
+    let path = parts.next().unwrap_or("");
+    let content_length = lines
+        .filter_map(|l| l.split_once(':'))
+        .find(|(k, _)| k.trim().eq_ignore_ascii_case("content-length"))
+        .and_then(|(_, v)| v.trim().parse::<usize>().ok())
+        .unwrap_or(0);
+    obs::net_metrics().bytes_in.add((head_end + 4) as u64);
+
+    match (method, path) {
+        ("GET", "/healthz") => {
+            if ctx.stop.load(Ordering::SeqCst) {
+                respond(&mut stream, 503, "draining\n", "text/plain")
+            } else {
+                respond(&mut stream, 200, "ok\n", "text/plain")
+            }
+        }
+        ("GET", "/metrics") => {
+            let body = obs::render_prometheus();
+            respond(&mut stream, 200, &body, "text/plain; version=0.0.4")
+        }
+        ("POST", "/infer") => {
+            if content_length > MAX_PAYLOAD {
+                return respond(&mut stream, 413, "body too large\n", "text/plain");
+            }
+            // part of the body may already sit in the sniff buffer
+            let mut body = buf[head_end + 4..].to_vec();
+            if body.len() > content_length {
+                body.truncate(content_length);
+            }
+            let already = body.len();
+            body.resize(content_length, 0);
+            if content_length > already
+                && !read_exact_poll(&mut stream, &mut body[already..], &ctx.stop, false)?
+            {
+                return Ok(());
+            }
+            obs::net_metrics().bytes_in.add((content_length - already) as u64);
+            infer(&mut stream, &body, ctx, shed_conn)
+        }
+        _ => respond(&mut stream, 404, "not found\n", "text/plain"),
+    }
+}
+
+/// `POST /infer` body → [`serve_infer`] → JSON response.
+fn infer(
+    stream: &mut TcpStream,
+    body: &[u8],
+    ctx: &ConnCtx,
+    shed_conn: bool,
+) -> std::io::Result<()> {
+    let parsed = std::str::from_utf8(body)
+        .ok()
+        .and_then(|t| Value::parse(t).ok())
+        .and_then(|v| {
+            let slot = v.get("slot").ok()?.str().ok()?.to_string();
+            let image: Option<Vec<f32>> = v
+                .get("image")
+                .ok()?
+                .arr()
+                .ok()?
+                .iter()
+                .map(|x| x.num().ok().map(|n| n as f32))
+                .collect();
+            Some((slot, image?))
+        });
+    let Some((slot, image)) = parsed else {
+        return respond(
+            stream,
+            400,
+            "body must be {\"slot\": \"arch/backend\", \"image\": [..]}\n",
+            "text/plain",
+        );
+    };
+    match serve_infer(ctx, 0, &slot, image, shed_conn) {
+        Frame::Reply { id, top1, batch, latency_us, logits } => {
+            let mut m = std::collections::HashMap::new();
+            m.insert("id".to_string(), Value::Num(id as f64));
+            m.insert("top1".to_string(), Value::Num(top1 as f64));
+            m.insert("batch".to_string(), Value::Num(batch as f64));
+            m.insert("latency_us".to_string(), Value::Num(latency_us as f64));
+            m.insert(
+                "logits".to_string(),
+                Value::Arr(logits.iter().map(|&v| Value::Num(v as f64)).collect()),
+            );
+            let body = Value::Obj(m).to_string_compact();
+            respond(stream, 200, &body, "application/json")
+        }
+        Frame::Error { code, msg, .. } => {
+            let status = match code {
+                ErrCode::UnknownSlot => 404,
+                ErrCode::Busy => 429,
+                ErrCode::Shutdown => 503,
+                ErrCode::Internal => 500,
+                _ => 400,
+            };
+            let mut m = std::collections::HashMap::new();
+            m.insert("error".to_string(), Value::Str(code.key().to_string()));
+            m.insert("message".to_string(), Value::Str(msg));
+            let body = Value::Obj(m).to_string_compact();
+            respond(stream, status, &body, "application/json")
+        }
+        Frame::Infer { .. } => {
+            respond(stream, 500, "internal: unexpected frame\n", "text/plain")
+        }
+    }
+}
+
+fn find_head_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n")
+}
+
+fn status_reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        408 => "Request Timeout",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
+}
+
+/// Write one full response and count its bytes.
+fn respond(
+    stream: &mut TcpStream,
+    status: u16,
+    body: &str,
+    content_type: &str,
+) -> std::io::Result<()> {
+    let head = format!(
+        "HTTP/1.1 {status} {}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\n\
+         Connection: close\r\n\r\n",
+        status_reason(status),
+        body.len(),
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()?;
+    obs::net_metrics().bytes_out.add((head.len() + body.len()) as u64);
+    Ok(())
+}

@@ -1,0 +1,269 @@
+//! Open-loop Poisson load harness for the TCP front-end.
+//!
+//! Closed-loop load generators (each client waits for its reply before
+//! sending again) *hide* queueing collapse: as the server slows down the
+//! offered rate falls with it, so tail latency looks flat right up to the
+//! cliff.  This harness is **open-loop**: every connection pre-computes a
+//! Poisson arrival schedule (exponential inter-arrival times at the
+//! configured rate) and sends each request at its scheduled instant
+//! whether or not earlier replies have come back — and latency is measured
+//! from the *scheduled* arrival, not the actual send, so time a request
+//! spends waiting behind a slow socket counts against the server
+//! (coordinated-omission-free measurement).
+//!
+//! The hot loop is allocation-free: each connection pre-encodes a small
+//! pool of infer frames from deterministic [`crate::data::Dataset`] images
+//! and patches only the 8 id bytes per send.
+
+use std::io::Write;
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Barrier;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::data::{Dataset, Rng, Split};
+
+use super::frame::{self, Frame};
+
+/// One open-loop sweep configuration.
+#[derive(Clone, Debug)]
+pub struct LoadConfig {
+    /// Server address (usually a [`super::NetServer::local_addr`]).
+    pub addr: SocketAddr,
+    /// Fleet wire key to target (`"arch/backend"`).
+    pub slot_key: String,
+    /// Image payload length the slot expects (floats).
+    pub image_len: usize,
+    /// Concurrent connections, each running its own arrival process.
+    pub connections: usize,
+    /// *Total* offered arrival rate (requests/s across all connections).
+    pub rate_rps: f64,
+    /// Measurement horizon.
+    pub duration: Duration,
+    /// Seed for schedules and images (deterministic per connection).
+    pub seed: u64,
+}
+
+/// What one open-loop run measured.
+#[derive(Clone, Debug)]
+pub struct LoadReport {
+    /// Requests the schedule offered (sent or attempted).
+    pub offered: u64,
+    /// Successful replies.
+    pub replies: u64,
+    /// Typed `Busy` sheds (admission control working as designed).
+    pub shed: u64,
+    /// Everything else: other error frames, I/O failures.
+    pub errors: u64,
+    pub p50_us: u64,
+    pub p99_us: u64,
+    pub p999_us: u64,
+    pub max_us: u64,
+    pub mean_us: f64,
+    /// Replies per wall-clock second.
+    pub throughput_rps: f64,
+    pub wall_s: f64,
+}
+
+impl std::fmt::Display for LoadReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(
+            f,
+            "open-loop: {} offered, {} replied, {} shed, {} errors in {:.2}s \
+             ({:.1} replies/s)",
+            self.offered, self.replies, self.shed, self.errors, self.wall_s, self.throughput_rps
+        )?;
+        write!(
+            f,
+            "latency-under-load (us, from scheduled arrival): p50 {} | p99 {} | p99.9 {} \
+             | max {} | mean {:.1}",
+            self.p50_us, self.p99_us, self.p999_us, self.max_us, self.mean_us
+        )
+    }
+}
+
+/// Frames each connection pre-encodes and cycles through (distinct images,
+/// zero allocation in the send loop).
+const FRAME_POOL: usize = 8;
+
+/// Run one open-loop sweep: `connections` threads, each an independent
+/// Poisson process at `rate_rps / connections`, all started together on a
+/// barrier.  Returns merged counts and latency quantiles.
+pub fn open_loop(cfg: &LoadConfig) -> Result<LoadReport> {
+    assert!(cfg.connections >= 1, "need at least one connection");
+    assert!(cfg.rate_rps > 0.0, "offered rate must be positive");
+    let per_conn_rate = cfg.rate_rps / cfg.connections as f64;
+    let start_gate = Barrier::new(cfg.connections);
+    let results: Vec<Result<ConnResult>> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..cfg.connections)
+            .map(|idx| {
+                let gate = &start_gate;
+                s.spawn(move || run_conn(cfg, idx, per_conn_rate, gate))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("load thread panicked")).collect()
+    });
+    let mut merged = ConnResult::default();
+    for r in results {
+        let r = r?;
+        merged.offered += r.offered;
+        merged.replies += r.replies;
+        merged.shed += r.shed;
+        merged.errors += r.errors;
+        merged.latencies_us.extend_from_slice(&r.latencies_us);
+        merged.wall = merged.wall.max(r.wall);
+    }
+    merged.latencies_us.sort_unstable();
+    let lat = &merged.latencies_us;
+    let q = |p: f64| -> u64 {
+        if lat.is_empty() {
+            return 0;
+        }
+        let rank = ((p * lat.len() as f64).ceil() as usize).clamp(1, lat.len());
+        lat[rank - 1]
+    };
+    let wall_s = merged.wall.as_secs_f64().max(1e-9);
+    Ok(LoadReport {
+        offered: merged.offered,
+        replies: merged.replies,
+        shed: merged.shed,
+        errors: merged.errors,
+        p50_us: q(0.50),
+        p99_us: q(0.99),
+        p999_us: q(0.999),
+        max_us: lat.last().copied().unwrap_or(0),
+        mean_us: if lat.is_empty() {
+            0.0
+        } else {
+            lat.iter().map(|&v| v as f64).sum::<f64>() / lat.len() as f64
+        },
+        throughput_rps: merged.replies as f64 / wall_s,
+        wall_s,
+    })
+}
+
+#[derive(Default)]
+struct ConnResult {
+    offered: u64,
+    replies: u64,
+    shed: u64,
+    errors: u64,
+    latencies_us: Vec<u64>,
+    wall: Duration,
+}
+
+fn run_conn(
+    cfg: &LoadConfig,
+    idx: usize,
+    per_conn_rate: f64,
+    gate: &Barrier,
+) -> Result<ConnResult> {
+    // setup before the barrier, but ALWAYS reach the barrier — a failed
+    // connect must not strand the other connections' gate.wait()
+    let setup = conn_setup(cfg, idx, per_conn_rate);
+    gate.wait();
+    let (mut stream, schedule, mut pool) = setup?;
+    let reader = stream.try_clone().context("clone stream for reader")?;
+
+    let mut out = ConnResult::default();
+    let t0 = Instant::now();
+    let (replies, shed, frame_errors, latencies) = std::thread::scope(|s| {
+        // reader thread: replies come back in request order but are read
+        // INDEPENDENTLY of the send schedule, so a slow server delays
+        // replies, never the offered load (true open loop).  The echoed id
+        // indexes the schedule, anchoring latency at the scheduled arrival
+        // (coordinated-omission-free).
+        let schedule = &schedule;
+        let h = s.spawn(move || {
+            let mut reader = reader;
+            let (mut replies, mut shed, mut errors) = (0u64, 0u64, 0u64);
+            let mut lats: Vec<u64> = Vec::with_capacity(schedule.len());
+            loop {
+                match frame::read_frame(&mut reader) {
+                    Ok(Frame::Reply { id, .. }) => {
+                        let at = schedule.get(id as usize).copied().unwrap_or_default();
+                        lats.push(t0.elapsed().saturating_sub(at).as_micros() as u64);
+                        replies += 1;
+                    }
+                    Ok(Frame::Error { code: super::ErrCode::Busy, .. }) => shed += 1,
+                    Ok(_) => errors += 1,
+                    // EOF after the server drained the pipeline is the
+                    // normal end; anything lost shows up in the caller's
+                    // offered-vs-answered reconciliation
+                    Err(_) => break,
+                }
+            }
+            (replies, shed, errors, lats)
+        });
+        // writer (this thread): fire each request at its scheduled
+        // arrival, whether or not earlier replies have come back
+        for (i, &at) in schedule.iter().enumerate() {
+            let now = t0.elapsed();
+            if at > now {
+                std::thread::sleep(at - now);
+            }
+            out.offered += 1;
+            let buf = &mut pool[i % FRAME_POOL];
+            buf[8..16].copy_from_slice(&(i as u64).to_le_bytes());
+            if stream.write_all(buf).is_err() {
+                break;
+            }
+        }
+        // half-close: the server drains what is pipelined, replies, sees
+        // EOF, and closes — which ends the reader loop
+        let _ = stream.shutdown(std::net::Shutdown::Write);
+        h.join().expect("reader thread panicked")
+    });
+    out.replies = replies;
+    out.shed = shed;
+    out.latencies_us = latencies;
+    // whatever was offered but never answered (send failures, lost
+    // replies, malformed answers) counts as an error
+    out.errors = frame_errors + out.offered.saturating_sub(replies + shed + frame_errors);
+    out.wall = t0.elapsed();
+    Ok(out)
+}
+
+type ConnSetup = (TcpStream, Vec<Duration>, Vec<Vec<u8>>);
+
+/// Connect and pre-compute this connection's schedule + frame pool.
+fn conn_setup(cfg: &LoadConfig, idx: usize, per_conn_rate: f64) -> Result<ConnSetup> {
+    let stream = TcpStream::connect(cfg.addr)
+        .with_context(|| format!("load conn {idx}: connect {}", cfg.addr))?;
+    stream.set_nodelay(true).context("nodelay")?;
+    stream.set_read_timeout(Some(Duration::from_secs(30))).context("read timeout")?;
+
+    // Poisson schedule: exponential inter-arrival gaps at this
+    // connection's share of the offered rate, pre-computed so the hot loop
+    // does no float math
+    let mut rng = Rng::new(cfg.seed.wrapping_mul(0x9E3779B9).wrapping_add(idx as u64 + 1));
+    let horizon = cfg.duration.as_secs_f64();
+    let mut schedule: Vec<Duration> = Vec::new();
+    let mut t = 0.0f64;
+    loop {
+        let u = rng.uniform() as f64;
+        t += -(1.0 - u).max(1e-12).ln() / per_conn_rate;
+        if t >= horizon {
+            break;
+        }
+        schedule.push(Duration::from_secs_f64(t));
+    }
+
+    // pre-encoded frame pool: distinct deterministic images, id patched in
+    // place per send
+    let ds = Dataset::new(cfg.seed.wrapping_add(idx as u64));
+    let pool: Vec<Vec<u8>> = (0..FRAME_POOL)
+        .map(|i| {
+            let (mut img, _) = ds.sample(Split::Val, i as u64);
+            // the slot's contract may differ from the dataset's native
+            // size; cycle or truncate to fit
+            if img.len() != cfg.image_len {
+                let src = img.clone();
+                img = (0..cfg.image_len).map(|j| src[j % src.len()]).collect();
+            }
+            Frame::Infer { id: 0, slot_key: cfg.slot_key.clone(), image: img }.encode()
+        })
+        .collect();
+    Ok((stream, schedule, pool))
+}

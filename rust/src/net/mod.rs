@@ -1,0 +1,421 @@
+//! `qft::net` — TCP serving front-end over the [`crate::serve`] engine.
+//!
+//! The ROADMAP's serving stack ends, before this module, at in-process
+//! calls into the batcher; `qft::net` puts that engine on a wire.  One
+//! listener speaks two protocols, told apart by sniffing the first four
+//! bytes of each connection:
+//!
+//! * the length-prefixed **binary protocol** ([`frame`]) — magic +
+//!   version + fleet slot key + f32 payload, with typed error frames
+//!   mirroring [`crate::serve::Reject`]; a connection pipelines any number
+//!   of requests;
+//! * a minimal **HTTP/1.1 shim** ([`http`]) so `curl` works: `POST
+//!   /infer` (JSON), `GET /healthz`, and `GET /metrics` (Prometheus text
+//!   from [`crate::obs`]).
+//!
+//! Admission control ([`crate::serve::Client::try_submit`]): a full
+//! batcher queue sheds the request with an explicit `Busy` frame (HTTP
+//! 429) instead of stalling the connection and letting the queue collapse;
+//! a connection accepted over `max_conns` gets `Busy` for its first
+//! request and is closed.  Graceful shutdown ([`NetServer::shutdown`]):
+//! stop accepting, unblock per-connection reads, finish in-flight work via
+//! [`crate::serve::Engine::drain`] (bounded, with a dropped-request
+//! count), then close.
+//!
+//! Std-only by design — acceptor threads + a thread per connection over
+//! blocking sockets with short read timeouts.  The engine batches across
+//! connections, so concurrency is bounded by `max_conns`, not by kernel
+//! threads doing work: connection threads spend their life parked in
+//! `read()`.  [`load`] is the open-loop Poisson load harness behind
+//! `cargo bench --bench net_load` and `repro net-bench`.
+
+pub mod frame;
+pub mod http;
+pub mod load;
+
+pub use frame::{ErrCode, Frame, FrameError};
+pub use load::{open_loop, LoadConfig, LoadReport};
+
+use std::io::Read;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::fleet::Fleet;
+use crate::obs;
+use crate::serve::{Client, DrainReport, Engine, Reject};
+
+/// Front-end knobs.
+#[derive(Clone, Debug)]
+pub struct NetConfig {
+    /// Listen address (`"127.0.0.1:0"` picks an ephemeral port).
+    pub addr: String,
+    /// Acceptor threads sharing the one listener.
+    pub acceptors: usize,
+    /// Connection cap: connections accepted beyond this answer their first
+    /// request with `Busy` and are closed.
+    pub max_conns: usize,
+    /// Per-request engine reply deadline.
+    pub infer_timeout: Duration,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        NetConfig {
+            addr: "127.0.0.1:0".to_string(),
+            acceptors: 1,
+            max_conns: 256,
+            infer_timeout: Duration::from_secs(30),
+        }
+    }
+}
+
+/// How long a connection blocked in a read may linger after shutdown
+/// begins before its read errors out.
+const STOP_GRACE: Duration = Duration::from_secs(2);
+/// Read-timeout quantum: how often a parked read rechecks the stop flag.
+const POLL: Duration = Duration::from_millis(50);
+
+/// Shared per-connection context.
+pub(crate) struct ConnCtx {
+    pub client: Client,
+    pub fleet: Arc<Fleet>,
+    pub stop: Arc<AtomicBool>,
+    pub infer_timeout: Duration,
+}
+
+/// A listening front-end over a running [`Engine`].
+pub struct NetServer {
+    engine: Engine,
+    local_addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    acceptors: Vec<JoinHandle<()>>,
+    conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
+}
+
+/// What [`NetServer::shutdown`] returns: where it listened plus the
+/// engine's bounded-drain outcome.
+#[derive(Debug)]
+pub struct NetReport {
+    pub addr: SocketAddr,
+    pub drain: DrainReport,
+}
+
+impl NetServer {
+    /// Bind `cfg.addr` and start accepting on top of a running engine.
+    pub fn start(engine: Engine, cfg: &NetConfig) -> Result<NetServer> {
+        let listener = TcpListener::bind(&cfg.addr)
+            .with_context(|| format!("net: cannot bind {}", cfg.addr))?;
+        let local_addr = listener.local_addr().context("net: local_addr")?;
+        // non-blocking listener + poll: accept() cannot be woken portably,
+        // so acceptors must never park in it if shutdown is to be prompt
+        listener.set_nonblocking(true).context("net: set_nonblocking")?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let conns: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::default();
+        let active = Arc::new(AtomicUsize::new(0));
+        let max_conns = cfg.max_conns.max(1);
+        let infer_timeout = cfg.infer_timeout;
+        let acceptors = (0..cfg.acceptors.max(1))
+            .map(|_| {
+                let listener = listener.try_clone().context("net: clone listener")?;
+                let stop = stop.clone();
+                let conns = conns.clone();
+                let active = active.clone();
+                let client = engine.client();
+                let fleet = engine.fleet().clone();
+                Ok(std::thread::spawn(move || {
+                    accept_loop(&listener, &stop, &conns, &active, max_conns, infer_timeout,
+                        client, fleet);
+                }))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(NetServer { engine, local_addr, stop, acceptors, conns })
+    }
+
+    /// Where the listener actually bound (resolves `:0`).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Handle for in-process submissions alongside the wire.
+    pub fn client(&self) -> Client {
+        self.engine.client()
+    }
+
+    /// Graceful shutdown: stop accepting, unblock connection reads, join
+    /// them, then [`Engine::drain`] with `timeout` — in-flight and queued
+    /// requests get up to that long to finish; the rest are answered with
+    /// typed `Shutdown` rejections and counted in the report.
+    pub fn shutdown(self, timeout: Duration) -> NetReport {
+        self.stop.store(true, Ordering::SeqCst);
+        for h in self.acceptors {
+            let _ = h.join();
+        }
+        let handles = std::mem::take(&mut *self.conns.lock().unwrap());
+        for h in handles {
+            let _ = h.join();
+        }
+        NetReport { addr: self.local_addr, drain: self.engine.drain(timeout) }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn accept_loop(
+    listener: &TcpListener,
+    stop: &Arc<AtomicBool>,
+    conns: &Arc<Mutex<Vec<JoinHandle<()>>>>,
+    active: &Arc<AtomicUsize>,
+    max_conns: usize,
+    infer_timeout: Duration,
+    client: Client,
+    fleet: Arc<Fleet>,
+) {
+    while !stop.load(Ordering::SeqCst) {
+        let (stream, _peer) = match listener.accept() {
+            Ok(ok) => ok,
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(20));
+                continue;
+            }
+            Err(_) => {
+                std::thread::sleep(Duration::from_millis(20));
+                continue;
+            }
+        };
+        obs::net_metrics().conns_accepted.add(1);
+        let n = active.fetch_add(1, Ordering::SeqCst) + 1;
+        obs::net_metrics().conns_active.set(n as i64);
+        // over the cap: still answer — one typed Busy for the first parsed
+        // request, then close — so the client learns *why*, in-protocol
+        let shed_conn = n > max_conns;
+        let ctx = ConnCtx {
+            client: client.clone(),
+            fleet: fleet.clone(),
+            stop: stop.clone(),
+            infer_timeout,
+        };
+        let active = active.clone();
+        let handle = std::thread::spawn(move || {
+            let _ = handle_conn(stream, &ctx, shed_conn);
+            let n = active.fetch_sub(1, Ordering::SeqCst) - 1;
+            obs::net_metrics().conns_active.set(n as i64);
+        });
+        let mut held = conns.lock().unwrap();
+        held.retain(|h| !h.is_finished());
+        held.push(handle);
+    }
+}
+
+/// Serve one connection: sniff the first four bytes, then dispatch to the
+/// binary loop or the HTTP shim.
+fn handle_conn(stream: TcpStream, ctx: &ConnCtx, shed_conn: bool) -> std::io::Result<()> {
+    // accepted sockets are blocking with a short read timeout: reads poll
+    // the stop flag every POLL instead of parking forever
+    stream.set_nonblocking(false)?;
+    stream.set_read_timeout(Some(POLL))?;
+    stream.set_write_timeout(Some(Duration::from_secs(5)))?;
+    stream.set_nodelay(true)?;
+    let mut stream = stream;
+    let mut first = [0u8; 4];
+    if !read_exact_poll(&mut stream, &mut first, &ctx.stop, true)? {
+        return Ok(()); // closed (or shutdown) before a first byte arrived
+    }
+    if first == frame::MAGIC {
+        handle_binary(stream, ctx, shed_conn, first)
+    } else {
+        http::handle(stream, &first, ctx, shed_conn)
+    }
+}
+
+/// Read exactly `buf.len()` bytes off a short-timeout socket, polling the
+/// stop flag between timeouts.  Returns `Ok(false)` for a clean "nothing
+/// here": EOF or shutdown before the *first* byte, when `abortable` — a
+/// mid-buffer EOF or a post-grace shutdown is an error either way.
+pub(crate) fn read_exact_poll(
+    stream: &mut TcpStream,
+    buf: &mut [u8],
+    stop: &AtomicBool,
+    abortable: bool,
+) -> std::io::Result<bool> {
+    let mut filled = 0usize;
+    let mut stop_seen: Option<Instant> = None;
+    while filled < buf.len() {
+        match stream.read(&mut buf[filled..]) {
+            Ok(0) => {
+                if abortable && filled == 0 {
+                    return Ok(false);
+                }
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::UnexpectedEof,
+                    "peer closed mid-frame",
+                ));
+            }
+            Ok(n) => filled += n,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                if stop.load(Ordering::SeqCst) {
+                    if abortable && filled == 0 {
+                        return Ok(false);
+                    }
+                    // shutdown mid-frame: give the peer a grace period to
+                    // finish the bytes, then give up
+                    let seen = *stop_seen.get_or_insert_with(Instant::now);
+                    if seen.elapsed() > STOP_GRACE {
+                        return Err(std::io::Error::new(
+                            std::io::ErrorKind::TimedOut,
+                            "shutdown while mid-frame",
+                        ));
+                    }
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(true)
+}
+
+/// Binary-protocol connection loop: read frames, answer each with a reply
+/// or a typed error frame.  Framing errors that poison the byte stream
+/// (bad header) get one error frame and a close; payload-level errors keep
+/// the connection alive.
+fn handle_binary(
+    mut stream: TcpStream,
+    ctx: &ConnCtx,
+    shed_conn: bool,
+    first4: [u8; 4],
+) -> std::io::Result<()> {
+    let nm = obs::net_metrics();
+    let mut preread: Option<[u8; 4]> = Some(first4);
+    loop {
+        let mut hdr = [0u8; frame::HEADER_LEN];
+        let read_t0;
+        match preread.take() {
+            Some(four) => {
+                // the sniff already consumed the magic; wire-read time for
+                // this first request starts at the sniffed byte
+                read_t0 = Instant::now();
+                hdr[..4].copy_from_slice(&four);
+                if !read_exact_poll(&mut stream, &mut hdr[4..], &ctx.stop, false)? {
+                    return Ok(());
+                }
+            }
+            None => {
+                // idle-wait for the next request OUTSIDE the wire-read
+                // timer: read one byte abortably, then time the rest
+                if !read_exact_poll(&mut stream, &mut hdr[..1], &ctx.stop, true)? {
+                    return Ok(());
+                }
+                read_t0 = Instant::now();
+                if !read_exact_poll(&mut stream, &mut hdr[1..], &ctx.stop, false)? {
+                    return Ok(());
+                }
+            }
+        }
+        let h = match frame::parse_header(&hdr) {
+            Ok(h) => h,
+            Err(e) => {
+                // the byte stream is unframed from here on — answer once,
+                // then close
+                write_reply(&mut stream, &Frame::from_frame_error(0, &e))?;
+                return Ok(());
+            }
+        };
+        let mut payload = vec![0u8; h.len];
+        if !read_exact_poll(&mut stream, &mut payload, &ctx.stop, false)? {
+            return Ok(());
+        }
+        nm.bytes_in.add((frame::HEADER_LEN + h.len) as u64);
+        nm.wire_read_us.record(read_t0.elapsed().as_micros() as u64);
+        let reply = match frame::decode_payload(h.ty, h.id, &payload) {
+            Ok(Frame::Infer { id, slot_key, image }) => {
+                serve_infer(ctx, id, &slot_key, image, shed_conn)
+            }
+            Ok(_) => Frame::Error {
+                id: h.id,
+                code: ErrCode::Malformed,
+                msg: "server accepts only infer frames".to_string(),
+            },
+            Err(e) => Frame::from_frame_error(h.id, &e),
+        };
+        write_reply(&mut stream, &reply)?;
+        if shed_conn {
+            return Ok(()); // over the connection cap: one answer, then close
+        }
+    }
+}
+
+/// Run one admission-checked inference and build the reply frame.  Every
+/// failure mode is a typed error frame; nothing here can panic a worker.
+pub(crate) fn serve_infer(
+    ctx: &ConnCtx,
+    id: u64,
+    slot_key: &str,
+    image: Vec<f32>,
+    shed: bool,
+) -> Frame {
+    let nm = obs::net_metrics();
+    if ctx.stop.load(Ordering::SeqCst) {
+        return Frame::from_reject(id, &Reject::Shutdown);
+    }
+    if shed {
+        nm.shed.add(1);
+        return Frame::Error {
+            id,
+            code: ErrCode::Busy,
+            msg: "connection limit reached, request shed".to_string(),
+        };
+    }
+    let Some(slot) = ctx.fleet.resolve(slot_key) else {
+        let known: Vec<&str> = ctx.fleet.keys().collect();
+        return Frame::Error {
+            id,
+            code: ErrCode::UnknownSlot,
+            msg: format!("unknown slot {slot_key:?} (serving: {})", known.join(", ")),
+        };
+    };
+    let rx = match ctx.client.try_submit(slot, image) {
+        Ok(rx) => rx,
+        Err(reject) => {
+            if matches!(reject, Reject::Busy { .. }) {
+                nm.shed.add(1);
+            }
+            return Frame::from_reject(id, &reject);
+        }
+    };
+    match rx.recv_timeout(ctx.infer_timeout) {
+        Ok(Ok(reply)) => Frame::Reply {
+            // the wire id is the client's correlation handle — echo it, not
+            // the engine-internal request id
+            id,
+            top1: reply.top1.min(u16::MAX as usize) as u16,
+            batch: reply.batch_size.min(u16::MAX as usize) as u16,
+            latency_us: reply.latency.as_micros().min(u32::MAX as u128) as u32,
+            logits: reply.logits,
+        },
+        Ok(Err(reject)) => Frame::from_reject(id, &reject),
+        Err(_) => Frame::Error {
+            id,
+            code: ErrCode::Internal,
+            msg: format!("no reply within {:?}", ctx.infer_timeout),
+        },
+    }
+}
+
+/// Timed, counted frame write.
+fn write_reply(stream: &mut TcpStream, f: &Frame) -> std::io::Result<()> {
+    let nm = obs::net_metrics();
+    let t0 = Instant::now();
+    let n = frame::write_frame(stream, f)?;
+    nm.bytes_out.add(n as u64);
+    nm.wire_write_us.record(t0.elapsed().as_micros() as u64);
+    Ok(())
+}

@@ -176,6 +176,50 @@ pub fn route_changes() -> &'static Counter {
     &C
 }
 
+/// Wire-layer metrics for the [`crate::net`] TCP front-end: connection
+/// lifecycle, admission-control sheds, byte totals, and per-request wire
+/// read/write time.  One process-global set — the front-end serves one
+/// listener per process.
+#[derive(Default)]
+pub struct NetMetrics {
+    /// Connections accepted since start (both protocols).
+    pub conns_accepted: Counter,
+    /// Connections currently open.
+    pub conns_active: Gauge,
+    /// Requests shed by admission control (queue-full `Busy` frames and
+    /// over-cap connection sheds).
+    pub shed: Counter,
+    /// Payload + header bytes read off the wire.
+    pub bytes_in: Counter,
+    /// Bytes written to the wire (replies, error frames, HTTP responses).
+    pub bytes_out: Counter,
+    /// Per-request wire-read time (µs): first header byte → full frame in
+    /// hand.  Idle time between requests is *not* counted.
+    pub wire_read_us: LogHistogram,
+    /// Per-request wire-write time (µs): reply serialized → flushed.
+    pub wire_write_us: LogHistogram,
+}
+
+impl NetMetrics {
+    pub fn clear(&self) {
+        self.conns_accepted.clear();
+        self.conns_active.set(0);
+        self.shed.clear();
+        self.bytes_in.clear();
+        self.bytes_out.clear();
+        self.wire_read_us.clear();
+        self.wire_write_us.clear();
+    }
+}
+
+/// The process-global [`NetMetrics`] cell.  `OnceLock` rather than a
+/// `static`: [`LogHistogram`] heap-allocates its shards, so it has no
+/// `const` constructor.
+pub fn net_metrics() -> &'static NetMetrics {
+    static M: OnceLock<NetMetrics> = OnceLock::new();
+    M.get_or_init(NetMetrics::default)
+}
+
 #[derive(Default)]
 struct Maps {
     stages: BTreeMap<String, Arc<StageMetrics>>,
@@ -213,6 +257,7 @@ pub fn reset() {
     queue_depth().set(0);
     submitted().clear();
     route_changes().clear();
+    net_metrics().clear();
     let m = maps().lock().unwrap();
     for s in m.stages.values() {
         s.clear();
@@ -263,6 +308,20 @@ pub struct NetSnapshot {
     pub layers: Vec<(String, LayerRow)>,
 }
 
+/// Rendered wire-layer ([`NetMetrics`]) stats.
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct NetIoSnapshot {
+    pub conns_accepted: u64,
+    pub conns_active: i64,
+    pub shed: u64,
+    pub bytes_in: u64,
+    pub bytes_out: u64,
+    /// Wire-read time stats (µs).
+    pub wire_read: HistStats,
+    /// Wire-write time stats (µs).
+    pub wire_write: HistStats,
+}
+
 /// Point-in-time copy of every registered metric, with histogram quantiles
 /// already computed — this is what both exposition formats serialize, and
 /// what [`Snapshot::from_json`] reconstructs from a flushed file.
@@ -277,6 +336,9 @@ pub struct Snapshot {
     /// ([`crate::kernel::kernel_dispatch`]) — carried in every flush so
     /// artifacts from different machines stay comparable.
     pub kernel_dispatch: String,
+    /// Wire-layer totals from the [`crate::net`] front-end (all zero when
+    /// nothing listened).
+    pub net: NetIoSnapshot,
     pub stages: Vec<StageSnapshot>,
     pub nets: Vec<NetSnapshot>,
 }
@@ -327,6 +389,7 @@ pub fn snapshot() -> Snapshot {
                 .collect(),
         })
         .collect();
+    let nm = net_metrics();
     Snapshot {
         enabled: enabled(),
         sample_every: sample_every(),
@@ -334,6 +397,15 @@ pub fn snapshot() -> Snapshot {
         submitted: submitted().get(),
         route_changes: route_changes().get(),
         kernel_dispatch: crate::kernel::kernel_dispatch().to_string(),
+        net: NetIoSnapshot {
+            conns_accepted: nm.conns_accepted.get(),
+            conns_active: nm.conns_active.get(),
+            shed: nm.shed.get(),
+            bytes_in: nm.bytes_in.get(),
+            bytes_out: nm.bytes_out.get(),
+            wire_read: nm.wire_read_us.stats(),
+            wire_write: nm.wire_write_us.stats(),
+        },
         stages,
         nets,
     }
@@ -386,6 +458,32 @@ impl Snapshot {
             "qft_kernel_dispatch{{path=\"{}\"}} 1",
             esc(&self.kernel_dispatch)
         );
+        let _ = writeln!(o, "# HELP qft_net_conns_accepted_total TCP connections accepted");
+        let _ = writeln!(o, "# TYPE qft_net_conns_accepted_total counter");
+        let _ = writeln!(o, "qft_net_conns_accepted_total {}", self.net.conns_accepted);
+        let _ = writeln!(o, "# HELP qft_net_conns_active TCP connections currently open");
+        let _ = writeln!(o, "# TYPE qft_net_conns_active gauge");
+        let _ = writeln!(o, "qft_net_conns_active {}", self.net.conns_active);
+        let _ = writeln!(o, "# HELP qft_net_shed_total requests shed by admission control");
+        let _ = writeln!(o, "# TYPE qft_net_shed_total counter");
+        let _ = writeln!(o, "qft_net_shed_total {}", self.net.shed);
+        let _ = writeln!(o, "# HELP qft_net_bytes_in_total bytes read off the wire");
+        let _ = writeln!(o, "# TYPE qft_net_bytes_in_total counter");
+        let _ = writeln!(o, "qft_net_bytes_in_total {}", self.net.bytes_in);
+        let _ = writeln!(o, "# HELP qft_net_bytes_out_total bytes written to the wire");
+        let _ = writeln!(o, "# TYPE qft_net_bytes_out_total counter");
+        let _ = writeln!(o, "qft_net_bytes_out_total {}", self.net.bytes_out);
+        let _ = writeln!(o, "# HELP qft_net_wire_us per-request wire read/write time (µs)");
+        let _ = writeln!(o, "# TYPE qft_net_wire_us summary");
+        for (dir, h) in [("read", &self.net.wire_read), ("write", &self.net.wire_write)] {
+            let base = format!("dir=\"{dir}\"");
+            for (q, v) in [("0.5", h.p50), ("0.95", h.p95), ("0.99", h.p99), ("0.999", h.p999)] {
+                let _ = writeln!(o, "qft_net_wire_us{{{base},quantile=\"{q}\"}} {v}");
+            }
+            let _ = writeln!(o, "qft_net_wire_us_sum{{{base}}} {}", h.sum);
+            let _ = writeln!(o, "qft_net_wire_us_count{{{base}}} {}", h.count);
+            let _ = writeln!(o, "qft_net_wire_us_max{{{base}}} {}", h.max);
+        }
         if !self.stages.is_empty() {
             let _ = writeln!(o, "# HELP qft_requests_total requests executed per model");
             let _ = writeln!(o, "# TYPE qft_requests_total counter");
@@ -532,6 +630,18 @@ impl Snapshot {
                     ("kernel_dispatch", Value::Str(self.kernel_dispatch.clone())),
                 ]),
             ),
+            (
+                "net",
+                obj([
+                    ("conns_accepted", Value::Num(self.net.conns_accepted as f64)),
+                    ("conns_active", Value::Num(self.net.conns_active as f64)),
+                    ("shed", Value::Num(self.net.shed as f64)),
+                    ("bytes_in", Value::Num(self.net.bytes_in as f64)),
+                    ("bytes_out", Value::Num(self.net.bytes_out as f64)),
+                    ("wire_read_us", hist(&self.net.wire_read)),
+                    ("wire_write_us", hist(&self.net.wire_write)),
+                ]),
+            ),
             ("stages", Value::Arr(stages)),
             ("nets", Value::Arr(nets)),
         ])
@@ -555,6 +665,19 @@ impl Snapshot {
             })
         };
         let engine = v.get("engine")?;
+        // absent in pre-net flush files — read as all-zero
+        let net = match v.opt("net") {
+            Some(n) => NetIoSnapshot {
+                conns_accepted: n.get("conns_accepted")?.num()? as u64,
+                conns_active: n.get("conns_active")?.num()? as i64,
+                shed: n.get("shed")?.num()? as u64,
+                bytes_in: n.get("bytes_in")?.num()? as u64,
+                bytes_out: n.get("bytes_out")?.num()? as u64,
+                wire_read: hist(n.get("wire_read_us")?)?,
+                wire_write: hist(n.get("wire_write_us")?)?,
+            },
+            None => NetIoSnapshot::default(),
+        };
         let mut stages = Vec::new();
         for s in v.get("stages")?.arr()? {
             let mut rows = Vec::new();
@@ -607,6 +730,7 @@ impl Snapshot {
                 .and_then(|v| v.str())
                 .map(str::to_string)
                 .unwrap_or_default(),
+            net,
             stages,
             nets,
         })
@@ -631,6 +755,20 @@ impl Snapshot {
             self.route_changes,
             if self.kernel_dispatch.is_empty() { "?" } else { &self.kernel_dispatch },
         );
+        if self.net.conns_accepted > 0 {
+            let _ = writeln!(
+                o,
+                "net: {} conns accepted ({} active) | {} shed | {} B in / {} B out \
+                 | wire read p99 {}us / write p99 {}us",
+                self.net.conns_accepted,
+                self.net.conns_active,
+                self.net.shed,
+                self.net.bytes_in,
+                self.net.bytes_out,
+                self.net.wire_read.p99,
+                self.net.wire_write.p99,
+            );
+        }
         if !self.stages.is_empty() {
             let _ = writeln!(o, "\n== request stages (µs) ==");
             for s in &self.stages {
@@ -894,6 +1032,38 @@ mod tests {
         assert!(validate_prometheus("# BANANA x y\n").is_err());
         assert!(validate_prometheus("# TYPE x fruit\n").is_err());
         assert!(validate_prometheus("open{a=\"b\" 1\n").is_err());
+    }
+
+    #[test]
+    fn net_metrics_round_trip_json_and_prometheus() {
+        let nm = net_metrics();
+        nm.conns_accepted.add(3);
+        nm.conns_active.set(2);
+        nm.shed.add(1);
+        nm.bytes_in.add(4096);
+        nm.bytes_out.add(1024);
+        nm.wire_read_us.record(40);
+        nm.wire_read_us.record(90);
+        nm.wire_write_us.record(15);
+        let snap = snapshot();
+        assert!(snap.net.conns_accepted >= 3);
+        assert!(snap.net.wire_read.count >= 2);
+        // JSON round-trip reproduces the wire stats exactly
+        let back = Snapshot::from_json(&snap.to_json()).unwrap();
+        assert_eq!(back.net, snap.net);
+        // pre-net flush files (no "net" key) read back as all-zero
+        let mut doc = Value::parse(&snap.to_json()).unwrap();
+        if let Value::Obj(m) = &mut doc {
+            m.remove("net");
+        }
+        let parsed = Snapshot::from_json(&doc.to_string_compact()).unwrap();
+        assert_eq!(parsed.net, NetIoSnapshot::default());
+        // Prometheus exposition carries the net family and still validates
+        let text = snap.to_prometheus();
+        validate_prometheus(&text).unwrap();
+        assert!(text.contains("qft_net_conns_accepted_total"));
+        assert!(text.contains("qft_net_wire_us{dir=\"read\",quantile=\"0.99\"}"));
+        assert!(snap.to_table().contains("net: "));
     }
 
     #[test]

@@ -23,6 +23,7 @@
 //! are never dropped or duplicated, and FIFO order is preserved.
 
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::Sender;
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
@@ -55,6 +56,12 @@ pub enum Reject {
     UnknownSlot { slot: usize, slots: usize },
     /// The payload length does not match the slot's image contract.
     PayloadSize { slot: usize, got: usize, want: usize },
+    /// Admission control shed the request: the bounded queue was full and
+    /// the submitter chose shedding ([`Batcher::try_submit`]) over blocking.
+    Busy { depth: usize, cap: usize },
+    /// The engine is shutting down; the request was not (or will not be)
+    /// executed.
+    Shutdown,
 }
 
 impl std::fmt::Display for Reject {
@@ -66,6 +73,10 @@ impl std::fmt::Display for Reject {
             Reject::PayloadSize { slot, got, want } => {
                 write!(f, "payload is {got} floats, slot {slot} expects {want}")
             }
+            Reject::Busy { depth, cap } => {
+                write!(f, "queue full ({depth}/{cap}), request shed")
+            }
+            Reject::Shutdown => write!(f, "serve engine is shutting down"),
         }
     }
 }
@@ -144,6 +155,10 @@ pub struct Batcher {
     state: Mutex<State>,
     not_empty: Condvar,
     not_full: Condvar,
+    /// Batches handed to workers and not yet reported done — what
+    /// [`Self::idle`] adds to the queue depth so a drain can tell "queue
+    /// empty" apart from "queue empty but a forward pass is in flight".
+    executing: AtomicUsize,
     pub policy: BatchPolicy,
 }
 
@@ -155,6 +170,7 @@ impl Batcher {
             state: Mutex::new(State { q: VecDeque::new(), closed: false }),
             not_empty: Condvar::new(),
             not_full: Condvar::new(),
+            executing: AtomicUsize::new(0),
             policy,
         }
     }
@@ -184,6 +200,59 @@ impl Batcher {
         crate::obs::submitted().add(1);
         self.not_empty.notify_one();
         Ok(depth)
+    }
+
+    /// Non-blocking submit — admission control for the wire.  Where
+    /// [`Self::submit`] blocks a full queue (backpressure for in-process
+    /// callers), this *sheds*: a full queue hands the request straight back
+    /// with [`Reject::Busy`] so the front-end can answer with an explicit
+    /// busy frame instead of stalling the connection, and a closed batcher
+    /// hands it back with [`Reject::Shutdown`].  Returns the post-enqueue
+    /// queue depth on success.
+    pub fn try_submit(&self, req: InferRequest) -> Result<usize, (InferRequest, Reject)> {
+        let mut st = self.state.lock().unwrap();
+        if st.closed {
+            return Err((req, Reject::Shutdown));
+        }
+        let depth = st.q.len();
+        if depth >= self.policy.queue_cap {
+            return Err((req, Reject::Busy { depth, cap: self.policy.queue_cap }));
+        }
+        st.q.push_back(req);
+        let depth = st.q.len();
+        drop(st);
+        crate::obs::queue_depth().set(depth as i64);
+        crate::obs::submitted().add(1);
+        self.not_empty.notify_one();
+        Ok(depth)
+    }
+
+    /// A worker finished the batch it took (every exit path of the worker
+    /// body must call this exactly once per batch, or [`Self::idle`] never
+    /// turns true and a drain waits out its full deadline).
+    pub fn batch_done(&self) {
+        self.executing.fetch_sub(1, Ordering::SeqCst);
+    }
+
+    /// True when nothing is queued and no worker holds an unfinished batch.
+    /// Meaningful only after [`Self::close`] (while open, new submits can
+    /// flip it back at any moment).
+    pub fn idle(&self) -> bool {
+        let st = self.state.lock().unwrap();
+        st.q.is_empty() && self.executing.load(Ordering::SeqCst) == 0
+    }
+
+    /// Rip all still-queued requests out (for a drain that hit its
+    /// deadline): the caller owns answering each with a typed
+    /// [`Reject::Shutdown`].  Zeroes the depth gauge and wakes everyone.
+    pub fn purge(&self) -> Vec<InferRequest> {
+        let mut st = self.state.lock().unwrap();
+        let dropped: Vec<InferRequest> = st.q.drain(..).collect();
+        drop(st);
+        crate::obs::queue_depth().set(0);
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+        dropped
     }
 
     /// Next micro-batch for a worker, holding a non-full batch open for up
@@ -276,6 +345,9 @@ impl Batcher {
         // may have consumed the submitter's notification
         let leftovers = !st.q.is_empty();
         crate::obs::queue_depth().set(st.q.len() as i64);
+        // counted while the queue lock is still held, so `idle` can never
+        // observe the window between the pop and the in-flight mark
+        self.executing.fetch_add(1, Ordering::SeqCst);
         drop(st);
         self.not_full.notify_all();
         if leftovers {
@@ -405,5 +477,42 @@ mod tests {
         assert!(b.submit(r2).is_err());
         assert_eq!(b.next_batch().unwrap().len(), 1);
         assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn try_submit_sheds_on_full_and_closed() {
+        let b = Batcher::new(BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_micros(1),
+            queue_cap: 2,
+        });
+        let mut rxs = Vec::new();
+        for i in 0..2 {
+            let (r, rx) = req(i, 0);
+            assert!(b.try_submit(r).is_ok());
+            rxs.push(rx);
+        }
+        // full queue: shed with Busy, never block
+        let (r, _rx) = req(2, 0);
+        match b.try_submit(r) {
+            Err((back, Reject::Busy { depth, cap })) => {
+                assert_eq!(back.id, 2);
+                assert_eq!((depth, cap), (2, 2));
+            }
+            other => panic!("expected Busy shed, got {:?}", other.err().map(|e| e.1)),
+        }
+        // workers drain it, batch_done closes the in-flight window
+        assert_eq!(b.next_batch().unwrap().len(), 2);
+        assert!(!b.idle(), "batch taken but not done");
+        b.batch_done();
+        assert!(b.idle());
+        // closed: typed Shutdown instead of Busy
+        b.close();
+        let (r, _rx) = req(3, 0);
+        match b.try_submit(r) {
+            Err((_, Reject::Shutdown)) => {}
+            other => panic!("expected Shutdown, got {:?}", other.err().map(|e| e.1)),
+        }
+        assert!(b.purge().is_empty());
     }
 }

@@ -131,6 +131,58 @@ impl Engine {
         }
         self.stats.report()
     }
+
+    /// Graceful drain with a deadline: stop intake immediately, give
+    /// in-flight and queued work up to `timeout` to finish, then purge
+    /// whatever is still queued and answer each dropped request with a
+    /// typed [`Reject::Shutdown`] before joining the workers.
+    ///
+    /// Unlike [`Self::shutdown`] (which waits for workers to drain the
+    /// queue naturally, however long that takes), this bounds shutdown
+    /// time and *reports* what it cost: the returned
+    /// [`DrainReport::dropped`] is the number of requests shed at the
+    /// deadline, and `timed_out` says whether the deadline fired at all.
+    pub fn drain(self, timeout: Duration) -> DrainReport {
+        self.batcher.close();
+        let deadline = Instant::now() + timeout;
+        let mut timed_out = true;
+        while Instant::now() < deadline {
+            if self.batcher.idle() {
+                timed_out = false;
+                break;
+            }
+            std::thread::sleep(Duration::from_micros(200));
+        }
+        // deadline fired (or everything already finished): anything still
+        // queued is answered, not silently dropped
+        let purged = self.batcher.purge();
+        let dropped = purged.len();
+        for req in purged {
+            let _ = req.resp.send(Err(Reject::Shutdown));
+        }
+        // queue is closed and empty, so workers fall out of next_batch
+        for h in self.workers {
+            let _ = h.join();
+        }
+        DrainReport {
+            report: self.stats.report(),
+            dropped,
+            timed_out: timed_out && dropped > 0,
+        }
+    }
+}
+
+/// What a bounded [`Engine::drain`] cost: the final serving report, plus
+/// how many queued requests had to be shed at the deadline (each one was
+/// answered with [`Reject::Shutdown`], never silently dropped).
+#[derive(Clone, Debug)]
+pub struct DrainReport {
+    pub report: ServeReport,
+    /// Requests still queued at the deadline, answered with
+    /// [`Reject::Shutdown`].
+    pub dropped: usize,
+    /// True when the deadline fired with work still queued.
+    pub timed_out: bool,
 }
 
 /// Submission handle: closed-loop `infer` plus the raw async pieces.
@@ -186,6 +238,41 @@ impl Client {
         Ok(rx
             .recv_timeout(timeout)
             .map_err(|e| anyhow!("no reply within {timeout:?}: {e}"))??)
+    }
+
+    /// Non-blocking submission with full admission validation — the wire
+    /// front-end's entry point.  Where [`Self::infer`] blocks on a full
+    /// queue (backpressure), this sheds: a full queue comes back as
+    /// [`Reject::Busy`] and a closed engine as [`Reject::Shutdown`], both
+    /// of which [`crate::net`] turns into typed wire frames.  On success
+    /// the reply arrives on the returned channel.
+    pub fn try_submit(
+        &self,
+        model: usize,
+        image: Vec<f32>,
+    ) -> Result<mpsc::Receiver<InferResult>, Reject> {
+        let Some(slot) = self.fleet.slot(model) else {
+            return Err(Reject::UnknownSlot { slot: model, slots: self.fleet.len() });
+        };
+        let want = slot.image_len();
+        if image.len() != want {
+            return Err(Reject::PayloadSize { slot: model, got: image.len(), want });
+        }
+        let (tx, rx) = mpsc::channel();
+        let req = InferRequest {
+            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            model,
+            image,
+            trace: obs::Trace::start(),
+            resp: tx,
+        };
+        match self.batcher.try_submit(req) {
+            Ok(depth) => {
+                self.stats.record_enqueue(depth);
+                Ok(rx)
+            }
+            Err((_, reject)) => Err(reject),
+        }
     }
 
     /// Raw submission with NO admission validation — what a non-`Client`
@@ -248,6 +335,7 @@ fn worker_loop(fleet: &Fleet, batcher: &Batcher, stats: &ServeStats, adaptive: b
             for req in batch {
                 let _ = req.resp.send(Err(reject.clone()));
             }
+            batcher.batch_done();
             continue;
         };
         // payload checks come BEFORE routing: `select` charges the chosen
@@ -265,6 +353,7 @@ fn worker_loop(fleet: &Fleet, batcher: &Batcher, stats: &ServeStats, adaptive: b
             false
         });
         if batch.is_empty() {
+            batcher.batch_done();
             continue;
         }
         let n = batch.len();
@@ -321,6 +410,7 @@ fn worker_loop(fleet: &Fleet, batcher: &Batcher, stats: &ServeStats, adaptive: b
             &obs::BatchSpan { formed, fwd_start, fwd_end: done, replied },
             enqueues.iter().copied(),
         );
+        batcher.batch_done();
         executed += 1;
     }
     executed

@@ -39,7 +39,7 @@ pub mod stats;
 
 pub use crate::fleet::{Fleet, FleetOptions, Slot, Version};
 pub use batcher::{BatchPolicy, Batcher, InferReply, InferRequest, InferResult, Reject};
-pub use engine::{run_closed_loop, Client, Engine, ServeConfig};
+pub use engine::{run_closed_loop, Client, DrainReport, Engine, ServeConfig};
 pub use stats::{Pow2Histogram, ServeReport, ServeStats};
 
 use crate::nn::arch::{ArchSpec, OpSpec, ParamSpec};

@@ -1,0 +1,539 @@
+//! Wire-protocol and TCP front-end integration tests: frame-codec totality
+//! (round-trip + adversarial inputs), loopback bit-exactness against the
+//! in-process forward path, typed error replies for malformed traffic,
+//! admission-control shedding under overload, and bounded graceful drain.
+//!
+//! Hermetic — every engine test runs on the built-in synthetic arch, binds
+//! an ephemeral loopback port, and needs no AOT artifacts.  Engine tests
+//! serialize on one mutex because [`qft::obs`] metrics are process-global
+//! (the queue-depth gauge and net counters would otherwise cross-talk).
+
+use std::net::TcpStream;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Barrier, Mutex, MutexGuard};
+use std::time::Duration;
+
+use qft::backend::{self, BackendKind, PreparedNet, Scratch};
+use qft::data::{Dataset, Rng, Split, NUM_CLASSES};
+use qft::net::frame::{self, HEADER_LEN, MAGIC, MAX_PAYLOAD, TY_ERROR, TY_INFER, TY_REPLY};
+use qft::net::{ErrCode, Frame, FrameError, NetConfig, NetServer};
+use qft::par::Pool;
+use qft::quant::deploy::Mode;
+use qft::serve::{Engine, Fleet, Reject, ServeConfig};
+use qft::Tensor;
+
+/// Engine tests share the process-global obs registry — run them one at a
+/// time so gauge/counter assertions see only their own traffic.
+fn obs_lock() -> MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn load_lw() -> std::sync::Arc<Fleet> {
+    Fleet::load(
+        Path::new("artifacts_nonexistent_for_test"),
+        &[("synthetic".to_string(), BackendKind::Int(Mode::Lw))],
+    )
+    .unwrap()
+}
+
+// ------------------------------------------------------------ frame codec
+
+const ALL_CODES: [ErrCode; 10] = [
+    ErrCode::UnknownSlot,
+    ErrCode::PayloadSize,
+    ErrCode::Busy,
+    ErrCode::Shutdown,
+    ErrCode::BadMagic,
+    ErrCode::BadVersion,
+    ErrCode::Oversized,
+    ErrCode::Truncated,
+    ErrCode::Malformed,
+    ErrCode::Internal,
+];
+
+fn ascii(rng: &mut Rng, max_len: usize) -> String {
+    let n = (rng.next_u64() as usize) % (max_len + 1);
+    (0..n).map(|_| (b'a' + (rng.next_u64() % 26) as u8) as char).collect()
+}
+
+fn random_frame(rng: &mut Rng, case: usize) -> Frame {
+    let id = rng.next_u64();
+    match case % 3 {
+        0 => Frame::Infer {
+            id,
+            slot_key: ascii(rng, 32),
+            image: (0..(rng.next_u64() % 64)).map(|_| rng.uniform() * 2.0 - 1.0).collect(),
+        },
+        1 => Frame::Reply {
+            id,
+            top1: rng.next_u64() as u16,
+            batch: rng.next_u64() as u16,
+            latency_us: rng.next_u64() as u32,
+            logits: (0..(rng.next_u64() % 64)).map(|_| rng.uniform() * 10.0).collect(),
+        },
+        _ => Frame::Error {
+            id,
+            code: ALL_CODES[case % ALL_CODES.len()],
+            msg: ascii(rng, 48),
+        },
+    }
+}
+
+#[test]
+fn frame_codec_round_trips_random_frames() {
+    let mut rng = Rng::new(0xF00D);
+    for case in 0..300 {
+        let f = random_frame(&mut rng, case);
+        let bytes = f.encode();
+        let (back, used) = frame::decode(&bytes).expect("round trip decodes");
+        assert_eq!(used, bytes.len(), "case {case}: consumed length");
+        assert_eq!(back, f, "case {case}: round-trip identity");
+        // a second frame behind the first is the next decode's business
+        let mut two = bytes.clone();
+        two.extend_from_slice(&bytes);
+        let (first, used1) = frame::decode(&two).unwrap();
+        assert_eq!((first, used1), (f.clone(), bytes.len()));
+        let (second, used2) = frame::decode(&two[used1..]).unwrap();
+        assert_eq!((second, used2), (f, bytes.len()));
+    }
+}
+
+#[test]
+fn truncated_frames_are_rejected_typed_never_panicking() {
+    let mut rng = Rng::new(0xBEEF);
+    for case in 0..12 {
+        let bytes = random_frame(&mut rng, case).encode();
+        for cut in 0..bytes.len() {
+            match frame::decode(&bytes[..cut]) {
+                Err(FrameError::Truncated { want, got }) => {
+                    assert_eq!(got, cut, "case {case} cut {cut}");
+                    assert!(want > got, "case {case} cut {cut}: want {want} <= got {got}");
+                }
+                other => panic!("case {case} cut {cut}: expected Truncated, got {other:?}"),
+            }
+        }
+    }
+}
+
+/// Build a raw header + payload by hand (to craft what `encode` refuses to).
+fn raw(ty: u8, version: u8, len: u32, payload: &[u8]) -> Vec<u8> {
+    let mut b = Vec::with_capacity(HEADER_LEN + payload.len());
+    b.extend_from_slice(&MAGIC);
+    b.push(version);
+    b.push(ty);
+    b.extend_from_slice(&[0, 0]);
+    b.extend_from_slice(&7u64.to_le_bytes());
+    b.extend_from_slice(&len.to_le_bytes());
+    b.extend_from_slice(payload);
+    b
+}
+
+#[test]
+fn malformed_frames_get_typed_errors() {
+    // bad magic wins over everything else
+    let mut b = Frame::Error { id: 1, code: ErrCode::Busy, msg: "x".into() }.encode();
+    b[0] = b'X';
+    assert!(matches!(frame::decode(&b), Err(FrameError::BadMagic(_))));
+    // wrong version
+    let b = raw(TY_INFER, 9, 0, &[]);
+    assert_eq!(frame::decode(&b).unwrap_err(), FrameError::BadVersion(9));
+    // unknown frame type
+    let b = raw(42, frame::VERSION, 0, &[]);
+    assert_eq!(frame::decode(&b).unwrap_err(), FrameError::BadType(42));
+    // a lying length prefix is rejected before any allocation
+    let b = raw(TY_INFER, frame::VERSION, (MAX_PAYLOAD + 1) as u32, &[]);
+    assert!(matches!(frame::decode(&b), Err(FrameError::Oversized { .. })));
+    // slot key runs past the payload
+    let p = [10u8, 0, b'a', b'b', b'c'];
+    let b = raw(TY_INFER, frame::VERSION, p.len() as u32, &p);
+    assert!(matches!(frame::decode(&b), Err(FrameError::Malformed(_))));
+    // image region not a multiple of 4 bytes
+    let p = [1u8, 0, b'a', 0, 0, 0];
+    let b = raw(TY_INFER, frame::VERSION, p.len() as u32, &p);
+    assert!(matches!(frame::decode(&b), Err(FrameError::Malformed(_))));
+    // error frame with an unknown error code
+    let p = [0xFFu8, 0xFF];
+    let b = raw(TY_ERROR, frame::VERSION, p.len() as u32, &p);
+    assert!(matches!(frame::decode(&b), Err(FrameError::Malformed(_))));
+    // fuzz: decode is total over arbitrary garbage — typed error or frame,
+    // never a panic
+    let mut rng = Rng::new(0xDEAD);
+    for _ in 0..2000 {
+        let n = (rng.next_u64() % 96) as usize;
+        let buf: Vec<u8> = (0..n).map(|_| rng.next_u64() as u8).collect();
+        let _ = frame::decode(&buf);
+    }
+    // and so is decode_payload per type
+    for ty in [TY_INFER, TY_REPLY, TY_ERROR] {
+        for _ in 0..500 {
+            let n = (rng.next_u64() % 64) as usize;
+            let p: Vec<u8> = (0..n).map(|_| rng.next_u64() as u8).collect();
+            let _ = frame::decode_payload(ty, 0, &p);
+        }
+    }
+}
+
+// -------------------------------------------------------------- loopback
+
+#[test]
+fn loopback_replies_are_bit_identical_to_in_process_forward() {
+    let _g = obs_lock();
+    let fleet = Fleet::load(
+        Path::new("artifacts_nonexistent_for_test"),
+        &[
+            ("synthetic".to_string(), BackendKind::Int(Mode::Lw)),
+            ("synthetic".to_string(), BackendKind::Int8),
+            ("synthetic".to_string(), BackendKind::Fp),
+        ],
+    )
+    .unwrap();
+    // ground truth: the frozen grid's single-image forward, in process
+    let per_slot: Vec<(String, Vec<Vec<f32>>)> = (0..fleet.len())
+        .map(|sid| {
+            let slot = fleet.slot(sid).unwrap();
+            let v1 = slot.primary();
+            let (hw, ch) = (slot.arch.input_hw, slot.arch.input_ch);
+            let ds = Dataset::new(11);
+            let rows = (0..12u64)
+                .map(|i| {
+                    let (img, _) = ds.sample(Split::Val, i);
+                    let x = Tensor::new(vec![1, hw, hw, ch], img);
+                    v1.model.forward_batch(&x, &mut Scratch::new(), qft::par::global()).data
+                })
+                .collect();
+            (slot.key.clone(), rows)
+        })
+        .collect();
+
+    for workers in [1usize, 2, 8] {
+        let engine = Engine::start(fleet.clone(), &ServeConfig { workers, ..Default::default() });
+        let server = NetServer::start(engine, &NetConfig::default()).unwrap();
+        let addr = server.local_addr();
+        std::thread::scope(|s| {
+            for c in 0..4u64 {
+                let per_slot = &per_slot;
+                s.spawn(move || {
+                    let mut stream = TcpStream::connect(addr).unwrap();
+                    stream.set_nodelay(true).unwrap();
+                    let ds = Dataset::new(11);
+                    for (key, rows) in per_slot {
+                        for i in 0..12u64 {
+                            let (img, _) = ds.sample(Split::Val, i);
+                            let id = c * 1000 + i;
+                            let req = Frame::Infer { id, slot_key: key.clone(), image: img };
+                            frame::write_frame(&mut stream, &req).unwrap();
+                            match frame::read_frame(&mut stream).unwrap() {
+                                Frame::Reply { id: rid, top1, logits, .. } => {
+                                    assert_eq!(rid, id, "{key}: reply id echo");
+                                    assert_eq!(
+                                        logits, rows[i as usize],
+                                        "{key} image {i} at {workers} workers: \
+                                         wire logits != in-process forward"
+                                    );
+                                    assert!((top1 as usize) < NUM_CLASSES);
+                                }
+                                other => panic!("{key} image {i}: expected reply, got {other:?}"),
+                            }
+                        }
+                    }
+                });
+            }
+        });
+        let report = server.shutdown(Duration::from_secs(10));
+        assert_eq!(report.drain.dropped, 0, "{workers} workers: drain dropped requests");
+        assert_eq!(report.drain.report.requests as usize, 4 * 12 * fleet.len());
+    }
+}
+
+#[test]
+fn connection_churn_neither_drops_nor_duplicates() {
+    // a NEW connection per request: accept/close churn must not lose or
+    // duplicate anything
+    let _g = obs_lock();
+    let engine = Engine::start(load_lw(), &ServeConfig::default());
+    let server = NetServer::start(engine, &NetConfig::default()).unwrap();
+    let addr = server.local_addr();
+    let ids: Mutex<Vec<u64>> = Mutex::new(Vec::new());
+    std::thread::scope(|s| {
+        for c in 0..8u64 {
+            let ids = &ids;
+            s.spawn(move || {
+                let ds = Dataset::new(c);
+                for i in 0..16u64 {
+                    let id = c * 16 + i;
+                    let (img, _) = ds.sample(Split::Val, i);
+                    let mut stream = TcpStream::connect(addr).unwrap();
+                    let req = Frame::Infer {
+                        id,
+                        slot_key: "synthetic/lw".to_string(),
+                        image: img,
+                    };
+                    frame::write_frame(&mut stream, &req).unwrap();
+                    match frame::read_frame(&mut stream).unwrap() {
+                        Frame::Reply { id: rid, .. } => ids.lock().unwrap().push(rid),
+                        other => panic!("request {id}: expected reply, got {other:?}"),
+                    }
+                }
+            });
+        }
+    });
+    let mut got = ids.into_inner().unwrap();
+    got.sort_unstable();
+    got.dedup();
+    assert_eq!(got.len(), 128, "every request answered exactly once");
+    let report = server.shutdown(Duration::from_secs(10));
+    assert_eq!(report.drain.report.requests, 128);
+    assert_eq!(report.drain.dropped, 0);
+}
+
+#[test]
+fn wire_malformed_frames_get_typed_replies_and_server_survives() {
+    let _g = obs_lock();
+    let fleet = load_lw();
+    let image_len = fleet.slot(0).unwrap().image_len();
+    let engine = Engine::start(fleet, &ServeConfig::default());
+    let server = NetServer::start(engine, &NetConfig::default()).unwrap();
+    let addr = server.local_addr();
+    let ds = Dataset::new(3);
+    let valid = |id: u64| Frame::Infer {
+        id,
+        slot_key: "synthetic/lw".to_string(),
+        image: ds.sample(Split::Val, id).0,
+    };
+
+    // a poisoned byte stream (bad header) gets one typed reply, then close
+    let mut stream = TcpStream::connect(addr).unwrap();
+    std::io::Write::write_all(&mut stream, &raw(TY_INFER, 9, 0, &[])).unwrap();
+    match frame::read_frame(&mut stream).unwrap() {
+        Frame::Error { code, .. } => assert_eq!(code, ErrCode::BadVersion),
+        other => panic!("expected bad-version error, got {other:?}"),
+    }
+    let mut probe = [0u8; 1];
+    assert_eq!(std::io::Read::read(&mut stream, &mut probe).unwrap(), 0, "server must close");
+
+    // payload-level failures keep the connection alive: each error frame is
+    // followed by a successful request on the SAME connection
+    let mut stream = TcpStream::connect(addr).unwrap();
+    let cases = [
+        (
+            Frame::Infer { id: 1, slot_key: "nope/nah".into(), image: vec![0.0; 8] },
+            ErrCode::UnknownSlot,
+        ),
+        (
+            Frame::Infer { id: 2, slot_key: "synthetic/lw".into(), image: vec![0.0; 3] },
+            ErrCode::PayloadSize,
+        ),
+        (
+            Frame::Reply { id: 3, top1: 0, batch: 1, latency_us: 0, logits: vec![] },
+            ErrCode::Malformed,
+        ),
+    ];
+    for (bad, want_code) in cases {
+        let id = bad.id();
+        frame::write_frame(&mut stream, &bad).unwrap();
+        match frame::read_frame(&mut stream).unwrap() {
+            Frame::Error { id: rid, code, msg } => {
+                assert_eq!(rid, id, "error echoes the request id");
+                assert_eq!(code, want_code, "{msg}");
+                assert!(!msg.is_empty(), "error frames carry a human-readable cause");
+            }
+            other => panic!("request {id}: expected {want_code:?} error, got {other:?}"),
+        }
+        frame::write_frame(&mut stream, &valid(id + 100)).unwrap();
+        match frame::read_frame(&mut stream).unwrap() {
+            Frame::Reply { id: rid, logits, .. } => {
+                assert_eq!(rid, id + 100);
+                assert_eq!(logits.len(), NUM_CLASSES);
+            }
+            other => panic!("connection did not survive {want_code:?}: {other:?}"),
+        }
+    }
+    drop(stream);
+    // sanity: the whole gauntlet never wedged a worker
+    let report = server.shutdown(Duration::from_secs(10));
+    assert_eq!(report.drain.dropped, 0);
+    assert_eq!(report.drain.report.requests, 3, "{image_len}-float slot served 3 valid requests");
+}
+
+// -------------------------------------------- overload + graceful drain
+
+/// A delegating [`PreparedNet`] that sleeps before forwarding — makes the
+/// worker the bottleneck so admission control and drain deadlines are
+/// actually exercised.
+struct SlowNet {
+    inner: Box<dyn PreparedNet>,
+    delay: Duration,
+}
+
+impl PreparedNet for SlowNet {
+    fn kind(&self) -> BackendKind {
+        self.inner.kind()
+    }
+    fn input_hw(&self) -> usize {
+        self.inner.input_hw()
+    }
+    fn input_ch(&self) -> usize {
+        self.inner.input_ch()
+    }
+    fn num_classes(&self) -> usize {
+        self.inner.num_classes()
+    }
+    fn forward_batch(&self, x: &Tensor, scratch: &mut Scratch, pool: &Pool) -> Tensor {
+        std::thread::sleep(self.delay);
+        self.inner.forward_batch(x, scratch, pool)
+    }
+    fn forward_batch_feat(
+        &self,
+        x: &Tensor,
+        scratch: &mut Scratch,
+        pool: &Pool,
+    ) -> (Tensor, Tensor) {
+        std::thread::sleep(self.delay);
+        self.inner.forward_batch_feat(x, scratch, pool)
+    }
+}
+
+/// Install a slowed twin of the slot's v1 and route all traffic to it.
+fn promote_slow(fleet: &Fleet, delay: Duration) {
+    let slot = fleet.slot(0).unwrap();
+    let v1 = slot.primary();
+    let inner = backend::prepare(v1.kind, &slot.arch, &v1.params);
+    let v = slot
+        .install(v1.kind, Box::new(SlowNet { inner, delay }), v1.params.clone(), "slow twin".into())
+        .unwrap();
+    slot.promote(v).unwrap();
+}
+
+#[test]
+fn overload_sheds_busy_and_queue_stays_bounded() {
+    let _g = obs_lock();
+    qft::obs::reset();
+    let fleet = load_lw();
+    promote_slow(&fleet, Duration::from_millis(40));
+    const CAP: usize = 2;
+    let cfg = ServeConfig {
+        workers: 1,
+        max_batch: 1,
+        max_wait: Duration::from_micros(50),
+        queue_cap: CAP,
+        adaptive: false,
+    };
+    let engine = Engine::start(fleet.clone(), &cfg);
+    let server = NetServer::start(engine, &NetConfig::default()).unwrap();
+    let addr = server.local_addr();
+
+    let clients = 10usize;
+    let gate = Barrier::new(clients);
+    let stop = AtomicBool::new(false);
+    let replies = AtomicUsize::new(0);
+    let busy = AtomicUsize::new(0);
+    let max_depth = std::thread::scope(|s| {
+        // sample the global queue-depth gauge while the burst runs: the
+        // bounded queue must never exceed its cap
+        let sampler = s.spawn(|| {
+            let mut max_seen = 0i64;
+            while !stop.load(Ordering::Relaxed) {
+                max_seen = max_seen.max(qft::obs::queue_depth().get());
+                std::thread::sleep(Duration::from_micros(300));
+            }
+            max_seen
+        });
+        let handles: Vec<_> = (0..clients)
+            .map(|c| {
+                let (gate, replies, busy) = (&gate, &replies, &busy);
+                s.spawn(move || {
+                    let mut stream = TcpStream::connect(addr).unwrap();
+                    let ds = Dataset::new(c as u64);
+                    gate.wait();
+                    for i in 0..3u64 {
+                        let (img, _) = ds.sample(Split::Val, i);
+                        let req = Frame::Infer {
+                            id: i,
+                            slot_key: "synthetic/lw".to_string(),
+                            image: img,
+                        };
+                        frame::write_frame(&mut stream, &req).unwrap();
+                        match frame::read_frame(&mut stream).unwrap() {
+                            Frame::Reply { .. } => {
+                                replies.fetch_add(1, Ordering::Relaxed);
+                            }
+                            Frame::Error { code: ErrCode::Busy, .. } => {
+                                busy.fetch_add(1, Ordering::Relaxed);
+                            }
+                            other => panic!("client {c} request {i}: {other:?}"),
+                        }
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        stop.store(true, Ordering::Relaxed);
+        sampler.join().unwrap()
+    });
+
+    let (replies, busy) = (replies.into_inner(), busy.into_inner());
+    assert_eq!(replies + busy, clients * 3, "every request got exactly one typed answer");
+    assert!(replies > 0, "something must still be served under overload");
+    assert!(busy > 0, "a 10-way burst into a 2-deep queue must shed");
+    assert!(
+        max_depth as usize <= CAP,
+        "queue depth {max_depth} exceeded its cap {CAP} — admission control leaked"
+    );
+    let report = server.shutdown(Duration::from_secs(10));
+    assert_eq!(report.drain.report.requests as usize, replies);
+}
+
+#[test]
+fn engine_drain_reports_dropped_requests_on_deadline() {
+    let _g = obs_lock();
+    let fleet = load_lw();
+    promote_slow(&fleet, Duration::from_millis(100));
+    let cfg = ServeConfig {
+        workers: 1,
+        max_batch: 1,
+        max_wait: Duration::from_micros(50),
+        queue_cap: 64,
+        adaptive: false,
+    };
+
+    // deadline far shorter than the queued work: the drain must purge,
+    // answer every purged request with a typed Shutdown, and say so
+    let engine = Engine::start(fleet.clone(), &cfg);
+    let client = engine.client();
+    let ds = Dataset::new(5);
+    let rxs: Vec<_> = (0..6u64)
+        .map(|i| client.try_submit(0, ds.sample(Split::Val, i).0).unwrap())
+        .collect();
+    std::thread::sleep(Duration::from_millis(20)); // let the worker take one
+    let drain = engine.drain(Duration::from_millis(1));
+    assert!(drain.timed_out, "a 1 ms deadline against 100 ms batches must time out");
+    assert!(drain.dropped >= 4, "most of the queue must be shed (dropped {})", drain.dropped);
+    let (mut served, mut shut) = (0usize, 0usize);
+    for rx in rxs {
+        match rx.recv_timeout(Duration::from_secs(5)).expect("every request is answered") {
+            Ok(_) => served += 1,
+            Err(Reject::Shutdown) => shut += 1,
+            Err(other) => panic!("unexpected rejection {other:?}"),
+        }
+    }
+    assert_eq!(served + shut, 6, "no request may vanish in a drain");
+    assert_eq!(shut, drain.dropped, "the report counts exactly the shed requests");
+    assert!(served >= 1, "in-flight work finishes even past the deadline");
+
+    // generous deadline: everything finishes, nothing is dropped
+    let engine = Engine::start(fleet, &cfg);
+    let client = engine.client();
+    let rxs: Vec<_> = (0..2u64)
+        .map(|i| client.try_submit(0, ds.sample(Split::Val, i).0).unwrap())
+        .collect();
+    let drain = engine.drain(Duration::from_secs(20));
+    assert_eq!(drain.dropped, 0);
+    assert!(!drain.timed_out, "an empty queue at the deadline is not a timeout");
+    for rx in rxs {
+        assert!(rx.recv_timeout(Duration::from_secs(5)).unwrap().is_ok());
+    }
+}
