@@ -93,6 +93,12 @@ const METRICS: &[Metric] = &[
         needs_simd: false,
         desc: "lw-i8 open-loop wire p99 at 4 conns / 200 rps offered (2 workers)",
     },
+    Metric {
+        name: "net.open_loop_lw_i8_p999_us",
+        higher_is_better: false,
+        needs_simd: false,
+        desc: "lw-i8 open-loop wire p99.9 at 4 conns / 200 rps offered (2 workers)",
+    },
 ];
 
 /// Value of `key` from the gemm bench's `set == "summary"` row.
@@ -139,14 +145,16 @@ fn find_serve_p50(
     )
 }
 
-/// `p99_us` of the open-loop net-bench row at `(backend, connections,
-/// rate_rps)`.  Only called once `BENCH_net.json` exists and is non-smoke
-/// — a present file missing the pinned row is an error, not a skip.
-fn find_net_p99(
+/// Latency quantile `field` (`"p99_us"`, `"p999_us"`, ...) of the open-loop
+/// net-bench row at `(backend, connections, rate_rps)`.  Only called once
+/// `BENCH_net.json` exists and is non-smoke — a present file missing the
+/// pinned row is an error, not a skip.
+fn find_net_quantile(
     rows: &[Value],
     backend: &str,
     connections: f64,
     rate_rps: f64,
+    field: &str,
 ) -> anyhow::Result<f64> {
     for r in rows {
         let hit = r.opt("set").and_then(|v| v.str().ok()) == Some("open_loop")
@@ -154,7 +162,7 @@ fn find_net_p99(
             && r.opt("connections").and_then(|v| v.num().ok()) == Some(connections)
             && r.opt("rate_rps").and_then(|v| v.num().ok()) == Some(rate_rps);
         if hit {
-            return r.get("p99_us")?.num();
+            return r.get(field)?.num();
         }
     }
     bail!(
@@ -186,7 +194,11 @@ fn current_value(
             find_serve_p50(serve, "closed_loop", "lw-i8", "workers", 4.0).map(Some)
         }
         "net.open_loop_lw_i8_p99_us" => match net {
-            Some(rows) => find_net_p99(rows, "lw-i8", 4.0, 200.0).map(Some),
+            Some(rows) => find_net_quantile(rows, "lw-i8", 4.0, 200.0, "p99_us").map(Some),
+            None => Ok(None),
+        },
+        "net.open_loop_lw_i8_p999_us" => match net {
+            Some(rows) => find_net_quantile(rows, "lw-i8", 4.0, 200.0, "p999_us").map(Some),
             None => Ok(None),
         },
         other => bail!("unknown gate metric {other:?}"),

@@ -93,6 +93,30 @@ impl CalibRanges {
             .collect()
     }
 
+    /// Clone the captured ranges out (what [`crate::cluster::local_delta`]
+    /// ships over the wire as a `RangeDelta`).
+    pub fn export_ranges(&self) -> HashMap<usize, Vec<(f32, f32)>> {
+        self.ranges.lock().unwrap().clone()
+    }
+
+    /// Lattice-join remotely captured ranges in: pointwise min-of-mins /
+    /// max-of-maxes, growing the channel vector when the remote saw more
+    /// channels.  The join is commutative, associative, and idempotent, so
+    /// pooled requantize is insensitive to peer order and repeated delivery.
+    pub fn merge_ranges(&self, other: &HashMap<usize, Vec<(f32, f32)>>) {
+        let mut r = self.ranges.lock().unwrap();
+        for (&v, remote) in other {
+            let e = r.entry(v).or_default();
+            if e.len() < remote.len() {
+                e.resize(remote.len(), (f32::INFINITY, f32::NEG_INFINITY));
+            }
+            for ((lo, hi), &(rlo, rhi)) in e.iter_mut().zip(remote) {
+                *lo = lo.min(rlo);
+                *hi = hi.max(rhi);
+            }
+        }
+    }
+
     /// Human-readable range summary, one row per captured value id.
     pub fn table(&self) -> String {
         use std::fmt::Write as _;

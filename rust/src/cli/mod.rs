@@ -1,0 +1,586 @@
+//! `qft::cli` — the declarative flag/command surface behind the `repro`
+//! binary.
+//!
+//! The CLI used to be three hand-maintained lists in `main.rs` (`KV_KEYS`,
+//! `BOOL_FLAGS`, per-command `reject_unused` calls) that had to be kept in
+//! sync by hand.  This module replaces them with ONE table: [`SPEC`] rows
+//! carry a flag's name, arity, informative default, one-line help, and the
+//! commands it applies to, and everything else is derived —
+//!
+//! * [`Args::parse`] — strict parsing: unknown options, duplicate options,
+//!   and a value-flag at end-of-line are all hard errors (no silent
+//!   last-wins), with the exact wording the hand-rolled parser used;
+//! * [`check`] — per-command applicability: a flag the command reads
+//!   nothing from is a hard error, again with the legacy wording
+//!   (`--K is not used by \`CMD\` (see usage)` for the serving commands,
+//!   `--K applies to the serving / backend-eval commands only` for the
+//!   pipeline commands);
+//! * [`help`] — [`USAGE`] plus a generated per-flag reference.
+//!
+//! The in-module tests pin the pre-redesign surface: every legacy flag
+//! keeps its name and arity, and every legacy per-command accept/reject
+//! decision is asserted against the old hardcoded lists.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+pub const USAGE: &str = "\
+repro — QFT post-training quantization pipeline
+
+USAGE: repro [--artifacts DIR] <command> [options]
+
+COMMANDS:
+  pretrain  --arch A [--steps N]          pretrain + cache the FP teacher
+  eval-fp   --arch A                      evaluate the cached FP teacher
+  qft       --arch A [--mode lw|dch] [--cle] [--frozen-scales]
+            [--lr F] [--ce-mix F] [--fast]   run the full QFT pipeline and
+                                          export weights/A.MODE.qftw for serving
+  table1    [--archs A,B,..] [--fast]     Table 1: QFT vs PTQ baselines
+  table2    [--archs A,B,..]              Table 2: accuracy without QFT
+  fig3      [--arch A]                    kernel error vs granularity
+  fig5      [--arch A] [--fast]           dataset-size ablation
+  fig6      [--arch A] [--fast]           CE-mixing ablation
+  fig7      [--arch A] [--fast]           base-LR sweep
+  fig8      [--archs A,B] [--fast]        CLE-init x trained-scales 2x2
+  fig9      [--archs A,B] [--fast]        dch frozen vs trained L/R scales
+  fig12     [--arch A] [--fast]           per-layer kernel error lw/CLE/QFT/chw
+
+SERVING / BACKEND EVAL (pure-rust execution backends; no PJRT needed):
+  serve     [--arch A] [--backend K] [--workers N] [--max-batch B]
+            [--max-wait-us U] [--queue-cap Q] [--requests R] [--threads T]
+            [--stats-json P]              load A/K into the fleet, run a
+                                          closed-loop smoke client over R val
+                                          images, report accuracy + latency
+            [--backend-b K2] [--ab-bp W]  install K2 as a second version and
+                                          A/B-split W basis points (of 10000)
+                                          of traffic to it
+            [--shadow-every S]            mirror 1-in-S micro-batches into a
+                                          shadow FP forward capturing live
+                                          activation ranges (0 = off)
+            [--swap-after N]              after N replies, install a
+                                          bit-identical twin version and
+                                          atomically hot-swap to it (replies
+                                          must not change — swap demo/check)
+            [--listen ADDR]               serve over TCP instead of the
+                                          in-process smoke client: binary
+                                          QFN1 protocol + HTTP shim (/infer,
+                                          /healthz, /metrics) on one port
+            [--serve-secs S]              with --listen: serve S seconds then
+                                          drain gracefully (0 = until killed)
+            [--max-conns N]               with --listen: connection cap;
+                                          over-cap connections get one Busy
+                                          reply and are closed
+  net-bench [--arch A] [--backend K] [--workers N] [--connections C]
+            [--rate R] [--secs S] [serve options]
+                                          self-hosted open-loop Poisson load
+                                          (R req/s over C connections against
+                                          a fresh wire server); prints
+                                          p50/p99/p99.9-under-load
+  requantize [--arch A] [--backend K] [--requests R] [--shadow-every S]
+            [serve options]               closed-loop phase 1 captures live
+                                          ranges via the shadow backend, then
+                                          deployment constants are rebuilt
+                                          from them, hot-swapped in, and
+                                          phase 2 serves the requantized
+                                          grid; per-phase accuracy + the
+                                          fleet status table are printed
+            [--pool ADDR,..]              pooled mode: skip local serving,
+                                          pull shadow-captured ranges from
+                                          the listed live replicas (QFN1
+                                          stats-pull), lattice-merge them,
+                                          and rebuild + promote the grid
+                                          from the pooled ranges
+  bench-serve [--arch A] [--backend K] [--workers N] [--max-batch B]
+            [--max-wait-us U] [--queue-cap Q] [--concurrency C]
+            [--requests R] [--threads T] [--stats-json P]
+                                          C closed-loop clients x R requests
+                                          each; reports images/sec + p50/95/99
+  eval      [--arch A] [--backend K] [--images N] [--threads T]
+                                          offline top-1 of A under backend K
+                                          (same forward code the server runs)
+  stats     [--stats-json P] [--prom]     render a flushed obs snapshot
+                                          (default OBS_stats.json) as the
+                                          human table, or as Prometheus text
+                                          with --prom
+            [--pull ADDR,..]              aggregator mode: instead of a
+                                          file, pull live cluster stats from
+                                          every listed replica over QFN1 and
+                                          render the CRDT-merged view
+
+--backend K selects the execution grid: fp (FP32 reference), fq-lw /
+fq-dch (fake-quant simulation), lw / dch (integer deployment, f32-held
+codes), lw-i8 (true i8 x i8 -> i32 integer engine over the lw grid).  The
+legacy --mode lw|dch flag is still accepted on these commands and maps
+to the integer backends.
+
+Every command accepts --threads T: the width of the ONE process-wide
+qft::par kernel pool that serve workers and the backend evals share
+(default: available parallelism).  Results never depend on T — every
+backend's parallel path is bit-identical to its serial twin.
+
+Batching is pool-aware by default: workers shrink the micro-batch hold
+time while the kernel pool is idle (latency) and grow it when the pool
+is saturated (throughput).  --no-adaptive pins the hold at
+--max-wait-us.  Replies are bit-identical either way.
+
+Observability (qft::obs): serve / bench-serve / eval record per-model
+stage histograms (queue-wait, batch-form, compute, reply; µs) and
+sampled per-layer kernel timings (pack / im2col / gemm / recode).
+--obs-sample N times every Nth forward pass (default 16; 1 = every
+pass, 0 = layer timing off); --no-obs disables all recording.
+--stats-json P flushes the JSON snapshot to P every ~2s (atomic
+tmp+rename, so readers never see a torn file) and once at shutdown;
+`repro stats` renders such a file, and a human-readable stage/layer
+table is printed on graceful shutdown.
+
+Weights for serving resolve from weights/A.MODE.qftw (qft export), else
+weights/A.qftw (FP teacher + offline PTQ init), else he-init smoke weights.
+Without artifacts/manifest.json a built-in `synthetic` arch is served.
+
+Model fleet (qft::fleet): every served key is a versioned slot.  New
+versions install while serving; promotion is one atomic route-word swap
+(in-flight batches finish on the old version, which drains and retires);
+rollback is instant.  --backend-b/--ab-bp split traffic between two
+versions with per-arm obs labels (\"arch/backend@v2\"); --shadow-every
+feeds the CalibBackend range capture that `repro requantize` turns into
+freshly fitted deployment constants.
+
+Cluster (qft::cluster): every `--listen` replica answers QFN1 stats-pull
+frames with a CRDT delta of its counters and shadow-captured ranges.
+`repro stats --pull A,B,..` merges any number of replicas without double
+counting; `repro requantize --pool A,B,..` rebuilds the grid from their
+pooled ranges — bit-identical to one process having seen all the traffic.
+";
+
+/// Whether a flag takes a value (`--key V`) or stands alone (`--flag`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Arity {
+    Value,
+    Bool,
+}
+
+/// The commands a flag applies to.  A flag given to a command outside its
+/// set is a hard error ([`check`]) — a typed option being silently ignored
+/// defeats the strict-flag contract (e.g. `repro serve --images 100`
+/// almost certainly meant `--requests`).
+#[derive(Clone, Copy, Debug)]
+pub enum Applies {
+    All,
+    AllExcept(&'static [&'static str]),
+    Only(&'static [&'static str]),
+}
+
+impl Applies {
+    pub fn accepts(&self, cmd: &str) -> bool {
+        match self {
+            Applies::All => true,
+            Applies::AllExcept(x) => !x.contains(&cmd),
+            Applies::Only(x) => x.contains(&cmd),
+        }
+    }
+}
+
+/// One row of the CLI surface: everything [`Args::parse`], [`check`], and
+/// [`help`] need to know about a flag.
+pub struct FlagSpec {
+    pub name: &'static str,
+    pub arity: Arity,
+    /// Informative default shown by [`help`] (`None` when the default is
+    /// per-command or the flag is optional with no default).
+    pub default: Option<&'static str>,
+    pub help: &'static str,
+    pub applies: Applies,
+}
+
+/// Every command (validated before any runtime/artifact work happens).
+pub const COMMANDS: &[&str] = &[
+    "pretrain", "eval-fp", "qft", "table1", "table2", "fig3", "fig5", "fig6",
+    "fig7", "fig8", "fig9", "fig12", "serve", "bench-serve", "eval", "stats",
+    "requantize", "net-bench",
+];
+
+/// The PJRT-backed pipeline commands — serving-only flags given to these
+/// get the historical "applies to the serving / backend-eval commands
+/// only" wording instead of the per-command one.
+pub const PIPELINE_COMMANDS: &[&str] = &[
+    "pretrain", "eval-fp", "qft", "table1", "table2", "fig3", "fig5", "fig6",
+    "fig7", "fig8", "fig9", "fig12",
+];
+
+/// Commands that read `--backend` / the obs knobs.
+const BACKEND_CMDS: &[&str] = &["serve", "bench-serve", "net-bench", "eval", "requantize"];
+/// Commands that flush / read `--stats-json` snapshots.
+const FLUSH_CMDS: &[&str] = &["serve", "bench-serve", "stats", "requantize"];
+/// Commands that attach the shadow range recorder.
+const SHADOW_CMDS: &[&str] = &["serve", "requantize"];
+/// Commands that open a TCP front-end (and so cap connections).
+const WIRE_CMDS: &[&str] = &["serve", "net-bench"];
+/// Commands that reject `--concurrency` (bench-serve is the only reader;
+/// the pipeline commands tolerate it, a pre-spec quirk kept for
+/// compatibility).
+const NO_CONCURRENCY: &[&str] = &["serve", "requantize", "net-bench", "eval", "stats"];
+
+const fn kv(
+    name: &'static str,
+    default: Option<&'static str>,
+    help: &'static str,
+    applies: Applies,
+) -> FlagSpec {
+    FlagSpec { name, arity: Arity::Value, default, help, applies }
+}
+
+const fn flag(name: &'static str, help: &'static str, applies: Applies) -> FlagSpec {
+    FlagSpec { name, arity: Arity::Bool, default: None, help, applies }
+}
+
+use Applies::{All, AllExcept, Only};
+
+/// The whole CLI surface, one row per flag.  [`Args::parse`], [`check`],
+/// and [`help`] are all derived from this table — add a flag here and
+/// every layer picks it up.
+pub const SPEC: &[FlagSpec] = &[
+    kv("arch", None, "model architecture key", AllExcept(&["stats"])),
+    kv("archs", None, "comma-separated arch list", AllExcept(&["stats"])),
+    kv("steps", Some("6000"), "pretrain steps", AllExcept(&["stats"])),
+    kv("lr", None, "base learning rate", AllExcept(&["stats"])),
+    kv("mode", Some("lw"), "legacy grid selector (lw|dch)", AllExcept(&["stats"])),
+    kv("backend", None, "execution grid key", Only(BACKEND_CMDS)),
+    kv("images", Some("512"), "val images to score", Only(&["eval"])),
+    kv("ce-mix", Some("0"), "CE mixing weight", AllExcept(&["stats"])),
+    kv("workers", Some("2"), "engine worker threads", AllExcept(&["eval", "stats"])),
+    kv("max-batch", Some("8"), "micro-batch size cap", AllExcept(&["eval", "stats"])),
+    kv("max-wait-us", Some("200"), "micro-batch hold (us)", AllExcept(&["eval", "stats"])),
+    kv("queue-cap", Some("256"), "engine queue capacity", AllExcept(&["eval", "stats"])),
+    kv("requests", None, "closed-loop request count", AllExcept(&["net-bench", "eval", "stats"])),
+    kv("concurrency", Some("16"), "closed-loop clients", AllExcept(NO_CONCURRENCY)),
+    kv("threads", None, "kernel pool width", All),
+    kv("stats-json", None, "obs snapshot flush path", Only(FLUSH_CMDS)),
+    kv("obs-sample", Some("16"), "layer-timing sample period", Only(BACKEND_CMDS)),
+    kv("backend-b", None, "A/B arm-B backend", Only(&["serve"])),
+    kv("ab-bp", Some("5000"), "A/B basis points to arm B", Only(&["serve"])),
+    kv("shadow-every", None, "shadow-capture period", Only(SHADOW_CMDS)),
+    kv("swap-after", Some("0"), "hot-swap twin after N replies", Only(&["serve"])),
+    kv("listen", None, "serve over TCP on ADDR", Only(&["serve"])),
+    kv("serve-secs", Some("0"), "with --listen: serve S secs", Only(&["serve"])),
+    kv("max-conns", Some("256"), "TCP connection cap", Only(WIRE_CMDS)),
+    kv("connections", Some("4"), "open-loop connections", Only(&["net-bench"])),
+    kv("rate", Some("200"), "offered load (req/s)", Only(&["net-bench"])),
+    kv("secs", Some("3"), "open-loop duration (s)", Only(&["net-bench"])),
+    kv("pull", None, "replica ADDRs to pull cluster stats from", Only(&["stats"])),
+    kv("pool", None, "replica ADDRs to pool shadow ranges from", Only(&["requantize"])),
+    flag("cle", "CLE initialization", AllExcept(&["stats"])),
+    flag("frozen-scales", "freeze quant scales", AllExcept(&["stats"])),
+    flag("fast", "reduced-size experiment", AllExcept(&["stats"])),
+    flag("no-adaptive", "pin the micro-batch hold", AllExcept(&["eval", "stats"])),
+    flag("no-obs", "disable obs recording", Only(BACKEND_CMDS)),
+    flag("prom", "Prometheus text output", Only(&["stats"])),
+];
+
+/// The [`SPEC`] row for `name`, if any.
+pub fn spec(name: &str) -> Option<&'static FlagSpec> {
+    SPEC.iter().find(|s| s.name == name)
+}
+
+/// Parsed flags: `--key value` pairs plus boolean `--flag`s.  Duplicates
+/// and unknown options are hard errors (no silent last-wins).
+pub struct Args {
+    pub kv: HashMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Strict [`SPEC`]-driven parse of everything after the command word.
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut kv = HashMap::new();
+        let mut flags: Vec<String> = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            let Some(name) = a.strip_prefix("--") else {
+                bail!("unexpected argument {a:?}\n{USAGE}");
+            };
+            match spec(name).map(|s| s.arity) {
+                Some(Arity::Bool) => {
+                    if flags.iter().any(|f| f == name) {
+                        bail!("duplicate flag --{name}");
+                    }
+                    flags.push(name.to_string());
+                    i += 1;
+                }
+                Some(Arity::Value) => {
+                    let Some(v) = argv.get(i + 1) else {
+                        bail!("--{name} requires a value");
+                    };
+                    if kv.insert(name.to_string(), v.clone()).is_some() {
+                        bail!("duplicate option --{name} (each option may be given once)");
+                    }
+                    i += 2;
+                }
+                None => bail!("unknown option --{name}\n{USAGE}"),
+            }
+        }
+        Ok(Args { kv, flags })
+    }
+
+    pub fn get(&self, key: &str, default: &str) -> String {
+        self.kv.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn req(&self, key: &str) -> Result<String> {
+        self.kv
+            .get(key)
+            .cloned()
+            .ok_or_else(|| anyhow::anyhow!("missing required --{key}"))
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+
+    pub fn f32(&self, key: &str, default: f32) -> Result<f32> {
+        match self.kv.get(key) {
+            Some(v) => Ok(v.parse()?),
+            None => Ok(default),
+        }
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.kv.get(key) {
+            Some(v) => Ok(v.parse()?),
+            None => Ok(default),
+        }
+    }
+}
+
+/// Reject every given flag `cmd` reads nothing from, with the historical
+/// wording: pipeline commands handed a serving-only flag get the
+/// "applies to the serving / backend-eval commands only" message, the
+/// serving commands get the per-command one.
+pub fn check(cmd: &str, args: &Args) -> Result<()> {
+    for s in SPEC {
+        let given = match s.arity {
+            Arity::Value => args.kv.contains_key(s.name),
+            Arity::Bool => args.flag(s.name),
+        };
+        if !given || s.applies.accepts(cmd) {
+            continue;
+        }
+        if PIPELINE_COMMANDS.contains(&cmd) {
+            bail!("--{} applies to the serving / backend-eval commands only", s.name);
+        }
+        bail!("--{} is not used by `{cmd}` (see usage)", s.name);
+    }
+    Ok(())
+}
+
+/// [`USAGE`] plus a generated per-flag reference derived from [`SPEC`].
+pub fn help() -> String {
+    use std::fmt::Write as _;
+    let mut o = String::from(USAGE);
+    o.push_str("\nOPTIONS (derived from the qft::cli spec table):\n");
+    for s in SPEC {
+        let head = match s.arity {
+            Arity::Value => format!("--{} V", s.name),
+            Arity::Bool => format!("--{}", s.name),
+        };
+        let _ = write!(o, "  {head:<18} {}", s.help);
+        if let Some(d) = s.default {
+            let _ = write!(o, " [default {d}]");
+        }
+        let scope = match s.applies {
+            Applies::All => "all commands".to_string(),
+            Applies::AllExcept(x) => format!("all but {}", x.join(", ")),
+            Applies::Only(x) => x.join(", "),
+        };
+        let _ = writeln!(o, " ({scope})");
+    }
+    o
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The exact `--key value` surface before the spec table existed.
+    const LEGACY_KV: &[&str] = &[
+        "arch", "archs", "steps", "lr", "mode", "backend", "images", "ce-mix",
+        "workers", "max-batch", "max-wait-us", "queue-cap", "requests",
+        "concurrency", "threads", "stats-json", "obs-sample", "backend-b",
+        "ab-bp", "shadow-every", "swap-after", "listen", "serve-secs",
+        "max-conns", "connections", "rate", "secs",
+    ];
+    /// The exact boolean-flag surface before the spec table existed.
+    const LEGACY_BOOL: &[&str] = &["cle", "frozen-scales", "fast", "no-adaptive", "no-obs", "prom"];
+
+    /// The hand-maintained per-command reject lists the spec table
+    /// replaced: (command, rejected keys, rejected bool flags).
+    const LEGACY_REJECTS: &[(&str, &[&str], &[&str])] = &[
+        ("serve", &["images", "concurrency", "connections", "rate", "secs"], &["prom"]),
+        (
+            "requantize",
+            &[
+                "images", "concurrency", "backend-b", "ab-bp", "swap-after",
+                "listen", "serve-secs", "max-conns", "connections", "rate",
+                "secs",
+            ],
+            &["prom"],
+        ),
+        (
+            "bench-serve",
+            &[
+                "images", "backend-b", "ab-bp", "shadow-every", "swap-after",
+                "listen", "serve-secs", "max-conns", "connections", "rate",
+                "secs",
+            ],
+            &["prom"],
+        ),
+        (
+            "net-bench",
+            &[
+                "images", "concurrency", "requests", "listen", "serve-secs",
+                "backend-b", "ab-bp", "shadow-every", "swap-after",
+                "stats-json",
+            ],
+            &["prom"],
+        ),
+        (
+            "eval",
+            &[
+                "workers", "max-batch", "max-wait-us", "queue-cap",
+                "concurrency", "requests", "stats-json", "backend-b", "ab-bp",
+                "shadow-every", "swap-after", "listen", "serve-secs",
+                "max-conns", "connections", "rate", "secs",
+            ],
+            &["no-adaptive", "prom"],
+        ),
+        (
+            "stats",
+            &[
+                "arch", "archs", "steps", "lr", "mode", "backend", "images",
+                "ce-mix", "workers", "max-batch", "max-wait-us", "queue-cap",
+                "requests", "concurrency", "obs-sample", "backend-b", "ab-bp",
+                "shadow-every", "swap-after", "listen", "serve-secs",
+                "max-conns", "connections", "rate", "secs",
+            ],
+            &["cle", "frozen-scales", "fast", "no-adaptive", "no-obs"],
+        ),
+    ];
+
+    /// The flags the pipeline commands rejected with the "serving /
+    /// backend-eval commands only" wording.
+    const LEGACY_PIPELINE_KV: &[&str] = &[
+        "backend", "images", "stats-json", "obs-sample", "backend-b", "ab-bp",
+        "shadow-every", "swap-after", "listen", "serve-secs", "max-conns",
+        "connections", "rate", "secs",
+    ];
+    const LEGACY_PIPELINE_BOOL: &[&str] = &["prom", "no-obs"];
+
+    fn kv_args(key: &str) -> Args {
+        let mut kv = HashMap::new();
+        kv.insert(key.to_string(), "1".to_string());
+        Args { kv, flags: Vec::new() }
+    }
+
+    fn flag_args(name: &str) -> Args {
+        Args { kv: HashMap::new(), flags: vec![name.to_string()] }
+    }
+
+    fn owned(parts: &[&str]) -> Vec<String> {
+        parts.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn every_legacy_flag_survives_with_its_arity() {
+        for k in LEGACY_KV {
+            let s = spec(k).unwrap_or_else(|| panic!("--{k} dropped by the spec table"));
+            assert_eq!(s.arity, Arity::Value, "--{k} changed arity");
+        }
+        for f in LEGACY_BOOL {
+            let s = spec(f).unwrap_or_else(|| panic!("--{f} dropped by the spec table"));
+            assert_eq!(s.arity, Arity::Bool, "--{f} changed arity");
+        }
+    }
+
+    #[test]
+    fn legacy_per_command_accept_and_reject_sets_are_preserved() {
+        for &(cmd, bad_keys, bad_flags) in LEGACY_REJECTS {
+            for k in LEGACY_KV {
+                let want_err = bad_keys.contains(k);
+                let got = check(cmd, &kv_args(k));
+                assert_eq!(got.is_err(), want_err, "--{k} on `{cmd}`: {got:?}");
+                if want_err {
+                    let msg = format!("--{k} is not used by `{cmd}` (see usage)");
+                    assert_eq!(got.unwrap_err().to_string(), msg);
+                }
+            }
+            for f in LEGACY_BOOL {
+                let want_err = bad_flags.contains(f);
+                let got = check(cmd, &flag_args(f));
+                assert_eq!(got.is_err(), want_err, "--{f} on `{cmd}`: {got:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn pipeline_commands_keep_the_serving_only_wording() {
+        for cmd in PIPELINE_COMMANDS {
+            for k in LEGACY_PIPELINE_KV {
+                let got = check(cmd, &kv_args(k));
+                let msg = format!("--{k} applies to the serving / backend-eval commands only");
+                assert_eq!(got.unwrap_err().to_string(), msg, "--{k} on `{cmd}`");
+            }
+            for f in LEGACY_PIPELINE_BOOL {
+                assert!(check(cmd, &flag_args(f)).is_err(), "--{f} on `{cmd}`");
+            }
+            // the pre-spec quirk: engine knobs pass through unread
+            for ok in ["arch", "workers", "requests", "concurrency", "threads"] {
+                check(cmd, &kv_args(ok)).unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn parse_keeps_the_legacy_error_wording() {
+        let dup_flag = Args::parse(&owned(&["--fast", "--fast"])).unwrap_err();
+        assert_eq!(dup_flag.to_string(), "duplicate flag --fast");
+        let dup_kv = Args::parse(&owned(&["--arch", "a", "--arch", "b"])).unwrap_err();
+        assert_eq!(dup_kv.to_string(), "duplicate option --arch (each option may be given once)");
+        let no_val = Args::parse(&owned(&["--arch"])).unwrap_err();
+        assert_eq!(no_val.to_string(), "--arch requires a value");
+        let unknown = Args::parse(&owned(&["--nope"])).unwrap_err();
+        assert!(unknown.to_string().starts_with("unknown option --nope"));
+        let stray = Args::parse(&owned(&["oops"])).unwrap_err();
+        assert!(stray.to_string().starts_with("unexpected argument \"oops\""));
+    }
+
+    #[test]
+    fn parse_round_trips_a_mixed_command_line() {
+        let a = Args::parse(&owned(&["--arch", "synthetic", "--fast", "--requests", "9"]))
+            .unwrap();
+        assert_eq!(a.get("arch", "x"), "synthetic");
+        assert_eq!(a.usize("requests", 0).unwrap(), 9);
+        assert!(a.flag("fast"));
+        assert!(!a.flag("cle"));
+        assert_eq!(a.req("missing").unwrap_err().to_string(), "missing required --missing");
+    }
+
+    #[test]
+    fn new_cluster_flags_are_scoped_to_their_commands() {
+        check("stats", &kv_args("pull")).unwrap();
+        check("requantize", &kv_args("pool")).unwrap();
+        assert!(check("serve", &kv_args("pull")).is_err());
+        assert!(check("stats", &kv_args("pool")).is_err());
+        for s in SPEC {
+            assert!(COMMANDS.iter().any(|c| s.applies.accepts(c)), "--{} applies nowhere", s.name);
+        }
+    }
+
+    #[test]
+    fn help_mentions_every_flag() {
+        let h = help();
+        for s in SPEC {
+            assert!(h.contains(&format!("--{}", s.name)), "--{} missing from help", s.name);
+        }
+    }
+}

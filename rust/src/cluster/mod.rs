@@ -1,0 +1,748 @@
+//! `qft::cluster` — delta-state CRDT replication of fleet stats and
+//! calibration ranges across serving replicas.
+//!
+//! Since `qft::net` put the engine on a wire, a deployment is N processes
+//! behind a balancer — but the counters ([`crate::fleet::Version`] request /
+//! batch / error totals, the admission-control shed count) and the shadow
+//! calibration ranges ([`crate::backend::CalibRanges`]) each live in one
+//! process.  `repro requantize` rebuilding the grid from a single replica's
+//! ranges fits constants to a biased shard of traffic — exactly the
+//! data-dependence the paper's calibration premise warns about.
+//!
+//! This module makes that state *mergeable* with two join-semilattices:
+//!
+//! * [`GCounter`] — a grow-only counter: one `u64` per [`ReplicaId`], merge
+//!   is pointwise max, value is the sum.  Local counters are monotone, so
+//!   snapshotting a replica's own total into its entry and max-merging is
+//!   exact; re-delivering a delta (gossip is at-least-once) is a no-op, and
+//!   a stale delta replayed after newer state is absorbed changes nothing.
+//! * [`RangeDelta`] — a min/max-register lattice over per-value, per-channel
+//!   activation ranges: merge is pointwise `min` of mins / `max` of maxes.
+//!   That is commutative, associative, and idempotent by construction, and
+//!   it is *exactly* the fold [`crate::backend::CalibRanges`] already
+//!   applies locally — so ranges captured on N replicas and lattice-merged
+//!   are identical to the ranges one process would have captured over the
+//!   concatenated traffic, and pooled requantize is bit-identical to
+//!   single-process requantize.
+//!
+//! [`ClusterStats`] bundles both under stable names, with a version-tagged
+//! binary codec ([`ClusterStats::encode`] / [`ClusterStats::decode`]) whose
+//! decode is total — any byte sequence yields a value or a typed error,
+//! never a panic.  The wire carries it in the `QFN1` stats frame family
+//! (`stats-pull` / `stats-delta` / `stats-ack`, [`crate::net::frame`]):
+//! every [`crate::net::NetServer`] owns a [`ClusterNode`] that answers pulls
+//! with its merged state (in delta-state CRDTs the full state is a valid
+//! delta) and folds incoming deltas in.  [`pull_stats`] / [`pull_merged`]
+//! are the client side (`repro stats --pull`, `repro requantize --pool`).
+//!
+//! One caveat: obs process-globals (`submitted`, the net counters) are
+//! tagged with the serving [`ClusterNode`]'s replica id, so run one
+//! [`crate::net::NetServer`] per process in production (the per-slot and
+//! per-version counters are per-[`crate::fleet::Fleet`] and merge exactly
+//! either way).
+
+use std::collections::{BTreeMap, HashMap};
+use std::fmt::Write as _;
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::fleet::Fleet;
+use crate::net::frame::{self, Frame};
+use crate::obs;
+use crate::util::json::Value;
+
+/// Version byte leading every stats payload on the wire.
+pub const STATS_VERSION: u8 = 1;
+
+/// Stable identity of one serving replica — the key G-Counter entries live
+/// under.  Derived once per [`ClusterNode`] from pid, wall clock, and a
+/// process-local sequence number, so two replicas (even forked in the same
+/// second, even two nodes in one test process) get distinct ids.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct ReplicaId(pub u64);
+
+impl ReplicaId {
+    /// Mint a fresh id.  `QFT_REPLICA_ID` (u64) pins the *first* id minted
+    /// by a process — deterministic wire fixtures; later mints still
+    /// perturb it so in-process twins stay distinct.
+    pub fn fresh() -> ReplicaId {
+        static SEQ: AtomicU64 = AtomicU64::new(0);
+        let seq = SEQ.fetch_add(1, Ordering::Relaxed);
+        let pinned = std::env::var("QFT_REPLICA_ID").ok().and_then(|v| v.parse::<u64>().ok());
+        if let Some(base) = pinned {
+            return ReplicaId(base.wrapping_add(seq));
+        }
+        let pid = std::process::id() as u64;
+        let t = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_nanos() as u64)
+            .unwrap_or(0);
+        ReplicaId(splitmix(pid ^ t.rotate_left(17) ^ ((seq << 1) | 1)))
+    }
+
+    /// Fixed-width hex rendering (label values, JSON keys).
+    pub fn hex(&self) -> String {
+        format!("{:016x}", self.0)
+    }
+}
+
+/// SplitMix64 finalizer — a cheap, well-distributed 64-bit mix.
+fn splitmix(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Grow-only counter CRDT: per-replica monotone totals, merged by pointwise
+/// max, read as the sum.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct GCounter {
+    entries: BTreeMap<u64, u64>,
+}
+
+impl GCounter {
+    pub fn new() -> GCounter {
+        GCounter::default()
+    }
+
+    /// Fold a replica's *current total* in (entries only grow — a smaller
+    /// observation than what is already held is kept at the held value, so
+    /// replaying a stale snapshot cannot regress the counter).
+    pub fn observe(&mut self, replica: ReplicaId, total: u64) {
+        let e = self.entries.entry(replica.0).or_insert(0);
+        *e = (*e).max(total);
+    }
+
+    /// Lattice join: pointwise max over the union of replicas.
+    pub fn merge(&mut self, other: &GCounter) {
+        for (&r, &v) in &other.entries {
+            let e = self.entries.entry(r).or_insert(0);
+            *e = (*e).max(v);
+        }
+    }
+
+    /// The merged reading: sum over replicas (saturating).
+    pub fn value(&self) -> u64 {
+        self.entries.values().fold(0u64, |a, &v| a.saturating_add(v))
+    }
+
+    /// One replica's entry (0 if it never reported).
+    pub fn entry(&self, replica: ReplicaId) -> u64 {
+        self.entries.get(&replica.0).copied().unwrap_or(0)
+    }
+
+    /// Replicas contributing to this counter, ascending.
+    pub fn replicas(&self) -> impl Iterator<Item = ReplicaId> + '_ {
+        self.entries.keys().map(|&r| ReplicaId(r))
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+/// Min/max-register lattice over one fleet slot's calibration state: the
+/// per-value, per-channel `(min, max)` registers plus shadow-traffic
+/// G-Counters.  [`RangeDelta::merge`] is the same pointwise fold
+/// [`crate::backend::CalibRanges`] applies per shadowed batch, so merge
+/// order, delivery count, and traffic partitioning cannot change the
+/// result.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct RangeDelta {
+    /// value id → per-channel `(min, max)` over everything any replica
+    /// shadowed.
+    pub ranges: BTreeMap<u32, Vec<(f32, f32)>>,
+    /// Micro-batches mirrored into shadow forwards, per replica.
+    pub shadow_batches: GCounter,
+    /// Images those batches carried, per replica.
+    pub shadow_images: GCounter,
+}
+
+impl RangeDelta {
+    /// Lattice join: pointwise min of mins / max of maxes; channel vectors
+    /// of unequal length join over the union of channels.
+    pub fn merge(&mut self, other: &RangeDelta) {
+        for (&v, ch) in &other.ranges {
+            match self.ranges.get_mut(&v) {
+                None => {
+                    self.ranges.insert(v, ch.clone());
+                }
+                Some(mine) => {
+                    if mine.len() < ch.len() {
+                        mine.resize(ch.len(), (f32::INFINITY, f32::NEG_INFINITY));
+                    }
+                    for (m, &(lo, hi)) in mine.iter_mut().zip(ch) {
+                        m.0 = m.0.min(lo);
+                        m.1 = m.1.max(hi);
+                    }
+                }
+            }
+        }
+        self.shadow_batches.merge(&other.shadow_batches);
+        self.shadow_images.merge(&other.shadow_images);
+    }
+
+    /// The merged ranges in [`crate::backend::CalibRanges`] shape (for
+    /// [`crate::backend::CalibRanges::merge_ranges`]).
+    pub fn ranges_map(&self) -> HashMap<usize, Vec<(f32, f32)>> {
+        self.ranges.iter().map(|(&v, ch)| (v as usize, ch.clone())).collect()
+    }
+
+    /// Per-channel `max(|min|, |max|)` — the exact statistics
+    /// [`crate::fleet::Slot::install_requantized`] consumes.
+    pub fn absmax(&self) -> HashMap<usize, Vec<f32>> {
+        self.ranges
+            .iter()
+            .map(|(&v, ch)| {
+                (v as usize, ch.iter().map(|&(lo, hi)| lo.abs().max(hi.abs())).collect())
+            })
+            .collect()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ranges.is_empty()
+    }
+}
+
+/// The replicated state: named G-Counters plus per-slot range lattices.
+/// The whole struct is a join-semilattice ([`ClusterStats::merge`]), and in
+/// delta-state CRDTs the full state is itself a valid delta — which is what
+/// a `stats-pull` answers with.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ClusterStats {
+    /// Counter name (`"engine/submitted"`, `"slot/{key}/v{id}/requests"`,
+    /// ...) → per-replica totals.
+    pub counters: BTreeMap<String, GCounter>,
+    /// Fleet slot key → merged calibration lattice.
+    pub calib: BTreeMap<String, RangeDelta>,
+}
+
+impl ClusterStats {
+    pub fn new() -> ClusterStats {
+        ClusterStats::default()
+    }
+
+    /// Fold one replica's current total for a named counter in.
+    pub fn observe(&mut self, name: &str, replica: ReplicaId, total: u64) {
+        self.counters.entry(name.to_string()).or_default().observe(replica, total);
+    }
+
+    /// Merged reading of a named counter (0 if absent).
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).map(GCounter::value).unwrap_or(0)
+    }
+
+    /// Lattice join with another state/delta.  Commutative, associative,
+    /// idempotent — delivery order and repetition cannot change the result.
+    pub fn merge(&mut self, other: &ClusterStats) {
+        for (name, gc) in &other.counters {
+            self.counters.entry(name.clone()).or_default().merge(gc);
+        }
+        for (slot, rd) in &other.calib {
+            self.calib.entry(slot.clone()).or_default().merge(rd);
+        }
+    }
+
+    /// Every replica that contributed to any counter, ascending.
+    pub fn replicas(&self) -> Vec<ReplicaId> {
+        let mut ids: Vec<ReplicaId> =
+            self.counters.values().flat_map(|gc| gc.replicas()).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        ids
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.counters.is_empty() && self.calib.is_empty()
+    }
+
+    /// Version-tagged binary encoding (all integers little-endian):
+    ///
+    /// ```text
+    /// [ver: u8 = 1]
+    /// [n_counters: u32] then per counter:
+    ///   [name_len: u16][name: utf8][n_entries: u32]([replica: u64][total: u64])*
+    /// [n_slots: u32] then per slot:
+    ///   [key_len: u16][key: utf8]
+    ///   [n_values: u32]([value_id: u32][n_channels: u32]([min: f32][max: f32])*)*
+    ///   [shadow_batches g-counter][shadow_images g-counter]
+    /// ```
+    pub fn encode(&self) -> Vec<u8> {
+        let mut p = vec![STATS_VERSION];
+        let put_str = |p: &mut Vec<u8>, s: &str| {
+            let b = s.as_bytes();
+            let n = b.len().min(u16::MAX as usize);
+            p.extend_from_slice(&(n as u16).to_le_bytes());
+            p.extend_from_slice(&b[..n]);
+        };
+        let put_gc = |p: &mut Vec<u8>, gc: &GCounter| {
+            p.extend_from_slice(&(gc.entries.len() as u32).to_le_bytes());
+            for (&r, &v) in &gc.entries {
+                p.extend_from_slice(&r.to_le_bytes());
+                p.extend_from_slice(&v.to_le_bytes());
+            }
+        };
+        p.extend_from_slice(&(self.counters.len() as u32).to_le_bytes());
+        for (name, gc) in &self.counters {
+            put_str(&mut p, name);
+            put_gc(&mut p, gc);
+        }
+        p.extend_from_slice(&(self.calib.len() as u32).to_le_bytes());
+        for (key, rd) in &self.calib {
+            put_str(&mut p, key);
+            p.extend_from_slice(&(rd.ranges.len() as u32).to_le_bytes());
+            for (&v, ch) in &rd.ranges {
+                p.extend_from_slice(&v.to_le_bytes());
+                p.extend_from_slice(&(ch.len() as u32).to_le_bytes());
+                for &(lo, hi) in ch {
+                    p.extend_from_slice(&lo.to_le_bytes());
+                    p.extend_from_slice(&hi.to_le_bytes());
+                }
+            }
+            put_gc(&mut p, &rd.shadow_batches);
+            put_gc(&mut p, &rd.shadow_images);
+        }
+        p
+    }
+
+    /// Total decode: any byte sequence yields a state or a typed reason —
+    /// never a panic, and never an allocation beyond what the bytes present
+    /// can back (every claimed count is bounds-checked against the
+    /// remaining buffer before its elements are read).
+    pub fn decode(p: &[u8]) -> std::result::Result<ClusterStats, &'static str> {
+        let mut c = Cur { b: p, i: 0 };
+        if c.u8()? != STATS_VERSION {
+            return Err("unsupported stats version");
+        }
+        let mut out = ClusterStats::default();
+        let n_counters = c.u32()? as usize;
+        for _ in 0..n_counters {
+            let name = c.str()?;
+            let gc = c.gcounter()?;
+            out.counters.insert(name, gc);
+        }
+        let n_slots = c.u32()? as usize;
+        for _ in 0..n_slots {
+            let key = c.str()?;
+            let mut rd = RangeDelta::default();
+            let n_values = c.u32()? as usize;
+            for _ in 0..n_values {
+                let v = c.u32()?;
+                let n_ch = c.u32()? as usize;
+                c.check(n_ch, 8)?;
+                let mut ch = Vec::with_capacity(n_ch);
+                for _ in 0..n_ch {
+                    ch.push((c.f32()?, c.f32()?));
+                }
+                rd.ranges.insert(v, ch);
+            }
+            rd.shadow_batches = c.gcounter()?;
+            rd.shadow_images = c.gcounter()?;
+            out.calib.insert(key, rd);
+        }
+        if c.i != p.len() {
+            return Err("trailing bytes after stats payload");
+        }
+        Ok(out)
+    }
+
+    /// Human-readable summary: merged counter totals with per-replica
+    /// breakdowns, then per-slot calibration coverage.
+    pub fn to_table(&self) -> String {
+        let mut o = String::new();
+        let ids = self.replicas();
+        let _ = writeln!(
+            o,
+            "cluster stats: {} replicas, {} counters, {} calibrated slots",
+            ids.len(),
+            self.counters.len(),
+            self.calib.len()
+        );
+        if !self.counters.is_empty() {
+            let _ = writeln!(o, "\n== merged counters ==");
+            let _ = writeln!(o, "  {:<44} {:>12}  per-replica", "counter", "total");
+            for (name, gc) in &self.counters {
+                let by: Vec<String> =
+                    gc.replicas().map(|r| format!("{}={}", r.hex(), gc.entry(r))).collect();
+                let _ = writeln!(o, "  {:<44} {:>12}  {}", name, gc.value(), by.join(" "));
+            }
+        }
+        for (slot, rd) in &self.calib {
+            let _ = writeln!(
+                o,
+                "\n== calib {slot}: {} value ids | {} shadow batches / {} images ==",
+                rd.ranges.len(),
+                rd.shadow_batches.value(),
+                rd.shadow_images.value()
+            );
+            for (v, ch) in &rd.ranges {
+                let lo = ch.iter().map(|p| p.0).fold(f32::INFINITY, f32::min);
+                let hi = ch.iter().map(|p| p.1).fold(f32::NEG_INFINITY, f32::max);
+                let _ = writeln!(
+                    o,
+                    "  value {v:>3}: {:>3} channels, pooled [{lo:.4}, {hi:.4}]",
+                    ch.len()
+                );
+            }
+        }
+        o
+    }
+
+    /// Compact JSON rendering (counters as `{name: {replica_hex: total}}`).
+    pub fn to_json(&self) -> String {
+        let mut counters = HashMap::new();
+        for (name, gc) in &self.counters {
+            let per: HashMap<String, Value> =
+                gc.replicas().map(|r| (r.hex(), Value::Num(gc.entry(r) as f64))).collect();
+            counters.insert(name.clone(), Value::Obj(per));
+        }
+        let mut calib = HashMap::new();
+        for (slot, rd) in &self.calib {
+            let mut m = HashMap::new();
+            m.insert("values".to_string(), Value::Num(rd.ranges.len() as f64));
+            m.insert("shadow_batches".to_string(), Value::Num(rd.shadow_batches.value() as f64));
+            m.insert("shadow_images".to_string(), Value::Num(rd.shadow_images.value() as f64));
+            calib.insert(slot.clone(), Value::Obj(m));
+        }
+        let replicas = Value::Arr(self.replicas().iter().map(|r| Value::Str(r.hex())).collect());
+        let mut doc = HashMap::new();
+        doc.insert("replicas".to_string(), replicas);
+        doc.insert("counters".to_string(), Value::Obj(counters));
+        doc.insert("calib".to_string(), Value::Obj(calib));
+        Value::Obj(doc).to_string_compact()
+    }
+
+    /// Prometheus text exposition ([`crate::obs::validate_prometheus`]
+    /// clean): merged totals plus per-replica entries.
+    pub fn to_prometheus(&self) -> String {
+        let mut o = String::new();
+        let _ = writeln!(o, "# HELP qft_cluster_replicas replicas in this merged snapshot");
+        let _ = writeln!(o, "# TYPE qft_cluster_replicas gauge");
+        let _ = writeln!(o, "qft_cluster_replicas {}", self.replicas().len());
+        if !self.counters.is_empty() {
+            let _ = writeln!(o, "# HELP qft_cluster_counter merged G-Counter totals");
+            let _ = writeln!(o, "# TYPE qft_cluster_counter counter");
+            for (name, gc) in &self.counters {
+                let n = esc(name);
+                let _ = writeln!(o, "qft_cluster_counter{{name=\"{n}\"}} {}", gc.value());
+            }
+            let _ = writeln!(o, "# HELP qft_cluster_counter_replica per-replica entries");
+            let _ = writeln!(o, "# TYPE qft_cluster_counter_replica counter");
+            for (name, gc) in &self.counters {
+                let n = esc(name);
+                for r in gc.replicas() {
+                    let rh = r.hex();
+                    let e = gc.entry(r);
+                    let _ = writeln!(
+                        o,
+                        "qft_cluster_counter_replica{{name=\"{n}\",replica=\"{rh}\"}} {e}"
+                    );
+                }
+            }
+        }
+        if !self.calib.is_empty() {
+            let _ = writeln!(o, "# HELP qft_cluster_shadow_batches pooled shadowed batches");
+            let _ = writeln!(o, "# TYPE qft_cluster_shadow_batches counter");
+            for (slot, rd) in &self.calib {
+                let s = esc(slot);
+                let b = rd.shadow_batches.value();
+                let _ = writeln!(o, "qft_cluster_shadow_batches{{slot=\"{s}\"}} {b}");
+            }
+            let _ = writeln!(o, "# HELP qft_cluster_calib_values calibrated value ids");
+            let _ = writeln!(o, "# TYPE qft_cluster_calib_values gauge");
+            for (slot, rd) in &self.calib {
+                let s = esc(slot);
+                let v = rd.ranges.len();
+                let _ = writeln!(o, "qft_cluster_calib_values{{slot=\"{s}\"}} {v}");
+            }
+        }
+        o
+    }
+}
+
+impl obs::Exposition for ClusterStats {
+    fn render(&self, fmt: obs::Format) -> String {
+        match fmt {
+            obs::Format::Table => self.to_table(),
+            obs::Format::Json => self.to_json(),
+            obs::Format::Prometheus => self.to_prometheus(),
+        }
+    }
+}
+
+/// Escape a Prometheus label value.
+fn esc(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+/// Bounds-checked little-endian cursor backing [`ClusterStats::decode`].
+struct Cur<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn take(&mut self, n: usize) -> std::result::Result<&'a [u8], &'static str> {
+        let end = self.i.checked_add(n).ok_or("stats payload length overflow")?;
+        if end > self.b.len() {
+            return Err("stats payload truncated");
+        }
+        let s = &self.b[self.i..end];
+        self.i = end;
+        Ok(s)
+    }
+
+    /// Reject a claimed element count the remaining bytes cannot back
+    /// (before any allocation proportional to it).
+    fn check(&self, n: usize, elem_bytes: usize) -> std::result::Result<(), &'static str> {
+        let need = n.checked_mul(elem_bytes).ok_or("stats payload length overflow")?;
+        if self.i.saturating_add(need) > self.b.len() {
+            return Err("stats payload truncated");
+        }
+        Ok(())
+    }
+
+    fn u8(&mut self) -> std::result::Result<u8, &'static str> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> std::result::Result<u32, &'static str> {
+        let s = self.take(4)?;
+        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+
+    fn u64(&mut self) -> std::result::Result<u64, &'static str> {
+        let s = self.take(8)?;
+        Ok(u64::from_le_bytes([s[0], s[1], s[2], s[3], s[4], s[5], s[6], s[7]]))
+    }
+
+    fn f32(&mut self) -> std::result::Result<f32, &'static str> {
+        let s = self.take(4)?;
+        Ok(f32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+
+    fn str(&mut self) -> std::result::Result<String, &'static str> {
+        let n = {
+            let s = self.take(2)?;
+            u16::from_le_bytes([s[0], s[1]]) as usize
+        };
+        let b = self.take(n)?;
+        std::str::from_utf8(b).map(str::to_string).map_err(|_| "stats name is not utf-8")
+    }
+
+    fn gcounter(&mut self) -> std::result::Result<GCounter, &'static str> {
+        let n = self.u32()? as usize;
+        self.check(n, 16)?;
+        let mut gc = GCounter::default();
+        for _ in 0..n {
+            let r = self.u64()?;
+            let v = self.u64()?;
+            let e = gc.entries.entry(r).or_insert(0);
+            *e = (*e).max(v);
+        }
+        Ok(gc)
+    }
+}
+
+/// Snapshot a fleet's live counters and calibration ranges as this
+/// replica's delta.  Counter names are stable:
+///
+/// * `engine/submitted`, `fleet/route_changes` — process-wide obs totals;
+/// * `net/conns_accepted`, `net/shed` — wire-layer totals;
+/// * `slot/{key}/route_changes` — per-slot route-word changes;
+/// * `slot/{key}/v{id}/{requests,batches,errors}` — per-version traffic.
+pub fn local_delta(fleet: &Fleet, replica: ReplicaId) -> ClusterStats {
+    let mut s = ClusterStats::default();
+    let nm = obs::net_metrics();
+    s.observe("engine/submitted", replica, obs::submitted().get());
+    s.observe("fleet/route_changes", replica, obs::route_changes().get());
+    s.observe("net/conns_accepted", replica, nm.conns_accepted.get());
+    s.observe("net/shed", replica, nm.shed.get());
+    for i in 0..fleet.len() {
+        let Some(slot) = fleet.slot(i) else { continue };
+        let rc = format!("slot/{}/route_changes", slot.key);
+        s.observe(&rc, replica, slot.route_changes.get());
+        for v in slot.versions() {
+            let p = format!("slot/{}/v{}", slot.key, v.id);
+            s.observe(&format!("{p}/requests"), replica, v.requests.get());
+            s.observe(&format!("{p}/batches"), replica, v.batches.get());
+            s.observe(&format!("{p}/errors"), replica, v.errors.get());
+        }
+        if let Some(calib) = slot.calib() {
+            let rd = s.calib.entry(slot.key.clone()).or_default();
+            for (v, ch) in calib.export_ranges() {
+                rd.ranges.insert(v as u32, ch);
+            }
+            rd.shadow_batches.observe(replica, calib.shadow_batches.get());
+            rd.shadow_images.observe(replica, calib.shadow_images.get());
+        }
+    }
+    s
+}
+
+/// One replica's CRDT cell: its identity plus everything absorbed from
+/// peers.  Owned by [`crate::net::NetServer`]; the stats frames terminate
+/// here.
+pub struct ClusterNode {
+    replica: ReplicaId,
+    remote: Mutex<ClusterStats>,
+}
+
+impl ClusterNode {
+    pub fn new(replica: ReplicaId) -> ClusterNode {
+        ClusterNode { replica, remote: Mutex::new(ClusterStats::default()) }
+    }
+
+    pub fn replica(&self) -> ReplicaId {
+        self.replica
+    }
+
+    /// Fold an incoming delta in; returns every replica id known after the
+    /// merge (the `stats-ack` body).  Idempotent — at-least-once delivery
+    /// and stale replays are no-ops.
+    pub fn absorb(&self, delta: &ClusterStats) -> Vec<ReplicaId> {
+        let mut r = self.remote.lock().unwrap();
+        r.merge(delta);
+        let mut ids = r.replicas();
+        if !ids.contains(&self.replica) {
+            ids.push(self.replica);
+            ids.sort_unstable();
+        }
+        ids
+    }
+
+    /// This node's merged state: everything absorbed from peers joined with
+    /// a fresh local delta.  What a `stats-pull` answers with.
+    pub fn snapshot(&self, fleet: &Fleet) -> ClusterStats {
+        let mut s = self.remote.lock().unwrap().clone();
+        s.merge(&local_delta(fleet, self.replica));
+        s
+    }
+}
+
+/// Pull one replica's merged stats over the wire (`stats-pull` →
+/// `stats-delta`).
+pub fn pull_stats(addr: &str, timeout: Duration) -> Result<ClusterStats> {
+    let mut stream =
+        TcpStream::connect(addr).with_context(|| format!("cluster: cannot connect {addr}"))?;
+    stream.set_read_timeout(Some(timeout)).context("cluster: set_read_timeout")?;
+    stream.set_write_timeout(Some(timeout)).context("cluster: set_write_timeout")?;
+    stream.set_nodelay(true).ok();
+    frame::write_frame(&mut stream, &Frame::StatsPull { id: 1 })
+        .with_context(|| format!("cluster: cannot send stats-pull to {addr}"))?;
+    let reply = frame::read_frame(&mut stream)
+        .with_context(|| format!("cluster: no stats-delta from {addr}"))?;
+    match reply {
+        Frame::StatsDelta { delta, .. } => Ok(delta),
+        Frame::Error { code, msg, .. } => bail!("cluster: {addr} answered {}: {msg}", code.key()),
+        other => bail!("cluster: {addr} answered an unexpected {other:?}"),
+    }
+}
+
+/// Push a delta to one replica (`stats-delta` → `stats-ack`); returns the
+/// replica ids the receiver knows after merging.
+pub fn push_stats(addr: &str, delta: &ClusterStats, timeout: Duration) -> Result<Vec<ReplicaId>> {
+    let mut stream =
+        TcpStream::connect(addr).with_context(|| format!("cluster: cannot connect {addr}"))?;
+    stream.set_read_timeout(Some(timeout)).context("cluster: set_read_timeout")?;
+    stream.set_write_timeout(Some(timeout)).context("cluster: set_write_timeout")?;
+    stream.set_nodelay(true).ok();
+    frame::write_frame(&mut stream, &Frame::StatsDelta { id: 1, delta: delta.clone() })
+        .with_context(|| format!("cluster: cannot send stats-delta to {addr}"))?;
+    let reply = frame::read_frame(&mut stream)
+        .with_context(|| format!("cluster: no stats-ack from {addr}"))?;
+    match reply {
+        Frame::StatsAck { replicas, .. } => Ok(replicas.into_iter().map(ReplicaId).collect()),
+        Frame::Error { code, msg, .. } => bail!("cluster: {addr} answered {}: {msg}", code.key()),
+        other => bail!("cluster: {addr} answered an unexpected {other:?}"),
+    }
+}
+
+/// Pull every address and lattice-merge the answers (`repro stats --pull`,
+/// `repro requantize --pool`).  Any unreachable replica is a hard error —
+/// a silently partial merge would defeat the pooling.
+pub fn pull_merged(addrs: &[&str], timeout: Duration) -> Result<ClusterStats> {
+    let mut merged = ClusterStats::default();
+    for addr in addrs {
+        merged.merge(&pull_stats(addr, timeout)?);
+    }
+    Ok(merged)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rid(n: u64) -> ReplicaId {
+        ReplicaId(n)
+    }
+
+    #[test]
+    fn gcounter_sums_replicas_and_replay_is_noop() {
+        let mut a = GCounter::new();
+        a.observe(rid(1), 10);
+        a.observe(rid(2), 5);
+        assert_eq!(a.value(), 15);
+        // stale re-observation cannot regress
+        a.observe(rid(1), 7);
+        assert_eq!(a.entry(rid(1)), 10);
+        let snapshot = a.clone();
+        a.merge(&snapshot);
+        assert_eq!(a, snapshot, "self-merge is identity");
+    }
+
+    #[test]
+    fn cluster_encode_decode_round_trips() {
+        let mut s = ClusterStats::new();
+        s.observe("engine/submitted", rid(3), 42);
+        s.observe("slot/synthetic/lw/v1/requests", rid(3), 40);
+        s.observe("slot/synthetic/lw/v1/requests", rid(9), 2);
+        let rd = s.calib.entry("synthetic/lw".to_string()).or_default();
+        rd.ranges.insert(0, vec![(-1.0, 2.5), (0.0, 0.125)]);
+        rd.shadow_batches.observe(rid(3), 4);
+        rd.shadow_images.observe(rid(3), 32);
+        let back = ClusterStats::decode(&s.encode()).unwrap();
+        assert_eq!(back, s);
+        assert_eq!(back.counter("slot/synthetic/lw/v1/requests"), 42);
+        assert_eq!(back.replicas(), vec![rid(3), rid(9)]);
+    }
+
+    #[test]
+    fn decode_rejects_garbage_with_typed_reasons() {
+        assert!(ClusterStats::decode(&[]).is_err());
+        assert!(ClusterStats::decode(&[9]).is_err(), "unknown version");
+        // a lying count is rejected before allocation
+        let mut p = vec![STATS_VERSION];
+        p.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(ClusterStats::decode(&p).is_err());
+        // trailing bytes after a valid document are rejected
+        let mut ok = ClusterStats::new();
+        ok.observe("x", rid(1), 1);
+        let mut bytes = ok.encode();
+        bytes.push(0);
+        assert_eq!(ClusterStats::decode(&bytes), Err("trailing bytes after stats payload"));
+    }
+
+    #[test]
+    fn node_absorb_reports_known_replicas() {
+        let node = ClusterNode::new(rid(7));
+        let mut d = ClusterStats::new();
+        d.observe("engine/submitted", rid(1), 3);
+        let ids = node.absorb(&d);
+        assert_eq!(ids, vec![rid(1), rid(7)], "ack lists peers plus self");
+        assert_eq!(node.absorb(&d), vec![rid(1), rid(7)], "replay changes nothing");
+    }
+
+    #[test]
+    fn replica_ids_are_distinct_in_process() {
+        let a = ReplicaId::fresh();
+        let b = ReplicaId::fresh();
+        assert_ne!(a, b);
+        assert_eq!(a.hex().len(), 16);
+    }
+}

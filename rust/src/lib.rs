@@ -84,6 +84,23 @@
 //! (`BENCH_net.json`: throughput + p50/p99/p99.9-under-load, measured
 //! from scheduled arrivals so coordinated omission cannot hide queueing).
 //!
+//! ## Cluster stats & pooled calibration — `qft::cluster`
+//!
+//! [`cluster`] makes per-replica serving state *mergeable* across a fleet
+//! of processes with delta-state CRDTs: a [`cluster::GCounter`] per
+//! request / shed / route counter (keyed by a stable
+//! [`cluster::ReplicaId`], merged by pointwise max, read as the sum) and a
+//! min/max-register lattice ([`cluster::RangeDelta`]) over the shadow
+//! calibration ranges [`backend::CalibRanges`] captures — the lattice join
+//! is the same pointwise min/max fold applied locally, so merge order,
+//! duplicate delivery, and traffic partitioning cannot change the result.
+//! Every [`net::NetServer`] owns a [`cluster::ClusterNode`] answering the
+//! `stats-pull` / `stats-delta` / `stats-ack` frame family; `repro stats
+//! --pull A,B,...` renders the merged view and `repro requantize --pool
+//! A,B,...` rebuilds the deployment grid from ranges pooled over every
+//! replica — bit-identical to a single process that saw all the traffic
+//! (`rust/tests/cluster.rs`).
+//!
 //! ## Observability — `qft::obs`
 //!
 //! [`obs`] is the std-only, always-compiled telemetry layer over the
@@ -99,10 +116,17 @@
 //! splits each conv/fc into pack / im2col / gemm / recode phases across
 //! all six backends, sampled 1-in-N (default
 //! [`obs::DEFAULT_SAMPLE_EVERY`], `--obs-sample N` / `--no-obs` to tune)
-//! by an [`obs::LayerTimer`] in [`backend::Scratch`].  Exposition:
-//! [`obs::render_prometheus`] / [`obs::render_json`], the `repro stats`
-//! command, `--stats-json <path>` periodic flushes on `serve` /
-//! `bench-serve`, and a table dump on graceful shutdown.
+//! by an [`obs::LayerTimer`] in [`backend::Scratch`].  Every rendering —
+//! Prometheus text, JSON flush files, human tables — goes through one
+//! [`obs::Exposition`] trait driven by [`obs::Format`], implemented by
+//! the engine [`obs::Snapshot`], the wire metrics, and the merged
+//! [`cluster::ClusterStats`] alike: [`obs::render_prometheus`] /
+//! [`obs::render_json`], the `repro stats` command, `--stats-json <path>`
+//! periodic flushes on `serve` / `bench-serve`, and a table dump on
+//! graceful shutdown.  The `repro` front-end itself parses against the
+//! declarative flag table in [`cli`] (one [`cli::FlagSpec`] row per flag:
+//! arity, default, help, per-command applicability), from which usage
+//! text, parsing, and rejection diagnostics are all derived.
 //!
 //! ## The kernel engine — `qft::kernel`
 //!
@@ -183,6 +207,8 @@
 #![deny(unsafe_code)]
 
 pub mod backend;
+pub mod cli;
+pub mod cluster;
 pub mod coordinator;
 pub mod data;
 pub mod fleet;

@@ -1,5 +1,5 @@
-//! `repro` — the QFT leader CLI (hand-rolled arg parsing; the image's cargo
-//! cache has no clap/tokio — see Cargo.toml).
+//! `repro` — the QFT leader CLI (spec-table arg parsing via [`qft::cli`];
+//! the image's cargo cache has no clap/tokio — see Cargo.toml).
 //!
 //! All compute flows through AOT-compiled HLO artifacts (run `make
 //! artifacts` once); this binary owns process lifecycle, the pipeline, and
@@ -14,7 +14,6 @@
 //! repro bench-serve --workers 4 --concurrency 16
 //! ```
 
-use std::collections::HashMap;
 use std::path::Path;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
@@ -23,226 +22,17 @@ use std::time::Duration;
 use anyhow::{bail, Result};
 
 use qft::backend::BackendKind;
+use qft::cli::{self, Args};
 use qft::coordinator::{eval, experiments, metrics, pretrain, qft as qft_stage};
 use qft::fleet::{install_version, Fleet, FleetOptions, Slot};
+use qft::obs::{Exposition, Format};
 use qft::quant::deploy::Mode;
 use qft::runtime::Runtime;
 use qft::serve::{run_closed_loop, Engine, ServeConfig};
 
-const USAGE: &str = "\
-repro — QFT post-training quantization pipeline
-
-USAGE: repro [--artifacts DIR] <command> [options]
-
-COMMANDS:
-  pretrain  --arch A [--steps N]          pretrain + cache the FP teacher
-  eval-fp   --arch A                      evaluate the cached FP teacher
-  qft       --arch A [--mode lw|dch] [--cle] [--frozen-scales]
-            [--lr F] [--ce-mix F] [--fast]   run the full QFT pipeline and
-                                          export weights/A.MODE.qftw for serving
-  table1    [--archs A,B,..] [--fast]     Table 1: QFT vs PTQ baselines
-  table2    [--archs A,B,..]              Table 2: accuracy without QFT
-  fig3      [--arch A]                    kernel error vs granularity
-  fig5      [--arch A] [--fast]           dataset-size ablation
-  fig6      [--arch A] [--fast]           CE-mixing ablation
-  fig7      [--arch A] [--fast]           base-LR sweep
-  fig8      [--archs A,B] [--fast]        CLE-init x trained-scales 2x2
-  fig9      [--archs A,B] [--fast]        dch frozen vs trained L/R scales
-  fig12     [--arch A] [--fast]           per-layer kernel error lw/CLE/QFT/chw
-
-SERVING / BACKEND EVAL (pure-rust execution backends; no PJRT needed):
-  serve     [--arch A] [--backend K] [--workers N] [--max-batch B]
-            [--max-wait-us U] [--queue-cap Q] [--requests R] [--threads T]
-            [--stats-json P]              load A/K into the fleet, run a
-                                          closed-loop smoke client over R val
-                                          images, report accuracy + latency
-            [--backend-b K2] [--ab-bp W]  install K2 as a second version and
-                                          A/B-split W basis points (of 10000)
-                                          of traffic to it
-            [--shadow-every S]            mirror 1-in-S micro-batches into a
-                                          shadow FP forward capturing live
-                                          activation ranges (0 = off)
-            [--swap-after N]              after N replies, install a
-                                          bit-identical twin version and
-                                          atomically hot-swap to it (replies
-                                          must not change — swap demo/check)
-            [--listen ADDR]               serve over TCP instead of the
-                                          in-process smoke client: binary
-                                          QFN1 protocol + HTTP shim (/infer,
-                                          /healthz, /metrics) on one port
-            [--serve-secs S]              with --listen: serve S seconds then
-                                          drain gracefully (0 = until killed)
-            [--max-conns N]               with --listen: connection cap;
-                                          over-cap connections get one Busy
-                                          reply and are closed
-  net-bench [--arch A] [--backend K] [--workers N] [--connections C]
-            [--rate R] [--secs S] [serve options]
-                                          self-hosted open-loop Poisson load
-                                          (R req/s over C connections against
-                                          a fresh wire server); prints
-                                          p50/p99/p99.9-under-load
-  requantize [--arch A] [--backend K] [--requests R] [--shadow-every S]
-            [serve options]               closed-loop phase 1 captures live
-                                          ranges via the shadow backend, then
-                                          deployment constants are rebuilt
-                                          from them, hot-swapped in, and
-                                          phase 2 serves the requantized
-                                          grid; per-phase accuracy + the
-                                          fleet status table are printed
-  bench-serve [--arch A] [--backend K] [--workers N] [--max-batch B]
-            [--max-wait-us U] [--queue-cap Q] [--concurrency C]
-            [--requests R] [--threads T] [--stats-json P]
-                                          C closed-loop clients x R requests
-                                          each; reports images/sec + p50/95/99
-  eval      [--arch A] [--backend K] [--images N] [--threads T]
-                                          offline top-1 of A under backend K
-                                          (same forward code the server runs)
-  stats     [--stats-json P] [--prom]     render a flushed obs snapshot
-                                          (default OBS_stats.json) as the
-                                          human table, or as Prometheus text
-                                          with --prom
-
---backend K selects the execution grid: fp (FP32 reference), fq-lw /
-fq-dch (fake-quant simulation), lw / dch (integer deployment, f32-held
-codes), lw-i8 (true i8 x i8 -> i32 integer engine over the lw grid).  The
-legacy --mode lw|dch flag is still accepted on these commands and maps
-to the integer backends.
-
-Every command accepts --threads T: the width of the ONE process-wide
-qft::par kernel pool that serve workers and the backend evals share
-(default: available parallelism).  Results never depend on T — every
-backend's parallel path is bit-identical to its serial twin.
-
-Batching is pool-aware by default: workers shrink the micro-batch hold
-time while the kernel pool is idle (latency) and grow it when the pool
-is saturated (throughput).  --no-adaptive pins the hold at
---max-wait-us.  Replies are bit-identical either way.
-
-Observability (qft::obs): serve / bench-serve / eval record per-model
-stage histograms (queue-wait, batch-form, compute, reply; µs) and
-sampled per-layer kernel timings (pack / im2col / gemm / recode).
---obs-sample N times every Nth forward pass (default 16; 1 = every
-pass, 0 = layer timing off); --no-obs disables all recording.
---stats-json P flushes the JSON snapshot to P every ~2s (atomic
-tmp+rename, so readers never see a torn file) and once at shutdown;
-`repro stats` renders such a file, and a human-readable stage/layer
-table is printed on graceful shutdown.
-
-Weights for serving resolve from weights/A.MODE.qftw (qft export), else
-weights/A.qftw (FP teacher + offline PTQ init), else he-init smoke weights.
-Without artifacts/manifest.json a built-in `synthetic` arch is served.
-
-Model fleet (qft::fleet): every served key is a versioned slot.  New
-versions install while serving; promotion is one atomic route-word swap
-(in-flight batches finish on the old version, which drains and retires);
-rollback is instant.  --backend-b/--ab-bp split traffic between two
-versions with per-arm obs labels (\"arch/backend@v2\"); --shadow-every
-feeds the CalibBackend range capture that `repro requantize` turns into
-freshly fitted deployment constants.
-";
-
-/// Every `--key value` option any command accepts (unknown keys are errors).
-const KV_KEYS: &[&str] = &[
-    "arch", "archs", "steps", "lr", "mode", "backend", "images", "ce-mix",
-    "workers", "max-batch", "max-wait-us", "queue-cap", "requests",
-    "concurrency", "threads", "stats-json", "obs-sample", "backend-b",
-    "ab-bp", "shadow-every", "swap-after", "listen", "serve-secs",
-    "max-conns", "connections", "rate", "secs",
-];
-/// Every boolean `--flag`.
-const BOOL_FLAGS: &[&str] = &["cle", "frozen-scales", "fast", "no-adaptive", "no-obs", "prom"];
-/// Every command (validated before any runtime/artifact work happens).
-const COMMANDS: &[&str] = &[
-    "pretrain", "eval-fp", "qft", "table1", "table2", "fig3", "fig5", "fig6",
-    "fig7", "fig8", "fig9", "fig12", "serve", "bench-serve", "eval", "stats",
-    "requantize", "net-bench",
-];
-
-/// flags: `--key value` pairs plus boolean `--flag`s.  Duplicates and
-/// unknown options are hard errors (no silent last-wins).
-struct Args {
-    kv: HashMap<String, String>,
-    flags: Vec<String>,
-}
-
-impl Args {
-    fn parse(argv: &[String], bool_flags: &[&str], kv_keys: &[&str]) -> Result<Args> {
-        let mut kv = HashMap::new();
-        let mut flags: Vec<String> = Vec::new();
-        let mut i = 0;
-        while i < argv.len() {
-            let a = &argv[i];
-            let Some(name) = a.strip_prefix("--") else {
-                bail!("unexpected argument {a:?}\n{USAGE}");
-            };
-            if bool_flags.contains(&name) {
-                if flags.iter().any(|f| f == name) {
-                    bail!("duplicate flag --{name}");
-                }
-                flags.push(name.to_string());
-                i += 1;
-            } else if kv_keys.contains(&name) {
-                let Some(v) = argv.get(i + 1) else {
-                    bail!("--{name} requires a value");
-                };
-                if kv.insert(name.to_string(), v.clone()).is_some() {
-                    bail!("duplicate option --{name} (each option may be given once)");
-                }
-                i += 2;
-            } else {
-                bail!("unknown option --{name}\n{USAGE}");
-            }
-        }
-        Ok(Args { kv, flags })
-    }
-
-    fn get(&self, key: &str, default: &str) -> String {
-        self.kv.get(key).cloned().unwrap_or_else(|| default.to_string())
-    }
-
-    fn req(&self, key: &str) -> Result<String> {
-        self.kv
-            .get(key)
-            .cloned()
-            .ok_or_else(|| anyhow::anyhow!("missing required --{key}"))
-    }
-
-    fn flag(&self, key: &str) -> bool {
-        self.flags.iter().any(|f| f == key)
-    }
-
-    fn f32(&self, key: &str, default: f32) -> Result<f32> {
-        match self.kv.get(key) {
-            Some(v) => Ok(v.parse()?),
-            None => Ok(default),
-        }
-    }
-
-    fn usize(&self, key: &str, default: usize) -> Result<usize> {
-        match self.kv.get(key) {
-            Some(v) => Ok(v.parse()?),
-            None => Ok(default),
-        }
-    }
-}
-
-/// Reject options `cmd` reads nothing from — a flag the user typed being
-/// silently ignored defeats the strict-flag contract [`Args::parse`]
-/// enforces (e.g. `repro serve --images 100` almost certainly meant
-/// `--requests`).
-fn reject_unused(args: &Args, cmd: &str, keys: &[&str], flags: &[&str]) -> Result<()> {
-    for k in keys {
-        if args.kv.contains_key(*k) {
-            bail!("--{k} is not used by `{cmd}` (see usage)");
-        }
-    }
-    for f in flags {
-        if args.flag(f) {
-            bail!("--{f} is not used by `{cmd}` (see usage)");
-        }
-    }
-    Ok(())
-}
+// The USAGE text, the flag surface, and the per-command applicability
+// rules all live in the qft::cli spec table — this file only wires the
+// parsed Args into the command implementations.
 
 /// Execution grid for the serving / backend-eval commands: `--backend` wins
 /// when given; the legacy `--mode lw|dch` flag maps to the integer grids
@@ -267,14 +57,15 @@ fn main() -> Result<()> {
         argv.drain(0..2);
     }
     let Some(cmd) = argv.first().cloned() else {
-        print!("{USAGE}");
+        print!("{}", cli::help());
         return Ok(());
     };
-    if !COMMANDS.contains(&cmd.as_str()) {
-        bail!("unknown command {cmd:?}\n{USAGE}");
+    if !cli::COMMANDS.contains(&cmd.as_str()) {
+        bail!("unknown command {cmd:?}\n{}", cli::USAGE);
     }
     let rest = &argv[1..];
-    let args = Args::parse(rest, BOOL_FLAGS, KV_KEYS)?;
+    let args = Args::parse(rest)?;
+    cli::check(&cmd, &args)?;
 
     // size the process-wide kernel pool before anything touches it (the
     // pool is built lazily on first use and its width is then fixed)
@@ -363,7 +154,7 @@ fn obs_shutdown_dump(flush: Option<StatsFlush>) {
         f.finish();
     }
     if qft::obs::enabled() {
-        print!("\n{}", qft::obs::snapshot().to_table());
+        print!("\n{}", qft::obs::snapshot().render(Format::Table));
     }
 }
 
@@ -389,12 +180,6 @@ fn hot_swap_twin(slot: &Slot) -> Result<u32> {
 }
 
 fn cmd_serve(artifacts: &str, args: &Args) -> Result<()> {
-    reject_unused(
-        args,
-        "serve",
-        &["images", "concurrency", "connections", "rate", "secs"],
-        &["prom"],
-    )?;
     if !args.kv.contains_key("listen") {
         for k in ["serve-secs", "max-conns"] {
             if args.kv.contains_key(k) {
@@ -509,15 +294,6 @@ fn cmd_serve(artifacts: &str, args: &Args) -> Result<()> {
 /// exactly those ranges ([`Slot::install_requantized`]) and hot-swapped in;
 /// phase 2 serves the requantized grid.  Accuracy is reported per phase.
 fn cmd_requantize(artifacts: &str, args: &Args) -> Result<()> {
-    reject_unused(
-        args,
-        "requantize",
-        &[
-            "images", "concurrency", "backend-b", "ab-bp", "swap-after",
-            "listen", "serve-secs", "max-conns", "connections", "rate", "secs",
-        ],
-        &["prom"],
-    )?;
     let arch = args.get("arch", "synthetic");
     let kind = parse_backend(args)?;
     anyhow::ensure!(
@@ -537,6 +313,33 @@ fn cmd_requantize(artifacts: &str, args: &Args) -> Result<()> {
     )?;
     let slot = fleet.slot(0).expect("fleet just loaded slot 0").clone();
     let ranges = slot.calib().expect("shadow-every > 0 attaches a recorder");
+    // pooled mode: no local serving — the ranges come from live replicas
+    if let Some(addrs) = args.kv.get("pool") {
+        let list: Vec<&str> = addrs.split(',').filter(|a| !a.is_empty()).collect();
+        anyhow::ensure!(!list.is_empty(), "--pool needs at least one ADDR");
+        let merged = qft::cluster::pull_merged(&list, Duration::from_secs(5))?;
+        let Some(delta) = merged.calib.get(&slot.key) else {
+            bail!(
+                "no replica in {addrs:?} captured ranges for slot {:?} \
+                 (serve them with --shadow-every)",
+                slot.key
+            );
+        };
+        ranges.merge_ranges(&delta.ranges_map());
+        anyhow::ensure!(!ranges.is_empty(), "pooled ranges are empty");
+        ranges.shadow_batches.add(delta.shadow_batches.value());
+        ranges.shadow_images.add(delta.shadow_images.value());
+        let n = merged.replicas().len();
+        let v2 = slot.install_requantized(
+            &ranges.absmax(),
+            format!("requantized from {n} replicas' pooled shadow ranges"),
+        )?;
+        slot.promote(v2)?;
+        println!("requantize {arch}/{}: promoted v{v2} from {n} pooled replicas", kind.key());
+        print!("{}", ranges.table());
+        print!("{}", slot.status_table());
+        return Ok(());
+    }
     let engine = Engine::start(fleet.clone(), &cfg);
     let flush = args.kv.get("stats-json").cloned().map(spawn_stats_flush);
     let client = engine.client();
@@ -574,15 +377,6 @@ fn cmd_requantize(artifacts: &str, args: &Args) -> Result<()> {
 }
 
 fn cmd_bench_serve(artifacts: &str, args: &Args) -> Result<()> {
-    reject_unused(
-        args,
-        "bench-serve",
-        &[
-            "images", "backend-b", "ab-bp", "shadow-every", "swap-after",
-            "listen", "serve-secs", "max-conns", "connections", "rate", "secs",
-        ],
-        &["prom"],
-    )?;
     let arch = args.get("arch", "synthetic");
     let kind = parse_backend(args)?;
     let concurrency = args.usize("concurrency", 16)?;
@@ -622,15 +416,6 @@ fn cmd_bench_serve(artifacts: &str, args: &Args) -> Result<()> {
 /// [`qft::net::open_loop`] Poisson harness, and print
 /// latency-under-load.  The same harness (swept) backs `make bench-net`.
 fn cmd_net_bench(artifacts: &str, args: &Args) -> Result<()> {
-    reject_unused(
-        args,
-        "net-bench",
-        &[
-            "images", "concurrency", "requests", "listen", "serve-secs",
-            "backend-b", "ab-bp", "shadow-every", "swap-after", "stats-json",
-        ],
-        &["prom"],
-    )?;
     let arch = args.get("arch", "synthetic");
     let kind = parse_backend(args)?;
     let cfg = serve_cfg(args)?;
@@ -677,30 +462,29 @@ fn cmd_net_bench(artifacts: &str, args: &Args) -> Result<()> {
 }
 
 /// `repro stats` — render a `--stats-json` flush file (any
-/// [`qft::obs::render_json`] document) without touching the engine.
+/// [`qft::obs::render_json`] document) without touching the engine, or —
+/// with `--pull ADDR,..` — act as the cluster aggregator: pull a live CRDT
+/// stats delta from every listed replica over QFN1 and render the merged
+/// view (repeated pulls never double count).
 fn cmd_stats(args: &Args) -> Result<()> {
-    reject_unused(
-        args,
-        "stats",
-        &[
-            "arch", "archs", "steps", "lr", "mode", "backend", "images", "ce-mix",
-            "workers", "max-batch", "max-wait-us", "queue-cap", "requests",
-            "concurrency", "obs-sample", "backend-b", "ab-bp", "shadow-every",
-            "swap-after", "listen", "serve-secs", "max-conns", "connections",
-            "rate", "secs",
-        ],
-        &["cle", "frozen-scales", "fast", "no-adaptive", "no-obs"],
-    )?;
+    let fmt = if args.flag("prom") { Format::Prometheus } else { Format::Table };
+    if let Some(addrs) = args.kv.get("pull") {
+        anyhow::ensure!(
+            !args.kv.contains_key("stats-json"),
+            "--pull reads live replicas and --stats-json reads a flush file; pick one"
+        );
+        let list: Vec<&str> = addrs.split(',').filter(|a| !a.is_empty()).collect();
+        anyhow::ensure!(!list.is_empty(), "--pull needs at least one ADDR");
+        let merged = qft::cluster::pull_merged(&list, Duration::from_secs(5))?;
+        print!("{}", merged.render(fmt));
+        return Ok(());
+    }
     let path = args.get("stats-json", "OBS_stats.json");
     let text = std::fs::read_to_string(&path).map_err(|e| {
         anyhow::anyhow!("cannot read {path:?} (run serve/bench-serve with --stats-json): {e}")
     })?;
     let snap = qft::obs::Snapshot::from_json(&text)?;
-    if args.flag("prom") {
-        print!("{}", snap.to_prometheus());
-    } else {
-        print!("{}", snap.to_table());
-    }
+    print!("{}", snap.render(fmt));
     Ok(())
 }
 
@@ -708,17 +492,6 @@ fn cmd_stats(args: &Args) -> Result<()> {
 /// the serve fleet uses and literally the same forward code the serving
 /// workers run, so this is the number the server would produce.
 fn cmd_eval(artifacts: &str, args: &Args) -> Result<()> {
-    reject_unused(
-        args,
-        "eval",
-        &[
-            "workers", "max-batch", "max-wait-us", "queue-cap", "concurrency",
-            "requests", "stats-json", "backend-b", "ab-bp", "shadow-every",
-            "swap-after", "listen", "serve-secs", "max-conns", "connections",
-            "rate", "secs",
-        ],
-        &["no-adaptive", "prom"],
-    )?;
     let arch = args.get("arch", "synthetic");
     let kind = parse_backend(args)?;
     let images = args.usize("images", 512)?;
@@ -745,23 +518,6 @@ fn cmd_eval(artifacts: &str, args: &Args) -> Result<()> {
 }
 
 fn run_pipeline_cmd(rt: &Runtime, cmd: &str, args: &Args) -> Result<()> {
-    // serving-only options must not be silently ignored here: `repro qft
-    // --backend dch` looking like it selected a grid (while only --mode is
-    // read) would defeat the strict-flag contract Args::parse enforces
-    for key in [
-        "backend", "images", "stats-json", "obs-sample", "backend-b", "ab-bp",
-        "shadow-every", "swap-after", "listen", "serve-secs", "max-conns",
-        "connections", "rate", "secs",
-    ] {
-        if args.kv.contains_key(key) {
-            bail!("--{key} applies to the serving / backend-eval commands only");
-        }
-    }
-    for flag in ["prom", "no-obs"] {
-        if args.flag(flag) {
-            bail!("--{flag} applies to the serving / backend-eval commands only");
-        }
-    }
     let fast = args.flag("fast");
     match cmd {
         "pretrain" => {
@@ -906,7 +662,7 @@ fn run_pipeline_cmd(rt: &Runtime, cmd: &str, args: &Args) -> Result<()> {
                 );
             }
         }
-        other => bail!("unknown command {other:?}\n{USAGE}"),
+        other => bail!("unknown command {other:?}\n{}", cli::USAGE),
     }
     Ok(())
 }

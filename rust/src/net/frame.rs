@@ -6,7 +6,9 @@
 //! offset  size  field
 //!      0     4  magic            b"QFN1"
 //!      4     1  version          0x01
-//!      5     1  frame type       1 = infer, 2 = reply, 3 = error
+//!      5     1  frame type       1 = infer, 2 = reply, 3 = error,
+//!                                4 = stats-pull, 5 = stats-delta,
+//!                                6 = stats-ack
 //!      6     2  reserved         must be 0
 //!      8     8  request id       u64 LE (echoed verbatim in the reply)
 //!     16     4  payload length   u32 LE, <= MAX_PAYLOAD (1 MiB)
@@ -21,6 +23,20 @@
 //! * **reply** — `[top1: u16][batch: u16][latency_us: u32][logits: f32 × n]`.
 //! * **error** — `[code: u16][message: utf8]`; codes mirror
 //!   [`crate::serve::Reject`] plus the framing failures ([`ErrCode`]).
+//! * **stats-pull** — `[ver: u8 = 1]`; asks the server for its merged
+//!   cluster stats (answered with a stats-delta).  Trailing bytes are
+//!   reserved and ignored.
+//! * **stats-delta** — `[ver: u8 = 1][cluster stats]`; one replica's
+//!   merged CRDT state, encoded by
+//!   [`crate::cluster::ClusterStats::encode`] (the version byte is part of
+//!   that encoding).
+//! * **stats-ack** — `[ver: u8 = 1][n: u32][replica id: u64 × n]`; the
+//!   replica ids the receiver knows after absorbing a stats-delta.
+//!
+//! Every frame type lives in the [`REGISTRY`] — a [`FrameKind`] entry
+//! carrying the type code, a minimum payload length, and the decoder fn —
+//! so new control frames register in one place instead of growing a
+//! match-on-type-byte in three.
 //!
 //! Decoding is total: any byte sequence either yields a frame or a typed
 //! [`FrameError`] — never a panic, never an allocation proportional to a
@@ -46,6 +62,9 @@ pub const MAX_PAYLOAD: usize = 1 << 20;
 pub const TY_INFER: u8 = 1;
 pub const TY_REPLY: u8 = 2;
 pub const TY_ERROR: u8 = 3;
+pub const TY_STATS_PULL: u8 = 4;
+pub const TY_STATS_DELTA: u8 = 5;
+pub const TY_STATS_ACK: u8 = 6;
 
 /// Typed error codes carried in error-frame payloads.  The first four
 /// mirror [`Reject`] (engine-side admission failures); the rest are
@@ -174,12 +193,24 @@ pub enum Frame {
     Reply { id: u64, top1: u16, batch: u16, latency_us: u32, logits: Vec<f32> },
     /// Server → client: typed failure (admission or framing).
     Error { id: u64, code: ErrCode, msg: String },
+    /// Client → server: "send me your merged cluster stats".
+    StatsPull { id: u64 },
+    /// Either direction: one replica's merged CRDT state (a full state is
+    /// a valid delta).
+    StatsDelta { id: u64, delta: crate::cluster::ClusterStats },
+    /// Server → client: replica ids known after absorbing a stats-delta.
+    StatsAck { id: u64, replicas: Vec<u64> },
 }
 
 impl Frame {
     pub fn id(&self) -> u64 {
         match self {
-            Frame::Infer { id, .. } | Frame::Reply { id, .. } | Frame::Error { id, .. } => *id,
+            Frame::Infer { id, .. }
+            | Frame::Reply { id, .. }
+            | Frame::Error { id, .. }
+            | Frame::StatsPull { id }
+            | Frame::StatsDelta { id, .. }
+            | Frame::StatsAck { id, .. } => *id,
         }
     }
 
@@ -231,6 +262,17 @@ impl Frame {
                 p.extend_from_slice(&m[..n]);
                 (TY_ERROR, p)
             }
+            Frame::StatsPull { .. } => (TY_STATS_PULL, vec![crate::cluster::STATS_VERSION]),
+            Frame::StatsDelta { delta, .. } => (TY_STATS_DELTA, delta.encode()),
+            Frame::StatsAck { replicas, .. } => {
+                let mut p = Vec::with_capacity(5 + replicas.len() * 8);
+                p.push(crate::cluster::STATS_VERSION);
+                p.extend_from_slice(&(replicas.len() as u32).to_le_bytes());
+                for r in replicas {
+                    p.extend_from_slice(&r.to_le_bytes());
+                }
+                (TY_STATS_ACK, p)
+            }
         };
         debug_assert!(payload.len() <= MAX_PAYLOAD);
         let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
@@ -253,8 +295,72 @@ pub struct Header {
     pub len: usize,
 }
 
-/// Validate a full 20-byte header: magic, version, type, and the length
-/// prefix against [`MAX_PAYLOAD`].
+/// One registered wire frame type: its code, a human name (logs, docs),
+/// the minimum payload length its decoder requires (checked centrally,
+/// with `short_payload` as the malformed-payload reason), and the decoder
+/// itself.  New control frames add a [`REGISTRY`] entry instead of growing
+/// the header validator and the payload dispatcher separately.
+pub struct FrameKind {
+    pub code: u8,
+    pub name: &'static str,
+    pub min_payload: usize,
+    pub short_payload: &'static str,
+    decode: fn(u64, &[u8]) -> Result<Frame, FrameError>,
+}
+
+/// Every frame type this protocol version speaks.
+pub const REGISTRY: &[FrameKind] = &[
+    FrameKind {
+        code: TY_INFER,
+        name: "infer",
+        min_payload: 2,
+        short_payload: "infer payload shorter than slot_len",
+        decode: decode_infer,
+    },
+    FrameKind {
+        code: TY_REPLY,
+        name: "reply",
+        min_payload: 8,
+        short_payload: "reply payload shorter than its fixed part",
+        decode: decode_reply,
+    },
+    FrameKind {
+        code: TY_ERROR,
+        name: "error",
+        min_payload: 2,
+        short_payload: "error payload shorter than its code",
+        decode: decode_error,
+    },
+    FrameKind {
+        code: TY_STATS_PULL,
+        name: "stats-pull",
+        min_payload: 1,
+        short_payload: "stats payload shorter than its version byte",
+        decode: decode_stats_pull,
+    },
+    FrameKind {
+        code: TY_STATS_DELTA,
+        name: "stats-delta",
+        min_payload: 1,
+        short_payload: "stats payload shorter than its version byte",
+        decode: decode_stats_delta,
+    },
+    FrameKind {
+        code: TY_STATS_ACK,
+        name: "stats-ack",
+        min_payload: 5,
+        short_payload: "stats-ack payload shorter than its fixed part",
+        decode: decode_stats_ack,
+    },
+];
+
+/// Look a type byte up in the [`REGISTRY`].
+pub fn frame_kind(ty: u8) -> Option<&'static FrameKind> {
+    REGISTRY.iter().find(|k| k.code == ty)
+}
+
+/// Validate a full 20-byte header: magic, version, registered type, and
+/// the length prefix against [`MAX_PAYLOAD`].
 pub fn parse_header(h: &[u8; HEADER_LEN]) -> Result<Header, FrameError> {
     if h[..4] != MAGIC {
         return Err(FrameError::BadMagic([h[0], h[1], h[2], h[3]]));
@@ -263,7 +369,7 @@ pub fn parse_header(h: &[u8; HEADER_LEN]) -> Result<Header, FrameError> {
         return Err(FrameError::BadVersion(h[4]));
     }
     let ty = h[5];
-    if !matches!(ty, TY_INFER | TY_REPLY | TY_ERROR) {
+    if frame_kind(ty).is_none() {
         return Err(FrameError::BadType(ty));
     }
     let id = u64::from_le_bytes(h[8..16].try_into().unwrap());
@@ -274,60 +380,86 @@ pub fn parse_header(h: &[u8; HEADER_LEN]) -> Result<Header, FrameError> {
     Ok(Header { ty, id, len })
 }
 
-/// Decode a payload whose header already validated.
+/// Decode a payload whose header already validated: registry lookup, the
+/// central minimum-length check, then the type's decoder.
 pub fn decode_payload(ty: u8, id: u64, p: &[u8]) -> Result<Frame, FrameError> {
-    match ty {
-        TY_INFER => {
-            if p.len() < 2 {
-                return Err(FrameError::Malformed("infer payload shorter than slot_len"));
-            }
-            let n = u16::from_le_bytes([p[0], p[1]]) as usize;
-            if 2 + n > p.len() {
-                return Err(FrameError::Malformed("slot key runs past the payload"));
-            }
-            let slot_key = std::str::from_utf8(&p[2..2 + n])
-                .map_err(|_| FrameError::Malformed("slot key is not utf-8"))?
-                .to_string();
-            let img = &p[2 + n..];
-            if img.len() % 4 != 0 {
-                return Err(FrameError::Malformed("image region is not a multiple of 4 bytes"));
-            }
-            let image = img
-                .chunks_exact(4)
-                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-                .collect();
-            Ok(Frame::Infer { id, slot_key, image })
-        }
-        TY_REPLY => {
-            if p.len() < 8 {
-                return Err(FrameError::Malformed("reply payload shorter than its fixed part"));
-            }
-            let rest = &p[8..];
-            if rest.len() % 4 != 0 {
-                return Err(FrameError::Malformed("logits region is not a multiple of 4 bytes"));
-            }
-            Ok(Frame::Reply {
-                id,
-                top1: u16::from_le_bytes([p[0], p[1]]),
-                batch: u16::from_le_bytes([p[2], p[3]]),
-                latency_us: u32::from_le_bytes([p[4], p[5], p[6], p[7]]),
-                logits: rest
-                    .chunks_exact(4)
-                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-                    .collect(),
-            })
-        }
-        TY_ERROR => {
-            if p.len() < 2 {
-                return Err(FrameError::Malformed("error payload shorter than its code"));
-            }
-            let code = ErrCode::from_u16(u16::from_le_bytes([p[0], p[1]]))
-                .ok_or(FrameError::Malformed("unknown error code"))?;
-            let msg = String::from_utf8_lossy(&p[2..]).into_owned();
-            Ok(Frame::Error { id, code, msg })
-        }
-        other => Err(FrameError::BadType(other)),
+    let kind = frame_kind(ty).ok_or(FrameError::BadType(ty))?;
+    if p.len() < kind.min_payload {
+        return Err(FrameError::Malformed(kind.short_payload));
     }
+    (kind.decode)(id, p)
+}
+
+fn decode_infer(id: u64, p: &[u8]) -> Result<Frame, FrameError> {
+    let n = u16::from_le_bytes([p[0], p[1]]) as usize;
+    if 2 + n > p.len() {
+        return Err(FrameError::Malformed("slot key runs past the payload"));
+    }
+    let slot_key = std::str::from_utf8(&p[2..2 + n])
+        .map_err(|_| FrameError::Malformed("slot key is not utf-8"))?
+        .to_string();
+    let img = &p[2 + n..];
+    if img.len() % 4 != 0 {
+        return Err(FrameError::Malformed("image region is not a multiple of 4 bytes"));
+    }
+    let image = img
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    Ok(Frame::Infer { id, slot_key, image })
+}
+
+fn decode_reply(id: u64, p: &[u8]) -> Result<Frame, FrameError> {
+    let rest = &p[8..];
+    if rest.len() % 4 != 0 {
+        return Err(FrameError::Malformed("logits region is not a multiple of 4 bytes"));
+    }
+    Ok(Frame::Reply {
+        id,
+        top1: u16::from_le_bytes([p[0], p[1]]),
+        batch: u16::from_le_bytes([p[2], p[3]]),
+        latency_us: u32::from_le_bytes([p[4], p[5], p[6], p[7]]),
+        logits: rest
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect(),
+    })
+}
+
+fn decode_error(id: u64, p: &[u8]) -> Result<Frame, FrameError> {
+    let code = ErrCode::from_u16(u16::from_le_bytes([p[0], p[1]]))
+        .ok_or(FrameError::Malformed("unknown error code"))?;
+    let msg = String::from_utf8_lossy(&p[2..]).into_owned();
+    Ok(Frame::Error { id, code, msg })
+}
+
+fn decode_stats_pull(id: u64, p: &[u8]) -> Result<Frame, FrameError> {
+    if p[0] != crate::cluster::STATS_VERSION {
+        return Err(FrameError::Malformed("unsupported stats version"));
+    }
+    Ok(Frame::StatsPull { id })
+}
+
+fn decode_stats_delta(id: u64, p: &[u8]) -> Result<Frame, FrameError> {
+    let delta = crate::cluster::ClusterStats::decode(p).map_err(FrameError::Malformed)?;
+    Ok(Frame::StatsDelta { id, delta })
+}
+
+fn decode_stats_ack(id: u64, p: &[u8]) -> Result<Frame, FrameError> {
+    if p[0] != crate::cluster::STATS_VERSION {
+        return Err(FrameError::Malformed("unsupported stats version"));
+    }
+    let n = u32::from_le_bytes([p[1], p[2], p[3], p[4]]) as usize;
+    let need = n.checked_mul(8).ok_or(FrameError::Malformed("stats-ack length overflow"))?;
+    let body = &p[5..];
+    if body.len() != need {
+        return Err(FrameError::Malformed("stats-ack replica region length mismatch"));
+    }
+    let replicas = body
+        .chunks_exact(8)
+        .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    Ok(Frame::StatsAck { id, replicas })
 }
 
 /// Decode one frame from the front of `buf`; on success also returns how

@@ -13,6 +13,11 @@
 //!   /infer` (JSON), `GET /healthz`, and `GET /metrics` (Prometheus text
 //!   from [`crate::obs`]).
 //!
+//! The binary side also speaks the cluster control frames: every server
+//! owns a [`crate::cluster::ClusterNode`], answers `stats-pull` with its
+//! merged CRDT state as a `stats-delta`, and folds incoming `stats-delta`
+//! frames in (acknowledged with `stats-ack`) — see [`crate::cluster`].
+//!
 //! Admission control ([`crate::serve::Client::try_submit`]): a full
 //! batcher queue sheds the request with an explicit `Busy` frame (HTTP
 //! 429) instead of stalling the connection and letting the queue collapse;
@@ -45,6 +50,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
+use crate::cluster::{ClusterNode, ReplicaId};
 use crate::fleet::Fleet;
 use crate::obs;
 use crate::serve::{Client, DrainReport, Engine, Reject};
@@ -84,6 +90,7 @@ const POLL: Duration = Duration::from_millis(50);
 pub(crate) struct ConnCtx {
     pub client: Client,
     pub fleet: Arc<Fleet>,
+    pub cluster: Arc<ClusterNode>,
     pub stop: Arc<AtomicBool>,
     pub infer_timeout: Duration,
 }
@@ -92,6 +99,7 @@ pub(crate) struct ConnCtx {
 pub struct NetServer {
     engine: Engine,
     local_addr: SocketAddr,
+    cluster: Arc<ClusterNode>,
     stop: Arc<AtomicBool>,
     acceptors: Vec<JoinHandle<()>>,
     conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
@@ -119,6 +127,10 @@ impl NetServer {
         let active = Arc::new(AtomicUsize::new(0));
         let max_conns = cfg.max_conns.max(1);
         let infer_timeout = cfg.infer_timeout;
+        // one CRDT cell per server: its ReplicaId keys every G-Counter
+        // entry this process contributes to the cluster state
+        let cluster = Arc::new(ClusterNode::new(ReplicaId::fresh()));
+        obs::set_replica(&cluster.replica().hex());
         let acceptors = (0..cfg.acceptors.max(1))
             .map(|_| {
                 let listener = listener.try_clone().context("net: clone listener")?;
@@ -127,13 +139,14 @@ impl NetServer {
                 let active = active.clone();
                 let client = engine.client();
                 let fleet = engine.fleet().clone();
+                let cluster = cluster.clone();
                 Ok(std::thread::spawn(move || {
                     accept_loop(&listener, &stop, &conns, &active, max_conns, infer_timeout,
-                        client, fleet);
+                        client, fleet, cluster);
                 }))
             })
             .collect::<Result<Vec<_>>>()?;
-        Ok(NetServer { engine, local_addr, stop, acceptors, conns })
+        Ok(NetServer { engine, local_addr, cluster, stop, acceptors, conns })
     }
 
     /// Where the listener actually bound (resolves `:0`).
@@ -144,6 +157,11 @@ impl NetServer {
     /// Handle for in-process submissions alongside the wire.
     pub fn client(&self) -> Client {
         self.engine.client()
+    }
+
+    /// This server's CRDT cell (replica id + absorbed peer state).
+    pub fn cluster(&self) -> &Arc<ClusterNode> {
+        &self.cluster
     }
 
     /// Graceful shutdown: stop accepting, unblock connection reads, join
@@ -173,6 +191,7 @@ fn accept_loop(
     infer_timeout: Duration,
     client: Client,
     fleet: Arc<Fleet>,
+    cluster: Arc<ClusterNode>,
 ) {
     while !stop.load(Ordering::SeqCst) {
         let (stream, _peer) = match listener.accept() {
@@ -195,6 +214,7 @@ fn accept_loop(
         let ctx = ConnCtx {
             client: client.clone(),
             fleet: fleet.clone(),
+            cluster: cluster.clone(),
             stop: stop.clone(),
             infer_timeout,
         };
@@ -339,10 +359,17 @@ fn handle_binary(
             Ok(Frame::Infer { id, slot_key, image }) => {
                 serve_infer(ctx, id, &slot_key, image, shed_conn)
             }
+            Ok(Frame::StatsPull { id }) => {
+                Frame::StatsDelta { id, delta: ctx.cluster.snapshot(&ctx.fleet) }
+            }
+            Ok(Frame::StatsDelta { id, delta }) => {
+                let known = ctx.cluster.absorb(&delta);
+                Frame::StatsAck { id, replicas: known.iter().map(|r| r.0).collect() }
+            }
             Ok(_) => Frame::Error {
                 id: h.id,
                 code: ErrCode::Malformed,
-                msg: "server accepts only infer frames".to_string(),
+                msg: "server accepts only infer and stats frames".to_string(),
             },
             Err(e) => Frame::from_frame_error(h.id, &e),
         };

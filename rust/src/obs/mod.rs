@@ -15,11 +15,14 @@
 //!   ([`NetObs`]) threaded through all six backends' forward paths,
 //!   sampled 1-in-N (default [`DEFAULT_SAMPLE_EVERY`]) by a [`LayerTimer`]
 //!   living in [`crate::backend::Scratch`];
-//! * exposition — [`snapshot`] freezes everything into a [`Snapshot`],
-//!   rendered by [`render_prometheus`] (text format, checked by
-//!   [`validate_prometheus`]) and [`render_json`] (parse back with
+//! * exposition — [`snapshot`] freezes everything into a [`Snapshot`];
+//!   every render goes through the one [`Exposition`] trait
+//!   ([`Exposition::render`] with a [`Format`]), implemented by
+//!   [`Snapshot`], [`NetMetrics`], and the merged cluster view
+//!   ([`crate::cluster::ClusterStats`]).  Prometheus text is checked by
+//!   [`validate_prometheus`]; JSON parses back with
 //!   [`Snapshot::from_json`] — quantiles are computed at snapshot time, so
-//!   a flushed file re-renders without the buckets).
+//!   a flushed file re-renders without the buckets.
 //!
 //! Metric handles are process-global (a `BTreeMap` registry keyed by the
 //! serving wire key `"arch/backend"`), so warm-up and measured runs in one
@@ -66,6 +69,23 @@ pub fn sample_every() -> u32 {
 
 pub fn set_sample_every(n: u32) {
     SAMPLE_EVERY.store(n, Ordering::Relaxed);
+}
+
+fn replica_cell() -> &'static Mutex<String> {
+    static R: OnceLock<Mutex<String>> = OnceLock::new();
+    R.get_or_init(Mutex::default)
+}
+
+/// Hex id of this process's serving replica
+/// ([`crate::cluster::ReplicaId`]), set by [`crate::net::NetServer`] when
+/// it starts listening; empty when nothing listened.  Carried in every
+/// [`Snapshot`] so flushed stats files say which replica produced them.
+pub fn replica() -> String {
+    replica_cell().lock().unwrap().clone()
+}
+
+pub fn set_replica(hex: &str) {
+    *replica_cell().lock().unwrap() = hex.to_string();
 }
 
 // ---------------------------------------------------------------------------
@@ -210,6 +230,20 @@ impl NetMetrics {
         self.wire_read_us.clear();
         self.wire_write_us.clear();
     }
+
+    /// Freeze the live cells into a rendered [`NetIoSnapshot`] (histogram
+    /// quantiles computed here).
+    pub fn io_snapshot(&self) -> NetIoSnapshot {
+        NetIoSnapshot {
+            conns_accepted: self.conns_accepted.get(),
+            conns_active: self.conns_active.get(),
+            shed: self.shed.get(),
+            bytes_in: self.bytes_in.get(),
+            bytes_out: self.bytes_out.get(),
+            wire_read: self.wire_read_us.stats(),
+            wire_write: self.wire_write_us.stats(),
+        }
+    }
 }
 
 /// The process-global [`NetMetrics`] cell.  `OnceLock` rather than a
@@ -322,6 +356,69 @@ pub struct NetIoSnapshot {
     pub wire_write: HistStats,
 }
 
+impl NetIoSnapshot {
+    /// Append the `qft_net_*` Prometheus family (shared by
+    /// [`Snapshot::to_prometheus`] and [`NetMetrics`]'s [`Exposition`]).
+    fn prometheus_into(&self, o: &mut String) {
+        use std::fmt::Write as _;
+        let _ = writeln!(o, "# HELP qft_net_conns_accepted_total TCP connections accepted");
+        let _ = writeln!(o, "# TYPE qft_net_conns_accepted_total counter");
+        let _ = writeln!(o, "qft_net_conns_accepted_total {}", self.conns_accepted);
+        let _ = writeln!(o, "# HELP qft_net_conns_active TCP connections currently open");
+        let _ = writeln!(o, "# TYPE qft_net_conns_active gauge");
+        let _ = writeln!(o, "qft_net_conns_active {}", self.conns_active);
+        let _ = writeln!(o, "# HELP qft_net_shed_total requests shed by admission control");
+        let _ = writeln!(o, "# TYPE qft_net_shed_total counter");
+        let _ = writeln!(o, "qft_net_shed_total {}", self.shed);
+        let _ = writeln!(o, "# HELP qft_net_bytes_in_total bytes read off the wire");
+        let _ = writeln!(o, "# TYPE qft_net_bytes_in_total counter");
+        let _ = writeln!(o, "qft_net_bytes_in_total {}", self.bytes_in);
+        let _ = writeln!(o, "# HELP qft_net_bytes_out_total bytes written to the wire");
+        let _ = writeln!(o, "# TYPE qft_net_bytes_out_total counter");
+        let _ = writeln!(o, "qft_net_bytes_out_total {}", self.bytes_out);
+        let _ = writeln!(o, "# HELP qft_net_wire_us per-request wire read/write time (µs)");
+        let _ = writeln!(o, "# TYPE qft_net_wire_us summary");
+        for (dir, h) in [("read", &self.wire_read), ("write", &self.wire_write)] {
+            let base = format!("dir=\"{dir}\"");
+            for (q, v) in [("0.5", h.p50), ("0.95", h.p95), ("0.99", h.p99), ("0.999", h.p999)] {
+                let _ = writeln!(o, "qft_net_wire_us{{{base},quantile=\"{q}\"}} {v}");
+            }
+            let _ = writeln!(o, "qft_net_wire_us_sum{{{base}}} {}", h.sum);
+            let _ = writeln!(o, "qft_net_wire_us_count{{{base}}} {}", h.count);
+            let _ = writeln!(o, "qft_net_wire_us_max{{{base}}} {}", h.max);
+        }
+    }
+
+    /// The `"net"` JSON object (shared by [`Snapshot::to_json`] and
+    /// [`NetMetrics`]'s [`Exposition`]).
+    fn json_value(&self) -> Value {
+        obj([
+            ("conns_accepted", Value::Num(self.conns_accepted as f64)),
+            ("conns_active", Value::Num(self.conns_active as f64)),
+            ("shed", Value::Num(self.shed as f64)),
+            ("bytes_in", Value::Num(self.bytes_in as f64)),
+            ("bytes_out", Value::Num(self.bytes_out as f64)),
+            ("wire_read_us", hist_json(&self.wire_read)),
+            ("wire_write_us", hist_json(&self.wire_write)),
+        ])
+    }
+
+    /// One-line table summary.
+    fn table_line(&self) -> String {
+        format!(
+            "net: {} conns accepted ({} active) | {} shed | {} B in / {} B out \
+             | wire read p99 {}us / write p99 {}us\n",
+            self.conns_accepted,
+            self.conns_active,
+            self.shed,
+            self.bytes_in,
+            self.bytes_out,
+            self.wire_read.p99,
+            self.wire_write.p99,
+        )
+    }
+}
+
 /// Point-in-time copy of every registered metric, with histogram quantiles
 /// already computed — this is what both exposition formats serialize, and
 /// what [`Snapshot::from_json`] reconstructs from a flushed file.
@@ -336,6 +433,9 @@ pub struct Snapshot {
     /// ([`crate::kernel::kernel_dispatch`]) — carried in every flush so
     /// artifacts from different machines stay comparable.
     pub kernel_dispatch: String,
+    /// Hex [`crate::cluster::ReplicaId`] of the serving replica ([`replica`]);
+    /// empty when this process never listened.
+    pub replica: String,
     /// Wire-layer totals from the [`crate::net`] front-end (all zero when
     /// nothing listened).
     pub net: NetIoSnapshot,
@@ -389,7 +489,6 @@ pub fn snapshot() -> Snapshot {
                 .collect(),
         })
         .collect();
-    let nm = net_metrics();
     Snapshot {
         enabled: enabled(),
         sample_every: sample_every(),
@@ -397,28 +496,68 @@ pub fn snapshot() -> Snapshot {
         submitted: submitted().get(),
         route_changes: route_changes().get(),
         kernel_dispatch: crate::kernel::kernel_dispatch().to_string(),
-        net: NetIoSnapshot {
-            conns_accepted: nm.conns_accepted.get(),
-            conns_active: nm.conns_active.get(),
-            shed: nm.shed.get(),
-            bytes_in: nm.bytes_in.get(),
-            bytes_out: nm.bytes_out.get(),
-            wire_read: nm.wire_read_us.stats(),
-            wire_write: nm.wire_write_us.stats(),
-        },
+        replica: replica(),
+        net: net_metrics().io_snapshot(),
         stages,
         nets,
     }
 }
 
-/// [`Snapshot::to_prometheus`] of a fresh [`snapshot`].
-pub fn render_prometheus() -> String {
-    snapshot().to_prometheus()
+/// The exposition surfaces every renderable stats view offers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Format {
+    /// Human-readable table (CLI default, shutdown dump).
+    Table,
+    /// Compact JSON (`--stats-json` flushes; [`Snapshot`]s parse back with
+    /// [`Snapshot::from_json`]).
+    Json,
+    /// Prometheus text exposition (`/metrics`; checked by
+    /// [`validate_prometheus`]).
+    Prometheus,
 }
 
-/// [`Snapshot::to_json`] of a fresh [`snapshot`].
+/// The one render API every exposition surface goes through: [`Snapshot`],
+/// [`NetMetrics`], and the merged cluster view
+/// ([`crate::cluster::ClusterStats`]) all implement it, so the CLI `stats`
+/// command, `GET /metrics`, and `--stats-json` share a single
+/// [`Format`]-driven code path instead of growing per-type method trios.
+pub trait Exposition {
+    fn render(&self, fmt: Format) -> String;
+}
+
+impl Exposition for Snapshot {
+    fn render(&self, fmt: Format) -> String {
+        match fmt {
+            Format::Table => self.to_table(),
+            Format::Json => self.to_json(),
+            Format::Prometheus => self.to_prometheus(),
+        }
+    }
+}
+
+impl Exposition for NetMetrics {
+    fn render(&self, fmt: Format) -> String {
+        let io = self.io_snapshot();
+        match fmt {
+            Format::Table => io.table_line(),
+            Format::Json => io.json_value().to_string_compact(),
+            Format::Prometheus => {
+                let mut o = String::new();
+                io.prometheus_into(&mut o);
+                o
+            }
+        }
+    }
+}
+
+/// [`Exposition::render`] of a fresh [`snapshot`] as Prometheus text.
+pub fn render_prometheus() -> String {
+    snapshot().render(Format::Prometheus)
+}
+
+/// [`Exposition::render`] of a fresh [`snapshot`] as compact JSON.
 pub fn render_json() -> String {
-    snapshot().to_json()
+    snapshot().render(Format::Json)
 }
 
 impl Snapshot {
@@ -458,32 +597,12 @@ impl Snapshot {
             "qft_kernel_dispatch{{path=\"{}\"}} 1",
             esc(&self.kernel_dispatch)
         );
-        let _ = writeln!(o, "# HELP qft_net_conns_accepted_total TCP connections accepted");
-        let _ = writeln!(o, "# TYPE qft_net_conns_accepted_total counter");
-        let _ = writeln!(o, "qft_net_conns_accepted_total {}", self.net.conns_accepted);
-        let _ = writeln!(o, "# HELP qft_net_conns_active TCP connections currently open");
-        let _ = writeln!(o, "# TYPE qft_net_conns_active gauge");
-        let _ = writeln!(o, "qft_net_conns_active {}", self.net.conns_active);
-        let _ = writeln!(o, "# HELP qft_net_shed_total requests shed by admission control");
-        let _ = writeln!(o, "# TYPE qft_net_shed_total counter");
-        let _ = writeln!(o, "qft_net_shed_total {}", self.net.shed);
-        let _ = writeln!(o, "# HELP qft_net_bytes_in_total bytes read off the wire");
-        let _ = writeln!(o, "# TYPE qft_net_bytes_in_total counter");
-        let _ = writeln!(o, "qft_net_bytes_in_total {}", self.net.bytes_in);
-        let _ = writeln!(o, "# HELP qft_net_bytes_out_total bytes written to the wire");
-        let _ = writeln!(o, "# TYPE qft_net_bytes_out_total counter");
-        let _ = writeln!(o, "qft_net_bytes_out_total {}", self.net.bytes_out);
-        let _ = writeln!(o, "# HELP qft_net_wire_us per-request wire read/write time (µs)");
-        let _ = writeln!(o, "# TYPE qft_net_wire_us summary");
-        for (dir, h) in [("read", &self.net.wire_read), ("write", &self.net.wire_write)] {
-            let base = format!("dir=\"{dir}\"");
-            for (q, v) in [("0.5", h.p50), ("0.95", h.p95), ("0.99", h.p99), ("0.999", h.p999)] {
-                let _ = writeln!(o, "qft_net_wire_us{{{base},quantile=\"{q}\"}} {v}");
-            }
-            let _ = writeln!(o, "qft_net_wire_us_sum{{{base}}} {}", h.sum);
-            let _ = writeln!(o, "qft_net_wire_us_count{{{base}}} {}", h.count);
-            let _ = writeln!(o, "qft_net_wire_us_max{{{base}}} {}", h.max);
+        if !self.replica.is_empty() {
+            let _ = writeln!(o, "# HELP qft_replica serving replica id");
+            let _ = writeln!(o, "# TYPE qft_replica gauge");
+            let _ = writeln!(o, "qft_replica{{id=\"{}\"}} 1", esc(&self.replica));
         }
+        self.net.prometheus_into(&mut o);
         if !self.stages.is_empty() {
             let _ = writeln!(o, "# HELP qft_requests_total requests executed per model");
             let _ = writeln!(o, "# TYPE qft_requests_total counter");
@@ -565,18 +684,6 @@ impl Snapshot {
 
     /// Compact JSON exposition (parse back with [`Snapshot::from_json`]).
     pub fn to_json(&self) -> String {
-        let hist = |h: &HistStats| {
-            obj([
-                ("count", Value::Num(h.count as f64)),
-                ("sum", Value::Num(h.sum as f64)),
-                ("max", Value::Num(h.max as f64)),
-                ("mean", Value::Num(h.mean)),
-                ("p50", Value::Num(h.p50 as f64)),
-                ("p95", Value::Num(h.p95 as f64)),
-                ("p99", Value::Num(h.p99 as f64)),
-                ("p999", Value::Num(h.p999 as f64)),
-            ])
-        };
         let stages = self
             .stages
             .iter()
@@ -587,7 +694,7 @@ impl Snapshot {
                     ("batches".to_string(), Value::Num(s.batches as f64)),
                 ];
                 for (name, h) in &s.stages {
-                    kv.push((stage_json_key(name), hist(h)));
+                    kv.push((stage_json_key(name), hist_json(h)));
                 }
                 obj(kv)
             })
@@ -628,20 +735,10 @@ impl Snapshot {
                     ("submitted", Value::Num(self.submitted as f64)),
                     ("route_changes", Value::Num(self.route_changes as f64)),
                     ("kernel_dispatch", Value::Str(self.kernel_dispatch.clone())),
+                    ("replica", Value::Str(self.replica.clone())),
                 ]),
             ),
-            (
-                "net",
-                obj([
-                    ("conns_accepted", Value::Num(self.net.conns_accepted as f64)),
-                    ("conns_active", Value::Num(self.net.conns_active as f64)),
-                    ("shed", Value::Num(self.net.shed as f64)),
-                    ("bytes_in", Value::Num(self.net.bytes_in as f64)),
-                    ("bytes_out", Value::Num(self.net.bytes_out as f64)),
-                    ("wire_read_us", hist(&self.net.wire_read)),
-                    ("wire_write_us", hist(&self.net.wire_write)),
-                ]),
-            ),
+            ("net", self.net.json_value()),
             ("stages", Value::Arr(stages)),
             ("nets", Value::Arr(nets)),
         ])
@@ -730,6 +827,12 @@ impl Snapshot {
                 .and_then(|v| v.str())
                 .map(str::to_string)
                 .unwrap_or_default(),
+            // absent in pre-cluster flush files — read as never-listened
+            replica: engine
+                .get("replica")
+                .and_then(|v| v.str())
+                .map(str::to_string)
+                .unwrap_or_default(),
             net,
             stages,
             nets,
@@ -755,19 +858,11 @@ impl Snapshot {
             self.route_changes,
             if self.kernel_dispatch.is_empty() { "?" } else { &self.kernel_dispatch },
         );
+        if !self.replica.is_empty() {
+            let _ = writeln!(o, "replica: {}", self.replica);
+        }
         if self.net.conns_accepted > 0 {
-            let _ = writeln!(
-                o,
-                "net: {} conns accepted ({} active) | {} shed | {} B in / {} B out \
-                 | wire read p99 {}us / write p99 {}us",
-                self.net.conns_accepted,
-                self.net.conns_active,
-                self.net.shed,
-                self.net.bytes_in,
-                self.net.bytes_out,
-                self.net.wire_read.p99,
-                self.net.wire_write.p99,
-            );
+            o.push_str(&self.net.table_line());
         }
         if !self.stages.is_empty() {
             let _ = writeln!(o, "\n== request stages (µs) ==");
@@ -831,6 +926,20 @@ fn stage_json_key(stage: &str) -> String {
 
 fn obj<K: Into<String>, I: IntoIterator<Item = (K, Value)>>(kv: I) -> Value {
     Value::Obj(kv.into_iter().map(|(k, v)| (k.into(), v)).collect())
+}
+
+/// JSON object for one histogram (shared by the engine and net expositions).
+fn hist_json(h: &HistStats) -> Value {
+    obj([
+        ("count", Value::Num(h.count as f64)),
+        ("sum", Value::Num(h.sum as f64)),
+        ("max", Value::Num(h.max as f64)),
+        ("mean", Value::Num(h.mean)),
+        ("p50", Value::Num(h.p50 as f64)),
+        ("p95", Value::Num(h.p95 as f64)),
+        ("p99", Value::Num(h.p99 as f64)),
+        ("p999", Value::Num(h.p999 as f64)),
+    ])
 }
 
 /// Escape a Prometheus label value.

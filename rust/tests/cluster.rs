@@ -1,0 +1,363 @@
+//! `qft::cluster` integration tests: CRDT merge laws under randomized
+//! interleavings (commutativity / associativity / idempotence, at-least-once
+//! delivery, stale-replay-after-restart), codec totality over garbage and
+//! bit-flipped encodings, stats frames over a live [`NetServer`], and the
+//! headline end-to-end property — pooled requantize over two wire-served
+//! replicas produces a deployment grid *bit-identical* to a single process
+//! that saw the concatenated traffic.
+//!
+//! Hermetic — synthetic arch, ephemeral loopback ports, no AOT artifacts.
+//! Server tests serialize on one mutex because [`qft::obs`] metrics are
+//! process-global.
+
+use std::net::{SocketAddr, TcpStream};
+use std::path::Path;
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::Duration;
+
+use qft::backend::BackendKind;
+use qft::cluster::{self, ClusterStats, ReplicaId, STATS_VERSION};
+use qft::data::{Dataset, Rng, Split};
+use qft::net::frame::{self, TY_STATS_DELTA, TY_STATS_PULL};
+use qft::net::{Frame, NetConfig, NetServer};
+use qft::obs::{Exposition, Format};
+use qft::quant::deploy::{requantize_trainables, Mode};
+use qft::serve::{Engine, Fleet, FleetOptions, ServeConfig};
+
+/// Server tests share the process-global obs registry — run one at a time.
+fn obs_lock() -> MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// One-slot synthetic lw-int fleet, shadow-capturing every micro-batch.
+fn load_lw_shadowed() -> Arc<Fleet> {
+    Fleet::load_with(
+        Path::new("artifacts_nonexistent_for_test"),
+        &[("synthetic".to_string(), BackendKind::Int(Mode::Lw))],
+        FleetOptions { shadow_every: 1 },
+    )
+    .unwrap()
+}
+
+/// Drive val images `lo..hi` through a server over one connection, closed
+/// loop, asserting every reply echoes its request id.
+fn drive(addr: SocketAddr, lo: u64, hi: u64) {
+    let ds = Dataset::new(0);
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.set_nodelay(true).unwrap();
+    for i in lo..hi {
+        let (img, _) = ds.sample(Split::Val, i);
+        let req = Frame::Infer { id: i, slot_key: "synthetic/lw".to_string(), image: img };
+        frame::write_frame(&mut stream, &req).unwrap();
+        match frame::read_frame(&mut stream).unwrap() {
+            Frame::Reply { id, .. } => assert_eq!(id, i, "reply id echo"),
+            other => panic!("image {i}: expected reply, got {other:?}"),
+        }
+    }
+}
+
+// ------------------------------------------------------------- CRDT laws
+
+/// A small random delta touching a handful of counters and (sometimes) a
+/// calibration range lattice — the raw material for the law tests.
+fn random_delta(rng: &mut Rng) -> ClusterStats {
+    let mut s = ClusterStats::new();
+    for _ in 0..(rng.next_u64() % 5) {
+        let name = format!("ctr/{}", rng.next_u64() % 3);
+        s.observe(&name, ReplicaId(1 + rng.next_u64() % 4), rng.next_u64() % 1000);
+    }
+    if rng.next_u64() % 2 == 0 {
+        let rd = s.calib.entry(format!("slot/{}", rng.next_u64() % 2)).or_default();
+        for _ in 0..(rng.next_u64() % 3) {
+            let n_ch = 1 + rng.next_u64() % 3;
+            let ch: Vec<(f32, f32)> = (0..n_ch)
+                .map(|_| {
+                    let a = rng.uniform() * 4.0 - 2.0;
+                    let b = rng.uniform() * 4.0 - 2.0;
+                    (a.min(b), a.max(b))
+                })
+                .collect();
+            rd.ranges.insert((rng.next_u64() % 3) as u32, ch);
+        }
+        rd.shadow_batches.observe(ReplicaId(1 + rng.next_u64() % 4), rng.next_u64() % 50);
+        rd.shadow_images.observe(ReplicaId(1 + rng.next_u64() % 4), rng.next_u64() % 400);
+    }
+    s
+}
+
+#[test]
+fn merge_is_commutative_associative_and_idempotent() {
+    let mut rng = Rng::new(0xC1D7);
+    for case in 0..200 {
+        let a = random_delta(&mut rng);
+        let b = random_delta(&mut rng);
+        let c = random_delta(&mut rng);
+
+        let mut ab = a.clone();
+        ab.merge(&b);
+        let mut ba = b.clone();
+        ba.merge(&a);
+        assert_eq!(ab, ba, "case {case}: a∪b != b∪a");
+
+        let mut ab_c = ab.clone();
+        ab_c.merge(&c);
+        let mut bc = b.clone();
+        bc.merge(&c);
+        let mut a_bc = a.clone();
+        a_bc.merge(&bc);
+        assert_eq!(ab_c, a_bc, "case {case}: (a∪b)∪c != a∪(b∪c)");
+
+        let mut aa = a.clone();
+        aa.merge(&a);
+        assert_eq!(aa, a, "case {case}: a∪a != a");
+
+        // absorption: re-delivering any already-merged delta is a no-op,
+        // which is exactly what makes at-least-once transport safe
+        let mut again = ab_c.clone();
+        again.merge(&b);
+        assert_eq!(again, ab_c, "case {case}: duplicate delivery changed state");
+    }
+}
+
+#[test]
+fn merged_totals_equal_per_replica_sums_without_double_counting() {
+    let mut rng = Rng::new(0xFEED);
+    for case in 0..100 {
+        // three replicas each publish a growing sequence of state snapshots
+        let replicas = [ReplicaId(1), ReplicaId(2), ReplicaId(3)];
+        let mut truth = [0u64; 3];
+        let mut deltas: Vec<ClusterStats> = Vec::new();
+        for _round in 0..5 {
+            for (i, &r) in replicas.iter().enumerate() {
+                truth[i] += rng.next_u64() % 10;
+                let mut d = ClusterStats::new();
+                d.observe("requests", r, truth[i]);
+                deltas.push(d);
+            }
+        }
+        // the aggregator sees them in a random order, many more than once
+        let mut merged = ClusterStats::new();
+        for _ in 0..deltas.len() * 3 {
+            merged.merge(&deltas[(rng.next_u64() as usize) % deltas.len()]);
+        }
+        for d in &deltas {
+            merged.merge(d); // guarantee each final snapshot landed
+        }
+        assert_eq!(
+            merged.counter("requests"),
+            truth.iter().sum::<u64>(),
+            "case {case}: merged total != sum of per-replica maxima"
+        );
+        for (i, &r) in replicas.iter().enumerate() {
+            assert_eq!(merged.counters["requests"].entry(r), truth[i], "case {case} replica {i}");
+        }
+    }
+}
+
+#[test]
+fn stale_delta_replayed_after_restart_is_a_noop() {
+    // a replica reports 10 requests, restarts under a fresh id, reports 4;
+    // the pre-restart delta arriving late must change nothing
+    let old = ReplicaId(0xAA);
+    let new = ReplicaId(0xBB);
+    let mut pre = ClusterStats::new();
+    pre.observe("requests", old, 10);
+    let mut post = ClusterStats::new();
+    post.observe("requests", new, 4);
+
+    let mut merged = ClusterStats::new();
+    merged.merge(&pre);
+    merged.merge(&post);
+    let before = merged.clone();
+    merged.merge(&pre); // stale replay
+    assert_eq!(merged, before, "stale replay mutated merged state");
+    assert_eq!(merged.counter("requests"), 14, "restart must not erase history");
+}
+
+// ------------------------------------------------------------ stats codec
+
+#[test]
+fn stats_codec_round_trips_random_states() {
+    let mut rng = Rng::new(0x50DA);
+    for case in 0..200 {
+        let mut s = random_delta(&mut rng);
+        s.merge(&random_delta(&mut rng));
+        let bytes = s.encode();
+        let back = ClusterStats::decode(&bytes)
+            .unwrap_or_else(|e| panic!("case {case}: decode failed: {e}"));
+        assert_eq!(back, s, "case {case}: round-trip identity");
+    }
+}
+
+#[test]
+fn stats_decode_is_total_over_garbage_and_bit_flips() {
+    let mut rng = Rng::new(0xD00F);
+    for _ in 0..4000 {
+        let n = (rng.next_u64() % 160) as usize;
+        let buf: Vec<u8> = (0..n).map(|_| rng.next_u64() as u8).collect();
+        let _ = ClusterStats::decode(&buf); // must never panic
+    }
+    // every single-bit corruption of a valid encoding either still decodes
+    // or errors — it never panics and never over-reads
+    let mut s = ClusterStats::new();
+    s.observe("engine/submitted", ReplicaId(1), 7);
+    let rd = s.calib.entry("synthetic/lw".to_string()).or_default();
+    rd.ranges.insert(0, vec![(-1.0, 1.0), (-0.5, 2.0)]);
+    rd.shadow_batches.observe(ReplicaId(1), 3);
+    let bytes = s.encode();
+    for i in 0..bytes.len() {
+        for bit in 0..8 {
+            let mut m = bytes.clone();
+            m[i] ^= 1 << bit;
+            let _ = ClusterStats::decode(&m);
+        }
+    }
+}
+
+#[test]
+fn stats_frames_round_trip_on_the_wire_codec() {
+    let mut rng = Rng::new(0xAB1E);
+    let mut delta = random_delta(&mut rng);
+    delta.observe("net/shed", ReplicaId(9), 2);
+    for f in [
+        Frame::StatsPull { id: 11 },
+        Frame::StatsDelta { id: 12, delta },
+        Frame::StatsAck { id: 13, replicas: vec![1, 5, 9] },
+    ] {
+        let bytes = f.encode();
+        let (back, used) = frame::decode(&bytes).expect("stats frame decodes");
+        assert_eq!(used, bytes.len(), "consumed length");
+        assert_eq!(back, f, "wire round-trip identity");
+    }
+    // payloads shorter than the version byte are typed errors, not panics
+    assert!(frame::decode_payload(TY_STATS_PULL, 0, &[]).is_err());
+    assert!(frame::decode_payload(TY_STATS_DELTA, 0, &[STATS_VERSION]).is_err());
+}
+
+// ----------------------------------------------------- exposition surface
+
+#[test]
+fn cluster_stats_render_all_three_formats() {
+    let mut s = ClusterStats::new();
+    s.observe("net/shed", ReplicaId(2), 3);
+    s.observe("slot/synthetic/lw/v1/requests", ReplicaId(2), 40);
+    let rd = s.calib.entry("synthetic/lw".to_string()).or_default();
+    rd.ranges.insert(4, vec![(-0.5, 0.5)]);
+    rd.shadow_batches.observe(ReplicaId(2), 1);
+
+    qft::obs::validate_prometheus(&s.render(Format::Prometheus)).expect("prometheus well-formed");
+    let table = s.render(Format::Table);
+    assert!(table.contains("net/shed"), "table lists counters:\n{table}");
+    let json = s.render(Format::Json);
+    let v = qft::util::json::Value::parse(&json).expect("json parses");
+    assert!(v.get("counters").is_ok(), "json carries counters:\n{json}");
+}
+
+// --------------------------------------------------------- live transport
+
+#[test]
+fn live_server_answers_pull_and_absorbs_push() {
+    let _guard = obs_lock();
+    let fleet = load_lw_shadowed();
+    let cfg = ServeConfig { workers: 1, ..Default::default() };
+    let server = NetServer::start(Engine::start(fleet, &cfg), &NetConfig::default()).unwrap();
+    let addr = server.local_addr().to_string();
+    let me = server.cluster().replica();
+
+    drive(server.local_addr(), 0, 4);
+
+    let stats = cluster::pull_stats(&addr, Duration::from_secs(10)).unwrap();
+    assert_eq!(stats.counter("slot/synthetic/lw/v1/requests"), 4);
+    assert!(stats.replicas().contains(&me), "pull reports the serving replica");
+    assert!(stats.calib.contains_key("synthetic/lw"), "shadowed ranges ride along");
+
+    // push a foreign delta: the ack names both replicas, a re-pull carries
+    // the merged count, and replaying the same delta never double counts
+    let peer = ReplicaId(0x5EED);
+    let mut foreign = ClusterStats::new();
+    foreign.observe("slot/synthetic/lw/v1/requests", peer, 10);
+    let known = cluster::push_stats(&addr, &foreign, Duration::from_secs(10)).unwrap();
+    assert!(known.contains(&peer) && known.contains(&me), "ack lists known replicas");
+    for _replay in 0..3 {
+        cluster::push_stats(&addr, &foreign, Duration::from_secs(10)).unwrap();
+    }
+    let again = cluster::pull_stats(&addr, Duration::from_secs(10)).unwrap();
+    assert_eq!(again.counter("slot/synthetic/lw/v1/requests"), 14, "no double counting");
+
+    server.shutdown(Duration::from_secs(10));
+}
+
+// ------------------------------------------------------- the headline e2e
+
+/// Two wire-served replicas each shadow half the traffic; pooling their
+/// CRDT range deltas and requantizing must match — bit for bit — a single
+/// process that served the concatenated stream.
+#[test]
+fn pooled_requantize_is_bit_identical_to_single_process() {
+    let _guard = obs_lock();
+    const N: u64 = 24;
+    let cfg = ServeConfig { workers: 1, ..Default::default() };
+
+    // replica A serves images 0..N, replica B serves N..2N
+    let fleet_a = load_lw_shadowed();
+    let fleet_b = load_lw_shadowed();
+    let server_a =
+        NetServer::start(Engine::start(fleet_a.clone(), &cfg), &NetConfig::default()).unwrap();
+    let server_b =
+        NetServer::start(Engine::start(fleet_b.clone(), &cfg), &NetConfig::default()).unwrap();
+    drive(server_a.local_addr(), 0, N);
+    drive(server_b.local_addr(), N, 2 * N);
+
+    // the reference: one process sees all 2N images in order
+    let fleet_all = load_lw_shadowed();
+    let engine_all = Engine::start(fleet_all.clone(), &cfg);
+    let client = engine_all.client();
+    let ds = Dataset::new(0);
+    for i in 0..2 * N {
+        client.infer(0, ds.sample(Split::Val, i).0).unwrap();
+    }
+    engine_all.shutdown();
+
+    let addr_a = server_a.local_addr().to_string();
+    let addr_b = server_b.local_addr().to_string();
+    let merged =
+        cluster::pull_merged(&[addr_a.as_str(), addr_b.as_str()], Duration::from_secs(10)).unwrap();
+    server_a.shutdown(Duration::from_secs(10));
+    server_b.shutdown(Duration::from_secs(10));
+
+    // counters: the merged total is exactly the sum over replicas
+    assert!(merged.replicas().len() >= 2, "both replicas represented");
+    assert_eq!(merged.counter("slot/synthetic/lw/v1/requests"), 2 * N);
+
+    // ranges: pooled lattice == single-process accumulator, bit for bit
+    let delta = merged.calib.get("synthetic/lw").expect("both replicas shadowed");
+    assert_eq!(delta.shadow_images.value(), 2 * N, "every image was shadowed");
+    let pooled = delta.absmax();
+    let single = fleet_all.slot(0).unwrap().calib().unwrap().absmax();
+    assert_eq!(pooled.len(), single.len(), "same captured value set");
+    for (v, want) in &single {
+        let got = &pooled[v];
+        assert_eq!(
+            got.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            want.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            "value {v}: pooled absmax diverged from single-process absmax"
+        );
+    }
+
+    // and the deployment grids rebuilt from them are bit-identical too
+    let slot = fleet_all.slot(0).unwrap();
+    let v1 = slot.primary();
+    let grid_pooled = requantize_trainables(&slot.arch, &v1.params, &pooled, Mode::Lw);
+    let grid_single = requantize_trainables(&slot.arch, &v1.params, &single, Mode::Lw);
+    assert_eq!(grid_pooled.0.len(), grid_single.0.len());
+    for (name, want) in &grid_single.0 {
+        let got = &grid_pooled.0[name];
+        assert_eq!(got.shape, want.shape, "tensor {name}: shape");
+        assert_eq!(
+            got.data.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            want.data.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            "tensor {name}: pooled grid != single-process grid"
+        );
+    }
+}

@@ -16,7 +16,10 @@ use std::time::Duration;
 
 use qft::backend::{self, BackendKind, PreparedNet, Scratch};
 use qft::data::{Dataset, Rng, Split, NUM_CLASSES};
-use qft::net::frame::{self, HEADER_LEN, MAGIC, MAX_PAYLOAD, TY_ERROR, TY_INFER, TY_REPLY};
+use qft::net::frame::{
+    self, HEADER_LEN, MAGIC, MAX_PAYLOAD, TY_ERROR, TY_INFER, TY_REPLY, TY_STATS_ACK,
+    TY_STATS_DELTA, TY_STATS_PULL,
+};
 use qft::net::{ErrCode, Frame, FrameError, NetConfig, NetServer};
 use qft::par::Pool;
 use qft::quant::deploy::Mode;
@@ -165,8 +168,9 @@ fn malformed_frames_get_typed_errors() {
         let buf: Vec<u8> = (0..n).map(|_| rng.next_u64() as u8).collect();
         let _ = frame::decode(&buf);
     }
-    // and so is decode_payload per type
-    for ty in [TY_INFER, TY_REPLY, TY_ERROR] {
+    // and so is decode_payload per registered type (stats frames included)
+    for ty in [TY_INFER, TY_REPLY, TY_ERROR, TY_STATS_PULL, TY_STATS_DELTA, TY_STATS_ACK] {
+        assert!(frame::frame_kind(ty).is_some(), "type {ty} missing from the registry");
         for _ in 0..500 {
             let n = (rng.next_u64() % 64) as usize;
             let p: Vec<u8> = (0..n).map(|_| rng.next_u64() as u8).collect();

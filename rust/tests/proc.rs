@@ -1,0 +1,111 @@
+//! Two-process cluster smoke: spawn two real `repro serve --listen` replicas
+//! as child processes, drive each over TCP, then run `repro stats --pull`
+//! against both and check the aggregator's merged counter is exactly the sum
+//! of what the two processes served — the CRDT pipeline end to end, across
+//! real process boundaries (no shared obs registry to lean on).
+//!
+//! Kept to one test so CI pays the two-child startup cost once.
+
+use std::io::{BufRead, BufReader};
+use std::net::TcpStream;
+use std::process::{Child, Command, Stdio};
+
+use qft::data::{Dataset, Split};
+use qft::net::frame;
+use qft::net::Frame;
+
+/// Images driven through each replica.
+const K: u64 = 8;
+
+/// Kills the replica when the test ends, pass or fail.
+struct KillOnDrop(Child);
+
+impl Drop for KillOnDrop {
+    fn drop(&mut self) {
+        let _ = self.0.kill();
+        let _ = self.0.wait();
+    }
+}
+
+/// Spawn one serving replica on an ephemeral port and wait for it to print
+/// its bound address (`serving synthetic/lw on ADDR (...)`).
+fn spawn_replica() -> (KillOnDrop, String) {
+    let mut child = Command::new(env!("CARGO_BIN_EXE_repro"))
+        .args(["serve", "--listen", "127.0.0.1:0", "--serve-secs", "600", "--shadow-every", "1"])
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawn repro serve");
+    let stdout = child.stdout.take().expect("piped stdout");
+    let mut lines = BufReader::new(stdout).lines();
+    let banner = loop {
+        match lines.next() {
+            Some(Ok(l)) if l.starts_with("serving ") => break l,
+            Some(Ok(_)) => continue,
+            other => panic!("replica exited before announcing its address: {other:?}"),
+        }
+    };
+    let addr = banner.split_whitespace().nth(3).expect("address token in banner").to_string();
+    (KillOnDrop(child), addr)
+}
+
+/// Drive val images `lo..hi` through a replica, closed loop.
+fn drive(addr: &str, lo: u64, hi: u64) {
+    let ds = Dataset::new(0);
+    let mut stream = TcpStream::connect(addr).expect("connect to replica");
+    stream.set_nodelay(true).unwrap();
+    for i in lo..hi {
+        let (img, _) = ds.sample(Split::Val, i);
+        let req = Frame::Infer { id: i, slot_key: "synthetic/lw".to_string(), image: img };
+        frame::write_frame(&mut stream, &req).unwrap();
+        match frame::read_frame(&mut stream).unwrap() {
+            Frame::Reply { id, .. } => assert_eq!(id, i, "reply id echo"),
+            other => panic!("image {i}: expected reply, got {other:?}"),
+        }
+    }
+}
+
+#[test]
+fn stats_pull_aggregates_two_real_processes() {
+    let (_guard_a, addr_a) = spawn_replica();
+    let (_guard_b, addr_b) = spawn_replica();
+    drive(&addr_a, 0, K);
+    drive(&addr_b, K, 2 * K);
+
+    let out = Command::new(env!("CARGO_BIN_EXE_repro"))
+        .args(["stats", "--pull", &format!("{addr_a},{addr_b}")])
+        .output()
+        .expect("run repro stats --pull");
+    assert!(
+        out.status.success(),
+        "stats --pull failed:\n{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8_lossy(&out.stdout);
+
+    // header counts both replicas
+    let head = text.lines().next().unwrap_or_default();
+    assert!(head.starts_with("cluster stats: 2 replicas"), "header: {head}");
+
+    // merged request counter row: `  NAME  TOTAL  hex=n hex=n`
+    let row = text
+        .lines()
+        .find(|l| l.trim_start().starts_with("slot/synthetic/lw/v1/requests"))
+        .unwrap_or_else(|| panic!("no merged requests row in:\n{text}"));
+    let total: u64 = row
+        .split_whitespace()
+        .nth(1)
+        .and_then(|t| t.parse().ok())
+        .unwrap_or_else(|| panic!("unparseable total in row: {row}"));
+    assert_eq!(total, 2 * K, "merged total != images served across both processes");
+
+    // both processes shadowed every image, so pooled ranges rode along
+    assert!(
+        text.contains("== calib synthetic/lw:"),
+        "no pooled calib section in:\n{text}"
+    );
+    assert!(
+        text.contains(&format!("{} images", 2 * K)),
+        "pooled shadow image count missing in:\n{text}"
+    );
+}
